@@ -1,0 +1,66 @@
+//! The Fig. 2 rule in action: sweep quantization bit widths on a dataset,
+//! print the first-layer `Error_X` per width, the width the lightweight
+//! rule derives, and the accuracy actually achieved at each width.
+//!
+//! Run: `cargo run --release --example bit_sweep -- [--dataset Pubmed] [--epochs 40]`
+
+use tango::config::{ModelKind, TrainConfig};
+use tango::coordinator::Trainer;
+use tango::graph::datasets;
+use tango::model::{GcnConfig, GcnModel, TrainMode};
+use tango::quant::{derive_bits, DEFAULT_ERROR_TARGET};
+use tango::util::cli::Args;
+
+fn main() -> tango::Result<()> {
+    let args = Args::from_env();
+    let dataset = args.get("dataset", "Pubmed").to_string();
+    let epochs: usize = args.get_as("epochs", 40);
+    let seed: u64 = args.get_as("seed", 42);
+    let data = if dataset == "tiny" { datasets::tiny(seed) } else { datasets::load_by_name(&dataset, seed) };
+
+    // The lightweight rule: quantize the first layer's output only.
+    let probe_model = GcnModel::new(
+        GcnConfig {
+            in_dim: data.features.cols(),
+            hidden: 64,
+            out_dim: data.num_classes,
+            layers: 2,
+            mode: TrainMode::fp32(),
+        },
+        &data.graph,
+        seed,
+    );
+    let probe = probe_model.first_layer_output(&data.features);
+    let derivation = derive_bits(&probe, DEFAULT_ERROR_TARGET);
+    println!("Error_X sweep on {dataset} (first-layer output, target {:.1}):", DEFAULT_ERROR_TARGET);
+    for (bits, e) in &derivation.sweep {
+        let marker = if *bits == derivation.bits { "  <= chosen" } else { "" };
+        println!("  {bits} bits: Error_X = {e:.4}{marker}");
+    }
+
+    // Ground truth: train at each width and report accuracy.
+    println!("\ntraining accuracy per bit width ({epochs} epochs):");
+    let fp_cfg = TrainConfig {
+        model: ModelKind::Gcn,
+        dataset: dataset.clone(),
+        epochs,
+        lr: 0.1,
+        hidden: 64,
+        heads: 4,
+        layers: 2,
+        mode: TrainMode::fp32(),
+        auto_bits: false,
+        seed,
+        log_every: 0,
+    };
+    let fp_acc = Trainer::from_config(&fp_cfg)?.run()?.final_eval;
+    println!("  fp32  : {fp_acc:.4}");
+    for bits in [2u8, 4, 6, 8] {
+        let mut cfg = fp_cfg.clone();
+        cfg.mode = TrainMode::tango(bits);
+        let acc = Trainer::from_config(&cfg)?.run()?.final_eval;
+        let marker = if bits == derivation.bits { "  <= derived width" } else { "" };
+        println!("  {bits} bits: {acc:.4} ({:.1}% of fp32){marker}", acc / fp_acc.max(1e-9) * 100.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Fig. 9 at example scale: data-parallel mini-batch training across 2–6
+//! simulated GPUs, FP32 vs quantized gradient all-reduce, with the PCIe
+//! congestion model. Real computation + numerically real all-reduce;
+//! interconnect time modelled (DESIGN.md §Substitutions).
+//!
+//! Run: `cargo run --release --example multi_gpu_sim -- [--dataset ogbn-arxiv]`
+
+use tango::config::{ModelKind, TrainConfig};
+use tango::graph::datasets;
+use tango::metrics::fmt_time;
+use tango::model::TrainMode;
+use tango::multigpu::{run_data_parallel, Interconnect, MultiGpuConfig};
+use tango::util::cli::Args;
+
+fn main() -> tango::Result<()> {
+    let args = Args::from_env();
+    let dataset = args.get("dataset", "ogbn-arxiv").to_string();
+    let data = datasets::load_by_name(&dataset, 42);
+    println!(
+        "dataset {dataset}: {} nodes, {} edges\n",
+        data.graph.num_nodes,
+        data.graph.num_edges()
+    );
+    println!(
+        "{:>7} {:>14} {:>14} {:>9}  (epoch wall time, compute+comm)",
+        "workers", "fp32", "tango", "speedup"
+    );
+    for k in [2usize, 3, 4, 5, 6] {
+        let mk = |quant: bool| MultiGpuConfig {
+            train: TrainConfig {
+                model: ModelKind::Gcn,
+                dataset: dataset.clone(),
+                epochs: 3,
+                lr: 0.05,
+                hidden: 128,
+                heads: 4,
+                layers: 2,
+                mode: if quant { TrainMode::tango(8) } else { TrainMode::fp32() },
+                auto_bits: false,
+                seed: 42,
+                log_every: 0,
+            },
+            workers: k,
+            epochs: 3,
+            fanout: 8,
+            batch_size: 512,
+            quantize_grads: quant,
+            overlap_quantization: true,
+            interconnect: Interconnect::pcie3(),
+        };
+        let fp = run_data_parallel(&mk(false), &data)?;
+        let tg = run_data_parallel(&mk(true), &data)?;
+        let fp_t = fp.total_time() / fp.epochs.len() as f64;
+        let tg_t = tg.total_time() / tg.epochs.len() as f64;
+        println!(
+            "{k:>7} {:>14} {:>14} {:>8.2}x",
+            fmt_time(fp_t),
+            fmt_time(tg_t),
+            fp_t / tg_t
+        );
+    }
+    println!(
+        "\nThe speedup grows with worker count: quantized payloads relieve the \
+         shared-bus congestion (the paper's PCIe observation, Fig. 9)."
+    );
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""Build-time-only Python package: Layer-2 JAX model + Layer-1 Pallas
+kernels + the AOT lowering that emits HLO text artifacts for the Rust
+runtime. Never imported at training/serving time."""

@@ -1,0 +1,147 @@
+"""AOT lowering: Layer-1/2 entry points → HLO text artifacts + manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(behind the Rust ``xla`` crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out ../artifacts`` (the Makefile's
+``artifacts`` target). Python never runs after this step.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import qgemm, quantize, sddmm, spmm
+
+# ---- exported problem sizes -------------------------------------------------
+# Fixed shapes for the end-to-end train-step artifact: a 2048-node graph
+# with padded in-degree 8, 64-d features, 64 hidden units, 8 classes.
+N, P, F, H, C = 2048, 8, 64, 64, 8
+# Primitive-artifact shapes (micro-benchable from Rust).
+GM, GK, GN = 256, 128, 64
+E = 4096
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entries():
+    """(name, fn, example_args, description) for every artifact."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    i8 = jnp.int8
+    out = []
+    # --- end-to-end quantized GCN train step (the quickstart driver) ---
+    out.append((
+        "gcn_train_step",
+        model.make_train_step(bits=8, lr=0.05, quantized=True),
+        (spec((N, F)), spec((N, C)), spec((N,)), spec((F, H)), spec((H, C)),
+         spec((N, P), i32), spec((N, P))),
+        "quantized 2-layer GCN: fwd + analytic bwd + FP32 SGD update "
+        "-> (loss, new_w1, new_w2)",
+    ))
+    out.append((
+        "gcn_train_step_fp32",
+        model.make_train_step(lr=0.05, quantized=False),
+        (spec((N, F)), spec((N, C)), spec((N,)), spec((F, H)), spec((H, C)),
+         spec((N, P), i32), spec((N, P))),
+        "FP32 baseline GCN train step -> (loss, new_w1, new_w2)",
+    ))
+    out.append((
+        "gcn_forward",
+        lambda x, w1, w2, nbr, wgt: (model.gcn_forward(x, w1, w2, nbr, wgt),),
+        (spec((N, F)), spec((F, H)), spec((H, C)), spec((N, P), i32), spec((N, P))),
+        "quantized GCN inference -> (logits,)",
+    ))
+    # --- primitive artifacts (runtime micro-tests / benches) ---
+    out.append((
+        "quantize8",
+        lambda x: quantize.quantize(x, 8),
+        (spec((GM, GK)),),
+        "dynamic symmetric INT8 quantization -> (q, scale)",
+    ))
+    out.append((
+        "qgemm8",
+        lambda a, b: qgemm.qgemm(a, b, 8),
+        (spec((GM, GK)), spec((GK, GN))),
+        "fused on-the-fly-quantized GEMM -> (out, out_scale)",
+    ))
+    out.append((
+        "spmm_f32",
+        lambda nbr, wgt, h: (spmm.spmm(nbr, wgt, h),),
+        (spec((N, P), i32), spec((N, P)), spec((N, GN))),
+        "padded-CSR FP32 SPMM -> (out,)",
+    ))
+    out.append((
+        "qspmm8",
+        lambda nbr, qw, qh, sw, sh: (spmm.qspmm(nbr, qw, qh, sw, sh),),
+        (spec((N, P), i32), spec((N, P), i8), spec((N, GN), i8), spec(()), spec(())),
+        "quantized padded-CSR SPMM -> (out,)",
+    ))
+    out.append((
+        "qsddmm_add8",
+        lambda src, dst, qs, qd, ss, sd: (sddmm.sddmm_add(src, dst, qs, qd, ss, sd),),
+        (spec((E,), i32), spec((E,), i32), spec((N, 4), i8), spec((N, 4), i8), spec(()), spec(())),
+        "quantized SDDMM-add w/ on-the-fly dequantization -> (edge_feat,)",
+    ))
+    out.append((
+        "qsddmm_dot8",
+        lambda src, dst, qa, qb, sa, sb: (sddmm.sddmm_dot(src, dst, qa, qb, sa, sb, 4),),
+        (spec((E,), i32), spec((E,), i32), spec((N, 32), i8), spec((N, 32), i8), spec(()), spec(())),
+        "quantized SDDMM-dot (direct quantized multiply) -> (edge_feat,)",
+    ))
+    return out
+
+
+DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32", jnp.int8.dtype: "i8"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "artifacts": []}
+    for name, fn, example_args, desc in entries():
+        text = to_hlo_text(fn, example_args)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, path), "w") as f:
+            f.write(text)
+        n_out = len(jax.eval_shape(fn, *example_args))
+        manifest["artifacts"].append({
+            "name": name,
+            "file": path,
+            "description": desc,
+            "inputs": [
+                {"shape": list(a.shape), "dtype": DTYPE_NAMES[a.dtype]}
+                for a in example_args
+            ],
+            "num_outputs": n_out,
+            "sizes": {"n": N, "p": P, "f": F, "h": H, "c": C,
+                      "gm": GM, "gk": GK, "gn": GN, "e": E},
+        })
+        print(f"wrote {path} ({len(text)} chars, {n_out} outputs)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

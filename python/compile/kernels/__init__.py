@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for Tango (quantize, quantized GEMM, SPMM, SDDMM).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode lowers them to plain HLO ops that the
+Rust runtime can load and run. Correctness is pinned against the pure-jnp
+oracles in :mod:`compile.kernels.ref` by the pytest suite.
+
+Hardware adaptation (DESIGN.md section Hardware-Adaptation): the paper's
+CUDA concepts map to Pallas/TPU as BlockSpec-tiled HBM->VMEM staging
+(shared memory), ``jax.lax.dot_general`` with
+``preferred_element_type=int32`` on int8 blocks (DP4A / int8 MXU), and a
+counter-based in-kernel PRNG (register-resident cuRAND state).
+"""

@@ -1,0 +1,87 @@
+"""Pallas quantize kernel with GPU-style stochastic rounding (paper §3.2).
+
+The paper keeps xoshiro256++ state in registers; the TPU-idiomatic
+equivalent is a *counter-based* generator — each element mixes its global
+index with the seed through an avalanche hash (splitmix64/xxhash-style
+finalizer), entirely in registers on the VPU, no state array at all.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+#: Rows per VMEM block. 128×F f32 blocks stay far under the ~16 MiB VMEM
+#: budget for the feature widths this library uses (F ≤ 1024 ⇒ ≤ 0.5 MiB).
+BLOCK_ROWS = 128
+
+
+def _mix32(idx, seed):
+    """Counter-based PRNG: avalanche-mix (index, seed) -> uniform [0,1).
+
+    A 32-bit xorshift-multiply finalizer (murmur3/splitmix-style): every
+    output bit depends on every input bit; adjacent indices decorrelate.
+    """
+    x = idx.astype(jnp.uint32) ^ jnp.uint32(seed & 0xFFFFFFFF)
+    x = x * jnp.uint32(0x9E3779B1)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    # Top 24 bits -> [0,1).
+    return (x >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+
+
+def _quantize_kernel(scale_ref, x_ref, o_ref, *, qmax, seed, stochastic, cols):
+    pid = pl.program_id(0)
+    x = x_ref[...]
+    scaled = x / scale_ref[0, 0]
+    if stochastic:
+        # Global element index for the counter-based stream.
+        base = pid * BLOCK_ROWS * cols
+        rows, c = x.shape
+        idx = base + jax.lax.broadcasted_iota(jnp.int32, (rows, c), 0) * c \
+            + jax.lax.broadcasted_iota(jnp.int32, (rows, c), 1)
+        u = _mix32(idx, seed)
+        f = jnp.floor(scaled)
+        q = jnp.where(u < scaled - f, f + 1.0, f)
+    else:
+        q = jnp.round(scaled)
+    o_ref[...] = jnp.clip(q, -qmax, qmax).astype(jnp.int8)
+
+
+def quantize(x, bits: int = 8, stochastic: bool = False, seed: int = 0):
+    """Quantize a rank-2 f32 array to int8 with a dynamic symmetric scale.
+
+    Returns ``(q_int8, scale)``. The scale is the one abs-max reduction
+    dynamic quantization needs (fused into the producer on the GPU; a
+    separate cheap reduction here). It enters the kernel as a (1,1) scalar
+    input block — the Pallas analogue of a kernel parameter.
+    """
+    assert x.ndim == 2, "quantize kernel expects rank-2"
+    scale = ref.scale_for(x, bits)
+    n, cols = x.shape
+    grid = (max(1, -(-n // BLOCK_ROWS)),)
+    kernel = functools.partial(
+        _quantize_kernel,
+        qmax=float(ref.qmax_for_bits(bits)),
+        seed=seed,
+        stochastic=stochastic,
+        cols=cols,
+    )
+    q = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, cols), jnp.int8),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_ROWS, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(scale.reshape(1, 1), x)
+    return q, scale

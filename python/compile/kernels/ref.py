@@ -1,0 +1,81 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These define the semantics; the kernels must match them (pytest asserts
+allclose under hypothesis-driven shape/value sweeps).
+"""
+
+import jax.numpy as jnp
+
+#: Symmetric quantization grid maximum for B bits.
+def qmax_for_bits(bits: int) -> int:
+    assert 2 <= bits <= 8
+    return (1 << (bits - 1)) - 1
+
+
+def scale_for(x, bits: int):
+    """Dynamic symmetric tensor-level scale: absmax / qmax (1.0 if zero)."""
+    absmax = jnp.max(jnp.abs(x))
+    return jnp.where(absmax == 0.0, 1.0, absmax / qmax_for_bits(bits))
+
+
+def quantize_nearest(x, scale, bits: int):
+    """Eq. 1 with Z=0, round-to-nearest."""
+    q = jnp.clip(jnp.round(x / scale), -qmax_for_bits(bits), qmax_for_bits(bits))
+    return q.astype(jnp.int8)
+
+
+def dequantize(q, scale):
+    """Eq. 2 with Z=0."""
+    return q.astype(jnp.float32) * scale
+
+
+def qgemm(a, b, bits: int = 8):
+    """Quantized GEMM oracle: quantize inputs, int32 matmul, dequantize.
+
+    Returns (out_f32, out_scale) like the fused kernel.
+    """
+    sa = scale_for(a, bits)
+    sb = scale_for(b, bits)
+    qa = quantize_nearest(a, sa, bits).astype(jnp.int32)
+    qb = quantize_nearest(b, sb, bits).astype(jnp.int32)
+    acc = qa @ qb
+    out = acc.astype(jnp.float32) * (sa * sb)
+    return out, scale_for(out, bits)
+
+
+def spmm_padded(nbr, mask, weight, h):
+    """Padded-CSR SPMM oracle.
+
+    out[v] = sum_p mask[v,p] * weight[v,p] * h[nbr[v,p]]
+    nbr: [N,P] int32, mask/weight: [N,P] f32, h: [N,F] f32 -> [N,F].
+    """
+    gathered = h[nbr]                          # [N,P,F]
+    w = (mask * weight)[..., None]             # [N,P,1]
+    return jnp.sum(gathered * w, axis=1)
+
+
+def sddmm_add(src, dst, s, d):
+    """SDDMM-add oracle: out[e,h] = s[src[e],h] + d[dst[e],h]."""
+    return s[src] + d[dst]
+
+
+def sddmm_dot(src, dst, a, b, heads: int):
+    """SDDMM-dot oracle: out[e,h] = sum_d a[dst[e],(h,d)] * b[src[e],(h,d)]."""
+    e = src.shape[0]
+    dd = a.shape[1] // heads
+    av = a[dst].reshape(e, heads, dd)
+    bv = b[src].reshape(e, heads, dd)
+    return jnp.sum(av * bv, axis=-1)
+
+
+def edge_softmax_padded(logits, mask):
+    """Per-row masked softmax over the padded in-edge axis.
+
+    logits/mask: [N,P] -> alpha [N,P] with sum over valid p = 1.
+    """
+    neg = jnp.where(mask > 0, logits, -jnp.inf)
+    m = jnp.max(neg, axis=1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    ex = jnp.where(mask > 0, jnp.exp(neg - m), 0.0)
+    denom = jnp.sum(ex, axis=1, keepdims=True)
+    return jnp.where(denom > 0, ex / jnp.maximum(denom, 1e-30), 0.0)

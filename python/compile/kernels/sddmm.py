@@ -1,0 +1,91 @@
+"""Pallas SDDMM kernels (paper §3.3).
+
+Two variants with the paper's quantization rule:
+
+- **add** (attention logits, Fig. 1a step 3): different operand scales do
+  not factor through addition, so the kernel loads the small int8 tensors
+  and **dequantizes on the fly** per element;
+- **dot** (attention gradient, Fig. 1b step 5): multiplication commutes
+  with the scales, so the kernel works **directly on quantized values**
+  in int32 and applies the fused ``s_0·s_1`` once.
+
+Edge-parallel layout: the edge list (src/dst id per edge) is blocked over
+the grid; endpoint feature tables ride along for the gather.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Edges per block.
+BLOCK_EDGES = 256
+
+
+def _sddmm_add_kernel(ss_ref, sd_ref, src_ref, dst_ref, qs_ref, qd_ref, o_ref):
+    src = src_ref[...][:, 0]
+    dst = dst_ref[...][:, 0]
+    # On-the-fly dequantization: each operand with its own scale.
+    s = jnp.take(qs_ref[...], src, axis=0).astype(jnp.float32) * ss_ref[0, 0]
+    d = jnp.take(qd_ref[...], dst, axis=0).astype(jnp.float32) * sd_ref[0, 0]
+    o_ref[...] = s + d
+
+
+def _sddmm_dot_kernel(deq_ref, src_ref, dst_ref, qa_ref, qb_ref, o_ref, *, heads):
+    src = src_ref[...][:, 0]
+    dst = dst_ref[...][:, 0]
+    a = jnp.take(qa_ref[...], dst, axis=0).astype(jnp.int32)   # [B, H*D]
+    b = jnp.take(qb_ref[...], src, axis=0).astype(jnp.int32)
+    e, hd = a.shape
+    d = hd // heads
+    prod = (a * b).reshape(e, heads, d)
+    # Direct quantized multiply-accumulate; single fused dequantization.
+    o_ref[...] = jnp.sum(prod, axis=-1).astype(jnp.float32) * deq_ref[0, 0]
+
+
+def sddmm_add(src, dst, qs, qd, s_scale, d_scale):
+    """Quantized SDDMM-add: ``out[e] = deq(qs[src[e]]) + deq(qd[dst[e]])``."""
+    e = src.shape[0]
+    heads = qs.shape[1]
+    grid = (max(1, -(-e // BLOCK_EDGES)),)
+    ss = jnp.asarray(s_scale, jnp.float32).reshape(1, 1)
+    sd = jnp.asarray(d_scale, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _sddmm_add_kernel,
+        out_shape=jax.ShapeDtypeStruct((e, heads), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_EDGES, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_EDGES, 1), lambda i: (i, 0)),
+            pl.BlockSpec(qs.shape, lambda i: (0, 0)),
+            pl.BlockSpec(qd.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_EDGES, heads), lambda i: (i, 0)),
+        interpret=True,
+    )(ss, sd, src[:, None], dst[:, None], qs, qd)
+
+
+def sddmm_dot(src, dst, qa, qb, a_scale, b_scale, heads: int):
+    """Quantized SDDMM-dot: per-head int32 dot of quantized endpoint rows,
+    one fused ``s_a·s_b`` dequantization."""
+    e = src.shape[0]
+    grid = (max(1, -(-e // BLOCK_EDGES)),)
+    kernel = functools.partial(_sddmm_dot_kernel, heads=heads)
+    deq = (jnp.asarray(a_scale, jnp.float32) * jnp.asarray(b_scale, jnp.float32)).reshape(1, 1)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((e, heads), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_EDGES, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_EDGES, 1), lambda i: (i, 0)),
+            pl.BlockSpec(qa.shape, lambda i: (0, 0)),
+            pl.BlockSpec(qb.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_EDGES, heads), lambda i: (i, 0)),
+        interpret=True,
+    )(deq, src[:, None], dst[:, None], qa, qb)

@@ -1,0 +1,130 @@
+"""Layer-2 JAX model: quantized GCN training step built on the Layer-1
+Pallas kernels, with the explicit backward decomposition of paper §2.1 and
+the §3.2 accuracy rules (quantized hidden layers, FP32 final layer, FP32
+softmax/loss, FP32 weight update).
+
+Graph representation is padded-CSR (ELL): ``nbr [N,P]`` int32 in-neighbour
+ids and ``wgt [N,P]`` f32 normalised edge weights (0 on padding). The
+datasets this library generates are symmetrised (reverse edges + self
+loops), so the normalised adjacency is symmetric and the backward SPMM
+(`Âᵀ·∂Z`) reuses the same table — asserted by the AOT smoke test.
+
+Everything here is lowered ONCE by ``aot.py`` into HLO text; Python never
+runs at training time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import qgemm as qgemm_mod
+from .kernels import quantize as quantize_mod
+from .kernels import ref
+from .kernels import spmm as spmm_mod
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def masked_softmax_xent(logits, onehot, mask):
+    """Mean CE over masked rows; returns (loss, dlogits) — FP32 (§3.2)."""
+    m = jnp.max(logits, axis=1, keepdims=True)
+    ex = jnp.exp(logits - m)
+    p = ex / jnp.sum(ex, axis=1, keepdims=True)
+    logp = logits - m - jnp.log(jnp.sum(ex, axis=1, keepdims=True))
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = -jnp.sum(mask[:, None] * onehot * logp) / n
+    dlogits = (p - onehot) * mask[:, None] / n
+    return loss, dlogits
+
+
+def gcn_forward(x, w1, w2, nbr, wgt, bits: int = 8):
+    """Two-layer quantized GCN forward (hidden layer quantized, final FP32).
+
+    Returns logits ``[N, C]``.
+    """
+    # Layer 1 (quantized): GEMM with on-the-fly quantization, then the
+    # dedicated-quantize + quantized SPMM pipeline of §3.3.
+    xw1, s_xw1 = qgemm_mod.qgemm(x, w1, bits)
+    q_xw1, s_h = quantize_mod.quantize(xw1, bits)
+    q_wgt, s_w = quantize_mod.quantize(wgt, bits)
+    z1 = spmm_mod.qspmm(nbr, q_wgt, q_xw1, s_w, s_h)
+    h1 = relu(z1)
+    del s_xw1
+    # Layer 2 (FP32 — the layer before Softmax stays full precision, §3.2).
+    hw2 = h1 @ w2
+    logits = spmm_mod.spmm(nbr, wgt, hw2)
+    return logits
+
+
+def gcn_train_step(x, onehot, mask, w1, w2, nbr, wgt, bits: int = 8, lr: float = 0.05):
+    """One quantized GCN training step (fwd + analytic bwd + FP32 update).
+
+    Returns ``(loss, new_w1, new_w2)``.
+    """
+    # ---- forward (caching what backward reuses) ----
+    xw1, _ = qgemm_mod.qgemm(x, w1, bits)
+    q_xw1, s_h = quantize_mod.quantize(xw1, bits)
+    q_wgt, s_w = quantize_mod.quantize(wgt, bits)
+    z1 = spmm_mod.qspmm(nbr, q_wgt, q_xw1, s_w, s_h)
+    h1 = relu(z1)
+    hw2 = h1 @ w2
+    logits = spmm_mod.spmm(nbr, wgt, hw2)
+    # ---- loss (FP32) ----
+    loss, dlogits = masked_softmax_xent(logits, onehot, mask)
+    # ---- backward (Fig. 1b decomposition; Â symmetric ⇒ Âᵀ = Â) ----
+    dhw2 = spmm_mod.spmm(nbr, wgt, dlogits)          # ∂(H1·W2) = Âᵀ·∂logits
+    dw2 = h1.T @ dhw2                                 # FP32 (pre-softmax layer)
+    dh1 = dhw2 @ w2.T
+    dz1 = jnp.where(z1 > 0.0, dh1, 0.0)
+    # Quantize ∂Z1 once; the backward SPMM and both backward GEMMs share it
+    # (the inter-primitive cache rule, §3.3).
+    q_dz1, s_dz = quantize_mod.quantize(dz1, bits)
+    dxw1 = spmm_mod.qspmm(nbr, q_wgt, q_dz1, s_w, s_dz)  # Âᵀ·∂Z1
+    dw1, _ = qgemm_mod.qgemm(x.T, dxw1, bits)            # ∂W1 = Xᵀ·∂(XW1)
+    # ---- FP32 weight update (§3.2, Eq. 6) ----
+    return loss, w1 - lr * dw1, w2 - lr * dw2
+
+
+def gcn_train_step_fp32(x, onehot, mask, w1, w2, nbr, wgt, lr: float = 0.05):
+    """The DGL-baseline step: same decomposition, all FP32 primitives."""
+    xw1 = x @ w1
+    z1 = spmm_mod.spmm(nbr, wgt, xw1)
+    h1 = relu(z1)
+    hw2 = h1 @ w2
+    logits = spmm_mod.spmm(nbr, wgt, hw2)
+    loss, dlogits = masked_softmax_xent(logits, onehot, mask)
+    dhw2 = spmm_mod.spmm(nbr, wgt, dlogits)
+    dw2 = h1.T @ dhw2
+    dh1 = dhw2 @ w2.T
+    dz1 = jnp.where(z1 > 0.0, dh1, 0.0)
+    dxw1 = spmm_mod.spmm(nbr, wgt, dz1)
+    dw1 = x.T @ dxw1
+    return loss, w1 - lr * dw1, w2 - lr * dw2
+
+
+def reference_train_step(x, onehot, mask, w1, w2, nbr, wgt, lr: float = 0.05):
+    """jax.grad oracle for the FP32 step (pytest cross-checks the manual
+    backward against autodiff)."""
+
+    def loss_fn(params):
+        w1_, w2_ = params
+        xw1 = x @ w1_
+        z1 = ref.spmm_padded(nbr, (wgt != 0).astype(jnp.float32), wgt, xw1)
+        h1 = relu(z1)
+        hw2 = h1 @ w2_
+        logits = ref.spmm_padded(nbr, (wgt != 0).astype(jnp.float32), wgt, hw2)
+        loss, _ = masked_softmax_xent(logits, onehot, mask)
+        return loss
+
+    loss, grads = jax.value_and_grad(loss_fn)((w1, w2))
+    return loss, w1 - lr * grads[0], w2 - lr * grads[1]
+
+
+def make_train_step(bits: int = 8, lr: float = 0.05, quantized: bool = True):
+    """The jit-able entry point ``aot.py`` lowers."""
+    if quantized:
+        return functools.partial(gcn_train_step, bits=bits, lr=lr)
+    return functools.partial(gcn_train_step_fp32, lr=lr)

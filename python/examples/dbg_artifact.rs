@@ -1,0 +1,30 @@
+use tango::runtime::{Runtime, Value};
+use tango::tensor::Dense;
+use tango::graph::generators::random_features;
+
+fn main() -> tango::Result<()> {
+    let mut rt = Runtime::open("artifacts")?;
+    let spec = rt.manifest.get("gcn_forward").unwrap().clone();
+    let (n, p, f, h, c) = (spec.sizes["n"], spec.sizes["p"], spec.sizes["f"], spec.sizes["h"], spec.sizes["c"]);
+    // w1 = 0 -> logits must be all zero
+    let x = random_features(n, f, 1);
+    let w1 = Dense::<f32>::zeros(&[f, h]);
+    let w2 = random_features(h, c, 2);
+    let nbr = Dense::<i32>::zeros(&[n, p]);
+    let mut wgt = Dense::<f32>::zeros(&[n, p]);
+    for v in 0..n { wgt.set(v, 0, 1.0); }
+    let out = rt.run("gcn_forward", &[Value::F32(x.clone()), Value::F32(w1), Value::F32(w2.clone()), Value::I32(nbr.clone()), Value::F32(wgt.clone())])?;
+    let logits = out[0].as_f32()?;
+    println!("zero-w1 logits absmax = {}", logits.abs_max());
+
+    // identity-ish test: w1 = I (f==h), nbr self loops
+    let mut w1 = Dense::<f32>::zeros(&[f, h]);
+    for i in 0..f.min(h) { w1.set(i, i, 1.0); }
+    let mut nbr2 = Dense::<i32>::zeros(&[n, p]);
+    for v in 0..n { nbr2.set(v, 0, v as i32); }
+    let out = rt.run("gcn_forward", &[Value::F32(x.clone()), Value::F32(w1), Value::F32(w2.clone()), Value::I32(nbr2), Value::F32(wgt)])?;
+    let logits = out[0].as_f32()?;
+    // expect logits ≈ relu(x_quantized) @ w2 (roughly bounded)
+    println!("identity logits absmax = {} (x absmax {}, w2 absmax {})", logits.abs_max(), x.abs_max(), w2.abs_max());
+    Ok(())
+}

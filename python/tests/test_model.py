@@ -1,0 +1,99 @@
+"""Layer-2 model: manual backward vs jax.grad oracle; quantized step sanity;
+training loop convergence on a planted-community graph."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+
+
+def symmetric_padded_graph(rng, n, p):
+    """Symmetric weighted padded graph (self-loops + undirected edges with a
+    shared weight per pair) — the contract the exported model assumes
+    (datasets are symmetrised, so Â = Âᵀ)."""
+    nbr = np.zeros((n, p), dtype=np.int32)
+    wgt = np.zeros((n, p), dtype=np.float32)
+    fill = np.zeros(n, dtype=np.int64)
+    for v in range(n):  # self loops
+        nbr[v, 0] = v
+        wgt[v, 0] = rng.uniform(0.1, 1.0)
+        fill[v] = 1
+    for _ in range(n * p):
+        u, v = rng.integers(0, n, size=2)
+        if u == v or fill[u] >= p or fill[v] >= p:
+            continue
+        w = rng.uniform(0.1, 1.0)
+        nbr[u, fill[u]] = v
+        wgt[u, fill[u]] = w
+        fill[u] += 1
+        nbr[v, fill[v]] = u
+        wgt[v, fill[v]] = w
+        fill[v] += 1
+    return jnp.asarray(nbr), jnp.asarray(wgt)
+
+
+def make_problem(rng, n=128, p=4, f=16, h=8, c=4):
+    nbr, wgt = symmetric_padded_graph(rng, n, p)
+    x = jnp.asarray(rng.normal(size=(n, f)), dtype=jnp.float32)
+    labels = rng.integers(0, c, size=n)
+    onehot = jnp.asarray(np.eye(c)[labels], dtype=jnp.float32)
+    tmask = jnp.asarray(rng.integers(0, 2, size=n), dtype=jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(f, h)) * 0.3, dtype=jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(h, c)) * 0.3, dtype=jnp.float32)
+    return x, onehot, tmask, w1, w2, nbr, wgt
+
+
+def test_fp32_manual_backward_matches_autodiff():
+    rng = np.random.default_rng(0)
+    x, onehot, tmask, w1, w2, nbr, wgt = make_problem(rng)
+    loss_m, w1_m, w2_m = model.gcn_train_step_fp32(x, onehot, tmask, w1, w2, nbr, wgt, lr=0.1)
+    loss_r, w1_r, w2_r = model.reference_train_step(x, onehot, tmask, w1, w2, nbr, wgt, lr=0.1)
+    np.testing.assert_allclose(float(loss_m), float(loss_r), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(w1_m), np.asarray(w1_r), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w2_m), np.asarray(w2_r), rtol=1e-4, atol=1e-5)
+
+
+def test_quantized_step_close_to_fp32_step():
+    rng = np.random.default_rng(1)
+    x, onehot, tmask, w1, w2, nbr, wgt = make_problem(rng)
+    loss_q, w1_q, w2_q = model.gcn_train_step(x, onehot, tmask, w1, w2, nbr, wgt, lr=0.1)
+    loss_f, w1_f, w2_f = model.gcn_train_step_fp32(x, onehot, tmask, w1, w2, nbr, wgt, lr=0.1)
+    assert abs(float(loss_q) - float(loss_f)) < 0.25
+    # Updates point the same way (cosine similarity of the weight deltas).
+    dq = (np.asarray(w1_q) - np.asarray(w1)).ravel()
+    df = (np.asarray(w1_f) - np.asarray(w1)).ravel()
+    cos = dq @ df / (np.linalg.norm(dq) * np.linalg.norm(df) + 1e-12)
+    assert cos > 0.8, cos
+
+
+def test_quantized_training_converges():
+    # Planted structure: features = label centroid + noise; GCN must fit it.
+    rng = np.random.default_rng(2)
+    n, p, f, h, c = 128, 4, 16, 16, 4
+    labels = rng.integers(0, c, size=n)
+    centroids = rng.normal(size=(c, f)) * 2.0
+    x = jnp.asarray(centroids[labels] + rng.normal(size=(n, f)) * 0.3, dtype=jnp.float32)
+    onehot = jnp.asarray(np.eye(c)[labels], dtype=jnp.float32)
+    tmask = jnp.ones((n,), dtype=jnp.float32)
+    # homophilous padded graph: neighbours mostly same-label
+    nbr_np = np.zeros((n, p), dtype=np.int32)
+    for v in range(n):
+        same = np.flatnonzero(labels == labels[v])
+        nbr_np[v] = rng.choice(same, size=p)
+    nbr = jnp.asarray(nbr_np)
+    wgt = jnp.full((n, p), 1.0 / p, dtype=jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(f, h)) * 0.3, dtype=jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(h, c)) * 0.3, dtype=jnp.float32)
+    losses = []
+    for _ in range(25):
+        loss, w1, w2 = model.gcn_train_step(x, onehot, tmask, w1, w2, nbr, wgt, lr=0.2)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses
+
+
+def test_forward_shapes():
+    rng = np.random.default_rng(3)
+    x, onehot, tmask, w1, w2, nbr, wgt = make_problem(rng, n=96, c=4)
+    logits = model.gcn_forward(x, w1, w2, nbr, wgt)
+    assert logits.shape == (96, 4)
+    assert np.all(np.isfinite(np.asarray(logits)))

@@ -1,0 +1,57 @@
+"""Quantized GEMM kernel vs oracle + accuracy bounds vs exact matmul."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qgemm, ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 150),
+    n=st.integers(1, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_oracle(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype=jnp.float32)
+    out, s = qgemm.qgemm(a, b)
+    want, ws = ref.qgemm(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(s), float(ws), rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_int8_error_bound_vs_exact(seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(64, 128)), dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(128, 32)), dtype=jnp.float32)
+    out, _ = qgemm.qgemm(a, b)
+    exact = np.asarray(a) @ np.asarray(b)
+    rel = np.abs(np.asarray(out) - exact).max() / (np.abs(exact).max() + 1e-9)
+    assert rel < 0.05, rel
+
+
+def test_block_boundary_shapes():
+    # Exercise exact multiples and off-by-one around BM/BN/BK = 128.
+    rng = np.random.default_rng(0)
+    for m, k, n in [(128, 128, 128), (129, 127, 1), (256, 257, 130)]:
+        a = jnp.asarray(rng.normal(size=(m, k)), dtype=jnp.float32)
+        b = jnp.asarray(rng.normal(size=(k, n)), dtype=jnp.float32)
+        out, _ = qgemm.qgemm(a, b)
+        want, _ = ref.qgemm(a, b)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_i32_accumulation_no_overflow():
+    # All-max inputs over a long K: products hit 127*127*K — must accumulate
+    # exactly in int32 (the Fig. 3 argument).
+    k = 512
+    a = jnp.ones((1, k), dtype=jnp.float32)
+    b = jnp.ones((k, 1), dtype=jnp.float32)
+    out, _ = qgemm.qgemm(a, b)
+    np.testing.assert_allclose(np.asarray(out)[0, 0], k, rtol=1e-5)

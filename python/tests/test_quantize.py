@@ -1,0 +1,78 @@
+"""Quantize kernel vs ref oracle, incl. stochastic-rounding statistics."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize, ref
+
+
+def arr(rng, shape, lo=-3.0, hi=3.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=shape), dtype=jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 300),
+    cols=st.integers(1, 65),
+    bits=st.sampled_from([2, 4, 6, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nearest_matches_ref(rows, cols, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (rows, cols))
+    q, s = quantize.quantize(x, bits)
+    want = ref.quantize_nearest(x, s, bits)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(want))
+    # scale is the dynamic symmetric scale
+    np.testing.assert_allclose(float(s), float(ref.scale_for(x, bits)), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.integers(1, 200), cols=st.integers(1, 33), seed=st.integers(0, 2**31 - 1))
+def test_stochastic_within_one_grid_step(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (rows, cols))
+    q, s = quantize.quantize(x, 8, stochastic=True, seed=seed)
+    # |x - deq(q)| <= one grid step for stochastic rounding.
+    err = np.abs(np.asarray(x) - np.asarray(ref.dequantize(q, s)))
+    assert err.max() <= float(s) * (1.0 + 1e-5)
+
+
+def test_stochastic_rounding_is_unbiased():
+    # E[deq(q(x))] -> x over many seeds.
+    x = jnp.full((1, 64), 0.37123, dtype=jnp.float32) * jnp.linspace(0.1, 1.0, 64)
+    x = x.reshape(1, 64).astype(jnp.float32)
+    acc = np.zeros((1, 64), dtype=np.float64)
+    n = 300
+    for seed in range(n):
+        q, s = quantize.quantize(x, 8, stochastic=True, seed=seed)
+        acc += np.asarray(ref.dequantize(q, s), dtype=np.float64)
+    mean = acc / n
+    _, s = quantize.quantize(x, 8)
+    # Bias well below half a grid step.
+    assert np.abs(mean - np.asarray(x)).max() < 0.2 * float(s)
+
+
+def test_zero_tensor_scale_one():
+    x = jnp.zeros((16, 16), dtype=jnp.float32)
+    q, s = quantize.quantize(x, 8)
+    assert float(s) == 1.0
+    assert np.all(np.asarray(q) == 0)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_range_respected(bits):
+    rng = np.random.default_rng(7)
+    x = arr(rng, (64, 8), -100.0, 100.0)
+    q, _ = quantize.quantize(x, bits)
+    qmax = ref.qmax_for_bits(bits)
+    assert np.abs(np.asarray(q, dtype=np.int32)).max() <= qmax
+
+
+def test_symmetric_zero_maps_to_zero():
+    x = jnp.asarray([[-1.0, 0.0, 1.0, 0.0]], dtype=jnp.float32)
+    q, _ = quantize.quantize(x, 8)
+    assert np.asarray(q)[0, 1] == 0
+    assert np.asarray(q)[0, 3] == 0

@@ -1,0 +1,80 @@
+"""SDDMM kernels (add w/ on-the-fly dequant, dot on quantized values)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize, ref, sddmm
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    e=st.integers(1, 600),
+    heads=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_add_matches_ref(n, e, heads, seed):
+    rng = np.random.default_rng(seed)
+    src = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    # Very different ranges so the two scales differ (the reason add cannot
+    # run directly on quantized values).
+    s = jnp.asarray(rng.normal(size=(n, heads)) * 50.0, dtype=jnp.float32)
+    d = jnp.asarray(rng.normal(size=(n, heads)), dtype=jnp.float32)
+    qs, ss = quantize.quantize(s, 8)
+    qd, sd = quantize.quantize(d, 8)
+    out = sddmm.sddmm_add(src, dst, qs, qd, ss, sd)
+    want = ref.sddmm_add(src, dst, ref.dequantize(qs, ss), ref.dequantize(qd, sd))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 150),
+    e=st.integers(1, 500),
+    heads=st.sampled_from([1, 2, 4]),
+    d=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dot_matches_ref(n, e, heads, d, seed):
+    rng = np.random.default_rng(seed)
+    src = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    a = jnp.asarray(rng.normal(size=(n, heads * d)), dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n, heads * d)), dtype=jnp.float32)
+    qa, sa = quantize.quantize(a, 8)
+    qb, sb = quantize.quantize(b, 8)
+    out = sddmm.sddmm_dot(src, dst, qa, qb, sa, sb, heads)
+    want = ref.sddmm_dot(src, dst, ref.dequantize(qa, sa), ref.dequantize(qb, sb), heads)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_dot_scale_product_identity():
+    # The §3.3 algebra: (s0·a_q)·(s1·b_q) == (s0·s1)·(a_q·b_q) — the kernel
+    # computes the RHS; check it equals the LHS path.
+    rng = np.random.default_rng(5)
+    n, e = 32, 64
+    src = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    a = jnp.asarray(rng.normal(size=(n, 8)), dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n, 8)), dtype=jnp.float32)
+    qa, sa = quantize.quantize(a, 8)
+    qb, sb = quantize.quantize(b, 8)
+    kernel = np.asarray(sddmm.sddmm_dot(src, dst, qa, qb, sa, sb, 1))
+    lhs = np.asarray(ref.sddmm_dot(src, dst, ref.dequantize(qa, sa), ref.dequantize(qb, sb), 1))
+    np.testing.assert_allclose(kernel, lhs, rtol=1e-5, atol=1e-5)
+
+
+def test_add_close_to_fp32():
+    rng = np.random.default_rng(9)
+    n, e = 64, 256
+    src = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    s = jnp.asarray(rng.normal(size=(n, 4)), dtype=jnp.float32)
+    d = jnp.asarray(rng.normal(size=(n, 4)), dtype=jnp.float32)
+    qs, ss = quantize.quantize(s, 8)
+    qd, sd = quantize.quantize(d, 8)
+    out = np.asarray(sddmm.sddmm_add(src, dst, qs, qd, ss, sd))
+    exact = np.asarray(ref.sddmm_add(src, dst, s, d))
+    assert np.abs(out - exact).max() < float(ss) + float(sd) + 1e-6

@@ -1,0 +1,67 @@
+"""SPMM kernels (FP32 and quantized) vs the padded-CSR oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize, ref, spmm
+
+
+def padded_graph(rng, n, p):
+    nbr = jnp.asarray(rng.integers(0, n, size=(n, p)), dtype=jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, size=(n, p)), dtype=jnp.float32)
+    wgt = jnp.asarray(rng.normal(size=(n, p)), dtype=jnp.float32) * mask
+    return nbr, mask, wgt
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    p=st.integers(1, 12),
+    f=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fp32_matches_ref(n, p, f, seed):
+    rng = np.random.default_rng(seed)
+    nbr, mask, wgt = padded_graph(rng, n, p)
+    h = jnp.asarray(rng.normal(size=(n, f)), dtype=jnp.float32)
+    out = spmm.spmm(nbr, wgt, h)
+    want = ref.spmm_padded(nbr, mask, wgt, h)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(4, 200), p=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_quantized_matches_dequantized_ref(n, p, seed):
+    rng = np.random.default_rng(seed)
+    nbr, mask, wgt = padded_graph(rng, n, p)
+    h = jnp.asarray(rng.normal(size=(n, 16)), dtype=jnp.float32)
+    qw, sw = quantize.quantize(wgt, 8)
+    qh, sh = quantize.quantize(h, 8)
+    out = spmm.qspmm(nbr, qw, qh, sw, sh)
+    # Exact semantics: the int32 accumulation of dequantized grids.
+    want = ref.spmm_padded(
+        nbr, jnp.ones_like(mask), ref.dequantize(qw, sw), ref.dequantize(qh, sh)
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_quantized_close_to_fp32():
+    rng = np.random.default_rng(3)
+    nbr, mask, wgt = padded_graph(rng, 128, 6)
+    h = jnp.asarray(rng.normal(size=(128, 32)), dtype=jnp.float32)
+    exact = np.asarray(ref.spmm_padded(nbr, mask, wgt, h))
+    qw, sw = quantize.quantize(wgt, 8)
+    qh, sh = quantize.quantize(h, 8)
+    out = np.asarray(spmm.qspmm(nbr, qw, qh, sw, sh))
+    rel = np.abs(out - exact).max() / (np.abs(exact).max() + 1e-9)
+    assert rel < 0.1, rel
+
+
+def test_isolated_node_rows_are_zero():
+    n, p = 8, 4
+    nbr = jnp.zeros((n, p), dtype=jnp.int32)
+    wgt = jnp.zeros((n, p), dtype=jnp.float32)  # fully masked
+    h = jnp.ones((n, 16), dtype=jnp.float32)
+    out = np.asarray(spmm.spmm(nbr, wgt, h))
+    assert np.all(out == 0.0)

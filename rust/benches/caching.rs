@@ -1,0 +1,39 @@
+//! Fig. 10 bench: forward-to-backward reuse of quantized tensors.
+
+use tango::graph::datasets::SPECS;
+use tango::graph::generators::random_features;
+use tango::metrics::{bench, Table};
+use tango::primitives::{qgemm, qgemm_prequantized};
+use tango::quant::{quantize, Rounding};
+
+fn main() {
+    let mut t = Table::new(
+        "bench: quantized-tensor caching (fig10)",
+        &["dataset", "D", "fresh ms", "cached ms", "speedup"],
+    );
+    for spec in SPECS.iter() {
+        let m = spec.num_nodes;
+        for d in [128usize, 256] {
+            let a = random_features(m, d, 1);
+            let b = random_features(d, d, 2);
+            let fresh = bench(&format!("{} D{d} fresh", spec.name), || {
+                qgemm(&a, &b, 8, Rounding::Nearest)
+            });
+            let qa = quantize(&a, 8, Rounding::Nearest);
+            let qb = quantize(&b, 8, Rounding::Nearest);
+            let cached = bench(&format!("{} D{d} cached", spec.name), || {
+                qgemm_prequantized(&qa, &qb, 8)
+            });
+            println!("{}", fresh.summary());
+            println!("{}", cached.summary());
+            t.row(&[
+                spec.name.into(),
+                d.to_string(),
+                format!("{:.2}", fresh.mean * 1e3),
+                format!("{:.2}", cached.mean * 1e3),
+                format!("{:.2}x", fresh.mean / cached.mean),
+            ]);
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,55 @@
+//! Fig. 11/12 bench: quantized GEMM vs FP32 GEMM across the paper's hidden
+//! sizes, plus the GPU cost-model projections.
+
+use tango::graph::generators::random_features;
+use tango::metrics::{bench, Table};
+use tango::perfmodel::{gemm_time, profile_ratios, GemmKind, A100, V100};
+use tango::primitives::{gemm_f32, qgemm, qgemm_prequantized};
+use tango::quant::{quantize, Rounding};
+
+fn main() {
+    let m = 8192; // graph-scale row count (single-core box)
+    let mut t = Table::new("bench: GEMM (measured)", &["D", "fp32", "int8 fused", "int8 cached", "speedup", "cached speedup"]);
+    for d in [128usize, 256, 512] {
+        let a = random_features(m, d, 1);
+        let b = random_features(d, d, 2);
+        let f = bench(&format!("gemm_f32 {m}x{d}x{d}"), || gemm_f32(&a, &b));
+        println!("{}", f.summary());
+        let q = bench(&format!("qgemm8 {m}x{d}x{d}"), || qgemm(&a, &b, 8, Rounding::Nearest));
+        println!("{}", q.summary());
+        let qa = quantize(&a, 8, Rounding::Nearest);
+        let qb = quantize(&b, 8, Rounding::Nearest);
+        let c = bench(&format!("qgemm8 cached {m}x{d}x{d}"), || qgemm_prequantized(&qa, &qb, 8));
+        println!("{}", c.summary());
+        t.row(&[
+            d.to_string(),
+            format!("{:.2}ms", f.mean * 1e3),
+            format!("{:.2}ms", q.mean * 1e3),
+            format!("{:.2}ms", c.mean * 1e3),
+            format!("{:.2}x", f.mean / q.mean),
+            format!("{:.2}x", f.mean / c.mean),
+        ]);
+    }
+    t.print();
+
+    let mut t = Table::new("bench: GEMM (GPU cost model)", &["GPU", "D", "kind", "speedup vs fp32/fp16"]);
+    for d in [256usize, 512] {
+        let mm = 169_343;
+        let v = gemm_time(&V100, mm, d, d, GemmKind::Fp32Cuda, false)
+            / gemm_time(&V100, mm, d, d, GemmKind::Int8Dp4a, false);
+        t.row(&["V100".into(), d.to_string(), "INT8 DP4A".into(), format!("{v:.2}x")]);
+        let a = gemm_time(&A100, mm, d, d, GemmKind::Fp16Tensor, false)
+            / gemm_time(&A100, mm, d, d, GemmKind::Int8Tensor, false);
+        t.row(&["A100".into(), d.to_string(), "INT8 TC vs FP16 TC".into(), format!("{a:.2}x")]);
+    }
+    t.print();
+
+    let p = profile_ratios(&V100, 169_343, 256, 256);
+    println!(
+        "fig12 model: compute {:.2}x  memory {:.2}x  IPC {:.0}%  instr {:.0}%",
+        p.compute_throughput_ratio,
+        p.memory_throughput_ratio,
+        p.ipc_ratio * 100.0,
+        p.instruction_ratio * 100.0
+    );
+}

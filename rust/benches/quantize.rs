@@ -1,0 +1,55 @@
+//! §3.2 bench: stochastic-rounding quantization throughput with
+//! register-resident vs memory-resident PRNG state (the xoshiro256++ vs
+//! cuRAND comparison), plus nearest-rounding and Error_X costs.
+
+use tango::graph::generators::random_features;
+use tango::metrics::{bench, Table};
+use tango::quant::rng::{MemoryStateRng, Xoshiro256pp};
+use tango::quant::{error_x_quantized, quantize, Rounding};
+
+fn main() {
+    // Raw PRNG throughput: the paper's ~20x claim mechanism.
+    let n_draws = 1_000_000u64;
+    let reg = bench("xoshiro256++ (register state) 1M draws", || {
+        let mut r = Xoshiro256pp::new(1);
+        let mut acc = 0u64;
+        for _ in 0..n_draws {
+            acc = acc.wrapping_add(r.next_u64());
+        }
+        acc
+    });
+    let mem = bench("xoshiro256++ (memory state) 1M draws", || {
+        let mut r = MemoryStateRng::new(1);
+        let mut acc = 0u64;
+        for _ in 0..n_draws {
+            acc = acc.wrapping_add(r.next_u64());
+        }
+        acc
+    });
+    println!("{}", reg.summary());
+    println!("{}", mem.summary());
+    println!(
+        "register-state PRNG speedup: {:.2}x (paper reports ~20x vs cuRAND on GPU)\n",
+        mem.mean / reg.mean
+    );
+
+    let mut t = Table::new(
+        "bench: quantization pass (16M elements)",
+        &["rounding", "time ms", "GB/s (f32 read + i8 write)"],
+    );
+    let x = random_features(4096, 4096, 2);
+    for (name, rounding) in [
+        ("nearest", Rounding::Nearest),
+        ("stochastic", Rounding::Stochastic { seed: 3 }),
+    ] {
+        let r = bench(&format!("quantize {name}"), || quantize(&x, 8, rounding));
+        println!("{}", r.summary());
+        let bytes = (x.len() * 5) as f64;
+        t.row(&[name.into(), format!("{:.2}", r.mean * 1e3), format!("{:.2}", bytes / r.mean / 1e9)]);
+    }
+    t.print();
+
+    let q = quantize(&x, 8, Rounding::Nearest);
+    let e = bench("error_x 16M elements", || error_x_quantized(&x, &q));
+    println!("{}", e.summary());
+}

@@ -1,0 +1,59 @@
+//! Fig. 15/16a bench: SDDMM add/dot, FP32 vs INT8 vs INT4-range.
+
+use tango::graph::datasets;
+use tango::graph::generators::random_features;
+use tango::metrics::{bench, Table};
+use tango::primitives::{qsddmm_add, qsddmm_dot, sddmm_add, sddmm_dot};
+use tango::quant::{quantize, Rounding};
+
+fn main() {
+    let (heads, d) = (4usize, 64usize);
+    let mut t = Table::new(
+        "bench: SDDMM (fig15/fig16a)",
+        &["dataset", "kind", "fp32 ms", "int8 ms", "int4 ms", "q8 speedup", "q4 speedup"],
+    );
+    for name in ["ogbn-arxiv", "ogbn-products", "Pubmed", "DBLP", "Amazon"] {
+        let data = datasets::load_by_name(name, 1);
+        let coo = &data.graph;
+        let n = coo.num_nodes;
+        // add variant (attention logits shape [N, H])
+        let s = random_features(n, heads, 2);
+        let dd = random_features(n, heads, 3);
+        let q8s = quantize(&s, 8, Rounding::Nearest);
+        let q8d = quantize(&dd, 8, Rounding::Nearest);
+        let q4s = quantize(&s, 4, Rounding::Nearest);
+        let q4d = quantize(&dd, 4, Rounding::Nearest);
+        let af = bench(&format!("{name} add f32"), || sddmm_add(coo, &s, &dd));
+        let a8 = bench(&format!("{name} add q8"), || qsddmm_add(coo, &q8s, &q8d));
+        let a4 = bench(&format!("{name} add q4"), || qsddmm_add(coo, &q4s, &q4d));
+        t.row(&[
+            name.into(),
+            "add".into(),
+            format!("{:.2}", af.mean * 1e3),
+            format!("{:.2}", a8.mean * 1e3),
+            format!("{:.2}", a4.mean * 1e3),
+            format!("{:.2}x", af.mean / a8.mean),
+            format!("{:.2}x", af.mean / a4.mean),
+        ]);
+        // dot variant (gradient shape [N, H*D])
+        let a = random_features(n, heads * d, 4);
+        let b = random_features(n, heads * d, 5);
+        let q8a = quantize(&a, 8, Rounding::Nearest);
+        let q8b = quantize(&b, 8, Rounding::Nearest);
+        let q4a = quantize(&a, 4, Rounding::Nearest);
+        let q4b = quantize(&b, 4, Rounding::Nearest);
+        let df = bench(&format!("{name} dot f32"), || sddmm_dot(coo, &a, &b, heads));
+        let d8 = bench(&format!("{name} dot q8"), || qsddmm_dot(coo, &q8a, &q8b, heads));
+        let d4 = bench(&format!("{name} dot q4"), || qsddmm_dot(coo, &q4a, &q4b, heads));
+        t.row(&[
+            name.into(),
+            "dot".into(),
+            format!("{:.2}", df.mean * 1e3),
+            format!("{:.2}", d8.mean * 1e3),
+            format!("{:.2}", d4.mean * 1e3),
+            format!("{:.2}x", df.mean / d8.mean),
+            format!("{:.2}x", df.mean / d4.mean),
+        ]);
+    }
+    t.print();
+}

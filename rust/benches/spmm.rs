@@ -1,0 +1,97 @@
+//! Fig. 13/14/Table 2 bench: SPMM variants across the scaled datasets.
+
+use tango::graph::datasets;
+use tango::graph::generators::random_features;
+use tango::graph::{Csr, Incidence};
+use tango::metrics::{bench, Table};
+use tango::primitives::{
+    incidence_spmm, qspmm_edge_weighted, spmm_edge_aggregate_3mat, spmm_edge_weighted,
+    spmm_per_head, spmm_via_spmvs,
+};
+use tango::quant::{quantize, Rounding};
+
+fn main() {
+    let mut t13a = Table::new(
+        "bench: incidence SPMM vs 3-matrix (fig13a)",
+        &["dataset", "feat", "3mat ms", "incidence ms", "speedup"],
+    );
+    for name in ["ogbn-arxiv", "ogbn-products", "Pubmed", "DBLP", "Amazon"] {
+        let data = datasets::load_by_name(name, 1);
+        let csr = Csr::from_coo(&data.graph);
+        let inc = Incidence::from_csr(&csr);
+        for f in [4usize, 16] {
+            let ef = random_features(csr.num_edges, f, 2);
+            let base = bench(&format!("{name} 3mat f{f}"), || spmm_edge_aggregate_3mat(&csr, &ef));
+            let ours = bench(&format!("{name} incidence f{f}"), || incidence_spmm(&inc, &ef));
+            println!("{}", base.summary());
+            println!("{}", ours.summary());
+            t13a.row(&[
+                name.into(),
+                f.to_string(),
+                format!("{:.2}", base.mean * 1e3),
+                format!("{:.2}", ours.mean * 1e3),
+                format!("{:.2}x", base.mean / ours.mean),
+            ]);
+        }
+    }
+    t13a.print();
+
+    let mut tq = Table::new(
+        "bench: quantized vs fp32 edge-weighted SPMM",
+        &["dataset", "heads*D", "fp32 ms", "int8 ms", "speedup"],
+    );
+    for name in ["ogbn-arxiv", "ogbn-products"] {
+        let data = datasets::load_by_name(name, 1);
+        let csr = Csr::from_coo(&data.graph);
+        let (h, d) = (4usize, 32usize);
+        let alpha = random_features(csr.num_edges, h, 3);
+        let x = random_features(csr.num_nodes, h * d, 4);
+        let f = bench(&format!("{name} spmm f32"), || spmm_edge_weighted(&csr, &alpha, &x, h));
+        let qa = quantize(&alpha, 8, Rounding::Nearest);
+        let qx = quantize(&x, 8, Rounding::Nearest);
+        let q = bench(&format!("{name} spmm q8"), || qspmm_edge_weighted(&csr, &qa, &qx, h));
+        println!("{}", f.summary());
+        println!("{}", q.summary());
+        tq.row(&[
+            name.into(),
+            format!("{h}*{d}"),
+            format!("{:.2}", f.mean * 1e3),
+            format!("{:.2}", q.mean * 1e3),
+            format!("{:.2}x", f.mean / q.mean),
+        ]);
+    }
+    tq.print();
+
+    // fig13b per-head split and fig14 many-SpMV on arxiv.
+    let data = datasets::load_by_name("ogbn-arxiv", 1);
+    let csr = Csr::from_coo(&data.graph);
+    let mut t13b = Table::new("bench: per-head split (fig13b)", &["heads", "native ms", "split ms", "speedup"]);
+    for h in [2usize, 4, 8] {
+        let alpha = random_features(csr.num_edges, h, 5);
+        let x = random_features(csr.num_nodes, h * 16, 6);
+        let native = bench(&format!("native h{h}"), || spmm_edge_weighted(&csr, &alpha, &x, h));
+        let split = bench(&format!("split h{h}"), || spmm_per_head(&csr, &alpha, &x, h));
+        t13b.row(&[
+            h.to_string(),
+            format!("{:.2}", native.mean * 1e3),
+            format!("{:.2}", split.mean * 1e3),
+            format!("{:.2}x", native.mean / split.mean),
+        ]);
+    }
+    t13b.print();
+
+    let mut t14 = Table::new("bench: many-SpMV transform (fig14)", &["feat", "native ms", "spmv ms", "speedup"]);
+    for f in [2usize, 6, 12] {
+        let alpha = random_features(csr.num_edges, 1, 7);
+        let x = random_features(csr.num_nodes, f, 8);
+        let native = bench(&format!("native f{f}"), || spmm_edge_weighted(&csr, &alpha, &x, 1));
+        let spmv = bench(&format!("spmv f{f}"), || spmm_via_spmvs(&csr, &alpha, &x, 1));
+        t14.row(&[
+            f.to_string(),
+            format!("{:.2}", native.mean * 1e3),
+            format!("{:.2}", spmv.mean * 1e3),
+            format!("{:.2}x", native.mean / spmv.mean),
+        ]);
+    }
+    t14.print();
+}

@@ -1,0 +1,51 @@
+//! Fig. 8 bench: end-to-end epoch time of FP32 / Tango / EXACT on GCN and
+//! GAT over the scaled datasets.
+
+use tango::config::{ModelKind, TrainConfig};
+use tango::coordinator::Trainer;
+use tango::metrics::Table;
+use tango::model::TrainMode;
+
+fn main() {
+    let epochs = 2usize;
+    let mut t = Table::new(
+        "bench: end-to-end training (fig8)",
+        &["model", "dataset", "fp32 s/ep", "tango s/ep", "exact s/ep", "tango speedup", "exact speedup"],
+    );
+    for model in [ModelKind::Gcn, ModelKind::Gat] {
+        let name = if model == ModelKind::Gcn { "GCN" } else { "GAT" };
+        for ds in ["ogbn-arxiv", "ogbn-products", "Pubmed", "DBLP", "Amazon"] {
+            let time = |mode: TrainMode| -> f64 {
+                let cfg = TrainConfig {
+                    model,
+                    dataset: ds.into(),
+                    epochs,
+                    lr: 0.05,
+                    hidden: 64,
+                    heads: 4,
+                    layers: 2,
+                    mode,
+                    auto_bits: false,
+                    seed: 42,
+                    log_every: 0,
+                };
+                let mut tr = Trainer::from_config(&cfg).unwrap();
+                tr.run().unwrap().wall_secs / epochs as f64
+            };
+            let fp = time(TrainMode::fp32());
+            let tg = time(TrainMode::tango(8));
+            let ex = time(TrainMode::exact(8));
+            println!("{name} {ds}: fp32 {fp:.3}s tango {tg:.3}s exact {ex:.3}s");
+            t.row(&[
+                name.into(),
+                ds.into(),
+                format!("{fp:.3}"),
+                format!("{tg:.3}"),
+                format!("{ex:.3}"),
+                format!("{:.2}x", fp / tg),
+                format!("{:.2}x", fp / ex),
+            ]);
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,217 @@
+//! Configuration system: a TOML-subset parser (offline `toml` stand-in) and
+//! the typed [`TrainConfig`] the launcher consumes.
+//!
+//! Supported TOML subset — everything the configs in `configs/` use:
+//! `[section]` headers, `key = value` with string/int/float/bool values,
+//! `#` comments.
+
+mod toml_lite;
+
+pub use toml_lite::TomlDoc;
+
+use crate::model::TrainMode;
+
+/// Which model architecture to train.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Graph Convolutional Network (GEMM + SPMM).
+    Gcn,
+    /// Graph Attention Network (GEMM + SPMM + SDDMM).
+    Gat,
+}
+
+impl std::str::FromStr for ModelKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "gcn" => Ok(ModelKind::Gcn),
+            "gat" => Ok(ModelKind::Gat),
+            other => Err(format!("unknown model '{other}' (gcn|gat)")),
+        }
+    }
+}
+
+/// Parse a mode name into a [`TrainMode`].
+pub fn parse_mode(name: &str, bits: u8) -> Result<TrainMode, String> {
+    match name.to_ascii_lowercase().as_str() {
+        "fp32" | "dgl" => Ok(TrainMode::fp32()),
+        "tango" => Ok(TrainMode::tango(bits)),
+        "tango-test1" | "test1" => Ok(TrainMode::tango_test1(bits)),
+        "tango-test2" | "test2" => Ok(TrainMode::tango_test2(bits)),
+        "exact" => Ok(TrainMode::exact(bits)),
+        other => Err(format!("unknown mode '{other}' (fp32|tango|test1|test2|exact)")),
+    }
+}
+
+/// Mode back to its canonical name.
+pub fn mode_name(mode: &TrainMode) -> &'static str {
+    if mode.exact_style {
+        "exact"
+    } else if !mode.quantize {
+        "fp32"
+    } else if !mode.fp32_pre_softmax {
+        "tango-test1"
+    } else if !mode.stochastic {
+        "tango-test2"
+    } else {
+        "tango"
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model architecture.
+    pub model: ModelKind,
+    /// Dataset name (see `graph::datasets::SPECS`) or "tiny".
+    pub dataset: String,
+    /// Training epochs (full-graph steps).
+    pub epochs: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// Hidden width.
+    pub hidden: usize,
+    /// Attention heads (GAT only).
+    pub heads: usize,
+    /// Layer count.
+    pub layers: usize,
+    /// Execution mode.
+    pub mode: TrainMode,
+    /// Auto-derive the bit width with the Fig. 2 rule before training.
+    pub auto_bits: bool,
+    /// RNG seed (graph, init, rounding streams).
+    pub seed: u64,
+    /// Log every `log_every` epochs (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        // The paper's §4.1 model config.
+        TrainConfig {
+            model: ModelKind::Gcn,
+            dataset: "Pubmed".into(),
+            epochs: 30,
+            lr: 0.05,
+            hidden: 128,
+            heads: 4,
+            layers: 2,
+            mode: TrainMode::tango(8),
+            auto_bits: false,
+            seed: 42,
+            log_every: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Small config for doc examples and smoke tests.
+    pub fn quickstart() -> Self {
+        TrainConfig {
+            dataset: "tiny".into(),
+            hidden: 16,
+            epochs: 20,
+            ..Default::default()
+        }
+    }
+
+    /// Load from a TOML file's `[train]` section (all keys optional).
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = TrainConfig::default();
+        let get = |k: &str| doc.get("train", k);
+        if let Some(v) = get("model") {
+            cfg.model = v.parse()?;
+        }
+        if let Some(v) = get("dataset") {
+            cfg.dataset = v.to_string();
+        }
+        if let Some(v) = get("epochs") {
+            cfg.epochs = v.parse().map_err(|e| format!("epochs: {e}"))?;
+        }
+        if let Some(v) = get("lr") {
+            cfg.lr = v.parse().map_err(|e| format!("lr: {e}"))?;
+        }
+        if let Some(v) = get("hidden") {
+            cfg.hidden = v.parse().map_err(|e| format!("hidden: {e}"))?;
+        }
+        if let Some(v) = get("heads") {
+            cfg.heads = v.parse().map_err(|e| format!("heads: {e}"))?;
+        }
+        if let Some(v) = get("layers") {
+            cfg.layers = v.parse().map_err(|e| format!("layers: {e}"))?;
+        }
+        if let Some(v) = get("seed") {
+            cfg.seed = v.parse().map_err(|e| format!("seed: {e}"))?;
+        }
+        if let Some(v) = get("log_every") {
+            cfg.log_every = v.parse().map_err(|e| format!("log_every: {e}"))?;
+        }
+        let bits: u8 = match get("bits") {
+            Some(v) => v.parse().map_err(|e| format!("bits: {e}"))?,
+            None => 8,
+        };
+        if let Some(v) = get("mode") {
+            cfg.mode = parse_mode(v, bits)?;
+        } else {
+            cfg.mode = TrainMode::tango(bits);
+        }
+        if let Some(v) = get("auto_bits") {
+            cfg.auto_bits = v == "true";
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+# paper §4.1 GAT config
+[train]
+model = "gat"
+dataset = "ogbn-arxiv"
+epochs = 500
+lr = 0.01
+hidden = 128
+heads = 4
+layers = 2
+mode = "tango"
+bits = 8
+seed = 7
+auto_bits = true
+"#;
+        let cfg = TrainConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.model, ModelKind::Gat);
+        assert_eq!(cfg.dataset, "ogbn-arxiv");
+        assert_eq!(cfg.epochs, 500);
+        assert_eq!(cfg.heads, 4);
+        assert!(cfg.auto_bits);
+        assert_eq!(mode_name(&cfg.mode), "tango");
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let cfg = TrainConfig::from_toml("[train]\nmodel = \"gcn\"\n").unwrap();
+        assert_eq!(cfg.model, ModelKind::Gcn);
+        assert_eq!(cfg.epochs, 30);
+        assert_eq!(mode_name(&cfg.mode), "tango");
+    }
+
+    #[test]
+    fn rejects_unknown_model_and_mode() {
+        assert!(TrainConfig::from_toml("[train]\nmodel = \"transformer\"\n").is_err());
+        assert!(TrainConfig::from_toml("[train]\nmode = \"int2\"\n").is_err());
+    }
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for name in ["fp32", "tango", "tango-test1", "tango-test2", "exact"] {
+            let m = parse_mode(name, 8).unwrap();
+            assert_eq!(mode_name(&m), name);
+        }
+    }
+}

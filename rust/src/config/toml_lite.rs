@@ -1,0 +1,116 @@
+//! Minimal TOML-subset parser: `[section]`, `key = value`, `#` comments.
+//! Values keep their raw text (quotes stripped for strings); typed access
+//! happens at the config layer via `parse()`.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML-subset document.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl TomlDoc {
+    /// Parse a document. Errors carry the line number.
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+            let key = k.trim().to_string();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = unquote(v.trim()).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    /// Look up `section.key` (empty string = top-level keys).
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    /// All keys of a section.
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections.get(section).map(|m| m.keys().map(|k| k.as_str()).collect()).unwrap_or_default()
+    }
+
+    /// Section names.
+    pub fn sections(&self) -> Vec<&str> {
+        self.sections.keys().map(|k| k.as_str()).collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> Result<String, String> {
+    if let Some(inner) = v.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        Ok(inner.to_string())
+    } else if v.is_empty() {
+        Err("empty value".into())
+    } else {
+        Ok(v.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let doc = TomlDoc::parse("top = 1\n[a]\nx = \"hi\" # comment\ny = 2.5\n[b]\nz = true\n").unwrap();
+        assert_eq!(doc.get("", "top"), Some("1"));
+        assert_eq!(doc.get("a", "x"), Some("hi"));
+        assert_eq!(doc.get("a", "y"), Some("2.5"));
+        assert_eq!(doc.get("b", "z"), Some("true"));
+        assert_eq!(doc.get("a", "missing"), None);
+        assert_eq!(doc.sections(), vec!["", "a", "b"]);
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = TomlDoc::parse("[s]\nname = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("s", "name"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("[s]\noops\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = TomlDoc::parse("[s]\nx = \"unterminated\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn empty_and_comment_lines_skipped() {
+        let doc = TomlDoc::parse("\n# full comment\n[s]\n\nk = v\n").unwrap();
+        assert_eq!(doc.get("s", "k"), Some("v"));
+        assert_eq!(doc.keys("s"), vec!["k"]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Computation-graph IR: tensors as nodes, operators as edges (paper §3.3,
+//! "we derive the caching opportunity on the computation graph").
+//!
+//! The IR is deliberately small — just enough to express a GNN training
+//! step (Fig. 1) and run the reuse-detection algorithm over it. The trainer
+//! does not interpret this graph at runtime; it is the *planning* structure
+//! from which the static quantization/caching schedule is derived (and the
+//! hand-scheduled model code is asserted against it in tests).
+
+/// Identifies a tensor in the computation graph.
+pub type TensorId = usize;
+
+/// Operator kinds (the primitives of §2.1 plus FP32-only glue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Dense matmul — quantizable.
+    Gemm,
+    /// Sparse-dense matmul — quantizable.
+    Spmm,
+    /// Sampled dense-dense — quantizable.
+    Sddmm,
+    /// Edge/row softmax — always FP32 (§3.2).
+    Softmax,
+    /// Elementwise (ReLU etc.) — FP32 glue, not quantized.
+    Elementwise,
+    /// Parameter update — always FP32 (§3.2).
+    WeightUpdate,
+}
+
+impl OpKind {
+    /// Whether this operator consumes quantized inputs under Tango's rules.
+    pub fn quantizable(self) -> bool {
+        matches!(self, OpKind::Gemm | OpKind::Spmm | OpKind::Sddmm)
+    }
+}
+
+/// One operator application.
+#[derive(Debug, Clone)]
+pub struct Op {
+    /// Operator kind.
+    pub kind: OpKind,
+    /// Input tensor ids.
+    pub inputs: Vec<TensorId>,
+    /// Output tensor ids.
+    pub outputs: Vec<TensorId>,
+    /// Human-readable label (e.g. "fwd.gemm.H'").
+    pub label: String,
+    /// True for backward-pass operators (the reversed graph).
+    pub backward: bool,
+}
+
+/// A computation graph for one training step.
+#[derive(Debug, Default, Clone)]
+pub struct CompGraph {
+    tensors: Vec<String>,
+    ops: Vec<Op>,
+}
+
+impl CompGraph {
+    /// Empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a tensor, returning its id.
+    pub fn tensor(&mut self, name: &str) -> TensorId {
+        self.tensors.push(name.to_string());
+        self.tensors.len() - 1
+    }
+
+    /// Register an operator.
+    pub fn op(&mut self, kind: OpKind, label: &str, inputs: &[TensorId], outputs: &[TensorId], backward: bool) {
+        assert!(inputs.iter().chain(outputs.iter()).all(|&t| t < self.tensors.len()));
+        self.ops.push(Op {
+            kind,
+            inputs: inputs.to_vec(),
+            outputs: outputs.to_vec(),
+            label: label.to_string(),
+            backward,
+        });
+    }
+
+    /// All operators.
+    pub fn ops(&self) -> &[Op] {
+        &self.ops
+    }
+
+    /// Tensor name.
+    pub fn tensor_name(&self, id: TensorId) -> &str {
+        &self.tensors[id]
+    }
+
+    /// Number of tensors.
+    pub fn num_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// Quantizable consumers per tensor: how many quantizable ops read it,
+    /// split by (forward, backward).
+    pub fn quantizable_consumers(&self, id: TensorId) -> (usize, usize) {
+        let mut fwd = 0;
+        let mut bwd = 0;
+        for op in &self.ops {
+            if op.kind.quantizable() && op.inputs.contains(&id) {
+                if op.backward {
+                    bwd += 1;
+                } else {
+                    fwd += 1;
+                }
+            }
+        }
+        (fwd, bwd)
+    }
+
+    /// Build the computation graph of one **GAT layer's** training step
+    /// (forward Fig. 1a + backward Fig. 1b) — the paper's running example,
+    /// used by tests and by `repro` to print the derived caching plan.
+    pub fn gat_layer_example() -> (CompGraph, GatTensors) {
+        let mut g = CompGraph::new();
+        let h = g.tensor("H");
+        let w = g.tensor("W");
+        let h_prime = g.tensor("H'");
+        let s = g.tensor("S");
+        let d = g.tensor("D");
+        let e = g.tensor("E");
+        let alpha = g.tensor("alpha");
+        let h_out = g.tensor("H_l");
+        let a_src = g.tensor("a_src");
+        let a_dst = g.tensor("a_dst");
+        // Forward (Fig. 1a).
+        g.op(OpKind::Gemm, "fwd.gemm.H'", &[h, w], &[h_prime], false);
+        g.op(OpKind::Gemm, "fwd.gemm.S", &[h_prime, a_src], &[s], false);
+        g.op(OpKind::Gemm, "fwd.gemm.D", &[h_prime, a_dst], &[d], false);
+        g.op(OpKind::Sddmm, "fwd.sddmm.E", &[s, d], &[e], false);
+        g.op(OpKind::Softmax, "fwd.softmax.alpha", &[e], &[alpha], false);
+        g.op(OpKind::Spmm, "fwd.spmm.H_l", &[alpha, h_prime], &[h_out], false);
+        // Backward (Fig. 1b).
+        let d_hout = g.tensor("dH_l");
+        let d_hprime = g.tensor("dH'");
+        let d_alpha = g.tensor("dalpha");
+        let d_e = g.tensor("dE");
+        let d_s = g.tensor("dS");
+        let d_d = g.tensor("dD");
+        let d_w = g.tensor("dW");
+        let d_h = g.tensor("dH");
+        g.op(OpKind::Spmm, "bwd.spmm.dH'", &[alpha, d_hout], &[d_hprime], true);
+        g.op(OpKind::Sddmm, "bwd.sddmm.dalpha", &[d_hout, h_prime], &[d_alpha], true);
+        g.op(OpKind::Softmax, "bwd.softmax.dE", &[d_alpha, alpha], &[d_e], true);
+        g.op(OpKind::Spmm, "bwd.spmm.dS", &[d_e], &[d_s], true);
+        g.op(OpKind::Spmm, "bwd.spmm.dD", &[d_e], &[d_d], true);
+        g.op(OpKind::Gemm, "bwd.gemm.dW", &[h, d_hprime], &[d_w], true);
+        g.op(OpKind::Gemm, "bwd.gemm.dH", &[d_hprime, w], &[d_h], true);
+        g.op(OpKind::WeightUpdate, "update.W", &[w, d_w], &[], true);
+        let t = GatTensors { h, w, h_prime, alpha, d_hout, d_hprime, d_e };
+        (g, t)
+    }
+}
+
+/// Named tensor ids of the GAT example (for tests/reports).
+#[derive(Debug, Clone, Copy)]
+pub struct GatTensors {
+    /// Input features.
+    pub h: TensorId,
+    /// Weights.
+    pub w: TensorId,
+    /// Projected features `H'`.
+    pub h_prime: TensorId,
+    /// Attention scores.
+    pub alpha: TensorId,
+    /// Upstream gradient `∂H^(l)`.
+    pub d_hout: TensorId,
+    /// `∂H'`.
+    pub d_hprime: TensorId,
+    /// `∂E`.
+    pub d_e: TensorId,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gat_example_builds() {
+        let (g, t) = CompGraph::gat_layer_example();
+        assert!(g.num_tensors() >= 15);
+        assert_eq!(g.tensor_name(t.h_prime), "H'");
+        // H' is consumed by 3 forward quantizable ops (S, D projections and
+        // the aggregation SPMM) and 1 backward (SDDMM-dot).
+        let (fwd, bwd) = g.quantizable_consumers(t.h_prime);
+        assert_eq!(fwd, 3);
+        assert_eq!(bwd, 1);
+    }
+
+    #[test]
+    fn softmax_is_not_quantizable() {
+        assert!(!OpKind::Softmax.quantizable());
+        assert!(!OpKind::WeightUpdate.quantizable());
+        assert!(OpKind::Gemm.quantizable() && OpKind::Spmm.quantizable() && OpKind::Sddmm.quantizable());
+    }
+
+    #[test]
+    fn d_hout_has_two_backward_consumers() {
+        // The paper's example: ∂H^(l) feeds both the backward SPMM and the
+        // SDDMM-dot — the inter-primitive caching case.
+        let (g, t) = CompGraph::gat_layer_example();
+        let (fwd, bwd) = g.quantizable_consumers(t.d_hout);
+        assert_eq!(fwd, 0);
+        assert_eq!(bwd, 2);
+    }
+}

@@ -1,0 +1,26 @@
+//! The Tango coordinator — the paper's system-level contribution (§3.3).
+//!
+//! - [`graph_ir`] — a small computation-graph IR (tensors as nodes,
+//!   operators as edges) over which the caching opportunities are derived;
+//! - [`reuse`] — the **detection algorithm** of §3.3: (a) tensors with more
+//!   than one consumer are quantized once and cached; (b) the backward graph
+//!   (reversed edges) reuses tensors already quantized in the forward graph;
+//! - [`qcache`] — the quantized-tensor cache the trainer carries across a
+//!   step (forward→backward) keyed by tensor id;
+//! - [`adaptive`] — the kernel-count-based adaptive SPMM policy (Fig. 6 /
+//!   Fig. 14): choose between the native three-matrix kernel, the per-head
+//!   split, and the many-SpMV transform by modelled cost;
+//! - [`trainer`] — the epoch orchestrator gluing datasets, models, the
+//!   cache and metrics together (what `tango train` runs).
+
+pub mod adaptive;
+pub mod graph_ir;
+pub mod qcache;
+pub mod reuse;
+pub mod trainer;
+
+pub use adaptive::{choose_spmm_kernel, SpmmKernel};
+pub use graph_ir::{CompGraph, OpKind, TensorId};
+pub use qcache::QuantCache;
+pub use reuse::{detect_reuse, ReusePlan};
+pub use trainer::{TrainReport, Trainer};

@@ -1,0 +1,159 @@
+//! Quantized-tensor cache (paper §3.3, Fig. 10).
+//!
+//! Holds the quantized copies produced during a step so later primitives
+//! (same pass or backward) skip requantization. Keys are caller-chosen
+//! stable ids (layer × role); entries are invalidated wholesale at the end
+//! of each step because dynamic quantization re-derives scales every
+//! iteration.
+
+use crate::quant::{quantize, QTensor, Rounding};
+use crate::tensor::Dense;
+use std::collections::HashMap;
+
+/// Cache statistics (drives the Fig. 10 speedup report).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Quantization passes actually executed.
+    pub misses: u64,
+    /// Quantization passes skipped thanks to the cache.
+    pub hits: u64,
+}
+
+/// A per-step quantized tensor cache.
+#[derive(Debug, Default)]
+pub struct QuantCache {
+    entries: HashMap<u64, QTensor>,
+    stats: CacheStats,
+}
+
+impl QuantCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get the quantized form of `x` under `key`, quantizing on miss.
+    ///
+    /// The caller guarantees `key` uniquely identifies the tensor *value*
+    /// within the current step (the trainer derives keys from layer index ×
+    /// role, and clears the cache between steps).
+    pub fn get_or_quantize(
+        &mut self,
+        key: u64,
+        x: &Dense<f32>,
+        bits: u8,
+        rounding: Rounding,
+    ) -> &QTensor {
+        use std::collections::hash_map::Entry;
+        match self.entries.entry(key) {
+            Entry::Occupied(e) => {
+                self.stats.hits += 1;
+                e.into_mut()
+            }
+            Entry::Vacant(e) => {
+                self.stats.misses += 1;
+                e.insert(quantize(x, bits, rounding))
+            }
+        }
+    }
+
+    /// Insert an externally produced quantized tensor (e.g. the `qa`/`qb`
+    /// copies the fused GEMM stores back).
+    pub fn put(&mut self, key: u64, q: QTensor) {
+        self.entries.insert(key, q);
+    }
+
+    /// Look up without quantizing.
+    pub fn get(&mut self, key: u64) -> Option<&QTensor> {
+        let hit = self.entries.contains_key(&key);
+        if hit {
+            self.stats.hits += 1;
+        }
+        self.entries.get(&key)
+    }
+
+    /// Drop all entries (end of step — dynamic quantization re-derives
+    /// scales next iteration). Stats survive.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Cache statistics so far.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if no live entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bytes held by cached quantized payloads.
+    pub fn cached_bytes(&self) -> usize {
+        self.entries.values().map(|q| q.stored_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::random_features;
+
+    #[test]
+    fn second_lookup_hits() {
+        let mut c = QuantCache::new();
+        let x = random_features(8, 8, 1);
+        let q1 = c.get_or_quantize(7, &x, 8, Rounding::Nearest).clone();
+        let q2 = c.get_or_quantize(7, &x, 8, Rounding::Nearest).clone();
+        assert_eq!(q1, q2, "cache must return bit-identical tensors");
+        assert_eq!(c.stats(), CacheStats { misses: 1, hits: 1 });
+    }
+
+    #[test]
+    fn different_keys_do_not_collide() {
+        let mut c = QuantCache::new();
+        let x = random_features(4, 4, 2);
+        let y = random_features(4, 4, 3);
+        c.get_or_quantize(1, &x, 8, Rounding::Nearest);
+        c.get_or_quantize(2, &y, 8, Rounding::Nearest);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().misses, 2);
+    }
+
+    #[test]
+    fn clear_resets_entries_not_stats() {
+        let mut c = QuantCache::new();
+        let x = random_features(4, 4, 4);
+        c.get_or_quantize(1, &x, 8, Rounding::Nearest);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.stats().misses, 1);
+        // After clear, same key requantizes (dynamic quantization).
+        c.get_or_quantize(1, &x, 8, Rounding::Nearest);
+        assert_eq!(c.stats().misses, 2);
+    }
+
+    #[test]
+    fn put_then_get() {
+        let mut c = QuantCache::new();
+        let x = random_features(4, 4, 5);
+        let q = crate::quant::quantize(&x, 8, Rounding::Nearest);
+        c.put(9, q.clone());
+        assert_eq!(c.get(9), Some(&q));
+        assert_eq!(c.stats().hits, 1);
+        assert!(c.get(10).is_none());
+    }
+
+    #[test]
+    fn cached_bytes_accounts_payloads() {
+        let mut c = QuantCache::new();
+        let x = random_features(8, 8, 6);
+        c.get_or_quantize(1, &x, 8, Rounding::Nearest);
+        assert_eq!(c.cached_bytes(), 64);
+    }
+}

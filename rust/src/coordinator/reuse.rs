@@ -1,0 +1,157 @@
+//! The caching-opportunity **detection algorithm** (paper §3.3).
+//!
+//! Quoting the paper: "The computation graph consists of tensors as nodes
+//! and operators as edges. For nodes with more than one out edge, we can
+//! quantize once for multiple operators. [...] Then we reverse the edges in
+//! the computation graph for the backward pass. In this backpropagation
+//! graph, we will check if the to-be-quantized tensors are already quantized
+//! in the forward graph in order to facilitate quantization sharing."
+//!
+//! [`detect_reuse`] runs exactly that analysis and returns a [`ReusePlan`]:
+//! which tensors to cache after their first quantization, and how many
+//! quantization passes the plan saves per training step.
+
+use super::graph_ir::{CompGraph, TensorId};
+use std::collections::BTreeSet;
+
+/// The derived caching plan for one training step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReusePlan {
+    /// Tensors consumed by >1 quantizable operator within one pass —
+    /// quantize once, cache for the remaining consumers.
+    pub multi_consumer: BTreeSet<TensorId>,
+    /// Tensors quantized in the forward pass and consumed again by the
+    /// backward pass — keep the forward quantized copy alive.
+    pub forward_to_backward: BTreeSet<TensorId>,
+    /// Total quantization passes a naive schedule would run.
+    pub naive_quantizations: usize,
+    /// Quantization passes after caching.
+    pub cached_quantizations: usize,
+}
+
+impl ReusePlan {
+    /// All tensors worth caching.
+    pub fn cached_tensors(&self) -> BTreeSet<TensorId> {
+        self.multi_consumer.union(&self.forward_to_backward).cloned().collect()
+    }
+
+    /// Quantization passes avoided per step.
+    pub fn saved(&self) -> usize {
+        self.naive_quantizations - self.cached_quantizations
+    }
+}
+
+/// Run the detection algorithm over a computation graph.
+pub fn detect_reuse(g: &CompGraph) -> ReusePlan {
+    let mut multi_consumer = BTreeSet::new();
+    let mut forward_to_backward = BTreeSet::new();
+    let mut naive = 0usize;
+    let mut cached = 0usize;
+    for t in 0..g.num_tensors() {
+        let (fwd, bwd) = g.quantizable_consumers(t);
+        let total = fwd + bwd;
+        naive += total;
+        if total == 0 {
+            continue;
+        }
+        // One quantization materialises the tensor; every further consumer
+        // reuses it.
+        cached += 1;
+        // Rule (a): >1 consumer within a pass.
+        if fwd > 1 || bwd > 1 {
+            multi_consumer.insert(t);
+        }
+        // Rule (b): quantized in forward, needed again in backward.
+        if fwd >= 1 && bwd >= 1 {
+            forward_to_backward.insert(t);
+        }
+    }
+    ReusePlan { multi_consumer, forward_to_backward, naive_quantizations: naive, cached_quantizations: cached }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::graph_ir::{CompGraph, OpKind};
+    use crate::util::prop;
+
+    #[test]
+    fn gat_example_matches_paper_claims() {
+        let (g, t) = CompGraph::gat_layer_example();
+        let plan = detect_reuse(&g);
+        // Paper: H^(l-1) and W are used in both forward and backward GEMMs.
+        assert!(plan.forward_to_backward.contains(&t.h), "H reused fwd->bwd");
+        assert!(plan.forward_to_backward.contains(&t.w), "W reused fwd->bwd");
+        // Paper: H' feeds multiple forward ops and the backward SDDMM.
+        assert!(plan.multi_consumer.contains(&t.h_prime));
+        assert!(plan.forward_to_backward.contains(&t.h_prime));
+        // Paper: ∂H^(l) feeds the backward SPMM and SDDMM — quantize once.
+        assert!(plan.multi_consumer.contains(&t.d_hout));
+        // Caching must save work.
+        assert!(plan.saved() > 0);
+        assert!(plan.cached_quantizations < plan.naive_quantizations);
+    }
+
+    #[test]
+    fn lone_consumer_not_cached() {
+        let mut g = CompGraph::new();
+        let a = g.tensor("a");
+        let b = g.tensor("b");
+        let c = g.tensor("c");
+        g.op(OpKind::Gemm, "g", &[a, b], &[c], false);
+        let plan = detect_reuse(&g);
+        assert!(plan.multi_consumer.is_empty());
+        assert!(plan.forward_to_backward.is_empty());
+        assert_eq!(plan.saved(), 0);
+    }
+
+    #[test]
+    fn softmax_consumers_do_not_trigger_caching() {
+        // alpha feeding two softmax ops is NOT a quantization-sharing case.
+        let mut g = CompGraph::new();
+        let a = g.tensor("a");
+        let o1 = g.tensor("o1");
+        let o2 = g.tensor("o2");
+        g.op(OpKind::Softmax, "s1", &[a], &[o1], false);
+        g.op(OpKind::Softmax, "s2", &[a], &[o2], true);
+        let plan = detect_reuse(&g);
+        assert!(plan.cached_tensors().is_empty());
+    }
+
+    #[test]
+    fn prop_detection_never_misses_multi_consumer() {
+        // Property: any tensor feeding >=2 quantizable ops in the same pass
+        // is in the plan; any tensor feeding fwd+bwd is in the f2b set.
+        prop::check("reuse completeness", 64, |gen| {
+            let n_tensors = gen.usize_in(2, 12);
+            let mut g = CompGraph::new();
+            let ids: Vec<_> = (0..n_tensors).map(|i| g.tensor(&format!("t{i}"))).collect();
+            let n_ops = gen.usize_in(1, 15);
+            for i in 0..n_ops {
+                let kind = match gen.usize_in(0, 3) {
+                    0 => OpKind::Gemm,
+                    1 => OpKind::Spmm,
+                    2 => OpKind::Sddmm,
+                    _ => OpKind::Elementwise,
+                };
+                let a = ids[gen.usize_in(0, n_tensors - 1)];
+                let b = ids[gen.usize_in(0, n_tensors - 1)];
+                let out = ids[gen.usize_in(0, n_tensors - 1)];
+                g.op(kind, &format!("op{i}"), &[a, b], &[out], gen.bool(0.5));
+            }
+            let plan = detect_reuse(&g);
+            for &t in &ids {
+                let (f, b) = g.quantizable_consumers(t);
+                assert_eq!(plan.multi_consumer.contains(&t), f > 1 || b > 1, "multi consumer t={t}");
+                assert_eq!(plan.forward_to_backward.contains(&t), f >= 1 && b >= 1, "f2b t={t}");
+            }
+            // Accounting invariant: savings = total consumers - distinct
+            // quantized tensors.
+            let total: usize = ids.iter().map(|&t| {
+                let (f, b) = g.quantizable_consumers(t);
+                f + b
+            }).sum();
+            assert_eq!(plan.naive_quantizations, total);
+        });
+    }
+}

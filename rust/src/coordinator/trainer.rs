@@ -1,0 +1,317 @@
+//! Training orchestrator: dataset + model + mode + epochs → loss curve and
+//! final metric. This is what `tango train` and the Fig. 7/8 repro drive.
+
+use crate::config::{ModelKind, TrainConfig};
+use crate::graph::datasets::{self, Dataset, Task};
+use crate::model::{
+    accuracy, auc, bce_with_logits, softmax_cross_entropy, GatConfig, GatModel, GcnConfig,
+    GcnModel, Sgd, TrainMode,
+};
+use crate::quant::rng::Xoshiro256pp;
+use crate::quant::{derive_bits, DEFAULT_ERROR_TARGET};
+use crate::tensor::Dense;
+
+/// The model under training.
+enum AnyModel {
+    Gcn(GcnModel),
+    Gat(GatModel),
+}
+
+/// One training run's results.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Loss after every epoch.
+    pub losses: Vec<f32>,
+    /// Evaluation metric after every epoch (accuracy for NC, AUC for LP).
+    pub evals: Vec<f32>,
+    /// Final evaluation metric.
+    pub final_eval: f32,
+    /// Total wall-clock training seconds (forward+backward+update only).
+    pub wall_secs: f64,
+    /// Bit width used (after auto-derivation if enabled).
+    pub bits: u8,
+    /// Epochs until the loss first dropped below 1.02× its final value
+    /// (a convergence-speed proxy for the Fig. 7 comparison).
+    pub epochs_to_converge: usize,
+}
+
+/// The training coordinator.
+pub struct Trainer {
+    cfg: TrainConfig,
+    data: Dataset,
+    model: AnyModel,
+    opt: Sgd,
+}
+
+impl Trainer {
+    /// Build everything from a config (loads the dataset, derives bits if
+    /// requested, initialises the model).
+    pub fn from_config(cfg: &TrainConfig) -> crate::Result<Self> {
+        let data = if cfg.dataset == "tiny" {
+            datasets::tiny(cfg.seed)
+        } else {
+            datasets::load_by_name(&cfg.dataset, cfg.seed)
+        };
+        Self::with_dataset(cfg.clone(), data)
+    }
+
+    /// Build with an externally supplied dataset (multi-worker path).
+    pub fn with_dataset(mut cfg: TrainConfig, data: Dataset) -> crate::Result<Self> {
+        let out_dim = match data.task {
+            Task::NodeClassification => data.num_classes,
+            // LP trains an embedding; score = dot of endpoint embeddings.
+            Task::LinkPrediction => cfg.hidden.min(64),
+        };
+        // The Fig. 2 rule: quantize the first layer's output of the initial
+        // model and pick the bit width meeting Error_X <= 0.3.
+        if cfg.auto_bits && cfg.mode.quantize {
+            let probe = Self::build_model(&cfg, &data, out_dim);
+            let first = match &probe {
+                AnyModel::Gcn(m) => m.first_layer_output(&data.features),
+                AnyModel::Gat(m) => m.first_layer_output(&data.features),
+            };
+            let derived = derive_bits(&first, DEFAULT_ERROR_TARGET);
+            cfg.mode.bits = derived.bits;
+        }
+        let model = Self::build_model(&cfg, &data, out_dim);
+        let opt = Sgd::new(cfg.lr);
+        Ok(Trainer { cfg, data, model, opt })
+    }
+
+    fn build_model(cfg: &TrainConfig, data: &Dataset, out_dim: usize) -> AnyModel {
+        match cfg.model {
+            ModelKind::Gcn => AnyModel::Gcn(GcnModel::new(
+                GcnConfig {
+                    in_dim: data.features.cols(),
+                    hidden: cfg.hidden,
+                    out_dim,
+                    layers: cfg.layers,
+                    mode: cfg.mode,
+                },
+                &data.graph,
+                cfg.seed,
+            )),
+            ModelKind::Gat => AnyModel::Gat(GatModel::new(
+                GatConfig {
+                    in_dim: data.features.cols(),
+                    hidden: cfg.hidden,
+                    out_dim,
+                    heads: cfg.heads,
+                    layers: cfg.layers,
+                    mode: cfg.mode,
+                },
+                &data.graph,
+                cfg.seed,
+            )),
+        }
+    }
+
+    /// The dataset being trained on.
+    pub fn dataset(&self) -> &Dataset {
+        &self.data
+    }
+
+    /// The effective mode (bits may have been auto-derived).
+    pub fn mode(&self) -> TrainMode {
+        self.cfg.mode
+    }
+
+    /// Run the configured number of epochs.
+    pub fn run(&mut self) -> crate::Result<TrainReport> {
+        let mut losses = Vec::with_capacity(self.cfg.epochs);
+        let mut evals = Vec::with_capacity(self.cfg.epochs);
+        let mut wall = 0.0f64;
+        for epoch in 0..self.cfg.epochs {
+            let (loss, secs) = crate::metrics::time_once(|| self.train_epoch(epoch as u64));
+            wall += secs;
+            let eval = self.evaluate();
+            if self.cfg.log_every > 0 && epoch % self.cfg.log_every == 0 {
+                println!(
+                    "epoch {epoch:>4}  loss {loss:>8.4}  eval {eval:>6.4}  ({:.1} ms)",
+                    secs * 1e3
+                );
+            }
+            losses.push(loss);
+            evals.push(eval);
+        }
+        let final_eval = *evals.last().unwrap_or(&0.0);
+        let final_loss = *losses.last().unwrap_or(&f32::INFINITY);
+        let epochs_to_converge = losses
+            .iter()
+            .position(|&l| l <= final_loss * 1.02)
+            .unwrap_or(losses.len());
+        Ok(TrainReport {
+            losses,
+            evals,
+            final_eval,
+            wall_secs: wall,
+            bits: self.cfg.mode.bits,
+            epochs_to_converge,
+        })
+    }
+
+    /// One full-graph training step.
+    fn train_epoch(&mut self, epoch: u64) -> f32 {
+        match self.data.task {
+            Task::NodeClassification => {
+                let (labels, train) = (self.data.labels.clone(), self.data.train_nodes.clone());
+                let features = self.data.features.clone();
+                let opt = &mut self.opt;
+                match &mut self.model {
+                    AnyModel::Gcn(m) => {
+                        m.train_step(&features, opt, |lg| softmax_cross_entropy(lg, &labels, &train)).0
+                    }
+                    AnyModel::Gat(m) => {
+                        m.train_step(&features, opt, |lg| softmax_cross_entropy(lg, &labels, &train)).0
+                    }
+                }
+            }
+            Task::LinkPrediction => self.train_epoch_lp(epoch),
+        }
+    }
+
+    /// LP step: positive edges + sampled negatives, dot-product scores, BCE.
+    fn train_epoch_lp(&mut self, epoch: u64) -> f32 {
+        let graph = self.data.graph.clone();
+        let n = graph.num_nodes;
+        let mut rng = Xoshiro256pp::new(self.cfg.seed ^ epoch.wrapping_mul(0x1234_5678_9ABC));
+        // Sample up to 4096 positive edges and as many negatives.
+        let m = graph.num_edges().min(4096);
+        let mut pairs: Vec<(u32, u32, f32)> = Vec::with_capacity(2 * m);
+        for _ in 0..m {
+            let e = (rng.next_u64() % graph.num_edges() as u64) as usize;
+            pairs.push((graph.src[e], graph.dst[e], 1.0));
+            pairs.push((
+                (rng.next_u64() % n as u64) as u32,
+                (rng.next_u64() % n as u64) as u32,
+                0.0,
+            ));
+        }
+        let features = self.data.features.clone();
+        let opt = &mut self.opt;
+        let loss_grad = |emb: &Dense<f32>| -> (f32, Dense<f32>) {
+            let dim = emb.cols();
+            let scores: Vec<f32> = pairs
+                .iter()
+                .map(|&(u, v, _)| {
+                    emb.row(u as usize).iter().zip(emb.row(v as usize)).map(|(a, b)| a * b).sum()
+                })
+                .collect();
+            let targets: Vec<f32> = pairs.iter().map(|p| p.2).collect();
+            let (loss, dscores) = bce_with_logits(&scores, &targets);
+            let mut grad = Dense::zeros(&[emb.rows(), dim]);
+            for (k, &(u, v, _)) in pairs.iter().enumerate() {
+                let g = dscores[k];
+                // ∂/∂emb[u] = g·emb[v]; ∂/∂emb[v] = g·emb[u].
+                for j in 0..dim {
+                    grad.row_mut(u as usize)[j] += g * emb.at(v as usize, j);
+                }
+                for j in 0..dim {
+                    grad.row_mut(v as usize)[j] += g * emb.at(u as usize, j);
+                }
+            }
+            (loss, grad)
+        };
+        match &mut self.model {
+            AnyModel::Gcn(m) => m.train_step(&features, opt, loss_grad).0,
+            AnyModel::Gat(m) => m.train_step(&features, opt, loss_grad).0,
+        }
+    }
+
+    /// Evaluation metric on the held-out split.
+    pub fn evaluate(&self) -> f32 {
+        let out = match &self.model {
+            AnyModel::Gcn(m) => m.forward(&self.data.features),
+            AnyModel::Gat(m) => m.forward(&self.data.features),
+        };
+        match self.data.task {
+            Task::NodeClassification => accuracy(&out, &self.data.labels, &self.data.eval_nodes),
+            Task::LinkPrediction => {
+                // AUC over held-out positive edges vs random pairs.
+                let g = &self.data.graph;
+                let mut rng = Xoshiro256pp::new(self.cfg.seed ^ 0xEA1);
+                let k = g.num_edges().min(2000);
+                let mut pos = Vec::with_capacity(k);
+                let mut neg = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let e = (rng.next_u64() % g.num_edges() as u64) as usize;
+                    let (u, v) = (g.src[e] as usize, g.dst[e] as usize);
+                    pos.push(out.row(u).iter().zip(out.row(v)).map(|(a, b)| a * b).sum());
+                    let (ru, rv) = (
+                        (rng.next_u64() % g.num_nodes as u64) as usize,
+                        (rng.next_u64() % g.num_nodes as u64) as usize,
+                    );
+                    neg.push(out.row(ru).iter().zip(out.row(rv)).map(|(a, b)| a * b).sum());
+                }
+                auc(&pos, &neg)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::parse_mode;
+
+    fn quick_cfg(model: ModelKind, mode: &str) -> TrainConfig {
+        TrainConfig {
+            model,
+            dataset: "tiny".into(),
+            epochs: 40,
+            lr: 0.1,
+            hidden: 16,
+            heads: 4,
+            layers: 2,
+            mode: parse_mode(mode, 8).unwrap(),
+            auto_bits: false,
+            seed: 3,
+            log_every: 0,
+        }
+    }
+
+    #[test]
+    fn gcn_trainer_learns_tiny_nc() {
+        let mut t = Trainer::from_config(&quick_cfg(ModelKind::Gcn, "tango")).unwrap();
+        let r = t.run().unwrap();
+        assert_eq!(r.losses.len(), 40);
+        assert!(r.losses[39] < r.losses[0], "{:?}", r.losses);
+        assert!(r.final_eval > 0.3, "eval {}", r.final_eval);
+    }
+
+    #[test]
+    fn gat_trainer_learns_tiny_nc() {
+        let mut t = Trainer::from_config(&quick_cfg(ModelKind::Gat, "tango")).unwrap();
+        let r = t.run().unwrap();
+        assert!(r.losses[39] < r.losses[0]);
+    }
+
+    #[test]
+    fn auto_bits_derives_a_width() {
+        let mut cfg = quick_cfg(ModelKind::Gcn, "tango");
+        cfg.auto_bits = true;
+        let t = Trainer::from_config(&cfg).unwrap();
+        let bits = t.mode().bits;
+        assert!((2..=8).contains(&bits), "derived bits {bits}");
+    }
+
+    #[test]
+    fn lp_task_trains_and_reports_auc() {
+        let mut cfg = quick_cfg(ModelKind::Gcn, "fp32");
+        cfg.dataset = "DBLP".into();
+        cfg.epochs = 3;
+        // shrink for test speed
+        cfg.hidden = 8;
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        let r = t.run().unwrap();
+        assert_eq!(r.losses.len(), 3);
+        assert!(r.final_eval > 0.0 && r.final_eval <= 1.0);
+    }
+
+    #[test]
+    fn convergence_epoch_is_sane() {
+        let mut t = Trainer::from_config(&quick_cfg(ModelKind::Gcn, "fp32")).unwrap();
+        let r = t.run().unwrap();
+        assert!(r.epochs_to_converge <= r.losses.len());
+    }
+}

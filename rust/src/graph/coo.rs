@@ -1,0 +1,161 @@
+//! Edge-list (COO) graph form.
+
+/// A directed graph in coordinate form. Edge `e` goes `src[e] -> dst[e]`;
+/// the position in the arrays *is* the edge id, which edge-feature matrices
+/// (`E`, `α`, `∂E`) are indexed by.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Coo {
+    /// Number of nodes.
+    pub num_nodes: usize,
+    /// Source node of each edge.
+    pub src: Vec<u32>,
+    /// Destination node of each edge.
+    pub dst: Vec<u32>,
+}
+
+impl Coo {
+    /// Build from parallel edge arrays. Panics on malformed input.
+    pub fn new(num_nodes: usize, src: Vec<u32>, dst: Vec<u32>) -> Self {
+        assert_eq!(src.len(), dst.len(), "src/dst length mismatch");
+        debug_assert!(src.iter().chain(dst.iter()).all(|&v| (v as usize) < num_nodes));
+        Coo { num_nodes, src, dst }
+    }
+
+    /// Number of edges.
+    pub fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    /// Average in-degree = |E| / |V|.
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_nodes == 0 {
+            0.0
+        } else {
+            self.num_edges() as f64 / self.num_nodes as f64
+        }
+    }
+
+    /// Add the reverse of every edge (paper §4.1: "we add the reverse edges
+    /// for the directed graphs"). Self-loops are not duplicated.
+    pub fn with_reverse_edges(mut self) -> Self {
+        let m = self.num_edges();
+        for e in 0..m {
+            let (s, d) = (self.src[e], self.dst[e]);
+            if s != d {
+                self.src.push(d);
+                self.dst.push(s);
+            }
+        }
+        self
+    }
+
+    /// Add a self-loop to every node (paper §4.1: "self-connect edges to
+    /// ensure the SPMM operation works for every node"). Nodes that already
+    /// have a self-loop are skipped.
+    pub fn with_self_loops(mut self) -> Self {
+        let mut has_loop = vec![false; self.num_nodes];
+        for e in 0..self.num_edges() {
+            if self.src[e] == self.dst[e] {
+                has_loop[self.src[e] as usize] = true;
+            }
+        }
+        for v in 0..self.num_nodes {
+            if !has_loop[v] {
+                self.src.push(v as u32);
+                self.dst.push(v as u32);
+            }
+        }
+        self
+    }
+
+    /// Deduplicate edges (keeps first occurrence, preserves relative order).
+    pub fn dedup(mut self) -> Self {
+        let mut seen = std::collections::HashSet::with_capacity(self.num_edges());
+        let mut src = Vec::with_capacity(self.num_edges());
+        let mut dst = Vec::with_capacity(self.num_edges());
+        for e in 0..self.num_edges() {
+            if seen.insert((self.src[e], self.dst[e])) {
+                src.push(self.src[e]);
+                dst.push(self.dst[e]);
+            }
+        }
+        self.src = src;
+        self.dst = dst;
+        self
+    }
+
+    /// In-degree of every node.
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_nodes];
+        for &d in &self.dst {
+            deg[d as usize] += 1;
+        }
+        deg
+    }
+
+    /// Out-degree of every node.
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_nodes];
+        for &s in &self.src {
+            deg[s as usize] += 1;
+        }
+        deg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Coo {
+        // The paper's Fig. 1 toy graph: 4 nodes, 5 edges.
+        // e0: 1->0, e1: 3->1, e2: 1->2, e3: 0->3, e4: 2->3
+        Coo::new(4, vec![1, 3, 1, 0, 2], vec![0, 1, 2, 3, 3])
+    }
+
+    #[test]
+    fn basic_counts() {
+        let g = toy();
+        assert_eq!(g.num_nodes, 4);
+        assert_eq!(g.num_edges(), 5);
+        assert!((g.avg_degree() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reverse_edges_double_non_loops() {
+        let g = toy().with_reverse_edges();
+        assert_eq!(g.num_edges(), 10);
+        // reverse of e0 (1->0) is 0->1
+        assert_eq!(g.src[5], 0);
+        assert_eq!(g.dst[5], 1);
+    }
+
+    #[test]
+    fn self_loops_added_once() {
+        let g = toy().with_self_loops();
+        assert_eq!(g.num_edges(), 9); // 5 + 4 loops
+        let again = g.clone().with_self_loops();
+        assert_eq!(again.num_edges(), 9);
+    }
+
+    #[test]
+    fn degrees() {
+        let g = toy();
+        assert_eq!(g.in_degrees(), vec![1, 1, 1, 2]);
+        assert_eq!(g.out_degrees(), vec![1, 2, 1, 1]);
+    }
+
+    #[test]
+    fn dedup_removes_duplicates() {
+        let g = Coo::new(3, vec![0, 0, 1], vec![1, 1, 2]).dedup();
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn reverse_then_loops_composition() {
+        let g = toy().with_reverse_edges().with_self_loops();
+        assert_eq!(g.num_edges(), 14);
+        let deg = g.in_degrees();
+        assert!(deg.iter().all(|&d| d >= 1), "every node reachable for SPMM");
+    }
+}

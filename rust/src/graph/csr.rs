@@ -1,0 +1,155 @@
+//! Destination-grouped adjacency (CSR over in-edges) with edge ids.
+
+use super::Coo;
+
+/// Compressed sparse row adjacency, grouped by **destination** node.
+///
+/// Row `v` lists the in-edges of `v`: for `k` in
+/// `indptr[v]..indptr[v+1]`, edge `edge_ids[k]` goes `srcs[k] -> v`.
+///
+/// This is the layout every aggregation in the paper's Fig. 1 walks:
+/// forward SPMM (step 5) sums over in-edges, edge softmax (step 4) is a
+/// segmented reduction over the same rows, and SDDMM (step 3) pairs each
+/// stored edge with its endpoints. The *edge id* indirection is what lets
+/// edge-feature matrices stay in original edge order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Csr {
+    /// Number of nodes (rows).
+    pub num_nodes: usize,
+    /// Number of edges (stored entries).
+    pub num_edges: usize,
+    /// Row offsets, length `num_nodes + 1`.
+    pub indptr: Vec<usize>,
+    /// Source node of each stored entry.
+    pub srcs: Vec<u32>,
+    /// Original edge id of each stored entry.
+    pub edge_ids: Vec<u32>,
+}
+
+impl Csr {
+    /// Build the in-edge CSR from an edge list (counting sort by dst).
+    pub fn from_coo(coo: &Coo) -> Self {
+        Self::group_by(coo.num_nodes, &coo.dst, &coo.src)
+    }
+
+    /// Build the *out-edge* CSR (the reversed graph `G^T` the backward SPMM
+    /// of paper Fig. 1b step 4/5 runs on): row `v` lists edges `v -> dst`.
+    pub fn from_coo_reversed(coo: &Coo) -> Self {
+        Self::group_by(coo.num_nodes, &coo.src, &coo.dst)
+    }
+
+    fn group_by(num_nodes: usize, group_key: &[u32], other_end: &[u32]) -> Self {
+        let m = group_key.len();
+        let mut indptr = vec![0usize; num_nodes + 1];
+        for &k in group_key {
+            indptr[k as usize + 1] += 1;
+        }
+        for v in 0..num_nodes {
+            indptr[v + 1] += indptr[v];
+        }
+        let mut cursor = indptr.clone();
+        let mut srcs = vec![0u32; m];
+        let mut edge_ids = vec![0u32; m];
+        for e in 0..m {
+            let row = group_key[e] as usize;
+            let slot = cursor[row];
+            srcs[slot] = other_end[e];
+            edge_ids[slot] = e as u32;
+            cursor[row] += 1;
+        }
+        Csr { num_nodes, num_edges: m, indptr, srcs, edge_ids }
+    }
+
+    /// The reversed CSR of this CSR, rebuilt through COO form.
+    pub fn reverse(&self) -> Csr {
+        // Reconstruct the original edge list (id -> (src, dst)) then regroup.
+        let mut src = vec![0u32; self.num_edges];
+        let mut dst = vec![0u32; self.num_edges];
+        for v in 0..self.num_nodes {
+            for k in self.indptr[v]..self.indptr[v + 1] {
+                let e = self.edge_ids[k] as usize;
+                src[e] = self.srcs[k];
+                dst[e] = v as u32;
+            }
+        }
+        Csr::from_coo_reversed(&Coo::new(self.num_nodes, src, dst))
+    }
+
+    /// Neighbour entries of row `v`: parallel `(srcs, edge_ids)` slices.
+    #[inline]
+    pub fn row(&self, v: usize) -> (&[u32], &[u32]) {
+        let (a, b) = (self.indptr[v], self.indptr[v + 1]);
+        (&self.srcs[a..b], &self.edge_ids[a..b])
+    }
+
+    /// Degree of row `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.indptr[v + 1] - self.indptr[v]
+    }
+
+    /// Maximum row degree (used to pad the Pallas SPMM layout).
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_nodes).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Coo {
+        // Paper Fig. 1: e0: 1->0, e1: 3->1, e2: 1->2, e3: 0->3, e4: 2->3
+        Coo::new(4, vec![1, 3, 1, 0, 2], vec![0, 1, 2, 3, 3])
+    }
+
+    #[test]
+    fn in_edge_grouping() {
+        let csr = Csr::from_coo(&toy());
+        assert_eq!(csr.indptr, vec![0, 1, 2, 3, 5]);
+        // v3 has in-edges e3 (from 0) and e4 (from 2)
+        let (srcs, eids) = csr.row(3);
+        assert_eq!(srcs, &[0, 2]);
+        assert_eq!(eids, &[3, 4]);
+    }
+
+    #[test]
+    fn out_edge_grouping() {
+        let rev = Csr::from_coo_reversed(&toy());
+        // v1 has out-edges e0 (to 0) and e2 (to 2)
+        let (dsts, eids) = rev.row(1);
+        assert_eq!(dsts, &[0, 2]);
+        assert_eq!(eids, &[0, 2]);
+    }
+
+    #[test]
+    fn reverse_of_reverse_is_identity() {
+        let csr = Csr::from_coo(&toy());
+        let back = csr.reverse().reverse();
+        assert_eq!(csr, back);
+    }
+
+    #[test]
+    fn edge_ids_cover_all_edges_once() {
+        let csr = Csr::from_coo(&toy());
+        let mut ids: Vec<u32> = csr.edge_ids.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn degrees_and_max() {
+        let csr = Csr::from_coo(&toy());
+        assert_eq!(csr.degree(0), 1);
+        assert_eq!(csr.degree(3), 2);
+        assert_eq!(csr.max_degree(), 2);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let csr = Csr::from_coo(&Coo::new(3, vec![], vec![]));
+        assert_eq!(csr.num_edges, 0);
+        assert_eq!(csr.max_degree(), 0);
+        assert_eq!(csr.indptr, vec![0, 0, 0, 0]);
+    }
+}

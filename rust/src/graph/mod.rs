@@ -1,0 +1,29 @@
+//! Graph substrate.
+//!
+//! Everything the primitives and models need from the graph side:
+//!
+//! - [`Coo`] — edge-list form, the canonical on-disk/generator format;
+//! - [`Csr`] — destination-grouped adjacency (in-edges per node) carrying
+//!   per-entry *edge ids*, the layout SPMM/SDDMM and edge-softmax iterate;
+//!   its [`Csr::reverse`] is the source-grouped (out-edge) adjacency the
+//!   backward pass runs on (paper Fig. 1b);
+//! - [`Incidence`] — the node×edge incidence structure behind the paper's
+//!   *incidence-matrix-based SPMM* (§3.3, Fig. 5);
+//! - [`generators`] — synthetic graph generators (power-law /
+//!   preferential-attachment, Erdős–Rényi, planted-partition labels) that
+//!   stand in for the paper's datasets;
+//! - [`datasets`] — the five evaluation graphs of Table 1 at reduced scale,
+//!   matched on average degree and degree shape;
+//! - [`partition`] — node partitioning + 1-hop neighbour sampling for the
+//!   multi-worker mini-batch simulation (paper §4.2 multi-GPU).
+
+mod coo;
+mod csr;
+pub mod datasets;
+pub mod generators;
+mod incidence;
+pub mod partition;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use incidence::Incidence;

@@ -1,0 +1,58 @@
+//! # Tango-RS
+//!
+//! A reproduction of **"Tango: rethinking quantization for graph neural
+//! network training on GPUs"** (Chen et al., SC '23) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! Tango is a quantized GNN *training* system: symmetric, tensor-granularity,
+//! dynamic INT8/INT4 quantization applied to the three primitives that
+//! dominate GNN training — GEMM, SPMM and SDDMM — together with lightweight
+//! accuracy rules (stochastic rounding, an `Error_X` bit-derivation metric,
+//! full-precision weight updates and a full-precision layer before Softmax)
+//! so that quantized training is *faster* than FP32 training at <1% accuracy
+//! loss.
+//!
+//! ## Layer map
+//!
+//! - **Layer 3 (this crate)** — the coordinator: graph substrate, quantized
+//!   primitives, GCN/GAT models with explicit backward passes, the
+//!   inter-primitive quantized-tensor cache and reuse detection, adaptive
+//!   kernel selection, a multi-worker data-parallel simulator, an analytical
+//!   GPU cost model, and the PJRT runtime that executes jax-lowered
+//!   artifacts.
+//! - **Layer 2 (`python/compile/model.py`)** — GCN/GAT forward/backward in
+//!   JAX, AOT-lowered to HLO text under `artifacts/`.
+//! - **Layer 1 (`python/compile/kernels/`)** — Pallas kernels (quantize,
+//!   quantized GEMM, SPMM, SDDMM) called by Layer 2.
+//!
+//! Python never runs at training time; the Rust binary is self-contained
+//! once `make artifacts` has produced the HLO text files.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use tango::config::TrainConfig;
+//! use tango::coordinator::Trainer;
+//!
+//! let cfg = TrainConfig::quickstart();
+//! let mut trainer = Trainer::from_config(&cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("final accuracy: {:.4}", report.final_eval);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod metrics;
+pub mod model;
+pub mod multigpu;
+pub mod perfmodel;
+pub mod primitives;
+pub mod quant;
+pub mod repro;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,191 @@
+//! `tango` — the Layer-3 launcher.
+//!
+//! ```text
+//! tango train  [--config cfg.toml] [--model gcn|gat] [--dataset NAME]
+//!              [--mode fp32|tango|test1|test2|exact] [--epochs N]
+//!              [--bits B] [--auto-bits] [--lr F] [--hidden N] [--seed S]
+//! tango repro  <table1|fig2|fig7|...|fig16|table2|all> [--quick]
+//!              [--epochs N] [--speed-epochs N]
+//! tango plan                # print the derived quantization-caching plan
+//! tango artifacts [--dir artifacts]   # list + smoke-run the AOT artifacts
+//! tango multigpu [--workers K] [--quantize-grads]
+//! ```
+
+use tango::config::{parse_mode, ModelKind, TrainConfig};
+use tango::coordinator::{detect_reuse, CompGraph, Trainer};
+use tango::metrics::fmt_time;
+use tango::multigpu::{run_data_parallel, Interconnect, MultiGpuConfig};
+use tango::repro::{self, ReproConfig};
+use tango::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "train" => cmd_train(&args),
+        "repro" => cmd_repro(&args),
+        "plan" => cmd_plan(),
+        "artifacts" => cmd_artifacts(&args),
+        "multigpu" => cmd_multigpu(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "tango — quantized GNN training (SC'23 reproduction)\n\n\
+         subcommands:\n\
+         \x20 train      train a GCN/GAT with Tango or baseline modes\n\
+         \x20 repro      regenerate a paper table/figure (or 'all')\n\
+         \x20 plan       print the quantization-caching plan for a GAT layer\n\
+         \x20 artifacts  list and smoke-run the AOT artifacts\n\
+         \x20 multigpu   run the data-parallel simulation\n"
+    );
+}
+
+fn train_config_from(args: &Args) -> tango::Result<TrainConfig> {
+    let mut cfg = if let Some(path) = args.flags.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        TrainConfig::from_toml(&text).map_err(|e| anyhow::anyhow!(e))?
+    } else {
+        TrainConfig::default()
+    };
+    if let Some(m) = args.flags.get("model") {
+        cfg.model = m.parse::<ModelKind>().map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(d) = args.flags.get("dataset") {
+        cfg.dataset = d.clone();
+    }
+    cfg.epochs = args.get_as("epochs", cfg.epochs);
+    cfg.lr = args.get_as("lr", cfg.lr);
+    cfg.hidden = args.get_as("hidden", cfg.hidden);
+    cfg.heads = args.get_as("heads", cfg.heads);
+    cfg.layers = args.get_as("layers", cfg.layers);
+    cfg.seed = args.get_as("seed", cfg.seed);
+    let bits: u8 = args.get_as("bits", cfg.mode.bits);
+    if let Some(m) = args.flags.get("mode") {
+        cfg.mode = parse_mode(m, bits).map_err(|e| anyhow::anyhow!(e))?;
+    } else {
+        cfg.mode.bits = bits;
+    }
+    if args.get_bool("auto-bits") {
+        cfg.auto_bits = true;
+    }
+    cfg.log_every = args.get_as("log-every", 10);
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> tango::Result<()> {
+    let cfg = train_config_from(args)?;
+    println!(
+        "training {:?} on {} — mode {} ({} bits), {} epochs",
+        cfg.model,
+        cfg.dataset,
+        tango::config::mode_name(&cfg.mode),
+        cfg.mode.bits,
+        cfg.epochs
+    );
+    let mut trainer = Trainer::from_config(&cfg)?;
+    let report = trainer.run()?;
+    println!(
+        "\nfinal eval {:.4} | {} epochs in {} ({}/epoch) | bits {}",
+        report.final_eval,
+        report.losses.len(),
+        fmt_time(report.wall_secs),
+        fmt_time(report.wall_secs / report.losses.len().max(1) as f64),
+        report.bits,
+    );
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> tango::Result<()> {
+    let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let cfg = ReproConfig {
+        epochs: args.get_as("epochs", 30),
+        speed_epochs: args.get_as("speed-epochs", 5),
+        seed: args.get_as("seed", 42),
+        quick: args.get_bool("quick"),
+    };
+    for table in repro::run(id, &cfg)? {
+        table.print();
+    }
+    Ok(())
+}
+
+fn cmd_plan() -> tango::Result<()> {
+    let (graph, _) = CompGraph::gat_layer_example();
+    let plan = detect_reuse(&graph);
+    println!("quantization-caching plan for one GAT layer (fwd+bwd):\n");
+    println!("multi-consumer tensors (quantize once, share):");
+    for t in &plan.multi_consumer {
+        println!("  - {}", graph.tensor_name(*t));
+    }
+    println!("forward-quantized tensors reused by backward:");
+    for t in &plan.forward_to_backward {
+        println!("  - {}", graph.tensor_name(*t));
+    }
+    println!(
+        "\nquantization passes: naive {} -> cached {} (saves {})",
+        plan.naive_quantizations,
+        plan.cached_quantizations,
+        plan.saved()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> tango::Result<()> {
+    let dir = args.get("dir", "artifacts");
+    let mut rt = tango::runtime::Runtime::open(dir)?;
+    println!("artifacts in {dir}:");
+    let names: Vec<String> = rt.names().iter().map(|s| s.to_string()).collect();
+    for name in &names {
+        let spec = rt.manifest.get(name).unwrap().clone();
+        println!("  {:<22} {} inputs, {} outputs — {}", spec.name, spec.inputs.len(), spec.num_outputs, spec.description);
+    }
+    // Smoke-run the quantize artifact (smallest).
+    let spec = rt.manifest.get("quantize8").unwrap().clone();
+    let shape = spec.inputs[0].shape.clone();
+    let x = tango::graph::generators::random_features(shape[0], shape[1], 7);
+    let out = rt.run("quantize8", &[tango::runtime::Value::F32(x)])?;
+    println!("\nsmoke-run quantize8: {} outputs OK", out.len());
+    Ok(())
+}
+
+fn cmd_multigpu(args: &Args) -> tango::Result<()> {
+    let train = train_config_from(args)?;
+    let data = if train.dataset == "tiny" {
+        tango::graph::datasets::tiny(train.seed)
+    } else {
+        tango::graph::datasets::load_by_name(&train.dataset, train.seed)
+    };
+    let cfg = MultiGpuConfig {
+        workers: args.get_as("workers", 4),
+        epochs: args.get_as("epochs", 5),
+        fanout: args.get_as("fanout", 8),
+        batch_size: args.get_as("batch-size", 256),
+        quantize_grads: args.get_bool("quantize-grads"),
+        overlap_quantization: true,
+        interconnect: Interconnect::pcie3(),
+        train,
+    };
+    let report = run_data_parallel(&cfg, &data)?;
+    for (i, e) in report.epochs.iter().enumerate() {
+        println!(
+            "epoch {i}: compute {} + comm {} + quant {} = {}  (loss {:.4})",
+            fmt_time(e.compute_s),
+            fmt_time(e.comm_s),
+            fmt_time(e.quant_s),
+            fmt_time(e.total()),
+            e.loss
+        );
+    }
+    println!("total modelled wall time: {}", fmt_time(report.total_time()));
+    Ok(())
+}

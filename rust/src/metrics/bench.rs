@@ -1,0 +1,148 @@
+//! Wall-clock micro-benchmark harness (the offline criterion stand-in).
+//!
+//! Warmup + batched timed iterations with mean/stddev/min reporting. Used by
+//! every `rust/benches/*.rs` target and the `repro` figure generators.
+
+use std::time::Instant;
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Warmup time before measurement.
+    pub warmup_secs: f64,
+    /// Minimum measurement time.
+    pub measure_secs: f64,
+    /// Minimum number of timed samples.
+    pub min_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Short but stable defaults; the benches sweep many configurations.
+        BenchConfig { warmup_secs: 0.1, measure_secs: 0.4, min_samples: 5 }
+    }
+}
+
+/// One benchmark's statistics (times in seconds).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Label.
+    pub name: String,
+    /// Mean per-iteration time.
+    pub mean: f64,
+    /// Sample standard deviation.
+    pub stddev: f64,
+    /// Fastest sample.
+    pub min: f64,
+    /// Number of timed samples.
+    pub samples: usize,
+}
+
+impl BenchResult {
+    /// Throughput helper: items per second at the mean time.
+    pub fn per_second(&self, items: u64) -> f64 {
+        items as f64 / self.mean
+    }
+
+    /// Human-readable line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:>10}  (min {:>12}, n={})",
+            self.name,
+            fmt_time(self.mean),
+            fmt_time(self.stddev),
+            fmt_time(self.min),
+            self.samples
+        )
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark `f` with the default config.
+pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+    bench_with_config(name, BenchConfig::default(), &mut f)
+}
+
+/// Benchmark `f` with an explicit config. The closure's return value is
+/// passed through `std::hint::black_box` so work is not optimized away.
+pub fn bench_with_config<T>(
+    name: &str,
+    cfg: BenchConfig,
+    f: &mut impl FnMut() -> T,
+) -> BenchResult {
+    // Warmup, also calibrating per-iteration cost.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_start.elapsed().as_secs_f64() < cfg.warmup_secs || warm_iters == 0 {
+        std::hint::black_box(f());
+        warm_iters += 1;
+    }
+    let approx_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+    // Batch so each sample is at least ~2ms (timer noise floor).
+    let batch = ((2e-3 / approx_iter.max(1e-9)).ceil() as u64).max(1);
+    let mut samples = Vec::new();
+    let measure_start = Instant::now();
+    while measure_start.elapsed().as_secs_f64() < cfg.measure_secs
+        || samples.len() < cfg.min_samples
+    {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            std::hint::black_box(f());
+        }
+        samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / (n - 1.0).max(1.0);
+    BenchResult {
+        name: name.to_string(),
+        mean,
+        stddev: var.sqrt(),
+        min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        samples: samples.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let cfg = BenchConfig { warmup_secs: 0.01, measure_secs: 0.05, min_samples: 3 };
+        let mut x = 0u64;
+        let r = bench_with_config("noop-ish", cfg, &mut || {
+            x = x.wrapping_add(1);
+            x
+        });
+        assert!(r.mean > 0.0);
+        assert!(r.min <= r.mean);
+        assert!(r.samples >= 3);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn per_second() {
+        let r = BenchResult { name: "x".into(), mean: 0.5, stddev: 0.0, min: 0.5, samples: 1 };
+        assert_eq!(r.per_second(10), 20.0);
+    }
+}

@@ -1,0 +1,63 @@
+//! Measurement infrastructure: wall-clock benchmarking (the offline
+//! criterion stand-in), counters, and table rendering for the `repro`
+//! figure/table reports.
+
+mod bench;
+mod table;
+
+pub use bench::{bench, bench_with_config, fmt_time, BenchConfig, BenchResult};
+pub use table::Table;
+
+use std::time::Instant;
+
+/// Time a closure once, returning (result, seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Simple byte-traffic accounting used to report achieved memory throughput
+/// the way the paper's Table 2 does (bytes moved / kernel time).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Traffic {
+    /// Bytes read by the kernel (modelled, not hardware-counted).
+    pub read_bytes: u64,
+    /// Bytes written by the kernel.
+    pub write_bytes: u64,
+}
+
+impl Traffic {
+    /// Total bytes moved.
+    pub fn total(&self) -> u64 {
+        self.read_bytes + self.write_bytes
+    }
+
+    /// Achieved throughput in GB/s given a runtime in seconds.
+    pub fn gbps(&self, seconds: f64) -> f64 {
+        if seconds <= 0.0 {
+            return 0.0;
+        }
+        self.total() as f64 / seconds / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, s) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn traffic_throughput() {
+        let t = Traffic { read_bytes: 3_000_000_000, write_bytes: 1_000_000_000 };
+        assert_eq!(t.total(), 4_000_000_000);
+        assert!((t.gbps(2.0) - 2.0).abs() < 1e-9);
+        assert_eq!(t.gbps(0.0), 0.0);
+    }
+}

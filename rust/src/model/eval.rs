@@ -1,0 +1,72 @@
+//! Evaluation metrics: node-classification accuracy and link-prediction AUC.
+
+use crate::tensor::Dense;
+
+/// Classification accuracy of argmax(logits) over `nodes`.
+pub fn accuracy(logits: &Dense<f32>, labels: &[u32], nodes: &[u32]) -> f32 {
+    if nodes.is_empty() {
+        return 0.0;
+    }
+    let c = logits.cols();
+    let mut hits = 0usize;
+    for &v in nodes {
+        let row = logits.row(v as usize);
+        let mut best = 0usize;
+        for j in 1..c {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best == labels[v as usize] as usize {
+            hits += 1;
+        }
+    }
+    hits as f32 / nodes.len() as f32
+}
+
+/// Area under the ROC curve for positive/negative score samples
+/// (rank-based; ties get half credit).
+pub fn auc(pos: &[f32], neg: &[f32]) -> f32 {
+    if pos.is_empty() || neg.is_empty() {
+        return 0.5;
+    }
+    let mut wins = 0.0f64;
+    for &p in pos {
+        for &n in neg {
+            if p > n {
+                wins += 1.0;
+            } else if p == n {
+                wins += 0.5;
+            }
+        }
+    }
+    (wins / (pos.len() as f64 * neg.len() as f64)) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_argmax_hits() {
+        let logits = Dense::from_vec(&[3, 2], vec![2.0, 1.0, 0.0, 1.0, 5.0, -1.0]);
+        let labels = vec![0u32, 1, 1];
+        assert_eq!(accuracy(&logits, &labels, &[0, 1, 2]), 2.0 / 3.0);
+        assert_eq!(accuracy(&logits, &labels, &[0, 1]), 1.0);
+        assert_eq!(accuracy(&logits, &labels, &[]), 0.0);
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        assert_eq!(auc(&[2.0, 3.0], &[0.0, 1.0]), 1.0);
+        assert_eq!(auc(&[0.0], &[1.0]), 0.0);
+        assert_eq!(auc(&[1.0], &[1.0]), 0.5);
+        assert_eq!(auc(&[], &[1.0]), 0.5);
+    }
+
+    #[test]
+    fn auc_mixed() {
+        // pos {1, 3}, neg {0, 2}: pairs (1>0, 1<2, 3>0, 3>2) = 3/4 wins.
+        assert_eq!(auc(&[1.0, 3.0], &[0.0, 2.0]), 0.75);
+    }
+}

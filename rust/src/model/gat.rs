@@ -1,0 +1,572 @@
+//! GAT (Veličković et al.) with explicit backward following the paper's
+//! Fig. 1 walkthrough step by step — the model that exercises **all three**
+//! primitives (GEMM + SPMM + SDDMM).
+//!
+//! Forward (Fig. 1a):
+//! 1. `H' = H·W`                       — GEMM (quantized);
+//! 2. `S = (H'·a_src)ᵀ, D = (H'·a_dst)ᵀ` — per-head consolidation;
+//! 3. `E = G ⊙ (S ⊕ Dᵀ)` + LeakyReLU  — SDDMM-add (quantized inputs,
+//!    on-the-fly dequantization) — logits stay FP32 for the softmax;
+//! 4. `α = edge_softmax(E)`            — FP32 (§3.2 rule);
+//! 5. `H^(l) = (G ⊙ α)·H'`            — SPMM (quantized).
+//!
+//! Backward (Fig. 1b):
+//! 4'. `∂H' = (Gᵀ ⊙ α)·∂H^(l)`        — SPMM on the reversed graph;
+//! 5'. `∂α = G ⊙ (∂H^(l)·H'ᵀ)`        — SDDMM-dot, computed *directly on
+//!     quantized values* with the fused `s0·s1` scale;
+//! 3'. softmax + LeakyReLU backward    — FP32;
+//! 4''. `∂S = (Gᵀ ⊙ ∂E)·1, ∂D = (G ⊙ ∂E)·1` — **incidence-matrix SPMM**;
+//! 1'. `∂W = Hᵀ·∂H', ∂H = ∂H'·Wᵀ`     — GEMMs from cached quantized tensors.
+//!
+//! The inter-primitive cache rule is applied where the paper points it out:
+//! `∂H^(l)` is quantized **once** and consumed by both the backward SPMM
+//! (4') and the SDDMM-dot (5'); `H'_q` from the forward pass is reused by
+//! the SDDMM-dot; `H_q`/`W_q` from the forward GEMM feed the backward GEMMs.
+
+use super::TrainMode;
+use crate::graph::{Coo, Csr, Incidence};
+use crate::primitives::{
+    edge_softmax, edge_softmax_backward, gemm_f32, incidence_spmm, leaky_relu,
+    leaky_relu_backward, qgemm, qgemm_prequantized, qsddmm_add, qsddmm_dot, qspmm_edge_weighted,
+    sddmm_add, sddmm_dot, spmm_edge_weighted,
+};
+use crate::quant::rng::Xoshiro256pp;
+use crate::quant::{dequantize, quantize, QTensor, Rounding};
+use crate::tensor::Dense;
+
+/// LeakyReLU slope used on attention logits (DGL default).
+const SLOPE: f32 = 0.2;
+
+/// EXACT-style "compress then decompress" pass (pure overhead at compute
+/// time — models the Fig. 8 EXACT baseline).
+fn exact_roundtrip(bits: u8, x: &Dense<f32>) -> Dense<f32> {
+    dequantize(&quantize(x, bits, Rounding::Nearest))
+}
+
+/// GAT hyperparameters (paper §4.1: hidden 128, 2 layers, 4 heads).
+#[derive(Debug, Clone, Copy)]
+pub struct GatConfig {
+    /// Input feature dimension.
+    pub in_dim: usize,
+    /// Hidden width (total across heads).
+    pub hidden: usize,
+    /// Output dimension (classes / embedding width). Final layer is 1-head.
+    pub out_dim: usize,
+    /// Attention heads in the hidden layers.
+    pub heads: usize,
+    /// Number of layers (≥1).
+    pub layers: usize,
+    /// Execution mode.
+    pub mode: TrainMode,
+}
+
+struct GatLayer {
+    /// `[in, heads*d]` projection.
+    w: Dense<f32>,
+    /// `[heads, d]` source attention vector.
+    a_src: Dense<f32>,
+    /// `[heads, d]` destination attention vector.
+    a_dst: Dense<f32>,
+    grad_w: Dense<f32>,
+    grad_a_src: Dense<f32>,
+    grad_a_dst: Dense<f32>,
+    heads: usize,
+}
+
+struct LayerCache {
+    x: Dense<f32>,
+    h_prime: Dense<f32>,
+    logits_pre: Dense<f32>,
+    alpha: Dense<f32>,
+    agg: Dense<f32>,
+    qx: Option<QTensor>,
+    qw: Option<QTensor>,
+    /// Quantized `H'` from the forward pass, reused by backward SDDMM-dot
+    /// and by the ∂a projections.
+    qh_prime: Option<QTensor>,
+}
+
+/// A GAT model bound to one graph.
+pub struct GatModel {
+    /// Config used to build the model.
+    pub cfg: GatConfig,
+    layers: Vec<GatLayer>,
+    coo: Coo,
+    csr: Csr,
+    csr_rev: Csr,
+    inc_in: Incidence,
+    inc_out: Incidence,
+    /// Step counter (drives stochastic-rounding seeds).
+    pub step_count: u64,
+}
+
+impl GatModel {
+    /// Build the model for a graph (expects self-loops already added).
+    pub fn new(cfg: GatConfig, graph: &Coo, seed: u64) -> Self {
+        assert!(cfg.layers >= 1);
+        assert_eq!(cfg.hidden % cfg.heads, 0, "hidden must divide by heads");
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut layers = Vec::new();
+        for l in 0..cfg.layers {
+            let last = l + 1 == cfg.layers;
+            let fan_in = if l == 0 { cfg.in_dim } else { cfg.hidden };
+            let (heads, d) = if last { (1, cfg.out_dim) } else { (cfg.heads, cfg.hidden / cfg.heads) };
+            let fan_out = heads * d;
+            let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
+            let rand_mat = |rng: &mut Xoshiro256pp, r: usize, c: usize, lim: f32| {
+                Dense::from_vec(&[r, c], (0..r * c).map(|_| (rng.next_f32() * 2.0 - 1.0) * lim).collect())
+            };
+            layers.push(GatLayer {
+                w: rand_mat(&mut rng, fan_in, fan_out, limit),
+                a_src: rand_mat(&mut rng, heads, d, 0.3),
+                a_dst: rand_mat(&mut rng, heads, d, 0.3),
+                grad_w: Dense::zeros(&[fan_in, fan_out]),
+                grad_a_src: Dense::zeros(&[heads, d]),
+                grad_a_dst: Dense::zeros(&[heads, d]),
+                heads,
+            });
+        }
+        GatModel {
+            cfg,
+            layers,
+            coo: graph.clone(),
+            csr: Csr::from_coo(graph),
+            csr_rev: Csr::from_coo_reversed(graph),
+            inc_in: Incidence::in_edges(graph),
+            inc_out: Incidence::out_edges(graph),
+            step_count: 0,
+        }
+    }
+
+    fn layer_quantized(&self, l: usize) -> bool {
+        self.cfg.mode.quantize && (l + 1 < self.cfg.layers || !self.cfg.mode.fp32_pre_softmax)
+    }
+
+
+    fn forward_cached(&self, features: &Dense<f32>) -> (Dense<f32>, Vec<LayerCache>) {
+        let mode = self.cfg.mode;
+        let mut caches = Vec::with_capacity(self.layers.len());
+        let mut x = features.clone();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let heads = layer.heads;
+            let quant = self.layer_quantized(l);
+            // Step 1: H' = H·W (GEMM).
+            let (h_prime, qx, qw) = if quant {
+                let r = qgemm(&x, &layer.w, mode.bits, mode.rounding(self.step_count, l as u64));
+                (r.out, Some(r.qa), Some(r.qb))
+            } else if mode.exact_style {
+                (gemm_f32(&exact_roundtrip(self.cfg.mode.bits, &x), &exact_roundtrip(self.cfg.mode.bits, &layer.w)), None, None)
+            } else {
+                (gemm_f32(&x, &layer.w), None, None)
+            };
+            // Step 2: per-head consolidation S, D (small GEMMs; FP32 — their
+            // output feeds the softmax path, §3.2).
+            let s = head_project(&h_prime, &layer.a_src, heads);
+            let d = head_project(&h_prime, &layer.a_dst, heads);
+            // Step 3: SDDMM-add + LeakyReLU. Quantized mode exercises the
+            // on-the-fly dequantization kernel (scales of S and D differ).
+            let logits_pre = if quant {
+                let qs = quantize(&s, mode.bits, mode.rounding(self.step_count, 400 + l as u64));
+                let qd = quantize(&d, mode.bits, mode.rounding(self.step_count, 500 + l as u64));
+                qsddmm_add(&self.coo, &qs, &qd)
+            } else if mode.exact_style {
+                sddmm_add(&self.coo, &exact_roundtrip(self.cfg.mode.bits, &s), &exact_roundtrip(self.cfg.mode.bits, &d))
+            } else {
+                sddmm_add(&self.coo, &s, &d)
+            };
+            let logits = leaky_relu(&logits_pre, SLOPE);
+            // Step 4: edge softmax — always FP32 (§3.2).
+            let alpha = edge_softmax(&self.csr, &logits);
+            // Step 5: SPMM aggregation.
+            let (agg, qh_prime) = if quant {
+                let qa = quantize(&alpha, mode.bits, mode.rounding(self.step_count, 600 + l as u64));
+                let qh = quantize(&h_prime, mode.bits, mode.rounding(self.step_count, 700 + l as u64));
+                (qspmm_edge_weighted(&self.csr, &qa, &qh, heads), Some(qh))
+            } else if mode.exact_style {
+                (
+                    spmm_edge_weighted(&self.csr, &exact_roundtrip(self.cfg.mode.bits, &alpha), &exact_roundtrip(self.cfg.mode.bits, &h_prime), heads),
+                    None,
+                )
+            } else {
+                (spmm_edge_weighted(&self.csr, &alpha, &h_prime, heads), None)
+            };
+            let out = if l + 1 < self.layers.len() { elu(&agg) } else { agg.clone() };
+            caches.push(LayerCache { x: x.clone(), h_prime, logits_pre, alpha, agg, qx, qw, qh_prime });
+            x = out;
+        }
+        (x, caches)
+    }
+
+    /// Inference-only forward.
+    pub fn forward(&self, features: &Dense<f32>) -> Dense<f32> {
+        self.forward_cached(features).0
+    }
+
+    /// One training step (see [`super::GcnModel::train_step`]).
+    pub fn train_step(
+        &mut self,
+        features: &Dense<f32>,
+        opt: &mut super::Sgd,
+        loss_grad: impl FnOnce(&Dense<f32>) -> (f32, Dense<f32>),
+    ) -> (f32, Dense<f32>) {
+        let (logits, caches) = self.forward_cached(features);
+        let (loss, dlogits) = loss_grad(&logits);
+        self.backward(&caches, dlogits);
+        let mut p = 0;
+        for layer in self.layers.iter_mut() {
+            opt.step(p, &mut layer.w, &layer.grad_w);
+            opt.step(p + 1, &mut layer.a_src, &layer.grad_a_src);
+            opt.step(p + 2, &mut layer.a_dst, &layer.grad_a_dst);
+            p += 3;
+        }
+        self.step_count += 1;
+        (loss, logits)
+    }
+
+    fn backward(&mut self, caches: &[LayerCache], mut grad: Dense<f32>) {
+        let mode = self.cfg.mode;
+        for l in (0..self.layers.len()).rev() {
+            let cache = &caches[l];
+            let heads = self.layers[l].heads;
+            let quant = self.layer_quantized(l);
+            if l + 1 < self.layers.len() {
+                grad = elu_backward(&cache.agg, &grad);
+            }
+            // Quantize ∂H^(l) ONCE for both consumers (backward SPMM +
+            // SDDMM-dot) — the inter-primitive cache (§3.3).
+            let q_grad = if quant {
+                Some(quantize(&grad, mode.bits, mode.rounding(self.step_count, 800 + l as u64)))
+            } else {
+                None
+            };
+            // Step 4' : ∂H' = (Gᵀ ⊙ α)·∂H^(l).
+            let mut dh_prime = if let Some(qg) = &q_grad {
+                let qa = quantize(&cache.alpha, mode.bits, mode.rounding(self.step_count, 900 + l as u64));
+                qspmm_edge_weighted(&self.csr_rev, &qa, qg, heads)
+            } else if mode.exact_style {
+                spmm_edge_weighted(&self.csr_rev, &exact_roundtrip(self.cfg.mode.bits, &cache.alpha), &exact_roundtrip(self.cfg.mode.bits, &grad), heads)
+            } else {
+                spmm_edge_weighted(&self.csr_rev, &cache.alpha, &grad, heads)
+            };
+            // Step 5' : ∂α = G ⊙ (∂H^(l)·H'ᵀ) — SDDMM-dot directly on
+            // quantized values (mul commutes with the scales).
+            let dalpha = if let Some(qg) = &q_grad {
+                let qh = cache.qh_prime.as_ref().expect("forward cached qh_prime");
+                qsddmm_dot(&self.coo, qg, qh, heads)
+            } else if mode.exact_style {
+                sddmm_dot(&self.coo, &exact_roundtrip(self.cfg.mode.bits, &grad), &exact_roundtrip(self.cfg.mode.bits, &cache.h_prime), heads)
+            } else {
+                sddmm_dot(&self.coo, &grad, &cache.h_prime, heads)
+            };
+            // Step 3' : softmax + LeakyReLU backward (FP32, §3.2).
+            let dlogits = edge_softmax_backward(&self.csr, &cache.alpha, &dalpha);
+            let de = leaky_relu_backward(&cache.logits_pre, &dlogits, SLOPE);
+            // Step 4'': ∂S = (Gᵀ ⊙ ∂E)·1 and ∂D = (G ⊙ ∂E)·1 — the
+            // incidence-matrix SPMM (Fig. 5).
+            let ds = incidence_spmm(&self.inc_out, &de);
+            let dd = incidence_spmm(&self.inc_in, &de);
+            // ∂H' contributions from S and D; ∂a_src/∂a_dst projections.
+            let layer = &mut self.layers[l];
+            add_outer(&mut dh_prime, &ds, &layer.a_src, heads);
+            add_outer(&mut dh_prime, &dd, &layer.a_dst, heads);
+            layer.grad_a_src = project_grad(&cache.h_prime, &ds, heads);
+            layer.grad_a_dst = project_grad(&cache.h_prime, &dd, heads);
+            // Step 1' : weight gradients from cached quantized tensors.
+            if quant {
+                let q_dh = quantize(&dh_prime, mode.bits, mode.rounding(self.step_count, 1000 + l as u64));
+                let qx = cache.qx.as_ref().expect("forward cached qx");
+                let qw = cache.qw.as_ref().expect("forward cached qw");
+                let (gw, _) = qgemm_prequantized(&qx.transpose2d(), &q_dh, mode.bits);
+                layer.grad_w = gw;
+                if l > 0 {
+                    let (gx, _) = qgemm_prequantized(&q_dh, &qw.transpose2d(), mode.bits);
+                    grad = gx;
+                }
+            } else if mode.exact_style {
+                let x2 = exact_roundtrip(mode.bits, &cache.x);
+                let d2 = exact_roundtrip(mode.bits, &dh_prime);
+                layer.grad_w = gemm_f32(&x2.transpose(), &d2);
+                if l > 0 {
+                    let w2 = exact_roundtrip(mode.bits, &layer.w);
+                    grad = gemm_f32(&d2, &w2.transpose());
+                }
+            } else {
+                layer.grad_w = gemm_f32(&cache.x.transpose(), &dh_prime);
+                if l > 0 {
+                    grad = gemm_f32(&dh_prime, &layer.w.transpose());
+                }
+            }
+        }
+    }
+
+    /// First-layer output for the bit-derivation rule (Fig. 2).
+    pub fn first_layer_output(&self, features: &Dense<f32>) -> Dense<f32> {
+        let saved = self.cfg.mode;
+        // Evaluate in FP32 regardless of mode (the rule measures the tensor,
+        // not the kernels).
+        let mut probe = GatModel {
+            cfg: GatConfig { mode: TrainMode::fp32(), ..self.cfg },
+            layers: self
+                .layers
+                .iter()
+                .map(|l| GatLayer {
+                    w: l.w.clone(),
+                    a_src: l.a_src.clone(),
+                    a_dst: l.a_dst.clone(),
+                    grad_w: l.grad_w.clone(),
+                    grad_a_src: l.grad_a_src.clone(),
+                    grad_a_dst: l.grad_a_dst.clone(),
+                    heads: l.heads,
+                })
+                .collect(),
+            coo: self.coo.clone(),
+            csr: self.csr.clone(),
+            csr_rev: self.csr_rev.clone(),
+            inc_in: self.inc_in.clone(),
+            inc_out: self.inc_out.clone(),
+            step_count: 0,
+        };
+        probe.cfg.mode = TrainMode::fp32();
+        let _ = saved;
+        let (_, caches) = probe.forward_cached(features);
+        caches[0].agg.clone()
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w.len() + l.a_src.len() + l.a_dst.len()).sum()
+    }
+
+    /// Flatten all parameters (layer order: W, a_src, a_dst) — used by the
+    /// multi-worker all-reduce.
+    pub fn params_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_params());
+        for l in &self.layers {
+            out.extend_from_slice(l.w.data());
+            out.extend_from_slice(l.a_src.data());
+            out.extend_from_slice(l.a_dst.data());
+        }
+        out
+    }
+
+    /// Load parameters from a flat buffer (inverse of [`Self::params_flat`]).
+    pub fn set_params_flat(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.num_params());
+        let mut off = 0;
+        for l in &mut self.layers {
+            for t in [&mut l.w, &mut l.a_src, &mut l.a_dst] {
+                let n = t.len();
+                t.data_mut().copy_from_slice(&flat[off..off + n]);
+                off += n;
+            }
+        }
+    }
+}
+
+/// `S[v,h] = Σ_d H'[v,(h,d)] · a[h,d]` (Fig. 1a step 2).
+fn head_project(h: &Dense<f32>, a: &Dense<f32>, heads: usize) -> Dense<f32> {
+    let n = h.rows();
+    let d = h.cols() / heads;
+    let mut out = Dense::zeros(&[n, heads]);
+    for v in 0..n {
+        let hrow = h.row(v);
+        let orow = out.row_mut(v);
+        for hh in 0..heads {
+            let arow = a.row(hh);
+            let mut acc = 0.0f32;
+            for dd in 0..d {
+                acc += hrow[hh * d + dd] * arow[dd];
+            }
+            orow[hh] = acc;
+        }
+    }
+    out
+}
+
+/// `∂a[h,d] = Σ_v ∂S[v,h] · H'[v,(h,d)]`.
+fn project_grad(h: &Dense<f32>, ds: &Dense<f32>, heads: usize) -> Dense<f32> {
+    let n = h.rows();
+    let d = h.cols() / heads;
+    let mut out = Dense::zeros(&[heads, d]);
+    for v in 0..n {
+        let hrow = h.row(v);
+        let srow = ds.row(v);
+        for hh in 0..heads {
+            let g = srow[hh];
+            if g == 0.0 {
+                continue;
+            }
+            let orow = out.row_mut(hh);
+            for dd in 0..d {
+                orow[dd] += g * hrow[hh * d + dd];
+            }
+        }
+    }
+    out
+}
+
+/// `∂H'[v,(h,d)] += ∂S[v,h] · a[h,d]`.
+fn add_outer(dh: &mut Dense<f32>, ds: &Dense<f32>, a: &Dense<f32>, heads: usize) {
+    let n = dh.rows();
+    let d = dh.cols() / heads;
+    for v in 0..n {
+        let srow = ds.row(v);
+        let dhrow = dh.row_mut(v);
+        for hh in 0..heads {
+            let g = srow[hh];
+            if g == 0.0 {
+                continue;
+            }
+            let arow = a.row(hh);
+            for dd in 0..d {
+                dhrow[hh * d + dd] += g * arow[dd];
+            }
+        }
+    }
+}
+
+fn elu(x: &Dense<f32>) -> Dense<f32> {
+    x.map(|v| if v >= 0.0 { v } else { v.exp() - 1.0 })
+}
+
+fn elu_backward(pre: &Dense<f32>, grad: &Dense<f32>) -> Dense<f32> {
+    let mut out = grad.clone();
+    for (g, &z) in out.data_mut().iter_mut().zip(pre.data().iter()) {
+        if z < 0.0 {
+            *g *= z.exp();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::model::{softmax_cross_entropy, Sgd};
+
+    fn tiny_model(mode: TrainMode) -> (GatModel, datasets::Dataset) {
+        let d = datasets::tiny(9);
+        let cfg = GatConfig {
+            in_dim: d.features.cols(),
+            hidden: 16,
+            out_dim: d.num_classes,
+            heads: 4,
+            layers: 2,
+            mode,
+        };
+        (GatModel::new(cfg, &d.graph, 11), d)
+    }
+
+    fn train_losses(mode: TrainMode, steps: usize) -> Vec<f32> {
+        let (mut m, d) = tiny_model(mode);
+        let mut opt = Sgd::new(0.05);
+        let mut losses = Vec::new();
+        for _ in 0..steps {
+            let (loss, _) = m.train_step(&d.features, &mut opt, |logits| {
+                softmax_cross_entropy(logits, &d.labels, &d.train_nodes)
+            });
+            losses.push(loss);
+        }
+        losses
+    }
+
+    #[test]
+    fn fp32_training_reduces_loss() {
+        let losses = train_losses(TrainMode::fp32(), 30);
+        assert!(losses[29] < losses[0] * 0.8, "{:?}", &losses[..5]);
+    }
+
+    #[test]
+    fn quantized_training_reduces_loss() {
+        let losses = train_losses(TrainMode::tango(8), 30);
+        assert!(losses[29] < losses[0] * 0.85, "{losses:?}");
+    }
+
+    #[test]
+    fn gradient_check_fp32_tiny() {
+        let g = crate::graph::generators::erdos_renyi(6, 14, 4).with_self_loops();
+        let cfg = GatConfig { in_dim: 3, hidden: 4, out_dim: 2, heads: 2, layers: 2, mode: TrainMode::fp32() };
+        let mut m = GatModel::new(cfg, &g, 1);
+        let feats = crate::graph::generators::random_features(6, 3, 2);
+        let labels = vec![0u32, 1, 0, 1, 0, 1];
+        let nodes: Vec<u32> = (0..6).collect();
+        let loss_of = |m: &GatModel| -> f32 {
+            softmax_cross_entropy(&m.forward(&feats), &labels, &nodes).0
+        };
+        let mut opt = Sgd::new(0.0);
+        m.train_step(&feats, &mut opt, |lg| softmax_cross_entropy(lg, &labels, &nodes));
+        let eps = 1e-2f32;
+        // W of layer 0 and 1
+        for l in 0..2 {
+            for &idx in &[0usize, 5] {
+                let orig = m.layers[l].w.data()[idx];
+                m.layers[l].w.data_mut()[idx] = orig + eps;
+                let fp = loss_of(&m);
+                m.layers[l].w.data_mut()[idx] = orig - eps;
+                let fm = loss_of(&m);
+                m.layers[l].w.data_mut()[idx] = orig;
+                let fd = (fp - fm) / (2.0 * eps);
+                let an = m.layers[l].grad_w.data()[idx];
+                assert!((fd - an).abs() < 3e-2, "W layer {l} idx {idx}: fd={fd} an={an}");
+            }
+        }
+        // attention vectors of layer 0
+        for &idx in &[0usize, 3] {
+            let orig = m.layers[0].a_src.data()[idx];
+            m.layers[0].a_src.data_mut()[idx] = orig + eps;
+            let fp = loss_of(&m);
+            m.layers[0].a_src.data_mut()[idx] = orig - eps;
+            let fm = loss_of(&m);
+            m.layers[0].a_src.data_mut()[idx] = orig;
+            let fd = (fp - fm) / (2.0 * eps);
+            let an = m.layers[0].grad_a_src.data()[idx];
+            assert!((fd - an).abs() < 3e-2, "a_src idx {idx}: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn quantized_final_accuracy_close_to_fp32() {
+        let run = |mode| {
+            let (mut m, d) = tiny_model(mode);
+            let mut opt = Sgd::new(0.05);
+            for _ in 0..60 {
+                m.train_step(&d.features, &mut opt, |logits| {
+                    softmax_cross_entropy(logits, &d.labels, &d.train_nodes)
+                });
+            }
+            crate::model::accuracy(&m.forward(&d.features), &d.labels, &d.eval_nodes)
+        };
+        let fp = run(TrainMode::fp32());
+        let tg = run(TrainMode::tango(8));
+        assert!(tg >= fp - 0.12, "tango {tg} vs fp32 {fp}");
+    }
+
+    #[test]
+    fn head_project_matches_manual() {
+        // 1 node, 2 heads, d=2: S[0,h] = dot(h'[h], a[h]).
+        let h = Dense::from_vec(&[1, 4], vec![0.59, 0.73, 0.51, -0.65]);
+        let a = Dense::from_vec(&[2, 2], vec![0.91, 0.90, 0.42, 0.62]);
+        let s = head_project(&h, &a, 2);
+        // Paper step 2: [0.59,0.73]·[0.91,0.90] = 1.19..1.20
+        assert!((s.at(0, 0) - 1.194).abs() < 1e-3);
+        assert!((s.at(0, 1) - (0.51 * 0.42 + -0.65 * 0.62)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn elu_roundtrip() {
+        let x = Dense::from_vec(&[3], vec![-1.0f32, 0.0, 2.0]);
+        let y = elu(&x);
+        assert!((y.data()[0] - ((-1.0f32).exp() - 1.0)).abs() < 1e-6);
+        assert_eq!(y.data()[2], 2.0);
+    }
+
+    #[test]
+    fn num_params_counts_attention_vectors() {
+        let (m, d) = tiny_model(TrainMode::fp32());
+        let in_dim = d.features.cols();
+        let expected = in_dim * 16 + 2 * 16            // layer 0: W + a vecs (4 heads × 4)
+            + 16 * d.num_classes + 2 * d.num_classes; // layer 1 (1 head)
+        assert_eq!(m.num_params(), expected);
+    }
+}

@@ -1,0 +1,411 @@
+//! GCN (Kipf & Welling) with explicit backward, in FP32 / Tango-quantized /
+//! EXACT-style execution.
+//!
+//! Per layer: `Z = Â · (X · W)`, `Â` the symmetrically normalised adjacency
+//! (encoded as one weight per edge), ReLU between layers. Per the paper
+//! (§2.2) GCN exercises the GEMM and SPMM primitives.
+//!
+//! Quantized execution applies the paper's machinery:
+//! - GEMM runs as [`qgemm`] with fused output scale; the quantized inputs
+//!   (`X_q`, `W_q`) are cached for the backward GEMMs (Fig. 10 reuse);
+//! - SPMM runs as [`qspmm_edge_weighted`] on INT8 payloads; the static edge
+//!   norms are quantized **once** at model build (dynamic quantization only
+//!   re-derives scales for tensors that change per iteration);
+//! - the backward gradient `∂(XW)` is quantized **once** and reused by both
+//!   backward GEMMs — the inter-primitive caching rule (§3.3);
+//! - the final layer stays FP32 while `fp32_pre_softmax` is set (§3.2).
+
+use super::TrainMode;
+use crate::graph::{Coo, Csr};
+use crate::primitives::{gemm_f32, qgemm, qgemm_prequantized, qspmm_edge_weighted, spmm_csr_values};
+use crate::quant::{dequantize, quantize, QTensor, Rounding};
+use crate::quant::rng::Xoshiro256pp;
+use crate::tensor::Dense;
+
+/// GCN hyperparameters (paper §4.1: hidden 128, two layers).
+#[derive(Debug, Clone, Copy)]
+pub struct GcnConfig {
+    /// Input feature dimension.
+    pub in_dim: usize,
+    /// Hidden width.
+    pub hidden: usize,
+    /// Output dimension (classes for NC, embedding width for LP).
+    pub out_dim: usize,
+    /// Number of layers (≥1).
+    pub layers: usize,
+    /// Execution mode.
+    pub mode: TrainMode,
+}
+
+struct GcnLayer {
+    w: Dense<f32>,
+    grad_w: Dense<f32>,
+}
+
+/// Per-layer forward cache for the backward pass.
+struct LayerCache {
+    x: Dense<f32>,
+    z: Dense<f32>,
+    /// Quantized `X` kept from the forward GEMM (Fig. 10 reuse).
+    qx: Option<QTensor>,
+    /// Quantized `W` kept from the forward GEMM.
+    qw: Option<QTensor>,
+}
+
+/// A GCN model bound to one graph.
+pub struct GcnModel {
+    /// Config used to build the model.
+    pub cfg: GcnConfig,
+    layers: Vec<GcnLayer>,
+    csr: Csr,
+    csr_rev: Csr,
+    /// Symmetric normalisation weight per edge.
+    norm: Vec<f32>,
+    /// Quantized edge norms (static — quantized once at build).
+    qnorm: QTensor,
+    /// Step counter (drives stochastic-rounding seeds).
+    pub step_count: u64,
+}
+
+impl GcnModel {
+    /// Build the model for a graph (expects self-loops already added).
+    pub fn new(cfg: GcnConfig, graph: &Coo, seed: u64) -> Self {
+        assert!(cfg.layers >= 1);
+        let csr = Csr::from_coo(graph);
+        let csr_rev = Csr::from_coo_reversed(graph);
+        // Symmetric normalisation: w(u→v) = 1/sqrt(deg(u) · deg(v)).
+        let deg = graph.in_degrees();
+        let mut norm = vec![0.0f32; graph.num_edges()];
+        for e in 0..graph.num_edges() {
+            let du = deg[graph.src[e] as usize].max(1) as f32;
+            let dv = deg[graph.dst[e] as usize].max(1) as f32;
+            norm[e] = 1.0 / (du * dv).sqrt();
+        }
+        let qnorm = quantize(
+            &Dense::from_vec(&[norm.len(), 1], norm.clone()),
+            cfg.mode.bits,
+            Rounding::Nearest,
+        );
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut layers = Vec::new();
+        for l in 0..cfg.layers {
+            let (fan_in, fan_out) = (Self::dim_at(&cfg, l), Self::dim_at(&cfg, l + 1));
+            // Glorot-uniform init.
+            let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
+            let data = (0..fan_in * fan_out).map(|_| (rng.next_f32() * 2.0 - 1.0) * limit).collect();
+            layers.push(GcnLayer {
+                w: Dense::from_vec(&[fan_in, fan_out], data),
+                grad_w: Dense::zeros(&[fan_in, fan_out]),
+            });
+        }
+        GcnModel { cfg, layers, csr, csr_rev, norm, qnorm, step_count: 0 }
+    }
+
+    fn dim_at(cfg: &GcnConfig, boundary: usize) -> usize {
+        if boundary == 0 {
+            cfg.in_dim
+        } else if boundary == cfg.layers {
+            cfg.out_dim
+        } else {
+            cfg.hidden
+        }
+    }
+
+    /// Whether layer `l` runs quantized under the current mode (§3.2: the
+    /// layer feeding the softmax stays FP32 unless Test1).
+    fn layer_quantized(&self, l: usize) -> bool {
+        self.cfg.mode.quantize && (l + 1 < self.cfg.layers || !self.cfg.mode.fp32_pre_softmax)
+    }
+
+    /// EXACT-style "compress then decompress" pass (pure overhead at
+    /// compute time — models the Fig. 8 EXACT baseline).
+    fn exact_roundtrip(&self, x: &Dense<f32>) -> Dense<f32> {
+        dequantize(&quantize(x, self.cfg.mode.bits, Rounding::Nearest))
+    }
+
+    /// Forward pass returning logits and the caches backward needs.
+    fn forward_cached(&self, features: &Dense<f32>) -> (Dense<f32>, Vec<LayerCache>) {
+        let mode = self.cfg.mode;
+        let mut caches = Vec::with_capacity(self.layers.len());
+        let mut x = features.clone();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let (xw, qx, qw) = if self.layer_quantized(l) {
+                let r = qgemm(&x, &layer.w, mode.bits, mode.rounding(self.step_count, l as u64));
+                (r.out, Some(r.qa), Some(r.qb))
+            } else if mode.exact_style {
+                let x2 = self.exact_roundtrip(&x);
+                let w2 = self.exact_roundtrip(&layer.w);
+                (gemm_f32(&x2, &w2), None, None)
+            } else {
+                (gemm_f32(&x, &layer.w), None, None)
+            };
+            let z = if self.layer_quantized(l) {
+                let qxw = quantize(&xw, mode.bits, mode.rounding(self.step_count, 100 + l as u64));
+                qspmm_edge_weighted(&self.csr, &self.qnorm, &qxw, 1)
+            } else if mode.exact_style {
+                spmm_csr_values(&self.csr, &self.norm, &self.exact_roundtrip(&xw))
+            } else {
+                spmm_csr_values(&self.csr, &self.norm, &xw)
+            };
+            let out = if l + 1 < self.layers.len() { relu(&z) } else { z.clone() };
+            let _ = &xw; // consumed by z above
+            caches.push(LayerCache { x: x.clone(), z, qx, qw });
+            x = out;
+        }
+        (x, caches)
+    }
+
+    /// Inference-only forward.
+    pub fn forward(&self, features: &Dense<f32>) -> Dense<f32> {
+        self.forward_cached(features).0
+    }
+
+    /// One training step: forward, caller-supplied loss grad, backward,
+    /// and FP32 parameter update. Returns the logits.
+    ///
+    /// `loss_grad(logits) -> (loss, ∂logits)`.
+    pub fn train_step(
+        &mut self,
+        features: &Dense<f32>,
+        opt: &mut super::Sgd,
+        loss_grad: impl FnOnce(&Dense<f32>) -> (f32, Dense<f32>),
+    ) -> (f32, Dense<f32>) {
+        let (logits, caches) = self.forward_cached(features);
+        let (loss, dlogits) = loss_grad(&logits);
+        self.backward(&caches, dlogits);
+        for (i, layer) in self.layers.iter_mut().enumerate() {
+            opt.step(i, &mut layer.w, &layer.grad_w);
+        }
+        self.step_count += 1;
+        (loss, logits)
+    }
+
+    /// Backward pass, filling each layer's `grad_w`.
+    fn backward(&mut self, caches: &[LayerCache], mut grad: Dense<f32>) {
+        let mode = self.cfg.mode;
+        for l in (0..self.layers.len()).rev() {
+            let cache = &caches[l];
+            // Through the inter-layer ReLU (not applied after final layer).
+            if l + 1 < self.layers.len() {
+                grad = relu_backward(&cache.z, &grad);
+            }
+            // ∂(XW) = Âᵀ · ∂Z (SPMM on the reversed graph, Fig. 1b step 4).
+            let dxw = if self.layer_quantized(l) {
+                let qg = quantize(&grad, mode.bits, mode.rounding(self.step_count, 200 + l as u64));
+                qspmm_edge_weighted(&self.csr_rev, &self.qnorm, &qg, 1)
+            } else if mode.exact_style {
+                spmm_csr_values(&self.csr_rev, &self.norm, &self.exact_roundtrip(&grad))
+            } else {
+                spmm_csr_values(&self.csr_rev, &self.norm, &grad)
+            };
+            // ∂W = Xᵀ·∂(XW) and ∂X = ∂(XW)·Wᵀ. Quantized: ∂(XW) is
+            // quantized ONCE and shared by both GEMMs; X_q and W_q come from
+            // the forward cache (inter-primitive reuse, §3.3).
+            if self.layer_quantized(l) {
+                let qdxw = quantize(&dxw, mode.bits, mode.rounding(self.step_count, 300 + l as u64));
+                let qx = cache.qx.as_ref().expect("forward cached qx");
+                let qw = cache.qw.as_ref().expect("forward cached qw");
+                let (gw, _) = qgemm_prequantized(&qx.transpose2d(), &qdxw, mode.bits);
+                self.layers[l].grad_w = gw;
+                if l > 0 {
+                    let (gx, _) = qgemm_prequantized(&qdxw, &qw.transpose2d(), mode.bits);
+                    grad = gx;
+                }
+            } else if mode.exact_style {
+                let x2 = self.exact_roundtrip(&cache.x);
+                let d2 = self.exact_roundtrip(&dxw);
+                self.layers[l].grad_w = gemm_f32(&x2.transpose(), &d2);
+                if l > 0 {
+                    grad = gemm_f32(&d2, &self.exact_roundtrip(&self.layers[l].w).transpose());
+                }
+            } else {
+                self.layers[l].grad_w = gemm_f32(&cache.x.transpose(), &dxw);
+                if l > 0 {
+                    grad = gemm_f32(&dxw, &self.layers[l].w.transpose());
+                }
+            }
+        }
+    }
+
+    /// The output of the *first layer* in the current state — the tensor the
+    /// bit-derivation rule (Fig. 2) evaluates.
+    pub fn first_layer_output(&self, features: &Dense<f32>) -> Dense<f32> {
+        let xw = gemm_f32(features, &self.layers[0].w);
+        spmm_csr_values(&self.csr, &self.norm, &xw)
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w.len()).sum()
+    }
+
+    /// Flatten all parameters (layer order) — used by the multi-worker
+    /// all-reduce.
+    pub fn params_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_params());
+        for l in &self.layers {
+            out.extend_from_slice(l.w.data());
+        }
+        out
+    }
+
+    /// Load parameters from a flat buffer (inverse of [`Self::params_flat`]).
+    pub fn set_params_flat(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.num_params());
+        let mut off = 0;
+        for l in &mut self.layers {
+            let n = l.w.len();
+            l.w.data_mut().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+    }
+}
+
+fn relu(x: &Dense<f32>) -> Dense<f32> {
+    x.map(|v| v.max(0.0))
+}
+
+fn relu_backward(pre: &Dense<f32>, grad: &Dense<f32>) -> Dense<f32> {
+    assert_eq!(pre.shape(), grad.shape());
+    let mut out = grad.clone();
+    for (g, &z) in out.data_mut().iter_mut().zip(pre.data().iter()) {
+        if z <= 0.0 {
+            *g = 0.0;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::model::{softmax_cross_entropy, Sgd};
+
+    fn tiny_model(mode: TrainMode) -> (GcnModel, datasets::Dataset) {
+        let d = datasets::tiny(7);
+        let cfg = GcnConfig {
+            in_dim: d.features.cols(),
+            hidden: 16,
+            out_dim: d.num_classes,
+            layers: 2,
+            mode,
+        };
+        (GcnModel::new(cfg, &d.graph, 42), d)
+    }
+
+    fn train_losses(mode: TrainMode, steps: usize) -> Vec<f32> {
+        let (mut m, d) = tiny_model(mode);
+        let mut opt = Sgd::new(0.05);
+        let mut losses = Vec::new();
+        for _ in 0..steps {
+            let (loss, _) = m.train_step(&d.features, &mut opt, |logits| {
+                softmax_cross_entropy(logits, &d.labels, &d.train_nodes)
+            });
+            losses.push(loss);
+        }
+        losses
+    }
+
+    #[test]
+    fn fp32_training_reduces_loss() {
+        let losses = train_losses(TrainMode::fp32(), 30);
+        assert!(losses[29] < losses[0] * 0.8, "{:?}", &losses[..3]);
+    }
+
+    #[test]
+    fn quantized_training_reduces_loss() {
+        let losses = train_losses(TrainMode::tango(8), 30);
+        assert!(losses[29] < losses[0] * 0.85, "{losses:?}");
+    }
+
+    #[test]
+    fn exact_style_matches_fp32_closely() {
+        // EXACT computes in FP32 after a quantize/dequantize round-trip, so
+        // its loss curve should track FP32 within quantization noise.
+        let a = train_losses(TrainMode::fp32(), 10);
+        let b = train_losses(TrainMode::exact(8), 10);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < 0.3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn quantized_final_accuracy_close_to_fp32() {
+        // The paper's headline accuracy claim (>99% of FP32) at test scale.
+        let run = |mode| {
+            let (mut m, d) = tiny_model(mode);
+            let mut opt = Sgd::new(0.05);
+            for _ in 0..60 {
+                m.train_step(&d.features, &mut opt, |logits| {
+                    softmax_cross_entropy(logits, &d.labels, &d.train_nodes)
+                });
+            }
+            let logits = m.forward(&d.features);
+            crate::model::accuracy(&logits, &d.labels, &d.eval_nodes)
+        };
+        let fp = run(TrainMode::fp32());
+        let tg = run(TrainMode::tango(8));
+        assert!(tg >= fp - 0.1, "tango {tg} vs fp32 {fp}");
+    }
+
+    #[test]
+    fn gradient_check_fp32_tiny() {
+        // Finite-difference check of ∂W on a 6-node graph.
+        let g = crate::graph::generators::erdos_renyi(6, 12, 3).with_self_loops();
+        let cfg = GcnConfig { in_dim: 3, hidden: 4, out_dim: 2, layers: 2, mode: TrainMode::fp32() };
+        let mut m = GcnModel::new(cfg, &g, 1);
+        let feats = crate::graph::generators::random_features(6, 3, 2);
+        let labels = vec![0u32, 1, 0, 1, 0, 1];
+        let nodes: Vec<u32> = (0..6).collect();
+
+        let loss_of = |m: &GcnModel| -> f32 {
+            let logits = m.forward(&feats);
+            softmax_cross_entropy(&logits, &labels, &nodes).0
+        };
+        // Compute analytic grads without updating params (lr = 0).
+        let mut opt = Sgd::new(0.0);
+        m.train_step(&feats, &mut opt, |logits| softmax_cross_entropy(logits, &labels, &nodes));
+        let eps = 1e-2f32;
+        for l in 0..2 {
+            for &idx in &[0usize, 3, 7] {
+                let orig = m.layers[l].w.data()[idx];
+                m.layers[l].w.data_mut()[idx] = orig + eps;
+                let fp = loss_of(&m);
+                m.layers[l].w.data_mut()[idx] = orig - eps;
+                let fm = loss_of(&m);
+                m.layers[l].w.data_mut()[idx] = orig;
+                let fd = (fp - fm) / (2.0 * eps);
+                let an = m.layers[l].grad_w.data()[idx];
+                assert!((fd - an).abs() < 3e-2, "layer {l} idx {idx}: fd={fd} an={an}");
+            }
+        }
+    }
+
+    #[test]
+    fn first_layer_output_shape() {
+        let (m, d) = tiny_model(TrainMode::fp32());
+        let out = m.first_layer_output(&d.features);
+        assert_eq!(out.shape(), &[d.graph.num_nodes, 16]);
+    }
+
+    #[test]
+    fn param_count() {
+        let (m, d) = tiny_model(TrainMode::fp32());
+        assert_eq!(m.num_params(), d.features.cols() * 16 + 16 * d.num_classes);
+    }
+
+    #[test]
+    fn single_layer_model_works() {
+        let g = crate::graph::generators::erdos_renyi(10, 30, 5).with_self_loops();
+        let cfg = GcnConfig { in_dim: 4, hidden: 8, out_dim: 3, layers: 1, mode: TrainMode::tango(8) };
+        let mut m = GcnModel::new(cfg, &g, 2);
+        let feats = crate::graph::generators::random_features(10, 4, 6);
+        let labels = vec![0u32; 10];
+        let mut opt = Sgd::new(0.1);
+        let nodes: Vec<u32> = (0..10).collect();
+        let (l1, _) = m.train_step(&feats, &mut opt, |lg| softmax_cross_entropy(lg, &labels, &nodes));
+        let (l2, _) = m.train_step(&feats, &mut opt, |lg| softmax_cross_entropy(lg, &labels, &nodes));
+        assert!(l2 <= l1 + 0.1);
+    }
+}

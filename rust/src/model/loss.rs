@@ -1,0 +1,143 @@
+//! Losses. Always computed in FP32 — the softmax cross-entropy sits behind
+//! the paper's "full precision for the layer before Softmax" rule (§3.2).
+
+use crate::tensor::Dense;
+
+/// Softmax cross-entropy over selected rows (the training nodes).
+///
+/// `logits: [N, C]`, `labels[v] ∈ 0..C`. Returns `(mean loss, ∂logits)`
+/// where the gradient is zero outside `nodes` and already divided by
+/// `|nodes|`.
+pub fn softmax_cross_entropy(
+    logits: &Dense<f32>,
+    labels: &[u32],
+    nodes: &[u32],
+) -> (f32, Dense<f32>) {
+    let c = logits.cols();
+    let mut grad = Dense::zeros(&[logits.rows(), c]);
+    if nodes.is_empty() {
+        return (0.0, grad);
+    }
+    let inv_n = 1.0 / nodes.len() as f32;
+    let mut loss = 0.0f64;
+    for &v in nodes {
+        let row = logits.row(v as usize);
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for &x in row {
+            denom += (x - maxv).exp();
+        }
+        let label = labels[v as usize] as usize;
+        let log_p = row[label] - maxv - denom.ln();
+        loss -= log_p as f64;
+        let grow = grad.row_mut(v as usize);
+        for j in 0..c {
+            let p = (row[j] - maxv).exp() / denom;
+            grow[j] = (p - if j == label { 1.0 } else { 0.0 }) * inv_n;
+        }
+    }
+    ((loss * inv_n as f64) as f32, grad)
+}
+
+/// Binary cross-entropy with logits over edge scores (link prediction).
+///
+/// `scores[i]` is the dot-product score of candidate edge `i`,
+/// `targets[i] ∈ {0.0, 1.0}`. Returns `(mean loss, ∂scores)`.
+pub fn bce_with_logits(scores: &[f32], targets: &[f32]) -> (f32, Vec<f32>) {
+    assert_eq!(scores.len(), targets.len());
+    if scores.is_empty() {
+        return (0.0, Vec::new());
+    }
+    let inv_n = 1.0 / scores.len() as f32;
+    let mut loss = 0.0f64;
+    let mut grad = Vec::with_capacity(scores.len());
+    for (&x, &t) in scores.iter().zip(targets.iter()) {
+        // Numerically stable: log(1+e^-|x|) + max(x,0) - t*x
+        let l = x.max(0.0) - t * x + (-(x.abs())).exp().ln_1p();
+        loss += l as f64;
+        let sig = 1.0 / (1.0 + (-x).exp());
+        grad.push((sig - t) * inv_n);
+    }
+    ((loss * inv_n as f64) as f32, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ce_loss_decreases_toward_correct_logits() {
+        let labels = vec![0u32, 1];
+        let nodes = vec![0u32, 1];
+        let bad = Dense::from_vec(&[2, 2], vec![0.0, 0.0, 0.0, 0.0]);
+        let good = Dense::from_vec(&[2, 2], vec![5.0, -5.0, -5.0, 5.0]);
+        let (lb, _) = softmax_cross_entropy(&bad, &labels, &nodes);
+        let (lg, _) = softmax_cross_entropy(&good, &labels, &nodes);
+        assert!(lg < lb);
+        assert!((lb - (2.0f32).ln()).abs() < 1e-5, "uniform logits -> ln(2)");
+    }
+
+    #[test]
+    fn ce_gradient_matches_finite_difference() {
+        let labels = vec![2u32];
+        let nodes = vec![0u32];
+        let logits = Dense::from_vec(&[1, 3], vec![0.3, -0.7, 1.1]);
+        let (_, grad) = softmax_cross_entropy(&logits, &labels, &nodes);
+        let eps = 1e-3;
+        for j in 0..3 {
+            let mut lp = logits.clone();
+            lp.set(0, j, logits.at(0, j) + eps);
+            let mut lm = logits.clone();
+            lm.set(0, j, logits.at(0, j) - eps);
+            let (fp, _) = softmax_cross_entropy(&lp, &labels, &nodes);
+            let (fm, _) = softmax_cross_entropy(&lm, &labels, &nodes);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!((fd - grad.at(0, j)).abs() < 1e-3, "j={j}: {fd} vs {}", grad.at(0, j));
+        }
+    }
+
+    #[test]
+    fn ce_gradient_zero_outside_train_nodes() {
+        let labels = vec![0u32, 1];
+        let logits = Dense::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let (_, grad) = softmax_cross_entropy(&logits, &labels, &[0]);
+        assert!(grad.row(1).iter().all(|&g| g == 0.0));
+        assert!(grad.row(0).iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn bce_loss_and_gradient() {
+        let (l, g) = bce_with_logits(&[0.0, 0.0], &[1.0, 0.0]);
+        assert!((l - (2.0f32).ln()).abs() < 1e-5);
+        assert!((g[0] + 0.25).abs() < 1e-6); // (0.5 - 1) / 2
+        assert!((g[1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bce_gradient_matches_finite_difference() {
+        let scores = vec![0.7f32, -1.2, 2.0];
+        let targets = vec![1.0f32, 0.0, 1.0];
+        let (_, grad) = bce_with_logits(&scores, &targets);
+        let eps = 1e-3;
+        for j in 0..3 {
+            let mut sp = scores.clone();
+            sp[j] += eps;
+            let mut sm = scores.clone();
+            sm[j] -= eps;
+            let (fp, _) = bce_with_logits(&sp, &targets);
+            let (fm, _) = bce_with_logits(&sm, &targets);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!((fd - grad[j]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let (l, g) = bce_with_logits(&[], &[]);
+        assert_eq!(l, 0.0);
+        assert!(g.is_empty());
+        let logits = Dense::from_vec(&[1, 2], vec![0.0, 0.0]);
+        let (l2, _) = softmax_cross_entropy(&logits, &[0], &[]);
+        assert_eq!(l2, 0.0);
+    }
+}

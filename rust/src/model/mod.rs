@@ -1,0 +1,116 @@
+//! GNN models (GCN and GAT) with explicit forward/backward passes composed
+//! from the three primitives, exactly following the paper's §2.1
+//! decomposition (Fig. 1a/1b).
+//!
+//! The models run in one of several [`TrainMode`]s that map onto the
+//! paper's evaluation arms:
+//!
+//! | mode | paper name |
+//! |---|---|
+//! | [`TrainMode::fp32`] | DGL (full-precision baseline) |
+//! | [`TrainMode::tango`] | Tango |
+//! | [`TrainMode::tango_test1`] | Test1 — quantized layer before Softmax |
+//! | [`TrainMode::tango_test2`] | Test2 — nearest instead of stochastic rounding |
+//! | [`TrainMode::exact`] | EXACT — quantize for memory, dequantize to compute |
+//!
+//! The accuracy rules of §3.2 are enforced structurally: weight updates are
+//! always FP32 ([`optim`]), the layer feeding the final softmax stays FP32
+//! unless `fp32_pre_softmax` is disabled (Test1), and stochastic rounding
+//! seeds derive from the step counter so training is reproducible.
+
+pub mod eval;
+pub mod gat;
+pub mod gcn;
+pub mod loss;
+pub mod optim;
+
+pub use eval::{accuracy, auc};
+pub use gat::{GatConfig, GatModel};
+pub use gcn::{GcnConfig, GcnModel};
+pub use loss::{bce_with_logits, softmax_cross_entropy};
+pub use optim::Sgd;
+
+use crate::quant::Rounding;
+
+/// How a training step executes its primitives.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainMode {
+    /// Use Tango's quantized primitives (GEMM/SPMM/SDDMM).
+    pub quantize: bool,
+    /// Stochastic rounding (true) vs nearest (false — the Test2 ablation).
+    pub stochastic: bool,
+    /// Keep the layer feeding the final softmax in FP32 (§3.2 rule;
+    /// false — the Test1 ablation).
+    pub fp32_pre_softmax: bool,
+    /// EXACT-style execution: tensors are quantized for storage and
+    /// dequantized back to FP32 before every compute — memory savings with
+    /// *added* work, the baseline Fig. 8 shows losing to both DGL and Tango.
+    pub exact_style: bool,
+    /// Quantization bit width.
+    pub bits: u8,
+}
+
+impl TrainMode {
+    /// Full-precision baseline (the paper's "DGL").
+    pub fn fp32() -> Self {
+        TrainMode { quantize: false, stochastic: false, fp32_pre_softmax: true, exact_style: false, bits: 8 }
+    }
+
+    /// Tango with all accuracy rules on.
+    pub fn tango(bits: u8) -> Self {
+        TrainMode { quantize: true, stochastic: true, fp32_pre_softmax: true, exact_style: false, bits }
+    }
+
+    /// Fig. 7 "Test1": Tango but the pre-softmax layer is quantized too.
+    pub fn tango_test1(bits: u8) -> Self {
+        TrainMode { fp32_pre_softmax: false, ..Self::tango(bits) }
+    }
+
+    /// Fig. 7 "Test2": Tango with nearest instead of stochastic rounding.
+    pub fn tango_test2(bits: u8) -> Self {
+        TrainMode { stochastic: false, ..Self::tango(bits) }
+    }
+
+    /// The EXACT-style baseline of Fig. 8.
+    pub fn exact(bits: u8) -> Self {
+        TrainMode { quantize: false, stochastic: false, fp32_pre_softmax: true, exact_style: true, bits }
+    }
+
+    /// Rounding mode for a given training step (seeds derive from the step
+    /// counter and a stream id, so runs are reproducible).
+    pub fn rounding(&self, step: u64, stream: u64) -> Rounding {
+        if self.stochastic {
+            Rounding::Stochastic { seed: step.wrapping_mul(0x9E3779B97F4A7C15) ^ stream }
+        } else {
+            Rounding::Nearest
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_constructors_match_paper_arms() {
+        let t = TrainMode::tango(8);
+        assert!(t.quantize && t.stochastic && t.fp32_pre_softmax && !t.exact_style);
+        let t1 = TrainMode::tango_test1(8);
+        assert!(!t1.fp32_pre_softmax && t1.quantize);
+        let t2 = TrainMode::tango_test2(8);
+        assert!(!t2.stochastic && t2.quantize);
+        let e = TrainMode::exact(8);
+        assert!(e.exact_style && !e.quantize);
+        let f = TrainMode::fp32();
+        assert!(!f.quantize && !f.exact_style);
+    }
+
+    #[test]
+    fn rounding_is_deterministic_per_step() {
+        let m = TrainMode::tango(8);
+        assert_eq!(m.rounding(3, 1), m.rounding(3, 1));
+        assert_ne!(m.rounding(3, 1), m.rounding(4, 1));
+        assert_ne!(m.rounding(3, 1), m.rounding(3, 2));
+        assert_eq!(TrainMode::tango_test2(8).rounding(5, 0), Rounding::Nearest);
+    }
+}

@@ -1,0 +1,132 @@
+//! Optimizers. **Full-precision weight update** is one of the paper's
+//! accuracy rules (§3.2, Eq. 5/6): updating quantized weights with quantized
+//! gradients loses `Q(W_roundoff + ΔW_roundoff)`; updating FP32 master
+//! weights (and re-quantizing next step) keeps it.
+
+use crate::tensor::Dense;
+
+/// SGD with optional momentum, operating on FP32 master weights.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    /// Learning rate.
+    pub lr: f32,
+    /// Momentum coefficient (0.0 = plain SGD).
+    pub momentum: f32,
+    /// L2 weight decay.
+    pub weight_decay: f32,
+    velocity: Vec<Option<Dense<f32>>>,
+}
+
+impl Sgd {
+    /// Plain SGD.
+    pub fn new(lr: f32) -> Self {
+        Sgd { lr, momentum: 0.0, weight_decay: 0.0, velocity: Vec::new() }
+    }
+
+    /// SGD with momentum.
+    pub fn with_momentum(lr: f32, momentum: f32) -> Self {
+        Sgd { lr, momentum, weight_decay: 0.0, velocity: Vec::new() }
+    }
+
+    /// Update parameter `idx` in place. Parameters are identified by a
+    /// stable index so momentum buffers persist across steps.
+    pub fn step(&mut self, idx: usize, param: &mut Dense<f32>, grad: &Dense<f32>) {
+        assert_eq!(param.shape(), grad.shape(), "param/grad shape mismatch");
+        if self.velocity.len() <= idx {
+            self.velocity.resize(idx + 1, None);
+        }
+        let effective: Dense<f32> = if self.weight_decay != 0.0 {
+            let mut g = grad.clone();
+            g.axpy_neg(-self.weight_decay, param); // g += wd * param
+            g
+        } else {
+            grad.clone()
+        };
+        if self.momentum != 0.0 {
+            let v = self.velocity[idx].get_or_insert_with(|| Dense::zeros(param.shape()));
+            // v = momentum * v + g
+            v.scale(self.momentum);
+            v.add_assign(&effective);
+            param.axpy_neg(self.lr, v);
+        } else {
+            param.axpy_neg(self.lr, &effective);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_descends_quadratic() {
+        // minimize f(w) = 0.5 * w^2, grad = w.
+        let mut w = Dense::from_vec(&[1], vec![10.0f32]);
+        let mut opt = Sgd::new(0.1);
+        for _ in 0..100 {
+            let g = w.clone();
+            opt.step(0, &mut w, &g);
+        }
+        assert!(w.data()[0].abs() < 1e-3);
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let run = |mom: f32| {
+            let mut w = Dense::from_vec(&[1], vec![10.0f32]);
+            let mut opt = Sgd::with_momentum(0.01, mom);
+            for _ in 0..50 {
+                let g = w.clone();
+                opt.step(0, &mut w, &g);
+            }
+            w.data()[0].abs()
+        };
+        assert!(run(0.9) < run(0.0), "momentum should converge faster here");
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut w = Dense::from_vec(&[1], vec![1.0f32]);
+        let mut opt = Sgd::new(0.1);
+        opt.weight_decay = 0.5;
+        let zero_grad = Dense::zeros(&[1]);
+        opt.step(0, &mut w, &zero_grad);
+        assert!((w.data()[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn distinct_params_have_distinct_momentum() {
+        let mut opt = Sgd::with_momentum(0.1, 0.9);
+        let mut w0 = Dense::from_vec(&[1], vec![1.0f32]);
+        let mut w1 = Dense::from_vec(&[1], vec![1.0f32]);
+        let g = Dense::from_vec(&[1], vec![1.0f32]);
+        opt.step(0, &mut w0, &g);
+        opt.step(1, &mut w1, &g);
+        opt.step(0, &mut w0, &g);
+        // w0 took two momentum-compounded steps, w1 one.
+        assert!(w0.data()[0] < w1.data()[0]);
+    }
+
+    #[test]
+    fn full_precision_update_beats_quantized_update() {
+        // The Eq. 5/6 argument, numerically: accumulate 100 small gradients.
+        // FP32 master weights absorb them; updating a quantized weight with
+        // quantized gradients loses every sub-grid update.
+        use crate::quant::{dequantize, quantize, Rounding};
+        let mut master = Dense::from_vec(&[1], vec![1.0f32]);
+        let mut quantized_only = 1.0f32;
+        let grad = Dense::from_vec(&[1], vec![0.001f32]);
+        let mut opt = Sgd::new(1.0);
+        for _ in 0..100 {
+            opt.step(0, &mut master, &grad);
+            // "Quantized update": quantize weight and gradient to a coarse
+            // grid (scale 0.05), add, keep quantized.
+            let qw = quantize(&Dense::from_vec(&[1], vec![quantized_only]), 8, Rounding::Nearest);
+            let qg = (0.001f32 / 0.05).round() * 0.05; // grid-rounds to 0
+            quantized_only = dequantize(&qw).data()[0] - qg;
+        }
+        let target = 1.0 - 100.0 * 0.001;
+        assert!((master.data()[0] - target).abs() < 1e-4);
+        assert!((quantized_only - target).abs() > 0.05, "quantized update should have lost the updates");
+    }
+}

@@ -1,0 +1,104 @@
+//! Ring all-reduce, executed numerically (the values really move through
+//! per-worker chunks) with optional INT8 payload quantization — the paper's
+//! "transferring the quantized node features and gradients".
+
+use crate::quant::{dequantize, quantize, QTensor, Rounding};
+use crate::tensor::Dense;
+
+/// Bytes each worker sends over the wire for one ring all-reduce of an
+/// `n`-element vector across `k` workers (reduce-scatter + all-gather:
+/// `2·(k-1)/k · n · elem_bytes`).
+pub fn ring_transfer_bytes(n: usize, k: usize, elem_bytes: f64) -> f64 {
+    if k <= 1 {
+        return 0.0;
+    }
+    2.0 * (k as f64 - 1.0) / k as f64 * n as f64 * elem_bytes
+}
+
+/// All-reduce (mean) of per-worker gradient vectors.
+///
+/// With `quantize_payload`, each worker's contribution is quantized to INT8
+/// before "transfer" and dequantized at the receiver — numerically faithful
+/// to what quantized gradient exchange does to the values (stochastic
+/// rounding, per-tensor scale riding along with the payload).
+pub fn ring_allreduce(grads: &mut [Vec<f32>], quantize_payload: bool, seed: u64) {
+    let k = grads.len();
+    if k == 0 {
+        return;
+    }
+    let n = grads[0].len();
+    assert!(grads.iter().all(|g| g.len() == n), "ragged gradients");
+    // Reduce: sum of (possibly wire-quantized) contributions.
+    let mut sum = vec![0.0f32; n];
+    for (w, g) in grads.iter().enumerate() {
+        if quantize_payload {
+            let t = Dense::from_vec(&[n], g.clone());
+            let q: QTensor = quantize(&t, 8, Rounding::Stochastic { seed: seed ^ w as u64 });
+            let deq = dequantize(&q);
+            for (s, v) in sum.iter_mut().zip(deq.data()) {
+                *s += v;
+            }
+        } else {
+            for (s, v) in sum.iter_mut().zip(g.iter()) {
+                *s += v;
+            }
+        }
+    }
+    let inv = 1.0 / k as f32;
+    for s in sum.iter_mut() {
+        *s *= inv;
+    }
+    // Broadcast.
+    for g in grads.iter_mut() {
+        g.copy_from_slice(&sum);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn fp32_allreduce_is_exact_mean() {
+        let mut grads = vec![vec![1.0f32, 2.0, 3.0], vec![3.0, 2.0, 1.0]];
+        ring_allreduce(&mut grads, false, 0);
+        assert_eq!(grads[0], vec![2.0, 2.0, 2.0]);
+        assert_eq!(grads[0], grads[1]);
+    }
+
+    #[test]
+    fn quantized_allreduce_close_to_mean() {
+        let a: Vec<f32> = (0..256).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..256).map(|i| (i as f32 * 0.11).cos()).collect();
+        let want: Vec<f32> = a.iter().zip(&b).map(|(x, y)| (x + y) / 2.0).collect();
+        let mut grads = vec![a, b];
+        ring_allreduce(&mut grads, true, 7);
+        let maxerr = grads[0].iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        // INT8 wire error is bounded by ~one grid step of the larger tensor.
+        assert!(maxerr < 0.02, "maxerr {maxerr}");
+        assert_eq!(grads[0], grads[1]);
+    }
+
+    #[test]
+    fn transfer_bytes_formula() {
+        assert_eq!(ring_transfer_bytes(100, 1, 4.0), 0.0);
+        assert_eq!(ring_transfer_bytes(100, 2, 4.0), 400.0);
+        // k→∞ approaches 2·n·bytes.
+        assert!((ring_transfer_bytes(100, 100, 4.0) - 792.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_allreduce_workers_agree() {
+        prop::check("allreduce agreement", 32, |g| {
+            let k = g.usize_in(1, 6);
+            let n = g.usize_in(1, 64);
+            let mut grads: Vec<Vec<f32>> = (0..k).map(|_| g.f32_vec(n, -2.0, 2.0)).collect();
+            let quant = g.bool(0.5);
+            ring_allreduce(&mut grads, quant, g.u64());
+            for w in 1..k {
+                assert_eq!(grads[0], grads[w], "worker {w} disagrees");
+            }
+        });
+    }
+}

@@ -1,0 +1,66 @@
+//! Interconnect model: PCIe bandwidth, latency and congestion.
+
+/// A shared-bus interconnect (PCIe-like).
+#[derive(Debug, Clone, Copy)]
+pub struct Interconnect {
+    /// Per-link unidirectional bandwidth (byte/s).
+    pub link_bw: f64,
+    /// Per-message latency (s).
+    pub latency: f64,
+    /// Congestion exponent: effective bandwidth per worker degrades as
+    /// `link_bw / workers^congestion` when `workers` peers share the bus
+    /// (0 = perfect switch, 1 = single shared bus). PCIe trees with a
+    /// shared root complex sit in between — the paper's "PCI-E congestion".
+    pub congestion: f64,
+}
+
+impl Interconnect {
+    /// PCIe 3.0 ×16 through a shared root complex (the paper's V100S box).
+    pub fn pcie3() -> Self {
+        Interconnect { link_bw: 12.8e9, latency: 10e-6, congestion: 0.6 }
+    }
+
+    /// Effective per-worker bandwidth with `workers` concurrent peers.
+    pub fn effective_bw(&self, workers: usize) -> f64 {
+        self.link_bw / (workers.max(1) as f64).powf(self.congestion)
+    }
+
+    /// Modelled time to move `bytes` per worker with `workers` concurrent
+    /// transfers of `messages` messages each.
+    pub fn transfer_time(&self, bytes: f64, messages: usize, workers: usize) -> f64 {
+        self.latency * messages as f64 + bytes / self.effective_bw(workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn congestion_degrades_effective_bandwidth() {
+        let ic = Interconnect::pcie3();
+        assert!(ic.effective_bw(6) < ic.effective_bw(2));
+        assert!(ic.effective_bw(1) <= ic.link_bw + 1.0);
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes_and_messages() {
+        let ic = Interconnect::pcie3();
+        let t1 = ic.transfer_time(1e6, 1, 2);
+        let t2 = ic.transfer_time(2e6, 1, 2);
+        let t3 = ic.transfer_time(1e6, 10, 2);
+        assert!(t2 > t1);
+        assert!(t3 > t1);
+    }
+
+    #[test]
+    fn quantized_payload_quarter_time_at_scale() {
+        // With latency amortised, 1-byte payloads take ~1/4 the time of
+        // 4-byte payloads — the Fig. 9 mechanism.
+        let ic = Interconnect::pcie3();
+        let fp32 = ic.transfer_time(4.0 * 1e8, 1, 4);
+        let int8 = ic.transfer_time(1.0 * 1e8, 1, 4);
+        let ratio = fp32 / int8;
+        assert!(ratio > 3.5 && ratio < 4.5, "{ratio}");
+    }
+}

@@ -1,0 +1,67 @@
+//! GPU device parameters (datasheet values for the paper's testbeds).
+
+/// Datasheet-level description of a GPU.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    /// Marketing name.
+    pub name: &'static str,
+    /// FP32 CUDA-core throughput (FLOP/s).
+    pub fp32_flops: f64,
+    /// INT8 DP4A throughput on CUDA cores (OP/s) — 4 MACs per instruction,
+    /// the paper's V100 quantized GEMM path.
+    pub int8_dp4a_ops: f64,
+    /// FP16 tensor-core throughput (FLOP/s).
+    pub fp16_tc_flops: f64,
+    /// INT8 tensor-core throughput (OP/s) — paper §1: "2× of FP16".
+    pub int8_tc_ops: f64,
+    /// INT4 tensor-core throughput (OP/s).
+    pub int4_tc_ops: f64,
+    /// HBM bandwidth (byte/s).
+    pub mem_bw: f64,
+    /// Kernel launch overhead (s).
+    pub launch_overhead: f64,
+}
+
+/// V100S (the paper's main testbed: six V100S GPUs).
+pub const V100: GpuSpec = GpuSpec {
+    name: "V100",
+    fp32_flops: 15.7e12,
+    // 4× FP32 ALU rate via DP4A.
+    int8_dp4a_ops: 62.8e12,
+    fp16_tc_flops: 125.0e12,
+    // V100 tensor cores have no INT8 mode; DP4A is the integer path.
+    int8_tc_ops: 0.0,
+    int4_tc_ops: 0.0,
+    mem_bw: 1134.0e9, // V100S HBM2
+    launch_overhead: 5e-6,
+};
+
+/// A100 (the paper's tensor-core comparison, §4.1/Fig. 11b/16b).
+pub const A100: GpuSpec = GpuSpec {
+    name: "A100",
+    fp32_flops: 19.5e12,
+    int8_dp4a_ops: 78.0e12,
+    fp16_tc_flops: 312.0e12,
+    int8_tc_ops: 624.0e12,
+    int4_tc_ops: 1248.0e12,
+    mem_bw: 1555.0e9,
+    launch_overhead: 5e-6,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_ratio_int8_is_2x_fp16_on_a100() {
+        // Paper §1: "computing with 8-bit integers on tensor core offers 2×
+        // the throughput of 16-bit floating-point and 32× that of 32-bit".
+        assert!((A100.int8_tc_ops / A100.fp16_tc_flops - 2.0).abs() < 1e-9);
+        assert!((A100.int8_tc_ops / A100.fp32_flops - 32.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn dp4a_is_4x_fp32() {
+        assert!((V100.int8_dp4a_ops / V100.fp32_flops - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,32 @@
+//! Analytical GPU cost model (DESIGN.md §Substitutions).
+//!
+//! The paper's speedup claims are CUDA-hardware claims (DP4A, tensor cores,
+//! cuBLAS); no GPU is present here, so this module reproduces the *shape*
+//! of those results from first principles: device datasheet rates (V100 /
+//! A100), a roofline GEMM model with the paper's quantization overhead
+//! accounting (§3.3: `4K(M+N)` quantize + `2MN` dequantize flops), and a
+//! traffic model for the memory-bound sparse primitives.
+//!
+//! Regenerates: Fig. 8 (end-to-end shape), Fig. 11 (GEMM speedups),
+//! Fig. 12 (profiling ratios), Fig. 16b (INT8/INT4 tensor-core GEMM).
+
+mod gemm_cost;
+mod gpu;
+mod sparse_cost;
+
+pub use gemm_cost::{gemm_time, profile_ratios, GemmKind, GemmProfile};
+pub use gpu::{GpuSpec, A100, V100};
+pub use sparse_cost::{sddmm_time, spmm_time, SparseDtype};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_reexports_work() {
+        assert_eq!(V100.name, "V100");
+        assert_eq!(A100.name, "A100");
+        let t = gemm_time(&V100, 1024, 1024, 1024, GemmKind::Fp32Cuda, false);
+        assert!(t > 0.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Traffic model for the memory-bound sparse primitives (SPMM / SDDMM).
+//!
+//! The paper's argument (§3.1/§3.3): sparse primitives are bound by the
+//! *random* accesses into the node/edge feature matrices. Quantization
+//! shrinks those matrices 4× (INT8), improving cache hit rates and cutting
+//! DRAM traffic; a dedicated sequential quantization pass is cheap by
+//! comparison. The model charges:
+//!
+//! - structure reads (indptr + indices), sequential;
+//! - feature reads, random — de-rated by a locality factor that improves
+//!   when the working set shrinks (the quantization benefit, Fig. 13/15/16a);
+//! - output writes, sequential;
+//! - for the quantized path, the dedicated quantize pass (sequential read
+//!   of FP32 + write of INT8).
+
+use super::gpu::GpuSpec;
+
+/// Element type of the randomly-accessed feature matrices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparseDtype {
+    /// FP32 features (baseline).
+    F32,
+    /// INT8 features (Tango).
+    I8,
+    /// INT4 features (Fig. 16a; packed, but charged a byte per random
+    /// touch — sub-byte accesses cannot be coalesced individually).
+    I4,
+}
+
+impl SparseDtype {
+    fn bytes(self) -> f64 {
+        match self {
+            SparseDtype::F32 => 4.0,
+            SparseDtype::I8 => 1.0,
+            SparseDtype::I4 => 0.5,
+        }
+    }
+}
+
+/// Random-access de-rating: a random touch of `b` bytes moves a whole cache
+/// line unless the working set fits in cache. `working_set` in bytes.
+fn random_access_efficiency(working_set: f64, cache_bytes: f64) -> f64 {
+    // Fraction of touches served by cache grows as the working set shrinks.
+    (cache_bytes / working_set).min(1.0).max(0.05)
+}
+
+/// L2 size used for the locality model (V100/A100 ballpark).
+const CACHE_BYTES: f64 = 6.0 * 1024.0 * 1024.0;
+/// DRAM burst granularity for random touches.
+const LINE_BYTES: f64 = 32.0;
+
+/// Modelled SPMM time: `out[v] = Σ_e w_e · X[src(e)]` over `edges` entries,
+/// features of width `feat` per node, `nodes` nodes.
+pub fn spmm_time(g: &GpuSpec, nodes: usize, edges: usize, feat: usize, dtype: SparseDtype) -> f64 {
+    let (nf, ef, ff) = (nodes as f64, edges as f64, feat as f64);
+    // Sequential: structure (8 B/edge) + edge values + output write (FP32).
+    let mut traffic = ef * 8.0 + ef * dtype.bytes() + nf * ff * 4.0;
+    // Random: one feature-row gather per edge.
+    let row_bytes = ff * dtype.bytes();
+    let ws = nf * row_bytes;
+    let hit = random_access_efficiency(ws, CACHE_BYTES);
+    let miss_bytes = row_bytes.max(LINE_BYTES); // short rows still pull a line
+    traffic += ef * (1.0 - hit) * miss_bytes;
+    if dtype != SparseDtype::F32 {
+        // Dedicated quantization pass: sequential FP32 read + quantized write.
+        traffic += nf * ff * (4.0 + dtype.bytes());
+    }
+    g.launch_overhead + traffic / g.mem_bw
+}
+
+/// Modelled SDDMM time: per-edge op over `feat`-wide rows of two node
+/// matrices (`dot`) or scalar rows (`add`): `work_per_edge` row touches.
+pub fn sddmm_time(g: &GpuSpec, nodes: usize, edges: usize, feat: usize, dtype: SparseDtype) -> f64 {
+    let (nf, ef, ff) = (nodes as f64, edges as f64, feat as f64);
+    // Sequential: structure + edge output (FP32).
+    let mut traffic = ef * 8.0 + ef * 4.0;
+    // Random: two endpoint-row gathers per edge.
+    let row_bytes = ff * dtype.bytes();
+    let ws = 2.0 * nf * row_bytes;
+    let hit = random_access_efficiency(ws, CACHE_BYTES);
+    traffic += 2.0 * ef * (1.0 - hit) * row_bytes.max(LINE_BYTES);
+    if dtype != SparseDtype::F32 {
+        traffic += 2.0 * nf * ff * (4.0 + dtype.bytes());
+    }
+    g.launch_overhead + traffic / g.mem_bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::gpu::V100;
+
+    // ogbn-arxiv-ish scale.
+    const N: usize = 169_343;
+    const E: usize = 1_166_243;
+
+    #[test]
+    fn quantized_spmm_faster_on_large_graphs() {
+        let f32t = spmm_time(&V100, N, E, 64, SparseDtype::F32);
+        let i8t = spmm_time(&V100, N, E, 64, SparseDtype::I8);
+        assert!(i8t < f32t, "{i8t} vs {f32t}");
+    }
+
+    #[test]
+    fn int4_beats_int8_on_dense_graphs() {
+        // Fig. 16a: dense graphs benefit more (cache reuse of node rows).
+        let i8t = sddmm_time(&V100, N, E, 64, SparseDtype::I8);
+        let i4t = sddmm_time(&V100, N, E, 64, SparseDtype::I4);
+        assert!(i4t <= i8t);
+    }
+
+    #[test]
+    fn tiny_graph_quantization_not_worth_it() {
+        // When the working set fits in cache, the dedicated quantize pass
+        // costs more than the (zero) random-traffic saving.
+        let f32t = spmm_time(&V100, 1000, 5000, 16, SparseDtype::F32);
+        let i8t = spmm_time(&V100, 1000, 5000, 16, SparseDtype::I8);
+        assert!(i8t >= f32t, "{i8t} vs {f32t}");
+    }
+
+    #[test]
+    fn sddmm_quantized_wins_at_scale() {
+        let f32t = sddmm_time(&V100, N, E, 256, SparseDtype::F32);
+        let i8t = sddmm_time(&V100, N, E, 256, SparseDtype::I8);
+        let s = f32t / i8t;
+        assert!(s > 1.2 && s < 5.0, "speedup {s}");
+    }
+
+    #[test]
+    fn times_scale_with_edges() {
+        let small = spmm_time(&V100, N, E / 10, 64, SparseDtype::F32);
+        let large = spmm_time(&V100, N, E, 64, SparseDtype::F32);
+        assert!(large > small);
+    }
+}

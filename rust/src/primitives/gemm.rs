@@ -1,0 +1,128 @@
+//! FP32 GEMM — the "cuBLAS" baseline of the paper's evaluation.
+//!
+//! Cache-blocked, rayon-parallel over row panels. Not a BLAS contender, but
+//! a fair FP32 baseline for the INT8 comparison: both sides use the same
+//! blocking and threading, so the measured ratio isolates the element-width
+//! effect the paper's Fig. 11 attributes to quantization.
+
+use crate::tensor::Dense;
+use crate::util::par;
+
+/// Row-panel height processed per rayon task.
+const PANEL: usize = 64;
+/// K-blocking factor (keeps a B block resident in L1/L2).
+const KBLOCK: usize = 256;
+
+/// `C = A · B` for row-major `A: [m,k]`, `B: [k,n]`.
+pub fn gemm_f32(a: &Dense<f32>, b: &Dense<f32>) -> Dense<f32> {
+    let (m, k) = (a.rows(), a.cols());
+    let (kb, n) = (b.rows(), b.cols());
+    assert_eq!(k, kb, "gemm inner dims: {k} vs {kb}");
+    let mut out = Dense::zeros(&[m, n]);
+    let bd = b.data();
+    par::for_each_chunk(out.data_mut(), PANEL * n, |panel, chunk| {
+        let i0 = panel * PANEL;
+        let rows = chunk.len() / n;
+        for k0 in (0..k).step_by(KBLOCK) {
+            let k1 = (k0 + KBLOCK).min(k);
+            for r in 0..rows {
+                let arow = a.row(i0 + r);
+                let crow = &mut chunk[r * n..(r + 1) * n];
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// `C = Aᵀ · B` for `A: [k,m]`, `B: [k,n]` — the `∂W = Hᵀ·∂H'` shape.
+pub fn gemm_f32_at_b(a: &Dense<f32>, b: &Dense<f32>) -> Dense<f32> {
+    gemm_f32(&a.transpose(), b)
+}
+
+/// `C = A · Bᵀ` for `A: [m,k]`, `B: [n,k]` — the `∂H = ∂H'·Wᵀ` shape.
+pub fn gemm_f32_a_bt(a: &Dense<f32>, b: &Dense<f32>) -> Dense<f32> {
+    gemm_f32(a, &b.transpose())
+}
+
+/// Naive triple loop — correctness oracle for tests only.
+pub fn gemm_naive(a: &Dense<f32>, b: &Dense<f32>) -> Dense<f32> {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(k, b.rows());
+    let mut out = Dense::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a.at(i, kk) * b.at(kk, j);
+            }
+            out.set(i, j, acc);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::random_features;
+
+    #[test]
+    fn matches_naive_small() {
+        let a = Dense::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Dense::from_vec(&[3, 2], vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = gemm_f32(&a, &b);
+        assert_eq!(c.data(), gemm_naive(&a, &b).data());
+        assert_eq!(c.at(0, 0), 58.0);
+        assert_eq!(c.at(1, 1), 154.0);
+    }
+
+    #[test]
+    fn matches_naive_random_odd_sizes() {
+        // Sizes chosen to straddle panel/kblock boundaries.
+        for &(m, k, n) in &[(1, 1, 1), (65, 7, 3), (64, 256, 32), (100, 300, 17)] {
+            let a = random_features(m, k, 1);
+            let b = random_features(k, n, 2);
+            let fast = gemm_f32(&a, &b);
+            let slow = gemm_naive(&a, &b);
+            assert!(fast.max_abs_diff(&slow) < 1e-3, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn transposed_variants() {
+        let a = random_features(10, 6, 3); // [k=10, m=6] for at_b
+        let b = random_features(10, 4, 4);
+        let c = gemm_f32_at_b(&a, &b);
+        assert_eq!(c.shape(), &[6, 4]);
+        let oracle = gemm_naive(&a.transpose(), &b);
+        assert!(c.max_abs_diff(&oracle) < 1e-4);
+
+        let x = random_features(5, 8, 5);
+        let w = random_features(3, 8, 6); // [n=3, k=8]
+        let y = gemm_f32_a_bt(&x, &w);
+        assert_eq!(y.shape(), &[5, 3]);
+        let oracle = gemm_naive(&x, &w.transpose());
+        assert!(y.max_abs_diff(&oracle) < 1e-4);
+    }
+
+    #[test]
+    fn identity_multiplication() {
+        let mut eye = Dense::zeros(&[4, 4]);
+        for i in 0..4 {
+            eye.set(i, i, 1.0);
+        }
+        let x = random_features(4, 4, 7);
+        assert!(gemm_f32(&eye, &x).max_abs_diff(&x) < 1e-6);
+    }
+}

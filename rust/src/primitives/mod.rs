@@ -1,0 +1,38 @@
+//! The three GNN primitives (paper §2.1) and their quantized counterparts
+//! (paper §3.3).
+//!
+//! A GNN training step decomposes into exactly three tensor primitives:
+//!
+//! - **GEMM** — node projection `H' = H·W` and its backward
+//!   (`∂W = Hᵀ·∂H'`, `∂H = ∂H'·Wᵀ`). Compute-bound; quantization wins by
+//!   cutting multiply-accumulate cost ([`qgemm`]).
+//! - **SPMM** — neighbourhood aggregation `H^(l) = (G ⊙ α)·H'` and the
+//!   edge-gradient reductions `∂S/∂D = (G ⊙ ∂E)·1`. Memory-bound;
+//!   quantization wins by shrinking the randomly-accessed operand
+//!   ([`spmm`], [`incidence_spmm`]).
+//! - **SDDMM** — edge-feature computation `E = G ⊙ (S ⊕ Dᵀ)` and the
+//!   attention gradient `∂α = G ⊙ (∂H·H'ᵀ)`. Memory-bound; add/sub variants
+//!   dequantize on the fly, mul/div variants compute directly on quantized
+//!   values with the scale product `s0·s1` ([`sddmm`]).
+//!
+//! The FP32 versions double as the "cuBLAS/cuSPARSE/DGL" baselines of the
+//! paper's evaluation; the quantized versions are Tango's contributions.
+
+pub mod gemm;
+pub mod qgemm;
+pub mod sddmm;
+pub mod softmax;
+pub mod spmm;
+pub mod spmv;
+
+pub use gemm::{gemm_f32, gemm_f32_at_b, gemm_f32_a_bt};
+pub use qgemm::{qgemm, qgemm_prequantized, QGemmOutput};
+pub use sddmm::{
+    qsddmm_add, qsddmm_dot, sddmm_add, sddmm_broadcast_dst, sddmm_dot,
+};
+pub use softmax::{edge_softmax, edge_softmax_backward, leaky_relu, leaky_relu_backward};
+pub use spmm::{
+    incidence_spmm, qspmm_edge_weighted, spmm_csr_values, spmm_edge_aggregate_3mat,
+    spmm_edge_weighted, spmm_per_head,
+};
+pub use spmv::{spmm_via_spmvs, spmv_csr};

@@ -1,0 +1,222 @@
+//! SDDMM variants (paper §3.3): element-wise add (forward attention logits,
+//! Fig. 1a step 3) and row-wise dot (attention gradient, Fig. 1b step 5),
+//! each in FP32 and quantized form.
+//!
+//! The quantization rule (paper §3.3):
+//!
+//! - **add/sub** cannot be computed on quantized values directly because the
+//!   two operands carry different scales (`s_S·S_q + s_D·D_q` does not
+//!   factor) — so the kernel loads the small INT8 tensors and dequantizes
+//!   *on the fly* per element ([`qsddmm_add`]);
+//! - **mul/div** factor through: `(s_0·a_q)·(s_1·b_q) = (s_0·s_1)·(a_q·b_q)`,
+//!   so the kernel multiplies raw INT8 values in i32 and applies one fused
+//!   scale at the end ([`qsddmm_dot`]).
+
+use crate::graph::Coo;
+use crate::quant::QTensor;
+use crate::tensor::Dense;
+use crate::util::par;
+
+/// FP32 SDDMM-add: `E[e,h] = S[src(e),h] + D[dst(e),h]`.
+///
+/// `s, d: [N, H]` → `[E, H]`. This is step 3 of Fig. 1a (before LeakyReLU).
+pub fn sddmm_add(coo: &Coo, s: &Dense<f32>, d: &Dense<f32>) -> Dense<f32> {
+    let heads = s.cols();
+    assert_eq!(d.cols(), heads);
+    let m = coo.num_edges();
+    let mut out = Dense::zeros(&[m, heads]);
+    par::for_each_chunk(out.data_mut(), heads, |e, erow| {
+        let srow = s.row(coo.src[e] as usize);
+        let drow = d.row(coo.dst[e] as usize);
+        for h in 0..heads {
+            erow[h] = srow[h] + drow[h];
+        }
+    });
+    out
+}
+
+/// Quantized SDDMM-add with **on-the-fly dequantization**: random accesses
+/// hit the 1-byte quantized tensors; each element is dequantized with its
+/// own scale before the add (scales differ, so no direct quantized add).
+pub fn qsddmm_add(coo: &Coo, qs: &QTensor, qd: &QTensor) -> Dense<f32> {
+    let heads = qs.data.cols();
+    let m = coo.num_edges();
+    let (ss, sd) = (qs.scale, qd.scale);
+    let mut out = Dense::zeros(&[m, heads]);
+    par::for_each_chunk(out.data_mut(), heads, |e, erow| {
+        let srow = qs.data.row(coo.src[e] as usize);
+        let drow = qd.data.row(coo.dst[e] as usize);
+        for h in 0..heads {
+            erow[h] = srow[h] as f32 * ss + drow[h] as f32 * sd;
+        }
+    });
+    out
+}
+
+/// FP32 SDDMM-dot: `out[e,h] = Σ_d A[dst(e),(h,d)] · B[src(e),(h,d)]`.
+///
+/// This is the attention gradient `∂α = G ⊙ (∂H^(l) · H'ᵀ)` of Fig. 1b
+/// step 5: `a` is indexed by the edge's destination, `b` by its source.
+pub fn sddmm_dot(coo: &Coo, a: &Dense<f32>, b: &Dense<f32>, heads: usize) -> Dense<f32> {
+    let hd = a.cols();
+    assert_eq!(b.cols(), hd);
+    let d = hd / heads;
+    let m = coo.num_edges();
+    let mut out = Dense::zeros(&[m, heads]);
+    par::for_each_chunk(out.data_mut(), heads, |e, erow| {
+        let arow = a.row(coo.dst[e] as usize);
+        let brow = b.row(coo.src[e] as usize);
+        for h in 0..heads {
+            let base = h * d;
+            let mut acc = 0.0f32;
+            for dd in 0..d {
+                acc += arow[base + dd] * brow[base + dd];
+            }
+            erow[h] = acc;
+        }
+    });
+    out
+}
+
+/// Quantized SDDMM-dot computed **directly on quantized values**: INT8
+/// products accumulate in i32 and one fused `s_a·s_b` dequantizes the edge
+/// scalar — multiplication commutes with the scale, so no per-element
+/// dequantization is needed (paper §3.3's `∂α[e0] ≈ (s_0·s_1)·(∂H_q·H'_q)`).
+pub fn qsddmm_dot(coo: &Coo, qa: &QTensor, qb: &QTensor, heads: usize) -> Dense<f32> {
+    let hd = qa.data.cols();
+    let d = hd / heads;
+    let m = coo.num_edges();
+    let deq = qa.scale * qb.scale;
+    let mut out = Dense::zeros(&[m, heads]);
+    par::for_each_chunk(out.data_mut(), heads, |e, erow| {
+        let arow = qa.data.row(coo.dst[e] as usize);
+        let brow = qb.data.row(coo.src[e] as usize);
+        for h in 0..heads {
+            let base = h * d;
+            let mut acc = 0i32;
+            for dd in 0..d {
+                acc += arow[base + dd] as i32 * brow[base + dd] as i32;
+            }
+            erow[h] = acc as f32 * deq;
+        }
+    });
+    out
+}
+
+/// Broadcast a per-destination value onto every in-edge:
+/// `out[e,h] = M[dst(e),h]` — the `E' = G ⊙ (1 · M'ᵀ)` SDDMM of Fig. 1a
+/// step 4 that assigns each softmax denominator back to its edges.
+pub fn sddmm_broadcast_dst(coo: &Coo, m: &Dense<f32>) -> Dense<f32> {
+    let heads = m.cols();
+    let e_cnt = coo.num_edges();
+    let mut out = Dense::zeros(&[e_cnt, heads]);
+    par::for_each_chunk(out.data_mut(), heads, |e, erow| {
+        erow.copy_from_slice(m.row(coo.dst[e] as usize));
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{erdos_renyi, random_features};
+    use crate::quant::{quantize, Rounding};
+
+    fn toy() -> Coo {
+        Coo::new(4, vec![1, 3, 1, 0, 2], vec![0, 1, 2, 3, 3])
+    }
+
+    #[test]
+    fn add_matches_paper_example() {
+        // Paper step 3: e3 connects v0->v3: S[v0] + D[v3] = [1.20,-0.19] +
+        // [0.20,0.05] = [1.40,-0.14].
+        let s = Dense::from_vec(
+            &[4, 2],
+            vec![1.20, -0.19, 0.77, -0.62, 1.39, 0.25, 0.24, 0.09],
+        );
+        let d = Dense::from_vec(
+            &[4, 2],
+            vec![0.89, 0.48, 0.86, -0.26, 1.11, 0.27, 0.20, 0.05],
+        );
+        let e = sddmm_add(&toy(), &s, &d);
+        assert!((e.at(3, 0) - 1.40).abs() < 1e-5);
+        assert!((e.at(3, 1) - -0.14).abs() < 1e-5);
+    }
+
+    #[test]
+    fn dot_matches_manual() {
+        // ∂α[e0]: e0 is 1->0, so dot(a[dst=0], b[src=1]) per head.
+        let coo = toy();
+        let a = random_features(4, 2 * 3, 1);
+        let b = random_features(4, 2 * 3, 2);
+        let out = sddmm_dot(&coo, &a, &b, 2);
+        let mut want = 0.0;
+        for dd in 0..3 {
+            want += a.at(0, dd) * b.at(1, dd);
+        }
+        assert!((out.at(0, 0) - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn qadd_dequantizes_with_distinct_scales() {
+        // Construct S and D with very different ranges so their scales
+        // differ by ~100×; the on-the-fly dequantization must still land
+        // near the FP32 result.
+        let coo = erdos_renyi(30, 100, 3);
+        let mut s = random_features(30, 4, 4);
+        s.scale(100.0);
+        let d = random_features(30, 4, 5);
+        let exact = sddmm_add(&coo, &s, &d);
+        let qs = quantize(&s, 8, Rounding::Nearest);
+        let qd = quantize(&d, 8, Rounding::Nearest);
+        assert!(qs.scale > 50.0 * qd.scale, "scales must differ for this test");
+        let approx = qsddmm_add(&coo, &qs, &qd);
+        let rel = approx.max_abs_diff(&exact) / exact.abs_max();
+        assert!(rel < 0.02, "rel {rel}");
+    }
+
+    #[test]
+    fn qdot_close_to_fp32() {
+        let coo = erdos_renyi(40, 200, 6);
+        let a = random_features(40, 4 * 8, 7);
+        let b = random_features(40, 4 * 8, 8);
+        let exact = sddmm_dot(&coo, &a, &b, 4);
+        let qa = quantize(&a, 8, Rounding::Nearest);
+        let qb = quantize(&b, 8, Rounding::Nearest);
+        let approx = qsddmm_dot(&coo, &qa, &qb, 4);
+        let rel = approx.max_abs_diff(&exact) / exact.abs_max().max(1e-6);
+        assert!(rel < 0.05, "rel {rel}");
+    }
+
+    #[test]
+    fn broadcast_dst_assigns_denominators() {
+        let coo = toy();
+        let m = Dense::from_vec(&[4, 1], vec![10.0, 20.0, 30.0, 40.0]);
+        let e = sddmm_broadcast_dst(&coo, &m);
+        // e3 and e4 both target v3.
+        assert_eq!(e.at(3, 0), 40.0);
+        assert_eq!(e.at(4, 0), 40.0);
+        assert_eq!(e.at(0, 0), 10.0); // e0 -> v0
+    }
+
+    #[test]
+    fn int4_dot_within_coarse_tolerance() {
+        let coo = erdos_renyi(20, 80, 9);
+        let a = random_features(20, 16, 10);
+        let b = random_features(20, 16, 11);
+        let exact = sddmm_dot(&coo, &a, &b, 1);
+        let qa = quantize(&a, 4, Rounding::Nearest);
+        let qb = quantize(&b, 4, Rounding::Nearest);
+        let approx = qsddmm_dot(&coo, &qa, &qb, 1);
+        let rel = approx.max_abs_diff(&exact) / exact.abs_max().max(1e-6);
+        assert!(rel < 0.5, "int4 rel {rel}");
+    }
+
+    #[test]
+    fn empty_graph_yields_empty_edge_features() {
+        let coo = Coo::new(3, vec![], vec![]);
+        let s = random_features(3, 2, 12);
+        let out = sddmm_add(&coo, &s, &s);
+        assert_eq!(out.rows(), 0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Edge softmax and LeakyReLU, kept in **full precision** per the paper's
+//! accuracy rule (§3.2, Eq. 7/8): the exponential amplifies any quantization
+//! error on its inputs by `exp(e0 - e1)`, so the layer feeding Softmax — and
+//! the softmax itself — stay FP32. (The "Test1" ablation of Fig. 7 is what
+//! happens when this rule is violated; see `repro::fig7`.)
+
+use crate::graph::Csr;
+use crate::tensor::Dense;
+use crate::util::par;
+
+/// Per-destination softmax over in-edge logits (Fig. 1a step 4).
+///
+/// `logits: [E, H]` grouped by the CSR's destination rows → `α: [E, H]`,
+/// numerically stabilised by the per-segment max.
+pub fn edge_softmax(csr: &Csr, logits: &Dense<f32>) -> Dense<f32> {
+    let heads = logits.cols();
+    let mut out = Dense::zeros(&[logits.rows(), heads]);
+    // Safety: rows of `out` touched by different v are disjoint because each
+    // edge id appears exactly once in the CSR. We collect per-node edge sets
+    // first, then scatter sequentially per node (parallel over nodes via
+    // unsafe shared pointer is avoidable: compute per-node then write).
+    let results: Vec<(usize, Vec<f32>)> = par::map_range(csr.num_nodes, |v| {
+            let (_, eids) = csr.row(v);
+            let mut vals = vec![0.0f32; eids.len() * heads];
+            for h in 0..heads {
+                let mut maxv = f32::NEG_INFINITY;
+                for &e in eids {
+                    maxv = maxv.max(logits.at(e as usize, h));
+                }
+                let mut denom = 0.0f32;
+                for (k, &e) in eids.iter().enumerate() {
+                    let x = (logits.at(e as usize, h) - maxv).exp();
+                    vals[k * heads + h] = x;
+                    denom += x;
+                }
+                if denom > 0.0 {
+                    for k in 0..eids.len() {
+                        vals[k * heads + h] /= denom;
+                    }
+                }
+            }
+            (v, vals)
+        });
+    for (v, vals) in results {
+        let (_, eids) = csr.row(v);
+        for (k, &e) in eids.iter().enumerate() {
+            out.row_mut(e as usize).copy_from_slice(&vals[k * heads..(k + 1) * heads]);
+        }
+    }
+    out
+}
+
+/// Backward of [`edge_softmax`]: given `α` and `∂α`, returns `∂logits`.
+///
+/// Per segment (destination node, head): `∂x_i = α_i (∂α_i - Σ_j α_j ∂α_j)`.
+pub fn edge_softmax_backward(csr: &Csr, alpha: &Dense<f32>, grad_alpha: &Dense<f32>) -> Dense<f32> {
+    let heads = alpha.cols();
+    let mut out = Dense::zeros(&[alpha.rows(), heads]);
+    let results: Vec<(usize, Vec<f32>)> = par::map_range(csr.num_nodes, |v| {
+            let (_, eids) = csr.row(v);
+            let mut vals = vec![0.0f32; eids.len() * heads];
+            for h in 0..heads {
+                let mut dot = 0.0f32;
+                for &e in eids {
+                    dot += alpha.at(e as usize, h) * grad_alpha.at(e as usize, h);
+                }
+                for (k, &e) in eids.iter().enumerate() {
+                    let a = alpha.at(e as usize, h);
+                    let g = grad_alpha.at(e as usize, h);
+                    vals[k * heads + h] = a * (g - dot);
+                }
+            }
+            (v, vals)
+        });
+    for (v, vals) in results {
+        let (_, eids) = csr.row(v);
+        for (k, &e) in eids.iter().enumerate() {
+            out.row_mut(e as usize).copy_from_slice(&vals[k * heads..(k + 1) * heads]);
+        }
+    }
+    out
+}
+
+/// Elementwise LeakyReLU (paper uses it on attention logits, Fig. 1a step 3).
+pub fn leaky_relu(x: &Dense<f32>, slope: f32) -> Dense<f32> {
+    x.map(|v| if v >= 0.0 { v } else { slope * v })
+}
+
+/// Backward of LeakyReLU: `∂x = ∂y · (x >= 0 ? 1 : slope)`.
+pub fn leaky_relu_backward(x: &Dense<f32>, grad_y: &Dense<f32>, slope: f32) -> Dense<f32> {
+    assert_eq!(x.shape(), grad_y.shape());
+    let mut out = grad_y.clone();
+    for (o, &xi) in out.data_mut().iter_mut().zip(x.data().iter()) {
+        if xi < 0.0 {
+            *o *= slope;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{erdos_renyi, random_features};
+    use crate::graph::Coo;
+
+    fn toy_csr() -> Csr {
+        Csr::from_coo(&Coo::new(4, vec![1, 3, 1, 0, 2], vec![0, 1, 2, 3, 3]))
+    }
+
+    #[test]
+    fn softmax_matches_paper_attention_scores() {
+        // Paper step 4: v3's in-edges e3, e4 with logits [1.40, 0] and
+        // [0.86, 0.14] → α[e3] = [0.63, 0.46], α[e4] = [0.37, 0.54].
+        let csr = toy_csr();
+        let logits = Dense::from_vec(
+            &[5, 2],
+            vec![
+                0.0, 0.0, // e0 (sole in-edge of v0)
+                0.0, 0.0, // e1
+                0.0, 0.0, // e2
+                1.40, 0.0, // e3
+                0.86, 0.14, // e4
+            ],
+        );
+        let a = edge_softmax(&csr, &logits);
+        assert!((a.at(3, 0) - 0.63).abs() < 0.01, "{}", a.at(3, 0));
+        assert!((a.at(4, 0) - 0.37).abs() < 0.01);
+        assert!((a.at(3, 1) - 0.46).abs() < 0.01);
+        assert!((a.at(4, 1) - 0.54).abs() < 0.01);
+        // Single-in-edge nodes get α = 1.
+        assert!((a.at(0, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_per_destination() {
+        let g = erdos_renyi(30, 200, 1);
+        let csr = Csr::from_coo(&g);
+        let logits = random_features(200, 3, 2);
+        let a = edge_softmax(&csr, &logits);
+        for v in 0..30 {
+            let (_, eids) = csr.row(v);
+            if eids.is_empty() {
+                continue;
+            }
+            for h in 0..3 {
+                let s: f32 = eids.iter().map(|&e| a.at(e as usize, h)).sum();
+                assert!((s - 1.0).abs() < 1e-4, "v={v} h={h} sum={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_invariant_to_shift() {
+        let csr = toy_csr();
+        let l1 = random_features(5, 2, 3);
+        let mut l2 = l1.clone();
+        for v in l2.data_mut() {
+            *v += 100.0;
+        }
+        let a1 = edge_softmax(&csr, &l1);
+        let a2 = edge_softmax(&csr, &l2);
+        assert!(a1.max_abs_diff(&a2) < 1e-4);
+    }
+
+    #[test]
+    fn softmax_backward_matches_finite_difference() {
+        let csr = toy_csr();
+        let logits = random_features(5, 2, 4);
+        let upstream = random_features(5, 2, 5);
+        let grad = {
+            let a = edge_softmax(&csr, &logits);
+            edge_softmax_backward(&csr, &a, &upstream)
+        };
+        // Finite differences on a few coordinates.
+        let eps = 1e-3f32;
+        for &(e, h) in &[(0usize, 0usize), (3, 0), (4, 1)] {
+            let mut lp = logits.clone();
+            lp.set(e, h, logits.at(e, h) + eps);
+            let mut lm = logits.clone();
+            lm.set(e, h, logits.at(e, h) - eps);
+            let f = |l: &Dense<f32>| -> f32 {
+                let a = edge_softmax(&csr, l);
+                a.data().iter().zip(upstream.data().iter()).map(|(x, u)| x * u).sum()
+            };
+            let fd = (f(&lp) - f(&lm)) / (2.0 * eps);
+            assert!(
+                (fd - grad.at(e, h)).abs() < 2e-2,
+                "e={e} h={h}: fd={fd} analytic={}",
+                grad.at(e, h)
+            );
+        }
+    }
+
+    #[test]
+    fn leaky_relu_forward_backward() {
+        let x = Dense::from_vec(&[4], vec![-2.0f32, -0.5, 0.0, 3.0]);
+        let y = leaky_relu(&x, 0.01);
+        assert_eq!(y.data(), &[-0.02, -0.005, 0.0, 3.0]);
+        let g = Dense::from_vec(&[4], vec![1.0f32; 4]);
+        let dx = leaky_relu_backward(&x, &g, 0.01);
+        assert_eq!(dx.data(), &[0.01, 0.01, 1.0, 1.0]);
+    }
+}

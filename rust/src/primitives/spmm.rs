@@ -1,0 +1,284 @@
+//! SPMM variants (paper §3.3): the DGL-shaped three-matrix kernel, the
+//! cuSPARSE-shaped two-matrix kernel, the incidence-matrix reformulation,
+//! the per-head split, and the quantized edge-weighted aggregation.
+//!
+//! Shapes follow the paper's GAT walkthrough (Fig. 1): node features are
+//! `[N, H*D]` (H heads of width D), edge features are `[E, H]` (one scalar
+//! per head per edge).
+
+use crate::graph::{Csr, Incidence};
+use crate::quant::QTensor;
+use crate::tensor::Dense;
+use crate::util::par;
+
+/// Three-matrix SPMM, DGL-shaped: `out[v] = Σ_{e=(u→v)} α[e,h] · H[u,(h,d)]`.
+///
+/// This is forward step 5 of Fig. 1a (and, on the reversed CSR, backward
+/// step 4). `alpha: [E, H]`, `h: [N, H*D]` → `[N, H*D]`.
+pub fn spmm_edge_weighted(csr: &Csr, alpha: &Dense<f32>, h: &Dense<f32>, heads: usize) -> Dense<f32> {
+    let n = csr.num_nodes;
+    let hd = h.cols();
+    assert_eq!(alpha.cols(), heads, "alpha must be [E, heads]");
+    assert_eq!(alpha.rows(), csr.num_edges);
+    assert_eq!(hd % heads, 0, "feature dim {hd} not divisible by heads {heads}");
+    let d = hd / heads;
+    let mut out = Dense::zeros(&[n, hd]);
+    par::for_each_chunk(out.data_mut(), hd, |v, orow| {
+        let (srcs, eids) = csr.row(v);
+        for (&u, &e) in srcs.iter().zip(eids.iter()) {
+            let hrow = h.row(u as usize);
+            let arow = alpha.row(e as usize);
+            for hh in 0..heads {
+                let a = arow[hh];
+                let base = hh * d;
+                for dd in 0..d {
+                    orow[base + dd] += a * hrow[base + dd];
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Quantized edge-weighted SPMM: both the edge weights and the node
+/// features arrive as INT8 tensors (quantized once, sequentially, by a
+/// dedicated pass — paper §3.3 argues against on-the-fly quantization for
+/// sparse primitives). The random accesses then touch 1-byte instead of
+/// 4-byte elements; accumulation is i32; a single fused `s_α·s_h` multiply
+/// dequantizes the output.
+pub fn qspmm_edge_weighted(csr: &Csr, qalpha: &QTensor, qh: &QTensor, heads: usize) -> Dense<f32> {
+    let n = csr.num_nodes;
+    let hd = qh.data.cols();
+    let d = hd / heads;
+    let deq = qalpha.scale * qh.scale;
+    let mut out = Dense::zeros(&[n, hd]);
+    par::for_each_chunk(out.data_mut(), hd, |v, orow| {
+        let (srcs, eids) = csr.row(v);
+        let mut acc = vec![0i32; hd];
+        for (&u, &e) in srcs.iter().zip(eids.iter()) {
+            let hrow = qh.data.row(u as usize);
+            let arow = qalpha.data.row(e as usize);
+            for hh in 0..heads {
+                let a = arow[hh] as i32;
+                let base = hh * d;
+                for dd in 0..d {
+                    acc[base + dd] += a * hrow[base + dd] as i32;
+                }
+            }
+        }
+        for (o, &v) in orow.iter_mut().zip(acc.iter()) {
+            *o = v as f32 * deq;
+        }
+    });
+    out
+}
+
+/// Two-matrix CSR SPMM, cuSPARSE-shaped: `out = A · X` where `A`'s stored
+/// values are `values[edge_id]` (a single scalar per edge, no heads).
+pub fn spmm_csr_values(csr: &Csr, values: &[f32], x: &Dense<f32>) -> Dense<f32> {
+    assert_eq!(values.len(), csr.num_edges);
+    let n = csr.num_nodes;
+    let f = x.cols();
+    let mut out = Dense::zeros(&[n, f]);
+    par::for_each_chunk(out.data_mut(), f, |v, orow| {
+        let (srcs, eids) = csr.row(v);
+        for (&u, &e) in srcs.iter().zip(eids.iter()) {
+            let w = values[e as usize];
+            let xrow = x.row(u as usize);
+            for j in 0..f {
+                orow[j] += w * xrow[j];
+            }
+        }
+    });
+    out
+}
+
+/// The paper's **per-head split** (Fig. 6a): a three-matrix SPMM with `H`
+/// heads becomes `H` two-matrix cuSPARSE SPMMs, one per head. Returns the
+/// same `[N, H*D]` result as [`spmm_edge_weighted`] — the adaptive policy
+/// (see `coordinator::adaptive`) decides which to launch.
+pub fn spmm_per_head(csr: &Csr, alpha: &Dense<f32>, h: &Dense<f32>, heads: usize) -> Dense<f32> {
+    let n = csr.num_nodes;
+    let hd = h.cols();
+    let d = hd / heads;
+    let mut out = Dense::zeros(&[n, hd]);
+    for hh in 0..heads {
+        // Slice head hh of alpha and h into dense temporaries (the kernel
+        // launch boundary of the cuSPARSE transform).
+        let values: Vec<f32> = (0..csr.num_edges).map(|e| alpha.at(e, hh)).collect();
+        let mut xh = Dense::zeros(&[n, d]);
+        for v in 0..n {
+            xh.row_mut(v).copy_from_slice(&h.row(v)[hh * d..(hh + 1) * d]);
+        }
+        let oh = spmm_csr_values(csr, &values, &xh);
+        for v in 0..n {
+            out.row_mut(v)[hh * d..(hh + 1) * d].copy_from_slice(oh.row(v));
+        }
+    }
+    out
+}
+
+/// DGL-shaped **three-matrix** edge aggregation (paper Fig. 5a): computes
+/// `out[v] = Σ_{e incident to v} edge_feat[e]` by multiplying graph ×
+/// edge-features × an all-ones node-feature matrix. The redundant ones
+/// matrix is real and really accessed — this is the baseline whose waste
+/// the incidence formulation removes.
+pub fn spmm_edge_aggregate_3mat(csr: &Csr, edge_feat: &Dense<f32>) -> Dense<f32> {
+    let n = csr.num_nodes;
+    let f = edge_feat.cols();
+    // The all-"1" node feature matrix DGL allocates (paper Fig. 5a).
+    let ones = Dense::from_vec(&[n, f], vec![1.0f32; n * f]);
+    let mut out = Dense::zeros(&[n, f]);
+    par::for_each_chunk(out.data_mut(), f, |v, orow| {
+        let (srcs, eids) = csr.row(v);
+        for (&u, &e) in srcs.iter().zip(eids.iter()) {
+            let erow = edge_feat.row(e as usize);
+            let onerow = ones.row(u as usize); // the wasted random access
+            for j in 0..f {
+                orow[j] += erow[j] * onerow[j];
+            }
+        }
+    });
+    out
+}
+
+/// **Incidence-matrix SPMM** (paper Fig. 5b): the same edge aggregation as
+/// a two-matrix product `incidence × edge_feat`. A node's incident edge ids
+/// are contiguous, so the walk is near-sequential over `edge_feat` once the
+/// edge ids were grouped — the Table 2 memory-throughput win.
+pub fn incidence_spmm(inc: &Incidence, edge_feat: &Dense<f32>) -> Dense<f32> {
+    assert_eq!(edge_feat.rows(), inc.num_edges);
+    let f = edge_feat.cols();
+    let mut out = Dense::zeros(&[inc.num_nodes, f]);
+    par::for_each_chunk(out.data_mut(), f, |v, orow| {
+        for &e in inc.row(v) {
+            let erow = edge_feat.row(e as usize);
+            for j in 0..f {
+                orow[j] += erow[j];
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{erdos_renyi, random_features};
+    use crate::graph::Coo;
+    use crate::quant::{quantize, Rounding};
+
+    fn toy() -> (Coo, Csr) {
+        // Paper Fig. 1: e0: 1->0, e1: 3->1, e2: 1->2, e3: 0->3, e4: 2->3
+        let coo = Coo::new(4, vec![1, 3, 1, 0, 2], vec![0, 1, 2, 3, 3]);
+        let csr = Csr::from_coo(&coo);
+        (coo, csr)
+    }
+
+    #[test]
+    fn edge_weighted_matches_paper_example() {
+        // Paper step 5: H[v3] = α[e3]·H'[v0] + α[e4]·H'[v2].
+        let (_, csr) = toy();
+        let heads = 2;
+        // H': [4, 2*2] rows v0..v3
+        let h = Dense::from_vec(
+            &[4, 4],
+            vec![
+                0.59, 0.73, 0.51, -0.65, // v0
+                0.76, 0.73, 0.79, -1.07, // v1
+                1.08, 1.19, -0.04, 0.57, // v2
+                0.28, 0.05, -0.22, 0.30, // v3
+            ],
+        );
+        let alpha = Dense::from_vec(
+            &[5, 2],
+            vec![
+                1.0, 1.0, // e0
+                1.0, 1.0, // e1
+                1.0, 1.0, // e2
+                0.63, 0.46, // e3
+                0.37, 0.54, // e4
+            ],
+        );
+        let out = spmm_edge_weighted(&csr, &alpha, &h, heads);
+        // v3 head0: 0.63*[0.59,0.73] + 0.37*[1.08,1.19] = [0.7713, 0.9002]
+        assert!((out.at(3, 0) - (0.63 * 0.59 + 0.37 * 1.08)).abs() < 1e-5);
+        assert!((out.at(3, 1) - (0.63 * 0.73 + 0.37 * 1.19)).abs() < 1e-5);
+        // v3 head1: 0.46*[0.51,-0.65] + 0.54*[-0.04,0.57]
+        assert!((out.at(3, 2) - (0.46 * 0.51 + 0.54 * -0.04)).abs() < 1e-5);
+        assert!((out.at(3, 3) - (0.46 * -0.65 + 0.54 * 0.57)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn per_head_split_equals_fused() {
+        let g = erdos_renyi(60, 400, 1);
+        let csr = Csr::from_coo(&g);
+        let heads = 4;
+        let alpha = random_features(400, heads, 2);
+        let h = random_features(60, heads * 8, 3);
+        let fused = spmm_edge_weighted(&csr, &alpha, &h, heads);
+        let split = spmm_per_head(&csr, &alpha, &h, heads);
+        assert!(fused.max_abs_diff(&split) < 1e-4);
+    }
+
+    #[test]
+    fn incidence_equals_3mat() {
+        let g = erdos_renyi(50, 300, 4);
+        let csr = Csr::from_coo(&g);
+        let inc = Incidence::from_csr(&csr);
+        let ef = random_features(300, 8, 5);
+        let a = spmm_edge_aggregate_3mat(&csr, &ef);
+        let b = incidence_spmm(&inc, &ef);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn incidence_matches_paper_gradient_example() {
+        // ∂v3 = ∂e3 + ∂e4 (paper Fig. 5).
+        let (coo, _) = toy();
+        let inc = Incidence::in_edges(&coo);
+        let ef = Dense::from_vec(&[5, 1], vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let out = incidence_spmm(&inc, &ef);
+        assert_eq!(out.at(3, 0), 9.0); // e3 + e4 = 4 + 5
+        assert_eq!(out.at(0, 0), 1.0); // e0
+    }
+
+    #[test]
+    fn quantized_spmm_close_to_fp32() {
+        let g = erdos_renyi(80, 600, 6);
+        let csr = Csr::from_coo(&g);
+        let heads = 2;
+        let alpha = random_features(600, heads, 7);
+        let h = random_features(80, heads * 16, 8);
+        let exact = spmm_edge_weighted(&csr, &alpha, &h, heads);
+        let qa = quantize(&alpha, 8, Rounding::Nearest);
+        let qh = quantize(&h, 8, Rounding::Nearest);
+        let approx = qspmm_edge_weighted(&csr, &qa, &qh, heads);
+        let rel = approx.max_abs_diff(&exact) / exact.abs_max().max(1e-6);
+        assert!(rel < 0.1, "rel {rel}");
+    }
+
+    #[test]
+    fn csr_values_matches_edge_weighted_single_head() {
+        let g = erdos_renyi(40, 200, 9);
+        let csr = Csr::from_coo(&g);
+        let alpha = random_features(200, 1, 10);
+        let h = random_features(40, 8, 11);
+        let a = spmm_edge_weighted(&csr, &alpha, &h, 1);
+        let values: Vec<f32> = alpha.data().to_vec();
+        let b = spmm_csr_values(&csr, &values, &h);
+        assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    fn isolated_nodes_get_zero_rows() {
+        // Node 2 has no in-edges.
+        let coo = Coo::new(3, vec![0], vec![1]);
+        let csr = Csr::from_coo(&coo);
+        let alpha = Dense::from_vec(&[1, 1], vec![1.0]);
+        let h = random_features(3, 4, 12);
+        let out = spmm_edge_weighted(&csr, &alpha, &h, 1);
+        assert!(out.row(2).iter().all(|&v| v == 0.0));
+        assert!(out.row(0).iter().all(|&v| v == 0.0));
+    }
+}

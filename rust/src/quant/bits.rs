@@ -1,0 +1,102 @@
+//! Lightweight bit-derivation rule (paper §3.2, Fig. 2).
+//!
+//! Instead of training to convergence per candidate bit width, Tango
+//! quantizes the *first layer's output tensor in the first epoch* and picks
+//! the smallest bit count whose [`crate::quant::error_x`] stays under a
+//! dataset-independent threshold (0.3 in the paper, Fig. 2a). The rule is a
+//! lower bound: training can often recover from slightly lower bit counts.
+
+use crate::quant::error::error_x_quantized;
+use crate::quant::scheme::{quantize, Rounding};
+use crate::tensor::Dense;
+
+/// The paper's universal `Error_X` threshold (Fig. 2a).
+pub const DEFAULT_ERROR_TARGET: f32 = 0.3;
+
+/// Result of the bit-derivation sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitDerivation {
+    /// Smallest bit width meeting the target (8 if none smaller qualifies).
+    pub bits: u8,
+    /// `(bits, Error_X)` for every candidate evaluated — Fig. 2b's series.
+    pub sweep: Vec<(u8, f32)>,
+    /// The threshold used.
+    pub target: f32,
+}
+
+/// Derive the number of quantization bits for a representative activation
+/// tensor (the first layer's output in the first epoch).
+///
+/// Sweeps `B ∈ {2..=8}` with nearest rounding (the error metric measures the
+/// grid, not the rounding noise) and returns the smallest `B` with
+/// `Error_X ≤ target`, defaulting to 8 bits when even 8 misses the target —
+/// 8 is the widest width the INT8 compute path supports, and the paper
+/// observes training absorbs residual error.
+pub fn derive_bits(first_layer_out: &Dense<f32>, target: f32) -> BitDerivation {
+    let mut sweep = Vec::new();
+    let mut chosen: Option<u8> = None;
+    for bits in 2u8..=8 {
+        let q = quantize(first_layer_out, bits, Rounding::Nearest);
+        let e = error_x_quantized(first_layer_out, &q);
+        sweep.push((bits, e));
+        if chosen.is_none() && e <= target {
+            chosen = Some(bits);
+        }
+    }
+    BitDerivation { bits: chosen.unwrap_or(8), sweep, target }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smooth_tensor(n: usize) -> Dense<f32> {
+        // A well-spread activation-like tensor: low relative error at 8 bits.
+        Dense::from_vec(&[n], (0..n).map(|i| (i as f32 * 0.7).sin() + 1.5).collect())
+    }
+
+    #[test]
+    fn smooth_tensor_needs_few_bits() {
+        let d = derive_bits(&smooth_tensor(4096), DEFAULT_ERROR_TARGET);
+        assert!(d.bits <= 8);
+        assert_eq!(d.sweep.len(), 7);
+        // The sweep must cover 2..=8 in order.
+        assert_eq!(d.sweep.first().unwrap().0, 2);
+        assert_eq!(d.sweep.last().unwrap().0, 8);
+    }
+
+    #[test]
+    fn tighter_target_needs_at_least_as_many_bits() {
+        let x = smooth_tensor(4096);
+        let loose = derive_bits(&x, 0.5);
+        let tight = derive_bits(&x, 0.05);
+        assert!(tight.bits >= loose.bits, "{} vs {}", tight.bits, loose.bits);
+    }
+
+    #[test]
+    fn chosen_bits_meet_target() {
+        let x = smooth_tensor(4096);
+        let d = derive_bits(&x, DEFAULT_ERROR_TARGET);
+        let e = d.sweep.iter().find(|(b, _)| *b == d.bits).unwrap().1;
+        // Either the target is met, or we clamped to the 8-bit maximum.
+        assert!(e <= d.target || d.bits == 8);
+    }
+
+    #[test]
+    fn sweep_errors_decrease_with_bits() {
+        let x = smooth_tensor(4096);
+        let d = derive_bits(&x, DEFAULT_ERROR_TARGET);
+        for w in d.sweep.windows(2) {
+            assert!(w[0].1 >= w[1].1 - 1e-4, "sweep not monotone: {:?}", d.sweep);
+        }
+    }
+
+    #[test]
+    fn pathological_tensor_clamps_to_8() {
+        // Huge dynamic range: relative error stays high at every width.
+        let mut v = vec![1e-6f32; 1024];
+        v[0] = 1e6;
+        let d = derive_bits(&Dense::from_vec(&[1024], v), 0.001);
+        assert_eq!(d.bits, 8);
+    }
+}

@@ -1,0 +1,103 @@
+//! The relative quantization-error metric `Error_X` (paper Eq. 4).
+//!
+//! ```text
+//! Error_X = (1/N) * Σ | (X_i - X_i,Quant) / (X_i + X_i,Quant + ε) |
+//! ```
+//!
+//! where `X_i,Quant` is the *dequantized* grid value `X_i` rounds to. The
+//! metric is relative, hence comparable across tensors; its range is [0, 1]
+//! per element. Tango evaluates it once — on the output tensor of the first
+//! GNN layer in the first epoch — and picks the smallest bit count with
+//! `Error_X ≤ 0.3` (see [`crate::quant::derive_bits`]).
+
+use crate::quant::scheme::{dequantize, QTensor};
+use crate::tensor::Dense;
+
+/// The paper's ε (chosen as 0.0005) guarding the `X_i = X_i,Quant = 0` case.
+pub const EPSILON: f32 = 0.0005;
+
+/// `Error_X` between a full-precision tensor and its dequantized counterpart.
+///
+/// Panics if shapes differ.
+pub fn error_x(x: &Dense<f32>, x_deq: &Dense<f32>) -> f32 {
+    assert_eq!(x.shape(), x_deq.shape(), "Error_X needs same-shaped tensors");
+    if x.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for (&a, &b) in x.data().iter().zip(x_deq.data().iter()) {
+        acc += ((a - b) / (a + b + EPSILON)).abs() as f64;
+    }
+    (acc / x.len() as f64) as f32
+}
+
+/// Convenience: `Error_X` of a tensor against an already-quantized version.
+pub fn error_x_quantized(x: &Dense<f32>, q: &QTensor) -> f32 {
+    error_x(x, &dequantize(q))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::scheme::{quantize, Rounding};
+
+    #[test]
+    fn near_zero_error_for_well_represented_tensor() {
+        // Values on (or within half a step of) the 8-bit grid: Error_X must
+        // be tiny. ±2 hits ±127 exactly; ±1 lands within half a grid step.
+        let x = Dense::from_vec(&[4], vec![-2.0f32, -1.0, 1.0, 2.0]);
+        let q = quantize(&x, 8, Rounding::Nearest);
+        let e = error_x_quantized(&x, &q);
+        assert!(e < 5e-3, "e={e}");
+        // And a tensor built exactly on the grid has error 0.
+        let s = 2.0 / 127.0;
+        let grid = Dense::from_vec(&[3], vec![-127.0 * s, 64.0 * s, 127.0 * s]);
+        let qg = quantize(&grid, 8, Rounding::Nearest);
+        assert!(error_x_quantized(&grid, &qg) < 1e-6);
+    }
+
+    #[test]
+    fn error_grows_as_bits_shrink() {
+        // Monotone (up to noise): fewer bits, coarser grid, larger Error_X.
+        let x = Dense::from_vec(&[512], (0..512).map(|i| ((i * 37) % 101) as f32 / 101.0 - 0.5).collect());
+        let errs: Vec<f32> = [8u8, 6, 4, 2]
+            .iter()
+            .map(|&b| error_x_quantized(&x, &quantize(&x, b, Rounding::Nearest)))
+            .collect();
+        assert!(errs[0] < errs[1] && errs[1] < errs[2] && errs[2] < errs[3], "{errs:?}");
+    }
+
+    #[test]
+    fn identical_tensors_have_zero_error() {
+        let x = Dense::from_vec(&[3], vec![0.5f32, -0.25, 0.0]);
+        assert_eq!(error_x(&x, &x.clone()), 0.0);
+    }
+
+    #[test]
+    fn zero_zero_case_guarded_by_epsilon() {
+        // X_i = X_i,Quant = 0 must contribute 0, not NaN.
+        let x: Dense<f32> = Dense::zeros(&[8]);
+        let e = error_x(&x, &Dense::zeros(&[8]));
+        assert_eq!(e, 0.0);
+        assert!(e.is_finite());
+    }
+
+    #[test]
+    fn empty_tensor_is_zero_error() {
+        let x: Dense<f32> = Dense::zeros(&[0]);
+        assert_eq!(error_x(&x, &x.clone()), 0.0);
+    }
+
+    #[test]
+    fn metric_is_inductive_across_magnitudes() {
+        // The point of the relative form: the same *relative* perturbation
+        // yields (approximately) the same Error_X regardless of magnitude.
+        let small = Dense::from_vec(&[2], vec![0.1f32, 0.2]);
+        let small_p = Dense::from_vec(&[2], vec![0.101f32, 0.202]);
+        let large = Dense::from_vec(&[2], vec![100.0f32, 200.0]);
+        let large_p = Dense::from_vec(&[2], vec![101.0f32, 202.0]);
+        let es = error_x(&small, &small_p);
+        let el = error_x(&large, &large_p);
+        assert!((es - el).abs() < 2e-3, "es={es} el={el}");
+    }
+}

@@ -1,0 +1,29 @@
+//! Quantization substrate (paper §2.3 and §3.2).
+//!
+//! Tango uses **symmetric, tensor-level-granularity, dynamic** quantization:
+//!
+//! - *symmetric*: the clipping range is `[-absmax, +absmax]`, so the zero
+//!   point `Z` is 0 and (de)quantization is a single multiply;
+//! - *tensor-level*: one scaling factor `s` per tensor (one reduction, and
+//!   the scale algebra `s0·s1` composes across quantized multiplies);
+//! - *dynamic*: `s` is recomputed every iteration from the live values.
+//!
+//! The module carries the paper's accuracy machinery:
+//!
+//! - [`rng::Xoshiro256pp`] — the xoshiro256++ PRNG the paper uses for its
+//!   GPU stochastic rounding (state in registers; the "cuRAND-like"
+//!   memory-state variant [`rng::MemoryStateRng`] exists for the §3.2
+//!   comparison bench);
+//! - [`Rounding`] — nearest vs stochastic rounding (Eq. 3);
+//! - [`quantize`] / [`QTensor`] — symmetric quantize/dequantize (Eq. 1/2);
+//! - [`error_x`] — the relative quantization-error metric (Eq. 4);
+//! - [`derive_bits`] — the lightweight bit-derivation rule (Fig. 2).
+
+mod bits;
+mod error;
+pub mod rng;
+mod scheme;
+
+pub use bits::{derive_bits, BitDerivation, DEFAULT_ERROR_TARGET};
+pub use error::{error_x, error_x_quantized, EPSILON};
+pub use scheme::{dequantize, quantize, quantize_with_scale, scale_for_bits, QTensor, Rounding};

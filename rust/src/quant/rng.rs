@@ -1,0 +1,202 @@
+//! Pseudo-random number generation for stochastic rounding.
+//!
+//! The paper implements a GPU stochastic-rounding PRNG on top of
+//! **xoshiro256++** [Blackman & Vigna 2021] and reports ~20× over cuRAND,
+//! attributing the win to keeping generator state in *registers* instead of
+//! global memory (cuRAND round-trips its state through global memory on
+//! every draw).
+//!
+//! We reproduce both designs on the CPU substrate:
+//!
+//! - [`Xoshiro256pp`]: state lives in the struct; with the generator kept in
+//!   a local, the optimizer keeps the four u64 words in registers across the
+//!   quantization loop — the paper's "register-resident state".
+//! - [`MemoryStateRng`]: the same xoshiro core, but the state is forced
+//!   through a heap slab with `read_volatile`/`write_volatile` on every
+//!   draw — the cuRAND-shaped baseline for `benches/quantize.rs`.
+
+/// splitmix64, the recommended seeder for xoshiro state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[inline(always)]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+/// xoshiro256++ with struct-resident ("register") state.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via splitmix64 so that any u64 seed (including 0) yields a
+    /// well-mixed non-zero state.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Xoshiro256pp {
+            s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)],
+        }
+    }
+
+    /// Next 64 random bits.
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = rotl(s[0].wrapping_add(s[3]), 23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = rotl(s[3], 45);
+        result
+    }
+
+    /// Uniform f32 in `[0, 1)` from the top 24 bits.
+    #[inline(always)]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// The `jump()` function: advances the stream by 2^128 draws, giving
+    /// independent sub-streams for parallel workers.
+    pub fn jump(&mut self) -> Xoshiro256pp {
+        const JUMP: [u64; 4] = [0x180EC6D33CFD0ABA, 0xD5A61266F0C9392C, 0xA9582618E03FC9AA, 0x39ABDC4529B1661C];
+        let stream = self.clone();
+        let mut s = [0u64; 4];
+        for &j in JUMP.iter() {
+            for b in 0..64 {
+                if (j >> b) & 1 == 1 {
+                    s[0] ^= self.s[0];
+                    s[1] ^= self.s[1];
+                    s[2] ^= self.s[2];
+                    s[3] ^= self.s[3];
+                }
+                self.next_u64();
+            }
+        }
+        self.s = s;
+        stream
+    }
+}
+
+/// The cuRAND-shaped baseline: identical xoshiro256++ core, but generator
+/// state is loaded from and stored back to a heap slab around *every* draw,
+/// exactly the extra memory traffic cuRAND pays for keeping `curandState`
+/// in global memory.
+pub struct MemoryStateRng {
+    slab: Box<[u64; 4]>,
+}
+
+impl MemoryStateRng {
+    /// Seed identically to [`Xoshiro256pp`] so the two produce the same
+    /// stream (verified in tests) and differ only in state residency.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        MemoryStateRng {
+            slab: Box::new([
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ]),
+        }
+    }
+
+    /// Next 64 random bits, with the state round-tripped through memory.
+    #[inline(never)]
+    pub fn next_u64(&mut self) -> u64 {
+        // Volatile load: the "global memory read" of curandState.
+        let ptr = self.slab.as_mut_ptr();
+        let mut s = unsafe { std::ptr::read_volatile(ptr as *const [u64; 4]) };
+        let result = rotl(s[0].wrapping_add(s[3]), 23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = rotl(s[3], 45);
+        // Volatile store: the write-back.
+        unsafe { std::ptr::write_volatile(ptr as *mut [u64; 4], s) };
+        result
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Xoshiro256pp::new(42);
+        let mut b = Xoshiro256pp::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Xoshiro256pp::new(1);
+        let mut b = Xoshiro256pp::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn memory_state_matches_register_state_stream() {
+        let mut fast = Xoshiro256pp::new(7);
+        let mut slow = MemoryStateRng::new(7);
+        for _ in 0..1000 {
+            assert_eq!(fast.next_u64(), slow.next_u64());
+        }
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Xoshiro256pp::new(3);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn f32_mean_near_half() {
+        let mut r = Xoshiro256pp::new(9);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f32() as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn jump_streams_do_not_collide_immediately() {
+        let mut base = Xoshiro256pp::new(11);
+        let mut s1 = base.jump();
+        let mut s2 = base.jump();
+        let a: Vec<u64> = (0..16).map(|_| s1.next_u64()).collect();
+        let b: Vec<u64> = (0..16).map(|_| s2.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn splitmix_nonzero_state_for_zero_seed() {
+        let r = Xoshiro256pp::new(0);
+        assert!(r.s.iter().any(|&w| w != 0));
+    }
+}

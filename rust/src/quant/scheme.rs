@@ -1,0 +1,248 @@
+//! Symmetric tensor-level dynamic quantization (paper Eq. 1/2) with nearest
+//! or stochastic rounding (Eq. 3).
+
+use crate::quant::rng::Xoshiro256pp;
+use crate::tensor::Dense;
+
+/// Rounding mode for [`quantize`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rounding {
+    /// Round-to-nearest — the paper's "Test2" ablation; biased, and shown in
+    /// Fig. 7 to destabilise training on several datasets.
+    Nearest,
+    /// Stochastic rounding (Eq. 3): `floor(x)+1` with probability
+    /// `x - floor(x)`, else `floor(x)`. Unbiased: `E[q(x)] = x`.
+    /// Seeded per-call so training is reproducible.
+    Stochastic { seed: u64 },
+}
+
+/// A symmetric tensor-level quantized tensor.
+///
+/// Values live in `[-qmax, qmax]` with `qmax = 2^(bits-1) - 1` and
+/// dequantize as `x ≈ scale * q` (zero point is 0 by symmetry, paper §2.3).
+/// Sub-byte widths (INT4) are value-range-restricted but stored one per i8
+/// slot; the perf model charges the packed size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    /// Quantized payload.
+    pub data: Dense<i8>,
+    /// Scaling factor `s = absmax / qmax`.
+    pub scale: f32,
+    /// Bit width `B` (2..=8 on the CPU substrate).
+    pub bits: u8,
+}
+
+impl QTensor {
+    /// Largest representable quantized magnitude for this bit width.
+    pub fn qmax(&self) -> i32 {
+        qmax_for_bits(self.bits)
+    }
+
+    /// Shape of the payload.
+    pub fn shape(&self) -> &[usize] {
+        self.data.shape()
+    }
+
+    /// Payload bytes as stored on the CPU substrate (1 byte/element).
+    pub fn stored_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Payload bytes if packed at the nominal bit width (what a GPU/TPU
+    /// kernel would actually move; used by `perfmodel`).
+    pub fn packed_bytes(&self) -> usize {
+        (self.data.len() * self.bits as usize).div_ceil(8)
+    }
+
+    /// 2-D transpose of the quantized payload (scale is layout-invariant).
+    /// Lets cached quantized tensors feed the transposed backward GEMMs
+    /// (`∂W = Hᵀ·∂H'`) without requantization.
+    pub fn transpose2d(&self) -> QTensor {
+        QTensor { data: self.data.transpose2d(), scale: self.scale, bits: self.bits }
+    }
+}
+
+/// `2^(B-1) - 1`, the symmetric clip for `B`-bit signed quantization.
+#[inline]
+pub fn qmax_for_bits(bits: u8) -> i32 {
+    assert!((2..=8).contains(&bits), "bit width {bits} unsupported (2..=8)");
+    (1i32 << (bits - 1)) - 1
+}
+
+/// Dynamic symmetric scale for a tensor: `s = absmax / qmax`.
+///
+/// Returns a scale that maps the tensor's live range onto the `B`-bit grid;
+/// an all-zero tensor gets scale 1.0 so dequantization stays exact.
+pub fn scale_for_bits(x: &Dense<f32>, bits: u8) -> f32 {
+    let absmax = x.abs_max();
+    if absmax == 0.0 {
+        1.0
+    } else {
+        absmax / qmax_for_bits(bits) as f32
+    }
+}
+
+#[inline(always)]
+fn round_stochastic(x: f32, rng: &mut Xoshiro256pp) -> f32 {
+    let f = x.floor();
+    if rng.next_f32() < x - f {
+        f + 1.0
+    } else {
+        f
+    }
+}
+
+/// Quantize with a caller-provided scale (the on-the-fly path, where the
+/// scale came fused out of a previous primitive).
+pub fn quantize_with_scale(x: &Dense<f32>, scale: f32, bits: u8, rounding: Rounding) -> QTensor {
+    let qmax = qmax_for_bits(bits) as f32;
+    let inv = 1.0 / scale;
+    let data = match rounding {
+        Rounding::Nearest => x.map(|v| {
+            let q = (v * inv).round().clamp(-qmax, qmax);
+            q as i8
+        }),
+        Rounding::Stochastic { seed } => {
+            let mut rng = Xoshiro256pp::new(seed);
+            let mut out = Vec::with_capacity(x.len());
+            for &v in x.data() {
+                let q = round_stochastic(v * inv, &mut rng).clamp(-qmax, qmax);
+                out.push(q as i8);
+            }
+            Dense::from_vec(x.shape(), out)
+        }
+    };
+    QTensor { data, scale, bits }
+}
+
+/// Dynamic symmetric quantization (Eq. 1 with `Z = 0`): one abs-max
+/// reduction to derive `s`, then one elementwise pass to round.
+pub fn quantize(x: &Dense<f32>, bits: u8, rounding: Rounding) -> QTensor {
+    let scale = scale_for_bits(x, bits);
+    quantize_with_scale(x, scale, bits, rounding)
+}
+
+/// Dequantize (Eq. 2 with `Z = 0`): `x ≈ s * q`.
+pub fn dequantize(q: &QTensor) -> Dense<f32> {
+    let s = q.scale;
+    q.data.map(|v| v as f32 * s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linspace(n: usize, lo: f32, hi: f32) -> Dense<f32> {
+        let step = (hi - lo) / (n as f32 - 1.0);
+        Dense::from_vec(&[n], (0..n).map(|i| lo + i as f32 * step).collect())
+    }
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax_for_bits(8), 127);
+        assert_eq!(qmax_for_bits(4), 7);
+        assert_eq!(qmax_for_bits(2), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bits_over_8_unsupported() {
+        let _ = qmax_for_bits(9);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_nearest() {
+        // |x - deq(q(x))| <= s/2 for nearest rounding.
+        let x = linspace(1001, -3.0, 5.0);
+        let q = quantize(&x, 8, Rounding::Nearest);
+        let y = dequantize(&q);
+        let bound = q.scale / 2.0 + 1e-6;
+        for (a, b) in x.data().iter().zip(y.data().iter()) {
+            assert!((a - b).abs() <= bound, "{a} vs {b}, bound {bound}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_stochastic() {
+        // |x - deq(q(x))| <= s (one full grid step) for stochastic rounding.
+        let x = linspace(1001, -3.0, 5.0);
+        let q = quantize(&x, 8, Rounding::Stochastic { seed: 5 });
+        let y = dequantize(&q);
+        let bound = q.scale + 1e-6;
+        for (a, b) in x.data().iter().zip(y.data().iter()) {
+            assert!((a - b).abs() <= bound, "{a} vs {b}, bound {bound}");
+        }
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        // E[q(x)] = x: quantize the same value many times with different
+        // seeds; the mean dequantized value must approach the true value.
+        let v = 0.3712f32;
+        let x = Dense::from_vec(&[1], vec![v]);
+        let scale = 0.01f32;
+        let n = 20_000;
+        let mut acc = 0.0f64;
+        for seed in 0..n {
+            let q = quantize_with_scale(&x, scale, 8, Rounding::Stochastic { seed });
+            acc += dequantize(&q).data()[0] as f64;
+        }
+        let mean = acc / n as f64;
+        assert!(
+            (mean - v as f64).abs() < 3e-4,
+            "stochastic rounding biased: mean={mean} true={v}"
+        );
+    }
+
+    #[test]
+    fn nearest_rounding_is_biased_on_fractions() {
+        // The motivating failure: round-to-nearest of 0.3*s always lands on
+        // 0, losing the value entirely — stochastic keeps it in expectation.
+        let x = Dense::from_vec(&[1], vec![0.003f32]);
+        let q = quantize_with_scale(&x, 0.01, 8, Rounding::Nearest);
+        assert_eq!(q.data.data()[0], 0);
+    }
+
+    #[test]
+    fn symmetric_zero_point_preserves_zero() {
+        let x = Dense::from_vec(&[3], vec![-1.0f32, 0.0, 1.0]);
+        for rounding in [Rounding::Nearest, Rounding::Stochastic { seed: 1 }] {
+            let q = quantize(&x, 8, rounding);
+            assert_eq!(q.data.data()[1], 0, "zero must quantize to 0 (Z=0)");
+        }
+    }
+
+    #[test]
+    fn scale_uses_full_range() {
+        let x = Dense::from_vec(&[2], vec![-2.0f32, 1.0]);
+        let q = quantize(&x, 8, Rounding::Nearest);
+        // absmax = 2 -> scale = 2/127; -2 should hit -127 exactly.
+        assert_eq!(q.data.data()[0], -127);
+        assert!((q.scale - 2.0 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn all_zero_tensor_scale_is_one() {
+        let x: Dense<f32> = Dense::zeros(&[16]);
+        let q = quantize(&x, 8, Rounding::Nearest);
+        assert_eq!(q.scale, 1.0);
+        assert!(dequantize(&q).data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn int4_range_respected() {
+        let x = linspace(100, -1.0, 1.0);
+        let q = quantize(&x, 4, Rounding::Nearest);
+        assert!(q.data.data().iter().all(|&v| (-7..=7).contains(&(v as i32))));
+        assert_eq!(q.packed_bytes(), 50);
+        assert_eq!(q.stored_bytes(), 100);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let x = linspace(64, -1.0, 1.0);
+        let a = quantize(&x, 8, Rounding::Stochastic { seed: 77 });
+        let b = quantize(&x, 8, Rounding::Stochastic { seed: 77 });
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,79 @@
+//! Reproduction of every table and figure in the paper's evaluation
+//! (§4, Figs. 2 & 7–16, Tables 1–2). Each function regenerates one
+//! artefact as a markdown [`Table`]; `tango repro <id>` prints it and
+//! `tango repro all` prints the lot (EXPERIMENTS.md records a full run).
+//!
+//! Absolute numbers come from the CPU substrate and the analytical GPU
+//! model (DESIGN.md §Substitutions); the assertions of shape — who wins,
+//! by roughly what factor, where crossovers sit — are what the suite in
+//! `rust/tests/repro_shapes.rs` checks.
+
+mod accuracy;
+mod primitives_bench;
+mod speed;
+
+pub use accuracy::{fig2, fig7};
+pub use primitives_bench::{fig10, fig11, fig12, fig13, fig14, fig15, fig16, table2};
+pub use speed::{fig8, fig9, table1};
+
+use crate::metrics::Table;
+
+/// Effort knob for the training-based repros.
+#[derive(Debug, Clone, Copy)]
+pub struct ReproConfig {
+    /// Epochs for convergence/accuracy experiments.
+    pub epochs: usize,
+    /// Epochs for wall-clock speed experiments.
+    pub speed_epochs: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Quick mode: smaller datasets for smoke-testing the harness.
+    pub quick: bool,
+}
+
+impl Default for ReproConfig {
+    fn default() -> Self {
+        ReproConfig { epochs: 30, speed_epochs: 5, seed: 42, quick: false }
+    }
+}
+
+/// Run one experiment by id ("fig2".."fig16", "table1", "table2", "all").
+pub fn run(id: &str, cfg: &ReproConfig) -> crate::Result<Vec<Table>> {
+    let tables: Vec<Table> = match id {
+        "table1" => vec![table1(cfg)],
+        "fig2" => fig2(cfg),
+        "fig7" => fig7(cfg),
+        "fig8" => vec![fig8(cfg)],
+        "fig9" => vec![fig9(cfg)],
+        "fig10" => vec![fig10(cfg)],
+        "fig11" => fig11(cfg),
+        "fig12" => vec![fig12(cfg)],
+        "fig13" => fig13(cfg),
+        "table2" => vec![table2(cfg)],
+        "fig14" => vec![fig14(cfg)],
+        "fig15" => vec![fig15(cfg)],
+        "fig16" => fig16(cfg),
+        "all" => {
+            let mut all = Vec::new();
+            for id in [
+                "table1", "fig2", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
+                "table2", "fig14", "fig15", "fig16",
+            ] {
+                all.extend(run(id, cfg)?);
+            }
+            all
+        }
+        other => anyhow::bail!("unknown experiment id '{other}'"),
+    };
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("fig99", &ReproConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,363 @@
+//! Primitive-level figures: Fig. 10 (caching), Fig. 11/12 (GEMM), Fig. 13 /
+//! Table 2 / Fig. 14 (SPMM), Fig. 15 (SDDMM), Fig. 16 (bit widths).
+
+use super::ReproConfig;
+use crate::coordinator::adaptive::{modelled_costs, AdaptiveCosts};
+use crate::graph::datasets::{self, SPECS};
+use crate::graph::generators::random_features;
+use crate::graph::{Csr, Incidence};
+use crate::metrics::{bench_with_config, BenchConfig, Table, Traffic};
+use crate::perfmodel::{gemm_time, profile_ratios, sddmm_time, GemmKind, SparseDtype, A100, V100};
+use crate::primitives::{
+    gemm_f32, incidence_spmm, qgemm, qgemm_prequantized, qsddmm_add, qsddmm_dot, sddmm_add,
+    sddmm_dot, spmm_edge_aggregate_3mat, spmm_via_spmvs, spmm_edge_weighted, spmm_per_head,
+};
+use crate::quant::{quantize, Rounding};
+
+fn bench_cfg(cfg: &ReproConfig) -> BenchConfig {
+    if cfg.quick {
+        BenchConfig { warmup_secs: 0.01, measure_secs: 0.05, min_samples: 2 }
+    } else {
+        BenchConfig { warmup_secs: 0.1, measure_secs: 0.4, min_samples: 5 }
+    }
+}
+
+fn dataset_names(cfg: &ReproConfig) -> Vec<&'static str> {
+    if cfg.quick {
+        vec!["Pubmed"]
+    } else {
+        SPECS.iter().map(|s| s.name).collect()
+    }
+}
+
+fn scaled_nodes(cfg: &ReproConfig, name: &str) -> usize {
+    let n = datasets::spec(name).map(|s| s.num_nodes).unwrap_or(2000);
+    if cfg.quick {
+        n.min(2000)
+    } else {
+        n
+    }
+}
+
+/// Fig. 10: GEMM with freshly quantized inputs vs cached quantized inputs
+/// (the forward→backward reuse), D = 128 and 256.
+pub fn fig10(cfg: &ReproConfig) -> Table {
+    let mut t = Table::new(
+        "Fig. 10 — speedup from caching quantized tensors (qGEMM, measured)",
+        &["dataset", "D", "fresh (ms)", "cached (ms)", "speedup"],
+    );
+    let bc = bench_cfg(cfg);
+    for ds in dataset_names(cfg) {
+        let m = scaled_nodes(cfg, ds);
+        for &d in &[128usize, 256] {
+            let a = random_features(m, d, 1);
+            let b = random_features(d, d, 2);
+            let fresh = bench_with_config("fresh", bc, &mut || qgemm(&a, &b, 8, Rounding::Nearest));
+            let qa = quantize(&a, 8, Rounding::Nearest);
+            let qb = quantize(&b, 8, Rounding::Nearest);
+            let cached =
+                bench_with_config("cached", bc, &mut || qgemm_prequantized(&qa, &qb, 8));
+            t.row(&[
+                ds.into(),
+                d.to_string(),
+                format!("{:.2}", fresh.mean * 1e3),
+                format!("{:.2}", cached.mean * 1e3),
+                format!("{:.2}x", fresh.mean / cached.mean),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 11: (a) measured CPU qGEMM vs FP32 GEMM; (b) the V100/A100 cost
+/// model's projections for the paper's hardware.
+pub fn fig11(cfg: &ReproConfig) -> Vec<Table> {
+    let bc = bench_cfg(cfg);
+    let mut a = Table::new(
+        "Fig. 11a — quantized GEMM vs FP32 GEMM (measured, CPU substrate)",
+        &["dataset", "D", "fp32 (ms)", "int8 (ms)", "speedup"],
+    );
+    for ds in dataset_names(cfg) {
+        let m = scaled_nodes(cfg, ds);
+        for &d in &[256usize, 512] {
+            let x = random_features(m, d, 3);
+            let w = random_features(d, d, 4);
+            let f = bench_with_config("f32", bc, &mut || gemm_f32(&x, &w));
+            let q = bench_with_config("q8", bc, &mut || qgemm(&x, &w, 8, Rounding::Nearest));
+            a.row(&[
+                ds.into(),
+                d.to_string(),
+                format!("{:.2}", f.mean * 1e3),
+                format!("{:.2}", q.mean * 1e3),
+                format!("{:.2}x", f.mean / q.mean),
+            ]);
+        }
+    }
+    let mut b = Table::new(
+        "Fig. 11 (model) — projected GEMM speedups on the paper's GPUs",
+        &["GPU", "D", "baseline", "Tango", "speedup"],
+    );
+    for &d in &[256usize, 512] {
+        let m = 169_343; // ogbn-arxiv nodes, the paper's M
+        let t32 = gemm_time(&V100, m, d, d, GemmKind::Fp32Cuda, false);
+        let t8 = gemm_time(&V100, m, d, d, GemmKind::Int8Dp4a, false);
+        b.row(&["V100".into(), d.to_string(), "cuBLAS FP32".into(), "INT8 DP4A".into(), format!("{:.2}x", t32 / t8)]);
+        let t16 = gemm_time(&A100, m, d, d, GemmKind::Fp16Tensor, false);
+        let t8tc = gemm_time(&A100, m, d, d, GemmKind::Int8Tensor, false);
+        b.row(&["A100".into(), d.to_string(), "FP16 TC".into(), "INT8 TC".into(), format!("{:.2}x", t16 / t8tc)]);
+    }
+    vec![a, b]
+}
+
+/// Fig. 12: modelled profiling ratios of quantized GEMM vs cuBLAS FP32.
+pub fn fig12(_cfg: &ReproConfig) -> Table {
+    let mut t = Table::new(
+        "Fig. 12 — qGEMM profiling ratios vs cuBLAS FP32 (V100 model)",
+        &["D", "compute throughput", "memory throughput", "IPC", "# instructions"],
+    );
+    for &d in &[128usize, 256, 512] {
+        let p = profile_ratios(&V100, 169_343, d, d);
+        t.row(&[
+            d.to_string(),
+            format!("{:.2}x", p.compute_throughput_ratio),
+            format!("{:.2}x", p.memory_throughput_ratio),
+            format!("{:.0}%", p.ipc_ratio * 100.0),
+            format!("{:.0}%", p.instruction_ratio * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig. 13: (a) incidence-matrix SPMM vs the DGL 3-matrix kernel over edge
+/// feature sizes; (b) per-head split vs the native kernel for multi-head
+/// attention shapes.
+pub fn fig13(cfg: &ReproConfig) -> Vec<Table> {
+    let bc = bench_cfg(cfg);
+    let mut a = Table::new(
+        "Fig. 13a — incidence SPMM vs 3-matrix SPMM (measured)",
+        &["dataset", "edge feat", "3-mat (ms)", "incidence (ms)", "speedup"],
+    );
+    let feats: Vec<usize> = if cfg.quick { vec![8] } else { vec![4, 8, 12, 16, 20] };
+    for ds in dataset_names(cfg) {
+        let data = datasets::load_by_name(if cfg.quick { "Pubmed" } else { ds }, cfg.seed);
+        let csr = Csr::from_coo(&data.graph);
+        let inc = Incidence::from_csr(&csr);
+        for &f in &feats {
+            let ef = random_features(csr.num_edges, f, 5);
+            let base = bench_with_config("3mat", bc, &mut || spmm_edge_aggregate_3mat(&csr, &ef));
+            let ours = bench_with_config("inc", bc, &mut || incidence_spmm(&inc, &ef));
+            a.row(&[
+                ds.into(),
+                f.to_string(),
+                format!("{:.2}", base.mean * 1e3),
+                format!("{:.2}", ours.mean * 1e3),
+                format!("{:.2}x", base.mean / ours.mean),
+            ]);
+        }
+    }
+    let mut b = Table::new(
+        "Fig. 13b — per-head split SPMM vs native 3-matrix (measured)",
+        &["dataset", "heads", "D", "native (ms)", "split (ms)", "speedup"],
+    );
+    let head_cfgs: Vec<(usize, usize)> = if cfg.quick { vec![(4, 8)] } else { vec![(2, 16), (4, 16), (8, 16)] };
+    for ds in dataset_names(cfg) {
+        let data = datasets::load_by_name(if cfg.quick { "Pubmed" } else { ds }, cfg.seed);
+        let csr = Csr::from_coo(&data.graph);
+        for &(h, d) in &head_cfgs {
+            let alpha = random_features(csr.num_edges, h, 6);
+            let x = random_features(csr.num_nodes, h * d, 7);
+            let native = bench_with_config("native", bc, &mut || spmm_edge_weighted(&csr, &alpha, &x, h));
+            let split = bench_with_config("split", bc, &mut || spmm_per_head(&csr, &alpha, &x, h));
+            b.row(&[
+                ds.into(),
+                h.to_string(),
+                d.to_string(),
+                format!("{:.2}", native.mean * 1e3),
+                format!("{:.2}", split.mean * 1e3),
+                format!("{:.2}x", native.mean / split.mean),
+            ]);
+        }
+    }
+    vec![a, b]
+}
+
+/// Table 2: achieved memory throughput of incidence SPMM vs the 3-matrix
+/// baseline at edge-feature size 16 (bytes moved / measured time).
+pub fn table2(cfg: &ReproConfig) -> Table {
+    let bc = bench_cfg(cfg);
+    let mut t = Table::new(
+        "Table 2 — achieved memory throughput, edge aggregation (feat 16)",
+        &["dataset", "ours (GB/s)", "baseline (GB/s)", "ratio"],
+    );
+    let f = 16usize;
+    for ds in dataset_names(cfg) {
+        let data = datasets::load_by_name(if cfg.quick { "Pubmed" } else { ds }, cfg.seed);
+        let csr = Csr::from_coo(&data.graph);
+        let inc = Incidence::from_csr(&csr);
+        let ef = random_features(csr.num_edges, f, 8);
+        let ours = bench_with_config("inc", bc, &mut || incidence_spmm(&inc, &ef));
+        let base = bench_with_config("3mat", bc, &mut || spmm_edge_aggregate_3mat(&csr, &ef));
+        // Useful bytes: edge features read once + output written once
+        // (+ the redundant all-ones matrix for the baseline).
+        let useful = Traffic {
+            read_bytes: (csr.num_edges * f * 4 + csr.num_edges * 8) as u64,
+            write_bytes: (csr.num_nodes * f * 4) as u64,
+        };
+        let base_traffic = Traffic {
+            read_bytes: useful.read_bytes + (csr.num_edges * f * 4) as u64, // ones matrix
+            write_bytes: useful.write_bytes,
+        };
+        let g_ours = useful.gbps(ours.mean);
+        let g_base = base_traffic.gbps(base.mean);
+        t.row(&[
+            ds.into(),
+            format!("{g_ours:.2}"),
+            format!("{g_base:.2}"),
+            format!("{:.2}x", g_ours / g_base),
+        ]);
+    }
+    t
+}
+
+/// Fig. 14: the many-SpMV transform vs the native kernel as the edge
+/// feature dimension grows (measured + the adaptive model's crossover).
+pub fn fig14(cfg: &ReproConfig) -> Table {
+    let bc = bench_cfg(cfg);
+    let mut t = Table::new(
+        "Fig. 14 — many-SpMV transform vs native SPMM on ogbn-arxiv (measured + model)",
+        &["edge feat", "native (ms)", "spmv xN (ms)", "measured speedup", "model speedup (V100)"],
+    );
+    let data = datasets::load_by_name(if cfg.quick { "Pubmed" } else { "ogbn-arxiv" }, cfg.seed);
+    let csr = Csr::from_coo(&data.graph);
+    let feats: Vec<usize> = if cfg.quick { vec![2, 6] } else { vec![2, 4, 6, 8, 10, 12] };
+    let costs = AdaptiveCosts::default();
+    for &f in &feats {
+        let alpha = random_features(csr.num_edges, 1, 9);
+        let x = random_features(csr.num_nodes, f, 10);
+        let native = bench_with_config("native", bc, &mut || spmm_edge_weighted(&csr, &alpha, &x, 1));
+        let spmv = bench_with_config("spmv", bc, &mut || spmm_via_spmvs(&csr, &alpha, &x, 1));
+        let model = modelled_costs(1_166_243, 1, f, &costs);
+        t.row(&[
+            f.to_string(),
+            format!("{:.2}", native.mean * 1e3),
+            format!("{:.2}", spmv.mean * 1e3),
+            format!("{:.2}x", native.mean / spmv.mean),
+            format!("{:.2}x", model[0].1 / model[2].1),
+        ]);
+    }
+    t
+}
+
+/// Fig. 15: quantized SDDMM (add / dot) vs the FP32 kernels, features (4,64).
+pub fn fig15(cfg: &ReproConfig) -> Table {
+    let bc = bench_cfg(cfg);
+    let mut t = Table::new(
+        "Fig. 15 — quantized SDDMM vs FP32 (measured, heads=4, D=64)",
+        &["dataset", "add f32 (ms)", "add q8 (ms)", "add speedup", "dot f32 (ms)", "dot q8 (ms)", "dot speedup"],
+    );
+    let (heads, d) = (4usize, 64usize);
+    for ds in dataset_names(cfg) {
+        let data = datasets::load_by_name(if cfg.quick { "Pubmed" } else { ds }, cfg.seed);
+        let coo = &data.graph;
+        let n = coo.num_nodes;
+        let s = random_features(n, heads, 11);
+        let dd = random_features(n, heads, 12);
+        let qs = quantize(&s, 8, Rounding::Nearest);
+        let qd = quantize(&dd, 8, Rounding::Nearest);
+        let add_f = bench_with_config("addf", bc, &mut || sddmm_add(coo, &s, &dd));
+        let add_q = bench_with_config("addq", bc, &mut || qsddmm_add(coo, &qs, &qd));
+        let a = random_features(n, heads * d, 13);
+        let b = random_features(n, heads * d, 14);
+        let qa = quantize(&a, 8, Rounding::Nearest);
+        let qb = quantize(&b, 8, Rounding::Nearest);
+        let dot_f = bench_with_config("dotf", bc, &mut || sddmm_dot(coo, &a, &b, heads));
+        let dot_q = bench_with_config("dotq", bc, &mut || qsddmm_dot(coo, &qa, &qb, heads));
+        t.row(&[
+            ds.into(),
+            format!("{:.2}", add_f.mean * 1e3),
+            format!("{:.2}", add_q.mean * 1e3),
+            format!("{:.2}x", add_f.mean / add_q.mean),
+            format!("{:.2}", dot_f.mean * 1e3),
+            format!("{:.2}", dot_q.mean * 1e3),
+            format!("{:.2}x", dot_f.mean / dot_q.mean),
+        ]);
+    }
+    t
+}
+
+/// Fig. 16: (a) INT4 SDDMM vs FP32 (measured INT4-range + modelled packed
+/// traffic); (b) INT8/INT4 tensor-core GEMM on the A100 model.
+pub fn fig16(cfg: &ReproConfig) -> Vec<Table> {
+    let bc = bench_cfg(cfg);
+    let mut a = Table::new(
+        "Fig. 16a — INT4 SDDMM vs FP32 (measured int4-range; packed traffic modelled)",
+        &["dataset", "add speedup (int4)", "dot speedup (int4)", "model add (V100)", "model dot (V100)"],
+    );
+    let (heads, d) = (4usize, 64usize);
+    for ds in dataset_names(cfg) {
+        let data = datasets::load_by_name(if cfg.quick { "Pubmed" } else { ds }, cfg.seed);
+        let coo = &data.graph;
+        let n = coo.num_nodes;
+        let s = random_features(n, heads, 15);
+        let dd = random_features(n, heads, 16);
+        let q4s = quantize(&s, 4, Rounding::Nearest);
+        let q4d = quantize(&dd, 4, Rounding::Nearest);
+        let add_f = bench_with_config("addf", bc, &mut || sddmm_add(coo, &s, &dd));
+        let add_q = bench_with_config("addq4", bc, &mut || qsddmm_add(coo, &q4s, &q4d));
+        let av = random_features(n, heads * d, 17);
+        let bv = random_features(n, heads * d, 18);
+        let q4a = quantize(&av, 4, Rounding::Nearest);
+        let q4b = quantize(&bv, 4, Rounding::Nearest);
+        let dot_f = bench_with_config("dotf", bc, &mut || sddmm_dot(coo, &av, &bv, heads));
+        let dot_q = bench_with_config("dotq4", bc, &mut || qsddmm_dot(coo, &q4a, &q4b, heads));
+        let e = coo.num_edges();
+        let m_add_f = sddmm_time(&V100, n, e, heads, SparseDtype::F32);
+        let m_add_4 = sddmm_time(&V100, n, e, heads, SparseDtype::I4);
+        let m_dot_f = sddmm_time(&V100, n, e, heads * d, SparseDtype::F32);
+        let m_dot_4 = sddmm_time(&V100, n, e, heads * d, SparseDtype::I4);
+        a.row(&[
+            ds.into(),
+            format!("{:.2}x", add_f.mean / add_q.mean),
+            format!("{:.2}x", dot_f.mean / dot_q.mean),
+            format!("{:.2}x", m_add_f / m_add_4),
+            format!("{:.2}x", m_dot_f / m_dot_4),
+        ]);
+    }
+    let mut b = Table::new(
+        "Fig. 16b — INT8/INT4 tensor-core GEMM vs cuBLAS FP32 (A100 model)",
+        &["D", "INT8 speedup", "INT4 speedup"],
+    );
+    for &dd in &[256usize, 512] {
+        let m = 169_343;
+        let t32 = gemm_time(&A100, m, dd, dd, GemmKind::Fp32Cuda, false);
+        let t8 = gemm_time(&A100, m, dd, dd, GemmKind::Int8Tensor, false);
+        let t4 = gemm_time(&A100, m, dd, dd, GemmKind::Int4Tensor, false);
+        b.row(&[dd.to_string(), format!("{:.1}x", t32 / t8), format!("{:.1}x", t32 / t4)]);
+    }
+    vec![a, b]
+}
+
+/// Fig. 11/13-16 model-only sanity used by tests.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ReproConfig {
+        ReproConfig { epochs: 2, speed_epochs: 1, seed: 1, quick: true }
+    }
+
+    #[test]
+    fn fig10_rows() {
+        assert_eq!(fig10(&quick()).len(), 2);
+    }
+
+    #[test]
+    fn fig12_rows() {
+        assert_eq!(fig12(&quick()).len(), 3);
+    }
+
+    #[test]
+    fn fig14_rows() {
+        assert_eq!(fig14(&quick()).len(), 2);
+    }
+}

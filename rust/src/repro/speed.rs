@@ -1,0 +1,137 @@
+//! Table 1 (datasets), Fig. 8 (end-to-end training speed) and Fig. 9
+//! (multi-GPU scaling).
+
+use super::ReproConfig;
+use crate::config::{ModelKind, TrainConfig};
+use crate::coordinator::Trainer;
+use crate::graph::datasets::{self, SPECS};
+use crate::metrics::Table;
+use crate::model::TrainMode;
+use crate::multigpu::{run_data_parallel, Interconnect, MultiGpuConfig};
+
+/// Table 1: paper dataset statistics next to our generated analogues.
+pub fn table1(cfg: &ReproConfig) -> Table {
+    let mut t = Table::new(
+        "Table 1 — datasets (paper scale vs generated analogue)",
+        &["dataset", "paper nodes", "paper edges", "ours nodes", "ours edges", "avg degree", "task"],
+    );
+    for spec in SPECS.iter() {
+        let d = datasets::load(spec, cfg.seed);
+        t.row(&[
+            spec.name.into(),
+            spec.paper_nodes.to_string(),
+            spec.paper_edges.to_string(),
+            d.graph.num_nodes.to_string(),
+            d.graph.num_edges().to_string(),
+            format!("{:.1}", d.graph.avg_degree()),
+            format!("{:?}", spec.task),
+        ]);
+    }
+    t
+}
+
+fn speed_cfg(cfg: &ReproConfig, model: ModelKind, dataset: &str, mode: TrainMode) -> TrainConfig {
+    TrainConfig {
+        model,
+        dataset: dataset.into(),
+        epochs: cfg.speed_epochs,
+        lr: 0.05,
+        hidden: if cfg.quick { 16 } else { 128 },
+        heads: 4,
+        layers: 2,
+        mode,
+        auto_bits: false,
+        seed: cfg.seed,
+        log_every: 0,
+    }
+}
+
+/// Fig. 8: end-to-end training time of Tango and EXACT relative to the
+/// FP32 "DGL" baseline, GCN and GAT, all five datasets.
+pub fn fig8(cfg: &ReproConfig) -> Table {
+    let mut t = Table::new(
+        "Fig. 8 — training speedup over FP32 baseline (measured, CPU substrate)",
+        &["model", "dataset", "fp32 s/epoch", "Tango speedup", "EXACT speedup"],
+    );
+    let datasets: Vec<&str> = if cfg.quick {
+        vec!["tiny"]
+    } else {
+        vec!["ogbn-arxiv", "ogbn-products", "Pubmed", "DBLP", "Amazon"]
+    };
+    for model in [ModelKind::Gcn, ModelKind::Gat] {
+        let name = if model == ModelKind::Gcn { "GCN" } else { "GAT" };
+        for ds in &datasets {
+            let time_of = |mode: TrainMode| -> f64 {
+                let mut tr = Trainer::from_config(&speed_cfg(cfg, model, ds, mode)).unwrap();
+                tr.run().unwrap().wall_secs / cfg.speed_epochs as f64
+            };
+            let fp = time_of(TrainMode::fp32());
+            let tango = time_of(TrainMode::tango(8));
+            let exact = time_of(TrainMode::exact(8));
+            t.row(&[
+                name.into(),
+                (*ds).into(),
+                format!("{fp:.3}"),
+                format!("{:.2}x", fp / tango),
+                format!("{:.2}x", fp / exact),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 9: multi-GPU speedup of quantized vs FP32 gradient exchange as the
+/// worker count grows (modelled PCIe, real computation + all-reduce).
+pub fn fig9(cfg: &ReproConfig) -> Table {
+    let mut t = Table::new(
+        "Fig. 9 — multi-GPU speedup (Tango vs FP32 all-reduce)",
+        &["model", "workers", "fp32 epoch (s)", "tango epoch (s)", "speedup"],
+    );
+    let data = if cfg.quick { datasets::tiny(cfg.seed) } else { datasets::load_by_name("ogbn-arxiv", cfg.seed) };
+    let workers: Vec<usize> = if cfg.quick { vec![2, 3] } else { vec![2, 3, 4, 5, 6] };
+    for model in [ModelKind::Gcn, ModelKind::Gat] {
+        let name = if model == ModelKind::Gcn { "GCN" } else { "GAT" };
+        for &k in &workers {
+            let mk = |quant: bool| MultiGpuConfig {
+                train: speed_cfg(cfg, model, "ogbn-arxiv", if quant { TrainMode::tango(8) } else { TrainMode::fp32() }),
+                workers: k,
+                epochs: cfg.speed_epochs.min(3),
+                fanout: 8,
+                batch_size: if cfg.quick { 16 } else { 256 },
+                quantize_grads: quant,
+                overlap_quantization: true,
+                interconnect: Interconnect::pcie3(),
+            };
+            let fp = run_data_parallel(&mk(false), &data).unwrap();
+            let tg = run_data_parallel(&mk(true), &data).unwrap();
+            let fp_t = fp.total_time() / fp.epochs.len() as f64;
+            let tg_t = tg.total_time() / tg.epochs.len() as f64;
+            t.row(&[
+                name.into(),
+                k.to_string(),
+                format!("{fp_t:.4}"),
+                format!("{tg_t:.4}"),
+                format!("{:.2}x", fp_t / tg_t),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_all_five_datasets() {
+        let t = table1(&ReproConfig { quick: true, ..Default::default() });
+        assert_eq!(t.len(), 5);
+    }
+
+    #[test]
+    fn fig8_quick_runs() {
+        let cfg = ReproConfig { speed_epochs: 1, quick: true, ..Default::default() };
+        let t = fig8(&cfg);
+        assert_eq!(t.len(), 2); // GCN + GAT on tiny
+    }
+}

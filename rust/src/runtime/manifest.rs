@@ -1,0 +1,152 @@
+//! Artifact manifest (`artifacts/manifest.json`, written by `aot.py`).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One input's declared shape/dtype.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSpec {
+    /// Dimensions (empty = scalar).
+    pub shape: Vec<usize>,
+    /// "f32" | "i32" | "i8".
+    pub dtype: String,
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Registry name.
+    pub name: String,
+    /// HLO text file (relative to the artifact dir).
+    pub file: String,
+    /// Human description.
+    pub description: String,
+    /// Input specs, positional.
+    pub inputs: Vec<InputSpec>,
+    /// Number of tuple outputs.
+    pub num_outputs: usize,
+    /// Named problem sizes (n, p, f, h, c, ...).
+    pub sizes: BTreeMap<String, usize>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Format version.
+    pub version: usize,
+    /// All artifacts.
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> crate::Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j.get("version").and_then(Json::as_usize).unwrap_or(0);
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?
+        {
+            let get_str = |k: &str| -> crate::Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing '{k}'"))?
+                    .to_string())
+            };
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|i| -> crate::Result<InputSpec> {
+                    let shape = i
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect();
+                    let dtype = i
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("f32")
+                        .to_string();
+                    Ok(InputSpec { shape, dtype })
+                })
+                .collect::<crate::Result<Vec<_>>>()?;
+            let mut sizes = BTreeMap::new();
+            if let Some(Json::Obj(m)) = a.get("sizes") {
+                for (k, v) in m {
+                    if let Some(n) = v.as_usize() {
+                        sizes.insert(k.clone(), n);
+                    }
+                }
+            }
+            artifacts.push(ArtifactSpec {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                description: get_str("description").unwrap_or_default(),
+                inputs,
+                num_outputs: a.get("num_outputs").and_then(Json::as_usize).unwrap_or(1),
+                sizes,
+            });
+        }
+        Ok(Manifest { version, artifacts })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("{}: {e} (run `make artifacts`)", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"version": 1, "artifacts": [
+      {"name": "gcn_train_step", "file": "gcn_train_step.hlo.txt",
+       "description": "step", "inputs": [{"shape": [8, 4], "dtype": "f32"},
+       {"shape": [], "dtype": "f32"}], "num_outputs": 3,
+       "sizes": {"n": 8, "p": 2}}]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("gcn_train_step").unwrap();
+        assert_eq!(a.file, "gcn_train_step.hlo.txt");
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![8, 4]);
+        assert!(a.inputs[1].shape.is_empty());
+        assert_eq!(a.num_outputs, 3);
+        assert_eq!(a.sizes["p"], 2);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse(r#"{"version": 1}"#).is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"file": "x"}], "version": 1}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Opportunistic: if `make artifacts` has run, parse the real thing.
+        if let Ok(m) = Manifest::load("artifacts/manifest.json") {
+            assert!(m.get("gcn_train_step").is_some());
+            assert!(m.get("qgemm8").is_some());
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! PJRT runtime: loads the jax-lowered HLO text artifacts produced by
+//! `make artifacts` and executes them on the XLA CPU client — the Layer-3 ↔
+//! Layer-1/2 boundary. Python never runs here; the Rust binary is
+//! self-contained once `artifacts/` exists.
+//!
+//! Interchange format is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax ≥ 0.5 emits protos with 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+mod manifest;
+
+pub use manifest::{ArtifactSpec, InputSpec, Manifest};
+
+use crate::tensor::Dense;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded, compiled artifact ready to execute.
+pub struct Executable {
+    /// Its manifest entry.
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Values crossing the runtime boundary.
+#[derive(Debug, Clone)]
+pub enum Value {
+    /// f32 tensor.
+    F32(Dense<f32>),
+    /// i32 tensor.
+    I32(Dense<i32>),
+    /// i8 tensor.
+    I8(Dense<i8>),
+    /// f32 scalar.
+    ScalarF32(f32),
+}
+
+impl Value {
+    fn to_literal(&self) -> crate::Result<xla::Literal> {
+        let lit = match self {
+            Value::F32(t) => {
+                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data()).reshape(&dims)?
+            }
+            Value::I32(t) => {
+                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data()).reshape(&dims)?
+            }
+            Value::I8(t) => {
+                // i8 is not a crate NativeType; build from raw bytes.
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len())
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S8,
+                    t.shape(),
+                    bytes,
+                )?
+            }
+            Value::ScalarF32(v) => xla::Literal::from(*v),
+        };
+        Ok(lit)
+    }
+
+    /// Interpret as an f32 tensor (errors otherwise).
+    pub fn as_f32(&self) -> crate::Result<&Dense<f32>> {
+        match self {
+            Value::F32(t) => Ok(t),
+            other => anyhow::bail!("expected f32 tensor, got {other:?}"),
+        }
+    }
+
+    /// Interpret as an f32 scalar (rank-0 or single-element).
+    pub fn as_scalar_f32(&self) -> crate::Result<f32> {
+        match self {
+            Value::ScalarF32(v) => Ok(*v),
+            Value::F32(t) if t.len() == 1 => Ok(t.data()[0]),
+            other => anyhow::bail!("expected f32 scalar, got {other:?}"),
+        }
+    }
+}
+
+fn literal_to_value(lit: &xla::Literal) -> crate::Result<Value> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    Ok(match shape.ty() {
+        xla::ElementType::F32 => {
+            let data = lit.to_vec::<f32>()?;
+            if dims.is_empty() {
+                Value::ScalarF32(data[0])
+            } else {
+                Value::F32(Dense::from_vec(&dims, data))
+            }
+        }
+        xla::ElementType::S32 => Value::I32(Dense::from_vec(&dims, lit.to_vec::<i32>()?)),
+        xla::ElementType::S8 => Value::I8(Dense::from_vec(&dims, lit.to_vec::<i8>()?)),
+        other => anyhow::bail!("unsupported output element type {other:?}"),
+    })
+}
+
+impl Executable {
+    /// Execute with positional inputs; returns the flattened tuple outputs.
+    pub fn run(&self, inputs: &[Value]) -> crate::Result<Vec<Value>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<crate::Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = result.to_tuple()?;
+        parts.iter().map(literal_to_value).collect()
+    }
+}
+
+/// The artifact registry: manifest + PJRT client + lazily compiled
+/// executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    /// Parsed manifest.
+    pub manifest: Manifest,
+    compiled: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (expects `manifest.json` inside).
+    pub fn open(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, compiled: HashMap::new() })
+    }
+
+    /// Compile (once) and return the named artifact.
+    pub fn load(&mut self, name: &str) -> crate::Result<&Executable> {
+        if !self.compiled.contains_key(name) {
+            let spec = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.compiled.insert(name.to_string(), Executable { spec, exe });
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Compile and run in one call.
+    pub fn run(&mut self, name: &str, inputs: &[Value]) -> crate::Result<Vec<Value>> {
+        self.load(name)?;
+        self.compiled[name].run(inputs)
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-backed tests live in rust/tests/runtime_integration.rs (they
+    // need `make artifacts`). Here: pure Value conversions.
+
+    #[test]
+    fn value_accessors() {
+        let t = Dense::from_vec(&[2], vec![1.0f32, 2.0]);
+        let v = Value::F32(t.clone());
+        assert_eq!(v.as_f32().unwrap(), &t);
+        assert!(v.as_scalar_f32().is_err());
+        assert_eq!(Value::ScalarF32(3.5).as_scalar_f32().unwrap(), 3.5);
+        let one = Value::F32(Dense::from_vec(&[1], vec![7.0f32]));
+        assert_eq!(one.as_scalar_f32().unwrap(), 7.0);
+    }
+}

@@ -1,0 +1,275 @@
+//! Row-major dense tensor.
+
+use super::DType;
+
+/// Element trait for [`Dense`].
+pub trait Scalar: Copy + Default + PartialEq + Send + Sync + std::fmt::Debug + 'static {
+    /// The runtime dtype tag for this element type.
+    const DTYPE: DType;
+}
+
+impl Scalar for f32 {
+    const DTYPE: DType = DType::F32;
+}
+impl Scalar for i8 {
+    const DTYPE: DType = DType::I8;
+}
+impl Scalar for i32 {
+    const DTYPE: DType = DType::I32;
+}
+
+/// A row-major dense tensor.
+///
+/// Rank is dynamic but almost everything in the pipeline is rank-2
+/// (`[rows, cols]`): node-feature matrices `H`, weights `W`, edge-feature
+/// matrices `E` (one row per edge). Rank-1 is used for per-node scalars.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dense<T: Scalar> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> Dense<T> {
+    /// Tensor of zeros (well, `T::default()`) with the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Dense { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    /// Build from a flat row-major buffer. Panics if sizes disagree.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} needs {n} elements, got {}", data.len());
+        Dense { shape: shape.to_vec(), data }
+    }
+
+    /// Shape as a slice.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of rows (first dimension). Panics on rank-0.
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Number of columns: the product of all trailing dims (1 for rank-1).
+    pub fn cols(&self) -> usize {
+        self.shape.iter().skip(1).product::<usize>().max(1)
+    }
+
+    /// Flat element buffer.
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    /// Mutable flat element buffer.
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Row `i` as a slice (rank>=1, row-major).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[T] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    /// Row `i` as a mutable slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// 2-D indexed read. Debug-asserted bounds; hot paths use `row()`.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> T {
+        debug_assert!(i < self.rows() && j < self.cols());
+        self.data[i * self.cols() + j]
+    }
+
+    /// 2-D indexed write.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        let c = self.cols();
+        debug_assert!(i < self.rows() && j < c);
+        self.data[i * c + j] = v;
+    }
+
+    /// Reshape in place (element count must be preserved).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {shape:?}", self.shape);
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Elementwise map into a (possibly differently typed) tensor.
+    pub fn map<U: Scalar>(&self, f: impl Fn(T) -> U) -> Dense<U> {
+        Dense { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Memory footprint of the payload in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * T::DTYPE.size_bytes()
+    }
+
+    /// 2-D transpose for any element type. Panics on non-rank-2 tensors.
+    pub fn transpose2d(&self) -> Dense<T> {
+        assert_eq!(self.shape.len(), 2, "transpose2d needs rank-2");
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = Dense::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+}
+
+impl Dense<f32> {
+    /// 2-D transpose. Only defined for rank-2 tensors.
+    pub fn transpose(&self) -> Dense<f32> {
+        self.transpose2d()
+    }
+
+    /// Maximum absolute value (0.0 for an empty tensor). This is the single
+    /// reduction dynamic symmetric quantization needs per tensor.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Elementwise a += b. Shapes must match.
+    pub fn add_assign(&mut self, other: &Dense<f32>) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise a -= scale * b (SGD-style update). Shapes must match.
+    pub fn axpy_neg(&mut self, scale: f32, other: &Dense<f32>) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a -= scale * b;
+        }
+    }
+
+    /// Scale all elements in place.
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Max |a - b| between two same-shaped tensors.
+    pub fn max_abs_diff(&self, other: &Dense<f32>) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|&x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t: Dense<f32> = Dense::zeros(&[3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.len(), 12);
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.cols(), 4);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn from_vec_roundtrip() {
+        let t = Dense::from_vec(&[2, 2], vec![1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(t.at(0, 1), 2.0);
+        assert_eq!(t.at(1, 0), 3.0);
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_wrong_size_panics() {
+        let _ = Dense::from_vec(&[2, 2], vec![1.0f32, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn transpose_2d() {
+        let t = Dense::from_vec(&[2, 3], vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let tt = t.transpose();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.at(0, 0), 1.0);
+        assert_eq!(tt.at(0, 1), 4.0);
+        assert_eq!(tt.at(2, 1), 6.0);
+        // double transpose is identity
+        assert_eq!(tt.transpose(), t);
+    }
+
+    #[test]
+    fn abs_max_handles_negatives_and_empty() {
+        let t = Dense::from_vec(&[4], vec![-3.0f32, 1.0, 2.5, -0.5]);
+        assert_eq!(t.abs_max(), 3.0);
+        let e: Dense<f32> = Dense::zeros(&[0]);
+        assert_eq!(e.abs_max(), 0.0);
+    }
+
+    #[test]
+    fn map_changes_dtype() {
+        let t = Dense::from_vec(&[2], vec![1.4f32, -2.6]);
+        let q: Dense<i8> = t.map(|x| x.round() as i8);
+        assert_eq!(q.data(), &[1, -3]);
+    }
+
+    #[test]
+    fn axpy_and_add() {
+        let mut a = Dense::from_vec(&[2], vec![1.0f32, 2.0]);
+        let b = Dense::from_vec(&[2], vec![10.0f32, 20.0]);
+        a.add_assign(&b);
+        assert_eq!(a.data(), &[11.0, 22.0]);
+        a.axpy_neg(0.5, &b);
+        assert_eq!(a.data(), &[6.0, 12.0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Dense::from_vec(&[4], vec![1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]);
+        assert_eq!(t.at(1, 1), 4.0);
+    }
+
+    #[test]
+    fn size_bytes_accounts_for_dtype() {
+        let f: Dense<f32> = Dense::zeros(&[8]);
+        let q: Dense<i8> = Dense::zeros(&[8]);
+        assert_eq!(f.size_bytes(), 32);
+        assert_eq!(q.size_bytes(), 8);
+    }
+}

@@ -1,0 +1,53 @@
+//! Dense tensor substrate.
+//!
+//! A deliberately small row-major dense tensor over the three element types
+//! the Tango pipeline needs: `f32` (full precision), `i8` (quantized
+//! payloads) and `i32` (quantized accumulators). This is the in-memory
+//! representation both the CPU primitives (`crate::primitives`) and the PJRT
+//! runtime boundary (`crate::runtime`) operate on.
+
+mod dense;
+
+pub use dense::{Dense, Scalar};
+
+/// Element types a [`Dense`] tensor can carry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 32-bit IEEE float — full-precision tensors and dequantized outputs.
+    F32,
+    /// 8-bit signed integer — quantized payloads (INT4 values are stored in
+    /// i8 slots too; sub-byte packing is modelled in `perfmodel`).
+    I8,
+    /// 32-bit signed integer — quantized matmul accumulators.
+    I32,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    ///
+    /// Note: INT4 payloads are *stored* in `i8` slots on the CPU substrate;
+    /// the perf model accounts for the packed size instead.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+/// Shorthand constructors used pervasively in tests and benches.
+pub mod prelude {
+    pub use super::{DType, Dense, Scalar};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::I32.size_bytes(), 4);
+        assert_eq!(DType::I8.size_bytes(), 1);
+    }
+}

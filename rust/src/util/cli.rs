@@ -1,0 +1,98 @@
+//! No-dependency command-line parsing (the offline clap stand-in).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` shapes the `tango` binary and the examples need.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: positionals in order, flags by name (without `--`).
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments, in order.
+    pub positional: Vec<String>,
+    /// `--key value` and `--key=value` pairs; bare `--key` maps to "true".
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Flag as string with default.
+    pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Flag parsed to any `FromStr` type, with default. Panics with a clear
+    /// message on malformed values (CLI boundary, so panicking is the UX).
+    pub fn get_as<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|e| panic!("--{key}={v}: {e:?}")),
+        }
+    }
+
+    /// Boolean flag: present (or "true"/"1") means true.
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse(&["train", "--dataset", "Pubmed", "--epochs=30", "--quantize"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("dataset", ""), "Pubmed");
+        assert_eq!(a.get_as::<usize>("epochs", 0), 30);
+        assert!(a.get_bool("quantize"));
+        assert!(!a.get_bool("missing"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["bench"]);
+        assert_eq!(a.get("dataset", "tiny"), "tiny");
+        assert_eq!(a.get_as::<u64>("seed", 7), 7);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse(&["--verbose", "--level", "3"]);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get_as::<i32>("level", 0), 3);
+    }
+}

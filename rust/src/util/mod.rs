@@ -1,0 +1,16 @@
+//! Infrastructure substrates that would normally be external crates.
+//!
+//! The build environment is fully offline, so the crate implements its own
+//! minimal versions of the usual framework dependencies:
+//!
+//! - [`par`] — a scoped-thread data-parallel layer (the rayon stand-in) the
+//!   hot primitives are built on;
+//! - [`prop`] — a tiny property-based testing helper (the proptest
+//!   stand-in) driven by the same xoshiro256++ generator the quantizer uses;
+//! - [`cli`] — a no-dependency command-line argument parser;
+//! - [`json`] — a minimal JSON writer/parser for the artifact manifest.
+
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod prop;

@@ -1,0 +1,163 @@
+//! Scoped-thread data parallelism (the offline rayon stand-in).
+//!
+//! The primitives need exactly two shapes of parallelism:
+//!
+//! - [`for_each_chunk`]: split a `&mut [T]` into fixed-size chunks (one row
+//!   of an output matrix each) and process them on a pool of scoped threads
+//!   with dynamic batch claiming — graph rows have highly skewed degrees, so
+//!   static partitioning would straggle;
+//! - [`map_range`]: compute an indexed map `0..n -> Vec<O>` in parallel,
+//!   preserving order (used for per-node segment reductions and the panel
+//!   abs-max collection in the quantized GEMM).
+//!
+//! Thread count defaults to `available_parallelism`, overridable with
+//! `TANGO_THREADS` (benches pin it for stable measurements).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("TANGO_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// How many chunk-batches to slice the work into per thread: small enough
+/// to amortise claiming, large enough to balance skewed rows.
+const BATCHES_PER_THREAD: usize = 16;
+
+/// Process `data` in `chunk_len`-sized mutable chunks, in parallel.
+/// `f(chunk_index, chunk)` is called exactly once per chunk, where
+/// `chunk_index` counts chunks from the start of `data`. The final chunk may
+/// be shorter. Falls back to sequential for tiny inputs or 1 thread.
+pub fn for_each_chunk<T: Send, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0);
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let threads = num_threads().min(n_chunks.max(1));
+    if threads <= 1 || n_chunks <= 4 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    // Batch chunks so claiming is cheap: each claim hands a contiguous run
+    // of `batch` chunks to one worker.
+    let batch = n_chunks.div_ceil(threads * BATCHES_PER_THREAD).max(1);
+    let slots: Vec<Mutex<Option<&mut [T]>>> =
+        data.chunks_mut(batch * chunk_len).map(|c| Mutex::new(Some(c))).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let b = cursor.fetch_add(1, Ordering::Relaxed);
+                if b >= slots.len() {
+                    break;
+                }
+                let slab = slots[b].lock().unwrap().take().expect("batch claimed twice");
+                for (i, chunk) in slab.chunks_mut(chunk_len).enumerate() {
+                    f(b * batch + i, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel indexed map over `0..n`, preserving order.
+pub fn map_range<O: Send, F>(n: usize, f: F) -> Vec<O>
+where
+    F: Fn(usize) -> O + Sync,
+{
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 4 {
+        return (0..n).map(f).collect();
+    }
+    let batch = n.div_ceil(threads * BATCHES_PER_THREAD).max(1);
+    let n_batches = n.div_ceil(batch);
+    let slots: Vec<Mutex<Option<Vec<O>>>> = (0..n_batches).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let b = cursor.fetch_add(1, Ordering::Relaxed);
+                if b >= n_batches {
+                    break;
+                }
+                let lo = b * batch;
+                let hi = (lo + batch).min(n);
+                let vals: Vec<O> = (lo..hi).map(&f).collect();
+                *slots[b].lock().unwrap() = Some(vals);
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(n);
+    for slot in slots {
+        out.extend(slot.into_inner().unwrap().expect("batch unfilled"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_each_processed_once() {
+        let mut data = vec![0u32; 1003];
+        for_each_chunk(&mut data, 10, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v += i as u32 + 1;
+            }
+        });
+        assert_eq!(data[0], 1); // chunk 0
+        assert_eq!(data[15], 2); // chunk 1
+        assert_eq!(data[1002], 101); // chunk 100 (tail, len 3)
+        assert!(data.iter().all(|&v| v != 0));
+    }
+
+    #[test]
+    fn chunk_indices_are_global() {
+        let mut data = vec![0usize; 997];
+        for_each_chunk(&mut data, 7, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v = i;
+            }
+        });
+        for (pos, &v) in data.iter().enumerate() {
+            assert_eq!(v, pos / 7, "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn map_range_preserves_order() {
+        let out = map_range(1000, |i| i * i);
+        assert_eq!(out.len(), 1000);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        let mut data: Vec<u8> = vec![];
+        for_each_chunk(&mut data, 4, |_, _| panic!("no chunks expected"));
+        let out: Vec<u8> = map_range(0, |_| 1u8);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn uneven_tail_chunk() {
+        let mut data = vec![1u8; 7];
+        let sizes = Mutex::new(Vec::new());
+        for_each_chunk(&mut data, 3, |_, c| sizes.lock().unwrap().push(c.len()));
+        let mut s = sizes.into_inner().unwrap();
+        s.sort_unstable();
+        assert_eq!(s, vec![1, 3, 3]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Minimal property-based testing helper (the offline proptest stand-in).
+//!
+//! Drives randomized invariant checks from the same xoshiro256++ generator
+//! the quantizer uses. Each property runs `cases` times with derived seeds;
+//! on failure the failing seed is reported so the case can be replayed.
+//!
+//! ```
+//! use tango::util::prop::{check, Gen};
+//! check("abs is non-negative", 64, |g| {
+//!     let x = g.f32_in(-10.0, 10.0);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+
+use crate::quant::rng::Xoshiro256pp;
+
+/// A source of random test inputs.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    /// The seed this case was started from (for failure replay).
+    pub seed: u64,
+}
+
+impl Gen {
+    /// New generator for one case.
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Xoshiro256pp::new(seed), seed }
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + (self.rng.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    /// Uniform u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Bernoulli(p).
+    pub fn bool(&mut self, p: f32) -> bool {
+        self.rng.next_f32() < p
+    }
+
+    /// A vec of f32s in `[lo, hi)`.
+    pub fn f32_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// A random small graph as (num_nodes, src, dst) with at least 1 node.
+    pub fn graph(&mut self, max_nodes: usize, max_edges: usize) -> (usize, Vec<u32>, Vec<u32>) {
+        let n = self.usize_in(1, max_nodes);
+        let m = self.usize_in(0, max_edges);
+        let src = (0..m).map(|_| self.usize_in(0, n - 1) as u32).collect();
+        let dst = (0..m).map(|_| self.usize_in(0, n - 1) as u32).collect();
+        (n, src, dst)
+    }
+}
+
+/// Run `body` for `cases` derived seeds. Panics (with the seed) on failure.
+pub fn check(name: &str, cases: u64, body: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        let seed = 0xDA7A_5EED ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            body(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("sum symmetric", 32, |g| {
+            let a = g.f32_in(-5.0, 5.0);
+            let b = g.f32_in(-5.0, 5.0);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failures() {
+        check("always fails", 4, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn graph_generator_is_well_formed() {
+        check("graph bounds", 64, |g| {
+            let (n, src, dst) = g.graph(20, 50);
+            assert!(n >= 1);
+            assert_eq!(src.len(), dst.len());
+            assert!(src.iter().all(|&v| (v as usize) < n));
+            assert!(dst.iter().all(|&v| (v as usize) < n));
+        });
+    }
+
+    #[test]
+    fn usize_in_inclusive_bounds() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 5);
+            assert!((3..=5).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Property-based invariants across modules (the proptest-style suite;
+//! driven by `tango::util::prop`).
+
+use tango::coordinator::{detect_reuse, QuantCache};
+use tango::graph::{Coo, Csr, Incidence};
+use tango::multigpu::ring_allreduce;
+use tango::primitives::{
+    edge_softmax, gemm_f32, incidence_spmm, qgemm, spmm_edge_aggregate_3mat, spmm_edge_weighted,
+    spmm_per_head,
+};
+use tango::quant::{dequantize, error_x, quantize, Rounding};
+use tango::tensor::Dense;
+use tango::util::prop::{check, Gen};
+
+fn random_graph(g: &mut Gen, max_nodes: usize, max_edges: usize) -> Coo {
+    let (n, src, dst) = g.graph(max_nodes, max_edges);
+    Coo::new(n, src, dst)
+}
+
+fn random_dense(g: &mut Gen, rows: usize, cols: usize) -> Dense<f32> {
+    Dense::from_vec(&[rows, cols], g.f32_vec(rows * cols, -2.0, 2.0))
+}
+
+#[test]
+fn prop_quantize_roundtrip_error_bounded() {
+    check("quantize roundtrip", 100, |g| {
+        let n = g.usize_in(1, 512);
+        let bits = [2u8, 4, 8][g.usize_in(0, 2)];
+        let x = Dense::from_vec(&[n], g.f32_vec(n, -10.0, 10.0));
+        let rounding = if g.bool(0.5) { Rounding::Nearest } else { Rounding::Stochastic { seed: g.u64() } };
+        let q = quantize(&x, bits, rounding);
+        let y = dequantize(&q);
+        let bound = match rounding {
+            Rounding::Nearest => q.scale / 2.0,
+            Rounding::Stochastic { .. } => q.scale,
+        } + 1e-5;
+        for (a, b) in x.data().iter().zip(y.data().iter()) {
+            assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+        }
+        // Error_X always in [0, 1].
+        let e = error_x(&x, &y);
+        assert!((0.0..=1.0).contains(&e), "Error_X {e}");
+    });
+}
+
+#[test]
+fn prop_incidence_spmm_equals_three_matrix() {
+    // The Fig. 5 reformulation is exact on arbitrary graphs.
+    check("incidence == 3mat", 60, |g| {
+        let coo = random_graph(g, 40, 150);
+        let csr = Csr::from_coo(&coo);
+        let inc = Incidence::from_csr(&csr);
+        let f = g.usize_in(1, 12);
+        let ef = random_dense(g, coo.num_edges(), f);
+        if coo.num_edges() == 0 {
+            return;
+        }
+        let a = spmm_edge_aggregate_3mat(&csr, &ef);
+        let b = incidence_spmm(&inc, &ef);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    });
+}
+
+#[test]
+fn prop_per_head_split_equals_native() {
+    // The Fig. 6 kernel transform is exact.
+    check("per-head == native", 40, |g| {
+        let coo = random_graph(g, 30, 100);
+        if coo.num_edges() == 0 {
+            return;
+        }
+        let csr = Csr::from_coo(&coo);
+        let heads = g.usize_in(1, 4);
+        let d = g.usize_in(1, 6);
+        let alpha = random_dense(g, coo.num_edges(), heads);
+        let h = random_dense(g, coo.num_nodes, heads * d);
+        let native = spmm_edge_weighted(&csr, &alpha, &h, heads);
+        let split = spmm_per_head(&csr, &alpha, &h, heads);
+        assert!(native.max_abs_diff(&split) < 1e-4);
+    });
+}
+
+#[test]
+fn prop_qgemm_error_bounded_by_grid() {
+    // |qgemm - gemm| <= K * (|A|max sb + |B|max sa + sa sb) per element —
+    // use the loose practical bound K·(sa·|B|max + sb·|A|max + sa·sb).
+    check("qgemm error bound", 30, |g| {
+        let m = g.usize_in(1, 24);
+        let k = g.usize_in(1, 48);
+        let n = g.usize_in(1, 16);
+        let a = random_dense(g, m, k);
+        let b = random_dense(g, k, n);
+        let exact = gemm_f32(&a, &b);
+        let q = qgemm(&a, &b, 8, Rounding::Nearest);
+        let (sa, sb) = (q.qa.scale, q.qb.scale);
+        let bound = k as f32
+            * (0.5 * sa * b.abs_max() + 0.5 * sb * a.abs_max() + 0.25 * sa * sb)
+            + 1e-4;
+        assert!(
+            q.out.max_abs_diff(&exact) <= bound,
+            "err {} > bound {bound}",
+            q.out.max_abs_diff(&exact)
+        );
+    });
+}
+
+#[test]
+fn prop_edge_softmax_is_distribution() {
+    check("softmax rows sum to 1", 40, |g| {
+        let coo = random_graph(g, 25, 80);
+        if coo.num_edges() == 0 {
+            return;
+        }
+        let csr = Csr::from_coo(&coo);
+        let heads = g.usize_in(1, 3);
+        let logits = random_dense(g, coo.num_edges(), heads);
+        let alpha = edge_softmax(&csr, &logits);
+        for v in 0..csr.num_nodes {
+            let (_, eids) = csr.row(v);
+            if eids.is_empty() {
+                continue;
+            }
+            for h in 0..heads {
+                let s: f32 = eids.iter().map(|&e| alpha.at(e as usize, h)).sum();
+                assert!((s - 1.0).abs() < 1e-3, "v={v} h={h}: {s}");
+                for &e in eids {
+                    assert!(alpha.at(e as usize, h) >= 0.0);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_allreduce_mean_and_agreement() {
+    check("allreduce", 40, |g| {
+        let k = g.usize_in(1, 5);
+        let n = g.usize_in(1, 100);
+        let grads: Vec<Vec<f32>> = (0..k).map(|_| g.f32_vec(n, -3.0, 3.0)).collect();
+        let want: Vec<f32> =
+            (0..n).map(|i| grads.iter().map(|gr| gr[i]).sum::<f32>() / k as f32).collect();
+        let mut fp = grads.clone();
+        ring_allreduce(&mut fp, false, 0);
+        for w in 0..k {
+            for i in 0..n {
+                assert!((fp[w][i] - want[i]).abs() < 1e-5);
+            }
+        }
+        let mut q = grads;
+        ring_allreduce(&mut q, true, g.u64());
+        for w in 1..k {
+            assert_eq!(q[0], q[w]);
+        }
+    });
+}
+
+#[test]
+fn prop_cache_returns_identical_tensors() {
+    check("qcache identity", 40, |g| {
+        let mut cache = QuantCache::new();
+        let rows = g.usize_in(1, 32);
+        let cols = g.usize_in(1, 16);
+        let x = random_dense(g, rows, cols);
+        let key = g.u64();
+        let r1 = cache.get_or_quantize(key, &x, 8, Rounding::Nearest).clone();
+        let r2 = cache.get_or_quantize(key, &x, 8, Rounding::Nearest).clone();
+        assert_eq!(r1, r2);
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().misses, 1);
+    });
+}
+
+#[test]
+fn prop_reuse_plan_saves_iff_sharing_exists() {
+    use tango::coordinator::{CompGraph, OpKind};
+    check("reuse accounting", 60, |g| {
+        let n_t = g.usize_in(2, 10);
+        let mut cg = CompGraph::new();
+        let ids: Vec<_> = (0..n_t).map(|i| cg.tensor(&format!("t{i}"))).collect();
+        let ops = g.usize_in(1, 12);
+        for i in 0..ops {
+            let kind = [OpKind::Gemm, OpKind::Spmm, OpKind::Sddmm, OpKind::Softmax][g.usize_in(0, 3)];
+            let a = ids[g.usize_in(0, n_t - 1)];
+            let o = ids[g.usize_in(0, n_t - 1)];
+            cg.op(kind, &format!("op{i}"), &[a], &[o], g.bool(0.5));
+        }
+        let plan = detect_reuse(&cg);
+        assert!(plan.cached_quantizations <= plan.naive_quantizations);
+        // Savings exist iff some tensor has >1 quantizable consumer.
+        let sharing = (0..n_t).any(|t| {
+            let (f, b) = cg.quantizable_consumers(ids[t]);
+            f + b > 1
+        });
+        assert_eq!(plan.saved() > 0, sharing);
+    });
+}
+
+#[test]
+fn prop_csr_roundtrip_preserves_edges() {
+    check("csr reverse roundtrip", 60, |g| {
+        let coo = random_graph(g, 30, 120);
+        let csr = Csr::from_coo(&coo);
+        assert_eq!(csr.reverse().reverse(), csr);
+        // Every edge id appears exactly once.
+        let mut ids: Vec<u32> = csr.edge_ids.clone();
+        ids.sort_unstable();
+        let want: Vec<u32> = (0..coo.num_edges() as u32).collect();
+        assert_eq!(ids, want);
+    });
+}

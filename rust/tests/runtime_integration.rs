@@ -1,0 +1,180 @@
+//! Integration tests over the AOT artifacts: every artifact in the manifest
+//! loads, compiles and runs from Rust, and the numerics of the jax/Pallas
+//! kernels agree with the Rust-native primitives.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use tango::graph::generators::random_features;
+use tango::primitives::{gemm_f32, qgemm};
+use tango::quant::{dequantize, quantize, Rounding};
+use tango::runtime::{Runtime, Value};
+use tango::tensor::Dense;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn quantize8_artifact_matches_rust_quantizer() {
+    let Some(mut rt) = runtime() else { return };
+    let spec = rt.manifest.get("quantize8").unwrap().clone();
+    let (m, k) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let x = random_features(m, k, 1);
+    let out = rt.run("quantize8", &[Value::F32(x.clone())]).unwrap();
+    assert_eq!(out.len(), 2);
+    let q = match &out[0] {
+        Value::I8(t) => t.clone(),
+        other => panic!("expected i8 payload, got {other:?}"),
+    };
+    let scale = out[1].as_scalar_f32().unwrap();
+    let rq = quantize(&x, 8, Rounding::Nearest);
+    assert!((scale - rq.scale).abs() < 1e-6 * rq.scale, "{scale} vs {}", rq.scale);
+    // Nearest rounding can differ by 1 ulp at exact .5 boundaries; demand
+    // bit-identity elsewhere.
+    let mut diffs = 0usize;
+    for (a, b) in q.data().iter().zip(rq.data.data().iter()) {
+        if a != b {
+            diffs += 1;
+            assert!((a - b).abs() <= 1, "{a} vs {b}");
+        }
+    }
+    assert!(diffs < q.len() / 100, "{diffs} of {} differ", q.len());
+}
+
+#[test]
+fn qgemm8_artifact_matches_rust_qgemm() {
+    let Some(mut rt) = runtime() else { return };
+    let spec = rt.manifest.get("qgemm8").unwrap().clone();
+    let (m, k) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let n = spec.inputs[1].shape[1];
+    let a = random_features(m, k, 2);
+    let b = random_features(k, n, 3);
+    let out = rt.run("qgemm8", &[Value::F32(a.clone()), Value::F32(b.clone())]).unwrap();
+    let got = out[0].as_f32().unwrap();
+    let rust = qgemm(&a, &b, 8, Rounding::Nearest);
+    // Same INT8 grid: both should land within one dequantized ULP of the
+    // rust result, and close to the exact FP32 product.
+    let exact = gemm_f32(&a, &b);
+    let rel_jax = got.max_abs_diff(&exact) / exact.abs_max();
+    let rel_rust = rust.out.max_abs_diff(&exact) / exact.abs_max();
+    assert!(rel_jax < 0.05, "jax-kernel rel err {rel_jax}");
+    assert!((rel_jax - rel_rust).abs() < 0.03, "jax {rel_jax} vs rust {rel_rust}");
+}
+
+#[test]
+fn spmm_artifact_matches_manual_aggregation() {
+    let Some(mut rt) = runtime() else { return };
+    let spec = rt.manifest.get("spmm_f32").unwrap().clone();
+    let (n, p) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let f = spec.inputs[2].shape[1];
+    // Tiny deterministic graph: node v aggregates node (v+1) % n.
+    let mut nbr = Dense::<i32>::zeros(&[n, p]);
+    let mut wgt = Dense::<f32>::zeros(&[n, p]);
+    for v in 0..n {
+        nbr.set(v, 0, ((v + 1) % n) as i32);
+        wgt.set(v, 0, 2.0);
+    }
+    let h = random_features(n, f, 4);
+    let out = rt
+        .run("spmm_f32", &[Value::I32(nbr), Value::F32(wgt), Value::F32(h.clone())])
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    for v in 0..n.min(50) {
+        let u = (v + 1) % n;
+        for j in 0..f {
+            let want = 2.0 * h.at(u, j);
+            assert!((got.at(v, j) - want).abs() < 1e-4, "v={v} j={j}");
+        }
+    }
+}
+
+#[test]
+fn every_artifact_compiles() {
+    let Some(mut rt) = runtime() else { return };
+    let names: Vec<String> = rt.names().iter().map(|s| s.to_string()).collect();
+    assert!(names.len() >= 9, "expected >=9 artifacts, got {names:?}");
+    for name in &names {
+        rt.load(name).unwrap_or_else(|e| panic!("artifact {name} failed to compile: {e}"));
+    }
+}
+
+#[test]
+fn gcn_train_step_artifact_reduces_loss() {
+    let Some(mut rt) = runtime() else { return };
+    let spec = rt.manifest.get("gcn_train_step").unwrap().clone();
+    let (n, p, f, h, c) =
+        (spec.sizes["n"], spec.sizes["p"], spec.sizes["f"], spec.sizes["h"], spec.sizes["c"]);
+    // Learnable planted problem with a symmetric padded graph.
+    let mut rng = tango::quant::rng::Xoshiro256pp::new(9);
+    let labels: Vec<u32> = (0..n).map(|_| (rng.next_u64() % c as u64) as u32).collect();
+    let features = tango::graph::generators::features_for_labels(&labels, f, c, 0.5, 10);
+    let mut onehot = Dense::<f32>::zeros(&[n, c]);
+    for (v, &l) in labels.iter().enumerate() {
+        onehot.set(v, l as usize, 1.0);
+    }
+    let mask = Dense::from_vec(&[n], vec![1.0f32; n]);
+    let (mut nbr, mut wgt) = (Dense::<i32>::zeros(&[n, p]), Dense::<f32>::zeros(&[n, p]));
+    let mut fill = vec![1usize; n];
+    for v in 0..n {
+        nbr.set(v, 0, v as i32);
+        wgt.set(v, 0, 1.0);
+    }
+    for _ in 0..n * p {
+        let u = (rng.next_u64() % n as u64) as usize;
+        let v = (rng.next_u64() % n as u64) as usize;
+        if u == v || fill[u] >= p || fill[v] >= p {
+            continue;
+        }
+        nbr.set(u, fill[u], v as i32);
+        wgt.set(u, fill[u], 1.0);
+        fill[u] += 1;
+        nbr.set(v, fill[v], u as i32);
+        wgt.set(v, fill[v], 1.0);
+        fill[v] += 1;
+    }
+    // Row-normalise.
+    for v in 0..n {
+        let s: f32 = wgt.row(v).iter().sum();
+        for x in wgt.row_mut(v) {
+            *x /= s;
+        }
+    }
+    let mut w1 = random_features(f, h, 11);
+    w1.scale(0.25);
+    let mut w2 = random_features(h, c, 12);
+    w2.scale(0.25);
+    let mut first = None;
+    let mut last = 0.0f32;
+    for _ in 0..10 {
+        let out = rt
+            .run(
+                "gcn_train_step",
+                &[
+                    Value::F32(features.clone()),
+                    Value::F32(onehot.clone()),
+                    Value::F32(mask.clone()),
+                    Value::F32(w1.clone()),
+                    Value::F32(w2.clone()),
+                    Value::I32(nbr.clone()),
+                    Value::F32(wgt.clone()),
+                ],
+            )
+            .unwrap();
+        let loss = out[0].as_scalar_f32().unwrap();
+        w1 = out[1].as_f32().unwrap().clone();
+        w2 = out[2].as_f32().unwrap().clone();
+        first.get_or_insert(loss);
+        last = loss;
+        assert!(loss.is_finite());
+    }
+    assert!(last < first.unwrap(), "loss {} -> {last} did not decrease", first.unwrap());
+    // Sanity: dequantize helper available for symmetric checks elsewhere.
+    let q = quantize(&w1, 8, Rounding::Nearest);
+    assert_eq!(dequantize(&q).shape(), w1.shape());
+}
