@@ -52,6 +52,7 @@ fn main() -> tango::Result<()> {
         auto_bits: false,
         seed,
         log_every: 0,
+        ..Default::default()
     };
     let fp_acc = Trainer::from_config(&fp_cfg)?.run()?.final_eval;
     println!("  fp32  : {fp_acc:.4}");

@@ -25,6 +25,7 @@ fn main() -> tango::Result<()> {
             auto_bits: false,
             seed: args.get_as("seed", 42),
             log_every: (epochs / 6).max(1),
+            ..Default::default()
         };
         println!("== {mode_name} on {dataset} (link prediction) ==");
         let mut trainer = Trainer::from_config(&cfg)?;

@@ -39,6 +39,7 @@ fn main() -> tango::Result<()> {
                 auto_bits: false,
                 seed: 42,
                 log_every: 0,
+                ..Default::default()
             },
             workers: k,
             epochs: 3,

@@ -27,6 +27,7 @@ fn main() -> tango::Result<()> {
         auto_bits: false,
         seed: args.get_as("seed", 42),
         log_every: (epochs / 10).max(1),
+        ..Default::default()
     };
 
     println!("== FP32 (DGL baseline) ==");

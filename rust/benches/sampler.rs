@@ -1,0 +1,92 @@
+//! Sampler bench: layered neighbor sampling, FP32 vs quantized (cached)
+//! feature gathering, and sampled mini-batch epochs vs full-graph epochs —
+//! the BiFeat-style motivation for quantizing the gather path.
+
+use tango::config::{ModelKind, TrainConfig};
+use tango::coordinator::Trainer;
+use tango::graph::datasets;
+use tango::graph::Csr;
+use tango::metrics::{bench, Table};
+use tango::model::TrainMode;
+use tango::sampler::{gather_rows, NeighborSampler, QuantFeatureStore};
+
+fn main() {
+    let mut t = Table::new(
+        "bench: neighbor sampling + quantized feature gather",
+        &["dataset", "sample", "gather fp32", "gather int8 (warm)", "mb s/ep", "full s/ep"],
+    );
+    for name in ["Pubmed", "ogbn-arxiv"] {
+        let data = datasets::load_by_name(name, 42);
+        let csr = Csr::from_coo(&data.graph);
+        let degrees = data.graph.in_degrees();
+        let sampler = NeighborSampler::new(vec![10, 10], 7);
+        let seeds: Vec<u32> = data.train_nodes.iter().take(512).copied().collect();
+
+        let sample = bench(&format!("{name} sample 512 seeds [10,10]"), || {
+            sampler.sample_blocks(&csr, &degrees, &seeds, 1)
+        });
+        println!("{}", sample.summary());
+
+        let blocks = sampler.sample_blocks(&csr, &degrees, &seeds, 1);
+        let input = blocks[0].src_nodes.clone();
+        println!(
+            "{name}: batch pulls {} input nodes, {} + {} block edges",
+            input.len(),
+            blocks[0].num_edges(),
+            blocks[1].num_edges()
+        );
+
+        let gf = bench(&format!("{name} gather fp32 x{}", input.len()), || {
+            gather_rows(&data.features, &input)
+        });
+        println!("{}", gf.summary());
+
+        let mut store = QuantFeatureStore::new(&data.features, 8);
+        store.gather_quantized(&data.features, &input); // warm the row cache
+        let gq = bench(&format!("{name} gather int8 warm x{}", input.len()), || {
+            store.gather_quantized(&data.features, &input)
+        });
+        println!("{}", gq.summary());
+        let stats = store.stats();
+        println!(
+            "{name}: feature-cache hit rate {:.1}% ({} hits / {} misses)",
+            stats.hits as f64 / (stats.hits + stats.misses).max(1) as f64 * 100.0,
+            stats.hits,
+            stats.misses
+        );
+
+        // End-to-end: sampled mini-batch epochs vs full-graph epochs.
+        let epochs = 2usize;
+        let mut cfg = TrainConfig {
+            model: ModelKind::Gcn,
+            dataset: name.into(),
+            epochs,
+            hidden: 64,
+            mode: TrainMode::tango(8),
+            log_every: 0,
+            ..Default::default()
+        };
+        cfg.sampler.enabled = true;
+        cfg.sampler.fanouts = vec![10, 10];
+        cfg.sampler.batch_size = 512;
+        let mb = Trainer::from_config(&cfg).unwrap().run().unwrap();
+        let mut full_cfg = cfg.clone();
+        full_cfg.sampler.enabled = false;
+        let full = Trainer::from_config(&full_cfg).unwrap().run().unwrap();
+        let (mb_ep, full_ep) =
+            (mb.wall_secs / epochs as f64, full.wall_secs / epochs as f64);
+        println!(
+            "{name}: minibatch {mb_ep:.3} s/epoch vs full-graph {full_ep:.3} s/epoch\n"
+        );
+
+        t.row(&[
+            name.into(),
+            format!("{:.2}ms", sample.mean * 1e3),
+            format!("{:.3}ms", gf.mean * 1e3),
+            format!("{:.3}ms", gq.mean * 1e3),
+            format!("{mb_ep:.3}"),
+            format!("{full_ep:.3}"),
+        ]);
+    }
+    t.print();
+}

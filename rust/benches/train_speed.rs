@@ -28,6 +28,7 @@ fn main() {
                     auto_bits: false,
                     seed: 42,
                     log_every: 0,
+                    ..Default::default()
                 };
                 let mut tr = Trainer::from_config(&cfg).unwrap();
                 tr.run().unwrap().wall_secs / epochs as f64

@@ -58,6 +58,57 @@ pub fn mode_name(mode: &TrainMode) -> &'static str {
     }
 }
 
+/// Mini-batch neighbor-sampling knobs (the DGL-style sampled training mode
+/// run by `sampler::MiniBatchTrainer`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SamplerConfig {
+    /// Train on sampled mini-batches instead of full-graph epochs.
+    pub enabled: bool,
+    /// Per-layer fanouts, input-side layer first. Repeated (last entry) or
+    /// truncated to the model's layer count at trainer construction.
+    pub fanouts: Vec<usize>,
+    /// Seed nodes per mini-batch.
+    pub batch_size: usize,
+    /// Extra seed for the sampling streams (xor'ed with the run seed so the
+    /// sampling randomness can vary independently of model init).
+    pub seed: u64,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig { enabled: false, fanouts: vec![10, 10], batch_size: 512, seed: 0x5A17 }
+    }
+}
+
+/// Parse a comma-separated fanout list: `"10,10"`, `"15, 10, 5"`.
+pub fn parse_fanouts(s: &str) -> Result<Vec<usize>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(part.parse::<usize>().map_err(|e| format!("fanout '{part}': {e}"))?);
+    }
+    if out.is_empty() {
+        return Err(format!("no fanouts in '{s}'"));
+    }
+    if out.contains(&0) {
+        return Err("fanouts must be >= 1".to_string());
+    }
+    Ok(out)
+}
+
+/// Parse a sampler kind name: `"neighbor"` enables mini-batch sampling,
+/// `"full"`/`"none"` keeps full-graph epochs.
+pub fn parse_sampler(name: &str) -> Result<bool, String> {
+    match name.to_ascii_lowercase().as_str() {
+        "neighbor" | "neighbour" => Ok(true),
+        "full" | "none" | "off" => Ok(false),
+        other => Err(format!("unknown sampler '{other}' (neighbor|full)")),
+    }
+}
+
 /// Full training-run configuration.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -83,6 +134,8 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Log every `log_every` epochs (0 = silent).
     pub log_every: usize,
+    /// Mini-batch neighbor-sampling mode (disabled = full-graph epochs).
+    pub sampler: SamplerConfig,
 }
 
 impl Default for TrainConfig {
@@ -100,6 +153,7 @@ impl Default for TrainConfig {
             auto_bits: false,
             seed: 42,
             log_every: 0,
+            sampler: SamplerConfig::default(),
         }
     }
 }
@@ -159,6 +213,21 @@ impl TrainConfig {
         if let Some(v) = get("auto_bits") {
             cfg.auto_bits = v == "true";
         }
+        if let Some(v) = get("sampler") {
+            cfg.sampler.enabled = parse_sampler(v)?;
+        }
+        if let Some(v) = get("fanouts") {
+            cfg.sampler.fanouts = parse_fanouts(v)?;
+        }
+        if let Some(v) = get("batch_size") {
+            cfg.sampler.batch_size = v.parse().map_err(|e| format!("batch_size: {e}"))?;
+            if cfg.sampler.batch_size == 0 {
+                return Err("batch_size must be >= 1".to_string());
+            }
+        }
+        if let Some(v) = get("sample_seed") {
+            cfg.sampler.seed = v.parse().map_err(|e| format!("sample_seed: {e}"))?;
+        }
         Ok(cfg)
     }
 }
@@ -205,6 +274,39 @@ auto_bits = true
     fn rejects_unknown_model_and_mode() {
         assert!(TrainConfig::from_toml("[train]\nmodel = \"transformer\"\n").is_err());
         assert!(TrainConfig::from_toml("[train]\nmode = \"int2\"\n").is_err());
+    }
+
+    #[test]
+    fn sampler_keys_parse() {
+        let text = r#"
+[train]
+model = "gcn"
+sampler = "neighbor"
+fanouts = "15,10"
+batch_size = 256
+sample_seed = 99
+"#;
+        let cfg = TrainConfig::from_toml(text).unwrap();
+        assert!(cfg.sampler.enabled);
+        assert_eq!(cfg.sampler.fanouts, vec![15, 10]);
+        assert_eq!(cfg.sampler.batch_size, 256);
+        assert_eq!(cfg.sampler.seed, 99);
+        // Default stays full-graph.
+        let plain = TrainConfig::from_toml("[train]\nmodel = \"gcn\"\n").unwrap();
+        assert!(!plain.sampler.enabled);
+    }
+
+    #[test]
+    fn fanouts_parser_accepts_lists_and_rejects_junk() {
+        assert_eq!(parse_fanouts("10,10").unwrap(), vec![10, 10]);
+        assert_eq!(parse_fanouts(" 15, 10 ,5 ").unwrap(), vec![15, 10, 5]);
+        assert!(parse_fanouts("").is_err());
+        assert!(parse_fanouts("a,b").is_err());
+        assert!(parse_fanouts("10,0").is_err());
+        assert!(TrainConfig::from_toml("[train]\nbatch_size = 0\n").is_err());
+        assert!(parse_sampler("neighbor").unwrap());
+        assert!(!parse_sampler("full").unwrap());
+        assert!(parse_sampler("metis").is_err());
     }
 
     #[test]

@@ -21,6 +21,6 @@ pub mod trainer;
 
 pub use adaptive::{choose_spmm_kernel, SpmmKernel};
 pub use graph_ir::{CompGraph, OpKind, TensorId};
-pub use qcache::QuantCache;
+pub use qcache::{CacheStats, QuantCache};
 pub use reuse::{detect_reuse, ReusePlan};
 pub use trainer::{TrainReport, Trainer};

@@ -57,6 +57,26 @@ impl QuantCache {
         }
     }
 
+    /// Get the cached tensor under `key`, building it with `make` on miss.
+    ///
+    /// Unlike [`Self::get_or_quantize`] the caller controls how the tensor
+    /// is produced — the sampler's feature store quantizes per-node rows
+    /// against one *shared* scale so gathered rows assemble into a single
+    /// batch `QTensor`. Hit/miss accounting matches `get_or_quantize`.
+    pub fn get_or_insert_with(&mut self, key: u64, make: impl FnOnce() -> QTensor) -> &QTensor {
+        use std::collections::hash_map::Entry;
+        match self.entries.entry(key) {
+            Entry::Occupied(e) => {
+                self.stats.hits += 1;
+                e.into_mut()
+            }
+            Entry::Vacant(e) => {
+                self.stats.misses += 1;
+                e.insert(make())
+            }
+        }
+    }
+
     /// Insert an externally produced quantized tensor (e.g. the `qa`/`qb`
     /// copies the fused GEMM stores back).
     pub fn put(&mut self, key: u64, q: QTensor) {
@@ -136,6 +156,23 @@ mod tests {
         // After clear, same key requantizes (dynamic quantization).
         c.get_or_quantize(1, &x, 8, Rounding::Nearest);
         assert_eq!(c.stats().misses, 2);
+    }
+
+    #[test]
+    fn get_or_insert_with_counts_and_reuses() {
+        let mut c = QuantCache::new();
+        let x = random_features(4, 4, 7);
+        let q = crate::quant::quantize(&x, 8, Rounding::Nearest);
+        let mut built = 0usize;
+        for _ in 0..3 {
+            let got = c.get_or_insert_with(5, || {
+                built += 1;
+                q.clone()
+            });
+            assert_eq!(got, &q);
+        }
+        assert_eq!(built, 1, "factory must run only on the miss");
+        assert_eq!(c.stats(), CacheStats { misses: 1, hits: 2 });
     }
 
     #[test]

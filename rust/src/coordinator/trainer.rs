@@ -116,8 +116,28 @@ impl Trainer {
         self.cfg.mode
     }
 
-    /// Run the configured number of epochs.
+    /// Run the configured number of epochs. When
+    /// `TrainConfig::sampler.enabled` is set, training runs as sampled
+    /// mini-batches via [`crate::sampler::MiniBatchTrainer`] instead of
+    /// full-graph steps (evaluation stays full-graph in both modes).
     pub fn run(&mut self) -> crate::Result<TrainReport> {
+        if self.cfg.sampler.enabled {
+            // Bits were already derived in `with_dataset` when auto_bits is
+            // set — don't re-run the probe inside the delegate.
+            let mut cfg = self.cfg.clone();
+            cfg.auto_bits = false;
+            let mut mb =
+                crate::sampler::MiniBatchTrainer::with_dataset(cfg, self.data.clone())?;
+            let report = mb.run()?;
+            // Adopt the trained weights so `evaluate()` (and a later
+            // full-graph `run()`) continue from the sampled training state.
+            let trained = mb.params_flat();
+            match &mut self.model {
+                AnyModel::Gcn(m) => m.set_params_flat(&trained),
+                AnyModel::Gat(m) => m.set_params_flat(&trained),
+            }
+            return Ok(report);
+        }
         let mut losses = Vec::with_capacity(self.cfg.epochs);
         let mut evals = Vec::with_capacity(self.cfg.epochs);
         let mut wall = 0.0f64;
@@ -267,6 +287,7 @@ mod tests {
             auto_bits: false,
             seed: 3,
             log_every: 0,
+            ..Default::default()
         }
     }
 
@@ -306,6 +327,42 @@ mod tests {
         let r = t.run().unwrap();
         assert_eq!(r.losses.len(), 3);
         assert!(r.final_eval > 0.0 && r.final_eval <= 1.0);
+    }
+
+    #[test]
+    fn sampler_flag_delegates_to_minibatch_path() {
+        // `tango train --sampler neighbor` goes through the same Trainer
+        // front door; with generous fanouts on tiny the sampled run must
+        // land within 5% of the full-graph run (the DGL-parity criterion).
+        let mut full_cfg = quick_cfg(ModelKind::Gcn, "tango");
+        full_cfg.epochs = 60;
+        let full = Trainer::from_config(&full_cfg).unwrap().run().unwrap();
+
+        let mut mb_cfg = full_cfg.clone();
+        mb_cfg.sampler.enabled = true;
+        mb_cfg.sampler.fanouts = vec![16, 16];
+        mb_cfg.sampler.batch_size = 64;
+        let mb = Trainer::from_config(&mb_cfg).unwrap().run().unwrap();
+
+        assert_eq!(mb.losses.len(), 60);
+        assert!(mb.losses[59] < mb.losses[0], "{:?}", mb.losses);
+        assert!(
+            mb.final_eval >= full.final_eval - 0.05,
+            "sampled eval {} vs full-graph {}",
+            mb.final_eval,
+            full.final_eval
+        );
+        // The Trainer adopts the trained weights from the sampled run, so
+        // its own evaluate() reflects the training (stochastic-rounding
+        // streams differ by step count, hence the tolerance).
+        let mut t = Trainer::from_config(&mb_cfg).unwrap();
+        let report = t.run().unwrap();
+        let after = t.evaluate();
+        assert!(
+            (after - report.final_eval).abs() < 0.05,
+            "adopted-weights eval {after} vs reported {}",
+            report.final_eval
+        );
     }
 
     #[test]

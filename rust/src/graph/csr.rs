@@ -38,6 +38,20 @@ impl Csr {
         Self::group_by(coo.num_nodes, &coo.src, &coo.dst)
     }
 
+    /// Build a (possibly rectangular) grouping from parallel edge arrays:
+    /// row `group_key[e]` gets the entry `(other_end[e], e)`.
+    ///
+    /// Unlike [`Csr::from_coo`], `other_end` values may exceed `num_rows` —
+    /// the sampler's MFG blocks group edges by a compact destination set
+    /// while sources index a larger frontier (`num_src >= num_dst`). The
+    /// resulting `Csr` is only a row grouping; [`Csr::reverse`] assumes a
+    /// square adjacency and must not be called on it.
+    pub fn from_grouped_edges(num_rows: usize, group_key: &[u32], other_end: &[u32]) -> Self {
+        assert_eq!(group_key.len(), other_end.len(), "group_key/other_end length mismatch");
+        debug_assert!(group_key.iter().all(|&v| (v as usize) < num_rows));
+        Self::group_by(num_rows, group_key, other_end)
+    }
+
     fn group_by(num_nodes: usize, group_key: &[u32], other_end: &[u32]) -> Self {
         let m = group_key.len();
         let mut indptr = vec![0usize; num_nodes + 1];
@@ -143,6 +157,18 @@ mod tests {
         assert_eq!(csr.degree(0), 1);
         assert_eq!(csr.degree(3), 2);
         assert_eq!(csr.max_degree(), 2);
+    }
+
+    #[test]
+    fn rectangular_grouping_for_blocks() {
+        // 2 dst rows, 4 src (frontier) nodes: edges 2->0, 3->0, 1->1.
+        let csr = Csr::from_grouped_edges(2, &[0, 0, 1], &[2, 3, 1]);
+        assert_eq!(csr.num_nodes, 2);
+        assert_eq!(csr.num_edges, 3);
+        let (srcs, eids) = csr.row(0);
+        assert_eq!(srcs, &[2, 3]);
+        assert_eq!(eids, &[0, 1]);
+        assert_eq!(csr.row(1).0, &[1]);
     }
 
     #[test]

@@ -15,11 +15,13 @@
 //! ## Layer map
 //!
 //! - **Layer 3 (this crate)** — the coordinator: graph substrate, quantized
-//!   primitives, GCN/GAT models with explicit backward passes, the
-//!   inter-primitive quantized-tensor cache and reuse detection, adaptive
-//!   kernel selection, a multi-worker data-parallel simulator, an analytical
-//!   GPU cost model, and the PJRT runtime that executes jax-lowered
-//!   artifacts.
+//!   primitives, GCN/GAT models with explicit backward passes (full-graph
+//!   *and* sampled-block), the inter-primitive quantized-tensor cache and
+//!   reuse detection, adaptive kernel selection, the mini-batch
+//!   neighbor-sampling subsystem ([`sampler`]: layered fanout sampling,
+//!   MFG block extraction, quantized feature gathering), a multi-worker
+//!   data-parallel simulator, an analytical GPU cost model, and the PJRT
+//!   runtime that executes jax-lowered artifacts.
 //! - **Layer 2 (`python/compile/model.py`)** — GCN/GAT forward/backward in
 //!   JAX, AOT-lowered to HLO text under `artifacts/`.
 //! - **Layer 1 (`python/compile/kernels/`)** — Pallas kernels (quantize,
@@ -51,6 +53,7 @@ pub mod primitives;
 pub mod quant;
 pub mod repro;
 pub mod runtime;
+pub mod sampler;
 pub mod tensor;
 pub mod util;
 

@@ -4,6 +4,8 @@
 //! tango train  [--config cfg.toml] [--model gcn|gat] [--dataset NAME]
 //!              [--mode fp32|tango|test1|test2|exact] [--epochs N]
 //!              [--bits B] [--auto-bits] [--lr F] [--hidden N] [--seed S]
+//!              [--sampler neighbor|full] [--fanouts 10,10]
+//!              [--batch-size N] [--sample-seed S]
 //! tango repro  <table1|fig2|fig7|...|fig16|table2|all> [--quick]
 //!              [--epochs N] [--speed-epochs N]
 //! tango plan                # print the derived quantization-caching plan
@@ -43,6 +45,7 @@ fn print_help() {
         "tango — quantized GNN training (SC'23 reproduction)\n\n\
          subcommands:\n\
          \x20 train      train a GCN/GAT with Tango or baseline modes\n\
+         \x20            (--sampler neighbor for sampled mini-batches)\n\
          \x20 repro      regenerate a paper table/figure (or 'all')\n\
          \x20 plan       print the quantization-caching plan for a GAT layer\n\
          \x20 artifacts  list and smoke-run the AOT artifacts\n\
@@ -78,6 +81,15 @@ fn train_config_from(args: &Args) -> tango::Result<TrainConfig> {
     if args.get_bool("auto-bits") {
         cfg.auto_bits = true;
     }
+    if let Some(s) = args.flags.get("sampler") {
+        cfg.sampler.enabled =
+            tango::config::parse_sampler(s).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(f) = args.flags.get("fanouts") {
+        cfg.sampler.fanouts = tango::config::parse_fanouts(f).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    cfg.sampler.batch_size = args.get_as("batch-size", cfg.sampler.batch_size);
+    cfg.sampler.seed = args.get_as("sample-seed", cfg.sampler.seed);
     cfg.log_every = args.get_as("log-every", 10);
     Ok(cfg)
 }
@@ -92,6 +104,12 @@ fn cmd_train(args: &Args) -> tango::Result<()> {
         cfg.mode.bits,
         cfg.epochs
     );
+    if cfg.sampler.enabled {
+        println!(
+            "sampler: neighbor, fanouts {:?}, batch size {}",
+            cfg.sampler.fanouts, cfg.sampler.batch_size
+        );
+    }
     let mut trainer = Trainer::from_config(&cfg)?;
     let report = trainer.run()?;
     println!(

@@ -20,6 +20,7 @@ use crate::graph::{Coo, Csr};
 use crate::primitives::{gemm_f32, qgemm, qgemm_prequantized, qspmm_edge_weighted, spmm_csr_values};
 use crate::quant::{dequantize, quantize, QTensor, Rounding};
 use crate::quant::rng::Xoshiro256pp;
+use crate::sampler::Block;
 use crate::tensor::Dense;
 
 /// GCN hyperparameters (paper §4.1: hidden 128, two layers).
@@ -50,6 +51,10 @@ struct LayerCache {
     qx: Option<QTensor>,
     /// Quantized `W` kept from the forward GEMM.
     qw: Option<QTensor>,
+    /// Quantized block edge norms (sampled path only — quantized once per
+    /// step in the forward and reused by the backward SPMM, §3.3; the
+    /// full-graph path uses the static `GcnModel::qnorm` instead).
+    qnorm: Option<QTensor>,
 }
 
 /// A GCN model bound to one graph.
@@ -149,7 +154,7 @@ impl GcnModel {
             };
             let out = if l + 1 < self.layers.len() { relu(&z) } else { z.clone() };
             let _ = &xw; // consumed by z above
-            caches.push(LayerCache { x: x.clone(), z, qx, qw });
+            caches.push(LayerCache { x: x.clone(), z, qx, qw, qnorm: None });
             x = out;
         }
         (x, caches)
@@ -178,6 +183,133 @@ impl GcnModel {
         }
         self.step_count += 1;
         (loss, logits)
+    }
+
+    /// Forward over per-layer sampled [`Block`]s (the mini-batch path).
+    ///
+    /// `x0` holds the input features of `blocks[0]`'s source nodes; layer
+    /// `l` aggregates over `blocks[l]`, shrinking the row set from
+    /// `blocks[l].num_src()` to `blocks[l].num_dst`. Returns logits for the
+    /// final block's destination (seed) nodes plus the backward caches.
+    fn forward_blocks_cached(
+        &self,
+        blocks: &[Block],
+        x0: &Dense<f32>,
+    ) -> (Dense<f32>, Vec<LayerCache>) {
+        assert_eq!(blocks.len(), self.layers.len(), "one block per layer");
+        let mode = self.cfg.mode;
+        let mut caches = Vec::with_capacity(self.layers.len());
+        let mut x = x0.clone();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let blk = &blocks[l];
+            assert_eq!(x.rows(), blk.num_src(), "layer {l}: input rows != block src nodes");
+            let (xw, qx, qw) = if self.layer_quantized(l) {
+                let r = qgemm(&x, &layer.w, mode.bits, mode.rounding(self.step_count, l as u64));
+                (r.out, Some(r.qa), Some(r.qb))
+            } else if mode.exact_style {
+                let x2 = self.exact_roundtrip(&x);
+                let w2 = self.exact_roundtrip(&layer.w);
+                (gemm_f32(&x2, &w2), None, None)
+            } else {
+                (gemm_f32(&x, &layer.w), None, None)
+            };
+            let (z, qnorm) = if self.layer_quantized(l) {
+                let qxw = quantize(&xw, mode.bits, mode.rounding(self.step_count, 100 + l as u64));
+                let qnorm = Self::quantize_block_norm(blk, mode.bits);
+                (qspmm_edge_weighted(&blk.csr, &qnorm, &qxw, 1), Some(qnorm))
+            } else if mode.exact_style {
+                (spmm_csr_values(&blk.csr, &blk.norm, &self.exact_roundtrip(&xw)), None)
+            } else {
+                (spmm_csr_values(&blk.csr, &blk.norm, &xw), None)
+            };
+            let out = if l + 1 < self.layers.len() { relu(&z) } else { z.clone() };
+            caches.push(LayerCache { x: x.clone(), z, qx, qw, qnorm });
+            x = out;
+        }
+        (x, caches)
+    }
+
+    /// Per-block edge norms as a quantized `[E, 1]` tensor (blocks are
+    /// re-sampled every batch, so their norms quantize per step — unlike the
+    /// full-graph `qnorm`, which is static and quantized once at build).
+    fn quantize_block_norm(blk: &Block, bits: u8) -> QTensor {
+        quantize(
+            &Dense::from_vec(&[blk.norm.len(), 1], blk.norm.clone()),
+            bits,
+            Rounding::Nearest,
+        )
+    }
+
+    /// Inference-only forward over sampled blocks.
+    pub fn forward_blocks(&self, blocks: &[Block], x0: &Dense<f32>) -> Dense<f32> {
+        self.forward_blocks_cached(blocks, x0).0
+    }
+
+    /// One mini-batch training step over sampled blocks (the sampled
+    /// counterpart of [`Self::train_step`]); `loss_grad` sees logits for the
+    /// final block's destination nodes, in `blocks.last().dst_nodes()` order.
+    pub fn train_step_blocks(
+        &mut self,
+        blocks: &[Block],
+        x0: &Dense<f32>,
+        opt: &mut super::Sgd,
+        loss_grad: impl FnOnce(&Dense<f32>) -> (f32, Dense<f32>),
+    ) -> (f32, Dense<f32>) {
+        let (logits, caches) = self.forward_blocks_cached(blocks, x0);
+        let (loss, dlogits) = loss_grad(&logits);
+        self.backward_blocks(blocks, &caches, dlogits);
+        for (i, layer) in self.layers.iter_mut().enumerate() {
+            opt.step(i, &mut layer.w, &layer.grad_w);
+        }
+        self.step_count += 1;
+        (loss, logits)
+    }
+
+    /// Backward over sampled blocks: the reversed aggregation runs on each
+    /// block's source-grouped CSR, expanding gradients from `num_dst` back
+    /// to `num_src` rows before the weight GEMMs.
+    fn backward_blocks(&mut self, blocks: &[Block], caches: &[LayerCache], mut grad: Dense<f32>) {
+        let mode = self.cfg.mode;
+        for l in (0..self.layers.len()).rev() {
+            let blk = &blocks[l];
+            let cache = &caches[l];
+            if l + 1 < self.layers.len() {
+                grad = relu_backward(&cache.z, &grad);
+            }
+            let dxw = if self.layer_quantized(l) {
+                let qg = quantize(&grad, mode.bits, mode.rounding(self.step_count, 200 + l as u64));
+                // Reuse the forward's quantized block norms (§3.3 rule).
+                let qnorm = cache.qnorm.as_ref().expect("forward cached block qnorm");
+                qspmm_edge_weighted(&blk.csr_rev, qnorm, &qg, 1)
+            } else if mode.exact_style {
+                spmm_csr_values(&blk.csr_rev, &blk.norm, &self.exact_roundtrip(&grad))
+            } else {
+                spmm_csr_values(&blk.csr_rev, &blk.norm, &grad)
+            };
+            if self.layer_quantized(l) {
+                let qdxw = quantize(&dxw, mode.bits, mode.rounding(self.step_count, 300 + l as u64));
+                let qx = cache.qx.as_ref().expect("forward cached qx");
+                let qw = cache.qw.as_ref().expect("forward cached qw");
+                let (gw, _) = qgemm_prequantized(&qx.transpose2d(), &qdxw, mode.bits);
+                self.layers[l].grad_w = gw;
+                if l > 0 {
+                    let (gx, _) = qgemm_prequantized(&qdxw, &qw.transpose2d(), mode.bits);
+                    grad = gx;
+                }
+            } else if mode.exact_style {
+                let x2 = self.exact_roundtrip(&cache.x);
+                let d2 = self.exact_roundtrip(&dxw);
+                self.layers[l].grad_w = gemm_f32(&x2.transpose(), &d2);
+                if l > 0 {
+                    grad = gemm_f32(&d2, &self.exact_roundtrip(&self.layers[l].w).transpose());
+                }
+            } else {
+                self.layers[l].grad_w = gemm_f32(&cache.x.transpose(), &dxw);
+                if l > 0 {
+                    grad = gemm_f32(&dxw, &self.layers[l].w.transpose());
+                }
+            }
+        }
     }
 
     /// Backward pass, filling each layer's `grad_w`.
@@ -380,6 +512,94 @@ mod tests {
                 assert!((fd - an).abs() < 3e-2, "layer {l} idx {idx}: fd={fd} an={an}");
             }
         }
+    }
+
+    #[test]
+    fn block_path_matches_full_graph_fp32() {
+        // Blocks with full fanout over every node are the whole graph in
+        // MFG clothing — forward and one training step must agree with the
+        // full-graph path up to float summation order.
+        use crate::sampler::{gather_rows, NeighborSampler};
+        let d = datasets::tiny(7);
+        let cfg = GcnConfig {
+            in_dim: d.features.cols(),
+            hidden: 16,
+            out_dim: d.num_classes,
+            layers: 2,
+            mode: TrainMode::fp32(),
+        };
+        let mut full = GcnModel::new(cfg, &d.graph, 42);
+        let mut blocked = GcnModel::new(cfg, &d.graph, 42);
+        let csr = Csr::from_coo(&d.graph);
+        let degrees = d.graph.in_degrees();
+        let seeds: Vec<u32> = (0..d.graph.num_nodes as u32).collect();
+        let sampler = NeighborSampler::new(vec![1 << 30, 1 << 30], 1);
+        let blocks = sampler.sample_blocks(&csr, &degrees, &seeds, 0);
+        let x0 = gather_rows(&d.features, &blocks[0].src_nodes);
+        assert_eq!(x0, d.features, "full-fanout all-node frontier is the identity");
+
+        let a = full.forward(&d.features);
+        let b = blocked.forward_blocks(&blocks, &x0);
+        assert_eq!(a.shape(), b.shape());
+        assert!(a.max_abs_diff(&b) < 1e-4, "forward diff {}", a.max_abs_diff(&b));
+
+        let mut opt_a = Sgd::new(0.05);
+        let mut opt_b = Sgd::new(0.05);
+        let (la, _) = full.train_step(&d.features, &mut opt_a, |lg| {
+            softmax_cross_entropy(lg, &d.labels, &d.train_nodes)
+        });
+        let (lb, _) = blocked.train_step_blocks(&blocks, &x0, &mut opt_b, |lg| {
+            softmax_cross_entropy(lg, &d.labels, &d.train_nodes)
+        });
+        assert!((la - lb).abs() < 1e-4, "loss {la} vs {lb}");
+        let pa = full.params_flat();
+        let pb = blocked.params_flat();
+        let max_diff = pa
+            .iter()
+            .zip(pb.iter())
+            .fold(0.0f32, |m, (x, y)| m.max((x - y).abs()));
+        assert!(max_diff < 1e-4, "post-step param diff {max_diff}");
+    }
+
+    #[test]
+    fn sampled_minibatch_steps_reduce_loss() {
+        use crate::sampler::{gather_rows, shuffled_batches, NeighborSampler};
+        let d = datasets::tiny(5);
+        let cfg = GcnConfig {
+            in_dim: d.features.cols(),
+            hidden: 16,
+            out_dim: d.num_classes,
+            layers: 2,
+            mode: TrainMode::tango(8),
+        };
+        let mut m = GcnModel::new(cfg, &d.graph, 3);
+        let csr = Csr::from_coo(&d.graph);
+        let degrees = d.graph.in_degrees();
+        let sampler = NeighborSampler::new(vec![8, 8], 13);
+        let mut opt = Sgd::new(0.05);
+        let mut epoch_means = Vec::new();
+        for epoch in 0..15u64 {
+            let mut total = 0.0f32;
+            let mut steps = 0usize;
+            for (bi, batch) in
+                shuffled_batches(&d.train_nodes, 64, epoch).iter().enumerate()
+            {
+                let blocks = sampler.sample_blocks(&csr, &degrees, batch, (epoch << 8) ^ bi as u64);
+                let x0 = gather_rows(&d.features, &blocks[0].src_nodes);
+                let labels: Vec<u32> = batch.iter().map(|&v| d.labels[v as usize]).collect();
+                let nodes: Vec<u32> = (0..batch.len() as u32).collect();
+                let (loss, logits) = m.train_step_blocks(&blocks, &x0, &mut opt, |lg| {
+                    softmax_cross_entropy(lg, &labels, &nodes)
+                });
+                assert_eq!(logits.rows(), batch.len());
+                assert!(loss.is_finite());
+                total += loss;
+                steps += 1;
+            }
+            epoch_means.push(total / steps as f32);
+        }
+        let (first, last) = (epoch_means[0], *epoch_means.last().unwrap());
+        assert!(last < first, "mean batch loss {first} -> {last}: {epoch_means:?}");
     }
 
     #[test]

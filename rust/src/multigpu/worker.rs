@@ -253,6 +253,7 @@ mod tests {
                 auto_bits: false,
                 seed: 5,
                 log_every: 0,
+                ..Default::default()
             },
             workers,
             epochs: 2,

@@ -38,6 +38,7 @@ fn base_train(cfg: &ReproConfig, model: ModelKind, dataset: &str, mode: TrainMod
         auto_bits: false,
         seed: cfg.seed,
         log_every: 0,
+        ..Default::default()
     }
 }
 

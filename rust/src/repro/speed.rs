@@ -43,6 +43,7 @@ fn speed_cfg(cfg: &ReproConfig, model: ModelKind, dataset: &str, mode: TrainMode
         auto_bits: false,
         seed: cfg.seed,
         log_every: 0,
+        ..Default::default()
     }
 }
 

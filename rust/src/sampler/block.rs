@@ -1,0 +1,143 @@
+//! MFG/block-style subgraph extraction (the DGL `to_block` shape).
+//!
+//! A [`Block`] is one layer's bipartite message-flow graph: edges run from a
+//! *source* frontier (layer input) to a compact *destination* set (layer
+//! output). Node ids are compacted so tensors index densely, and the
+//! destination nodes are stored as a **prefix** of the source nodes — the
+//! invariant every block consumer (SPMM output rows, SDDMM `dst` lookups,
+//! residual feature reuse) relies on.
+
+use crate::graph::{Coo, Csr};
+
+/// One layer's sampled bipartite block, with compacted local node ids.
+#[derive(Debug, Clone)]
+pub struct Block {
+    /// Global (parent-graph) ids of the source nodes. The first
+    /// [`Block::num_dst`] entries are the destination nodes — destinations
+    /// are always a prefix of the sources.
+    pub src_nodes: Vec<u32>,
+    /// Number of destination (output) nodes.
+    pub num_dst: usize,
+    /// Local-id edge list: `src[e] ∈ 0..num_src`, `dst[e] ∈ 0..num_dst`.
+    /// `coo.num_nodes == num_src` so source-indexed kernels stay in range.
+    pub coo: Coo,
+    /// Destination-grouped CSR (`num_nodes == num_dst`) — the forward
+    /// aggregation layout; its `srcs` index the full source frontier.
+    pub csr: Csr,
+    /// Source-grouped CSR (`num_nodes == num_src`) — the backward
+    /// (reversed-graph) aggregation layout; its `srcs` are destination ids.
+    pub csr_rev: Csr,
+    /// Per-edge GCN symmetric norm `1/sqrt(deg(u)·deg(v))` computed from the
+    /// *parent graph's* in-degrees, indexed by local edge id.
+    pub norm: Vec<f32>,
+}
+
+impl Block {
+    /// Assemble a block from compacted edge arrays.
+    ///
+    /// `src_nodes` are global ids (destinations first), `src_local` /
+    /// `dst_local` are parallel local-id edge arrays, and `degrees` the
+    /// parent graph's in-degrees (for the GCN edge norms).
+    pub fn new(
+        src_nodes: Vec<u32>,
+        num_dst: usize,
+        src_local: Vec<u32>,
+        dst_local: Vec<u32>,
+        degrees: &[u32],
+    ) -> Self {
+        assert!(num_dst <= src_nodes.len(), "dst nodes must be a prefix of src nodes");
+        assert_eq!(src_local.len(), dst_local.len(), "edge array mismatch");
+        let num_src = src_nodes.len();
+        let deg = |local: u32| -> f32 {
+            let global = src_nodes[local as usize] as usize;
+            degrees.get(global).copied().unwrap_or(1).max(1) as f32
+        };
+        let norm: Vec<f32> = src_local
+            .iter()
+            .zip(dst_local.iter())
+            .map(|(&u, &v)| 1.0 / (deg(u) * deg(v)).sqrt())
+            .collect();
+        let csr = Csr::from_grouped_edges(num_dst, &dst_local, &src_local);
+        let csr_rev = Csr::from_grouped_edges(num_src, &src_local, &dst_local);
+        let coo = Coo::new(num_src, src_local, dst_local);
+        Block { src_nodes, num_dst, coo, csr, csr_rev, norm }
+    }
+
+    /// Number of source (input) nodes.
+    #[inline]
+    pub fn num_src(&self) -> usize {
+        self.src_nodes.len()
+    }
+
+    /// Number of edges in the block.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.coo.num_edges()
+    }
+
+    /// Global ids of the destination (output) nodes — the prefix of
+    /// [`Block::src_nodes`].
+    #[inline]
+    pub fn dst_nodes(&self) -> &[u32] {
+        &self.src_nodes[..self.num_dst]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_block() -> Block {
+        // dst = {10, 11}; frontier adds {12, 13}. Edges (local):
+        // 2->0, 3->0, 1->1, 0->1.
+        Block::new(
+            vec![10, 11, 12, 13],
+            2,
+            vec![2, 3, 1, 0],
+            vec![0, 0, 1, 1],
+            &[4, 4, 1, 9, 0, 0, 0, 0, 0, 0, 1, 1, 4, 4],
+        )
+    }
+
+    #[test]
+    fn shapes_and_prefix() {
+        let b = toy_block();
+        assert_eq!(b.num_src(), 4);
+        assert_eq!(b.num_dst, 2);
+        assert_eq!(b.num_edges(), 4);
+        assert_eq!(b.dst_nodes(), &[10, 11]);
+        assert_eq!(b.csr.num_nodes, 2);
+        assert_eq!(b.csr_rev.num_nodes, 4);
+        assert_eq!(b.coo.num_nodes, 4);
+    }
+
+    #[test]
+    fn csr_groups_by_destination() {
+        let b = toy_block();
+        let (srcs, eids) = b.csr.row(0);
+        assert_eq!(srcs, &[2, 3]);
+        assert_eq!(eids, &[0, 1]);
+        let (srcs, _) = b.csr.row(1);
+        assert_eq!(srcs, &[1, 0]);
+    }
+
+    #[test]
+    fn reversed_csr_groups_by_source() {
+        let b = toy_block();
+        // Local source 2 (global 12) feeds only dst 0.
+        let (dsts, eids) = b.csr_rev.row(2);
+        assert_eq!(dsts, &[0]);
+        assert_eq!(eids, &[0]);
+        // Local source 0 (global 10, also a dst) feeds dst 1 via edge 3.
+        assert_eq!(b.csr_rev.row(0).0, &[1]);
+    }
+
+    #[test]
+    fn norms_use_parent_degrees() {
+        let b = toy_block();
+        // Edge 0: global 12 -> 10, degrees 4 and 1: 1/sqrt(4*1) = 0.5.
+        assert!((b.norm[0] - 0.5).abs() < 1e-6);
+        // Edge 2: global 11 -> 11, degree 1: 1/sqrt(1*1) = 1.0.
+        assert!((b.norm[2] - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,144 @@
+//! Batch feature gathering, plain and quantized.
+//!
+//! In sampled mini-batch training the per-batch feature gather dominates
+//! step time once the graph outgrows cache (the BiFeat observation, see
+//! PAPERS.md): every batch slices a fresh `[num_input, F]` matrix out of
+//! the node-feature table. The quantized path moves 1-byte rows instead of
+//! 4-byte rows and — because the feature table is *static* across training —
+//! caches each node's quantized row in a [`QuantCache`], so hot
+//! (frequently re-sampled) nodes quantize once per run instead of once per
+//! batch.
+//!
+//! All rows share one symmetric scale derived from the full table (static
+//! data ⇒ static scale), which is what lets cached rows assemble into a
+//! single batch [`QTensor`].
+
+use crate::coordinator::qcache::{CacheStats, QuantCache};
+use crate::quant::{dequantize, quantize_with_scale, scale_for_bits, QTensor, Rounding};
+use crate::tensor::Dense;
+
+/// Gather feature rows for a node list into a dense `[nodes.len(), F]`
+/// matrix (the FP32 baseline gather).
+pub fn gather_rows(features: &Dense<f32>, nodes: &[u32]) -> Dense<f32> {
+    let dim = features.cols();
+    let mut out = Dense::zeros(&[nodes.len(), dim]);
+    for (i, &v) in nodes.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(features.row(v as usize));
+    }
+    out
+}
+
+/// Quantized feature store: gathers batch feature slices as INT8 rows under
+/// one shared scale, caching per-node quantized rows for hot nodes.
+#[derive(Debug)]
+pub struct QuantFeatureStore {
+    scale: f32,
+    bits: u8,
+    cache: QuantCache,
+}
+
+impl QuantFeatureStore {
+    /// Build a store for a feature table: one abs-max reduction derives the
+    /// shared scale; rows quantize lazily on first gather.
+    pub fn new(features: &Dense<f32>, bits: u8) -> Self {
+        QuantFeatureStore { scale: scale_for_bits(features, bits), bits, cache: QuantCache::new() }
+    }
+
+    /// Gather the quantized rows of `nodes` into one `[nodes.len(), F]`
+    /// [`QTensor`]. Rows of previously seen nodes come from the cache.
+    pub fn gather_quantized(&mut self, features: &Dense<f32>, nodes: &[u32]) -> QTensor {
+        let dim = features.cols();
+        let mut data: Vec<i8> = Vec::with_capacity(nodes.len() * dim);
+        for &v in nodes {
+            let (scale, bits) = (self.scale, self.bits);
+            let q = self.cache.get_or_insert_with(v as u64, || {
+                let row = Dense::from_vec(&[1, dim], features.row(v as usize).to_vec());
+                quantize_with_scale(&row, scale, bits, Rounding::Nearest)
+            });
+            data.extend_from_slice(q.data.data());
+        }
+        QTensor {
+            data: Dense::from_vec(&[nodes.len(), dim], data),
+            scale: self.scale,
+            bits: self.bits,
+        }
+    }
+
+    /// Gather and dequantize in one call — what the block forward consumes
+    /// when the model itself runs on FP32 inputs.
+    pub fn gather_dequantized(&mut self, features: &Dense<f32>, nodes: &[u32]) -> Dense<f32> {
+        dequantize(&self.gather_quantized(features, nodes))
+    }
+
+    /// Shared symmetric scale of every stored row.
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Bit width of the stored rows.
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Cache hit/miss statistics (hit rate = hot-node reuse).
+    pub fn stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Bytes held by cached quantized rows.
+    pub fn cached_bytes(&self) -> usize {
+        self.cache.cached_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::random_features;
+
+    #[test]
+    fn gather_rows_slices_in_order() {
+        let f = random_features(6, 3, 1);
+        let out = gather_rows(&f, &[4, 0, 4]);
+        assert_eq!(out.shape(), &[3, 3]);
+        assert_eq!(out.row(0), f.row(4));
+        assert_eq!(out.row(1), f.row(0));
+        assert_eq!(out.row(2), f.row(4));
+    }
+
+    #[test]
+    fn quantized_gather_matches_direct_quantization() {
+        let f = random_features(10, 4, 2);
+        let mut store = QuantFeatureStore::new(&f, 8);
+        let nodes = vec![3u32, 7, 3, 0];
+        let q = store.gather_quantized(&f, &nodes);
+        let direct = quantize_with_scale(&gather_rows(&f, &nodes), store.scale(), 8, Rounding::Nearest);
+        assert_eq!(q.data, direct.data);
+        assert_eq!(q.scale, direct.scale);
+        assert_eq!(q.shape(), &[4, 4]);
+    }
+
+    #[test]
+    fn hot_nodes_hit_the_cache() {
+        let f = random_features(8, 4, 3);
+        let mut store = QuantFeatureStore::new(&f, 8);
+        store.gather_quantized(&f, &[1, 2, 3]);
+        assert_eq!(store.stats().misses, 3);
+        assert_eq!(store.stats().hits, 0);
+        store.gather_quantized(&f, &[2, 3, 4]);
+        assert_eq!(store.stats().misses, 4);
+        assert_eq!(store.stats().hits, 2);
+        assert_eq!(store.cached_bytes(), 4 * 4);
+    }
+
+    #[test]
+    fn dequantized_gather_is_close_to_fp32() {
+        let f = random_features(12, 6, 4);
+        let mut store = QuantFeatureStore::new(&f, 8);
+        let nodes: Vec<u32> = vec![0, 5, 11];
+        let approx = store.gather_dequantized(&f, &nodes);
+        let exact = gather_rows(&f, &nodes);
+        // Nearest rounding: within half a grid step everywhere.
+        assert!(approx.max_abs_diff(&exact) <= store.scale() / 2.0 + 1e-6);
+    }
+}

@@ -1,0 +1,342 @@
+//! The mini-batch training engine: seeded shuffled batches → layered
+//! neighbor sampling → (quantized) feature gather → block forward/backward.
+//!
+//! This is the sampled counterpart of [`crate::coordinator::Trainer`] and
+//! produces the same [`TrainReport`] so the CLI, benches and repro drivers
+//! treat both execution modes uniformly. `Trainer::run` delegates here when
+//! `TrainConfig::sampler.enabled` is set.
+
+use super::{gather_rows, shuffled_batches, NeighborSampler, QuantFeatureStore};
+use crate::config::{ModelKind, TrainConfig};
+use crate::coordinator::qcache::CacheStats;
+use crate::coordinator::TrainReport;
+use crate::graph::datasets::{self, Dataset, Task};
+use crate::graph::Csr;
+use crate::model::{
+    accuracy, softmax_cross_entropy, GatConfig, GatModel, GcnConfig, GcnModel, Sgd, TrainMode,
+};
+use crate::quant::{derive_bits, DEFAULT_ERROR_TARGET};
+
+/// The model under sampled training.
+enum AnyModel {
+    Gcn(GcnModel),
+    Gat(GatModel),
+}
+
+/// Mini-batch neighbor-sampling trainer (node classification).
+pub struct MiniBatchTrainer {
+    cfg: TrainConfig,
+    data: Dataset,
+    model: AnyModel,
+    opt: Sgd,
+    sampler: NeighborSampler,
+    csr_in: Csr,
+    degrees: Vec<u32>,
+    /// Quantized feature store (None when the mode is full-precision).
+    store: Option<QuantFeatureStore>,
+}
+
+impl MiniBatchTrainer {
+    /// Build everything from a config (loads the dataset, derives bits if
+    /// requested, initialises the model and sampler).
+    pub fn from_config(cfg: &TrainConfig) -> crate::Result<Self> {
+        let data = if cfg.dataset == "tiny" {
+            datasets::tiny(cfg.seed)
+        } else {
+            datasets::load_by_name(&cfg.dataset, cfg.seed)
+        };
+        Self::with_dataset(cfg.clone(), data)
+    }
+
+    /// Build with an externally supplied dataset.
+    pub fn with_dataset(mut cfg: TrainConfig, data: Dataset) -> crate::Result<Self> {
+        if data.task != Task::NodeClassification {
+            anyhow::bail!(
+                "neighbor-sampled training supports node classification only ({} is {:?})",
+                data.name,
+                data.task
+            );
+        }
+        if cfg.sampler.batch_size == 0 {
+            anyhow::bail!("sampler batch_size must be >= 1");
+        }
+        let out_dim = data.num_classes;
+        // Same Fig. 2 rule as the full-graph trainer: probe the first
+        // layer's output of the initial model on the full graph.
+        if cfg.auto_bits && cfg.mode.quantize {
+            let probe = Self::build_model(&cfg, &data, out_dim);
+            let first = match &probe {
+                AnyModel::Gcn(m) => m.first_layer_output(&data.features),
+                AnyModel::Gat(m) => m.first_layer_output(&data.features),
+            };
+            cfg.mode.bits = derive_bits(&first, DEFAULT_ERROR_TARGET).bits;
+        }
+        let model = Self::build_model(&cfg, &data, out_dim);
+        // One fanout per layer: repeat the last entry / truncate as needed.
+        let mut fanouts = cfg.sampler.fanouts.clone();
+        if fanouts.is_empty() {
+            fanouts.push(10);
+        }
+        while fanouts.len() < cfg.layers {
+            fanouts.push(*fanouts.last().unwrap());
+        }
+        fanouts.truncate(cfg.layers);
+        let sampler = NeighborSampler::new(fanouts, cfg.sampler.seed ^ cfg.seed);
+        let csr_in = Csr::from_coo(&data.graph);
+        let degrees = data.graph.in_degrees();
+        let store = if cfg.mode.quantize {
+            Some(QuantFeatureStore::new(&data.features, cfg.mode.bits))
+        } else {
+            None
+        };
+        let opt = Sgd::new(cfg.lr);
+        Ok(MiniBatchTrainer { cfg, data, model, opt, sampler, csr_in, degrees, store })
+    }
+
+    fn build_model(cfg: &TrainConfig, data: &Dataset, out_dim: usize) -> AnyModel {
+        match cfg.model {
+            ModelKind::Gcn => AnyModel::Gcn(GcnModel::new(
+                GcnConfig {
+                    in_dim: data.features.cols(),
+                    hidden: cfg.hidden,
+                    out_dim,
+                    layers: cfg.layers,
+                    mode: cfg.mode,
+                },
+                &data.graph,
+                cfg.seed,
+            )),
+            ModelKind::Gat => AnyModel::Gat(GatModel::new(
+                GatConfig {
+                    in_dim: data.features.cols(),
+                    hidden: cfg.hidden,
+                    out_dim,
+                    heads: cfg.heads,
+                    layers: cfg.layers,
+                    mode: cfg.mode,
+                },
+                &data.graph,
+                cfg.seed,
+            )),
+        }
+    }
+
+    /// The dataset being trained on.
+    pub fn dataset(&self) -> &Dataset {
+        &self.data
+    }
+
+    /// The effective mode (bits may have been auto-derived).
+    pub fn mode(&self) -> TrainMode {
+        self.cfg.mode
+    }
+
+    /// The per-layer fanouts actually used (after layer-count adjustment).
+    pub fn fanouts(&self) -> &[usize] {
+        &self.sampler.fanouts
+    }
+
+    /// Flatten the trained parameters (same layout as the models'
+    /// `params_flat`) — lets `coordinator::Trainer` adopt the weights after
+    /// a delegated sampled run.
+    pub fn params_flat(&self) -> Vec<f32> {
+        match &self.model {
+            AnyModel::Gcn(m) => m.params_flat(),
+            AnyModel::Gat(m) => m.params_flat(),
+        }
+    }
+
+    /// Quantized feature-gather cache statistics (None in FP32 mode).
+    pub fn gather_stats(&self) -> Option<CacheStats> {
+        self.store.as_ref().map(|s| s.stats())
+    }
+
+    /// Bytes held by the quantized feature cache.
+    pub fn gather_cached_bytes(&self) -> usize {
+        self.store.as_ref().map(|s| s.cached_bytes()).unwrap_or(0)
+    }
+
+    /// Run the configured number of epochs; every epoch sweeps all training
+    /// nodes once in shuffled mini-batches.
+    pub fn run(&mut self) -> crate::Result<TrainReport> {
+        let mut losses = Vec::with_capacity(self.cfg.epochs);
+        let mut evals = Vec::with_capacity(self.cfg.epochs);
+        let mut wall = 0.0f64;
+        for epoch in 0..self.cfg.epochs {
+            let (loss, secs) = crate::metrics::time_once(|| self.train_epoch(epoch as u64));
+            wall += secs;
+            let eval = self.evaluate();
+            if self.cfg.log_every > 0 && epoch % self.cfg.log_every == 0 {
+                println!(
+                    "epoch {epoch:>4}  loss {loss:>8.4}  eval {eval:>6.4}  ({:.1} ms)",
+                    secs * 1e3
+                );
+            }
+            losses.push(loss);
+            evals.push(eval);
+        }
+        let final_eval = *evals.last().unwrap_or(&0.0);
+        let final_loss = *losses.last().unwrap_or(&f32::INFINITY);
+        let epochs_to_converge = losses
+            .iter()
+            .position(|&l| l <= final_loss * 1.02)
+            .unwrap_or(losses.len());
+        Ok(TrainReport {
+            losses,
+            evals,
+            final_eval,
+            wall_secs: wall,
+            bits: self.cfg.mode.bits,
+            epochs_to_converge,
+        })
+    }
+
+    /// One epoch: sample, gather, step per batch. Returns the mean batch
+    /// loss.
+    fn train_epoch(&mut self, epoch: u64) -> f32 {
+        let batches = shuffled_batches(
+            &self.data.train_nodes,
+            self.cfg.sampler.batch_size,
+            self.cfg.seed ^ epoch.wrapping_mul(0x517C_C1B7),
+        );
+        let mut total = 0.0f32;
+        let mut steps = 0usize;
+        for (bi, batch) in batches.iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let stream = (epoch << 20) ^ bi as u64;
+            let blocks = self.sampler.sample_blocks(&self.csr_in, &self.degrees, batch, stream);
+            let input_nodes = blocks[0].src_nodes.clone();
+            let x0 = match &mut self.store {
+                Some(store) => store.gather_dequantized(&self.data.features, &input_nodes),
+                None => gather_rows(&self.data.features, &input_nodes),
+            };
+            let labels: Vec<u32> = batch.iter().map(|&v| self.data.labels[v as usize]).collect();
+            let nodes: Vec<u32> = (0..batch.len() as u32).collect();
+            let opt = &mut self.opt;
+            let loss = match &mut self.model {
+                AnyModel::Gcn(m) => {
+                    m.train_step_blocks(&blocks, &x0, opt, |lg| {
+                        softmax_cross_entropy(lg, &labels, &nodes)
+                    })
+                    .0
+                }
+                AnyModel::Gat(m) => {
+                    m.train_step_blocks(&blocks, &x0, opt, |lg| {
+                        softmax_cross_entropy(lg, &labels, &nodes)
+                    })
+                    .0
+                }
+            };
+            total += loss;
+            steps += 1;
+        }
+        if steps == 0 {
+            0.0
+        } else {
+            total / steps as f32
+        }
+    }
+
+    /// Full-graph evaluation on the held-out split (the model is bound to
+    /// the whole graph; only *training* runs on sampled blocks).
+    pub fn evaluate(&self) -> f32 {
+        let out = match &self.model {
+            AnyModel::Gcn(m) => m.forward(&self.data.features),
+            AnyModel::Gat(m) => m.forward(&self.data.features),
+        };
+        accuracy(&out, &self.data.labels, &self.data.eval_nodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{parse_mode, SamplerConfig};
+
+    fn mb_cfg(model: ModelKind, mode: &str, epochs: usize) -> TrainConfig {
+        TrainConfig {
+            model,
+            dataset: "tiny".into(),
+            epochs,
+            lr: 0.1,
+            hidden: 16,
+            heads: 4,
+            layers: 2,
+            mode: parse_mode(mode, 8).unwrap(),
+            auto_bits: false,
+            seed: 3,
+            log_every: 0,
+            sampler: SamplerConfig {
+                enabled: true,
+                fanouts: vec![10, 10],
+                batch_size: 64,
+                seed: 0x5A17,
+            },
+        }
+    }
+
+    #[test]
+    fn gcn_minibatch_learns_tiny() {
+        let mut t = MiniBatchTrainer::from_config(&mb_cfg(ModelKind::Gcn, "tango", 30)).unwrap();
+        let r = t.run().unwrap();
+        assert_eq!(r.losses.len(), 30);
+        assert!(r.losses[29] < r.losses[0], "{:?}", r.losses);
+        assert!(r.final_eval > 0.3, "eval {}", r.final_eval);
+        // Quantized gather must have seen real cache traffic.
+        let stats = t.gather_stats().expect("quantized mode has a store");
+        assert!(stats.hits > 0, "hot nodes should hit the feature cache");
+        assert!(t.gather_cached_bytes() > 0);
+    }
+
+    #[test]
+    fn gat_minibatch_learns_tiny() {
+        let mut t = MiniBatchTrainer::from_config(&mb_cfg(ModelKind::Gat, "tango", 25)).unwrap();
+        let r = t.run().unwrap();
+        assert!(r.losses.last().unwrap() < &r.losses[0], "{:?}", r.losses);
+        assert!(r.final_eval > 0.3, "eval {}", r.final_eval);
+    }
+
+    #[test]
+    fn fp32_mode_has_no_store_and_still_learns() {
+        let mut t = MiniBatchTrainer::from_config(&mb_cfg(ModelKind::Gcn, "fp32", 20)).unwrap();
+        assert!(t.gather_stats().is_none());
+        let r = t.run().unwrap();
+        assert!(r.losses.last().unwrap() < &r.losses[0]);
+    }
+
+    #[test]
+    fn fanouts_adjust_to_layer_count() {
+        let mut cfg = mb_cfg(ModelKind::Gcn, "fp32", 1);
+        cfg.sampler.fanouts = vec![7];
+        cfg.layers = 3;
+        let t = MiniBatchTrainer::from_config(&cfg).unwrap();
+        assert_eq!(t.fanouts(), &[7, 7, 7]);
+        let mut cfg = mb_cfg(ModelKind::Gcn, "fp32", 1);
+        cfg.sampler.fanouts = vec![9, 5, 3];
+        cfg.layers = 2;
+        let t = MiniBatchTrainer::from_config(&cfg).unwrap();
+        assert_eq!(t.fanouts(), &[9, 5]);
+    }
+
+    #[test]
+    fn rejects_link_prediction_datasets() {
+        let mut cfg = mb_cfg(ModelKind::Gcn, "fp32", 1);
+        cfg.dataset = "DBLP".into();
+        match MiniBatchTrainer::from_config(&cfg) {
+            Err(e) => assert!(e.to_string().contains("node classification"), "{e}"),
+            Ok(_) => panic!("LP dataset must be rejected"),
+        }
+    }
+
+    #[test]
+    fn runs_are_deterministic_under_fixed_seed() {
+        let run = || {
+            let mut t =
+                MiniBatchTrainer::from_config(&mb_cfg(ModelKind::Gcn, "fp32", 5)).unwrap();
+            t.run().unwrap().losses
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,37 @@
+//! Mini-batch neighbor-sampling training subsystem.
+//!
+//! Tango's host framework (DGL) trains large graphs almost exclusively in
+//! *sampled mini-batch* mode; this module adds that execution mode to the
+//! reproduction, with the quantization lessons of the related work folded
+//! in (BiFeat: the quantized feature gather dominates sampled step time;
+//! see PAPERS.md):
+//!
+//! - [`NeighborSampler`] — layered uniform neighbor sampling with per-layer
+//!   fanouts over the in-edge CSR (DGL `MultiLayerNeighborSampler` shape),
+//!   plus [`shuffled_batches`] for the seeded epoch sweep;
+//! - [`Block`] — MFG-style bipartite blocks with compacted node ids,
+//!   destination-prefix invariant, per-layer COO/CSR/reversed-CSR layouts
+//!   and parent-degree GCN edge norms (built on
+//!   [`Csr::from_grouped_edges`](crate::graph::Csr::from_grouped_edges));
+//! - [`QuantFeatureStore`] / [`gather_rows`] — the per-batch feature
+//!   gather; the quantized path slices INT8 rows under one shared scale and
+//!   caches hot (frequently re-sampled) nodes in a
+//!   [`QuantCache`](crate::coordinator::QuantCache);
+//! - [`MiniBatchTrainer`] — the epoch engine gluing it all to the
+//!   block-aware GCN/GAT forward/backward
+//!   ([`GcnModel::train_step_blocks`](crate::model::GcnModel::train_step_blocks),
+//!   [`GatModel::train_step_blocks`](crate::model::GatModel::train_step_blocks));
+//!   `coordinator::Trainer` delegates here when
+//!   `TrainConfig::sampler.enabled` is set, so
+//!   `tango train --sampler neighbor --fanouts 10,10 --batch-size 512`
+//!   runs end to end.
+
+mod block;
+mod gather;
+mod minibatch;
+mod neighbor;
+
+pub use block::Block;
+pub use gather::{gather_rows, QuantFeatureStore};
+pub use minibatch::MiniBatchTrainer;
+pub use neighbor::{shuffled_batches, NeighborSampler};

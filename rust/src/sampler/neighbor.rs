@@ -1,0 +1,189 @@
+//! Layered uniform neighbor sampling (DGL `MultiLayerNeighborSampler`
+//! shape): per-layer fanouts over the in-edge CSR, producing one [`Block`]
+//! per model layer with compacted node ids.
+//!
+//! Sampling walks outward from the seed nodes: the last layer's block has
+//! the seeds as destinations; each earlier layer's destinations are the
+//! previous block's source frontier. Every draw comes from the same seeded
+//! xoshiro256++ stream the quantizer uses, so a `(sampler seed, stream,
+//! seeds)` triple always reproduces the same blocks.
+
+use super::Block;
+use crate::graph::Csr;
+use crate::quant::rng::Xoshiro256pp;
+use std::collections::HashMap;
+
+/// Layered uniform neighbor sampler with per-layer fanouts.
+#[derive(Debug, Clone)]
+pub struct NeighborSampler {
+    /// Per-layer fanouts, input-side layer first (`fanouts[l]` bounds the
+    /// in-edges sampled per destination in `blocks[l]`).
+    pub fanouts: Vec<usize>,
+    /// Base seed for the sampling streams.
+    pub seed: u64,
+}
+
+impl NeighborSampler {
+    /// New sampler; `fanouts` must name at least one layer.
+    pub fn new(fanouts: Vec<usize>, seed: u64) -> Self {
+        assert!(!fanouts.is_empty(), "need at least one fanout");
+        assert!(fanouts.iter().all(|&f| f >= 1), "fanouts must be >= 1");
+        NeighborSampler { fanouts, seed }
+    }
+
+    /// Sample the per-layer blocks for one mini-batch.
+    ///
+    /// `csr_in` is the parent graph's in-edge CSR, `degrees` its in-degrees
+    /// (drives the blocks' GCN edge norms), `seeds` the batch's **distinct**
+    /// seed nodes, and `stream` a per-batch stream id (epoch × batch index).
+    /// Returns `fanouts.len()` blocks, input-side first; the final block's
+    /// destinations are exactly `seeds`, and `blocks[l].dst_nodes() ==
+    /// blocks[l+1].src_nodes` (the chaining the layered forward consumes).
+    pub fn sample_blocks(
+        &self,
+        csr_in: &Csr,
+        degrees: &[u32],
+        seeds: &[u32],
+        stream: u64,
+    ) -> Vec<Block> {
+        let mut rng = Xoshiro256pp::new(self.seed ^ stream.wrapping_mul(0x9E3779B97F4A7C15));
+        let layers = self.fanouts.len();
+        let mut blocks: Vec<Block> = Vec::with_capacity(layers);
+        let mut frontier: Vec<u32> = seeds.to_vec();
+        // Walk output-side layer (dst = seeds) back to the input side.
+        for l in (0..layers).rev() {
+            let fanout = self.fanouts[l];
+            let num_dst = frontier.len();
+            let mut src_nodes = frontier.clone();
+            let mut local_of: HashMap<u32, u32> =
+                frontier.iter().enumerate().map(|(i, &v)| (v, i as u32)).collect();
+            debug_assert_eq!(local_of.len(), num_dst, "seed/frontier nodes must be distinct");
+            let mut src_local: Vec<u32> = Vec::new();
+            let mut dst_local: Vec<u32> = Vec::new();
+            for (dv, &v) in frontier.iter().enumerate() {
+                let (nbrs, _eids) = csr_in.row(v as usize);
+                let take = fanout.min(nbrs.len());
+                if take == 0 {
+                    continue;
+                }
+                // Uniform without replacement: partial Fisher–Yates over an
+                // index window (degree <= fanout takes every in-edge).
+                let mut idx: Vec<usize> = (0..nbrs.len()).collect();
+                for i in 0..take {
+                    let j = i + (rng.next_u64() % (idx.len() - i) as u64) as usize;
+                    idx.swap(i, j);
+                }
+                for &k in idx.iter().take(take) {
+                    let u = nbrs[k];
+                    let lu = *local_of.entry(u).or_insert_with(|| {
+                        src_nodes.push(u);
+                        (src_nodes.len() - 1) as u32
+                    });
+                    src_local.push(lu);
+                    dst_local.push(dv as u32);
+                }
+            }
+            let block = Block::new(src_nodes, num_dst, src_local, dst_local, degrees);
+            frontier = block.src_nodes.clone();
+            blocks.push(block);
+        }
+        blocks.reverse();
+        blocks
+    }
+}
+
+/// Shuffle `nodes` with a seeded Fisher–Yates and split into mini-batches of
+/// `batch_size` seeds (the last batch may be smaller).
+pub fn shuffled_batches(nodes: &[u32], batch_size: usize, seed: u64) -> Vec<Vec<u32>> {
+    assert!(batch_size >= 1, "batch_size must be >= 1");
+    let mut order = nodes.to_vec();
+    let mut rng = Xoshiro256pp::new(seed);
+    for i in (1..order.len()).rev() {
+        let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+        order.swap(i, j);
+    }
+    order.chunks(batch_size).map(|c| c.to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Coo;
+
+    fn parent() -> (Coo, Csr, Vec<u32>) {
+        let coo = crate::graph::generators::erdos_renyi(60, 400, 3).with_self_loops();
+        let csr = Csr::from_coo(&coo);
+        let deg = coo.in_degrees();
+        (coo, csr, deg)
+    }
+
+    #[test]
+    fn blocks_chain_and_end_at_seeds() {
+        let (_, csr, deg) = parent();
+        let s = NeighborSampler::new(vec![3, 2], 7);
+        let seeds: Vec<u32> = vec![4, 9, 17, 33];
+        let blocks = s.sample_blocks(&csr, &deg, &seeds, 1);
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[1].dst_nodes(), &seeds[..]);
+        assert_eq!(blocks[0].dst_nodes(), &blocks[1].src_nodes[..]);
+        assert_eq!(blocks[0].num_dst, blocks[1].num_src());
+    }
+
+    #[test]
+    fn fanout_bounds_per_destination_edges() {
+        let (_, csr, deg) = parent();
+        let s = NeighborSampler::new(vec![2], 11);
+        let seeds: Vec<u32> = (0..20).collect();
+        let blocks = s.sample_blocks(&csr, &deg, &seeds, 0);
+        let b = &blocks[0];
+        let mut per_dst = vec![0usize; b.num_dst];
+        for e in 0..b.num_edges() {
+            per_dst[b.coo.dst[e] as usize] += 1;
+        }
+        assert!(per_dst.iter().all(|&c| c <= 2), "{per_dst:?}");
+        // Self-loops guarantee every seed kept at least one in-edge.
+        assert!(per_dst.iter().all(|&c| c >= 1));
+    }
+
+    #[test]
+    fn deterministic_under_fixed_seed_and_stream() {
+        let (_, csr, deg) = parent();
+        let s = NeighborSampler::new(vec![3, 3], 21);
+        let seeds: Vec<u32> = vec![1, 2, 3, 5, 8];
+        let a = s.sample_blocks(&csr, &deg, &seeds, 9);
+        let b = s.sample_blocks(&csr, &deg, &seeds, 9);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.src_nodes, y.src_nodes);
+            assert_eq!(x.coo, y.coo);
+            assert_eq!(x.norm, y.norm);
+        }
+        // A different stream samples a different frontier (overwhelmingly).
+        let c = s.sample_blocks(&csr, &deg, &seeds, 10);
+        assert!(a[0].coo != c[0].coo || a[0].src_nodes != c[0].src_nodes);
+    }
+
+    #[test]
+    fn full_fanout_takes_every_in_edge() {
+        let (coo, csr, deg) = parent();
+        let s = NeighborSampler::new(vec![1 << 30], 5);
+        let seeds: Vec<u32> = (0..coo.num_nodes as u32).collect();
+        let blocks = s.sample_blocks(&csr, &deg, &seeds, 2);
+        assert_eq!(blocks[0].num_edges(), coo.num_edges());
+        assert_eq!(blocks[0].num_src(), coo.num_nodes);
+    }
+
+    #[test]
+    fn batching_covers_all_nodes_once() {
+        let nodes: Vec<u32> = (0..103).collect();
+        let batches = shuffled_batches(&nodes, 16, 4);
+        assert_eq!(batches.len(), 7);
+        assert!(batches[..6].iter().all(|b| b.len() == 16));
+        assert_eq!(batches[6].len(), 7);
+        let mut all: Vec<u32> = batches.concat();
+        all.sort_unstable();
+        assert_eq!(all, nodes);
+        // Seeded: same seed reproduces, different seed reshuffles.
+        assert_eq!(shuffled_batches(&nodes, 16, 4), batches);
+        assert_ne!(shuffled_batches(&nodes, 16, 5), batches);
+    }
+}

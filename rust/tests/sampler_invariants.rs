@@ -1,0 +1,136 @@
+//! Property-based invariants of the neighbor-sampling subsystem (driven by
+//! `tango::util::prop`): sampled blocks are valid MFGs — compacted ids in
+//! range, every edge endpoint present and backed by a parent edge, fanout
+//! respected, layers chained, all deterministic under a fixed seed — and
+//! the quantized feature gather matches direct quantization.
+
+use tango::graph::{Coo, Csr};
+use tango::quant::{quantize_with_scale, Rounding};
+use tango::sampler::{gather_rows, shuffled_batches, NeighborSampler, QuantFeatureStore};
+use tango::tensor::Dense;
+use tango::util::prop::{check, Gen};
+
+/// A random parent graph with self-loops (every node has an in-edge, as the
+/// datasets guarantee) plus its CSR and in-degrees.
+fn random_parent(g: &mut Gen) -> (Coo, Csr, Vec<u32>) {
+    let (n, src, dst) = g.graph(40, 160);
+    let coo = Coo::new(n, src, dst).with_self_loops();
+    let csr = Csr::from_coo(&coo);
+    let deg = coo.in_degrees();
+    (coo, csr, deg)
+}
+
+/// Distinct random seed nodes (a prefix of a shuffled node list).
+fn random_seeds(g: &mut Gen, n: usize) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    for i in (1..order.len()).rev() {
+        let j = g.usize_in(0, i);
+        order.swap(i, j);
+    }
+    order.truncate(g.usize_in(1, n.min(8)));
+    order
+}
+
+#[test]
+fn prop_sampled_blocks_are_valid_mfgs() {
+    check("sampled blocks valid", 60, |g| {
+        let (coo, csr, deg) = random_parent(g);
+        let layers = g.usize_in(1, 3);
+        let fanouts: Vec<usize> = (0..layers).map(|_| g.usize_in(1, 5)).collect();
+        let sampler = NeighborSampler::new(fanouts.clone(), g.u64());
+        let seeds = random_seeds(g, coo.num_nodes);
+        let blocks = sampler.sample_blocks(&csr, &deg, &seeds, g.u64());
+        assert_eq!(blocks.len(), layers);
+        let parent_edges: std::collections::HashSet<(u32, u32)> =
+            (0..coo.num_edges()).map(|e| (coo.src[e], coo.dst[e])).collect();
+        for (l, b) in blocks.iter().enumerate() {
+            // Shape invariants: dst prefix, consistent graph views.
+            assert!(b.num_dst <= b.num_src());
+            assert_eq!(b.coo.num_nodes, b.num_src());
+            assert_eq!(b.csr.num_nodes, b.num_dst);
+            assert_eq!(b.csr_rev.num_nodes, b.num_src());
+            assert_eq!(b.csr.num_edges, b.num_edges());
+            assert_eq!(b.csr_rev.num_edges, b.num_edges());
+            assert_eq!(b.norm.len(), b.num_edges());
+            // Compacted ids injective and in range; every edge is real.
+            let distinct: std::collections::HashSet<_> = b.src_nodes.iter().collect();
+            assert_eq!(distinct.len(), b.src_nodes.len(), "node map must be injective");
+            let mut per_dst = vec![0usize; b.num_dst];
+            for e in 0..b.num_edges() {
+                let (ls, ld) = (b.coo.src[e] as usize, b.coo.dst[e] as usize);
+                assert!(ls < b.num_src(), "src id out of range");
+                assert!(ld < b.num_dst, "dst id out of range");
+                per_dst[ld] += 1;
+                let (gs, gd) = (b.src_nodes[ls], b.src_nodes[ld]);
+                assert!(parent_edges.contains(&(gs, gd)), "({gs},{gd}) not a parent edge");
+                assert!(b.norm[e] > 0.0 && b.norm[e] <= 1.0, "norm {}", b.norm[e]);
+            }
+            // Fanout bound; self-loops guarantee at least one in-edge each.
+            assert!(per_dst.iter().all(|&c| c <= fanouts[l]), "{per_dst:?} > {}", fanouts[l]);
+            assert!(per_dst.iter().all(|&c| c >= 1));
+        }
+        // Layer chaining ends exactly at the seeds.
+        for l in 0..layers - 1 {
+            assert_eq!(blocks[l].dst_nodes(), &blocks[l + 1].src_nodes[..]);
+        }
+        assert_eq!(blocks[layers - 1].dst_nodes(), &seeds[..]);
+    });
+}
+
+#[test]
+fn prop_sampling_is_deterministic_under_fixed_seed() {
+    check("sampler determinism", 40, |g| {
+        let (coo, csr, deg) = random_parent(g);
+        let layers = g.usize_in(1, 3);
+        let fanouts: Vec<usize> = (0..layers).map(|_| g.usize_in(1, 4)).collect();
+        let sampler_seed = g.u64();
+        let stream = g.u64();
+        let seeds = random_seeds(g, coo.num_nodes);
+        let a = NeighborSampler::new(fanouts.clone(), sampler_seed)
+            .sample_blocks(&csr, &deg, &seeds, stream);
+        let b = NeighborSampler::new(fanouts, sampler_seed)
+            .sample_blocks(&csr, &deg, &seeds, stream);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.src_nodes, y.src_nodes);
+            assert_eq!(x.num_dst, y.num_dst);
+            assert_eq!(x.coo, y.coo);
+            assert_eq!(x.norm, y.norm);
+        }
+    });
+}
+
+#[test]
+fn prop_quantized_gather_matches_direct_quantization() {
+    check("quantized gather", 40, |g| {
+        let n = g.usize_in(1, 30);
+        let d = g.usize_in(1, 8);
+        let feats = Dense::from_vec(&[n, d], g.f32_vec(n * d, -3.0, 3.0));
+        let mut store = QuantFeatureStore::new(&feats, 8);
+        let k = g.usize_in(1, 20);
+        let nodes: Vec<u32> = (0..k).map(|_| g.usize_in(0, n - 1) as u32).collect();
+        let q = store.gather_quantized(&feats, &nodes);
+        let direct =
+            quantize_with_scale(&gather_rows(&feats, &nodes), store.scale(), 8, Rounding::Nearest);
+        assert_eq!(q.data, direct.data, "cached rows must equal direct quantization");
+        assert_eq!(q.scale, direct.scale);
+        // Re-gathering the same nodes is all hits, bit-identical.
+        let misses_before = store.stats().misses;
+        let q2 = store.gather_quantized(&feats, &nodes);
+        assert_eq!(q2, q);
+        assert_eq!(store.stats().misses, misses_before, "second gather must not quantize");
+    });
+}
+
+#[test]
+fn prop_batches_partition_the_node_set() {
+    check("batch partition", 40, |g| {
+        let n = g.usize_in(1, 200);
+        let nodes: Vec<u32> = (0..n as u32).collect();
+        let bs = g.usize_in(1, 64);
+        let batches = shuffled_batches(&nodes, bs, g.u64());
+        assert!(batches.iter().all(|b| b.len() <= bs && !b.is_empty()));
+        let mut all: Vec<u32> = batches.concat();
+        all.sort_unstable();
+        assert_eq!(all, nodes, "every node exactly once per epoch");
+    });
+}

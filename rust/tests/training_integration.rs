@@ -19,6 +19,7 @@ fn cfg(model: ModelKind, dataset: &str, mode: TrainMode, epochs: usize) -> Train
         auto_bits: false,
         seed: 42,
         log_every: 0,
+        ..Default::default()
     }
 }
 

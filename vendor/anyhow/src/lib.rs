@@ -1,0 +1,169 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network or registry access (see
+//! `tango::util` — every other framework dependency is likewise replaced by
+//! a local implementation), so this vendored crate provides exactly the
+//! surface the workspace uses:
+//!
+//! - [`Result`] / [`Error`] — a boxed dynamic error with `?`-conversion
+//!   from any `std::error::Error`;
+//! - [`anyhow!`] — build an error from a format string or a displayable
+//!   value;
+//! - [`bail!`] — early-return an `Err(anyhow!(...))`.
+//!
+//! `{:#}` formatting walks the source chain like real `anyhow` does.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A boxed dynamic error.
+///
+/// Deliberately does **not** implement `std::error::Error` itself so the
+/// blanket `From<E: std::error::Error>` impl (which powers `?`) does not
+/// overlap with `impl From<T> for T`.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// A plain-message error payload.
+struct Message(String);
+
+impl fmt::Debug for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for Message {}
+
+impl Error {
+    /// Error from a displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Error { inner: Box::new(Message(msg.to_string())) }
+    }
+
+    /// Error wrapping a concrete `std::error::Error`.
+    pub fn new<E: StdError + Send + Sync + 'static>(err: E) -> Self {
+        Error { inner: Box::new(err) }
+    }
+
+    /// The wrapped error.
+    pub fn root(&self) -> &(dyn StdError + Send + Sync + 'static) {
+        &*self.inner
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        if f.alternate() {
+            let mut source = self.inner.source();
+            while let Some(s) = source {
+                write!(f, ": {s}")?;
+                source = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        while let Some(s) = source {
+            write!(f, "\n\ncaused by: {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        Error::new(err)
+    }
+}
+
+/// Construct an [`Error`] from a format string (+args) or any `Display`
+/// value: `anyhow!("bad {x}")`, `anyhow!("{}: {e}", path)`, `anyhow!(e)`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn macro_arms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let x = 3;
+        let b = anyhow!("value {x} and {}", 4);
+        assert_eq!(b.to_string(), "value 3 and 4");
+        let s = String::from("owned message");
+        let c = anyhow!(s);
+        assert_eq!(c.to_string(), "owned message");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn inner(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("refused {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(inner(false).unwrap(), 1);
+        assert_eq!(inner(true).unwrap_err().to_string(), "refused 7");
+    }
+
+    #[test]
+    fn alternate_format_walks_sources() {
+        let e = Error::new(io_err());
+        let plain = format!("{e}");
+        let alt = format!("{e:#}");
+        assert!(alt.starts_with(&plain));
+    }
+}
