@@ -26,8 +26,8 @@ fn main() -> tango::Result<()> {
         "workers", "fp32", "tango", "speedup"
     );
     for k in [2usize, 3, 4, 5, 6] {
-        let mk = |quant: bool| MultiGpuConfig {
-            train: TrainConfig {
+        let mk = |quant: bool| {
+            let mut train = TrainConfig {
                 model: ModelKind::Gcn,
                 dataset: dataset.clone(),
                 epochs: 3,
@@ -40,14 +40,19 @@ fn main() -> tango::Result<()> {
                 seed: 42,
                 log_every: 0,
                 ..Default::default()
-            },
-            workers: k,
-            epochs: 3,
-            fanout: 8,
-            batch_size: 512,
-            quantize_grads: quant,
-            overlap_quantization: true,
-            interconnect: Interconnect::pcie3(),
+            };
+            // Unified sampler knobs: the same fields `tango train --sampler
+            // neighbor` uses drive each worker's Block pipeline.
+            train.sampler.fanouts = vec![8, 8];
+            train.sampler.batch_size = 1024;
+            MultiGpuConfig {
+                train,
+                workers: k,
+                epochs: 3,
+                quantize_grads: quant,
+                overlap_quantization: true,
+                interconnect: Interconnect::pcie3(),
+            }
         };
         let fp = run_data_parallel(&mk(false), &data)?;
         let tg = run_data_parallel(&mk(true), &data)?;

@@ -5,7 +5,8 @@
 //!
 //! Run: `cargo run --release --example train_minibatch -- \
 //!        [--dataset Pubmed] [--model gcn|gat] [--mode tango|fp32] \
-//!        [--fanouts 10,10] [--batch-size 256] [--epochs 10]`
+//!        [--fanouts 10,10] [--batch-size 256] [--epochs 10] \
+//!        [--cache-nodes 8192]`
 
 use tango::config::{parse_fanouts, parse_mode, ModelKind, TrainConfig};
 use tango::metrics::fmt_time;
@@ -34,11 +35,13 @@ fn main() -> tango::Result<()> {
     cfg.sampler.fanouts =
         parse_fanouts(args.get("fanouts", "10,10")).map_err(|e| anyhow::anyhow!(e))?;
     cfg.sampler.batch_size = args.get_as("batch-size", 256);
+    cfg.sampler.cache_nodes = args.get_as("cache-nodes", 0);
 
     let mut trainer = MiniBatchTrainer::from_config(&cfg)?;
     let d = trainer.dataset();
     println!(
-        "sampled training: {:?} on {} ({} nodes, {} edges) — fanouts {:?}, batch {}, mode {} ({} bits)\n",
+        "sampled training: {:?} on {} ({} nodes, {} edges) — fanouts {:?}, batch {}, \
+         mode {} ({} bits)\n",
         cfg.model,
         d.name,
         d.graph.num_nodes,
@@ -60,14 +63,17 @@ fn main() -> tango::Result<()> {
         Some(stats) => {
             let total = stats.hits + stats.misses;
             println!(
-                "quantized feature cache: {:.1}% hit rate ({} hits / {} gathered rows), {} KiB of INT8 rows cached",
+                "quantized feature cache: {:.1}% hit rate ({} hits / {} gathered rows), \
+                 {} evictions, {} KiB of INT8 rows cached",
                 stats.hits as f64 / total.max(1) as f64 * 100.0,
                 stats.hits,
                 total,
+                stats.evictions,
                 trainer.gather_cached_bytes() / 1024,
             );
             println!(
-                "(every hit skips one row quantization — hot nodes are re-sampled across batches, the BiFeat effect)"
+                "(every hit skips one row quantization — hot nodes are re-sampled across \
+                 batches, the BiFeat effect)"
             );
         }
         None => println!("fp32 mode: features gathered without quantization"),

@@ -1,0 +1,92 @@
+//! Multi-GPU all-reduce bench: modelled PCIe transfer time of the quantized
+//! gradient ring all-reduce vs the FP32 baseline (the Fig. 9 mechanism),
+//! plus a real sampled-Block data-parallel run at example scale.
+//!
+//! The acceptance bar this guards: at 4 workers and a realistic GNN
+//! gradient size, the quantized payload must model >= 3.5x faster transfer
+//! than FP32 (4x payload shrink, minus per-chunk scale sidecars and the
+//! latency floor).
+
+use tango::config::{ModelKind, TrainConfig};
+use tango::graph::datasets;
+use tango::metrics::Table;
+use tango::model::TrainMode;
+use tango::multigpu::{
+    allreduce_payload_bytes, ring_messages, run_data_parallel, Interconnect, MultiGpuConfig,
+};
+
+fn main() {
+    let ic = Interconnect::pcie3();
+    // A GraphSAGE/GCN-scale parameter count (e.g. 512-dim features into a
+    // 256-wide hidden layer plus output heads): 4M gradient elements.
+    let grad_elems = 4_000_000usize;
+    let mut t = Table::new(
+        "bench: modelled ring all-reduce transfer, FP32 vs quantized payloads",
+        &["workers", "fp32", "int8", "speedup"],
+    );
+    let mut at4 = 0.0f64;
+    for k in [2usize, 3, 4, 5, 6] {
+        let time = |quant: bool| {
+            ic.transfer_time(allreduce_payload_bytes(grad_elems, k, quant), ring_messages(k), k)
+        };
+        let (fp, q) = (time(false), time(true));
+        let speedup = fp / q;
+        if k == 4 {
+            at4 = speedup;
+        }
+        t.row(&[
+            k.to_string(),
+            format!("{:.3}ms", fp * 1e3),
+            format!("{:.3}ms", q * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n4-worker modelled transfer speedup: {at4:.2}x (bar: >= 3.5x for \
+         {grad_elems} gradient elements)"
+    );
+    assert!(at4 >= 3.5, "quantized all-reduce must model >= 3.5x at 4 workers, got {at4:.2}x");
+
+    // Real end-to-end flavour at test scale: persistent workers training on
+    // sampler Blocks, one shared quantized feature store, per-step ring
+    // all-reduce over the modelled interconnect.
+    let data = datasets::tiny(7);
+    let mk = |quant: bool| {
+        let mut train = TrainConfig {
+            model: ModelKind::Gcn,
+            dataset: "tiny".into(),
+            epochs: 2,
+            lr: 0.05,
+            hidden: 16,
+            layers: 2,
+            mode: if quant { TrainMode::tango(8) } else { TrainMode::fp32() },
+            seed: 7,
+            log_every: 0,
+            ..Default::default()
+        };
+        train.sampler.fanouts = vec![6, 6];
+        train.sampler.batch_size = 16;
+        MultiGpuConfig {
+            train,
+            workers: 4,
+            epochs: 2,
+            quantize_grads: quant,
+            overlap_quantization: true,
+            interconnect: Interconnect::pcie3(),
+        }
+    };
+    let fp = run_data_parallel(&mk(false), &data).unwrap();
+    let tg = run_data_parallel(&mk(true), &data).unwrap();
+    let fp_comm: f64 = fp.epochs.iter().map(|e| e.comm_s).sum();
+    let tg_comm: f64 = tg.epochs.iter().map(|e| e.comm_s).sum();
+    println!(
+        "\ntiny, 4 workers, {} grad elems: comm fp32 {:.3}us vs int8 {:.3}us per run \
+         ({} steps/epoch)",
+        fp.grad_elems,
+        fp_comm * 1e6,
+        tg_comm * 1e6,
+        fp.epochs[0].steps
+    );
+    assert!(tg_comm < fp_comm, "quantized comm must be cheaper end to end");
+}

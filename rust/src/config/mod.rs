@@ -69,14 +69,25 @@ pub struct SamplerConfig {
     pub fanouts: Vec<usize>,
     /// Seed nodes per mini-batch.
     pub batch_size: usize,
-    /// Extra seed for the sampling streams (xor'ed with the run seed so the
+    /// Extra seed for the sampling streams (mixed with the run seed so the
     /// sampling randomness can vary independently of model init).
     pub seed: u64,
+    /// Max distinct nodes held by the quantized feature-gather cache
+    /// (0 = unbounded). An epoch sweep touches every training node, so the
+    /// bound is what keeps the hot-node cache from growing to the whole
+    /// feature table; evicted rows simply requantize on their next gather.
+    pub cache_nodes: usize,
 }
 
 impl Default for SamplerConfig {
     fn default() -> Self {
-        SamplerConfig { enabled: false, fanouts: vec![10, 10], batch_size: 512, seed: 0x5A17 }
+        SamplerConfig {
+            enabled: false,
+            fanouts: vec![10, 10],
+            batch_size: 512,
+            seed: 0x5A17,
+            cache_nodes: 0,
+        }
     }
 }
 
@@ -228,6 +239,9 @@ impl TrainConfig {
         if let Some(v) = get("sample_seed") {
             cfg.sampler.seed = v.parse().map_err(|e| format!("sample_seed: {e}"))?;
         }
+        if let Some(v) = get("cache_nodes") {
+            cfg.sampler.cache_nodes = v.parse().map_err(|e| format!("cache_nodes: {e}"))?;
+        }
         Ok(cfg)
     }
 }
@@ -285,12 +299,14 @@ sampler = "neighbor"
 fanouts = "15,10"
 batch_size = 256
 sample_seed = 99
+cache_nodes = 4096
 "#;
         let cfg = TrainConfig::from_toml(text).unwrap();
         assert!(cfg.sampler.enabled);
         assert_eq!(cfg.sampler.fanouts, vec![15, 10]);
         assert_eq!(cfg.sampler.batch_size, 256);
         assert_eq!(cfg.sampler.seed, 99);
+        assert_eq!(cfg.sampler.cache_nodes, 4096);
         // Default stays full-graph.
         let plain = TrainConfig::from_toml("[train]\nmodel = \"gcn\"\n").unwrap();
         assert!(!plain.sampler.enabled);

@@ -8,7 +8,7 @@
 
 use crate::quant::{quantize, QTensor, Rounding};
 use crate::tensor::Dense;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 /// Cache statistics (drives the Fig. 10 speedup report).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
@@ -17,19 +17,70 @@ pub struct CacheStats {
     pub misses: u64,
     /// Quantization passes skipped thanks to the cache.
     pub hits: u64,
+    /// Entries dropped to honour a capacity bound.
+    pub evictions: u64,
 }
 
-/// A per-step quantized tensor cache.
-#[derive(Debug, Default)]
+/// A quantized tensor cache, optionally bounded.
+///
+/// Unbounded by default (the per-step trainer cache clears every step so it
+/// never grows). Long-lived caches — the sampler's hot-node feature store
+/// keeps rows for a whole run — pass a capacity via [`Self::with_capacity`]
+/// and oldest-first (FIFO) eviction keeps the footprint bounded; evictions
+/// are counted in [`CacheStats::evictions`].
+#[derive(Debug)]
 pub struct QuantCache {
     entries: HashMap<u64, QTensor>,
+    /// Insertion order of live keys (eviction order when bounded).
+    order: VecDeque<u64>,
+    /// Max live entries; `usize::MAX` = unbounded.
+    capacity: usize,
     stats: CacheStats,
 }
 
+impl Default for QuantCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl QuantCache {
-    /// Empty cache.
+    /// Empty, unbounded cache.
     pub fn new() -> Self {
-        Self::default()
+        Self::with_capacity(usize::MAX)
+    }
+
+    /// Empty cache holding at most `capacity` entries (oldest evicted
+    /// first). `capacity` must be at least 1.
+    pub fn with_capacity(capacity: usize) -> Self {
+        assert!(capacity >= 1, "cache capacity must be >= 1");
+        QuantCache {
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+            capacity,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// The capacity bound (`usize::MAX` = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Insert `q` under `key`, evicting oldest entries beyond capacity.
+    fn insert_bounded(&mut self, key: u64, q: QTensor) {
+        if self.entries.insert(key, q).is_none() {
+            self.order.push_back(key);
+        }
+        while self.entries.len() > self.capacity {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.entries.remove(&old);
+                    self.stats.evictions += 1;
+                }
+                None => break,
+            }
+        }
     }
 
     /// Get the quantized form of `x` under `key`, quantizing on miss.
@@ -44,17 +95,13 @@ impl QuantCache {
         bits: u8,
         rounding: Rounding,
     ) -> &QTensor {
-        use std::collections::hash_map::Entry;
-        match self.entries.entry(key) {
-            Entry::Occupied(e) => {
-                self.stats.hits += 1;
-                e.into_mut()
-            }
-            Entry::Vacant(e) => {
-                self.stats.misses += 1;
-                e.insert(quantize(x, bits, rounding))
-            }
+        if self.entries.contains_key(&key) {
+            self.stats.hits += 1;
+        } else {
+            self.stats.misses += 1;
+            self.insert_bounded(key, quantize(x, bits, rounding));
         }
+        self.entries.get(&key).expect("key present after insert")
     }
 
     /// Get the cached tensor under `key`, building it with `make` on miss.
@@ -64,23 +111,19 @@ impl QuantCache {
     /// against one *shared* scale so gathered rows assemble into a single
     /// batch `QTensor`. Hit/miss accounting matches `get_or_quantize`.
     pub fn get_or_insert_with(&mut self, key: u64, make: impl FnOnce() -> QTensor) -> &QTensor {
-        use std::collections::hash_map::Entry;
-        match self.entries.entry(key) {
-            Entry::Occupied(e) => {
-                self.stats.hits += 1;
-                e.into_mut()
-            }
-            Entry::Vacant(e) => {
-                self.stats.misses += 1;
-                e.insert(make())
-            }
+        if self.entries.contains_key(&key) {
+            self.stats.hits += 1;
+        } else {
+            self.stats.misses += 1;
+            self.insert_bounded(key, make());
         }
+        self.entries.get(&key).expect("key present after insert")
     }
 
     /// Insert an externally produced quantized tensor (e.g. the `qa`/`qb`
     /// copies the fused GEMM stores back).
     pub fn put(&mut self, key: u64, q: QTensor) {
-        self.entries.insert(key, q);
+        self.insert_bounded(key, q);
     }
 
     /// Look up without quantizing.
@@ -96,6 +139,7 @@ impl QuantCache {
     /// scales next iteration). Stats survive.
     pub fn clear(&mut self) {
         self.entries.clear();
+        self.order.clear();
     }
 
     /// Cache statistics so far.
@@ -131,7 +175,7 @@ mod tests {
         let q1 = c.get_or_quantize(7, &x, 8, Rounding::Nearest).clone();
         let q2 = c.get_or_quantize(7, &x, 8, Rounding::Nearest).clone();
         assert_eq!(q1, q2, "cache must return bit-identical tensors");
-        assert_eq!(c.stats(), CacheStats { misses: 1, hits: 1 });
+        assert_eq!(c.stats(), CacheStats { misses: 1, hits: 1, evictions: 0 });
     }
 
     #[test]
@@ -172,7 +216,40 @@ mod tests {
             assert_eq!(got, &q);
         }
         assert_eq!(built, 1, "factory must run only on the miss");
-        assert_eq!(c.stats(), CacheStats { misses: 1, hits: 2 });
+        assert_eq!(c.stats(), CacheStats { misses: 1, hits: 2, evictions: 0 });
+    }
+
+    #[test]
+    fn capacity_bound_evicts_oldest_first() {
+        let mut c = QuantCache::with_capacity(2);
+        let xs: Vec<_> = (0..4).map(|i| random_features(4, 4, 10 + i)).collect();
+        for (i, x) in xs.iter().enumerate() {
+            c.get_or_quantize(i as u64, x, 8, Rounding::Nearest);
+        }
+        // Keys 0 and 1 were evicted to admit 2 and 3.
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 2);
+        assert!(c.get(0).is_none());
+        assert!(c.get(1).is_none());
+        assert!(c.get(2).is_some());
+        assert!(c.get(3).is_some());
+        // Re-inserting an evicted key is a fresh miss, and evicts again.
+        c.get_or_quantize(0, &xs[0], 8, Rounding::Nearest);
+        assert_eq!(c.stats().evictions, 3);
+        assert_eq!(c.len(), 2);
+        assert!(c.cached_bytes() <= 2 * 16);
+    }
+
+    #[test]
+    fn overwriting_put_does_not_grow_or_evict() {
+        let mut c = QuantCache::with_capacity(2);
+        let x = random_features(4, 4, 20);
+        let q = crate::quant::quantize(&x, 8, Rounding::Nearest);
+        c.put(1, q.clone());
+        c.put(2, q.clone());
+        c.put(1, q.clone()); // overwrite in place
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 0);
     }
 
     #[test]

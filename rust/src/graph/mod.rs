@@ -14,8 +14,9 @@
 //!   stand in for the paper's datasets;
 //! - [`datasets`] — the five evaluation graphs of Table 1 at reduced scale,
 //!   matched on average degree and degree shape;
-//! - [`partition`] — node partitioning + 1-hop neighbour sampling for the
-//!   multi-worker mini-batch simulation (paper §4.2 multi-GPU).
+//! - [`partition`] — node partitioning for the multi-worker mini-batch
+//!   simulation (paper §4.2 multi-GPU); the neighbour sampling itself lives
+//!   in [`crate::sampler`].
 
 mod coo;
 mod csr;

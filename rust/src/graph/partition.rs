@@ -1,25 +1,14 @@
-//! Node partitioning and neighbour sampling for the multi-worker
-//! (multi-GPU) mini-batch training simulation (paper §4.2, Fig. 9).
+//! Node partitioning for the multi-worker (multi-GPU) mini-batch training
+//! simulation (paper §4.2, Fig. 9).
 //!
 //! The paper "directly adopts DGL's mini-batch multi-GPU training": each GPU
-//! trains on a batch of sampled subgraphs per epoch, then gradients are
-//! all-reduced. We reproduce the data path: a seeded node partitioner plus a
-//! 1-hop fanout sampler that extracts per-worker subgraphs with local ids.
+//! owns a shard of the training nodes and sweeps it in sampled mini-batches.
+//! This module provides the seeded partitioner; the sampling itself is the
+//! layered [`crate::sampler::NeighborSampler`] (the ad-hoc 1-hop
+//! `sample_subgraph` that used to live here is gone — the simulator consumes
+//! [`crate::sampler::Block`]s like every other sampled-training consumer).
 
-use super::Coo;
 use crate::quant::rng::Xoshiro256pp;
-
-/// A sampled subgraph with local node ids and the mapping back to the
-/// parent graph.
-#[derive(Debug, Clone)]
-pub struct Subgraph {
-    /// The local graph (nodes renumbered 0..n_local).
-    pub graph: Coo,
-    /// `local id -> parent id` for nodes.
-    pub node_map: Vec<u32>,
-    /// The seed (training) nodes, as local ids.
-    pub seeds: Vec<u32>,
-}
 
 /// Split `nodes` into `k` near-equal shards after a seeded shuffle.
 pub fn partition_nodes(nodes: &[u32], k: usize, seed: u64) -> Vec<Vec<u32>> {
@@ -37,50 +26,9 @@ pub fn partition_nodes(nodes: &[u32], k: usize, seed: u64) -> Vec<Vec<u32>> {
     shards
 }
 
-/// Sample a 1-hop subgraph around `seeds`: up to `fanout` in-edges per seed.
-///
-/// Mirrors DGL's `sample_neighbors` + `to_block` shape: the resulting local
-/// graph contains the seeds plus their sampled frontier, with every sampled
-/// edge pointing frontier→seed.
-pub fn sample_subgraph(_parent: &Coo, in_csr: &super::Csr, seeds: &[u32], fanout: usize, seed: u64) -> Subgraph {
-    let mut rng = Xoshiro256pp::new(seed);
-    let mut local_of = std::collections::HashMap::new();
-    let mut node_map = Vec::new();
-    let local = |v: u32, node_map: &mut Vec<u32>, local_of: &mut std::collections::HashMap<u32, u32>| {
-        *local_of.entry(v).or_insert_with(|| {
-            node_map.push(v);
-            (node_map.len() - 1) as u32
-        })
-    };
-    let mut src = Vec::new();
-    let mut dst = Vec::new();
-    let local_seeds: Vec<u32> =
-        seeds.iter().map(|&s| local(s, &mut node_map, &mut local_of)).collect();
-    for &s in seeds {
-        let (nbrs, _eids) = in_csr.row(s as usize);
-        let take = fanout.min(nbrs.len());
-        // Reservoir-free sampling: shuffle a candidate index window.
-        let mut idx: Vec<usize> = (0..nbrs.len()).collect();
-        for i in (1..idx.len()).rev() {
-            let j = (rng.next_u64() % (i as u64 + 1)) as usize;
-            idx.swap(i, j);
-        }
-        for &k in idx.iter().take(take) {
-            let u = nbrs[k];
-            let lu = local(u, &mut node_map, &mut local_of);
-            let ls = local_of[&s];
-            src.push(lu);
-            dst.push(ls);
-        }
-    }
-    let n_local = node_map.len();
-    Subgraph { graph: Coo::new(n_local, src, dst), node_map, seeds: local_seeds }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::Csr;
 
     #[test]
     fn partition_covers_all_nodes_disjointly() {
@@ -96,41 +44,9 @@ mod tests {
     }
 
     #[test]
-    fn sample_respects_fanout() {
-        let g = crate::graph::generators::erdos_renyi(100, 1000, 3);
-        let csr = Csr::from_coo(&g);
-        let seeds: Vec<u32> = (0..10).collect();
-        let sub = sample_subgraph(&g, &csr, &seeds, 3, 7);
-        // every seed pulls at most 3 in-edges
-        let mut per_seed = std::collections::HashMap::new();
-        for e in 0..sub.graph.num_edges() {
-            *per_seed.entry(sub.graph.dst[e]).or_insert(0usize) += 1;
-        }
-        assert!(per_seed.values().all(|&c| c <= 3));
-        assert_eq!(sub.seeds.len(), 10);
-    }
-
-    #[test]
-    fn sampled_edges_exist_in_parent() {
-        let g = crate::graph::generators::erdos_renyi(50, 300, 5);
-        let csr = Csr::from_coo(&g);
-        let seeds: Vec<u32> = vec![1, 2, 3];
-        let sub = sample_subgraph(&g, &csr, &seeds, 5, 11);
-        let parent_edges: std::collections::HashSet<(u32, u32)> =
-            (0..g.num_edges()).map(|e| (g.src[e], g.dst[e])).collect();
-        for e in 0..sub.graph.num_edges() {
-            let ps = sub.node_map[sub.graph.src[e] as usize];
-            let pd = sub.node_map[sub.graph.dst[e] as usize];
-            assert!(parent_edges.contains(&(ps, pd)), "({ps},{pd}) not in parent");
-        }
-    }
-
-    #[test]
-    fn node_map_is_injective() {
-        let g = crate::graph::generators::erdos_renyi(60, 400, 6);
-        let csr = Csr::from_coo(&g);
-        let sub = sample_subgraph(&g, &csr, &[0, 5, 9], 4, 1);
-        let set: std::collections::HashSet<_> = sub.node_map.iter().collect();
-        assert_eq!(set.len(), sub.node_map.len());
+    fn partition_is_seeded() {
+        let nodes: Vec<u32> = (0..64).collect();
+        assert_eq!(partition_nodes(&nodes, 3, 7), partition_nodes(&nodes, 3, 7));
+        assert_ne!(partition_nodes(&nodes, 3, 7), partition_nodes(&nodes, 3, 8));
     }
 }

@@ -19,9 +19,12 @@
 //!   *and* sampled-block), the inter-primitive quantized-tensor cache and
 //!   reuse detection, adaptive kernel selection, the mini-batch
 //!   neighbor-sampling subsystem ([`sampler`]: layered fanout sampling,
-//!   MFG block extraction, quantized feature gathering), a multi-worker
-//!   data-parallel simulator, an analytical GPU cost model, and the PJRT
-//!   runtime that executes jax-lowered artifacts.
+//!   MFG block extraction, bounded quantized feature gathering), a
+//!   multi-worker data-parallel simulator whose workers train persistent
+//!   models on the same sampler `Block` pipeline (per-worker sampling
+//!   streams, one process-wide quantized feature store, per-step quantized
+//!   ring all-reduce over a modelled PCIe interconnect), an analytical GPU
+//!   cost model, and the PJRT runtime that executes jax-lowered artifacts.
 //! - **Layer 2 (`python/compile/model.py`)** — GCN/GAT forward/backward in
 //!   JAX, AOT-lowered to HLO text under `artifacts/`.
 //! - **Layer 1 (`python/compile/kernels/`)** — Pallas kernels (quantize,

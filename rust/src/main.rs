@@ -5,18 +5,24 @@
 //!              [--mode fp32|tango|test1|test2|exact] [--epochs N]
 //!              [--bits B] [--auto-bits] [--lr F] [--hidden N] [--seed S]
 //!              [--sampler neighbor|full] [--fanouts 10,10]
-//!              [--batch-size N] [--sample-seed S]
+//!              [--batch-size N] [--sample-seed S] [--cache-nodes N]
 //! tango repro  <table1|fig2|fig7|...|fig16|table2|all> [--quick]
 //!              [--epochs N] [--speed-epochs N]
 //! tango plan                # print the derived quantization-caching plan
 //! tango artifacts [--dir artifacts]   # list + smoke-run the AOT artifacts
-//! tango multigpu [--workers K] [--quantize-grads]
+//! tango multigpu [--config cfg.toml] [--workers K] [--epochs N]
+//!                [--quantize-grads] [--no-overlap]
+//!                [--fanouts 10,10] [--batch-size N] [--sample-seed S]
+//!                [--cache-nodes N]
 //! ```
+//!
+//! `multigpu` shares the sampler knobs with `train` (same flags, same
+//! `[train]` TOML keys); its own knobs live under `[multigpu]`.
 
 use tango::config::{parse_mode, ModelKind, TrainConfig};
 use tango::coordinator::{detect_reuse, CompGraph, Trainer};
 use tango::metrics::fmt_time;
-use tango::multigpu::{run_data_parallel, Interconnect, MultiGpuConfig};
+use tango::multigpu::{run_data_parallel, MultiGpuConfig};
 use tango::repro::{self, ReproConfig};
 use tango::util::cli::Args;
 
@@ -49,16 +55,31 @@ fn print_help() {
          \x20 repro      regenerate a paper table/figure (or 'all')\n\
          \x20 plan       print the quantization-caching plan for a GAT layer\n\
          \x20 artifacts  list and smoke-run the AOT artifacts\n\
-         \x20 multigpu   run the data-parallel simulation\n"
+         \x20 multigpu   run the data-parallel simulation on sampled\n\
+         \x20            mini-batches (shares --fanouts/--batch-size/\n\
+         \x20            --sample-seed/--cache-nodes with train)\n"
     );
 }
 
+/// Read the `--config` file, if given (shared by `train` and `multigpu` so
+/// the TOML is read and parsed once per run).
+fn config_text(args: &Args) -> tango::Result<Option<String>> {
+    match args.flags.get("config") {
+        Some(path) => Ok(Some(std::fs::read_to_string(path)?)),
+        None => Ok(None),
+    }
+}
+
 fn train_config_from(args: &Args) -> tango::Result<TrainConfig> {
-    let mut cfg = if let Some(path) = args.flags.get("config") {
-        let text = std::fs::read_to_string(path)?;
-        TrainConfig::from_toml(&text).map_err(|e| anyhow::anyhow!(e))?
-    } else {
-        TrainConfig::default()
+    train_config_with_toml(args, config_text(args)?.as_deref())
+}
+
+/// Build the train config from an already-read TOML text (or defaults),
+/// then apply the CLI flag overrides.
+fn train_config_with_toml(args: &Args, toml: Option<&str>) -> tango::Result<TrainConfig> {
+    let mut cfg = match toml {
+        Some(text) => TrainConfig::from_toml(text).map_err(|e| anyhow::anyhow!(e))?,
+        None => TrainConfig::default(),
     };
     if let Some(m) = args.flags.get("model") {
         cfg.model = m.parse::<ModelKind>().map_err(|e| anyhow::anyhow!(e))?;
@@ -90,6 +111,7 @@ fn train_config_from(args: &Args) -> tango::Result<TrainConfig> {
     }
     cfg.sampler.batch_size = args.get_as("batch-size", cfg.sampler.batch_size);
     cfg.sampler.seed = args.get_as("sample-seed", cfg.sampler.seed);
+    cfg.sampler.cache_nodes = args.get_as("cache-nodes", cfg.sampler.cache_nodes);
     cfg.log_every = args.get_as("log-every", 10);
     Ok(cfg)
 }
@@ -165,7 +187,13 @@ fn cmd_artifacts(args: &Args) -> tango::Result<()> {
     let names: Vec<String> = rt.names().iter().map(|s| s.to_string()).collect();
     for name in &names {
         let spec = rt.manifest.get(name).unwrap().clone();
-        println!("  {:<22} {} inputs, {} outputs — {}", spec.name, spec.inputs.len(), spec.num_outputs, spec.description);
+        println!(
+            "  {:<22} {} inputs, {} outputs — {}",
+            spec.name,
+            spec.inputs.len(),
+            spec.num_outputs,
+            spec.description
+        );
     }
     // Smoke-run the quantize artifact (smallest).
     let spec = rt.manifest.get("quantize8").unwrap().clone();
@@ -177,26 +205,39 @@ fn cmd_artifacts(args: &Args) -> tango::Result<()> {
 }
 
 fn cmd_multigpu(args: &Args) -> tango::Result<()> {
-    let train = train_config_from(args)?;
+    // The sampler knobs (--fanouts/--batch-size/--sample-seed/--cache-nodes
+    // and the [train] TOML keys) are the unified ones `tango train` reads.
+    let toml = config_text(args)?;
+    let train = train_config_with_toml(args, toml.as_deref())?;
     let data = if train.dataset == "tiny" {
         tango::graph::datasets::tiny(train.seed)
     } else {
         tango::graph::datasets::load_by_name(&train.dataset, train.seed)
     };
-    let cfg = MultiGpuConfig {
-        workers: args.get_as("workers", 4),
-        epochs: args.get_as("epochs", 5),
-        fanout: args.get_as("fanout", 8),
-        batch_size: args.get_as("batch-size", 256),
-        quantize_grads: args.get_bool("quantize-grads"),
-        overlap_quantization: true,
-        interconnect: Interconnect::pcie3(),
-        train,
-    };
+    let mut cfg = MultiGpuConfig::new(train);
+    if let Some(text) = &toml {
+        cfg.apply_toml(text).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    cfg.workers = args.get_as("workers", cfg.workers);
+    cfg.epochs = args.get_as("epochs", cfg.epochs);
+    if args.get_bool("quantize-grads") {
+        cfg.quantize_grads = true;
+    }
+    if args.get_bool("no-overlap") {
+        cfg.overlap_quantization = false;
+    }
+    println!(
+        "multigpu: {} workers, fanouts {:?}, batch size {}, {} payloads",
+        cfg.workers,
+        cfg.train.sampler.fanouts,
+        cfg.train.sampler.batch_size,
+        if cfg.quantize_grads { "quantized" } else { "fp32" }
+    );
     let report = run_data_parallel(&cfg, &data)?;
     for (i, e) in report.epochs.iter().enumerate() {
         println!(
-            "epoch {i}: compute {} + comm {} + quant {} = {}  (loss {:.4})",
+            "epoch {i}: {} steps, compute {} + comm {} + quant {} = {}  (loss {:.4})",
+            e.steps,
             fmt_time(e.compute_s),
             fmt_time(e.comm_s),
             fmt_time(e.quant_s),

@@ -15,6 +15,28 @@ pub fn ring_transfer_bytes(n: usize, k: usize, elem_bytes: f64) -> f64 {
     2.0 * (k as f64 - 1.0) / k as f64 * n as f64 * elem_bytes
 }
 
+/// Wire bytes per worker for one ring all-reduce of `n` gradient elements
+/// across `k` workers, with the INT8-vs-FP32 element accounting the Fig. 9
+/// timing model charges:
+///
+/// - FP32 payloads move 4-byte elements;
+/// - quantized payloads move 1-byte elements **plus** one FP32 scale riding
+///   along with each transferred chunk — `2·(k−1)` chunk sends per worker
+///   (reduce-scatter + all-gather), 4 bytes each.
+pub fn allreduce_payload_bytes(n: usize, k: usize, quantized: bool) -> f64 {
+    let elem_bytes = if quantized { 1.0 } else { 4.0 };
+    let scale_bytes =
+        if quantized && k > 1 { 4.0 * 2.0 * (k as f64 - 1.0) } else { 0.0 };
+    ring_transfer_bytes(n, k, elem_bytes) + scale_bytes
+}
+
+/// Number of point-to-point messages each worker sends in one ring
+/// all-reduce across `k` workers (reduce-scatter + all-gather), which the
+/// interconnect model charges a latency term per message.
+pub fn ring_messages(k: usize) -> usize {
+    2 * k.saturating_sub(1)
+}
+
 /// All-reduce (mean) of per-worker gradient vectors.
 ///
 /// With `quantize_payload`, each worker's contribution is quantized to INT8
@@ -86,6 +108,24 @@ mod tests {
         assert_eq!(ring_transfer_bytes(100, 2, 4.0), 400.0);
         // k→∞ approaches 2·n·bytes.
         assert!((ring_transfer_bytes(100, 100, 4.0) - 792.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn payload_bytes_account_int8_vs_fp32() {
+        // k=1: nothing moves either way.
+        assert_eq!(allreduce_payload_bytes(1000, 1, false), 0.0);
+        assert_eq!(allreduce_payload_bytes(1000, 1, true), 0.0);
+        // k=4: fp32 = 2·3/4·n·4; int8 = 2·3/4·n·1 + 6 chunk scales.
+        let fp = allreduce_payload_bytes(1000, 4, false);
+        let q = allreduce_payload_bytes(1000, 4, true);
+        assert_eq!(fp, 6000.0);
+        assert_eq!(q, 1500.0 + 24.0);
+        // Large gradients approach the full 4x payload ratio.
+        let fp = allreduce_payload_bytes(4_000_000, 4, false);
+        let q = allreduce_payload_bytes(4_000_000, 4, true);
+        assert!(fp / q > 3.99, "{}", fp / q);
+        assert_eq!(ring_messages(1), 0);
+        assert_eq!(ring_messages(4), 6);
     }
 
     #[test]

@@ -1,21 +1,24 @@
 //! Multi-worker data-parallel training simulation (paper §4.2, Fig. 9).
 //!
 //! The paper adopts DGL's mini-batch multi-GPU training: each GPU trains on
-//! sampled subgraphs, then gradients are all-reduced over PCIe. Tango's win
-//! there is **transferring quantized node features and gradients**, which
-//! relieves PCIe congestion — so the speedup *grows* with GPU count
+//! sampled mini-batches, then gradients are all-reduced over PCIe. Tango's
+//! win there is **transferring quantized node features and gradients**,
+//! which relieves PCIe congestion — so the speedup *grows* with GPU count
 //! (1.1×→1.5× on GCN, 1.2×→1.7× on GAT from 2 to 6 GPUs).
 //!
-//! No GPUs or PCIe exist here, so the computation is real (worker threads
-//! train real models on real sampled subgraphs and the ring all-reduce is
-//! numerically executed) while the *interconnect* is modelled: a
-//! bandwidth/latency/contention parameterisation of PCIe over which FP32 or
-//! quantized payloads are charged ([`Interconnect`]).
+//! No GPUs or PCIe exist here, so the computation is real — worker threads
+//! run persistent GCN/GAT models over the sampler's [`crate::sampler::Block`]
+//! pipeline (per-worker [`crate::sampler::NeighborSampler`] streams, one
+//! process-wide [`crate::sampler::QuantFeatureStore`] for the feature
+//! gathers) and the ring all-reduce is numerically executed — while the
+//! *interconnect* is modelled: a bandwidth/latency/contention
+//! parameterisation of PCIe over which FP32 or quantized payloads are
+//! charged ([`Interconnect`], [`allreduce_payload_bytes`]).
 
 mod allreduce;
 mod interconnect;
 mod worker;
 
-pub use allreduce::{ring_allreduce, ring_transfer_bytes};
+pub use allreduce::{allreduce_payload_bytes, ring_allreduce, ring_messages, ring_transfer_bytes};
 pub use interconnect::Interconnect;
 pub use worker::{run_data_parallel, EpochStats, MultiGpuConfig, MultiGpuReport};

@@ -1,29 +1,41 @@
-//! Data-parallel workers: real mini-batch training on sampled subgraphs
-//! across threads, gradients exchanged via the (numerically real) ring
-//! all-reduce, interconnect time *modelled* per DESIGN.md §Substitutions.
+//! Data-parallel workers on the sampler's `Block` pipeline: every worker
+//! owns a persistent model and a seeded [`NeighborSampler`] over the shared
+//! in-edge CSR, sweeps its train-node shard in shuffled mini-batches each
+//! epoch (the DGL epoch shape), and gathers input features from one
+//! process-wide [`QuantFeatureStore`]. After every synchronous step the
+//! gradients move through the (numerically real) ring all-reduce, while the
+//! *interconnect* time is modelled per DESIGN.md §Substitutions with correct
+//! INT8-vs-FP32 byte accounting ([`allreduce_payload_bytes`]).
 
-use super::allreduce::{ring_allreduce, ring_transfer_bytes};
+use super::allreduce::{allreduce_payload_bytes, ring_allreduce, ring_messages};
 use super::interconnect::Interconnect;
-use crate::config::{ModelKind, TrainConfig};
+use crate::config::{ModelKind, TomlDoc, TrainConfig};
 use crate::graph::datasets::{Dataset, Task};
-use crate::graph::partition::{partition_nodes, sample_subgraph};
+use crate::graph::partition::partition_nodes;
 use crate::graph::Csr;
 use crate::model::{softmax_cross_entropy, GatConfig, GatModel, GcnConfig, GcnModel, Sgd};
+use crate::quant::dequantize;
+use crate::quant::rng::mix_seeds;
+use crate::sampler::{
+    adjust_fanouts, gather_rows, shuffled_batches, NeighborSampler, QuantFeatureStore,
+};
 use crate::util::par;
+use std::sync::Mutex;
 
 /// Multi-worker run configuration.
+///
+/// The sampler knobs (`fanouts`, `batch_size`, `sample_seed`, `cache_nodes`)
+/// live on [`TrainConfig::sampler`] — the *same* knobs `tango train
+/// --sampler neighbor` reads, so the single-GPU and multi-GPU paths cannot
+/// drift apart.
 #[derive(Debug, Clone)]
 pub struct MultiGpuConfig {
-    /// Base training config (model/hidden/mode/seed).
+    /// Base training config (model/hidden/mode/seed + sampler knobs).
     pub train: TrainConfig,
     /// Number of simulated GPUs (worker threads).
     pub workers: usize,
-    /// Epochs to run.
+    /// Epochs to run; each epoch sweeps every worker's whole shard once.
     pub epochs: usize,
-    /// Neighbour-sampling fanout.
-    pub fanout: usize,
-    /// Mini-batch seeds per worker per epoch.
-    pub batch_size: usize,
     /// Quantize all-reduce payloads (Tango) or send FP32 (baseline).
     pub quantize_grads: bool,
     /// Overlap the payload quantization with subgraph sampling (paper:
@@ -33,16 +45,68 @@ pub struct MultiGpuConfig {
     pub interconnect: Interconnect,
 }
 
+impl MultiGpuConfig {
+    /// Defaults around a base training config: 4 workers, 5 epochs, FP32
+    /// gradient exchange over PCIe 3.0.
+    pub fn new(train: TrainConfig) -> Self {
+        MultiGpuConfig {
+            train,
+            workers: 4,
+            epochs: 5,
+            quantize_grads: false,
+            overlap_quantization: true,
+            interconnect: Interconnect::pcie3(),
+        }
+    }
+
+    /// Parse a full config from TOML text: the `[train]` section (including
+    /// the unified sampler knobs `fanouts`/`batch_size`/`sample_seed`/
+    /// `cache_nodes`) plus a `[multigpu]` section with `workers`, `epochs`,
+    /// `quantize_grads` and `overlap_quantization`.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let mut cfg = Self::new(TrainConfig::from_toml(text)?);
+        cfg.apply_toml(text)?;
+        Ok(cfg)
+    }
+
+    /// Apply just the `[multigpu]` section of `text` over `self` (the
+    /// `[train]` section is handled by [`TrainConfig::from_toml`]).
+    pub fn apply_toml(&mut self, text: &str) -> Result<(), String> {
+        let doc = TomlDoc::parse(text)?;
+        if let Some(v) = doc.get("multigpu", "workers") {
+            self.workers = v.parse().map_err(|e| format!("workers: {e}"))?;
+        }
+        if let Some(v) = doc.get("multigpu", "epochs") {
+            self.epochs = v.parse().map_err(|e| format!("epochs: {e}"))?;
+        }
+        if let Some(v) = doc.get("multigpu", "quantize_grads") {
+            self.quantize_grads = v
+                .parse()
+                .map_err(|_| format!("quantize_grads: expected true|false, got '{v}'"))?;
+        }
+        if let Some(v) = doc.get("multigpu", "overlap_quantization") {
+            self.overlap_quantization = v
+                .parse()
+                .map_err(|_| format!("overlap_quantization: expected true|false, got '{v}'"))?;
+        }
+        Ok(())
+    }
+}
+
 /// Per-epoch timing breakdown.
 #[derive(Debug, Clone, Copy)]
 pub struct EpochStats {
-    /// Slowest worker's compute time (real, measured).
+    /// Synchronous mini-batch steps this epoch (max over workers' batch
+    /// counts; one ring all-reduce per step).
+    pub steps: usize,
+    /// Compute time (real, measured): sum over steps of the slowest
+    /// worker's sample+gather+train time.
     pub compute_s: f64,
-    /// Modelled interconnect time for the gradient all-reduce.
+    /// Modelled interconnect time for the gradient all-reduces.
     pub comm_s: f64,
     /// Modelled quantization time not hidden behind sampling.
     pub quant_s: f64,
-    /// Mean training loss across workers.
+    /// Mean training loss across workers and steps.
     pub loss: f32,
 }
 
@@ -58,7 +122,7 @@ impl EpochStats {
 pub struct MultiGpuReport {
     /// Per-epoch stats.
     pub epochs: Vec<EpochStats>,
-    /// Gradient elements all-reduced per epoch.
+    /// Gradient elements all-reduced per step.
     pub grad_elems: usize,
 }
 
@@ -89,147 +153,206 @@ impl AnyModel {
     }
 }
 
+/// One worker's persistent training state: model + optimizer + sampler live
+/// across every epoch (a fresh model per epoch would silently reset
+/// quantization step counters and redo graph binding work every sweep).
+struct WorkerState {
+    model: AnyModel,
+    opt: Sgd,
+    sampler: NeighborSampler,
+}
+
+fn build_model(cfg: &TrainConfig, data: &Dataset) -> AnyModel {
+    match cfg.model {
+        ModelKind::Gcn => AnyModel::Gcn(GcnModel::new(
+            GcnConfig {
+                in_dim: data.features.cols(),
+                hidden: cfg.hidden,
+                out_dim: data.num_classes,
+                layers: cfg.layers,
+                mode: cfg.mode,
+            },
+            &data.graph,
+            cfg.seed,
+        )),
+        ModelKind::Gat => AnyModel::Gat(GatModel::new(
+            GatConfig {
+                in_dim: data.features.cols(),
+                hidden: cfg.hidden,
+                out_dim: data.num_classes,
+                heads: cfg.heads,
+                layers: cfg.layers,
+                mode: cfg.mode,
+            },
+            &data.graph,
+            cfg.seed,
+        )),
+    }
+}
+
 /// Run simulated data-parallel training. Only NC datasets are supported
 /// (the paper's multi-GPU experiment trains classification models).
+///
+/// Every epoch each worker sweeps its shard once in shuffled mini-batches
+/// (reshuffled per epoch — no node is stuck outside the fixed prefix of its
+/// shard), sampling [`crate::sampler::Block`]s with its own splitmix64-mixed
+/// stream. With one worker and `quantize_grads` off, the run replays
+/// [`crate::sampler::MiniBatchTrainer`] step for step.
 pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<MultiGpuReport> {
     assert_eq!(data.task, Task::NodeClassification, "multi-GPU sim is NC-only");
     let k = cfg.workers.max(1);
-    let shards = partition_nodes(&data.train_nodes, k, cfg.train.seed);
-    let csr = Csr::from_coo(&data.graph);
-    // Per-worker models, identically initialised (same seed = same params).
-    let mut models: Vec<AnyModel> = (0..k)
-        .map(|_| match cfg.train.model {
-            ModelKind::Gcn => AnyModel::Gcn(GcnModel::new(
-                GcnConfig {
-                    in_dim: data.features.cols(),
-                    hidden: cfg.train.hidden,
-                    out_dim: data.num_classes,
-                    layers: cfg.train.layers,
-                    mode: cfg.train.mode,
-                },
-                &data.graph,
-                cfg.train.seed,
-            )),
-            ModelKind::Gat => AnyModel::Gat(GatModel::new(
-                GatConfig {
-                    in_dim: data.features.cols(),
-                    hidden: cfg.train.hidden,
-                    out_dim: data.num_classes,
-                    heads: cfg.train.heads,
-                    layers: cfg.train.layers,
-                    mode: cfg.train.mode,
-                },
-                &data.graph,
-                cfg.train.seed,
-            )),
+    let train = &cfg.train;
+    let batch_size = train.sampler.batch_size.max(1);
+    let fanouts = adjust_fanouts(&train.sampler.fanouts, train.layers);
+    // k=1 keeps the natural train-node order so the sweep is identical to
+    // the single-GPU MiniBatchTrainer's; k>1 shards a seeded shuffle.
+    let shards: Vec<Vec<u32>> = if k == 1 {
+        vec![data.train_nodes.clone()]
+    } else {
+        partition_nodes(&data.train_nodes, k, train.seed)
+    };
+    let csr_in = Csr::from_coo(&data.graph);
+    let degrees = data.graph.in_degrees();
+    // One process-wide quantized feature store: the feature table is static,
+    // so all workers share a single scale and one hot-node row cache instead
+    // of quantizing per-worker copies (the BiFeat amortisation).
+    let store: Option<Mutex<QuantFeatureStore>> = if train.mode.quantize {
+        Some(Mutex::new(QuantFeatureStore::with_capacity(
+            &data.features,
+            train.mode.bits,
+            train.sampler.cache_nodes,
+        )))
+    } else {
+        None
+    };
+    // Persistent per-worker state; identical seeds → identical initial
+    // params, and the per-step averaged update keeps them in lockstep.
+    let workers: Vec<Mutex<WorkerState>> = (0..k)
+        .map(|w| {
+            Mutex::new(WorkerState {
+                model: build_model(train, data),
+                opt: Sgd::new(train.lr),
+                sampler: NeighborSampler::new(
+                    fanouts.clone(),
+                    mix_seeds(&[train.sampler.seed, train.seed, w as u64]),
+                ),
+            })
         })
         .collect();
-    let grad_elems = models[0].params();
-    let grad_elems = grad_elems.len();
+    let grad_elems = workers[0].lock().unwrap().model.params().len();
 
     let mut epochs = Vec::with_capacity(cfg.epochs);
     for epoch in 0..cfg.epochs {
-        // Each worker: sample a subgraph batch around its shard and run one
-        // real training step on it (threaded, measured).
-        let results: Vec<(Vec<f32>, f64, f32)> = par::map_range(k, |w| {
-            let shard = &shards[w];
-            let take = cfg.batch_size.min(shard.len());
-            let seeds = &shard[..take];
-            let sub = sample_subgraph(
-                &data.graph,
-                &csr,
-                seeds,
-                cfg.fanout,
-                cfg.train.seed ^ (epoch as u64) << 8 ^ w as u64,
+        // Per-epoch reshuffle of every shard (same mixer as the single-GPU
+        // sweep) — the fix for the "same fixed prefix every epoch" bug.
+        let shuffle_seed = mix_seeds(&[train.seed, epoch as u64]);
+        let batches: Vec<Vec<Vec<u32>>> =
+            shards.iter().map(|s| shuffled_batches(s, batch_size, shuffle_seed)).collect();
+        let steps = batches.iter().map(|b| b.len()).max().unwrap_or(0);
+        let mut compute_s = 0.0f64;
+        let mut comm_s = 0.0f64;
+        let mut quant_s = 0.0f64;
+        let mut loss_sum = 0.0f32;
+        let mut loss_n = 0usize;
+        for step in 0..steps {
+            // Synchronous round: each worker with a batch left samples its
+            // blocks, gathers features through the shared store and runs one
+            // real train_step_blocks on its own model (threaded, measured).
+            let results: Vec<Option<(Vec<f32>, Vec<f32>, f64, f32)>> = par::map_range(k, |w| {
+                let batch = batches[w].get(step)?;
+                let mut guard = workers[w].lock().unwrap();
+                let ws = &mut *guard;
+                let t0 = std::time::Instant::now();
+                let stream = mix_seeds(&[epoch as u64, step as u64]);
+                let blocks = ws.sampler.sample_blocks(&csr_in, &degrees, batch, stream);
+                let input_nodes = &blocks[0].src_nodes;
+                let x0 = match &store {
+                    // Hold the shared store's lock only for the INT8 row
+                    // gather (cache hits after warm-up); the full-width
+                    // dequantize pass runs outside it so concurrent workers
+                    // don't serialize the expensive part of the gather —
+                    // lock contention would otherwise be charged to the
+                    // quantized run's measured compute and bias the
+                    // FP32-vs-Tango comparison.
+                    Some(s) => {
+                        let q = s.lock().unwrap().gather_quantized(&data.features, input_nodes);
+                        dequantize(&q)
+                    }
+                    None => gather_rows(&data.features, input_nodes),
+                };
+                let labels: Vec<u32> =
+                    batch.iter().map(|&v| data.labels[v as usize]).collect();
+                let nodes: Vec<u32> = (0..batch.len() as u32).collect();
+                let before = ws.model.params();
+                let loss = match &mut ws.model {
+                    AnyModel::Gcn(m) => {
+                        m.train_step_blocks(&blocks, &x0, &mut ws.opt, |lg| {
+                            softmax_cross_entropy(lg, &labels, &nodes)
+                        })
+                        .0
+                    }
+                    AnyModel::Gat(m) => {
+                        m.train_step_blocks(&blocks, &x0, &mut ws.opt, |lg| {
+                            softmax_cross_entropy(lg, &labels, &nodes)
+                        })
+                        .0
+                    }
+                };
+                // Effective gradient = (before - after) / lr.
+                let after = ws.model.params();
+                let grad: Vec<f32> =
+                    before.iter().zip(&after).map(|(b, a)| (b - a) / train.lr).collect();
+                Some((before, grad, t0.elapsed().as_secs_f64(), loss))
+            });
+            let mut before: Option<Vec<f32>> = None;
+            let mut grads: Vec<Vec<f32>> = Vec::with_capacity(k);
+            let mut round_compute = 0.0f64;
+            for (b, g, secs, loss) in results.into_iter().flatten() {
+                // All workers hold identical params entering the round, so
+                // any participant's `before` is *the* pre-step state.
+                if before.is_none() {
+                    before = Some(b);
+                }
+                grads.push(g);
+                round_compute = round_compute.max(secs);
+                loss_sum += loss;
+                loss_n += 1;
+            }
+            let Some(before) = before else { continue };
+            compute_s += round_compute;
+            // Real all-reduce of the participating gradients (workers whose
+            // shard ran dry this round contribute nothing but still receive
+            // the averaged update below, staying in lockstep).
+            ring_allreduce(
+                &mut grads,
+                cfg.quantize_grads,
+                mix_seeds(&[train.seed, epoch as u64, step as u64]),
             );
-            let sub_graph = sub.graph.clone().with_self_loops();
-            // Gather local features/labels.
-            let dim = data.features.cols();
-            let mut feats = crate::tensor::Dense::zeros(&[sub.node_map.len(), dim]);
-            for (local, &parent) in sub.node_map.iter().enumerate() {
-                feats.row_mut(local).copy_from_slice(data.features.row(parent as usize));
+            // Modelled interconnect time: every worker joins the ring each
+            // step; quantized payloads move 1-byte elements plus per-chunk
+            // scales, FP32 payloads 4-byte elements.
+            let bytes = allreduce_payload_bytes(grad_elems, k, cfg.quantize_grads);
+            comm_s += cfg.interconnect.transfer_time(bytes, ring_messages(k), k);
+            // Quantization cost: hidden behind sampling when overlapped.
+            if cfg.quantize_grads && !cfg.overlap_quantization {
+                // One pass over the gradient at (modelled) memory speed.
+                quant_s += grad_elems as f64 * 5.0 / 12.8e9;
             }
-            let labels: Vec<u32> =
-                sub.node_map.iter().map(|&p| data.labels[p as usize]).collect();
-            // One local step on a fresh model carrying the global params.
-            let t0 = std::time::Instant::now();
-            let mut local = match cfg.train.model {
-                ModelKind::Gcn => AnyModel::Gcn(GcnModel::new(
-                    GcnConfig {
-                        in_dim: dim,
-                        hidden: cfg.train.hidden,
-                        out_dim: data.num_classes,
-                        layers: cfg.train.layers,
-                        mode: cfg.train.mode,
-                    },
-                    &sub_graph,
-                    cfg.train.seed,
-                )),
-                ModelKind::Gat => AnyModel::Gat(GatModel::new(
-                    GatConfig {
-                        in_dim: dim,
-                        hidden: cfg.train.hidden,
-                        out_dim: data.num_classes,
-                        heads: cfg.train.heads,
-                        layers: cfg.train.layers,
-                        mode: cfg.train.mode,
-                    },
-                    &sub_graph,
-                    cfg.train.seed,
-                )),
-            };
-            // Continue from the current global parameters (all workers hold
-            // identical params after each all-reduce).
-            local.set_params(&models[w].params());
-            let before = local.params();
-            let mut opt = Sgd::new(cfg.train.lr);
-            let loss = match &mut local {
-                AnyModel::Gcn(m) => {
-                    m.train_step(&feats, &mut opt, |lg| {
-                        softmax_cross_entropy(lg, &labels, &sub.seeds)
-                    })
-                    .0
+            // Apply the averaged gradient everywhere. A single FP32 worker
+            // already holds exactly this state (mean of one gradient), so
+            // skip the rewrite and stay bitwise equal to MiniBatchTrainer.
+            if k > 1 || cfg.quantize_grads {
+                let mut p = before;
+                for (pi, gi) in p.iter_mut().zip(&grads[0]) {
+                    *pi -= train.lr * gi;
                 }
-                AnyModel::Gat(m) => {
-                    m.train_step(&feats, &mut opt, |lg| {
-                        softmax_cross_entropy(lg, &labels, &sub.seeds)
-                    })
-                    .0
+                for ws in &workers {
+                    ws.lock().unwrap().model.set_params(&p);
                 }
-            };
-            // Effective gradient = (before - after) / lr.
-            let after = local.params();
-            let grad: Vec<f32> =
-                before.iter().zip(&after).map(|(b, a)| (b - a) / cfg.train.lr).collect();
-            (grad, t0.elapsed().as_secs_f64(), loss)
-        });
-        let compute_s = results.iter().map(|r| r.1).fold(0.0, f64::max);
-        let loss = results.iter().map(|r| r.2).sum::<f32>() / k as f32;
-        let mut grads: Vec<Vec<f32>> = results.into_iter().map(|r| r.0).collect();
-        // Real all-reduce of the gradients.
-        ring_allreduce(&mut grads, cfg.quantize_grads, cfg.train.seed ^ epoch as u64);
-        // Apply the averaged gradient everywhere.
-        for (w, model) in models.iter_mut().enumerate() {
-            let mut p = model.params();
-            for (pi, gi) in p.iter_mut().zip(&grads[w]) {
-                *pi -= cfg.train.lr * gi;
             }
-            model.set_params(&p);
         }
-        // Modelled interconnect time (paper's PCIe): ring transfer of the
-        // gradient payload; quantized payloads are 1 B + per-chunk scales.
-        let elem_bytes = if cfg.quantize_grads { 1.0 } else { 4.0 };
-        let bytes = ring_transfer_bytes(grad_elems, k, elem_bytes)
-            + if cfg.quantize_grads { 8.0 * k as f64 } else { 0.0 };
-        let comm_s = cfg.interconnect.transfer_time(bytes, 2 * (k - 1).max(1), k);
-        // Quantization cost: hidden behind sampling when overlapped.
-        let quant_s = if cfg.quantize_grads && !cfg.overlap_quantization {
-            // One pass over the gradient at (modelled) memory speed.
-            grad_elems as f64 * 5.0 / 12.8e9
-        } else {
-            0.0
-        };
-        epochs.push(EpochStats { compute_s, comm_s, quant_s, loss });
+        let loss = if loss_n == 0 { 0.0 } else { loss_sum / loss_n as f32 };
+        epochs.push(EpochStats { steps, compute_s, comm_s, quant_s, loss });
     }
     Ok(MultiGpuReport { epochs, grad_elems })
 }
@@ -240,25 +363,26 @@ mod tests {
     use crate::graph::datasets;
 
     fn cfg(workers: usize, quantize: bool) -> MultiGpuConfig {
+        let mut train = TrainConfig {
+            model: ModelKind::Gcn,
+            dataset: "tiny".into(),
+            epochs: 2,
+            lr: 0.05,
+            hidden: 8,
+            heads: 2,
+            layers: 2,
+            mode: crate::model::TrainMode::fp32(),
+            auto_bits: false,
+            seed: 5,
+            log_every: 0,
+            ..Default::default()
+        };
+        train.sampler.fanouts = vec![4, 4];
+        train.sampler.batch_size = 16;
         MultiGpuConfig {
-            train: TrainConfig {
-                model: ModelKind::Gcn,
-                dataset: "tiny".into(),
-                epochs: 2,
-                lr: 0.05,
-                hidden: 8,
-                heads: 2,
-                layers: 2,
-                mode: crate::model::TrainMode::fp32(),
-                auto_bits: false,
-                seed: 5,
-                log_every: 0,
-                ..Default::default()
-            },
+            train,
             workers,
             epochs: 2,
-            fanout: 4,
-            batch_size: 16,
             quantize_grads: quantize,
             overlap_quantization: true,
             interconnect: Interconnect::pcie3(),
@@ -272,6 +396,8 @@ mod tests {
         assert_eq!(r.epochs.len(), 2);
         assert!(r.grad_elems > 0);
         assert!(r.total_time() > 0.0);
+        // tiny: 160 train nodes over 3 shards, batches of 16 → 4 steps.
+        assert!(r.epochs[0].steps >= 4, "{}", r.epochs[0].steps);
     }
 
     #[test]
@@ -298,7 +424,53 @@ mod tests {
     fn single_worker_has_no_comm() {
         let data = datasets::tiny(5);
         let r = run_data_parallel(&cfg(1, false), &data).unwrap();
-        // k=1 ring transfer is 0 bytes; only latency terms remain.
-        assert!(r.epochs[0].comm_s < 1e-3);
+        // k=1 ring transfer is 0 bytes and 0 messages.
+        assert!(r.epochs[0].comm_s < 1e-9);
+    }
+
+    #[test]
+    fn epoch_sweep_visits_every_shard_node() {
+        // The bug this run shape fixes: the old path trained on the same
+        // `&shard[..batch_size]` prefix every epoch. A sweep must cover the
+        // whole shard: steps × batch_size ≥ shard size for every worker.
+        let data = datasets::tiny(6);
+        let c = cfg(2, false);
+        let r = run_data_parallel(&c, &data).unwrap();
+        let per_worker = data.train_nodes.len().div_ceil(2);
+        let need = per_worker.div_ceil(16);
+        assert_eq!(r.epochs[0].steps, need, "sweep must cover each shard");
+    }
+
+    #[test]
+    fn toml_roundtrip_parses_multigpu_section() {
+        let text = r#"
+[train]
+model = "gcn"
+dataset = "tiny"
+fanouts = "6,4"
+batch_size = 32
+sample_seed = 9
+cache_nodes = 128
+
+[multigpu]
+workers = 5
+epochs = 7
+quantize_grads = true
+overlap_quantization = false
+"#;
+        let cfg = MultiGpuConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.workers, 5);
+        assert_eq!(cfg.epochs, 7);
+        assert!(cfg.quantize_grads);
+        assert!(!cfg.overlap_quantization);
+        assert_eq!(cfg.train.sampler.fanouts, vec![6, 4]);
+        assert_eq!(cfg.train.sampler.batch_size, 32);
+        assert_eq!(cfg.train.sampler.seed, 9);
+        assert_eq!(cfg.train.sampler.cache_nodes, 128);
+        // Booleans validate strictly — a typo must not silently flip the
+        // run back to the FP32 baseline.
+        let err = MultiGpuConfig::from_toml("[multigpu]\nquantize_grads = 1\n").unwrap_err();
+        assert!(err.contains("quantize_grads"), "{err}");
+        assert!(MultiGpuConfig::from_toml("[multigpu]\noverlap_quantization = yes\n").is_err());
     }
 }

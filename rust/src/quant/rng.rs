@@ -25,6 +25,24 @@ pub fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Fold seed components (run seed, epoch, worker id, batch index, …) into
+/// one well-mixed stream seed by chaining [`splitmix64`].
+///
+/// This is the one mixer every seeded subsystem shares. Ad-hoc xor/shift
+/// mixing such as `seed ^ (epoch << 8) ^ worker` collides as soon as a
+/// component outgrows its shift window (`(epoch, worker)` and
+/// `(epoch - 1, worker + 256)` name the same stream) and leaves most output
+/// bits correlated across epochs; chaining each component through the
+/// splitmix64 finalizer avalanches every input bit into every output bit.
+pub fn mix_seeds(parts: &[u64]) -> u64 {
+    let mut acc = 0xA076_1D64_78BD_642F; // arbitrary odd salt
+    for &p in parts {
+        let mut s = acc ^ p;
+        acc = splitmix64(&mut s);
+    }
+    acc
+}
+
 #[inline(always)]
 fn rotl(x: u64, k: u32) -> u64 {
     x.rotate_left(k)
@@ -70,7 +88,8 @@ impl Xoshiro256pp {
     /// The `jump()` function: advances the stream by 2^128 draws, giving
     /// independent sub-streams for parallel workers.
     pub fn jump(&mut self) -> Xoshiro256pp {
-        const JUMP: [u64; 4] = [0x180EC6D33CFD0ABA, 0xD5A61266F0C9392C, 0xA9582618E03FC9AA, 0x39ABDC4529B1661C];
+        const JUMP: [u64; 4] =
+            [0x180EC6D33CFD0ABA, 0xD5A61266F0C9392C, 0xA9582618E03FC9AA, 0x39ABDC4529B1661C];
         let stream = self.clone();
         let mut s = [0u64; 4];
         for &j in JUMP.iter() {
@@ -198,5 +217,27 @@ mod tests {
     fn splitmix_nonzero_state_for_zero_seed() {
         let r = Xoshiro256pp::new(0);
         assert!(r.s.iter().any(|&w| w != 0));
+    }
+
+    #[test]
+    fn mix_seeds_is_deterministic_and_order_sensitive() {
+        assert_eq!(mix_seeds(&[1, 2, 3]), mix_seeds(&[1, 2, 3]));
+        assert_ne!(mix_seeds(&[1, 2, 3]), mix_seeds(&[3, 2, 1]));
+        assert_ne!(mix_seeds(&[0]), mix_seeds(&[0, 0]));
+    }
+
+    #[test]
+    fn mix_seeds_avoids_shift_window_collisions() {
+        // The bug class this replaces: `seed ^ (epoch << 8) ^ worker`
+        // collides for worker ids >= 256.
+        let old = |seed: u64, epoch: u64, w: u64| seed ^ (epoch << 8) ^ w;
+        assert_eq!(old(42, 1, 0), old(42, 0, 256));
+        assert_ne!(mix_seeds(&[42, 1, 0]), mix_seeds(&[42, 0, 256]));
+        let mut seen = std::collections::HashSet::new();
+        for epoch in 0..8u64 {
+            for w in 0..512u64 {
+                assert!(seen.insert(mix_seeds(&[42, epoch, w])), "collision at ({epoch},{w})");
+            }
+        }
     }
 }

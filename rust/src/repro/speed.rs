@@ -13,7 +13,15 @@ use crate::multigpu::{run_data_parallel, Interconnect, MultiGpuConfig};
 pub fn table1(cfg: &ReproConfig) -> Table {
     let mut t = Table::new(
         "Table 1 — datasets (paper scale vs generated analogue)",
-        &["dataset", "paper nodes", "paper edges", "ours nodes", "ours edges", "avg degree", "task"],
+        &[
+            "dataset",
+            "paper nodes",
+            "paper edges",
+            "ours nodes",
+            "ours edges",
+            "avg degree",
+            "task",
+        ],
     );
     for spec in SPECS.iter() {
         let d = datasets::load(spec, cfg.seed);
@@ -88,20 +96,32 @@ pub fn fig9(cfg: &ReproConfig) -> Table {
         "Fig. 9 — multi-GPU speedup (Tango vs FP32 all-reduce)",
         &["model", "workers", "fp32 epoch (s)", "tango epoch (s)", "speedup"],
     );
-    let data = if cfg.quick { datasets::tiny(cfg.seed) } else { datasets::load_by_name("ogbn-arxiv", cfg.seed) };
+    let data = if cfg.quick {
+        datasets::tiny(cfg.seed)
+    } else {
+        datasets::load_by_name("ogbn-arxiv", cfg.seed)
+    };
     let workers: Vec<usize> = if cfg.quick { vec![2, 3] } else { vec![2, 3, 4, 5, 6] };
     for model in [ModelKind::Gcn, ModelKind::Gat] {
         let name = if model == ModelKind::Gcn { "GCN" } else { "GAT" };
         for &k in &workers {
-            let mk = |quant: bool| MultiGpuConfig {
-                train: speed_cfg(cfg, model, "ogbn-arxiv", if quant { TrainMode::tango(8) } else { TrainMode::fp32() }),
-                workers: k,
-                epochs: cfg.speed_epochs.min(3),
-                fanout: 8,
-                batch_size: if cfg.quick { 16 } else { 256 },
-                quantize_grads: quant,
-                overlap_quantization: true,
-                interconnect: Interconnect::pcie3(),
+            let mk = |quant: bool| {
+                let mut train = speed_cfg(
+                    cfg,
+                    model,
+                    "ogbn-arxiv",
+                    if quant { TrainMode::tango(8) } else { TrainMode::fp32() },
+                );
+                train.sampler.fanouts = vec![8, 8];
+                train.sampler.batch_size = if cfg.quick { 64 } else { 512 };
+                MultiGpuConfig {
+                    train,
+                    workers: k,
+                    epochs: cfg.speed_epochs.min(3),
+                    quantize_grads: quant,
+                    overlap_quantization: true,
+                    interconnect: Interconnect::pcie3(),
+                }
             };
             let fp = run_data_parallel(&mk(false), &data).unwrap();
             let tg = run_data_parallel(&mk(true), &data).unwrap();

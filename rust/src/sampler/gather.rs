@@ -39,9 +39,21 @@ pub struct QuantFeatureStore {
 
 impl QuantFeatureStore {
     /// Build a store for a feature table: one abs-max reduction derives the
-    /// shared scale; rows quantize lazily on first gather.
+    /// shared scale; rows quantize lazily on first gather. The hot-node
+    /// cache is unbounded (every sampled node's row is kept for the run).
     pub fn new(features: &Dense<f32>, bits: u8) -> Self {
-        QuantFeatureStore { scale: scale_for_bits(features, bits), bits, cache: QuantCache::new() }
+        Self::with_capacity(features, bits, 0)
+    }
+
+    /// Like [`Self::new`], but the hot-node cache holds at most `max_nodes`
+    /// quantized rows (0 = unbounded). An epoch sweep touches every training
+    /// node, so an unbounded cache grows to the whole feature table; the
+    /// bound caps that at `max_nodes · F` bytes, evicting the oldest rows
+    /// first (evictions are reported by [`Self::stats`]).
+    pub fn with_capacity(features: &Dense<f32>, bits: u8, max_nodes: usize) -> Self {
+        let cache =
+            if max_nodes == 0 { QuantCache::new() } else { QuantCache::with_capacity(max_nodes) };
+        QuantFeatureStore { scale: scale_for_bits(features, bits), bits, cache }
     }
 
     /// Gather the quantized rows of `nodes` into one `[nodes.len(), F]`
@@ -112,7 +124,8 @@ mod tests {
         let mut store = QuantFeatureStore::new(&f, 8);
         let nodes = vec![3u32, 7, 3, 0];
         let q = store.gather_quantized(&f, &nodes);
-        let direct = quantize_with_scale(&gather_rows(&f, &nodes), store.scale(), 8, Rounding::Nearest);
+        let direct =
+            quantize_with_scale(&gather_rows(&f, &nodes), store.scale(), 8, Rounding::Nearest);
         assert_eq!(q.data, direct.data);
         assert_eq!(q.scale, direct.scale);
         assert_eq!(q.shape(), &[4, 4]);
@@ -129,6 +142,25 @@ mod tests {
         assert_eq!(store.stats().misses, 4);
         assert_eq!(store.stats().hits, 2);
         assert_eq!(store.cached_bytes(), 4 * 4);
+    }
+
+    #[test]
+    fn bounded_store_evicts_but_stays_exact() {
+        let f = random_features(16, 4, 5);
+        let mut bounded = QuantFeatureStore::with_capacity(&f, 8, 4);
+        let mut unbounded = QuantFeatureStore::new(&f, 8);
+        let nodes: Vec<u32> = (0..16).chain(0..16).collect();
+        for chunk in nodes.chunks(8) {
+            // Eviction changes *when* rows are requantized, never the values
+            // (the shared scale is static).
+            let a = bounded.gather_quantized(&f, chunk);
+            let b = unbounded.gather_quantized(&f, chunk);
+            assert_eq!(a.data, b.data);
+        }
+        assert!(bounded.stats().evictions > 0, "{:?}", bounded.stats());
+        assert_eq!(unbounded.stats().evictions, 0);
+        // The bound holds: at most 4 rows of 4 bytes live at once.
+        assert!(bounded.cached_bytes() <= 4 * 4, "{}", bounded.cached_bytes());
     }
 
     #[test]

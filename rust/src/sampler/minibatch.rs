@@ -6,7 +6,7 @@
 //! treat both execution modes uniformly. `Trainer::run` delegates here when
 //! `TrainConfig::sampler.enabled` is set.
 
-use super::{gather_rows, shuffled_batches, NeighborSampler, QuantFeatureStore};
+use super::{adjust_fanouts, gather_rows, shuffled_batches, NeighborSampler, QuantFeatureStore};
 use crate::config::{ModelKind, TrainConfig};
 use crate::coordinator::qcache::CacheStats;
 use crate::coordinator::TrainReport;
@@ -15,6 +15,7 @@ use crate::graph::Csr;
 use crate::model::{
     accuracy, softmax_cross_entropy, GatConfig, GatModel, GcnConfig, GcnModel, Sgd, TrainMode,
 };
+use crate::quant::rng::mix_seeds;
 use crate::quant::{derive_bits, DEFAULT_ERROR_TARGET};
 
 /// The model under sampled training.
@@ -72,20 +73,19 @@ impl MiniBatchTrainer {
             cfg.mode.bits = derive_bits(&first, DEFAULT_ERROR_TARGET).bits;
         }
         let model = Self::build_model(&cfg, &data, out_dim);
-        // One fanout per layer: repeat the last entry / truncate as needed.
-        let mut fanouts = cfg.sampler.fanouts.clone();
-        if fanouts.is_empty() {
-            fanouts.push(10);
-        }
-        while fanouts.len() < cfg.layers {
-            fanouts.push(*fanouts.last().unwrap());
-        }
-        fanouts.truncate(cfg.layers);
-        let sampler = NeighborSampler::new(fanouts, cfg.sampler.seed ^ cfg.seed);
+        let fanouts = adjust_fanouts(&cfg.sampler.fanouts, cfg.layers);
+        // Seed formula shared with the multi-GPU workers (worker id 0), so a
+        // 1-worker data-parallel run replays this trainer step for step.
+        let sampler =
+            NeighborSampler::new(fanouts, mix_seeds(&[cfg.sampler.seed, cfg.seed, 0]));
         let csr_in = Csr::from_coo(&data.graph);
         let degrees = data.graph.in_degrees();
         let store = if cfg.mode.quantize {
-            Some(QuantFeatureStore::new(&data.features, cfg.mode.bits))
+            Some(QuantFeatureStore::with_capacity(
+                &data.features,
+                cfg.mode.bits,
+                cfg.sampler.cache_nodes,
+            ))
         } else {
             None
         };
@@ -197,7 +197,7 @@ impl MiniBatchTrainer {
         let batches = shuffled_batches(
             &self.data.train_nodes,
             self.cfg.sampler.batch_size,
-            self.cfg.seed ^ epoch.wrapping_mul(0x517C_C1B7),
+            mix_seeds(&[self.cfg.seed, epoch]),
         );
         let mut total = 0.0f32;
         let mut steps = 0usize;
@@ -205,7 +205,7 @@ impl MiniBatchTrainer {
             if batch.is_empty() {
                 continue;
             }
-            let stream = (epoch << 20) ^ bi as u64;
+            let stream = mix_seeds(&[epoch, bi as u64]);
             let blocks = self.sampler.sample_blocks(&self.csr_in, &self.degrees, batch, stream);
             let input_nodes = blocks[0].src_nodes.clone();
             let x0 = match &mut self.store {
@@ -273,6 +273,7 @@ mod tests {
                 fanouts: vec![10, 10],
                 batch_size: 64,
                 seed: 0x5A17,
+                cache_nodes: 0,
             },
         }
     }
@@ -296,6 +297,19 @@ mod tests {
         let r = t.run().unwrap();
         assert!(r.losses.last().unwrap() < &r.losses[0], "{:?}", r.losses);
         assert!(r.final_eval > 0.3, "eval {}", r.final_eval);
+    }
+
+    #[test]
+    fn bounded_feature_cache_evicts_and_stays_bounded() {
+        let mut cfg = mb_cfg(ModelKind::Gcn, "tango", 6);
+        cfg.sampler.cache_nodes = 32;
+        let mut t = MiniBatchTrainer::from_config(&cfg).unwrap();
+        let r = t.run().unwrap();
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        let stats = t.gather_stats().expect("quantized mode has a store");
+        assert!(stats.evictions > 0, "tiny's 160 train nodes must overflow 32 slots");
+        // tiny's feat_dim is 16 → at most 32 rows of 16 bytes live at once.
+        assert!(t.gather_cached_bytes() <= 32 * 16, "{}", t.gather_cached_bytes());
     }
 
     #[test]

@@ -34,4 +34,4 @@ mod neighbor;
 pub use block::Block;
 pub use gather::{gather_rows, QuantFeatureStore};
 pub use minibatch::MiniBatchTrainer;
-pub use neighbor::{shuffled_batches, NeighborSampler};
+pub use neighbor::{adjust_fanouts, shuffled_batches, NeighborSampler};

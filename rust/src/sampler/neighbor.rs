@@ -92,6 +92,24 @@ impl NeighborSampler {
     }
 }
 
+/// Adjust a per-layer fanout list to exactly `layers` entries: an empty
+/// list falls back to 10 per layer, a short list repeats its last entry,
+/// and a long one truncates. This is the one rule every sampled-training
+/// consumer ([`MiniBatchTrainer`](crate::sampler::MiniBatchTrainer) and the
+/// multi-GPU workers) applies to `SamplerConfig::fanouts`.
+pub fn adjust_fanouts(fanouts: &[usize], layers: usize) -> Vec<usize> {
+    let mut out = fanouts.to_vec();
+    if out.is_empty() {
+        out.push(10);
+    }
+    let layers = layers.max(1);
+    while out.len() < layers {
+        out.push(*out.last().unwrap());
+    }
+    out.truncate(layers);
+    out
+}
+
 /// Shuffle `nodes` with a seeded Fisher–Yates and split into mini-batches of
 /// `batch_size` seeds (the last batch may be smaller).
 pub fn shuffled_batches(nodes: &[u32], batch_size: usize, seed: u64) -> Vec<Vec<u32>> {
@@ -170,6 +188,14 @@ mod tests {
         let blocks = s.sample_blocks(&csr, &deg, &seeds, 2);
         assert_eq!(blocks[0].num_edges(), coo.num_edges());
         assert_eq!(blocks[0].num_src(), coo.num_nodes);
+    }
+
+    #[test]
+    fn fanout_adjustment_repeats_truncates_and_defaults() {
+        assert_eq!(adjust_fanouts(&[7], 3), vec![7, 7, 7]);
+        assert_eq!(adjust_fanouts(&[9, 5, 3], 2), vec![9, 5]);
+        assert_eq!(adjust_fanouts(&[], 2), vec![10, 10]);
+        assert_eq!(adjust_fanouts(&[4], 0), vec![4]);
     }
 
     #[test]
