@@ -58,8 +58,16 @@ fn main() -> tango::Result<()> {
         let tg = run_data_parallel(&mk(true), &data)?;
         let fp_t = fp.total_time() / fp.epochs.len() as f64;
         let tg_t = tg.total_time() / tg.epochs.len() as f64;
+        let cache = match tg.cache {
+            Some(s) => format!(
+                "cache {:.0}% hit, {} ev",
+                s.hits as f64 / (s.hits + s.misses).max(1) as f64 * 100.0,
+                s.evictions
+            ),
+            None => String::new(),
+        };
         println!(
-            "{k:>7} {:>14} {:>14} {:>8.2}x",
+            "{k:>7} {:>14} {:>14} {:>8.2}x  {cache}",
             fmt_time(fp_t),
             fmt_time(tg_t),
             fp_t / tg_t

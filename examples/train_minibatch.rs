@@ -1,14 +1,16 @@
 //! Sampled mini-batch GCN/GAT training with quantized feature gathering:
 //! the DGL-style execution mode (layered neighbor sampling → MFG blocks →
-//! INT8 feature gather → block forward/backward), with the hot-node
-//! feature-cache hit rate reported from `QuantCache::stats()`.
+//! INT8 feature gather → block forward/backward through the unified
+//! `GnnModel` path), with the hot-node feature-cache hit rate surfaced via
+//! `TrainReport::cache`. `--task linkpred` switches to edge-seeded blocks
+//! with seed-edge exclusion and reports AUC.
 //!
 //! Run: `cargo run --release --example train_minibatch -- \
 //!        [--dataset Pubmed] [--model gcn|gat] [--mode tango|fp32] \
-//!        [--fanouts 10,10] [--batch-size 256] [--epochs 10] \
-//!        [--cache-nodes 8192]`
+//!        [--task nc|linkpred] [--fanouts 10,10] [--batch-size 256] \
+//!        [--epochs 10] [--cache-nodes 8192]`
 
-use tango::config::{parse_fanouts, parse_mode, ModelKind, TrainConfig};
+use tango::config::{parse_fanouts, parse_mode, parse_task, task_name, ModelKind, TrainConfig};
 use tango::metrics::fmt_time;
 use tango::sampler::MiniBatchTrainer;
 use tango::util::cli::Args;
@@ -36,16 +38,23 @@ fn main() -> tango::Result<()> {
         parse_fanouts(args.get("fanouts", "10,10")).map_err(|e| anyhow::anyhow!(e))?;
     cfg.sampler.batch_size = args.get_as("batch-size", 256);
     cfg.sampler.cache_nodes = args.get_as("cache-nodes", 0);
+    if args.flags.contains_key("cache-nodes") && cfg.sampler.cache_nodes == 0 {
+        anyhow::bail!("--cache-nodes must be >= 1 (omit the flag for an unbounded cache)");
+    }
+    if let Some(t) = args.flags.get("task") {
+        cfg.task = Some(parse_task(t).map_err(|e| anyhow::anyhow!(e))?);
+    }
 
     let mut trainer = MiniBatchTrainer::from_config(&cfg)?;
     let d = trainer.dataset();
     println!(
-        "sampled training: {:?} on {} ({} nodes, {} edges) — fanouts {:?}, batch {}, \
-         mode {} ({} bits)\n",
+        "sampled training: {:?} on {} ({} nodes, {} edges) — task {}, fanouts {:?}, \
+         batch {}, mode {} ({} bits)\n",
         cfg.model,
         d.name,
         d.graph.num_nodes,
         d.graph.num_edges(),
+        task_name(trainer.task()),
         trainer.fanouts(),
         cfg.sampler.batch_size,
         tango::config::mode_name(&cfg.mode),
@@ -53,24 +62,16 @@ fn main() -> tango::Result<()> {
     );
     let report = trainer.run()?;
     println!(
-        "\nfinal eval {:.4} | {} epochs in {} ({}/epoch)",
+        "\nfinal {} {:.4} | {} epochs in {} ({}/epoch)",
+        tango::config::metric_name(trainer.task()),
         report.final_eval,
         report.losses.len(),
         fmt_time(report.wall_secs),
         fmt_time(report.wall_secs / report.losses.len().max(1) as f64),
     );
-    match trainer.gather_stats() {
+    match report.cache {
         Some(stats) => {
-            let total = stats.hits + stats.misses;
-            println!(
-                "quantized feature cache: {:.1}% hit rate ({} hits / {} gathered rows), \
-                 {} evictions, {} KiB of INT8 rows cached",
-                stats.hits as f64 / total.max(1) as f64 * 100.0,
-                stats.hits,
-                total,
-                stats.evictions,
-                trainer.gather_cached_bytes() / 1024,
-            );
+            println!("quantized feature cache: {}", stats.summary(report.cache_bytes));
             println!(
                 "(every hit skips one row quantization — hot nodes are re-sampled across \
                  batches, the BiFeat effect)"

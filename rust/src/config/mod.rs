@@ -9,6 +9,7 @@ mod toml_lite;
 
 pub use toml_lite::TomlDoc;
 
+use crate::graph::datasets::Task;
 use crate::model::TrainMode;
 
 /// Which model architecture to train.
@@ -28,6 +29,69 @@ impl std::str::FromStr for ModelKind {
             "gat" => Ok(ModelKind::Gat),
             other => Err(format!("unknown model '{other}' (gcn|gat)")),
         }
+    }
+}
+
+/// Which learning task to train (`--task` / the `task` TOML key). Absent,
+/// the run follows the dataset's declared task; set, it overrides it — e.g.
+/// link prediction on any generated graph's topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Softmax-CE node classification.
+    NodeClassification,
+    /// Dot-product link prediction (reports AUC).
+    LinkPrediction,
+}
+
+impl TaskKind {
+    /// Map onto the dataset-level task enum.
+    pub fn to_task(self) -> Task {
+        match self {
+            TaskKind::NodeClassification => Task::NodeClassification,
+            TaskKind::LinkPrediction => Task::LinkPrediction,
+        }
+    }
+
+    /// The effective task of a run: the config override when set, the
+    /// dataset's declared task otherwise.
+    pub fn resolve(overridden: Option<TaskKind>, dataset_task: Task) -> Task {
+        overridden.map(TaskKind::to_task).unwrap_or(dataset_task)
+    }
+}
+
+impl std::str::FromStr for TaskKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "nc" | "node" | "node-classification" | "nodeclass" => {
+                Ok(TaskKind::NodeClassification)
+            }
+            "linkpred" | "lp" | "link-prediction" | "linkprediction" => {
+                Ok(TaskKind::LinkPrediction)
+            }
+            other => Err(format!("unknown task '{other}' (nc|linkpred)")),
+        }
+    }
+}
+
+/// Parse a task name (`"nc"` / `"linkpred"`).
+pub fn parse_task(name: &str) -> Result<TaskKind, String> {
+    name.parse()
+}
+
+/// Canonical name of a task kind.
+pub fn task_name(task: Task) -> &'static str {
+    match task {
+        Task::NodeClassification => "nc",
+        Task::LinkPrediction => "linkpred",
+    }
+}
+
+/// Display name of a task's evaluation metric.
+pub fn metric_name(task: Task) -> &'static str {
+    match task {
+        Task::NodeClassification => "accuracy",
+        Task::LinkPrediction => "AUC",
     }
 }
 
@@ -147,6 +211,9 @@ pub struct TrainConfig {
     pub log_every: usize,
     /// Mini-batch neighbor-sampling mode (disabled = full-graph epochs).
     pub sampler: SamplerConfig,
+    /// Task override (`--task nc|linkpred`); `None` follows the dataset's
+    /// declared task.
+    pub task: Option<TaskKind>,
 }
 
 impl Default for TrainConfig {
@@ -165,6 +232,7 @@ impl Default for TrainConfig {
             seed: 42,
             log_every: 0,
             sampler: SamplerConfig::default(),
+            task: None,
         }
     }
 }
@@ -241,8 +309,44 @@ impl TrainConfig {
         }
         if let Some(v) = get("cache_nodes") {
             cfg.sampler.cache_nodes = v.parse().map_err(|e| format!("cache_nodes: {e}"))?;
+            if cfg.sampler.cache_nodes == 0 {
+                return Err(
+                    "cache_nodes must be >= 1 (omit the key for an unbounded cache)".to_string()
+                );
+            }
         }
+        if let Some(v) = get("task") {
+            cfg.task = Some(parse_task(v)?);
+        }
+        cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Cross-field sanity checks shared by every entry point (CLI, TOML,
+    /// programmatic construction through the trainers). Returns an
+    /// actionable message instead of panicking mid-run or silently training
+    /// on nothing.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.sampler.batch_size == 0 {
+            return Err(
+                "batch_size must be >= 1 — every mini-batch needs at least one seed".to_string()
+            );
+        }
+        if self.sampler.fanouts.is_empty() {
+            return Err(
+                "fanouts must name at least one layer (e.g. --fanouts 10,10)".to_string()
+            );
+        }
+        if self.sampler.fanouts.contains(&0) {
+            return Err("fanouts must be >= 1 (a 0-fanout layer samples no messages)".to_string());
+        }
+        if self.layers == 0 {
+            return Err("layers must be >= 1".to_string());
+        }
+        if self.hidden == 0 {
+            return Err("hidden must be >= 1".to_string());
+        }
+        Ok(())
     }
 }
 
@@ -323,6 +427,47 @@ cache_nodes = 4096
         assert!(parse_sampler("neighbor").unwrap());
         assert!(!parse_sampler("full").unwrap());
         assert!(parse_sampler("metis").is_err());
+    }
+
+    #[test]
+    fn task_key_parses_and_rejects_junk() {
+        let cfg = TrainConfig::from_toml("[train]\ntask = \"linkpred\"\n").unwrap();
+        assert_eq!(cfg.task, Some(TaskKind::LinkPrediction));
+        let cfg = TrainConfig::from_toml("[train]\ntask = \"nc\"\n").unwrap();
+        assert_eq!(cfg.task, Some(TaskKind::NodeClassification));
+        assert_eq!(TrainConfig::from_toml("[train]\n").unwrap().task, None);
+        assert!(TrainConfig::from_toml("[train]\ntask = \"regression\"\n").is_err());
+        assert_eq!(parse_task("lp").unwrap(), TaskKind::LinkPrediction);
+        assert_eq!(parse_task("NODE").unwrap(), TaskKind::NodeClassification);
+        assert!(parse_task("both").is_err());
+    }
+
+    #[test]
+    fn task_resolution_prefers_override() {
+        assert_eq!(
+            TaskKind::resolve(Some(TaskKind::LinkPrediction), Task::NodeClassification),
+            Task::LinkPrediction
+        );
+        assert_eq!(TaskKind::resolve(None, Task::LinkPrediction), Task::LinkPrediction);
+        assert_eq!(task_name(Task::LinkPrediction), "linkpred");
+        assert_eq!(task_name(Task::NodeClassification), "nc");
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_knobs() {
+        let err = |t: &str| TrainConfig::from_toml(t).unwrap_err();
+        assert!(err("[train]\ncache_nodes = 0\n").contains("cache_nodes"), "actionable message");
+        assert!(err("[train]\nbatch_size = 0\n").contains("batch_size"));
+        assert!(err("[train]\nfanouts = \"10,0\"\n").contains("fanout"));
+        assert!(err("[train]\nlayers = 0\n").contains("layers"));
+        assert!(err("[train]\nhidden = 0\n").contains("hidden"));
+        let mut cfg = TrainConfig::default();
+        cfg.sampler.batch_size = 0;
+        assert!(cfg.validate().is_err());
+        cfg.sampler.batch_size = 1;
+        cfg.sampler.fanouts = vec![];
+        assert!(cfg.validate().unwrap_err().contains("fanouts"));
+        assert!(TrainConfig::default().validate().is_ok());
     }
 
     #[test]

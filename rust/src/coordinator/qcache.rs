@@ -21,6 +21,22 @@ pub struct CacheStats {
     pub evictions: u64,
 }
 
+impl CacheStats {
+    /// One-line human summary (the format the CLI and examples print):
+    /// hit rate, row traffic, evictions and the bytes currently cached.
+    pub fn summary(&self, cached_bytes: usize) -> String {
+        let total = self.hits + self.misses;
+        format!(
+            "{:.1}% hit rate ({} hits / {} gathered rows), {} evictions, {} KiB cached",
+            self.hits as f64 / total.max(1) as f64 * 100.0,
+            self.hits,
+            total,
+            self.evictions,
+            cached_bytes / 1024
+        )
+    }
+}
+
 /// A quantized tensor cache, optionally bounded.
 ///
 /// Unbounded by default (the per-step trainer cache clears every step so it

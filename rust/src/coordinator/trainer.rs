@@ -1,21 +1,23 @@
 //! Training orchestrator: dataset + model + mode + epochs → loss curve and
 //! final metric. This is what `tango train` and the Fig. 7/8 repro drive.
+//!
+//! The trainer holds an [`AnyModel`] behind the [`GnnModel`] trait (the one
+//! model dispatcher in the crate, see `model/mod.rs`) and a [`TaskHead`]
+//! for the loss side, so model architectures and learning tasks compose
+//! freely. Full-graph epochs run the unified block path over identity
+//! blocks inside the model; when `TrainConfig::sampler.enabled` is set the
+//! run delegates to [`crate::sampler::MiniBatchTrainer`] (which serves both
+//! tasks too — node classification on node-seeded blocks, link prediction
+//! on edge-seeded blocks).
 
-use crate::config::{ModelKind, TrainConfig};
+use crate::config::{TaskKind, TrainConfig};
+use crate::coordinator::qcache::CacheStats;
 use crate::graph::datasets::{self, Dataset, Task};
 use crate::model::{
-    accuracy, auc, bce_with_logits, softmax_cross_entropy, GatConfig, GatModel, GcnConfig,
-    GcnModel, Sgd, TrainMode,
+    softmax_cross_entropy, AnyModel, GnnModel, ModelSpec, Sgd, TaskHead, TrainMode,
 };
 use crate::quant::rng::Xoshiro256pp;
 use crate::quant::{derive_bits, DEFAULT_ERROR_TARGET};
-use crate::tensor::Dense;
-
-/// The model under training.
-enum AnyModel {
-    Gcn(GcnModel),
-    Gat(GatModel),
-}
 
 /// One training run's results.
 #[derive(Debug, Clone)]
@@ -33,12 +35,20 @@ pub struct TrainReport {
     /// Epochs until the loss first dropped below 1.02× its final value
     /// (a convergence-speed proxy for the Fig. 7 comparison).
     pub epochs_to_converge: usize,
+    /// Quantized feature-gather cache statistics (sampled quantized runs
+    /// only — `None` for full-graph or FP32 runs).
+    pub cache: Option<CacheStats>,
+    /// Bytes of INT8 rows held by the feature cache at run end.
+    pub cache_bytes: usize,
 }
 
 /// The training coordinator.
 pub struct Trainer {
     cfg: TrainConfig,
     data: Dataset,
+    /// Effective task (config override or the dataset's declared task).
+    task: Task,
+    head: TaskHead,
     model: AnyModel,
     opt: Sgd,
 }
@@ -57,58 +67,38 @@ impl Trainer {
 
     /// Build with an externally supplied dataset (multi-worker path).
     pub fn with_dataset(mut cfg: TrainConfig, data: Dataset) -> crate::Result<Self> {
-        let out_dim = match data.task {
-            Task::NodeClassification => data.num_classes,
-            // LP trains an embedding; score = dot of endpoint embeddings.
-            Task::LinkPrediction => cfg.hidden.min(64),
-        };
+        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        let task = TaskKind::resolve(cfg.task, data.task);
+        let head = TaskHead::for_task(task);
+        let out_dim = head.out_dim(&data, cfg.hidden);
         // The Fig. 2 rule: quantize the first layer's output of the initial
         // model and pick the bit width meeting Error_X <= 0.3.
         if cfg.auto_bits && cfg.mode.quantize {
             let probe = Self::build_model(&cfg, &data, out_dim);
-            let first = match &probe {
-                AnyModel::Gcn(m) => m.first_layer_output(&data.features),
-                AnyModel::Gat(m) => m.first_layer_output(&data.features),
-            };
-            let derived = derive_bits(&first, DEFAULT_ERROR_TARGET);
-            cfg.mode.bits = derived.bits;
+            let first = probe.first_layer_output(&data.features);
+            cfg.mode.bits = derive_bits(&first, DEFAULT_ERROR_TARGET).bits;
         }
         let model = Self::build_model(&cfg, &data, out_dim);
         let opt = Sgd::new(cfg.lr);
-        Ok(Trainer { cfg, data, model, opt })
+        Ok(Trainer { cfg, data, task, head, model, opt })
     }
 
     fn build_model(cfg: &TrainConfig, data: &Dataset, out_dim: usize) -> AnyModel {
-        match cfg.model {
-            ModelKind::Gcn => AnyModel::Gcn(GcnModel::new(
-                GcnConfig {
-                    in_dim: data.features.cols(),
-                    hidden: cfg.hidden,
-                    out_dim,
-                    layers: cfg.layers,
-                    mode: cfg.mode,
-                },
-                &data.graph,
-                cfg.seed,
-            )),
-            ModelKind::Gat => AnyModel::Gat(GatModel::new(
-                GatConfig {
-                    in_dim: data.features.cols(),
-                    hidden: cfg.hidden,
-                    out_dim,
-                    heads: cfg.heads,
-                    layers: cfg.layers,
-                    mode: cfg.mode,
-                },
-                &data.graph,
-                cfg.seed,
-            )),
-        }
+        AnyModel::new_from_config(
+            &ModelSpec::from_train(cfg, data.features.cols(), out_dim),
+            &data.graph,
+            cfg.seed,
+        )
     }
 
     /// The dataset being trained on.
     pub fn dataset(&self) -> &Dataset {
         &self.data
+    }
+
+    /// The effective task of this run.
+    pub fn task(&self) -> Task {
+        self.task
     }
 
     /// The effective mode (bits may have been auto-derived).
@@ -132,10 +122,7 @@ impl Trainer {
             // Adopt the trained weights so `evaluate()` (and a later
             // full-graph `run()`) continue from the sampled training state.
             let trained = mb.params_flat();
-            match &mut self.model {
-                AnyModel::Gcn(m) => m.set_params_flat(&trained),
-                AnyModel::Gat(m) => m.set_params_flat(&trained),
-            }
+            self.model.set_params_flat(&trained);
             return Ok(report);
         }
         let mut losses = Vec::with_capacity(self.cfg.epochs);
@@ -167,112 +154,50 @@ impl Trainer {
             wall_secs: wall,
             bits: self.cfg.mode.bits,
             epochs_to_converge,
+            cache: None,
+            cache_bytes: 0,
         })
     }
 
-    /// One full-graph training step.
+    /// One full-graph training step (identity-block execution inside the
+    /// model — see `model/mod.rs`). Destructuring `self` gives the model,
+    /// optimizer and dataset disjoint borrows, so nothing is cloned.
     fn train_epoch(&mut self, epoch: u64) -> f32 {
-        match self.data.task {
+        let Trainer { task, model, opt, data, cfg, .. } = self;
+        match task {
             Task::NodeClassification => {
-                let (labels, train) = (self.data.labels.clone(), self.data.train_nodes.clone());
-                let features = self.data.features.clone();
-                let opt = &mut self.opt;
-                match &mut self.model {
-                    AnyModel::Gcn(m) => {
-                        m.train_step(&features, opt, |lg| softmax_cross_entropy(lg, &labels, &train)).0
-                    }
-                    AnyModel::Gat(m) => {
-                        m.train_step(&features, opt, |lg| softmax_cross_entropy(lg, &labels, &train)).0
-                    }
-                }
+                model
+                    .train_step(&data.features, opt, &mut |lg| {
+                        softmax_cross_entropy(lg, &data.labels, &data.train_nodes)
+                    })
+                    .0
             }
-            Task::LinkPrediction => self.train_epoch_lp(epoch),
-        }
-    }
-
-    /// LP step: positive edges + sampled negatives, dot-product scores, BCE.
-    fn train_epoch_lp(&mut self, epoch: u64) -> f32 {
-        let graph = self.data.graph.clone();
-        let n = graph.num_nodes;
-        let mut rng = Xoshiro256pp::new(self.cfg.seed ^ epoch.wrapping_mul(0x1234_5678_9ABC));
-        // Sample up to 4096 positive edges and as many negatives.
-        let m = graph.num_edges().min(4096);
-        let mut pairs: Vec<(u32, u32, f32)> = Vec::with_capacity(2 * m);
-        for _ in 0..m {
-            let e = (rng.next_u64() % graph.num_edges() as u64) as usize;
-            pairs.push((graph.src[e], graph.dst[e], 1.0));
-            pairs.push((
-                (rng.next_u64() % n as u64) as u32,
-                (rng.next_u64() % n as u64) as u32,
-                0.0,
-            ));
-        }
-        let features = self.data.features.clone();
-        let opt = &mut self.opt;
-        let loss_grad = |emb: &Dense<f32>| -> (f32, Dense<f32>) {
-            let dim = emb.cols();
-            let scores: Vec<f32> = pairs
-                .iter()
-                .map(|&(u, v, _)| {
-                    emb.row(u as usize).iter().zip(emb.row(v as usize)).map(|(a, b)| a * b).sum()
-                })
-                .collect();
-            let targets: Vec<f32> = pairs.iter().map(|p| p.2).collect();
-            let (loss, dscores) = bce_with_logits(&scores, &targets);
-            let mut grad = Dense::zeros(&[emb.rows(), dim]);
-            for (k, &(u, v, _)) in pairs.iter().enumerate() {
-                let g = dscores[k];
-                // ∂/∂emb[u] = g·emb[v]; ∂/∂emb[v] = g·emb[u].
-                for j in 0..dim {
-                    grad.row_mut(u as usize)[j] += g * emb.at(v as usize, j);
-                }
-                for j in 0..dim {
-                    grad.row_mut(v as usize)[j] += g * emb.at(u as usize, j);
-                }
-            }
-            (loss, grad)
-        };
-        match &mut self.model {
-            AnyModel::Gcn(m) => m.train_step(&features, opt, loss_grad).0,
-            AnyModel::Gat(m) => m.train_step(&features, opt, loss_grad).0,
-        }
-    }
-
-    /// Evaluation metric on the held-out split.
-    pub fn evaluate(&self) -> f32 {
-        let out = match &self.model {
-            AnyModel::Gcn(m) => m.forward(&self.data.features),
-            AnyModel::Gat(m) => m.forward(&self.data.features),
-        };
-        match self.data.task {
-            Task::NodeClassification => accuracy(&out, &self.data.labels, &self.data.eval_nodes),
             Task::LinkPrediction => {
-                // AUC over held-out positive edges vs random pairs.
-                let g = &self.data.graph;
-                let mut rng = Xoshiro256pp::new(self.cfg.seed ^ 0xEA1);
-                let k = g.num_edges().min(2000);
-                let mut pos = Vec::with_capacity(k);
-                let mut neg = Vec::with_capacity(k);
-                for _ in 0..k {
-                    let e = (rng.next_u64() % g.num_edges() as u64) as usize;
-                    let (u, v) = (g.src[e] as usize, g.dst[e] as usize);
-                    pos.push(out.row(u).iter().zip(out.row(v)).map(|(a, b)| a * b).sum());
-                    let (ru, rv) = (
-                        (rng.next_u64() % g.num_nodes as u64) as usize,
-                        (rng.next_u64() % g.num_nodes as u64) as usize,
-                    );
-                    neg.push(out.row(ru).iter().zip(out.row(rv)).map(|(a, b)| a * b).sum());
-                }
-                auc(&pos, &neg)
+                // Positive edges + seeded uniform negatives, dot-product
+                // scores, BCE — the TaskHead decoder over global node rows.
+                let mut rng = Xoshiro256pp::new(cfg.seed ^ epoch.wrapping_mul(0x1234_5678_9ABC));
+                let pairs = TaskHead::sample_global_pairs(&data.graph, 4096, &mut rng);
+                model
+                    .train_step(&data.features, opt, &mut |emb| {
+                        TaskHead::lp_loss_grad(emb, &pairs)
+                    })
+                    .0
             }
         }
+    }
+
+    /// Evaluation metric on the held-out split (accuracy for NC, AUC for
+    /// LP — the head dispatches).
+    pub fn evaluate(&self) -> f32 {
+        let out = self.model.forward(&self.data.features);
+        self.head.evaluate(&out, &self.data, self.cfg.seed)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::parse_mode;
+    use crate::config::{parse_mode, ModelKind};
 
     fn quick_cfg(model: ModelKind, mode: &str) -> TrainConfig {
         TrainConfig {
@@ -298,6 +223,7 @@ mod tests {
         assert_eq!(r.losses.len(), 40);
         assert!(r.losses[39] < r.losses[0], "{:?}", r.losses);
         assert!(r.final_eval > 0.3, "eval {}", r.final_eval);
+        assert!(r.cache.is_none(), "full-graph runs have no gather cache");
     }
 
     #[test]
@@ -324,9 +250,35 @@ mod tests {
         // shrink for test speed
         cfg.hidden = 8;
         let mut t = Trainer::from_config(&cfg).unwrap();
+        assert_eq!(t.task(), Task::LinkPrediction);
         let r = t.run().unwrap();
         assert_eq!(r.losses.len(), 3);
         assert!(r.final_eval > 0.0 && r.final_eval <= 1.0);
+    }
+
+    #[test]
+    fn task_override_runs_linkpred_on_nc_dataset() {
+        // `--task linkpred` on a node-classification graph: the head trains
+        // on topology alone and reports AUC.
+        let mut cfg = quick_cfg(ModelKind::Gcn, "fp32");
+        cfg.epochs = 8;
+        cfg.task = Some(TaskKind::LinkPrediction);
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        assert_eq!(t.task(), Task::LinkPrediction);
+        let r = t.run().unwrap();
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        assert!(r.final_eval > 0.0 && r.final_eval <= 1.0, "AUC {}", r.final_eval);
+        // And the reverse: force NC on an LP dataset (labels are random
+        // community ids — it must *run*, not necessarily learn).
+        let mut cfg = quick_cfg(ModelKind::Gcn, "fp32");
+        cfg.dataset = "DBLP".into();
+        cfg.hidden = 8;
+        cfg.epochs = 2;
+        cfg.task = Some(TaskKind::NodeClassification);
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        assert_eq!(t.task(), Task::NodeClassification);
+        let r = t.run().unwrap();
+        assert!(r.losses.iter().all(|l| l.is_finite()));
     }
 
     #[test]
@@ -352,6 +304,10 @@ mod tests {
             mb.final_eval,
             full.final_eval
         );
+        // The sampled quantized run surfaces its gather-cache stats.
+        let stats = mb.cache.expect("sampled tango run has cache stats");
+        assert!(stats.hits + stats.misses > 0);
+        assert!(mb.cache_bytes > 0);
         // The Trainer adopts the trained weights from the sampled run, so
         // its own evaluate() reflects the training (stochastic-rounding
         // streams differ by step count, hence the tolerance).

@@ -15,16 +15,23 @@
 //! ## Layer map
 //!
 //! - **Layer 3 (this crate)** — the coordinator: graph substrate, quantized
-//!   primitives, GCN/GAT models with explicit backward passes (full-graph
-//!   *and* sampled-block), the inter-primitive quantized-tensor cache and
-//!   reuse detection, adaptive kernel selection, the mini-batch
+//!   primitives, GCN/GAT models behind the
+//!   [`GnnModel`](model::GnnModel) trait with **one** explicit
+//!   forward/backward — the sampled-block path; a full-graph epoch is the
+//!   block path over identity blocks
+//!   ([`Block::identity`](sampler::Block::identity)) — plus
+//!   [`TaskHead`](model::TaskHead)s for softmax-CE node classification and
+//!   dot-product link prediction, the inter-primitive quantized-tensor
+//!   cache and reuse detection, adaptive kernel selection, the mini-batch
 //!   neighbor-sampling subsystem ([`sampler`]: layered fanout sampling,
-//!   MFG block extraction, bounded quantized feature gathering), a
-//!   multi-worker data-parallel simulator whose workers train persistent
-//!   models on the same sampler `Block` pipeline (per-worker sampling
-//!   streams, one process-wide quantized feature store, per-step quantized
-//!   ring all-reduce over a modelled PCIe interconnect), an analytical GPU
-//!   cost model, and the PJRT runtime that executes jax-lowered artifacts.
+//!   MFG block extraction, edge-seeded LP batches with seed-edge
+//!   exclusion, bounded quantized feature gathering), a multi-worker
+//!   data-parallel simulator whose workers train persistent
+//!   [`AnyModel`](model::AnyModel)s on the same sampler `Block` pipeline
+//!   for both tasks (per-worker sampling streams, one process-wide
+//!   quantized feature store, per-step quantized ring all-reduce over a
+//!   modelled PCIe interconnect), an analytical GPU cost model, and the
+//!   PJRT runtime that executes jax-lowered artifacts.
 //! - **Layer 2 (`python/compile/model.py`)** — GCN/GAT forward/backward in
 //!   JAX, AOT-lowered to HLO text under `artifacts/`.
 //! - **Layer 1 (`python/compile/kernels/`)** — Pallas kernels (quantize,

@@ -2,22 +2,29 @@
 //!
 //! ```text
 //! tango train  [--config cfg.toml] [--model gcn|gat] [--dataset NAME]
-//!              [--mode fp32|tango|test1|test2|exact] [--epochs N]
-//!              [--bits B] [--auto-bits] [--lr F] [--hidden N] [--seed S]
-//!              [--sampler neighbor|full] [--fanouts 10,10]
+//!              [--task nc|linkpred] [--mode fp32|tango|test1|test2|exact]
+//!              [--epochs N] [--bits B] [--auto-bits] [--lr F] [--hidden N]
+//!              [--seed S] [--sampler neighbor|full] [--fanouts 10,10]
 //!              [--batch-size N] [--sample-seed S] [--cache-nodes N]
 //! tango repro  <table1|fig2|fig7|...|fig16|table2|all> [--quick]
 //!              [--epochs N] [--speed-epochs N]
 //! tango plan                # print the derived quantization-caching plan
 //! tango artifacts [--dir artifacts]   # list + smoke-run the AOT artifacts
 //! tango multigpu [--config cfg.toml] [--workers K] [--epochs N]
-//!                [--quantize-grads] [--no-overlap]
+//!                [--task nc|linkpred] [--quantize-grads] [--no-overlap]
 //!                [--fanouts 10,10] [--batch-size N] [--sample-seed S]
 //!                [--cache-nodes N]
 //! ```
 //!
-//! `multigpu` shares the sampler knobs with `train` (same flags, same
-//! `[train]` TOML keys); its own knobs live under `[multigpu]`.
+//! Models implement the `GnnModel` trait and run one unified block path
+//! (a full-graph epoch is the block path over identity blocks); the
+//! `--task` flag picks the `TaskHead` — softmax-CE node classification
+//! (default, reports accuracy) or dot-product link prediction with
+//! edge-seeded blocks and seed-edge exclusion (reports AUC). Omitted, the
+//! task follows the dataset (DBLP/Amazon are LP, the rest NC).
+//!
+//! `multigpu` shares the sampler knobs and `--task` with `train` (same
+//! flags, same `[train]` TOML keys); its own knobs live under `[multigpu]`.
 
 use tango::config::{parse_mode, ModelKind, TrainConfig};
 use tango::coordinator::{detect_reuse, CompGraph, Trainer};
@@ -51,7 +58,8 @@ fn print_help() {
         "tango — quantized GNN training (SC'23 reproduction)\n\n\
          subcommands:\n\
          \x20 train      train a GCN/GAT with Tango or baseline modes\n\
-         \x20            (--sampler neighbor for sampled mini-batches)\n\
+         \x20            (--sampler neighbor for sampled mini-batches,\n\
+         \x20            --task nc|linkpred to pick the task head)\n\
          \x20 repro      regenerate a paper table/figure (or 'all')\n\
          \x20 plan       print the quantization-caching plan for a GAT layer\n\
          \x20 artifacts  list and smoke-run the AOT artifacts\n\
@@ -106,13 +114,22 @@ fn train_config_with_toml(args: &Args, toml: Option<&str>) -> tango::Result<Trai
         cfg.sampler.enabled =
             tango::config::parse_sampler(s).map_err(|e| anyhow::anyhow!(e))?;
     }
+    if let Some(t) = args.flags.get("task") {
+        cfg.task = Some(tango::config::parse_task(t).map_err(|e| anyhow::anyhow!(e))?);
+    }
     if let Some(f) = args.flags.get("fanouts") {
         cfg.sampler.fanouts = tango::config::parse_fanouts(f).map_err(|e| anyhow::anyhow!(e))?;
     }
     cfg.sampler.batch_size = args.get_as("batch-size", cfg.sampler.batch_size);
     cfg.sampler.seed = args.get_as("sample-seed", cfg.sampler.seed);
     cfg.sampler.cache_nodes = args.get_as("cache-nodes", cfg.sampler.cache_nodes);
+    if args.flags.contains_key("cache-nodes") && cfg.sampler.cache_nodes == 0 {
+        anyhow::bail!("--cache-nodes must be >= 1 (omit the flag for an unbounded cache)");
+    }
     cfg.log_every = args.get_as("log-every", 10);
+    // Reject degenerate knob combinations (e.g. `--batch-size 0`) with an
+    // actionable message instead of panicking mid-run.
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
 }
 
@@ -133,15 +150,28 @@ fn cmd_train(args: &Args) -> tango::Result<()> {
         );
     }
     let mut trainer = Trainer::from_config(&cfg)?;
+    let task = trainer.task();
+    println!(
+        "task: {} ({})",
+        tango::config::task_name(task),
+        match task {
+            tango::graph::datasets::Task::NodeClassification => "softmax-CE, eval = accuracy",
+            tango::graph::datasets::Task::LinkPrediction => "dot-product decoder, eval = AUC",
+        }
+    );
     let report = trainer.run()?;
     println!(
-        "\nfinal eval {:.4} | {} epochs in {} ({}/epoch) | bits {}",
+        "\nfinal {} {:.4} | {} epochs in {} ({}/epoch) | bits {}",
+        tango::config::metric_name(task),
         report.final_eval,
         report.losses.len(),
         fmt_time(report.wall_secs),
         fmt_time(report.wall_secs / report.losses.len().max(1) as f64),
         report.bits,
     );
+    if let Some(stats) = report.cache {
+        println!("feature cache: {}", stats.summary(report.cache_bytes));
+    }
     Ok(())
 }
 
@@ -226,9 +256,11 @@ fn cmd_multigpu(args: &Args) -> tango::Result<()> {
     if args.get_bool("no-overlap") {
         cfg.overlap_quantization = false;
     }
+    let task = tango::config::TaskKind::resolve(cfg.train.task, data.task);
     println!(
-        "multigpu: {} workers, fanouts {:?}, batch size {}, {} payloads",
+        "multigpu: {} workers, task {}, fanouts {:?}, batch size {}, {} payloads",
         cfg.workers,
+        tango::config::task_name(task),
         cfg.train.sampler.fanouts,
         cfg.train.sampler.batch_size,
         if cfg.quantize_grads { "quantized" } else { "fp32" }
@@ -246,5 +278,8 @@ fn cmd_multigpu(args: &Args) -> tango::Result<()> {
         );
     }
     println!("total modelled wall time: {}", fmt_time(report.total_time()));
+    if let Some(stats) = report.cache {
+        println!("shared feature cache: {}", stats.summary(report.cache_bytes));
+    }
     Ok(())
 }

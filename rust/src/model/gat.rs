@@ -18,13 +18,19 @@
 //! 4''. `∂S = (Gᵀ ⊙ ∂E)·1, ∂D = (G ⊙ ∂E)·1` — **incidence-matrix SPMM**;
 //! 1'. `∂W = Hᵀ·∂H', ∂H = ∂H'·Wᵀ`     — GEMMs from cached quantized tensors.
 //!
+//! Like GCN, the model has one forward/backward implementation — the block
+//! one, run over each layer's bipartite [`Block`]. Full-graph mode runs the
+//! same code over per-layer copies of the identity block
+//! ([`Block::identity`]), whose COO/CSR layouts are bit-for-bit the parent
+//! graph's.
+//!
 //! The inter-primitive cache rule is applied where the paper points it out:
 //! `∂H^(l)` is quantized **once** and consumed by both the backward SPMM
 //! (4') and the SDDMM-dot (5'); `H'_q` from the forward pass is reused by
 //! the SDDMM-dot; `H_q`/`W_q` from the forward GEMM feed the backward GEMMs.
 
-use super::TrainMode;
-use crate::graph::{Coo, Csr, Incidence};
+use super::{GnnModel, LossGrad, ModelSpec, TrainMode};
+use crate::graph::{Coo, Incidence};
 use crate::primitives::{
     edge_softmax, edge_softmax_backward, gemm_f32, incidence_spmm, leaky_relu,
     leaky_relu_backward, qgemm, qgemm_prequantized, qsddmm_add, qsddmm_dot, qspmm_edge_weighted,
@@ -34,6 +40,7 @@ use crate::quant::rng::Xoshiro256pp;
 use crate::quant::{dequantize, quantize, QTensor, Rounding};
 use crate::sampler::Block;
 use crate::tensor::Dense;
+use std::sync::Arc;
 
 /// LeakyReLU slope used on attention logits (DGL default).
 const SLOPE: f32 = 0.2;
@@ -92,11 +99,13 @@ pub struct GatModel {
     /// Config used to build the model.
     pub cfg: GatConfig,
     layers: Vec<GatLayer>,
-    coo: Coo,
-    csr: Csr,
-    csr_rev: Csr,
-    inc_in: Incidence,
-    inc_out: Incidence,
+    /// The bound graph as an identity block — the full-graph execution mode
+    /// is the block path over `layers` copies of this.
+    full_block: Arc<Block>,
+    /// Incidence structures of the identity block, built once (sampled
+    /// blocks rebuild theirs per step — they change every batch).
+    full_inc_in: Incidence,
+    full_inc_out: Incidence,
     /// Step counter (drives stochastic-rounding seeds).
     pub step_count: u64,
 }
@@ -127,104 +136,25 @@ impl GatModel {
                 heads,
             });
         }
-        GatModel {
-            cfg,
-            layers,
-            coo: graph.clone(),
-            csr: Csr::from_coo(graph),
-            csr_rev: Csr::from_coo_reversed(graph),
-            inc_in: Incidence::in_edges(graph),
-            inc_out: Incidence::out_edges(graph),
-            step_count: 0,
-        }
+        let full_block = Arc::new(Block::identity(graph, &graph.in_degrees()));
+        let full_inc_in = Incidence::in_edges(&full_block.coo);
+        let full_inc_out = Incidence::out_edges(&full_block.coo);
+        GatModel { cfg, layers, full_block, full_inc_in, full_inc_out, step_count: 0 }
     }
 
-    fn layer_quantized(&self, l: usize) -> bool {
-        self.cfg.mode.quantize && (l + 1 < self.cfg.layers || !self.cfg.mode.fp32_pre_softmax)
+    /// Whether layer `l` runs quantized under `mode` (§3.2: the layer
+    /// feeding the softmax stays FP32 unless Test1).
+    fn layer_quantized_in(&self, mode: TrainMode, l: usize) -> bool {
+        mode.quantize && (l + 1 < self.cfg.layers || !mode.fp32_pre_softmax)
     }
 
-
-    fn forward_cached(&self, features: &Dense<f32>) -> (Dense<f32>, Vec<LayerCache>) {
-        let mode = self.cfg.mode;
-        let mut caches = Vec::with_capacity(self.layers.len());
-        let mut x = features.clone();
-        for (l, layer) in self.layers.iter().enumerate() {
-            let heads = layer.heads;
-            let quant = self.layer_quantized(l);
-            // Step 1: H' = H·W (GEMM).
-            let (h_prime, qx, qw) = if quant {
-                let r = qgemm(&x, &layer.w, mode.bits, mode.rounding(self.step_count, l as u64));
-                (r.out, Some(r.qa), Some(r.qb))
-            } else if mode.exact_style {
-                (gemm_f32(&exact_roundtrip(self.cfg.mode.bits, &x), &exact_roundtrip(self.cfg.mode.bits, &layer.w)), None, None)
-            } else {
-                (gemm_f32(&x, &layer.w), None, None)
-            };
-            // Step 2: per-head consolidation S, D (small GEMMs; FP32 — their
-            // output feeds the softmax path, §3.2).
-            let s = head_project(&h_prime, &layer.a_src, heads);
-            let d = head_project(&h_prime, &layer.a_dst, heads);
-            // Step 3: SDDMM-add + LeakyReLU. Quantized mode exercises the
-            // on-the-fly dequantization kernel (scales of S and D differ).
-            let logits_pre = if quant {
-                let qs = quantize(&s, mode.bits, mode.rounding(self.step_count, 400 + l as u64));
-                let qd = quantize(&d, mode.bits, mode.rounding(self.step_count, 500 + l as u64));
-                qsddmm_add(&self.coo, &qs, &qd)
-            } else if mode.exact_style {
-                sddmm_add(&self.coo, &exact_roundtrip(self.cfg.mode.bits, &s), &exact_roundtrip(self.cfg.mode.bits, &d))
-            } else {
-                sddmm_add(&self.coo, &s, &d)
-            };
-            let logits = leaky_relu(&logits_pre, SLOPE);
-            // Step 4: edge softmax — always FP32 (§3.2).
-            let alpha = edge_softmax(&self.csr, &logits);
-            // Step 5: SPMM aggregation.
-            let (agg, qh_prime) = if quant {
-                let qa = quantize(&alpha, mode.bits, mode.rounding(self.step_count, 600 + l as u64));
-                let qh = quantize(&h_prime, mode.bits, mode.rounding(self.step_count, 700 + l as u64));
-                (qspmm_edge_weighted(&self.csr, &qa, &qh, heads), Some(qh))
-            } else if mode.exact_style {
-                (
-                    spmm_edge_weighted(&self.csr, &exact_roundtrip(self.cfg.mode.bits, &alpha), &exact_roundtrip(self.cfg.mode.bits, &h_prime), heads),
-                    None,
-                )
-            } else {
-                (spmm_edge_weighted(&self.csr, &alpha, &h_prime, heads), None)
-            };
-            let out = if l + 1 < self.layers.len() { elu(&agg) } else { agg.clone() };
-            caches.push(LayerCache { x: x.clone(), h_prime, logits_pre, alpha, agg, qx, qw, qh_prime });
-            x = out;
-        }
-        (x, caches)
+    /// Per-layer references to the identity block (full-graph mode).
+    fn full_refs(full_block: &Arc<Block>, layers: usize) -> Vec<&Block> {
+        (0..layers).map(|_| full_block.as_ref()).collect()
     }
 
-    /// Inference-only forward.
-    pub fn forward(&self, features: &Dense<f32>) -> Dense<f32> {
-        self.forward_cached(features).0
-    }
-
-    /// One training step (see [`super::GcnModel::train_step`]).
-    pub fn train_step(
-        &mut self,
-        features: &Dense<f32>,
-        opt: &mut super::Sgd,
-        loss_grad: impl FnOnce(&Dense<f32>) -> (f32, Dense<f32>),
-    ) -> (f32, Dense<f32>) {
-        let (logits, caches) = self.forward_cached(features);
-        let (loss, dlogits) = loss_grad(&logits);
-        self.backward(&caches, dlogits);
-        let mut p = 0;
-        for layer in self.layers.iter_mut() {
-            opt.step(p, &mut layer.w, &layer.grad_w);
-            opt.step(p + 1, &mut layer.a_src, &layer.grad_a_src);
-            opt.step(p + 2, &mut layer.a_dst, &layer.grad_a_dst);
-            p += 3;
-        }
-        self.step_count += 1;
-        (loss, logits)
-    }
-
-    /// Forward over per-layer sampled [`Block`]s (the mini-batch path).
+    /// Forward over per-layer blocks (parameterised over the execution mode
+    /// so the FP32 bit-derivation probe shares this code).
     ///
     /// Each layer runs the full Fig. 1a pipeline on its block's bipartite
     /// graph: `H'` is computed for the whole source frontier, attention
@@ -232,18 +162,18 @@ impl GatModel {
     /// and the row set shrinks from `num_src` to `num_dst` per layer.
     fn forward_blocks_cached(
         &self,
-        blocks: &[Block],
+        mode: TrainMode,
+        blocks: &[&Block],
         x0: &Dense<f32>,
     ) -> (Dense<f32>, Vec<LayerCache>) {
         assert_eq!(blocks.len(), self.layers.len(), "one block per layer");
-        let mode = self.cfg.mode;
         let mut caches = Vec::with_capacity(self.layers.len());
         let mut x = x0.clone();
         for (l, layer) in self.layers.iter().enumerate() {
-            let blk = &blocks[l];
+            let blk = blocks[l];
             assert_eq!(x.rows(), blk.num_src(), "layer {l}: input rows != block src nodes");
             let heads = layer.heads;
-            let quant = self.layer_quantized(l);
+            let quant = self.layer_quantized_in(mode, l);
             // Step 1: H' = H·W over the whole source frontier.
             let (h_prime, qx, qw) = if quant {
                 let r = qgemm(&x, &layer.w, mode.bits, mode.rounding(self.step_count, l as u64));
@@ -251,8 +181,8 @@ impl GatModel {
             } else if mode.exact_style {
                 (
                     gemm_f32(
-                        &exact_roundtrip(self.cfg.mode.bits, &x),
-                        &exact_roundtrip(self.cfg.mode.bits, &layer.w),
+                        &exact_roundtrip(mode.bits, &x),
+                        &exact_roundtrip(mode.bits, &layer.w),
                     ),
                     None,
                     None,
@@ -260,11 +190,14 @@ impl GatModel {
             } else {
                 (gemm_f32(&x, &layer.w), None, None)
             };
-            // Step 2: S/D consolidations (destination rows are a prefix of
-            // the source rows, so one projection serves both lookups).
+            // Step 2: per-head consolidation S, D (small GEMMs; FP32 — their
+            // output feeds the softmax path, §3.2). Destination rows are a
+            // prefix of the source rows, so one projection serves both.
             let s = head_project(&h_prime, &layer.a_src, heads);
             let d = head_project(&h_prime, &layer.a_dst, heads);
             // Step 3: SDDMM-add + LeakyReLU on the block's edge list.
+            // Quantized mode exercises the on-the-fly dequantization kernel
+            // (scales of S and D differ).
             let logits_pre = if quant {
                 let qs = quantize(&s, mode.bits, mode.rounding(self.step_count, 400 + l as u64));
                 let qd = quantize(&d, mode.bits, mode.rounding(self.step_count, 500 + l as u64));
@@ -272,14 +205,14 @@ impl GatModel {
             } else if mode.exact_style {
                 sddmm_add(
                     &blk.coo,
-                    &exact_roundtrip(self.cfg.mode.bits, &s),
-                    &exact_roundtrip(self.cfg.mode.bits, &d),
+                    &exact_roundtrip(mode.bits, &s),
+                    &exact_roundtrip(mode.bits, &d),
                 )
             } else {
                 sddmm_add(&blk.coo, &s, &d)
             };
             let logits = leaky_relu(&logits_pre, SLOPE);
-            // Step 4: edge softmax per destination row — FP32 (§3.2).
+            // Step 4: edge softmax per destination row — always FP32 (§3.2).
             let alpha = edge_softmax(&blk.csr, &logits);
             // Step 5: SPMM aggregation onto the destination rows.
             let (agg, qh_prime) = if quant {
@@ -290,8 +223,8 @@ impl GatModel {
                 (
                     spmm_edge_weighted(
                         &blk.csr,
-                        &exact_roundtrip(self.cfg.mode.bits, &alpha),
-                        &exact_roundtrip(self.cfg.mode.bits, &h_prime),
+                        &exact_roundtrip(mode.bits, &alpha),
+                        &exact_roundtrip(mode.bits, &h_prime),
                         heads,
                     ),
                     None,
@@ -306,13 +239,32 @@ impl GatModel {
         (x, caches)
     }
 
-    /// Inference-only forward over sampled blocks.
-    pub fn forward_blocks(&self, blocks: &[Block], x0: &Dense<f32>) -> Dense<f32> {
-        self.forward_blocks_cached(blocks, x0).0
+    /// Inference-only forward over the full graph (identity blocks).
+    pub fn forward(&self, features: &Dense<f32>) -> Dense<f32> {
+        let refs = Self::full_refs(&self.full_block, self.layers.len());
+        self.forward_blocks_cached(self.cfg.mode, &refs, features).0
     }
 
-    /// One mini-batch training step over sampled blocks (sampled
-    /// counterpart of [`Self::train_step`]).
+    /// Inference-only forward over sampled blocks.
+    pub fn forward_blocks(&self, blocks: &[Block], x0: &Dense<f32>) -> Dense<f32> {
+        let refs: Vec<&Block> = blocks.iter().collect();
+        self.forward_blocks_cached(self.cfg.mode, &refs, x0).0
+    }
+
+    /// One full-graph training step — the identity-block run of
+    /// [`Self::train_step_blocks`].
+    pub fn train_step(
+        &mut self,
+        features: &Dense<f32>,
+        opt: &mut super::Sgd,
+        loss_grad: impl FnOnce(&Dense<f32>) -> (f32, Dense<f32>),
+    ) -> (f32, Dense<f32>) {
+        let full = Arc::clone(&self.full_block);
+        let refs = Self::full_refs(&full, self.layers.len());
+        self.train_step_refs(&refs, features, opt, loss_grad)
+    }
+
+    /// One mini-batch training step over sampled blocks.
     pub fn train_step_blocks(
         &mut self,
         blocks: &[Block],
@@ -320,7 +272,18 @@ impl GatModel {
         opt: &mut super::Sgd,
         loss_grad: impl FnOnce(&Dense<f32>) -> (f32, Dense<f32>),
     ) -> (f32, Dense<f32>) {
-        let (logits, caches) = self.forward_blocks_cached(blocks, x0);
+        let refs: Vec<&Block> = blocks.iter().collect();
+        self.train_step_refs(&refs, x0, opt, loss_grad)
+    }
+
+    fn train_step_refs(
+        &mut self,
+        blocks: &[&Block],
+        x0: &Dense<f32>,
+        opt: &mut super::Sgd,
+        loss_grad: impl FnOnce(&Dense<f32>) -> (f32, Dense<f32>),
+    ) -> (f32, Dense<f32>) {
+        let (logits, caches) = self.forward_blocks_cached(self.cfg.mode, blocks, x0);
         let (loss, dlogits) = loss_grad(&logits);
         self.backward_blocks(blocks, &caches, dlogits);
         let mut p = 0;
@@ -334,19 +297,21 @@ impl GatModel {
         (loss, logits)
     }
 
-    /// Backward over sampled blocks — the Fig. 1b walk on each block's
-    /// bipartite graph (incidences are rebuilt per block; they are tiny
-    /// compared to the aggregation work).
-    fn backward_blocks(&mut self, blocks: &[Block], caches: &[LayerCache], mut grad: Dense<f32>) {
+    /// Backward over blocks — the Fig. 1b walk on each block's bipartite
+    /// graph (incidences are rebuilt per block; they are tiny compared to
+    /// the aggregation work).
+    fn backward_blocks(&mut self, blocks: &[&Block], caches: &[LayerCache], mut grad: Dense<f32>) {
         let mode = self.cfg.mode;
         for l in (0..self.layers.len()).rev() {
-            let blk = &blocks[l];
+            let blk = blocks[l];
             let cache = &caches[l];
             let heads = self.layers[l].heads;
-            let quant = self.layer_quantized(l);
+            let quant = self.layer_quantized_in(mode, l);
             if l + 1 < self.layers.len() {
                 grad = elu_backward(&cache.agg, &grad);
             }
+            // Quantize ∂H^(l) ONCE for both consumers (backward SPMM +
+            // SDDMM-dot) — the inter-primitive cache (§3.3).
             let q_grad = if quant {
                 Some(quantize(&grad, mode.bits, mode.rounding(self.step_count, 800 + l as u64)))
             } else {
@@ -359,35 +324,45 @@ impl GatModel {
             } else if mode.exact_style {
                 spmm_edge_weighted(
                     &blk.csr_rev,
-                    &exact_roundtrip(self.cfg.mode.bits, &cache.alpha),
-                    &exact_roundtrip(self.cfg.mode.bits, &grad),
+                    &exact_roundtrip(mode.bits, &cache.alpha),
+                    &exact_roundtrip(mode.bits, &grad),
                     heads,
                 )
             } else {
                 spmm_edge_weighted(&blk.csr_rev, &cache.alpha, &grad, heads)
             };
-            // Step 5': ∂α (SDDMM-dot: dst-indexed ∂H^(l) × src-indexed H').
+            // Step 5': ∂α (SDDMM-dot: dst-indexed ∂H^(l) × src-indexed H')
+            // — directly on quantized values (mul commutes with the scales).
             let dalpha = if let Some(qg) = &q_grad {
                 let qh = cache.qh_prime.as_ref().expect("forward cached qh_prime");
                 qsddmm_dot(&blk.coo, qg, qh, heads)
             } else if mode.exact_style {
                 sddmm_dot(
                     &blk.coo,
-                    &exact_roundtrip(self.cfg.mode.bits, &grad),
-                    &exact_roundtrip(self.cfg.mode.bits, &cache.h_prime),
+                    &exact_roundtrip(mode.bits, &grad),
+                    &exact_roundtrip(mode.bits, &cache.h_prime),
                     heads,
                 )
             } else {
                 sddmm_dot(&blk.coo, &grad, &cache.h_prime, heads)
             };
-            // Step 3': softmax + LeakyReLU backward (FP32).
+            // Step 3': softmax + LeakyReLU backward (FP32, §3.2).
             let dlogits = edge_softmax_backward(&blk.csr, &cache.alpha, &dalpha);
             let de = leaky_relu_backward(&cache.logits_pre, &dlogits, SLOPE);
-            // Step 4'': incidence SPMMs over the block's edge list.
-            let inc_in = Incidence::in_edges(&blk.coo);
-            let inc_out = Incidence::out_edges(&blk.coo);
-            let ds = incidence_spmm(&inc_out, &de);
-            let dd = incidence_spmm(&inc_in, &de);
+            // Step 4'': ∂S = (Gᵀ ⊙ ∂E)·1 and ∂D = (G ⊙ ∂E)·1 — the
+            // incidence-matrix SPMM (Fig. 5) over the block's edge list.
+            // Identity block (full-graph mode): reuse the incidences built
+            // at construction instead of two O(E) rebuilds per step.
+            let built;
+            let (inc_in, inc_out) = if std::ptr::eq(blk, self.full_block.as_ref()) {
+                (&self.full_inc_in, &self.full_inc_out)
+            } else {
+                built = (Incidence::in_edges(&blk.coo), Incidence::out_edges(&blk.coo));
+                (&built.0, &built.1)
+            };
+            let ds = incidence_spmm(inc_out, &de);
+            let dd = incidence_spmm(inc_in, &de);
+            // ∂H' contributions from S and D; ∂a_src/∂a_dst projections.
             let layer = &mut self.layers[l];
             add_outer(&mut dh_prime, &ds, &layer.a_src, heads);
             add_outer(&mut dh_prime, &dd, &layer.a_dst, heads);
@@ -421,112 +396,12 @@ impl GatModel {
         }
     }
 
-    fn backward(&mut self, caches: &[LayerCache], mut grad: Dense<f32>) {
-        let mode = self.cfg.mode;
-        for l in (0..self.layers.len()).rev() {
-            let cache = &caches[l];
-            let heads = self.layers[l].heads;
-            let quant = self.layer_quantized(l);
-            if l + 1 < self.layers.len() {
-                grad = elu_backward(&cache.agg, &grad);
-            }
-            // Quantize ∂H^(l) ONCE for both consumers (backward SPMM +
-            // SDDMM-dot) — the inter-primitive cache (§3.3).
-            let q_grad = if quant {
-                Some(quantize(&grad, mode.bits, mode.rounding(self.step_count, 800 + l as u64)))
-            } else {
-                None
-            };
-            // Step 4' : ∂H' = (Gᵀ ⊙ α)·∂H^(l).
-            let mut dh_prime = if let Some(qg) = &q_grad {
-                let qa = quantize(&cache.alpha, mode.bits, mode.rounding(self.step_count, 900 + l as u64));
-                qspmm_edge_weighted(&self.csr_rev, &qa, qg, heads)
-            } else if mode.exact_style {
-                spmm_edge_weighted(&self.csr_rev, &exact_roundtrip(self.cfg.mode.bits, &cache.alpha), &exact_roundtrip(self.cfg.mode.bits, &grad), heads)
-            } else {
-                spmm_edge_weighted(&self.csr_rev, &cache.alpha, &grad, heads)
-            };
-            // Step 5' : ∂α = G ⊙ (∂H^(l)·H'ᵀ) — SDDMM-dot directly on
-            // quantized values (mul commutes with the scales).
-            let dalpha = if let Some(qg) = &q_grad {
-                let qh = cache.qh_prime.as_ref().expect("forward cached qh_prime");
-                qsddmm_dot(&self.coo, qg, qh, heads)
-            } else if mode.exact_style {
-                sddmm_dot(&self.coo, &exact_roundtrip(self.cfg.mode.bits, &grad), &exact_roundtrip(self.cfg.mode.bits, &cache.h_prime), heads)
-            } else {
-                sddmm_dot(&self.coo, &grad, &cache.h_prime, heads)
-            };
-            // Step 3' : softmax + LeakyReLU backward (FP32, §3.2).
-            let dlogits = edge_softmax_backward(&self.csr, &cache.alpha, &dalpha);
-            let de = leaky_relu_backward(&cache.logits_pre, &dlogits, SLOPE);
-            // Step 4'': ∂S = (Gᵀ ⊙ ∂E)·1 and ∂D = (G ⊙ ∂E)·1 — the
-            // incidence-matrix SPMM (Fig. 5).
-            let ds = incidence_spmm(&self.inc_out, &de);
-            let dd = incidence_spmm(&self.inc_in, &de);
-            // ∂H' contributions from S and D; ∂a_src/∂a_dst projections.
-            let layer = &mut self.layers[l];
-            add_outer(&mut dh_prime, &ds, &layer.a_src, heads);
-            add_outer(&mut dh_prime, &dd, &layer.a_dst, heads);
-            layer.grad_a_src = project_grad(&cache.h_prime, &ds, heads);
-            layer.grad_a_dst = project_grad(&cache.h_prime, &dd, heads);
-            // Step 1' : weight gradients from cached quantized tensors.
-            if quant {
-                let q_dh = quantize(&dh_prime, mode.bits, mode.rounding(self.step_count, 1000 + l as u64));
-                let qx = cache.qx.as_ref().expect("forward cached qx");
-                let qw = cache.qw.as_ref().expect("forward cached qw");
-                let (gw, _) = qgemm_prequantized(&qx.transpose2d(), &q_dh, mode.bits);
-                layer.grad_w = gw;
-                if l > 0 {
-                    let (gx, _) = qgemm_prequantized(&q_dh, &qw.transpose2d(), mode.bits);
-                    grad = gx;
-                }
-            } else if mode.exact_style {
-                let x2 = exact_roundtrip(mode.bits, &cache.x);
-                let d2 = exact_roundtrip(mode.bits, &dh_prime);
-                layer.grad_w = gemm_f32(&x2.transpose(), &d2);
-                if l > 0 {
-                    let w2 = exact_roundtrip(mode.bits, &layer.w);
-                    grad = gemm_f32(&d2, &w2.transpose());
-                }
-            } else {
-                layer.grad_w = gemm_f32(&cache.x.transpose(), &dh_prime);
-                if l > 0 {
-                    grad = gemm_f32(&dh_prime, &layer.w.transpose());
-                }
-            }
-        }
-    }
-
-    /// First-layer output for the bit-derivation rule (Fig. 2).
+    /// First-layer output for the bit-derivation rule (Fig. 2), evaluated
+    /// in FP32 regardless of mode (the rule measures the tensor, not the
+    /// kernels) — one identity-block forward with a mode override.
     pub fn first_layer_output(&self, features: &Dense<f32>) -> Dense<f32> {
-        let saved = self.cfg.mode;
-        // Evaluate in FP32 regardless of mode (the rule measures the tensor,
-        // not the kernels).
-        let mut probe = GatModel {
-            cfg: GatConfig { mode: TrainMode::fp32(), ..self.cfg },
-            layers: self
-                .layers
-                .iter()
-                .map(|l| GatLayer {
-                    w: l.w.clone(),
-                    a_src: l.a_src.clone(),
-                    a_dst: l.a_dst.clone(),
-                    grad_w: l.grad_w.clone(),
-                    grad_a_src: l.grad_a_src.clone(),
-                    grad_a_dst: l.grad_a_dst.clone(),
-                    heads: l.heads,
-                })
-                .collect(),
-            coo: self.coo.clone(),
-            csr: self.csr.clone(),
-            csr_rev: self.csr_rev.clone(),
-            inc_in: self.inc_in.clone(),
-            inc_out: self.inc_out.clone(),
-            step_count: 0,
-        };
-        probe.cfg.mode = TrainMode::fp32();
-        let _ = saved;
-        let (_, caches) = probe.forward_cached(features);
+        let refs = Self::full_refs(&self.full_block, self.layers.len());
+        let (_, caches) = self.forward_blocks_cached(TrainMode::fp32(), &refs, features);
         caches[0].agg.clone()
     }
 
@@ -558,6 +433,74 @@ impl GatModel {
                 off += n;
             }
         }
+    }
+}
+
+impl GnnModel for GatModel {
+    fn new_from_config(spec: &ModelSpec, graph: &Coo, seed: u64) -> Self {
+        GatModel::new(
+            GatConfig {
+                in_dim: spec.in_dim,
+                hidden: spec.hidden,
+                out_dim: spec.out_dim,
+                heads: spec.heads,
+                layers: spec.layers,
+                mode: spec.mode,
+            },
+            graph,
+            seed,
+        )
+    }
+
+    fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn mode(&self) -> TrainMode {
+        self.cfg.mode
+    }
+
+    fn forward(&self, features: &Dense<f32>) -> Dense<f32> {
+        GatModel::forward(self, features)
+    }
+
+    fn forward_blocks(&self, blocks: &[Block], x0: &Dense<f32>) -> Dense<f32> {
+        GatModel::forward_blocks(self, blocks, x0)
+    }
+
+    fn train_step(
+        &mut self,
+        features: &Dense<f32>,
+        opt: &mut super::Sgd,
+        loss_grad: LossGrad,
+    ) -> (f32, Dense<f32>) {
+        GatModel::train_step(self, features, opt, |lg| loss_grad(lg))
+    }
+
+    fn train_step_blocks(
+        &mut self,
+        blocks: &[Block],
+        x0: &Dense<f32>,
+        opt: &mut super::Sgd,
+        loss_grad: LossGrad,
+    ) -> (f32, Dense<f32>) {
+        GatModel::train_step_blocks(self, blocks, x0, opt, |lg| loss_grad(lg))
+    }
+
+    fn first_layer_output(&self, features: &Dense<f32>) -> Dense<f32> {
+        GatModel::first_layer_output(self, features)
+    }
+
+    fn num_params(&self) -> usize {
+        GatModel::num_params(self)
+    }
+
+    fn params_flat(&self) -> Vec<f32> {
+        GatModel::params_flat(self)
+    }
+
+    fn set_params_flat(&mut self, flat: &[f32]) {
+        GatModel::set_params_flat(self, flat)
     }
 }
 
@@ -786,6 +729,31 @@ mod tests {
             .zip(pb.iter())
             .fold(0.0f32, |m, (x, y)| m.max((x - y).abs()));
         assert!(max_diff < 1e-3, "post-step param diff {max_diff}");
+    }
+
+    #[test]
+    fn identity_blocks_replay_full_graph_exactly() {
+        // The collapse invariant: the block API over identity blocks is
+        // bit-identical to the full-graph wrappers, FP32 and quantized.
+        for mode in [TrainMode::fp32(), TrainMode::tango(8)] {
+            let (mut a, d) = tiny_model(mode);
+            let (mut b, _) = tiny_model(mode);
+            let ident = Block::identity(&d.graph, &d.graph.in_degrees());
+            let blocks = vec![ident.clone(), ident];
+            assert_eq!(a.forward(&d.features), b.forward_blocks(&blocks, &d.features));
+            let mut opt_a = Sgd::new(0.05);
+            let mut opt_b = Sgd::new(0.05);
+            for _ in 0..2 {
+                let (la, _) = a.train_step(&d.features, &mut opt_a, |lg| {
+                    softmax_cross_entropy(lg, &d.labels, &d.train_nodes)
+                });
+                let (lb, _) = b.train_step_blocks(&blocks, &d.features, &mut opt_b, |lg| {
+                    softmax_cross_entropy(lg, &d.labels, &d.train_nodes)
+                });
+                assert_eq!(la, lb, "losses must be bitwise equal");
+            }
+            assert_eq!(a.params_flat(), b.params_flat());
+        }
     }
 
     #[test]

@@ -2,6 +2,17 @@
 //! from the three primitives, exactly following the paper's §2.1
 //! decomposition (Fig. 1a/1b).
 //!
+//! Every model implements the [`GnnModel`] trait and executes **one** code
+//! path: the sampled-block forward/backward. The full-graph mode is the
+//! block path run over per-layer copies of the *identity block*
+//! ([`crate::sampler::Block::identity`]) — the whole graph as a single MFG
+//! whose destinations equal its sources — so full-graph and mini-batch
+//! training cannot drift apart numerically. Training engines
+//! ([`crate::coordinator::Trainer`], [`crate::sampler::MiniBatchTrainer`],
+//! [`crate::multigpu`]) construct models through [`AnyModel`], the one
+//! model dispatcher in the crate, and attach a [`TaskHead`] (softmax-CE
+//! node classification or dot-product link prediction) for the loss side.
+//!
 //! The models run in one of several [`TrainMode`]s that map onto the
 //! paper's evaluation arms:
 //!
@@ -21,16 +32,22 @@
 pub mod eval;
 pub mod gat;
 pub mod gcn;
+pub mod head;
 pub mod loss;
 pub mod optim;
 
 pub use eval::{accuracy, auc};
 pub use gat::{GatConfig, GatModel};
 pub use gcn::{GcnConfig, GcnModel};
+pub use head::TaskHead;
 pub use loss::{bce_with_logits, softmax_cross_entropy};
 pub use optim::Sgd;
 
+use crate::config::ModelKind;
+use crate::graph::Coo;
 use crate::quant::Rounding;
+use crate::sampler::Block;
+use crate::tensor::Dense;
 
 /// How a training step executes its primitives.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -87,6 +104,203 @@ impl TrainMode {
     }
 }
 
+/// Architecture-agnostic model hyperparameters — everything
+/// [`GnnModel::new_from_config`] needs to build any supported model
+/// (GCN ignores `heads`).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelSpec {
+    /// Which architecture [`AnyModel::new_from_config`] dispatches to.
+    pub kind: ModelKind,
+    /// Input feature dimension.
+    pub in_dim: usize,
+    /// Hidden width.
+    pub hidden: usize,
+    /// Output dimension (classes for NC, embedding width for LP — see
+    /// [`TaskHead::out_dim`]).
+    pub out_dim: usize,
+    /// Attention heads (GAT only).
+    pub heads: usize,
+    /// Layer count (≥1).
+    pub layers: usize,
+    /// Execution mode.
+    pub mode: TrainMode,
+}
+
+impl ModelSpec {
+    /// Derive a spec from a training config plus the dataset-dependent
+    /// dimensions (the one construction rule all training engines share).
+    pub fn from_train(cfg: &crate::config::TrainConfig, in_dim: usize, out_dim: usize) -> Self {
+        ModelSpec {
+            kind: cfg.model,
+            in_dim,
+            hidden: cfg.hidden,
+            out_dim,
+            heads: cfg.heads,
+            layers: cfg.layers,
+            mode: cfg.mode,
+        }
+    }
+}
+
+/// The loss-side callback a training step consumes: logits (or embeddings)
+/// for the step's output rows in, `(loss, ∂logits)` out.
+pub type LossGrad<'a> = &'a mut dyn FnMut(&Dense<f32>) -> (f32, Dense<f32>);
+
+/// The uniform interface every GNN architecture exposes to the training
+/// engines. There is exactly one execution path — the sampled-block one;
+/// [`GnnModel::forward`]/[`GnnModel::train_step`] run it over identity
+/// blocks of the model's bound graph.
+pub trait GnnModel: Send {
+    /// Build a model for a graph from an architecture-agnostic spec
+    /// (expects self-loops already added).
+    fn new_from_config(spec: &ModelSpec, graph: &Coo, seed: u64) -> Self
+    where
+        Self: Sized;
+
+    /// Number of layers (== blocks per training step).
+    fn num_layers(&self) -> usize;
+
+    /// The execution mode the model was built with.
+    fn mode(&self) -> TrainMode;
+
+    /// Full-graph inference forward (identity-block execution).
+    fn forward(&self, features: &Dense<f32>) -> Dense<f32>;
+
+    /// Inference forward over per-layer sampled [`Block`]s; `x0` holds the
+    /// input features of `blocks[0]`'s source nodes.
+    fn forward_blocks(&self, blocks: &[Block], x0: &Dense<f32>) -> Dense<f32>;
+
+    /// One full-graph training step (identity-block execution): forward,
+    /// caller-supplied loss grad, backward, FP32 parameter update. Returns
+    /// `(loss, logits)`.
+    fn train_step(&mut self, features: &Dense<f32>, opt: &mut Sgd, loss_grad: LossGrad)
+        -> (f32, Dense<f32>);
+
+    /// One mini-batch training step over sampled blocks; `loss_grad` sees
+    /// logits for the final block's destination (seed) rows.
+    fn train_step_blocks(
+        &mut self,
+        blocks: &[Block],
+        x0: &Dense<f32>,
+        opt: &mut Sgd,
+        loss_grad: LossGrad,
+    ) -> (f32, Dense<f32>);
+
+    /// The output of the *first layer* in the current state, evaluated in
+    /// FP32 — the tensor the bit-derivation rule (Fig. 2) probes.
+    fn first_layer_output(&self, features: &Dense<f32>) -> Dense<f32>;
+
+    /// Total parameter count.
+    fn num_params(&self) -> usize;
+
+    /// Flatten all parameters — the multi-worker all-reduce layout.
+    fn params_flat(&self) -> Vec<f32>;
+
+    /// Load parameters from a flat buffer (inverse of
+    /// [`GnnModel::params_flat`]).
+    fn set_params_flat(&mut self, flat: &[f32]);
+}
+
+/// The one model dispatcher in the crate. Training engines hold an
+/// `AnyModel` and talk to it through [`GnnModel`]; adding an architecture
+/// means one new variant here plus a [`GnnModel`] impl — no engine changes.
+pub enum AnyModel {
+    /// Graph Convolutional Network (GEMM + SPMM).
+    Gcn(GcnModel),
+    /// Graph Attention Network (GEMM + SPMM + SDDMM).
+    Gat(GatModel),
+}
+
+impl GnnModel for AnyModel {
+    fn new_from_config(spec: &ModelSpec, graph: &Coo, seed: u64) -> Self {
+        match spec.kind {
+            ModelKind::Gcn => AnyModel::Gcn(GcnModel::new_from_config(spec, graph, seed)),
+            ModelKind::Gat => AnyModel::Gat(GatModel::new_from_config(spec, graph, seed)),
+        }
+    }
+
+    fn num_layers(&self) -> usize {
+        match self {
+            AnyModel::Gcn(m) => m.num_layers(),
+            AnyModel::Gat(m) => m.num_layers(),
+        }
+    }
+
+    fn mode(&self) -> TrainMode {
+        match self {
+            AnyModel::Gcn(m) => GnnModel::mode(m),
+            AnyModel::Gat(m) => GnnModel::mode(m),
+        }
+    }
+
+    fn forward(&self, features: &Dense<f32>) -> Dense<f32> {
+        match self {
+            AnyModel::Gcn(m) => m.forward(features),
+            AnyModel::Gat(m) => m.forward(features),
+        }
+    }
+
+    fn forward_blocks(&self, blocks: &[Block], x0: &Dense<f32>) -> Dense<f32> {
+        match self {
+            AnyModel::Gcn(m) => m.forward_blocks(blocks, x0),
+            AnyModel::Gat(m) => m.forward_blocks(blocks, x0),
+        }
+    }
+
+    fn train_step(
+        &mut self,
+        features: &Dense<f32>,
+        opt: &mut Sgd,
+        loss_grad: LossGrad,
+    ) -> (f32, Dense<f32>) {
+        match self {
+            AnyModel::Gcn(m) => m.train_step(features, opt, |lg| loss_grad(lg)),
+            AnyModel::Gat(m) => m.train_step(features, opt, |lg| loss_grad(lg)),
+        }
+    }
+
+    fn train_step_blocks(
+        &mut self,
+        blocks: &[Block],
+        x0: &Dense<f32>,
+        opt: &mut Sgd,
+        loss_grad: LossGrad,
+    ) -> (f32, Dense<f32>) {
+        match self {
+            AnyModel::Gcn(m) => m.train_step_blocks(blocks, x0, opt, |lg| loss_grad(lg)),
+            AnyModel::Gat(m) => m.train_step_blocks(blocks, x0, opt, |lg| loss_grad(lg)),
+        }
+    }
+
+    fn first_layer_output(&self, features: &Dense<f32>) -> Dense<f32> {
+        match self {
+            AnyModel::Gcn(m) => m.first_layer_output(features),
+            AnyModel::Gat(m) => m.first_layer_output(features),
+        }
+    }
+
+    fn num_params(&self) -> usize {
+        match self {
+            AnyModel::Gcn(m) => m.num_params(),
+            AnyModel::Gat(m) => m.num_params(),
+        }
+    }
+
+    fn params_flat(&self) -> Vec<f32> {
+        match self {
+            AnyModel::Gcn(m) => m.params_flat(),
+            AnyModel::Gat(m) => m.params_flat(),
+        }
+    }
+
+    fn set_params_flat(&mut self, flat: &[f32]) {
+        match self {
+            AnyModel::Gcn(m) => m.set_params_flat(flat),
+            AnyModel::Gat(m) => m.set_params_flat(flat),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,5 +326,39 @@ mod tests {
         assert_ne!(m.rounding(3, 1), m.rounding(4, 1));
         assert_ne!(m.rounding(3, 1), m.rounding(3, 2));
         assert_eq!(TrainMode::tango_test2(8).rounding(5, 0), Rounding::Nearest);
+    }
+
+    #[test]
+    fn any_model_dispatches_both_architectures() {
+        let d = crate::graph::datasets::tiny(7);
+        for kind in [ModelKind::Gcn, ModelKind::Gat] {
+            let spec = ModelSpec {
+                kind,
+                in_dim: d.features.cols(),
+                hidden: 16,
+                out_dim: d.num_classes,
+                heads: 4,
+                layers: 2,
+                mode: TrainMode::fp32(),
+            };
+            let mut m = AnyModel::new_from_config(&spec, &d.graph, 42);
+            assert_eq!(m.num_layers(), 2);
+            assert!(m.num_params() > 0);
+            let out = m.forward(&d.features);
+            assert_eq!(out.shape(), &[d.graph.num_nodes, d.num_classes]);
+            let p = m.params_flat();
+            assert_eq!(p.len(), m.num_params());
+            let mut opt = Sgd::new(0.05);
+            let (labels, nodes) = (d.labels.clone(), d.train_nodes.clone());
+            let (loss, _) = m.train_step(&d.features, &mut opt, &mut |lg| {
+                softmax_cross_entropy(lg, &labels, &nodes)
+            });
+            assert!(loss.is_finite());
+            // Round-trip the flat parameters through the trait.
+            let p2 = m.params_flat();
+            assert_ne!(p, p2, "the step must move parameters");
+            m.set_params_flat(&p);
+            assert_eq!(m.params_flat(), p);
+        }
     }
 }

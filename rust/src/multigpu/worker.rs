@@ -1,23 +1,34 @@
 //! Data-parallel workers on the sampler's `Block` pipeline: every worker
-//! owns a persistent model and a seeded [`NeighborSampler`] over the shared
-//! in-edge CSR, sweeps its train-node shard in shuffled mini-batches each
-//! epoch (the DGL epoch shape), and gathers input features from one
-//! process-wide [`QuantFeatureStore`]. After every synchronous step the
-//! gradients move through the (numerically real) ring all-reduce, while the
-//! *interconnect* time is modelled per DESIGN.md §Substitutions with correct
-//! INT8-vs-FP32 byte accounting ([`allreduce_payload_bytes`]).
+//! owns a persistent model (an [`AnyModel`] behind the [`GnnModel`] trait —
+//! the same construction path as the single-GPU trainers) and a seeded
+//! [`NeighborSampler`] over the shared in-edge CSR, sweeps its shard in
+//! shuffled mini-batches each epoch (the DGL epoch shape), and gathers
+//! input features from one process-wide [`QuantFeatureStore`]. After every
+//! synchronous step the gradients move through the (numerically real) ring
+//! all-reduce, while the *interconnect* time is modelled per DESIGN.md
+//! §Substitutions with correct INT8-vs-FP32 byte accounting
+//! ([`allreduce_payload_bytes`]).
+//!
+//! Both task heads run data-parallel: node classification shards the train
+//! nodes, link prediction shards the graph's canonical positive edges
+//! ([`EdgeBatcher`]) and trains on edge-seeded blocks with seed-edge
+//! exclusion — same batching, same seeds, same loss as
+//! [`crate::sampler::MiniBatchTrainer`], so a 1-worker run replays it step
+//! for step on either task.
 
 use super::allreduce::{allreduce_payload_bytes, ring_allreduce, ring_messages};
 use super::interconnect::Interconnect;
-use crate::config::{ModelKind, TomlDoc, TrainConfig};
+use crate::config::{TaskKind, TomlDoc, TrainConfig};
+use crate::coordinator::qcache::CacheStats;
 use crate::graph::datasets::{Dataset, Task};
 use crate::graph::partition::partition_nodes;
 use crate::graph::Csr;
-use crate::model::{softmax_cross_entropy, GatConfig, GatModel, GcnConfig, GcnModel, Sgd};
+use crate::model::{softmax_cross_entropy, AnyModel, GnnModel, ModelSpec, Sgd, TaskHead};
 use crate::quant::dequantize;
 use crate::quant::rng::mix_seeds;
 use crate::sampler::{
-    adjust_fanouts, gather_rows, shuffled_batches, NeighborSampler, QuantFeatureStore,
+    adjust_fanouts, gather_rows, sample_lp_step, shuffled_batches, EdgeBatcher,
+    NeighborSampler, QuantFeatureStore,
 };
 use crate::util::par;
 use std::sync::Mutex;
@@ -25,9 +36,9 @@ use std::sync::Mutex;
 /// Multi-worker run configuration.
 ///
 /// The sampler knobs (`fanouts`, `batch_size`, `sample_seed`, `cache_nodes`)
-/// live on [`TrainConfig::sampler`] — the *same* knobs `tango train
-/// --sampler neighbor` reads, so the single-GPU and multi-GPU paths cannot
-/// drift apart.
+/// and the task override live on [`TrainConfig`] — the *same* knobs `tango
+/// train --sampler neighbor` reads, so the single-GPU and multi-GPU paths
+/// cannot drift apart.
 #[derive(Debug, Clone)]
 pub struct MultiGpuConfig {
     /// Base training config (model/hidden/mode/seed + sampler knobs).
@@ -61,8 +72,8 @@ impl MultiGpuConfig {
 
     /// Parse a full config from TOML text: the `[train]` section (including
     /// the unified sampler knobs `fanouts`/`batch_size`/`sample_seed`/
-    /// `cache_nodes`) plus a `[multigpu]` section with `workers`, `epochs`,
-    /// `quantize_grads` and `overlap_quantization`.
+    /// `cache_nodes` and `task`) plus a `[multigpu]` section with
+    /// `workers`, `epochs`, `quantize_grads` and `overlap_quantization`.
     pub fn from_toml(text: &str) -> Result<Self, String> {
         let mut cfg = Self::new(TrainConfig::from_toml(text)?);
         cfg.apply_toml(text)?;
@@ -124,32 +135,16 @@ pub struct MultiGpuReport {
     pub epochs: Vec<EpochStats>,
     /// Gradient elements all-reduced per step.
     pub grad_elems: usize,
+    /// Process-wide quantized feature-cache statistics (None in FP32 mode).
+    pub cache: Option<CacheStats>,
+    /// Bytes of INT8 rows held by the shared feature cache at run end.
+    pub cache_bytes: usize,
 }
 
 impl MultiGpuReport {
     /// Total modelled wall time.
     pub fn total_time(&self) -> f64 {
         self.epochs.iter().map(|e| e.total()).sum()
-    }
-}
-
-enum AnyModel {
-    Gcn(GcnModel),
-    Gat(GatModel),
-}
-
-impl AnyModel {
-    fn params(&self) -> Vec<f32> {
-        match self {
-            AnyModel::Gcn(m) => m.params_flat(),
-            AnyModel::Gat(m) => m.params_flat(),
-        }
-    }
-    fn set_params(&mut self, p: &[f32]) {
-        match self {
-            AnyModel::Gcn(m) => m.set_params_flat(p),
-            AnyModel::Gat(m) => m.set_params_flat(p),
-        }
     }
 }
 
@@ -162,54 +157,45 @@ struct WorkerState {
     sampler: NeighborSampler,
 }
 
-fn build_model(cfg: &TrainConfig, data: &Dataset) -> AnyModel {
-    match cfg.model {
-        ModelKind::Gcn => AnyModel::Gcn(GcnModel::new(
-            GcnConfig {
-                in_dim: data.features.cols(),
-                hidden: cfg.hidden,
-                out_dim: data.num_classes,
-                layers: cfg.layers,
-                mode: cfg.mode,
-            },
-            &data.graph,
-            cfg.seed,
-        )),
-        ModelKind::Gat => AnyModel::Gat(GatModel::new(
-            GatConfig {
-                in_dim: data.features.cols(),
-                hidden: cfg.hidden,
-                out_dim: data.num_classes,
-                heads: cfg.heads,
-                layers: cfg.layers,
-                mode: cfg.mode,
-            },
-            &data.graph,
-            cfg.seed,
-        )),
-    }
+fn build_model(cfg: &TrainConfig, data: &Dataset, out_dim: usize) -> AnyModel {
+    AnyModel::new_from_config(
+        &ModelSpec::from_train(cfg, data.features.cols(), out_dim),
+        &data.graph,
+        cfg.seed,
+    )
 }
 
-/// Run simulated data-parallel training. Only NC datasets are supported
-/// (the paper's multi-GPU experiment trains classification models).
+/// Run simulated data-parallel training on either task head.
 ///
-/// Every epoch each worker sweeps its shard once in shuffled mini-batches
-/// (reshuffled per epoch — no node is stuck outside the fixed prefix of its
-/// shard), sampling [`crate::sampler::Block`]s with its own splitmix64-mixed
+/// Every epoch each worker sweeps its shard (train nodes for NC, canonical
+/// positive edges for LP) once in shuffled mini-batches (reshuffled per
+/// epoch — no element is stuck outside the fixed prefix of its shard),
+/// sampling [`crate::sampler::Block`]s with its own splitmix64-mixed
 /// stream. With one worker and `quantize_grads` off, the run replays
 /// [`crate::sampler::MiniBatchTrainer`] step for step.
 pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<MultiGpuReport> {
-    assert_eq!(data.task, Task::NodeClassification, "multi-GPU sim is NC-only");
+    cfg.train.validate().map_err(|e| anyhow::anyhow!(e))?;
     let k = cfg.workers.max(1);
     let train = &cfg.train;
-    let batch_size = train.sampler.batch_size.max(1);
+    let task = TaskKind::resolve(train.task, data.task);
+    let head = TaskHead::for_task(task);
+    let batch_size = train.sampler.batch_size;
     let fanouts = adjust_fanouts(&train.sampler.fanouts, train.layers);
-    // k=1 keeps the natural train-node order so the sweep is identical to
-    // the single-GPU MiniBatchTrainer's; k>1 shards a seeded shuffle.
+    // LP shards the canonical positive edges; NC shards the train nodes.
+    let batcher = match task {
+        Task::LinkPrediction => Some(EdgeBatcher::new(&data.graph)),
+        Task::NodeClassification => None,
+    };
+    let shard_items: Vec<u32> = match &batcher {
+        Some(b) => b.edge_ids(),
+        None => data.train_nodes.clone(),
+    };
+    // k=1 keeps the natural order so the sweep is identical to the
+    // single-GPU MiniBatchTrainer's; k>1 shards a seeded shuffle.
     let shards: Vec<Vec<u32>> = if k == 1 {
-        vec![data.train_nodes.clone()]
+        vec![shard_items]
     } else {
-        partition_nodes(&data.train_nodes, k, train.seed)
+        partition_nodes(&shard_items, k, train.seed)
     };
     let csr_in = Csr::from_coo(&data.graph);
     let degrees = data.graph.in_degrees();
@@ -225,12 +211,13 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
     } else {
         None
     };
+    let out_dim = head.out_dim(data, train.hidden);
     // Persistent per-worker state; identical seeds → identical initial
     // params, and the per-step averaged update keeps them in lockstep.
     let workers: Vec<Mutex<WorkerState>> = (0..k)
         .map(|w| {
             Mutex::new(WorkerState {
-                model: build_model(train, data),
+                model: build_model(train, data, out_dim),
                 opt: Sgd::new(train.lr),
                 sampler: NeighborSampler::new(
                     fanouts.clone(),
@@ -239,7 +226,7 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
             })
         })
         .collect();
-    let grad_elems = workers[0].lock().unwrap().model.params().len();
+    let grad_elems = workers[0].lock().unwrap().model.num_params();
 
     let mut epochs = Vec::with_capacity(cfg.epochs);
     for epoch in 0..cfg.epochs {
@@ -256,15 +243,38 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
         let mut loss_n = 0usize;
         for step in 0..steps {
             // Synchronous round: each worker with a batch left samples its
-            // blocks, gathers features through the shared store and runs one
-            // real train_step_blocks on its own model (threaded, measured).
+            // blocks (node- or edge-seeded), gathers features through the
+            // shared store and runs one real train_step_blocks on its own
+            // model (threaded, measured).
             let results: Vec<Option<(Vec<f32>, Vec<f32>, f64, f32)>> = par::map_range(k, |w| {
                 let batch = batches[w].get(step)?;
                 let mut guard = workers[w].lock().unwrap();
                 let ws = &mut *guard;
                 let t0 = std::time::Instant::now();
                 let stream = mix_seeds(&[epoch as u64, step as u64]);
-                let blocks = ws.sampler.sample_blocks(&csr_in, &degrees, batch, stream);
+                // Sample the blocks and assemble the loss context per task.
+                // The LP assembly is the SAME `sample_lp_step` the
+                // single-GPU `MiniBatchTrainer` runs — one definition, so
+                // the 1-worker step-for-step replay cannot drift.
+                let (blocks, lp_pairs): (Vec<crate::sampler::Block>, Option<Vec<(u32, u32, f32)>>) =
+                    match &batcher {
+                        None => (
+                            ws.sampler.sample_blocks(&csr_in, &degrees, batch, stream),
+                            None,
+                        ),
+                        Some(b) => {
+                            let (blocks, pairs) = sample_lp_step(
+                                b,
+                                &ws.sampler,
+                                &csr_in,
+                                &degrees,
+                                batch,
+                                stream,
+                                head.neg_per_pos(),
+                            );
+                            (blocks, Some(pairs))
+                        }
+                    };
                 let input_nodes = &blocks[0].src_nodes;
                 let x0 = match &store {
                     // Hold the shared store's lock only for the INT8 row
@@ -280,26 +290,28 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                     }
                     None => gather_rows(&data.features, input_nodes),
                 };
-                let labels: Vec<u32> =
-                    batch.iter().map(|&v| data.labels[v as usize]).collect();
-                let nodes: Vec<u32> = (0..batch.len() as u32).collect();
-                let before = ws.model.params();
-                let loss = match &mut ws.model {
-                    AnyModel::Gcn(m) => {
-                        m.train_step_blocks(&blocks, &x0, &mut ws.opt, |lg| {
-                            softmax_cross_entropy(lg, &labels, &nodes)
-                        })
-                        .0
+                let before = ws.model.params_flat();
+                let loss = match &lp_pairs {
+                    None => {
+                        let labels: Vec<u32> =
+                            batch.iter().map(|&v| data.labels[v as usize]).collect();
+                        let nodes: Vec<u32> = (0..batch.len() as u32).collect();
+                        ws.model
+                            .train_step_blocks(&blocks, &x0, &mut ws.opt, &mut |lg| {
+                                softmax_cross_entropy(lg, &labels, &nodes)
+                            })
+                            .0
                     }
-                    AnyModel::Gat(m) => {
-                        m.train_step_blocks(&blocks, &x0, &mut ws.opt, |lg| {
-                            softmax_cross_entropy(lg, &labels, &nodes)
-                        })
-                        .0
+                    Some(pairs) => {
+                        ws.model
+                            .train_step_blocks(&blocks, &x0, &mut ws.opt, &mut |emb| {
+                                TaskHead::lp_loss_grad(emb, pairs)
+                            })
+                            .0
                     }
                 };
                 // Effective gradient = (before - after) / lr.
-                let after = ws.model.params();
+                let after = ws.model.params_flat();
                 let grad: Vec<f32> =
                     before.iter().zip(&after).map(|(b, a)| (b - a) / train.lr).collect();
                 Some((before, grad, t0.elapsed().as_secs_f64(), loss))
@@ -347,19 +359,27 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                     *pi -= train.lr * gi;
                 }
                 for ws in &workers {
-                    ws.lock().unwrap().model.set_params(&p);
+                    ws.lock().unwrap().model.set_params_flat(&p);
                 }
             }
         }
         let loss = if loss_n == 0 { 0.0 } else { loss_sum / loss_n as f32 };
         epochs.push(EpochStats { steps, compute_s, comm_s, quant_s, loss });
     }
-    Ok(MultiGpuReport { epochs, grad_elems })
+    let (cache, cache_bytes) = match store {
+        Some(m) => {
+            let s = m.into_inner().unwrap();
+            (Some(s.stats()), s.cached_bytes())
+        }
+        None => (None, 0),
+    };
+    Ok(MultiGpuReport { epochs, grad_elems, cache, cache_bytes })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ModelKind;
     use crate::graph::datasets;
 
     fn cfg(workers: usize, quantize: bool) -> MultiGpuConfig {
@@ -398,6 +418,8 @@ mod tests {
         assert!(r.total_time() > 0.0);
         // tiny: 160 train nodes over 3 shards, batches of 16 → 4 steps.
         assert!(r.epochs[0].steps >= 4, "{}", r.epochs[0].steps);
+        // FP32: no shared quantized store.
+        assert!(r.cache.is_none());
     }
 
     #[test]
@@ -442,11 +464,37 @@ mod tests {
     }
 
     #[test]
+    fn quantized_run_surfaces_shared_cache_stats() {
+        let data = datasets::tiny(7);
+        let mut c = cfg(2, false);
+        c.train.mode = crate::model::TrainMode::tango(8);
+        let r = run_data_parallel(&c, &data).unwrap();
+        let stats = r.cache.expect("quantized run shares one feature store");
+        assert!(stats.hits + stats.misses > 0, "{stats:?}");
+        assert!(r.cache_bytes > 0);
+    }
+
+    #[test]
+    fn linkpred_trains_data_parallel() {
+        // Edge-sharded LP across 3 workers: finite losses, real steps.
+        let data = datasets::load_by_name("DBLP", 5);
+        let mut c = cfg(3, false);
+        c.train.sampler.batch_size = 512;
+        c.epochs = 2;
+        c.train.epochs = 2;
+        let r = run_data_parallel(&c, &data).unwrap();
+        assert_eq!(r.epochs.len(), 2);
+        assert!(r.epochs[0].steps > 0);
+        assert!(r.epochs.iter().all(|e| e.loss.is_finite()));
+    }
+
+    #[test]
     fn toml_roundtrip_parses_multigpu_section() {
         let text = r#"
 [train]
 model = "gcn"
 dataset = "tiny"
+task = "linkpred"
 fanouts = "6,4"
 batch_size = 32
 sample_seed = 9
@@ -467,6 +515,7 @@ overlap_quantization = false
         assert_eq!(cfg.train.sampler.batch_size, 32);
         assert_eq!(cfg.train.sampler.seed, 9);
         assert_eq!(cfg.train.sampler.cache_nodes, 128);
+        assert_eq!(cfg.train.task, Some(crate::config::TaskKind::LinkPrediction));
         // Booleans validate strictly — a typo must not silently flip the
         // run back to the FP32 baseline.
         let err = MultiGpuConfig::from_toml("[multigpu]\nquantize_grads = 1\n").unwrap_err();

@@ -63,6 +63,18 @@ impl Block {
         Block { src_nodes, num_dst, coo, csr, csr_rev, norm }
     }
 
+    /// The whole parent graph as one *identity* block: every node is both a
+    /// source and a destination (`num_dst == num_src == |V|`) and the edges
+    /// keep their original COO order, so `csr`/`csr_rev`/`norm` are exactly
+    /// the parent's [`Csr::from_coo`]/[`Csr::from_coo_reversed`]/GCN-norm
+    /// layouts. This is what collapses the full-graph training path into
+    /// the block path: a full-graph epoch is a block step whose blocks are
+    /// `layers` copies of the identity block, bit-for-bit.
+    pub fn identity(graph: &Coo, degrees: &[u32]) -> Block {
+        let src_nodes: Vec<u32> = (0..graph.num_nodes as u32).collect();
+        Block::new(src_nodes, graph.num_nodes, graph.src.clone(), graph.dst.clone(), degrees)
+    }
+
     /// Number of source (input) nodes.
     #[inline]
     pub fn num_src(&self) -> usize {
@@ -130,6 +142,25 @@ mod tests {
         assert_eq!(eids, &[0]);
         // Local source 0 (global 10, also a dst) feeds dst 1 via edge 3.
         assert_eq!(b.csr_rev.row(0).0, &[1]);
+    }
+
+    #[test]
+    fn identity_block_reproduces_parent_layouts() {
+        let g = crate::graph::generators::erdos_renyi(12, 30, 3).with_self_loops();
+        let deg = g.in_degrees();
+        let b = Block::identity(&g, &deg);
+        assert_eq!(b.num_src(), g.num_nodes);
+        assert_eq!(b.num_dst, g.num_nodes);
+        assert_eq!(b.num_edges(), g.num_edges());
+        assert_eq!(b.coo, g, "edge order must be the parent COO order");
+        assert_eq!(b.csr, Csr::from_coo(&g));
+        assert_eq!(b.csr_rev, Csr::from_coo_reversed(&g));
+        // Norms match the full-graph GCN formula edge for edge.
+        for e in 0..g.num_edges() {
+            let du = deg[g.src[e] as usize].max(1) as f32;
+            let dv = deg[g.dst[e] as usize].max(1) as f32;
+            assert_eq!(b.norm[e], 1.0 / (du * dv).sqrt());
+        }
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Edge-seeded mini-batches for sampled link-prediction training.
+//!
+//! Node-classification batches seed the layered sampler with *nodes*; link
+//! prediction seeds it with *edges*: a batch of positive edges is drawn,
+//! one uniform negative pair is sampled per positive (seeded, so every
+//! worker replays the same candidates), and the fanout sampler is seeded
+//! from the union of all candidate endpoints. The batch's positive edges
+//! are excluded from the sampled message edges in **both** directions
+//! (the datasets add reverse edges) via
+//! [`NeighborSampler::sample_blocks_excluding`] — otherwise the model
+//! could read each training edge's existence straight off its own message,
+//! the classic LP leakage bug.
+//!
+//! The final block's destination rows are exactly [`EdgeBatch::seeds`], and
+//! [`EdgeBatch::pairs`] index into those rows — the layout
+//! [`TaskHead::lp_loss_grad`](crate::model::TaskHead::lp_loss_grad)
+//! consumes.
+
+use super::{Block, NeighborSampler};
+use crate::graph::{Coo, Csr};
+use crate::quant::rng::{mix_seeds, Xoshiro256pp};
+use std::collections::{HashMap, HashSet};
+
+/// The canonical positive-edge set of a graph, batched for LP training.
+///
+/// Canonicalisation keeps one `(u, v)` with `u < v` per undirected pair —
+/// reverse duplicates collapse and self-loops (degenerate positives) drop —
+/// preserving first-occurrence order so edge ids are stable and shardable.
+#[derive(Debug, Clone)]
+pub struct EdgeBatcher {
+    /// Canonical positive edges, indexed by edge id.
+    edges: Vec<(u32, u32)>,
+    /// Parent-graph node count (bounds negative sampling).
+    num_nodes: usize,
+}
+
+/// One assembled LP mini-batch.
+#[derive(Debug, Clone)]
+pub struct EdgeBatch {
+    /// Distinct candidate endpoints in first-seen order — the seed list for
+    /// the layered sampler; the final block's destinations equal this.
+    pub seeds: Vec<u32>,
+    /// Candidate pairs `(u, v, target)` with `u`/`v` **local** indices into
+    /// [`EdgeBatch::seeds`]: positives (target 1.0) first, then the seeded
+    /// uniform negatives (target 0.0).
+    pub pairs: Vec<(u32, u32, f32)>,
+    /// Global `(src, dst)` pairs of the batch's positive edges, both
+    /// directions — pass to
+    /// [`sample_blocks_excluding`](super::NeighborSampler::sample_blocks_excluding).
+    pub exclude: HashSet<(u32, u32)>,
+}
+
+impl EdgeBatcher {
+    /// Collect the canonical positive edges of a graph.
+    pub fn new(graph: &Coo) -> Self {
+        let mut seen = HashSet::with_capacity(graph.num_edges());
+        let mut edges = Vec::new();
+        for e in 0..graph.num_edges() {
+            let (u, v) = (graph.src[e], graph.dst[e]);
+            if u == v {
+                continue; // self-loops are structural, not positives
+            }
+            let key = if u < v { (u, v) } else { (v, u) };
+            if seen.insert(key) {
+                edges.push(key);
+            }
+        }
+        EdgeBatcher { edges, num_nodes: graph.num_nodes }
+    }
+
+    /// Number of canonical positive edges.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// All edge ids in canonical order — feed to
+    /// [`shuffled_batches`](super::shuffled_batches) for the epoch sweep,
+    /// or to a partitioner for multi-worker shards.
+    pub fn edge_ids(&self) -> Vec<u32> {
+        (0..self.edges.len() as u32).collect()
+    }
+
+    /// The canonical edge behind an id.
+    pub fn edge(&self, id: u32) -> (u32, u32) {
+        self.edges[id as usize]
+    }
+
+    /// Assemble one mini-batch from positive-edge ids: compacts endpoints
+    /// into a seed list, draws `neg_per_pos` uniform negative pairs per
+    /// positive from a `seed`ed stream, and builds the leakage-exclusion
+    /// set (both directions of every positive).
+    pub fn batch(&self, ids: &[u32], neg_per_pos: usize, seed: u64) -> EdgeBatch {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut seeds: Vec<u32> = Vec::with_capacity(2 * ids.len());
+        let mut local_of: HashMap<u32, u32> = HashMap::with_capacity(2 * ids.len());
+        let mut intern = |v: u32, seeds: &mut Vec<u32>, local_of: &mut HashMap<u32, u32>| -> u32 {
+            *local_of.entry(v).or_insert_with(|| {
+                seeds.push(v);
+                (seeds.len() - 1) as u32
+            })
+        };
+        let mut pairs: Vec<(u32, u32, f32)> = Vec::with_capacity(ids.len() * (1 + neg_per_pos));
+        let mut exclude: HashSet<(u32, u32)> = HashSet::with_capacity(2 * ids.len());
+        for &id in ids {
+            let (u, v) = self.edges[id as usize];
+            let lu = intern(u, &mut seeds, &mut local_of);
+            let lv = intern(v, &mut seeds, &mut local_of);
+            pairs.push((lu, lv, 1.0));
+            exclude.insert((u, v));
+            exclude.insert((v, u));
+        }
+        let n = self.num_nodes as u64;
+        for _ in 0..ids.len() {
+            for _ in 0..neg_per_pos {
+                let a = (rng.next_u64() % n) as u32;
+                let b = (rng.next_u64() % n) as u32;
+                let la = intern(a, &mut seeds, &mut local_of);
+                let lb = intern(b, &mut seeds, &mut local_of);
+                pairs.push((la, lb, 0.0));
+            }
+        }
+        EdgeBatch { seeds, pairs, exclude }
+    }
+}
+
+/// Assemble one sampled link-prediction step: batch the positive-edge ids
+/// (seeded uniform negatives included), then sample the edge-seeded blocks
+/// with the leakage-exclusion set applied. Returns the blocks plus the
+/// local-id candidate pairs for
+/// [`TaskHead::lp_loss_grad`](crate::model::TaskHead::lp_loss_grad).
+///
+/// This is **the** LP step assembly: `MiniBatchTrainer` and the multi-GPU
+/// workers both call it, so the negative-draw seeding
+/// (`mix_seeds([sampler.seed, stream])`) and the exclusion behaviour cannot
+/// drift between the engines — the 1-worker step-for-step replay guarantee
+/// (`tests/multigpu_equivalence.rs`) rides on this single definition.
+pub fn sample_lp_step(
+    batcher: &EdgeBatcher,
+    sampler: &NeighborSampler,
+    csr_in: &Csr,
+    degrees: &[u32],
+    batch: &[u32],
+    stream: u64,
+    neg_per_pos: usize,
+) -> (Vec<Block>, Vec<(u32, u32, f32)>) {
+    let eb = batcher.batch(batch, neg_per_pos, mix_seeds(&[sampler.seed, stream]));
+    let blocks = sampler.sample_blocks_excluding(csr_in, degrees, &eb.seeds, stream, &eb.exclude);
+    (blocks, eb.pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    fn batcher() -> (datasets::Dataset, EdgeBatcher) {
+        let d = datasets::tiny(5);
+        let b = EdgeBatcher::new(&d.graph);
+        (d, b)
+    }
+
+    #[test]
+    fn canonical_edges_are_unique_ordered_and_loop_free() {
+        let (d, b) = batcher();
+        assert!(b.num_edges() > 0);
+        let mut seen = HashSet::new();
+        for id in b.edge_ids() {
+            let (u, v) = b.edge(id);
+            assert!(u < v, "({u},{v}) must be canonical");
+            assert!(seen.insert((u, v)), "duplicate canonical edge");
+        }
+        // Every canonical edge is a real parent edge (in some direction).
+        let parent: HashSet<(u32, u32)> =
+            (0..d.graph.num_edges()).map(|e| (d.graph.src[e], d.graph.dst[e])).collect();
+        for &(u, v) in &b.edges {
+            assert!(parent.contains(&(u, v)) || parent.contains(&(v, u)));
+        }
+    }
+
+    #[test]
+    fn batch_compacts_endpoints_and_builds_exclusions() {
+        let (_, b) = batcher();
+        let ids: Vec<u32> = b.edge_ids().into_iter().take(8).collect();
+        let eb = b.batch(&ids, 1, 99);
+        // Positives first, then one negative per positive.
+        assert_eq!(eb.pairs.len(), 16);
+        assert!(eb.pairs[..8].iter().all(|p| p.2 == 1.0));
+        assert!(eb.pairs[8..].iter().all(|p| p.2 == 0.0));
+        // Seeds distinct; pair ids in range and mapping back to the edges.
+        let distinct: HashSet<u32> = eb.seeds.iter().copied().collect();
+        assert_eq!(distinct.len(), eb.seeds.len());
+        for (k, &id) in ids.iter().enumerate() {
+            let (u, v) = b.edge(id);
+            let (lu, lv, _) = eb.pairs[k];
+            assert_eq!(eb.seeds[lu as usize], u);
+            assert_eq!(eb.seeds[lv as usize], v);
+            assert!(eb.exclude.contains(&(u, v)) && eb.exclude.contains(&(v, u)));
+        }
+        assert_eq!(eb.exclude.len(), 2 * ids.len());
+        for &(lu, lv, _) in &eb.pairs {
+            assert!((lu as usize) < eb.seeds.len() && (lv as usize) < eb.seeds.len());
+        }
+    }
+
+    #[test]
+    fn batches_are_seeded_deterministic() {
+        let (_, b) = batcher();
+        let ids: Vec<u32> = b.edge_ids().into_iter().take(5).collect();
+        let x = b.batch(&ids, 2, 7);
+        let y = b.batch(&ids, 2, 7);
+        assert_eq!(x.seeds, y.seeds);
+        assert_eq!(x.pairs, y.pairs);
+        // A different seed redraws the negatives.
+        let z = b.batch(&ids, 2, 8);
+        assert_ne!(x.pairs, z.pairs);
+    }
+}

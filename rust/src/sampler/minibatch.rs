@@ -5,34 +5,50 @@
 //! produces the same [`TrainReport`] so the CLI, benches and repro drivers
 //! treat both execution modes uniformly. `Trainer::run` delegates here when
 //! `TrainConfig::sampler.enabled` is set.
+//!
+//! Both task heads are served:
+//!
+//! - **node classification** — batches are shuffled train-node sweeps, the
+//!   sampler is seeded from the batch nodes, loss is softmax-CE over the
+//!   seed rows;
+//! - **link prediction** — batches are shuffled sweeps over the graph's
+//!   canonical positive edges ([`EdgeBatcher`]); each batch adds seeded
+//!   uniform negatives, seeds the sampler from the candidate endpoints and
+//!   **excludes the positive edges from the sampled message edges** (the
+//!   leakage guard), then scores pairs with the dot-product
+//!   [`TaskHead`] decoder under BCE-with-logits.
 
-use super::{adjust_fanouts, gather_rows, shuffled_batches, NeighborSampler, QuantFeatureStore};
-use crate::config::{ModelKind, TrainConfig};
+use super::{
+    adjust_fanouts, gather_rows, sample_lp_step, shuffled_batches, EdgeBatcher,
+    NeighborSampler, QuantFeatureStore,
+};
+use crate::config::{TaskKind, TrainConfig};
 use crate::coordinator::qcache::CacheStats;
 use crate::coordinator::TrainReport;
 use crate::graph::datasets::{self, Dataset, Task};
 use crate::graph::Csr;
 use crate::model::{
-    accuracy, softmax_cross_entropy, GatConfig, GatModel, GcnConfig, GcnModel, Sgd, TrainMode,
+    softmax_cross_entropy, AnyModel, GnnModel, ModelSpec, Sgd, TaskHead, TrainMode,
 };
 use crate::quant::rng::mix_seeds;
 use crate::quant::{derive_bits, DEFAULT_ERROR_TARGET};
+use crate::tensor::Dense;
 
-/// The model under sampled training.
-enum AnyModel {
-    Gcn(GcnModel),
-    Gat(GatModel),
-}
-
-/// Mini-batch neighbor-sampling trainer (node classification).
+/// Mini-batch neighbor-sampling trainer (node classification *and* link
+/// prediction — see the module docs).
 pub struct MiniBatchTrainer {
     cfg: TrainConfig,
     data: Dataset,
+    /// Effective task (config override or the dataset's declared task).
+    task: Task,
+    head: TaskHead,
     model: AnyModel,
     opt: Sgd,
     sampler: NeighborSampler,
     csr_in: Csr,
     degrees: Vec<u32>,
+    /// Canonical positive edges (LP runs only).
+    edges: Option<EdgeBatcher>,
     /// Quantized feature store (None when the mode is full-precision).
     store: Option<QuantFeatureStore>,
 }
@@ -51,26 +67,16 @@ impl MiniBatchTrainer {
 
     /// Build with an externally supplied dataset.
     pub fn with_dataset(mut cfg: TrainConfig, data: Dataset) -> crate::Result<Self> {
-        if data.task != Task::NodeClassification {
-            anyhow::bail!(
-                "neighbor-sampled training supports node classification only ({} is {:?})",
-                data.name,
-                data.task
-            );
-        }
-        if cfg.sampler.batch_size == 0 {
-            anyhow::bail!("sampler batch_size must be >= 1");
-        }
-        let out_dim = data.num_classes;
+        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        let task = TaskKind::resolve(cfg.task, data.task);
+        let head = TaskHead::for_task(task);
+        let out_dim = head.out_dim(&data, cfg.hidden);
         // Same Fig. 2 rule as the full-graph trainer: probe the first
         // layer's output of the initial model on the full graph.
         if cfg.auto_bits && cfg.mode.quantize {
             let probe = Self::build_model(&cfg, &data, out_dim);
-            let first = match &probe {
-                AnyModel::Gcn(m) => m.first_layer_output(&data.features),
-                AnyModel::Gat(m) => m.first_layer_output(&data.features),
-            };
-            cfg.mode.bits = derive_bits(&first, DEFAULT_ERROR_TARGET).bits;
+            cfg.mode.bits =
+                derive_bits(&probe.first_layer_output(&data.features), DEFAULT_ERROR_TARGET).bits;
         }
         let model = Self::build_model(&cfg, &data, out_dim);
         let fanouts = adjust_fanouts(&cfg.sampler.fanouts, cfg.layers);
@@ -80,6 +86,10 @@ impl MiniBatchTrainer {
             NeighborSampler::new(fanouts, mix_seeds(&[cfg.sampler.seed, cfg.seed, 0]));
         let csr_in = Csr::from_coo(&data.graph);
         let degrees = data.graph.in_degrees();
+        let edges = match task {
+            Task::LinkPrediction => Some(EdgeBatcher::new(&data.graph)),
+            Task::NodeClassification => None,
+        };
         let store = if cfg.mode.quantize {
             Some(QuantFeatureStore::with_capacity(
                 &data.features,
@@ -90,40 +100,37 @@ impl MiniBatchTrainer {
             None
         };
         let opt = Sgd::new(cfg.lr);
-        Ok(MiniBatchTrainer { cfg, data, model, opt, sampler, csr_in, degrees, store })
+        Ok(MiniBatchTrainer {
+            cfg,
+            data,
+            task,
+            head,
+            model,
+            opt,
+            sampler,
+            csr_in,
+            degrees,
+            edges,
+            store,
+        })
     }
 
     fn build_model(cfg: &TrainConfig, data: &Dataset, out_dim: usize) -> AnyModel {
-        match cfg.model {
-            ModelKind::Gcn => AnyModel::Gcn(GcnModel::new(
-                GcnConfig {
-                    in_dim: data.features.cols(),
-                    hidden: cfg.hidden,
-                    out_dim,
-                    layers: cfg.layers,
-                    mode: cfg.mode,
-                },
-                &data.graph,
-                cfg.seed,
-            )),
-            ModelKind::Gat => AnyModel::Gat(GatModel::new(
-                GatConfig {
-                    in_dim: data.features.cols(),
-                    hidden: cfg.hidden,
-                    out_dim,
-                    heads: cfg.heads,
-                    layers: cfg.layers,
-                    mode: cfg.mode,
-                },
-                &data.graph,
-                cfg.seed,
-            )),
-        }
+        AnyModel::new_from_config(
+            &ModelSpec::from_train(cfg, data.features.cols(), out_dim),
+            &data.graph,
+            cfg.seed,
+        )
     }
 
     /// The dataset being trained on.
     pub fn dataset(&self) -> &Dataset {
         &self.data
+    }
+
+    /// The effective task of this run.
+    pub fn task(&self) -> Task {
+        self.task
     }
 
     /// The effective mode (bits may have been auto-derived).
@@ -140,10 +147,7 @@ impl MiniBatchTrainer {
     /// `params_flat`) — lets `coordinator::Trainer` adopt the weights after
     /// a delegated sampled run.
     pub fn params_flat(&self) -> Vec<f32> {
-        match &self.model {
-            AnyModel::Gcn(m) => m.params_flat(),
-            AnyModel::Gat(m) => m.params_flat(),
-        }
+        self.model.params_flat()
     }
 
     /// Quantized feature-gather cache statistics (None in FP32 mode).
@@ -157,7 +161,8 @@ impl MiniBatchTrainer {
     }
 
     /// Run the configured number of epochs; every epoch sweeps all training
-    /// nodes once in shuffled mini-batches.
+    /// seeds (nodes for NC, canonical positive edges for LP) once in
+    /// shuffled mini-batches.
     pub fn run(&mut self) -> crate::Result<TrainReport> {
         let mut losses = Vec::with_capacity(self.cfg.epochs);
         let mut evals = Vec::with_capacity(self.cfg.epochs);
@@ -188,12 +193,30 @@ impl MiniBatchTrainer {
             wall_secs: wall,
             bits: self.cfg.mode.bits,
             epochs_to_converge,
+            cache: self.gather_stats(),
+            cache_bytes: self.gather_cached_bytes(),
         })
+    }
+
+    /// Gather the input features for a block frontier (quantized when the
+    /// mode quantizes).
+    fn gather_x0(&mut self, input_nodes: &[u32]) -> Dense<f32> {
+        match &mut self.store {
+            Some(store) => store.gather_dequantized(&self.data.features, input_nodes),
+            None => gather_rows(&self.data.features, input_nodes),
+        }
     }
 
     /// One epoch: sample, gather, step per batch. Returns the mean batch
     /// loss.
     fn train_epoch(&mut self, epoch: u64) -> f32 {
+        match self.task {
+            Task::NodeClassification => self.train_epoch_nc(epoch),
+            Task::LinkPrediction => self.train_epoch_lp(epoch),
+        }
+    }
+
+    fn train_epoch_nc(&mut self, epoch: u64) -> f32 {
         let batches = shuffled_batches(
             &self.data.train_nodes,
             self.cfg.sampler.batch_size,
@@ -214,21 +237,58 @@ impl MiniBatchTrainer {
             };
             let labels: Vec<u32> = batch.iter().map(|&v| self.data.labels[v as usize]).collect();
             let nodes: Vec<u32> = (0..batch.len() as u32).collect();
-            let opt = &mut self.opt;
-            let loss = match &mut self.model {
-                AnyModel::Gcn(m) => {
-                    m.train_step_blocks(&blocks, &x0, opt, |lg| {
-                        softmax_cross_entropy(lg, &labels, &nodes)
-                    })
-                    .0
-                }
-                AnyModel::Gat(m) => {
-                    m.train_step_blocks(&blocks, &x0, opt, |lg| {
-                        softmax_cross_entropy(lg, &labels, &nodes)
-                    })
-                    .0
-                }
-            };
+            let loss = self
+                .model
+                .train_step_blocks(&blocks, &x0, &mut self.opt, &mut |lg| {
+                    softmax_cross_entropy(lg, &labels, &nodes)
+                })
+                .0;
+            total += loss;
+            steps += 1;
+        }
+        if steps == 0 {
+            0.0
+        } else {
+            total / steps as f32
+        }
+    }
+
+    /// LP epoch: shuffled sweep over the canonical positive edges;
+    /// edge-seeded blocks with seed-edge exclusion. The per-batch assembly
+    /// is [`sample_lp_step`] — shared verbatim with the multi-GPU workers,
+    /// which is what keeps the 1-worker replay exact.
+    fn train_epoch_lp(&mut self, epoch: u64) -> f32 {
+        let neg_per_pos = self.head.neg_per_pos();
+        let ids = self.edges.as_ref().expect("LP task has an EdgeBatcher").edge_ids();
+        let batches = shuffled_batches(
+            &ids,
+            self.cfg.sampler.batch_size,
+            mix_seeds(&[self.cfg.seed, epoch]),
+        );
+        let mut total = 0.0f32;
+        let mut steps = 0usize;
+        for (bi, batch) in batches.iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let stream = mix_seeds(&[epoch, bi as u64]);
+            let (blocks, pairs) = sample_lp_step(
+                self.edges.as_ref().expect("LP task has an EdgeBatcher"),
+                &self.sampler,
+                &self.csr_in,
+                &self.degrees,
+                batch,
+                stream,
+                neg_per_pos,
+            );
+            let input_nodes = blocks[0].src_nodes.clone();
+            let x0 = self.gather_x0(&input_nodes);
+            let loss = self
+                .model
+                .train_step_blocks(&blocks, &x0, &mut self.opt, &mut |emb| {
+                    TaskHead::lp_loss_grad(emb, &pairs)
+                })
+                .0;
             total += loss;
             steps += 1;
         }
@@ -242,18 +302,15 @@ impl MiniBatchTrainer {
     /// Full-graph evaluation on the held-out split (the model is bound to
     /// the whole graph; only *training* runs on sampled blocks).
     pub fn evaluate(&self) -> f32 {
-        let out = match &self.model {
-            AnyModel::Gcn(m) => m.forward(&self.data.features),
-            AnyModel::Gat(m) => m.forward(&self.data.features),
-        };
-        accuracy(&out, &self.data.labels, &self.data.eval_nodes)
+        let out = self.model.forward(&self.data.features);
+        self.head.evaluate(&out, &self.data, self.cfg.seed)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{parse_mode, SamplerConfig};
+    use crate::config::{parse_mode, ModelKind, SamplerConfig};
 
     fn mb_cfg(model: ModelKind, mode: &str, epochs: usize) -> TrainConfig {
         TrainConfig {
@@ -275,6 +332,7 @@ mod tests {
                 seed: 0x5A17,
                 cache_nodes: 0,
             },
+            ..Default::default()
         }
     }
 
@@ -285,10 +343,13 @@ mod tests {
         assert_eq!(r.losses.len(), 30);
         assert!(r.losses[29] < r.losses[0], "{:?}", r.losses);
         assert!(r.final_eval > 0.3, "eval {}", r.final_eval);
-        // Quantized gather must have seen real cache traffic.
+        // Quantized gather must have seen real cache traffic — and the
+        // report must surface it.
         let stats = t.gather_stats().expect("quantized mode has a store");
         assert!(stats.hits > 0, "hot nodes should hit the feature cache");
         assert!(t.gather_cached_bytes() > 0);
+        assert_eq!(r.cache, Some(stats));
+        assert_eq!(r.cache_bytes, t.gather_cached_bytes());
     }
 
     #[test]
@@ -310,6 +371,7 @@ mod tests {
         assert!(stats.evictions > 0, "tiny's 160 train nodes must overflow 32 slots");
         // tiny's feat_dim is 16 → at most 32 rows of 16 bytes live at once.
         assert!(t.gather_cached_bytes() <= 32 * 16, "{}", t.gather_cached_bytes());
+        assert!(r.cache.unwrap().evictions > 0, "report surfaces evictions");
     }
 
     #[test]
@@ -318,6 +380,7 @@ mod tests {
         assert!(t.gather_stats().is_none());
         let r = t.run().unwrap();
         assert!(r.losses.last().unwrap() < &r.losses[0]);
+        assert!(r.cache.is_none());
     }
 
     #[test]
@@ -335,13 +398,33 @@ mod tests {
     }
 
     #[test]
-    fn rejects_link_prediction_datasets() {
-        let mut cfg = mb_cfg(ModelKind::Gcn, "fp32", 1);
+    fn linkpred_dataset_trains_on_edge_seeded_blocks() {
+        // The LP dataset's declared task routes through the edge-seeded
+        // path: finite losses, AUC in range, and a real downward trend on
+        // the topology-only objective.
+        let mut cfg = mb_cfg(ModelKind::Gcn, "tango", 6);
         cfg.dataset = "DBLP".into();
-        match MiniBatchTrainer::from_config(&cfg) {
-            Err(e) => assert!(e.to_string().contains("node classification"), "{e}"),
-            Ok(_) => panic!("LP dataset must be rejected"),
-        }
+        cfg.hidden = 8;
+        cfg.sampler.batch_size = 512;
+        cfg.sampler.fanouts = vec![5, 5];
+        let mut t = MiniBatchTrainer::from_config(&cfg).unwrap();
+        assert_eq!(t.task(), Task::LinkPrediction);
+        let r = t.run().unwrap();
+        assert_eq!(r.losses.len(), 6);
+        assert!(r.losses.iter().all(|l| l.is_finite()), "{:?}", r.losses);
+        assert!(r.losses.last().unwrap() < &r.losses[0], "{:?}", r.losses);
+        assert!(r.final_eval > 0.0 && r.final_eval <= 1.0, "AUC {}", r.final_eval);
+    }
+
+    #[test]
+    fn task_override_runs_linkpred_on_nc_graph() {
+        let mut cfg = mb_cfg(ModelKind::Gcn, "fp32", 5);
+        cfg.task = Some(TaskKind::LinkPrediction);
+        let mut t = MiniBatchTrainer::from_config(&cfg).unwrap();
+        assert_eq!(t.task(), Task::LinkPrediction);
+        let r = t.run().unwrap();
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        assert!(r.final_eval > 0.0 && r.final_eval <= 1.0);
     }
 
     #[test]
@@ -352,5 +435,12 @@ mod tests {
             t.run().unwrap().losses
         };
         assert_eq!(run(), run());
+        // LP path too (negative draws and exclusion are seeded).
+        let run_lp = || {
+            let mut cfg = mb_cfg(ModelKind::Gcn, "fp32", 3);
+            cfg.task = Some(TaskKind::LinkPrediction);
+            MiniBatchTrainer::from_config(&cfg).unwrap().run().unwrap().losses
+        };
+        assert_eq!(run_lp(), run_lp());
     }
 }

@@ -8,30 +8,38 @@
 //!
 //! - [`NeighborSampler`] — layered uniform neighbor sampling with per-layer
 //!   fanouts over the in-edge CSR (DGL `MultiLayerNeighborSampler` shape),
-//!   plus [`shuffled_batches`] for the seeded epoch sweep;
+//!   plus [`shuffled_batches`] for the seeded epoch sweep and
+//!   [`NeighborSampler::sample_blocks_excluding`] for edge-exclusion
+//!   (the LP leakage guard);
 //! - [`Block`] — MFG-style bipartite blocks with compacted node ids,
 //!   destination-prefix invariant, per-layer COO/CSR/reversed-CSR layouts
 //!   and parent-degree GCN edge norms (built on
 //!   [`Csr::from_grouped_edges`](crate::graph::Csr::from_grouped_edges));
+//!   [`Block::identity`] wraps the whole graph as one block — the
+//!   full-graph training path is the block path run over identity blocks;
+//! - [`EdgeBatcher`] — edge-seeded batches for sampled link prediction:
+//!   canonical positive edges, seeded uniform negatives, endpoint seed
+//!   lists and the per-batch exclusion set;
 //! - [`QuantFeatureStore`] / [`gather_rows`] — the per-batch feature
 //!   gather; the quantized path slices INT8 rows under one shared scale and
 //!   caches hot (frequently re-sampled) nodes in a
 //!   [`QuantCache`](crate::coordinator::QuantCache);
-//! - [`MiniBatchTrainer`] — the epoch engine gluing it all to the
-//!   block-aware GCN/GAT forward/backward
-//!   ([`GcnModel::train_step_blocks`](crate::model::GcnModel::train_step_blocks),
-//!   [`GatModel::train_step_blocks`](crate::model::GatModel::train_step_blocks));
-//!   `coordinator::Trainer` delegates here when
-//!   `TrainConfig::sampler.enabled` is set, so
+//! - [`MiniBatchTrainer`] — the epoch engine gluing it all to the unified
+//!   [`GnnModel`](crate::model::GnnModel) block path for **both** tasks
+//!   (node classification and link prediction, see
+//!   [`TaskHead`](crate::model::TaskHead)); `coordinator::Trainer`
+//!   delegates here when `TrainConfig::sampler.enabled` is set, so
 //!   `tango train --sampler neighbor --fanouts 10,10 --batch-size 512`
-//!   runs end to end.
+//!   and `tango train --sampler neighbor --task linkpred` run end to end.
 
 mod block;
+mod edge;
 mod gather;
 mod minibatch;
 mod neighbor;
 
 pub use block::Block;
+pub use edge::{sample_lp_step, EdgeBatch, EdgeBatcher};
 pub use gather::{gather_rows, QuantFeatureStore};
 pub use minibatch::MiniBatchTrainer;
 pub use neighbor::{adjust_fanouts, shuffled_batches, NeighborSampler};

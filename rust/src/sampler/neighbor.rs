@@ -11,7 +11,7 @@
 use super::Block;
 use crate::graph::Csr;
 use crate::quant::rng::Xoshiro256pp;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// Layered uniform neighbor sampler with per-layer fanouts.
 #[derive(Debug, Clone)]
@@ -46,7 +46,31 @@ impl NeighborSampler {
         seeds: &[u32],
         stream: u64,
     ) -> Vec<Block> {
+        self.sample_blocks_excluding(csr_in, degrees, seeds, stream, &HashSet::new())
+    }
+
+    /// Like [`Self::sample_blocks`], but never samples an in-edge `u -> v`
+    /// whose **global** `(u, v)` pair is in `exclude`.
+    ///
+    /// This is the link-prediction leakage guard: the positive edges a
+    /// batch trains on are excluded (in both directions — the datasets add
+    /// reverse edges) from every layer's message edges, so the model cannot
+    /// read an edge's existence off the very message it is asked to
+    /// predict. With an empty `exclude` set the rng draw sequence is
+    /// identical to [`Self::sample_blocks`] — the two entry points cannot
+    /// drift.
+    pub fn sample_blocks_excluding(
+        &self,
+        csr_in: &Csr,
+        degrees: &[u32],
+        seeds: &[u32],
+        stream: u64,
+        exclude: &HashSet<(u32, u32)>,
+    ) -> Vec<Block> {
         let mut rng = Xoshiro256pp::new(self.seed ^ stream.wrapping_mul(0x9E3779B97F4A7C15));
+        // Destinations that actually have an excluded in-edge — every other
+        // frontier node takes the allocation-free fast path below.
+        let excluded_dst: HashSet<u32> = exclude.iter().map(|&(_, v)| v).collect();
         let layers = self.fanouts.len();
         let mut blocks: Vec<Block> = Vec::with_capacity(layers);
         let mut frontier: Vec<u32> = seeds.to_vec();
@@ -61,7 +85,24 @@ impl NeighborSampler {
             let mut src_local: Vec<u32> = Vec::new();
             let mut dst_local: Vec<u32> = Vec::new();
             for (dv, &v) in frontier.iter().enumerate() {
-                let (nbrs, _eids) = csr_in.row(v as usize);
+                let (all_nbrs, _eids) = csr_in.row(v as usize);
+                // Drop excluded seed edges *before* drawing, so the fanout
+                // budget is spent on admissible neighbours only. Nodes with
+                // no excluded in-edge keep the unfiltered slice — no
+                // allocation, and the rng stream is unchanged (draws depend
+                // only on the admissible count, which filtering to the same
+                // list preserves).
+                let filtered: Vec<u32>;
+                let nbrs: &[u32] = if !excluded_dst.contains(&v) {
+                    all_nbrs
+                } else {
+                    filtered = all_nbrs
+                        .iter()
+                        .copied()
+                        .filter(|&u| !exclude.contains(&(u, v)))
+                        .collect();
+                    &filtered
+                };
                 let take = fanout.min(nbrs.len());
                 if take == 0 {
                     continue;
@@ -188,6 +229,41 @@ mod tests {
         let blocks = s.sample_blocks(&csr, &deg, &seeds, 2);
         assert_eq!(blocks[0].num_edges(), coo.num_edges());
         assert_eq!(blocks[0].num_src(), coo.num_nodes);
+    }
+
+    #[test]
+    fn exclusion_removes_edges_and_empty_set_is_identity() {
+        let (_, csr, deg) = parent();
+        let s = NeighborSampler::new(vec![1 << 30, 1 << 30], 3);
+        let seeds: Vec<u32> = vec![2, 7, 11];
+        // Empty set: bit-identical to the plain entry point.
+        let a = s.sample_blocks(&csr, &deg, &seeds, 5);
+        let b = s.sample_blocks_excluding(&csr, &deg, &seeds, 5, &HashSet::new());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.src_nodes, y.src_nodes);
+            assert_eq!(x.coo, y.coo);
+        }
+        // Exclude every in-edge of seed 2 except its self-loop; no block may
+        // contain an excluded pair.
+        let mut exclude = HashSet::new();
+        let (nbrs, _) = csr.row(2);
+        for &u in nbrs {
+            if u != 2 {
+                exclude.insert((u, 2u32));
+            }
+        }
+        let blocks = s.sample_blocks_excluding(&csr, &deg, &seeds, 5, &exclude);
+        for blk in &blocks {
+            for e in 0..blk.num_edges() {
+                let gu = blk.src_nodes[blk.coo.src[e] as usize];
+                let gv = blk.src_nodes[blk.coo.dst[e] as usize];
+                assert!(!exclude.contains(&(gu, gv)), "excluded edge ({gu},{gv}) sampled");
+            }
+        }
+        // The self-loop keeps seed 2 reachable.
+        let last = blocks.last().unwrap();
+        let d2 = last.dst_nodes().iter().position(|&v| v == 2).unwrap();
+        assert!(last.csr.row(d2).0.iter().any(|&u| last.src_nodes[u as usize] == 2));
     }
 
     #[test]

@@ -1,0 +1,220 @@
+//! Golden-value guard for the full-graph → identity-block collapse.
+//!
+//! The `GnnModel` refactor deleted the models' dedicated full-graph
+//! forward/backward and replaced it with the block path over identity
+//! blocks. This test pins the numerics to the **pre-refactor
+//! implementation**: `RefGcn` below is a line-for-line copy of the old
+//! full-graph GCN step (static build-time quantized edge norms, the same
+//! stochastic-rounding stream ids, the same primitive calls in the same
+//! order). The quickstart `Trainer` losses must match it bit for bit —
+//! in FP32 *and* Tango mode — so the refactor provably changed no NC
+//! training trajectory.
+
+use tango::config::TrainConfig;
+use tango::coordinator::Trainer;
+use tango::graph::datasets;
+use tango::graph::{Coo, Csr};
+use tango::model::{softmax_cross_entropy, Sgd, TrainMode};
+use tango::primitives::{
+    gemm_f32, qgemm, qgemm_prequantized, qspmm_edge_weighted, spmm_csr_values,
+};
+use tango::quant::rng::Xoshiro256pp;
+use tango::quant::{quantize, QTensor, Rounding};
+use tango::tensor::Dense;
+
+/// The pre-refactor full-graph GCN (FP32 + Tango arms only — what the NC
+/// quickstart exercises). Kept verbatim as the golden reference.
+struct RefGcn {
+    mode: TrainMode,
+    layers_w: Vec<Dense<f32>>,
+    layers_gw: Vec<Dense<f32>>,
+    csr: Csr,
+    csr_rev: Csr,
+    norm: Vec<f32>,
+    /// Static quantized edge norms (quantized once at build — the old
+    /// full-graph behaviour).
+    qnorm: QTensor,
+    step_count: u64,
+}
+
+struct RefCache {
+    x: Dense<f32>,
+    z: Dense<f32>,
+    qx: Option<QTensor>,
+    qw: Option<QTensor>,
+}
+
+impl RefGcn {
+    fn new(
+        in_dim: usize,
+        hidden: usize,
+        out_dim: usize,
+        mode: TrainMode,
+        graph: &Coo,
+        seed: u64,
+    ) -> Self {
+        let csr = Csr::from_coo(graph);
+        let csr_rev = Csr::from_coo_reversed(graph);
+        let deg = graph.in_degrees();
+        let mut norm = vec![0.0f32; graph.num_edges()];
+        for e in 0..graph.num_edges() {
+            let du = deg[graph.src[e] as usize].max(1) as f32;
+            let dv = deg[graph.dst[e] as usize].max(1) as f32;
+            norm[e] = 1.0 / (du * dv).sqrt();
+        }
+        let qnorm = quantize(
+            &Dense::from_vec(&[norm.len(), 1], norm.clone()),
+            mode.bits,
+            Rounding::Nearest,
+        );
+        // Glorot init with the exact same rng stream as GcnModel::new.
+        let mut rng = Xoshiro256pp::new(seed);
+        let dims = [in_dim, hidden, out_dim];
+        let mut layers_w = Vec::new();
+        let mut layers_gw = Vec::new();
+        for l in 0..2 {
+            let (fan_in, fan_out) = (dims[l], dims[l + 1]);
+            let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
+            let data: Vec<f32> =
+                (0..fan_in * fan_out).map(|_| (rng.next_f32() * 2.0 - 1.0) * limit).collect();
+            layers_w.push(Dense::from_vec(&[fan_in, fan_out], data));
+            layers_gw.push(Dense::zeros(&[fan_in, fan_out]));
+        }
+        RefGcn { mode, layers_w, layers_gw, csr, csr_rev, norm, qnorm, step_count: 0 }
+    }
+
+    fn layer_quantized(&self, l: usize) -> bool {
+        self.mode.quantize && (l + 1 < 2 || !self.mode.fp32_pre_softmax)
+    }
+
+    fn forward_cached(&self, features: &Dense<f32>) -> (Dense<f32>, Vec<RefCache>) {
+        let mode = self.mode;
+        let mut caches = Vec::new();
+        let mut x = features.clone();
+        for l in 0..2 {
+            let w = &self.layers_w[l];
+            let (xw, qx, qw) = if self.layer_quantized(l) {
+                let r = qgemm(&x, w, mode.bits, mode.rounding(self.step_count, l as u64));
+                (r.out, Some(r.qa), Some(r.qb))
+            } else {
+                (gemm_f32(&x, w), None, None)
+            };
+            let z = if self.layer_quantized(l) {
+                let qxw = quantize(&xw, mode.bits, mode.rounding(self.step_count, 100 + l as u64));
+                qspmm_edge_weighted(&self.csr, &self.qnorm, &qxw, 1)
+            } else {
+                spmm_csr_values(&self.csr, &self.norm, &xw)
+            };
+            let out = if l == 0 { z.map(|v| v.max(0.0)) } else { z.clone() };
+            caches.push(RefCache { x: x.clone(), z, qx, qw });
+            x = out;
+        }
+        (x, caches)
+    }
+
+    fn train_step(
+        &mut self,
+        features: &Dense<f32>,
+        opt: &mut Sgd,
+        loss_grad: impl FnOnce(&Dense<f32>) -> (f32, Dense<f32>),
+    ) -> f32 {
+        let (logits, caches) = self.forward_cached(features);
+        let (loss, dlogits) = loss_grad(&logits);
+        let mode = self.mode;
+        let mut grad = dlogits;
+        for l in (0..2).rev() {
+            let cache = &caches[l];
+            if l == 0 {
+                // ReLU backward through the inter-layer activation.
+                let mut g = grad.clone();
+                for (gv, &zv) in g.data_mut().iter_mut().zip(cache.z.data().iter()) {
+                    if zv <= 0.0 {
+                        *gv = 0.0;
+                    }
+                }
+                grad = g;
+            }
+            let dxw = if self.layer_quantized(l) {
+                let qg = quantize(&grad, mode.bits, mode.rounding(self.step_count, 200 + l as u64));
+                qspmm_edge_weighted(&self.csr_rev, &self.qnorm, &qg, 1)
+            } else {
+                spmm_csr_values(&self.csr_rev, &self.norm, &grad)
+            };
+            if self.layer_quantized(l) {
+                let qdxw = quantize(&dxw, mode.bits, mode.rounding(self.step_count, 300 + l as u64));
+                let qx = cache.qx.as_ref().unwrap();
+                let qw = cache.qw.as_ref().unwrap();
+                let (gw, _) = qgemm_prequantized(&qx.transpose2d(), &qdxw, mode.bits);
+                self.layers_gw[l] = gw;
+                if l > 0 {
+                    let (gx, _) = qgemm_prequantized(&qdxw, &qw.transpose2d(), mode.bits);
+                    grad = gx;
+                }
+            } else {
+                self.layers_gw[l] = gemm_f32(&cache.x.transpose(), &dxw);
+                if l > 0 {
+                    grad = gemm_f32(&dxw, &self.layers_w[l].transpose());
+                }
+            }
+        }
+        for l in 0..2 {
+            opt.step(l, &mut self.layers_w[l], &self.layers_gw[l]);
+        }
+        self.step_count += 1;
+        loss
+    }
+}
+
+/// Run the reference implementation on the quickstart config shape.
+fn reference_losses(mode: TrainMode, epochs: usize) -> Vec<f32> {
+    let cfg = TrainConfig::quickstart();
+    let d = datasets::tiny(cfg.seed);
+    let mut m = RefGcn::new(d.features.cols(), cfg.hidden, d.num_classes, mode, &d.graph, cfg.seed);
+    let mut opt = Sgd::new(cfg.lr);
+    let mut losses = Vec::new();
+    for _ in 0..epochs {
+        losses.push(m.train_step(&d.features, &mut opt, |lg| {
+            softmax_cross_entropy(lg, &d.labels, &d.train_nodes)
+        }));
+    }
+    losses
+}
+
+/// Run the real Trainer on the same config.
+fn trainer_losses(mode: TrainMode) -> Vec<f32> {
+    let mut cfg = TrainConfig::quickstart();
+    cfg.mode = mode;
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    t.run().unwrap().losses
+}
+
+#[test]
+fn quickstart_tango_losses_match_pre_refactor_reference() {
+    let mode = TrainMode::tango(8); // the quickstart default
+    let golden = reference_losses(mode, 20);
+    let got = trainer_losses(mode);
+    assert_eq!(got.len(), golden.len());
+    for (e, (a, b)) in golden.iter().zip(got.iter()).enumerate() {
+        assert_eq!(a, b, "epoch {e}: reference {a} vs trainer {b} — quickstart numerics drifted");
+    }
+}
+
+#[test]
+fn quickstart_fp32_losses_match_pre_refactor_reference() {
+    let mode = TrainMode::fp32();
+    let golden = reference_losses(mode, 20);
+    let got = trainer_losses(mode);
+    for (e, (a, b)) in golden.iter().zip(got.iter()).enumerate() {
+        assert_eq!(a, b, "epoch {e}: reference {a} vs trainer {b}");
+    }
+}
+
+#[test]
+fn quickstart_losses_are_the_recorded_shape() {
+    // Beyond reference equality: the curve must actually train (sanity that
+    // the golden comparison is not vacuous on a broken config).
+    let losses = trainer_losses(TrainMode::tango(8));
+    assert_eq!(losses.len(), 20);
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(losses[19] < losses[0], "{losses:?}");
+}

@@ -3,10 +3,11 @@
 //! The data-parallel simulator shares the sampler Block pipeline, the
 //! shuffled epoch sweep and the splitmix64 seed mixing with
 //! `MiniBatchTrainer`, so a 1-worker FP32 run must replay the single-GPU
-//! trainer *step for step*; and any run must be bit-reproducible for a
-//! fixed config at every worker count.
+//! trainer *step for step* — on both task heads, now that both engines
+//! construct models through the one `GnnModel`/`AnyModel` seam; and any
+//! run must be bit-reproducible for a fixed config at every worker count.
 
-use tango::config::{ModelKind, TrainConfig};
+use tango::config::{ModelKind, TaskKind, TrainConfig};
 use tango::graph::datasets;
 use tango::model::TrainMode;
 use tango::multigpu::{run_data_parallel, Interconnect, MultiGpuConfig};
@@ -89,6 +90,46 @@ fn one_worker_matches_minibatch_trainer_quantized_gather() {
             loss
         );
     }
+}
+
+#[test]
+fn one_worker_matches_minibatch_trainer_linkpred() {
+    // Refactor-safety for the new task head: LP shards canonical edges,
+    // draws seeded negatives and samples edge-seeded blocks through the
+    // same mixers as MiniBatchTrainer — one worker must replay it step for
+    // step, exactly like the NC path.
+    let epochs = 4;
+    let mut train = base_train(TrainMode::fp32(), epochs);
+    train.task = Some(TaskKind::LinkPrediction);
+
+    let mut mb = MiniBatchTrainer::from_config(&train).unwrap();
+    assert_eq!(mb.task(), datasets::Task::LinkPrediction);
+    let single = mb.run().unwrap();
+
+    let data = datasets::tiny(train.seed);
+    let mg = run_data_parallel(&multi(train, 1, epochs, false), &data).unwrap();
+
+    assert_eq!(mg.epochs.len(), single.losses.len());
+    for (e, (ms, loss)) in mg.epochs.iter().zip(&single.losses).enumerate() {
+        assert!(
+            (ms.loss - loss).abs() < 1e-6,
+            "epoch {e}: multigpu {} vs minibatch {}",
+            ms.loss,
+            loss
+        );
+    }
+}
+
+#[test]
+fn multi_worker_linkpred_learns() {
+    let data = datasets::tiny(11);
+    let mut train = base_train(TrainMode::fp32(), 6);
+    train.task = Some(TaskKind::LinkPrediction);
+    let r = run_data_parallel(&multi(train, 3, 6, false), &data).unwrap();
+    assert!(r.epochs.iter().all(|e| e.loss.is_finite()));
+    let first = r.epochs.first().unwrap().loss;
+    let last = r.epochs.last().unwrap().loss;
+    assert!(last < first + 0.05, "LP loss must not blow up: {first} -> {last}");
 }
 
 #[test]

@@ -1,12 +1,15 @@
 //! Property-based invariants of the neighbor-sampling subsystem (driven by
 //! `tango::util::prop`): sampled blocks are valid MFGs — compacted ids in
 //! range, every edge endpoint present and backed by a parent edge, fanout
-//! respected, layers chained, all deterministic under a fixed seed — and
-//! the quantized feature gather matches direct quantization.
+//! respected, layers chained, all deterministic under a fixed seed — the
+//! quantized feature gather matches direct quantization, and edge-seeded
+//! LP batches never leak their positive edges into the sampled messages.
 
 use tango::graph::{Coo, Csr};
 use tango::quant::{quantize_with_scale, Rounding};
-use tango::sampler::{gather_rows, shuffled_batches, NeighborSampler, QuantFeatureStore};
+use tango::sampler::{
+    gather_rows, shuffled_batches, EdgeBatcher, NeighborSampler, QuantFeatureStore,
+};
 use tango::tensor::Dense;
 use tango::util::prop::{check, Gen};
 
@@ -93,6 +96,87 @@ fn prop_sampling_is_deterministic_under_fixed_seed() {
         for (x, y) in a.iter().zip(b.iter()) {
             assert_eq!(x.src_nodes, y.src_nodes);
             assert_eq!(x.num_dst, y.num_dst);
+            assert_eq!(x.coo, y.coo);
+            assert_eq!(x.norm, y.norm);
+        }
+    });
+}
+
+#[test]
+fn prop_edge_seeded_blocks_are_valid_and_leak_free() {
+    check("edge-seeded blocks", 60, |g| {
+        let (coo, csr, deg) = random_parent(g);
+        let batcher = EdgeBatcher::new(&coo);
+        if batcher.num_edges() == 0 {
+            return; // degenerate all-self-loop graph: nothing to train on
+        }
+        // A random positive-edge batch.
+        let mut ids = batcher.edge_ids();
+        for i in (1..ids.len()).rev() {
+            let j = g.usize_in(0, i);
+            ids.swap(i, j);
+        }
+        ids.truncate(g.usize_in(1, ids.len().min(10)));
+        let neg_per_pos = g.usize_in(1, 3);
+        let eb = batcher.batch(&ids, neg_per_pos, g.u64());
+
+        // Candidate layout: positives first (each a real canonical edge),
+        // then negatives; all pair ids index the compacted seed list.
+        assert_eq!(eb.pairs.len(), ids.len() * (1 + neg_per_pos));
+        let distinct: std::collections::HashSet<u32> = eb.seeds.iter().copied().collect();
+        assert_eq!(distinct.len(), eb.seeds.len(), "seed list must be injective");
+        for (k, &(lu, lv, t)) in eb.pairs.iter().enumerate() {
+            assert!((lu as usize) < eb.seeds.len() && (lv as usize) < eb.seeds.len());
+            assert_eq!(t, if k < ids.len() { 1.0 } else { 0.0 });
+            if k < ids.len() {
+                let (gu, gv) = (eb.seeds[lu as usize], eb.seeds[lv as usize]);
+                assert_eq!(batcher.edge(ids[k]), (gu.min(gv), gu.max(gv)));
+                assert!(eb.exclude.contains(&(gu, gv)) && eb.exclude.contains(&(gv, gu)));
+            }
+        }
+
+        // Sample with exclusion: blocks stay valid MFGs over the compacted
+        // ids, end at the seeds, and NEVER contain an excluded seed edge in
+        // any layer (the leakage check).
+        let layers = g.usize_in(1, 3);
+        let fanouts: Vec<usize> = (0..layers).map(|_| g.usize_in(1, 5)).collect();
+        let sampler = NeighborSampler::new(fanouts, g.u64());
+        let stream = g.u64();
+        let blocks =
+            sampler.sample_blocks_excluding(&csr, &deg, &eb.seeds, stream, &eb.exclude);
+        assert_eq!(blocks.len(), layers);
+        assert_eq!(blocks[layers - 1].dst_nodes(), &eb.seeds[..]);
+        let parent_edges: std::collections::HashSet<(u32, u32)> =
+            (0..coo.num_edges()).map(|e| (coo.src[e], coo.dst[e])).collect();
+        for b in &blocks {
+            let distinct: std::collections::HashSet<_> = b.src_nodes.iter().collect();
+            assert_eq!(distinct.len(), b.src_nodes.len(), "compacted ids must be injective");
+            for e in 0..b.num_edges() {
+                let (ls, ld) = (b.coo.src[e] as usize, b.coo.dst[e] as usize);
+                assert!(ls < b.num_src() && ld < b.num_dst, "compacted id out of range");
+                let (gs, gd) = (b.src_nodes[ls], b.src_nodes[ld]);
+                assert!(parent_edges.contains(&(gs, gd)), "({gs},{gd}) not a parent edge");
+                assert!(
+                    !eb.exclude.contains(&(gs, gd)),
+                    "seed edge ({gs},{gd}) leaked into layer messages"
+                );
+            }
+        }
+
+        // Determinism: the same (sampler seed, stream, batch seed) replays
+        // the batch and its blocks exactly.
+        let eb2 = batcher.batch(&ids, neg_per_pos, {
+            // replay needs the same seed — re-derive it from the generator
+            // is impossible, so determinism is asserted on a fixed seed:
+            0xDEAD_BEEF
+        });
+        let eb3 = batcher.batch(&ids, neg_per_pos, 0xDEAD_BEEF);
+        assert_eq!(eb2.seeds, eb3.seeds);
+        assert_eq!(eb2.pairs, eb3.pairs);
+        let b1 = sampler.sample_blocks_excluding(&csr, &deg, &eb2.seeds, 7, &eb2.exclude);
+        let b2 = sampler.sample_blocks_excluding(&csr, &deg, &eb3.seeds, 7, &eb3.exclude);
+        for (x, y) in b1.iter().zip(b2.iter()) {
+            assert_eq!(x.src_nodes, y.src_nodes);
             assert_eq!(x.coo, y.coo);
             assert_eq!(x.norm, y.norm);
         }

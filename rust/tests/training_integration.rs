@@ -95,6 +95,47 @@ fn link_prediction_auc_above_chance() {
 }
 
 #[test]
+fn sampled_linkpred_end_to_end() {
+    // The ROADMAP item this PR closes: `tango train --sampler neighbor
+    // --task linkpred` — edge-seeded blocks with seed-edge exclusion
+    // through the same Trainer front door, reporting AUC.
+    let mut c = cfg(ModelKind::Gcn, "DBLP", TrainMode::tango(8), 3);
+    c.hidden = 16;
+    c.sampler.enabled = true;
+    c.sampler.fanouts = vec![5, 5];
+    c.sampler.batch_size = 512;
+    let mut t = Trainer::from_config(&c).unwrap();
+    assert_eq!(t.task(), tango::graph::datasets::Task::LinkPrediction);
+    let r = t.run().unwrap();
+    assert_eq!(r.losses.len(), 3);
+    assert!(r.losses.iter().all(|l| l.is_finite()), "{:?}", r.losses);
+    assert!(r.final_eval > 0.0 && r.final_eval <= 1.0, "AUC {}", r.final_eval);
+    // Quantized sampled runs surface the gather-cache stats in the report.
+    assert!(r.cache.is_some());
+}
+
+#[test]
+fn task_flag_runs_sampled_linkpred_on_generated_nc_graph() {
+    // `--task linkpred` on an NC dataset: train LP purely off topology.
+    let mut c = cfg(ModelKind::Gcn, "tiny", TrainMode::fp32(), 6);
+    c.hidden = 16;
+    c.task = Some(tango::config::TaskKind::LinkPrediction);
+    c.sampler.enabled = true;
+    c.sampler.fanouts = vec![8, 8];
+    c.sampler.batch_size = 64;
+    let mut t = Trainer::from_config(&c).unwrap();
+    assert_eq!(t.task(), tango::graph::datasets::Task::LinkPrediction);
+    let r = t.run().unwrap();
+    assert!(r.losses.iter().all(|l| l.is_finite()));
+    assert!(
+        r.losses.last().unwrap() < &(r.losses[0] + 0.05),
+        "LP loss must not blow up: {:?}",
+        r.losses
+    );
+    assert!(r.final_eval > 0.0 && r.final_eval <= 1.0, "AUC {}", r.final_eval);
+}
+
+#[test]
 fn multigpu_speedup_grows_with_workers() {
     // Fig. 9's shape: quantized-vs-fp32 comm advantage grows with workers.
     // comm_s is the modelled interconnect time, so tiny keeps the real
