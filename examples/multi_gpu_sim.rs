@@ -50,7 +50,6 @@ fn main() -> tango::Result<()> {
                 workers: k,
                 epochs: 3,
                 quantize_grads: quant,
-                overlap_quantization: true,
                 interconnect: Interconnect::pcie3(),
             }
         };

@@ -72,7 +72,6 @@ fn main() {
             workers: 4,
             epochs: 2,
             quantize_grads: quant,
-            overlap_quantization: true,
             interconnect: Interconnect::pcie3(),
         }
     };

@@ -1,0 +1,89 @@
+//! Pipeline bench: sequential (`prefetch = 0`) vs pipelined
+//! (`prefetch = 2`) quantized mini-batch epochs — the paper's §4.2 overlap
+//! ("we overlap the feature quantization with the subgraph sampling"),
+//! measured end to end on both task heads.
+//!
+//! The pipelined run does the *same* work batch for batch (bit-identical
+//! losses — `tests/pipeline_equivalence.rs`); any wall-time gap is stage
+//! one (sampling + quantized gather) hidden behind model compute.
+
+use tango::config::{task_name, ModelKind, TaskKind, TrainConfig};
+use tango::metrics::Table;
+use tango::model::TrainMode;
+use tango::sampler::MiniBatchTrainer;
+
+/// Epochs timed per run (first run also warms the process allocator).
+const EPOCHS: usize = 2;
+/// Timed repetitions; best-of damps scheduler noise.
+const REPS: usize = 3;
+
+fn epoch_secs(task: TaskKind, prefetch: usize) -> f64 {
+    let mut cfg = TrainConfig {
+        model: ModelKind::Gcn,
+        dataset: match task {
+            TaskKind::NodeClassification => "Pubmed".into(),
+            TaskKind::LinkPrediction => "DBLP".into(),
+        },
+        epochs: EPOCHS,
+        hidden: 64,
+        mode: TrainMode::tango(8),
+        log_every: 0,
+        task: Some(task),
+        ..Default::default()
+    };
+    cfg.sampler.enabled = true;
+    cfg.sampler.fanouts = vec![10, 10];
+    cfg.sampler.batch_size = 512;
+    cfg.sampler.prefetch = prefetch;
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let mut t = MiniBatchTrainer::from_config(&cfg).unwrap();
+        let r = t.run().unwrap();
+        best = best.min(r.wall_secs / EPOCHS as f64);
+    }
+    best
+}
+
+fn main() {
+    // Pin the worker pool so the producer thread competes with a known
+    // number of compute threads, not whatever the host happens to have.
+    if std::env::var("TANGO_THREADS").is_err() {
+        std::env::set_var("TANGO_THREADS", "4");
+    }
+    println!(
+        "bench: sequential vs pipelined sampled epochs (quantized gather, \
+         TANGO_THREADS={}, best of {REPS})\n",
+        std::env::var("TANGO_THREADS").unwrap()
+    );
+    let mut t = Table::new(
+        "bench: batch-prefetch pipeline (paper §4.2 overlap)",
+        &["task", "dataset", "seq s/ep", "piped s/ep", "overlap speedup"],
+    );
+    for (task, dataset) in [
+        (TaskKind::NodeClassification, "Pubmed"),
+        (TaskKind::LinkPrediction, "DBLP"),
+    ] {
+        let name = task_name(task.to_task());
+        let seq = epoch_secs(task, 0);
+        let piped = epoch_secs(task, 2);
+        println!(
+            "{name} on {dataset}: sequential {seq:.4} s/epoch, pipelined {piped:.4} s/epoch \
+             ({:.2}x)",
+            seq / piped
+        );
+        // The whole point of the PR: the real overlap must not be slower
+        // than running the stages back to back.
+        assert!(
+            piped <= seq,
+            "{name}: pipelined epoch ({piped:.4}s) slower than sequential ({seq:.4}s)"
+        );
+        t.row(&[
+            name.to_string(),
+            dataset.into(),
+            format!("{seq:.4}"),
+            format!("{piped:.4}"),
+            format!("{:.2}x", seq / piped),
+        ]);
+    }
+    t.print();
+}

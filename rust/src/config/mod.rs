@@ -141,6 +141,12 @@ pub struct SamplerConfig {
     /// bound is what keeps the hot-node cache from growing to the whole
     /// feature table; evicted rows simply requantize on their next gather.
     pub cache_nodes: usize,
+    /// Batch-prefetch depth (the paper's §4.2 overlap): a producer thread
+    /// runs sampling + (quantized) feature gathering up to `prefetch`
+    /// batches ahead of the training step. 0 = strictly sequential.
+    /// Prefetched runs are bit-identical to sequential ones — per-batch RNG
+    /// streams are keyed by `(epoch, batch index)` alone.
+    pub prefetch: usize,
 }
 
 impl Default for SamplerConfig {
@@ -151,6 +157,7 @@ impl Default for SamplerConfig {
             batch_size: 512,
             seed: 0x5A17,
             cache_nodes: 0,
+            prefetch: 2,
         }
     }
 }
@@ -315,6 +322,9 @@ impl TrainConfig {
                 );
             }
         }
+        if let Some(v) = get("prefetch") {
+            cfg.sampler.prefetch = v.parse().map_err(|e| format!("prefetch: {e}"))?;
+        }
         if let Some(v) = get("task") {
             cfg.task = Some(parse_task(v)?);
         }
@@ -404,6 +414,7 @@ fanouts = "15,10"
 batch_size = 256
 sample_seed = 99
 cache_nodes = 4096
+prefetch = 4
 "#;
         let cfg = TrainConfig::from_toml(text).unwrap();
         assert!(cfg.sampler.enabled);
@@ -411,9 +422,15 @@ cache_nodes = 4096
         assert_eq!(cfg.sampler.batch_size, 256);
         assert_eq!(cfg.sampler.seed, 99);
         assert_eq!(cfg.sampler.cache_nodes, 4096);
-        // Default stays full-graph.
+        assert_eq!(cfg.sampler.prefetch, 4);
+        // Default stays full-graph, with the overlap pipeline on.
         let plain = TrainConfig::from_toml("[train]\nmodel = \"gcn\"\n").unwrap();
         assert!(!plain.sampler.enabled);
+        assert_eq!(plain.sampler.prefetch, 2);
+        // prefetch = 0 is the explicit sequential mode, not an error.
+        let seq = TrainConfig::from_toml("[train]\nprefetch = 0\n").unwrap();
+        assert_eq!(seq.sampler.prefetch, 0);
+        assert!(TrainConfig::from_toml("[train]\nprefetch = \"deep\"\n").is_err());
     }
 
     #[test]

@@ -142,6 +142,23 @@ impl QuantCache {
         self.insert_bounded(key, q);
     }
 
+    /// Look up without touching the hit/miss statistics — batch gathers
+    /// classify their whole node list first and account traffic in bulk via
+    /// [`Self::count_hits`]/[`Self::count_misses`].
+    pub fn peek(&self, key: u64) -> Option<&QTensor> {
+        self.entries.get(&key)
+    }
+
+    /// Bulk-account `n` cache hits (see [`Self::peek`]).
+    pub fn count_hits(&mut self, n: u64) {
+        self.stats.hits += n;
+    }
+
+    /// Bulk-account `n` cache misses (see [`Self::peek`]).
+    pub fn count_misses(&mut self, n: u64) {
+        self.stats.misses += n;
+    }
+
     /// Look up without quantizing.
     pub fn get(&mut self, key: u64) -> Option<&QTensor> {
         let hit = self.entries.contains_key(&key);

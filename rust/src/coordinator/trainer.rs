@@ -40,6 +40,11 @@ pub struct TrainReport {
     pub cache: Option<CacheStats>,
     /// Bytes of INT8 rows held by the feature cache at run end.
     pub cache_bytes: usize,
+    /// Sampled runs: measured stage-one (sampling + gather) seconds *not*
+    /// hidden by the prefetch pipeline — the whole inline stage-one time
+    /// when `prefetch = 0`, only the consumer's channel-wait otherwise.
+    /// 0 for full-graph runs.
+    pub prefetch_wait_s: f64,
 }
 
 /// The training coordinator.
@@ -156,6 +161,7 @@ impl Trainer {
             epochs_to_converge,
             cache: None,
             cache_bytes: 0,
+            prefetch_wait_s: 0.0,
         })
     }
 

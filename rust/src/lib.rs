@@ -25,13 +25,17 @@
 //!   cache and reuse detection, adaptive kernel selection, the mini-batch
 //!   neighbor-sampling subsystem ([`sampler`]: layered fanout sampling,
 //!   MFG block extraction, edge-seeded LP batches with seed-edge
-//!   exclusion, bounded quantized feature gathering), a multi-worker
+//!   exclusion, bounded quantized feature gathering, and the pipelined
+//!   batch-prefetch engine — the paper's §4.2 overlap: a producer thread
+//!   runs sampling + quantized gather `prefetch` batches ahead of the
+//!   training step, bit-identical to the sequential sweep), a multi-worker
 //!   data-parallel simulator whose workers train persistent
 //!   [`AnyModel`](model::AnyModel)s on the same sampler `Block` pipeline
-//!   for both tasks (per-worker sampling streams, one process-wide
-//!   quantized feature store, per-step quantized ring all-reduce over a
-//!   modelled PCIe interconnect), an analytical GPU cost model, and the
-//!   PJRT runtime that executes jax-lowered artifacts.
+//!   for both tasks (per-worker sampling streams *and* per-worker prefetch
+//!   producers with measured overlap, one process-wide quantized feature
+//!   store, per-step quantized ring all-reduce over a modelled PCIe
+//!   interconnect), an analytical GPU cost model, and the PJRT runtime
+//!   that executes jax-lowered artifacts.
 //! - **Layer 2 (`python/compile/model.py`)** — GCN/GAT forward/backward in
 //!   JAX, AOT-lowered to HLO text under `artifacts/`.
 //! - **Layer 1 (`python/compile/kernels/`)** — Pallas kernels (quantize,

@@ -6,15 +6,23 @@
 //!              [--epochs N] [--bits B] [--auto-bits] [--lr F] [--hidden N]
 //!              [--seed S] [--sampler neighbor|full] [--fanouts 10,10]
 //!              [--batch-size N] [--sample-seed S] [--cache-nodes N]
+//!              [--prefetch N]
 //! tango repro  <table1|fig2|fig7|...|fig16|table2|all> [--quick]
 //!              [--epochs N] [--speed-epochs N]
 //! tango plan                # print the derived quantization-caching plan
 //! tango artifacts [--dir artifacts]   # list + smoke-run the AOT artifacts
 //! tango multigpu [--config cfg.toml] [--workers K] [--epochs N]
-//!                [--task nc|linkpred] [--quantize-grads] [--no-overlap]
+//!                [--task nc|linkpred] [--quantize-grads]
 //!                [--fanouts 10,10] [--batch-size N] [--sample-seed S]
-//!                [--cache-nodes N]
+//!                [--cache-nodes N] [--prefetch N]
 //! ```
+//!
+//! `--prefetch N` is the paper's §4.2 overlap: a producer thread runs
+//! neighbor sampling + the quantized feature gather up to `N` batches
+//! ahead of the training step (default 2; `--prefetch 0` = strictly
+//! sequential, bit-identical losses either way). In `multigpu` mode every
+//! worker runs its own prefetch pipeline and the per-epoch report shows
+//! the measured stage-one `wait` time the overlap failed to hide.
 //!
 //! Models implement the `GnnModel` trait and run one unified block path
 //! (a full-graph epoch is the block path over identity blocks); the
@@ -65,7 +73,7 @@ fn print_help() {
          \x20 artifacts  list and smoke-run the AOT artifacts\n\
          \x20 multigpu   run the data-parallel simulation on sampled\n\
          \x20            mini-batches (shares --fanouts/--batch-size/\n\
-         \x20            --sample-seed/--cache-nodes with train)\n"
+         \x20            --sample-seed/--cache-nodes/--prefetch with train)\n"
     );
 }
 
@@ -126,6 +134,7 @@ fn train_config_with_toml(args: &Args, toml: Option<&str>) -> tango::Result<Trai
     if args.flags.contains_key("cache-nodes") && cfg.sampler.cache_nodes == 0 {
         anyhow::bail!("--cache-nodes must be >= 1 (omit the flag for an unbounded cache)");
     }
+    cfg.sampler.prefetch = args.get_as("prefetch", cfg.sampler.prefetch);
     cfg.log_every = args.get_as("log-every", 10);
     // Reject degenerate knob combinations (e.g. `--batch-size 0`) with an
     // actionable message instead of panicking mid-run.
@@ -145,8 +154,8 @@ fn cmd_train(args: &Args) -> tango::Result<()> {
     );
     if cfg.sampler.enabled {
         println!(
-            "sampler: neighbor, fanouts {:?}, batch size {}",
-            cfg.sampler.fanouts, cfg.sampler.batch_size
+            "sampler: neighbor, fanouts {:?}, batch size {}, prefetch {}",
+            cfg.sampler.fanouts, cfg.sampler.batch_size, cfg.sampler.prefetch
         );
     }
     let mut trainer = Trainer::from_config(&cfg)?;
@@ -169,6 +178,14 @@ fn cmd_train(args: &Args) -> tango::Result<()> {
         fmt_time(report.wall_secs / report.losses.len().max(1) as f64),
         report.bits,
     );
+    if cfg.sampler.enabled {
+        println!(
+            "stage-one wait (sampling+gather not hidden by prefetch): {} \
+             ({:.0}% of train wall)",
+            fmt_time(report.prefetch_wait_s),
+            report.prefetch_wait_s / report.wall_secs.max(1e-12) * 100.0
+        );
+    }
     if let Some(stats) = report.cache {
         println!("feature cache: {}", stats.summary(report.cache_bytes));
     }
@@ -250,29 +267,39 @@ fn cmd_multigpu(args: &Args) -> tango::Result<()> {
     }
     cfg.workers = args.get_as("workers", cfg.workers);
     cfg.epochs = args.get_as("epochs", cfg.epochs);
+    // A `[multigpu] prefetch` key overrides `[train]`'s — but the CLI flag
+    // wins over both (same precedence as --workers/--epochs above).
+    cfg.train.sampler.prefetch = args.get_as("prefetch", cfg.train.sampler.prefetch);
     if args.get_bool("quantize-grads") {
         cfg.quantize_grads = true;
     }
     if args.get_bool("no-overlap") {
-        cfg.overlap_quantization = false;
+        // Same treatment as the retired `overlap_quantization` TOML key:
+        // fail loudly rather than silently running a different config.
+        anyhow::bail!(
+            "--no-overlap is gone — the overlap is a real per-worker prefetch pipeline \
+             now; use --prefetch 0 for the sequential baseline"
+        );
     }
     let task = tango::config::TaskKind::resolve(cfg.train.task, data.task);
     println!(
-        "multigpu: {} workers, task {}, fanouts {:?}, batch size {}, {} payloads",
+        "multigpu: {} workers, task {}, fanouts {:?}, batch size {}, {} payloads, \
+         prefetch {}",
         cfg.workers,
         tango::config::task_name(task),
         cfg.train.sampler.fanouts,
         cfg.train.sampler.batch_size,
-        if cfg.quantize_grads { "quantized" } else { "fp32" }
+        if cfg.quantize_grads { "quantized" } else { "fp32" },
+        cfg.train.sampler.prefetch
     );
     let report = run_data_parallel(&cfg, &data)?;
     for (i, e) in report.epochs.iter().enumerate() {
         println!(
-            "epoch {i}: {} steps, compute {} + comm {} + quant {} = {}  (loss {:.4})",
+            "epoch {i}: {} steps, compute {} + comm {} + wait {} = {}  (loss {:.4})",
             e.steps,
             fmt_time(e.compute_s),
             fmt_time(e.comm_s),
-            fmt_time(e.quant_s),
+            fmt_time(e.wait_s),
             fmt_time(e.total()),
             e.loss
         );

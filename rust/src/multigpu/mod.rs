@@ -14,6 +14,12 @@
 //! *interconnect* is modelled: a bandwidth/latency/contention
 //! parameterisation of PCIe over which FP32 or quantized payloads are
 //! charged ([`Interconnect`], [`allreduce_payload_bytes`]).
+//!
+//! The paper's §4.2 sampling/quantization overlap is real too: every worker
+//! prefetches its next batches (sampling + quantized gather) on a producer
+//! thread while it trains, and [`EpochStats::wait_s`] reports the measured
+//! stage-one time the overlap failed to hide (see
+//! [`crate::sampler::run_prefetched`]).
 
 mod allreduce;
 mod interconnect;

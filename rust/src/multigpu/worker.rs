@@ -9,12 +9,22 @@
 //! §Substitutions with correct INT8-vs-FP32 byte accounting
 //! ([`allreduce_payload_bytes`]).
 //!
+//! The paper's §4.2 overlap ("we overlap the feature quantization with the
+//! subgraph sampling") is **real** here, not modelled: each worker runs
+//! stage one — sampling + quantized gather, the exact
+//! [`SampleStage`](crate::sampler::SampleStage) definition the single-GPU
+//! trainer uses — on its own producer thread, `prefetch` batches ahead of
+//! the synchronous training step. [`EpochStats::wait_s`] is the *measured*
+//! stage-one time the pipeline failed to hide (with `prefetch = 0` it is
+//! the whole inline sample+gather time), replacing the old
+//! `overlap_quantization` flag that merely skipped a modelled cost.
+//!
 //! Both task heads run data-parallel: node classification shards the train
 //! nodes, link prediction shards the graph's canonical positive edges
 //! ([`EdgeBatcher`]) and trains on edge-seeded blocks with seed-edge
 //! exclusion — same batching, same seeds, same loss as
 //! [`crate::sampler::MiniBatchTrainer`], so a 1-worker run replays it step
-//! for step on either task.
+//! for step on either task, with or without prefetch.
 
 use super::allreduce::{allreduce_payload_bytes, ring_allreduce, ring_messages};
 use super::interconnect::Interconnect;
@@ -24,14 +34,14 @@ use crate::graph::datasets::{Dataset, Task};
 use crate::graph::partition::partition_nodes;
 use crate::graph::Csr;
 use crate::model::{softmax_cross_entropy, AnyModel, GnnModel, ModelSpec, Sgd, TaskHead};
-use crate::quant::dequantize;
 use crate::quant::rng::mix_seeds;
 use crate::sampler::{
-    adjust_fanouts, gather_rows, sample_lp_step, shuffled_batches, EdgeBatcher,
-    NeighborSampler, QuantFeatureStore,
+    adjust_fanouts, shuffled_batches, spawn_producer, BatchTarget, EdgeBatcher, FeatureGather,
+    NeighborSampler, PreparedBatch, ProducerHandle, QuantFeatureStore, SampleStage,
 };
 use crate::util::par;
 use std::sync::Mutex;
+use std::time::Instant;
 
 /// Multi-worker run configuration.
 ///
@@ -49,9 +59,6 @@ pub struct MultiGpuConfig {
     pub epochs: usize,
     /// Quantize all-reduce payloads (Tango) or send FP32 (baseline).
     pub quantize_grads: bool,
-    /// Overlap the payload quantization with subgraph sampling (paper:
-    /// "we overlap the feature quantization with the subgraph sampling").
-    pub overlap_quantization: bool,
     /// Interconnect model.
     pub interconnect: Interconnect,
 }
@@ -65,15 +72,15 @@ impl MultiGpuConfig {
             workers: 4,
             epochs: 5,
             quantize_grads: false,
-            overlap_quantization: true,
             interconnect: Interconnect::pcie3(),
         }
     }
 
     /// Parse a full config from TOML text: the `[train]` section (including
     /// the unified sampler knobs `fanouts`/`batch_size`/`sample_seed`/
-    /// `cache_nodes` and `task`) plus a `[multigpu]` section with
-    /// `workers`, `epochs`, `quantize_grads` and `overlap_quantization`.
+    /// `cache_nodes`/`prefetch` and `task`) plus a `[multigpu]` section with
+    /// `workers`, `epochs`, `quantize_grads` and an optional per-worker
+    /// `prefetch` override.
     pub fn from_toml(text: &str) -> Result<Self, String> {
         let mut cfg = Self::new(TrainConfig::from_toml(text)?);
         cfg.apply_toml(text)?;
@@ -95,10 +102,17 @@ impl MultiGpuConfig {
                 .parse()
                 .map_err(|_| format!("quantize_grads: expected true|false, got '{v}'"))?;
         }
-        if let Some(v) = doc.get("multigpu", "overlap_quantization") {
-            self.overlap_quantization = v
-                .parse()
-                .map_err(|_| format!("overlap_quantization: expected true|false, got '{v}'"))?;
+        if let Some(v) = doc.get("multigpu", "prefetch") {
+            self.train.sampler.prefetch =
+                v.parse().map_err(|e| format!("prefetch: {e}"))?;
+        }
+        if doc.get("multigpu", "overlap_quantization").is_some() {
+            return Err(
+                "overlap_quantization is gone — each worker now runs a real prefetch \
+                 pipeline (measured overlap, not a modelled cost-skip); tune `prefetch` \
+                 instead (0 = sequential)"
+                    .to_string(),
+            );
         }
         Ok(())
     }
@@ -111,20 +125,24 @@ pub struct EpochStats {
     /// counts; one ring all-reduce per step).
     pub steps: usize,
     /// Compute time (real, measured): sum over steps of the slowest
-    /// worker's sample+gather+train time.
+    /// worker's training-step time.
     pub compute_s: f64,
     /// Modelled interconnect time for the gradient all-reduces.
     pub comm_s: f64,
-    /// Modelled quantization time not hidden behind sampling.
-    pub quant_s: f64,
+    /// Stage-one (sampling + quantized gather) time **not** hidden by the
+    /// per-worker prefetch pipeline — real, measured: sum over steps of the
+    /// slowest worker's wait on its prepared-batch channel. With
+    /// `prefetch = 0` this is the whole inline sample+gather time, so
+    /// sequential and pipelined totals compare apples to apples.
+    pub wait_s: f64,
     /// Mean training loss across workers and steps.
     pub loss: f32,
 }
 
 impl EpochStats {
-    /// Total modelled epoch wall time.
+    /// Total epoch wall time (measured compute + wait, modelled comm).
     pub fn total(&self) -> f64 {
-        self.compute_s + self.comm_s + self.quant_s
+        self.compute_s + self.comm_s + self.wait_s
     }
 }
 
@@ -148,13 +166,23 @@ impl MultiGpuReport {
     }
 }
 
-/// One worker's persistent training state: model + optimizer + sampler live
-/// across every epoch (a fresh model per epoch would silently reset
-/// quantization step counters and redo graph binding work every sweep).
+/// One worker's persistent training state: model + optimizer live across
+/// every epoch (a fresh model per epoch would silently reset quantization
+/// step counters and redo graph binding work every sweep). The worker's
+/// `NeighborSampler` lives *outside* this lock — it is immutable and
+/// borrowed by the worker's stage-one producer thread while the training
+/// thread holds the model.
 struct WorkerState {
     model: AnyModel,
     opt: Sgd,
-    sampler: NeighborSampler,
+}
+
+/// Where a worker's prepared batches come from this epoch: its stage-one
+/// producer thread (`prefetch > 0`) or inline assembly on the training
+/// thread (`prefetch = 0` — the sequential baseline).
+enum BatchSource<'scope, 'a> {
+    Inline(Mutex<SampleStage<'a>>),
+    Prefetched(Mutex<ProducerHandle<'scope, PreparedBatch>>),
 }
 
 fn build_model(cfg: &TrainConfig, data: &Dataset, out_dim: usize) -> AnyModel {
@@ -215,18 +243,25 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
     // Persistent per-worker state; identical seeds → identical initial
     // params, and the per-step averaged update keeps them in lockstep.
     let workers: Vec<Mutex<WorkerState>> = (0..k)
-        .map(|w| {
+        .map(|_| {
             Mutex::new(WorkerState {
                 model: build_model(train, data, out_dim),
                 opt: Sgd::new(train.lr),
-                sampler: NeighborSampler::new(
-                    fanouts.clone(),
-                    mix_seeds(&[train.sampler.seed, train.seed, w as u64]),
-                ),
             })
         })
         .collect();
+    // Per-worker samplers, outside the worker lock: stage one borrows them
+    // on the producer threads while the training threads hold the models.
+    let samplers: Vec<NeighborSampler> = (0..k)
+        .map(|w| {
+            NeighborSampler::new(
+                fanouts.clone(),
+                mix_seeds(&[train.sampler.seed, train.seed, w as u64]),
+            )
+        })
+        .collect();
     let grad_elems = workers[0].lock().unwrap().model.num_params();
+    let prefetch = train.sampler.prefetch;
 
     let mut epochs = Vec::with_capacity(cfg.epochs);
     for epoch in 0..cfg.epochs {
@@ -236,135 +271,156 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
         let batches: Vec<Vec<Vec<u32>>> =
             shards.iter().map(|s| shuffled_batches(s, batch_size, shuffle_seed)).collect();
         let steps = batches.iter().map(|b| b.len()).max().unwrap_or(0);
-        let mut compute_s = 0.0f64;
-        let mut comm_s = 0.0f64;
-        let mut quant_s = 0.0f64;
-        let mut loss_sum = 0.0f32;
-        let mut loss_n = 0usize;
-        for step in 0..steps {
-            // Synchronous round: each worker with a batch left samples its
-            // blocks (node- or edge-seeded), gathers features through the
-            // shared store and runs one real train_step_blocks on its own
-            // model (threaded, measured).
-            let results: Vec<Option<(Vec<f32>, Vec<f32>, f64, f32)>> = par::map_range(k, |w| {
-                let batch = batches[w].get(step)?;
-                let mut guard = workers[w].lock().unwrap();
-                let ws = &mut *guard;
-                let t0 = std::time::Instant::now();
-                let stream = mix_seeds(&[epoch as u64, step as u64]);
-                // Sample the blocks and assemble the loss context per task.
-                // The LP assembly is the SAME `sample_lp_step` the
-                // single-GPU `MiniBatchTrainer` runs — one definition, so
-                // the 1-worker step-for-step replay cannot drift.
-                let (blocks, lp_pairs): (Vec<crate::sampler::Block>, Option<Vec<(u32, u32, f32)>>) =
-                    match &batcher {
-                        None => (
-                            ws.sampler.sample_blocks(&csr_in, &degrees, batch, stream),
-                            None,
+        // The whole epoch runs inside one thread scope: each worker's
+        // stage-one producer prefetches its shard's batches while the
+        // synchronous step rounds below consume them.
+        let stat = std::thread::scope(|scope| -> crate::Result<EpochStats> {
+            let sources: Vec<BatchSource> = (0..k)
+                .map(|w| {
+                    let mut st = SampleStage {
+                        sampler: &samplers[w],
+                        csr_in: &csr_in,
+                        degrees: &degrees,
+                        labels: &data.labels,
+                        lp: batcher.as_ref().map(|b| (b, head.neg_per_pos())),
+                        gather: FeatureGather::shared(&data.features, store.as_ref()),
+                    };
+                    let wb = &batches[w];
+                    if prefetch == 0 {
+                        BatchSource::Inline(Mutex::new(st))
+                    } else {
+                        BatchSource::Prefetched(Mutex::new(spawn_producer(
+                            scope,
+                            prefetch,
+                            wb.len(),
+                            move |bi| {
+                                st.prepare(&wb[bi], mix_seeds(&[epoch as u64, bi as u64]))
+                            },
+                        )))
+                    }
+                })
+                .collect();
+            let mut compute_s = 0.0f64;
+            let mut comm_s = 0.0f64;
+            let mut wait_s = 0.0f64;
+            let mut loss_sum = 0.0f32;
+            let mut loss_n = 0usize;
+            for step in 0..steps {
+                // Synchronous round: each worker with a batch left takes its
+                // prepared batch (prefetched or assembled inline — either
+                // way the same `SampleStage::prepare` definition the
+                // single-GPU `MiniBatchTrainer` runs, so the 1-worker
+                // step-for-step replay cannot drift) and runs one real
+                // train_step_blocks on its own model (threaded, measured).
+                type StepOut = (Vec<f32>, Vec<f32>, f64, f64, f32);
+                let results: Vec<Option<crate::Result<StepOut>>> = par::map_range(k, |w| {
+                    if step >= batches[w].len() {
+                        return None;
+                    }
+                    let t_wait = Instant::now();
+                    let prepared = match &sources[w] {
+                        BatchSource::Inline(stage) => stage.lock().unwrap().prepare(
+                            &batches[w][step],
+                            mix_seeds(&[epoch as u64, step as u64]),
                         ),
-                        Some(b) => {
-                            let (blocks, pairs) = sample_lp_step(
-                                b,
-                                &ws.sampler,
-                                &csr_in,
-                                &degrees,
-                                batch,
-                                stream,
-                                head.neg_per_pos(),
-                            );
-                            (blocks, Some(pairs))
+                        BatchSource::Prefetched(handle) => {
+                            match handle.lock().unwrap().recv() {
+                                Ok(Some(p)) => p,
+                                Ok(None) => {
+                                    return Some(Err(anyhow::anyhow!(
+                                        "worker {w}: prefetch ended early at step {step}"
+                                    )))
+                                }
+                                Err(e) => return Some(Err(e)),
+                            }
                         }
                     };
-                let input_nodes = &blocks[0].src_nodes;
-                let x0 = match &store {
-                    // Hold the shared store's lock only for the INT8 row
-                    // gather (cache hits after warm-up); the full-width
-                    // dequantize pass runs outside it so concurrent workers
-                    // don't serialize the expensive part of the gather —
-                    // lock contention would otherwise be charged to the
-                    // quantized run's measured compute and bias the
-                    // FP32-vs-Tango comparison.
-                    Some(s) => {
-                        let q = s.lock().unwrap().gather_quantized(&data.features, input_nodes);
-                        dequantize(&q)
+                    let wait = t_wait.elapsed().as_secs_f64();
+                    let mut guard = workers[w].lock().unwrap();
+                    let ws = &mut *guard;
+                    let t0 = Instant::now();
+                    let before = ws.model.params_flat();
+                    let loss = match &prepared.target {
+                        BatchTarget::Nc { labels } => {
+                            let nodes: Vec<u32> = (0..labels.len() as u32).collect();
+                            ws.model
+                                .train_step_blocks(
+                                    &prepared.blocks,
+                                    &prepared.x0,
+                                    &mut ws.opt,
+                                    &mut |lg| softmax_cross_entropy(lg, labels, &nodes),
+                                )
+                                .0
+                        }
+                        BatchTarget::Lp { pairs } => {
+                            ws.model
+                                .train_step_blocks(
+                                    &prepared.blocks,
+                                    &prepared.x0,
+                                    &mut ws.opt,
+                                    &mut |emb| TaskHead::lp_loss_grad(emb, pairs),
+                                )
+                                .0
+                        }
+                    };
+                    // Effective gradient = (before - after) / lr.
+                    let after = ws.model.params_flat();
+                    let grad: Vec<f32> =
+                        before.iter().zip(&after).map(|(b, a)| (b - a) / train.lr).collect();
+                    Some(Ok((before, grad, wait, t0.elapsed().as_secs_f64(), loss)))
+                });
+                let mut before: Option<Vec<f32>> = None;
+                let mut grads: Vec<Vec<f32>> = Vec::with_capacity(k);
+                let mut round_compute = 0.0f64;
+                let mut round_wait = 0.0f64;
+                for r in results.into_iter().flatten() {
+                    let (b, g, wait, secs, loss) = r?;
+                    // All workers hold identical params entering the round,
+                    // so any participant's `before` is *the* pre-step state.
+                    if before.is_none() {
+                        before = Some(b);
                     }
-                    None => gather_rows(&data.features, input_nodes),
-                };
-                let before = ws.model.params_flat();
-                let loss = match &lp_pairs {
-                    None => {
-                        let labels: Vec<u32> =
-                            batch.iter().map(|&v| data.labels[v as usize]).collect();
-                        let nodes: Vec<u32> = (0..batch.len() as u32).collect();
-                        ws.model
-                            .train_step_blocks(&blocks, &x0, &mut ws.opt, &mut |lg| {
-                                softmax_cross_entropy(lg, &labels, &nodes)
-                            })
-                            .0
-                    }
-                    Some(pairs) => {
-                        ws.model
-                            .train_step_blocks(&blocks, &x0, &mut ws.opt, &mut |emb| {
-                                TaskHead::lp_loss_grad(emb, pairs)
-                            })
-                            .0
-                    }
-                };
-                // Effective gradient = (before - after) / lr.
-                let after = ws.model.params_flat();
-                let grad: Vec<f32> =
-                    before.iter().zip(&after).map(|(b, a)| (b - a) / train.lr).collect();
-                Some((before, grad, t0.elapsed().as_secs_f64(), loss))
-            });
-            let mut before: Option<Vec<f32>> = None;
-            let mut grads: Vec<Vec<f32>> = Vec::with_capacity(k);
-            let mut round_compute = 0.0f64;
-            for (b, g, secs, loss) in results.into_iter().flatten() {
-                // All workers hold identical params entering the round, so
-                // any participant's `before` is *the* pre-step state.
-                if before.is_none() {
-                    before = Some(b);
+                    grads.push(g);
+                    round_compute = round_compute.max(secs);
+                    round_wait = round_wait.max(wait);
+                    loss_sum += loss;
+                    loss_n += 1;
                 }
-                grads.push(g);
-                round_compute = round_compute.max(secs);
-                loss_sum += loss;
-                loss_n += 1;
-            }
-            let Some(before) = before else { continue };
-            compute_s += round_compute;
-            // Real all-reduce of the participating gradients (workers whose
-            // shard ran dry this round contribute nothing but still receive
-            // the averaged update below, staying in lockstep).
-            ring_allreduce(
-                &mut grads,
-                cfg.quantize_grads,
-                mix_seeds(&[train.seed, epoch as u64, step as u64]),
-            );
-            // Modelled interconnect time: every worker joins the ring each
-            // step; quantized payloads move 1-byte elements plus per-chunk
-            // scales, FP32 payloads 4-byte elements.
-            let bytes = allreduce_payload_bytes(grad_elems, k, cfg.quantize_grads);
-            comm_s += cfg.interconnect.transfer_time(bytes, ring_messages(k), k);
-            // Quantization cost: hidden behind sampling when overlapped.
-            if cfg.quantize_grads && !cfg.overlap_quantization {
-                // One pass over the gradient at (modelled) memory speed.
-                quant_s += grad_elems as f64 * 5.0 / 12.8e9;
-            }
-            // Apply the averaged gradient everywhere. A single FP32 worker
-            // already holds exactly this state (mean of one gradient), so
-            // skip the rewrite and stay bitwise equal to MiniBatchTrainer.
-            if k > 1 || cfg.quantize_grads {
-                let mut p = before;
-                for (pi, gi) in p.iter_mut().zip(&grads[0]) {
-                    *pi -= train.lr * gi;
-                }
-                for ws in &workers {
-                    ws.lock().unwrap().model.set_params_flat(&p);
+                let Some(before) = before else { continue };
+                compute_s += round_compute;
+                wait_s += round_wait;
+                // Real all-reduce of the participating gradients (workers
+                // whose shard ran dry this round contribute nothing but
+                // still receive the averaged update below, staying in
+                // lockstep).
+                ring_allreduce(
+                    &mut grads,
+                    cfg.quantize_grads,
+                    mix_seeds(&[train.seed, epoch as u64, step as u64]),
+                );
+                // Modelled interconnect time: every worker joins the ring
+                // each step; quantized payloads move 1-byte elements plus
+                // per-chunk scales, FP32 payloads 4-byte elements.
+                let bytes = allreduce_payload_bytes(grad_elems, k, cfg.quantize_grads);
+                comm_s += cfg.interconnect.transfer_time(bytes, ring_messages(k), k);
+                // Apply the averaged gradient everywhere. A single FP32
+                // worker already holds exactly this state (mean of one
+                // gradient), so skip the rewrite and stay bitwise equal to
+                // MiniBatchTrainer.
+                if k > 1 || cfg.quantize_grads {
+                    let mut p = before;
+                    for (pi, gi) in p.iter_mut().zip(&grads[0]) {
+                        *pi -= train.lr * gi;
+                    }
+                    for ws in &workers {
+                        ws.lock().unwrap().model.set_params_flat(&p);
+                    }
                 }
             }
-        }
-        let loss = if loss_n == 0 { 0.0 } else { loss_sum / loss_n as f32 };
-        epochs.push(EpochStats { steps, compute_s, comm_s, quant_s, loss });
+            let loss = if loss_n == 0 { 0.0 } else { loss_sum / loss_n as f32 };
+            Ok(EpochStats { steps, compute_s, comm_s, wait_s, loss })
+        })?;
+        epochs.push(stat);
     }
     let (cache, cache_bytes) = match store {
         Some(m) => {
@@ -404,7 +460,6 @@ mod tests {
             workers,
             epochs: 2,
             quantize_grads: quantize,
-            overlap_quantization: true,
             interconnect: Interconnect::pcie3(),
         }
     }
@@ -504,22 +559,45 @@ cache_nodes = 128
 workers = 5
 epochs = 7
 quantize_grads = true
-overlap_quantization = false
+prefetch = 3
 "#;
         let cfg = MultiGpuConfig::from_toml(text).unwrap();
         assert_eq!(cfg.workers, 5);
         assert_eq!(cfg.epochs, 7);
         assert!(cfg.quantize_grads);
-        assert!(!cfg.overlap_quantization);
         assert_eq!(cfg.train.sampler.fanouts, vec![6, 4]);
         assert_eq!(cfg.train.sampler.batch_size, 32);
         assert_eq!(cfg.train.sampler.seed, 9);
         assert_eq!(cfg.train.sampler.cache_nodes, 128);
+        // [multigpu] prefetch overrides the shared [train] knob.
+        assert_eq!(cfg.train.sampler.prefetch, 3);
         assert_eq!(cfg.train.task, Some(crate::config::TaskKind::LinkPrediction));
         // Booleans validate strictly — a typo must not silently flip the
         // run back to the FP32 baseline.
         let err = MultiGpuConfig::from_toml("[multigpu]\nquantize_grads = 1\n").unwrap_err();
         assert!(err.contains("quantize_grads"), "{err}");
-        assert!(MultiGpuConfig::from_toml("[multigpu]\noverlap_quantization = yes\n").is_err());
+        // The retired flag is rejected with a pointer at its replacement,
+        // not silently ignored.
+        let err = MultiGpuConfig::from_toml("[multigpu]\noverlap_quantization = true\n")
+            .unwrap_err();
+        assert!(err.contains("prefetch"), "{err}");
+    }
+
+    #[test]
+    fn prefetched_and_sequential_workers_match_bitwise() {
+        // The real overlap must not change a single loss at any worker
+        // count (per-batch RNG streams are position-keyed, and stage one is
+        // the same definition either way).
+        let data = datasets::tiny(9);
+        for workers in [1usize, 3] {
+            let losses = |prefetch: usize| {
+                let mut c = cfg(workers, false);
+                c.train.mode = crate::model::TrainMode::tango(8);
+                c.train.sampler.prefetch = prefetch;
+                let r = run_data_parallel(&c, &data).unwrap();
+                r.epochs.iter().map(|e| e.loss).collect::<Vec<f32>>()
+            };
+            assert_eq!(losses(0), losses(2), "workers={workers}");
+        }
     }
 }

@@ -92,16 +92,25 @@ fn round_stochastic(x: f32, rng: &mut Xoshiro256pp) -> f32 {
     }
 }
 
+/// Quantize a flat slice under a fixed scale with nearest rounding — the
+/// slice-level core of [`quantize_with_scale`]'s `Nearest` arm. The
+/// sampler's feature store quantizes cached rows through this same
+/// function, so cached rows can never drift from direct quantization.
+pub fn quantize_slice_nearest(values: &[f32], scale: f32, bits: u8) -> Vec<i8> {
+    let qmax = qmax_for_bits(bits) as f32;
+    let inv = 1.0 / scale;
+    values.iter().map(|&v| (v * inv).round().clamp(-qmax, qmax) as i8).collect()
+}
+
 /// Quantize with a caller-provided scale (the on-the-fly path, where the
 /// scale came fused out of a previous primitive).
 pub fn quantize_with_scale(x: &Dense<f32>, scale: f32, bits: u8, rounding: Rounding) -> QTensor {
     let qmax = qmax_for_bits(bits) as f32;
     let inv = 1.0 / scale;
     let data = match rounding {
-        Rounding::Nearest => x.map(|v| {
-            let q = (v * inv).round().clamp(-qmax, qmax);
-            q as i8
-        }),
+        Rounding::Nearest => {
+            Dense::from_vec(x.shape(), quantize_slice_nearest(x.data(), scale, bits))
+        }
         Rounding::Stochastic { seed } => {
             let mut rng = Xoshiro256pp::new(seed);
             let mut out = Vec::with_capacity(x.len());

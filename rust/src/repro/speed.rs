@@ -119,7 +119,6 @@ pub fn fig9(cfg: &ReproConfig) -> Table {
                     workers: k,
                     epochs: cfg.speed_epochs.min(3),
                     quantize_grads: quant,
-                    overlap_quantization: true,
                     interconnect: Interconnect::pcie3(),
                 }
             };

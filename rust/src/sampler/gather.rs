@@ -14,17 +14,24 @@
 //! single batch [`QTensor`].
 
 use crate::coordinator::qcache::{CacheStats, QuantCache};
-use crate::quant::{dequantize, quantize_with_scale, scale_for_bits, QTensor, Rounding};
+use crate::quant::{dequantize, quantize_slice_nearest, scale_for_bits, QTensor};
 use crate::tensor::Dense;
+use crate::util::par;
+use std::collections::HashMap;
 
 /// Gather feature rows for a node list into a dense `[nodes.len(), F]`
-/// matrix (the FP32 baseline gather).
+/// matrix (the FP32 baseline gather). Row copies run data-parallel over the
+/// output (one chunk per row — `par::for_each_chunk` falls back to the
+/// plain loop for small batches).
 pub fn gather_rows(features: &Dense<f32>, nodes: &[u32]) -> Dense<f32> {
     let dim = features.cols();
     let mut out = Dense::zeros(&[nodes.len(), dim]);
-    for (i, &v) in nodes.iter().enumerate() {
-        out.row_mut(i).copy_from_slice(features.row(v as usize));
+    if dim == 0 || nodes.is_empty() {
+        return out;
     }
+    par::for_each_chunk(out.data_mut(), dim, |i, chunk| {
+        chunk.copy_from_slice(features.row(nodes[i] as usize));
+    });
     out
 }
 
@@ -58,22 +65,62 @@ impl QuantFeatureStore {
 
     /// Gather the quantized rows of `nodes` into one `[nodes.len(), F]`
     /// [`QTensor`]. Rows of previously seen nodes come from the cache.
+    ///
+    /// Runs in batch passes instead of row-at-a-time: classify every node
+    /// against the cache, quantize the misses in parallel straight from
+    /// their feature slices (no per-miss f32 staging copy), assemble the
+    /// output in parallel, then admit the fresh rows. Assembly happens
+    /// *before* admission, so a bound smaller than the batch (rows evicted
+    /// by this very call) still gathers exact values — the shared static
+    /// scale guarantees requantization is bit-identical anyway.
     pub fn gather_quantized(&mut self, features: &Dense<f32>, nodes: &[u32]) -> QTensor {
         let dim = features.cols();
-        let mut data: Vec<i8> = Vec::with_capacity(nodes.len() * dim);
+        let (scale, bits) = (self.scale, self.bits);
+        // Pass 1: first sight of an uncached node is a miss; duplicates and
+        // cached rows are hits. `miss_idx` maps each missing node to its
+        // slot in `miss_nodes`/`miss_rows` — one structure serves dedup,
+        // assembly lookup and admission.
+        let mut miss_nodes: Vec<u32> = Vec::new();
+        let mut miss_idx: HashMap<u32, usize> = HashMap::new();
+        let (mut hits, mut misses) = (0u64, 0u64);
         for &v in nodes {
-            let (scale, bits) = (self.scale, self.bits);
-            let q = self.cache.get_or_insert_with(v as u64, || {
-                let row = Dense::from_vec(&[1, dim], features.row(v as usize).to_vec());
-                quantize_with_scale(&row, scale, bits, Rounding::Nearest)
+            if self.cache.peek(v as u64).is_some() || miss_idx.contains_key(&v) {
+                hits += 1;
+            } else {
+                misses += 1;
+                miss_idx.insert(v, miss_nodes.len());
+                miss_nodes.push(v);
+            }
+        }
+        self.cache.count_hits(hits);
+        self.cache.count_misses(misses);
+        // Pass 2: quantize the missing rows in parallel, straight from
+        // their feature slices (shared helper with `quantize_with_scale` —
+        // cached rows cannot drift from direct quantization).
+        let miss_rows: Vec<Vec<i8>> = par::map_range(miss_nodes.len(), |j| {
+            quantize_slice_nearest(features.row(miss_nodes[j] as usize), scale, bits)
+        });
+        // Pass 3: parallel assembly from cached + freshly quantized rows.
+        let mut out = Dense::zeros(&[nodes.len(), dim]);
+        if dim > 0 && !nodes.is_empty() {
+            let cache = &self.cache;
+            par::for_each_chunk(out.data_mut(), dim, |i, chunk| {
+                let v = nodes[i];
+                let row: &[i8] = match miss_idx.get(&v) {
+                    Some(&j) => miss_rows[j].as_slice(),
+                    None => cache.peek(v as u64).expect("row cached in pass 1").data.data(),
+                };
+                chunk.copy_from_slice(row);
             });
-            data.extend_from_slice(q.data.data());
         }
-        QTensor {
-            data: Dense::from_vec(&[nodes.len(), dim], data),
-            scale: self.scale,
-            bits: self.bits,
+        // Pass 4: admit the fresh rows (oldest-first eviction under a bound).
+        for (v, row) in miss_nodes.into_iter().zip(miss_rows) {
+            self.cache.put(
+                v as u64,
+                QTensor { data: Dense::from_vec(&[1, dim], row), scale, bits },
+            );
         }
+        QTensor { data: out, scale: self.scale, bits: self.bits }
     }
 
     /// Gather and dequantize in one call — what the block forward consumes
@@ -107,6 +154,7 @@ impl QuantFeatureStore {
 mod tests {
     use super::*;
     use crate::graph::generators::random_features;
+    use crate::quant::{quantize_with_scale, Rounding};
 
     #[test]
     fn gather_rows_slices_in_order() {

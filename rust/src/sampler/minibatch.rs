@@ -1,5 +1,8 @@
 //! The mini-batch training engine: seeded shuffled batches → layered
-//! neighbor sampling → (quantized) feature gather → block forward/backward.
+//! neighbor sampling → (quantized) feature gather → block forward/backward,
+//! with stage one (sampling + gather) prefetched on a producer thread
+//! (`SamplerConfig::prefetch` batches ahead — the paper's §4.2 overlap;
+//! see [`super::run_prefetched`]).
 //!
 //! This is the sampled counterpart of [`crate::coordinator::Trainer`] and
 //! produces the same [`TrainReport`] so the CLI, benches and repro drivers
@@ -19,8 +22,8 @@
 //!   [`TaskHead`] decoder under BCE-with-logits.
 
 use super::{
-    adjust_fanouts, gather_rows, sample_lp_step, shuffled_batches, EdgeBatcher,
-    NeighborSampler, QuantFeatureStore,
+    adjust_fanouts, run_prefetched, shuffled_batches, BatchTarget, EdgeBatcher, FeatureGather,
+    NeighborSampler, PreparedBatch, QuantFeatureStore, SampleStage,
 };
 use crate::config::{TaskKind, TrainConfig};
 use crate::coordinator::qcache::CacheStats;
@@ -32,7 +35,6 @@ use crate::model::{
 };
 use crate::quant::rng::mix_seeds;
 use crate::quant::{derive_bits, DEFAULT_ERROR_TARGET};
-use crate::tensor::Dense;
 
 /// Mini-batch neighbor-sampling trainer (node classification *and* link
 /// prediction — see the module docs).
@@ -162,14 +164,20 @@ impl MiniBatchTrainer {
 
     /// Run the configured number of epochs; every epoch sweeps all training
     /// seeds (nodes for NC, canonical positive edges for LP) once in
-    /// shuffled mini-batches.
+    /// shuffled mini-batches. With `SamplerConfig::prefetch > 0` every
+    /// epoch runs stage one (sampling + gather) on a producer thread,
+    /// `prefetch` batches ahead of the training thread — bit-identical to
+    /// the sequential sweep (`tests/pipeline_equivalence.rs`).
     pub fn run(&mut self) -> crate::Result<TrainReport> {
         let mut losses = Vec::with_capacity(self.cfg.epochs);
         let mut evals = Vec::with_capacity(self.cfg.epochs);
         let mut wall = 0.0f64;
+        let mut wait = 0.0f64;
         for epoch in 0..self.cfg.epochs {
-            let (loss, secs) = crate::metrics::time_once(|| self.train_epoch(epoch as u64));
+            let (res, secs) = crate::metrics::time_once(|| self.train_epoch(epoch as u64));
+            let (loss, wait_s) = res?;
             wall += secs;
+            wait += wait_s;
             let eval = self.evaluate();
             if self.cfg.log_every > 0 && epoch % self.cfg.log_every == 0 {
                 println!(
@@ -195,108 +203,73 @@ impl MiniBatchTrainer {
             epochs_to_converge,
             cache: self.gather_stats(),
             cache_bytes: self.gather_cached_bytes(),
+            prefetch_wait_s: wait,
         })
     }
 
-    /// Gather the input features for a block frontier (quantized when the
-    /// mode quantizes).
-    fn gather_x0(&mut self, input_nodes: &[u32]) -> Dense<f32> {
-        match &mut self.store {
-            Some(store) => store.gather_dequantized(&self.data.features, input_nodes),
-            None => gather_rows(&self.data.features, input_nodes),
-        }
-    }
-
-    /// One epoch: sample, gather, step per batch. Returns the mean batch
-    /// loss.
-    fn train_epoch(&mut self, epoch: u64) -> f32 {
-        match self.task {
-            Task::NodeClassification => self.train_epoch_nc(epoch),
-            Task::LinkPrediction => self.train_epoch_lp(epoch),
-        }
-    }
-
-    fn train_epoch_nc(&mut self, epoch: u64) -> f32 {
-        let batches = shuffled_batches(
-            &self.data.train_nodes,
-            self.cfg.sampler.batch_size,
-            mix_seeds(&[self.cfg.seed, epoch]),
-        );
-        let mut total = 0.0f32;
-        let mut steps = 0usize;
-        for (bi, batch) in batches.iter().enumerate() {
-            if batch.is_empty() {
-                continue;
-            }
-            let stream = mix_seeds(&[epoch, bi as u64]);
-            let blocks = self.sampler.sample_blocks(&self.csr_in, &self.degrees, batch, stream);
-            let input_nodes = blocks[0].src_nodes.clone();
-            let x0 = match &mut self.store {
-                Some(store) => store.gather_dequantized(&self.data.features, &input_nodes),
-                None => gather_rows(&self.data.features, &input_nodes),
-            };
-            let labels: Vec<u32> = batch.iter().map(|&v| self.data.labels[v as usize]).collect();
-            let nodes: Vec<u32> = (0..batch.len() as u32).collect();
-            let loss = self
-                .model
-                .train_step_blocks(&blocks, &x0, &mut self.opt, &mut |lg| {
-                    softmax_cross_entropy(lg, &labels, &nodes)
-                })
-                .0;
-            total += loss;
-            steps += 1;
-        }
-        if steps == 0 {
-            0.0
-        } else {
-            total / steps as f32
-        }
-    }
-
-    /// LP epoch: shuffled sweep over the canonical positive edges;
-    /// edge-seeded blocks with seed-edge exclusion. The per-batch assembly
-    /// is [`sample_lp_step`] — shared verbatim with the multi-GPU workers,
-    /// which is what keeps the 1-worker replay exact.
-    fn train_epoch_lp(&mut self, epoch: u64) -> f32 {
+    /// One epoch through the prefetch pipeline: stage one (sampling +
+    /// gather — the [`SampleStage`] definition shared with the multi-GPU
+    /// workers) produces batches `prefetch` ahead on a producer thread
+    /// while this thread steps the model; `prefetch = 0` runs the same
+    /// loop strictly sequentially. Returns the mean batch loss and the
+    /// measured stage-one seconds the pipeline failed to hide.
+    fn train_epoch(&mut self, epoch: u64) -> crate::Result<(f32, f64)> {
+        let shuffle_seed = mix_seeds(&[self.cfg.seed, epoch]);
+        let batches = match self.task {
+            Task::NodeClassification => shuffled_batches(
+                &self.data.train_nodes,
+                self.cfg.sampler.batch_size,
+                shuffle_seed,
+            ),
+            Task::LinkPrediction => shuffled_batches(
+                &self.edges.as_ref().expect("LP task has an EdgeBatcher").edge_ids(),
+                self.cfg.sampler.batch_size,
+                shuffle_seed,
+            ),
+        };
         let neg_per_pos = self.head.neg_per_pos();
-        let ids = self.edges.as_ref().expect("LP task has an EdgeBatcher").edge_ids();
-        let batches = shuffled_batches(
-            &ids,
-            self.cfg.sampler.batch_size,
-            mix_seeds(&[self.cfg.seed, epoch]),
-        );
+        // Field-level borrow split: stage one owns the sampler + store side
+        // of `self` (moved to the producer thread), the consumer keeps the
+        // model + optimizer side.
+        let Self { model, opt, store, sampler, csr_in, degrees, data, edges, cfg, .. } = self;
+        let mut stage = SampleStage {
+            sampler,
+            csr_in,
+            degrees: degrees.as_slice(),
+            labels: &data.labels,
+            lp: edges.as_ref().map(|b| (b, neg_per_pos)),
+            gather: FeatureGather::new(&data.features, store.as_mut()),
+        };
         let mut total = 0.0f32;
         let mut steps = 0usize;
-        for (bi, batch) in batches.iter().enumerate() {
-            if batch.is_empty() {
-                continue;
-            }
-            let stream = mix_seeds(&[epoch, bi as u64]);
-            let (blocks, pairs) = sample_lp_step(
-                self.edges.as_ref().expect("LP task has an EdgeBatcher"),
-                &self.sampler,
-                &self.csr_in,
-                &self.degrees,
-                batch,
-                stream,
-                neg_per_pos,
-            );
-            let input_nodes = blocks[0].src_nodes.clone();
-            let x0 = self.gather_x0(&input_nodes);
-            let loss = self
-                .model
-                .train_step_blocks(&blocks, &x0, &mut self.opt, &mut |emb| {
-                    TaskHead::lp_loss_grad(emb, &pairs)
-                })
-                .0;
-            total += loss;
-            steps += 1;
-        }
-        if steps == 0 {
-            0.0
-        } else {
-            total / steps as f32
-        }
+        let stats = run_prefetched(
+            batches.len(),
+            cfg.sampler.prefetch,
+            |bi| stage.prepare(&batches[bi], mix_seeds(&[epoch, bi as u64])),
+            |_, pb: PreparedBatch| {
+                let loss = match &pb.target {
+                    BatchTarget::Nc { labels } => {
+                        let nodes: Vec<u32> = (0..labels.len() as u32).collect();
+                        model
+                            .train_step_blocks(&pb.blocks, &pb.x0, opt, &mut |lg| {
+                                softmax_cross_entropy(lg, labels, &nodes)
+                            })
+                            .0
+                    }
+                    BatchTarget::Lp { pairs } => {
+                        model
+                            .train_step_blocks(&pb.blocks, &pb.x0, opt, &mut |emb| {
+                                TaskHead::lp_loss_grad(emb, pairs)
+                            })
+                            .0
+                    }
+                };
+                total += loss;
+                steps += 1;
+            },
+        )?;
+        let loss = if steps == 0 { 0.0 } else { total / steps as f32 };
+        Ok((loss, stats.wait_s))
     }
 
     /// Full-graph evaluation on the held-out split (the model is bound to
@@ -329,8 +302,7 @@ mod tests {
                 enabled: true,
                 fanouts: vec![10, 10],
                 batch_size: 64,
-                seed: 0x5A17,
-                cache_nodes: 0,
+                ..Default::default()
             },
             ..Default::default()
         }

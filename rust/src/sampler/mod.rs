@@ -21,9 +21,16 @@
 //!   canonical positive edges, seeded uniform negatives, endpoint seed
 //!   lists and the per-batch exclusion set;
 //! - [`QuantFeatureStore`] / [`gather_rows`] — the per-batch feature
-//!   gather; the quantized path slices INT8 rows under one shared scale and
-//!   caches hot (frequently re-sampled) nodes in a
+//!   gather (data-parallel row copies and miss quantization); the quantized
+//!   path slices INT8 rows under one shared scale and caches hot
+//!   (frequently re-sampled) nodes in a
 //!   [`QuantCache`](crate::coordinator::QuantCache);
+//! - [`run_prefetched`] / [`SampleStage`] — the pipelined batch-prefetch
+//!   engine (the paper's §4.2 overlap made real): a producer thread runs
+//!   stage one (sampling + quantized gather) for batches `t+1..t+depth`
+//!   over a bounded channel while the training thread consumes batch `t`;
+//!   per-batch RNG streams make prefetched runs bit-identical to
+//!   sequential ones (`prefetch = 0`);
 //! - [`MiniBatchTrainer`] — the epoch engine gluing it all to the unified
 //!   [`GnnModel`](crate::model::GnnModel) block path for **both** tasks
 //!   (node classification and link prediction, see
@@ -37,9 +44,14 @@ mod edge;
 mod gather;
 mod minibatch;
 mod neighbor;
+mod pipeline;
 
 pub use block::Block;
 pub use edge::{sample_lp_step, EdgeBatch, EdgeBatcher};
 pub use gather::{gather_rows, QuantFeatureStore};
 pub use minibatch::MiniBatchTrainer;
 pub use neighbor::{adjust_fanouts, shuffled_batches, NeighborSampler};
+pub use pipeline::{
+    run_prefetched, spawn_producer, BatchTarget, FeatureGather, PrefetchStats, PreparedBatch,
+    ProducerHandle, SampleStage,
+};

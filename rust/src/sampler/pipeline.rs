@@ -1,0 +1,395 @@
+//! Pipelined mini-batch prefetch: truly overlap sampling + quantized
+//! feature gathering with model compute (the paper's §4.2 inter-primitive
+//! overlap — "we overlap the feature quantization with the subgraph
+//! sampling" — made real instead of modelled).
+//!
+//! Two pieces live here:
+//!
+//! - [`run_prefetched`] / [`spawn_producer`] — a bounded double-buffer
+//!   producer/consumer engine: a background thread runs stage one for
+//!   batches `t+1..t+depth` while the caller's thread consumes batch `t`.
+//!   `depth == 0` degenerates to the strictly sequential loop. Because
+//!   every batch's RNG stream is keyed only by `(epoch, batch index)`
+//!   (`mix_seeds(&[epoch, bi])`), a prefetched run is **bit-identical** to
+//!   a sequential one — `tests/pipeline_equivalence.rs` enforces this.
+//!   A panic on the producer thread surfaces as an error on the consumer
+//!   (never a hang), and dropping the handle shuts the producer down.
+//!
+//! - [`SampleStage`] / [`PreparedBatch`] / [`FeatureGather`] — **the**
+//!   stage-one definition: neighbor sampling (node- or edge-seeded with the
+//!   LP leakage guard) plus the (quantized) feature gather, shared verbatim
+//!   by [`MiniBatchTrainer`](super::MiniBatchTrainer) and the multi-GPU
+//!   workers, so the 1-worker step-for-step replay guarantee
+//!   (`tests/multigpu_equivalence.rs`) survives the pipelining. The whole
+//!   stage is `Send`: the sampler is immutable, the edge batcher is
+//!   read-only, and the quantized feature store moves to the producer
+//!   thread (owned `&mut`) or stays process-wide behind a `Mutex` (the
+//!   multi-GPU shape) — cache stats keep flowing into `TrainReport.cache`
+//!   either way.
+
+use super::{
+    gather_rows, sample_lp_step, Block, EdgeBatcher, NeighborSampler, QuantFeatureStore,
+};
+use crate::graph::Csr;
+use crate::quant::dequantize;
+use crate::tensor::Dense;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Mutex;
+use std::thread::{Scope, ScopedJoinHandle};
+use std::time::Instant;
+
+/// What the consumer needs besides blocks + features to run the step.
+#[derive(Debug, Clone)]
+pub enum BatchTarget {
+    /// Node classification: per-seed labels (`labels[i]` belongs to seed row
+    /// `i` of the final block — the softmax-CE rows are `0..labels.len()`).
+    Nc { labels: Vec<u32> },
+    /// Link prediction: candidate pairs `(u, v, target)` with local indices
+    /// into the final block's destination rows.
+    Lp { pairs: Vec<(u32, u32, f32)> },
+}
+
+/// One fully prepared mini-batch — everything `train_step_blocks` consumes.
+#[derive(Debug)]
+pub struct PreparedBatch {
+    /// Per-layer sampled blocks, input-side first.
+    pub blocks: Vec<Block>,
+    /// Gathered input features for `blocks[0].src_nodes` (dequantized when
+    /// the run quantizes the gather).
+    pub x0: Dense<f32>,
+    /// Loss-side payload.
+    pub target: BatchTarget,
+}
+
+/// How stage one turns an input frontier into feature rows.
+///
+/// All variants are `Send`, so a [`SampleStage`] can move to (or be
+/// mutably borrowed by) a producer thread.
+pub enum FeatureGather<'a> {
+    /// FP32 rows straight from the feature table.
+    Plain(&'a Dense<f32>),
+    /// Quantized gather through a stage-owned store (single-trainer shape).
+    Quantized { features: &'a Dense<f32>, store: &'a mut QuantFeatureStore },
+    /// Quantized gather through a process-wide shared store (multi-GPU
+    /// shape). The lock is held only for the INT8 row gather; the
+    /// full-width dequantize runs outside it.
+    Shared { features: &'a Dense<f32>, store: &'a Mutex<QuantFeatureStore> },
+}
+
+impl<'a> FeatureGather<'a> {
+    /// Single-trainer constructor: quantized when a store exists.
+    pub fn new(features: &'a Dense<f32>, store: Option<&'a mut QuantFeatureStore>) -> Self {
+        match store {
+            Some(store) => FeatureGather::Quantized { features, store },
+            None => FeatureGather::Plain(features),
+        }
+    }
+
+    /// Multi-worker constructor over an optional shared store.
+    pub fn shared(
+        features: &'a Dense<f32>,
+        store: Option<&'a Mutex<QuantFeatureStore>>,
+    ) -> Self {
+        match store {
+            Some(store) => FeatureGather::Shared { features, store },
+            None => FeatureGather::Plain(features),
+        }
+    }
+
+    /// Gather the feature rows of `nodes` as FP32 (dequantizing when the
+    /// gather is quantized).
+    pub fn gather(&mut self, nodes: &[u32]) -> Dense<f32> {
+        match self {
+            FeatureGather::Plain(features) => gather_rows(features, nodes),
+            FeatureGather::Quantized { features, store } => {
+                store.gather_dequantized(features, nodes)
+            }
+            FeatureGather::Shared { features, store } => {
+                let q = store.lock().unwrap().gather_quantized(features, nodes);
+                dequantize(&q)
+            }
+        }
+    }
+}
+
+/// Stage one of the pipeline: sample the blocks for a batch of seeds (nodes
+/// for NC, canonical positive-edge ids for LP) and gather their input
+/// features. One definition, two consumers — `MiniBatchTrainer` and the
+/// multi-GPU workers build their `SampleStage` from the same fields.
+pub struct SampleStage<'a> {
+    /// Layered fanout sampler (immutable — every draw is stream-keyed).
+    pub sampler: &'a NeighborSampler,
+    /// Parent in-edge CSR.
+    pub csr_in: &'a Csr,
+    /// Parent in-degrees (drives the blocks' GCN edge norms).
+    pub degrees: &'a [u32],
+    /// Parent-graph node labels (indexed by NC batches; unused for LP).
+    pub labels: &'a [u32],
+    /// LP only: the canonical positive edges + negatives drawn per positive.
+    pub lp: Option<(&'a EdgeBatcher, usize)>,
+    /// The feature gather (plain, quantized-owned or quantized-shared).
+    pub gather: FeatureGather<'a>,
+}
+
+impl SampleStage<'_> {
+    /// Run stage one for one batch: sample (node- or edge-seeded with the
+    /// leakage guard), gather features for the input frontier — borrowing
+    /// `blocks[0].src_nodes` in place, no per-batch copy — and assemble the
+    /// loss-side payload.
+    pub fn prepare(&mut self, batch: &[u32], stream: u64) -> PreparedBatch {
+        match self.lp {
+            None => {
+                let blocks =
+                    self.sampler.sample_blocks(self.csr_in, self.degrees, batch, stream);
+                let x0 = self.gather.gather(&blocks[0].src_nodes);
+                let labels: Vec<u32> =
+                    batch.iter().map(|&v| self.labels[v as usize]).collect();
+                PreparedBatch { blocks, x0, target: BatchTarget::Nc { labels } }
+            }
+            Some((batcher, neg_per_pos)) => {
+                let (blocks, pairs) = sample_lp_step(
+                    batcher,
+                    self.sampler,
+                    self.csr_in,
+                    self.degrees,
+                    batch,
+                    stream,
+                    neg_per_pos,
+                );
+                let x0 = self.gather.gather(&blocks[0].src_nodes);
+                PreparedBatch { blocks, x0, target: BatchTarget::Lp { pairs } }
+            }
+        }
+    }
+}
+
+/// Wall-clock accounting of a prefetched loop.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrefetchStats {
+    /// Stage-one time **not** hidden behind consumer compute: with
+    /// `depth == 0` this is the whole inline sample+gather time; with
+    /// `depth > 0` it is only the time the consumer blocked on the channel.
+    pub wait_s: f64,
+    /// Batches consumed.
+    pub batches: usize,
+}
+
+/// Handle to a scoped producer thread feeding a bounded channel.
+///
+/// Dropping the handle first closes the channel (so a blocked producer
+/// `send` fails and the thread exits) and then joins it, swallowing any
+/// panic — error paths can simply drop their sources. To *observe* a
+/// producer panic, use [`ProducerHandle::recv`], which joins on disconnect
+/// and surfaces the panic as an error.
+pub struct ProducerHandle<'scope, T> {
+    rx: Option<Receiver<T>>,
+    join: Option<ScopedJoinHandle<'scope, ()>>,
+}
+
+impl<T> ProducerHandle<'_, T> {
+    /// Blocking receive of the next prepared item. `Ok(None)` means the
+    /// producer finished cleanly; a producer panic becomes `Err` (never a
+    /// hang — the channel disconnects when the producer dies).
+    pub fn recv(&mut self) -> crate::Result<Option<T>> {
+        let Some(rx) = &self.rx else { return Ok(None) };
+        match rx.recv() {
+            Ok(item) => Ok(Some(item)),
+            Err(_) => match self.join.take() {
+                Some(handle) => match handle.join() {
+                    Ok(()) => Ok(None),
+                    Err(payload) => Err(anyhow::anyhow!(
+                        "prefetch producer thread panicked: {}",
+                        panic_message(&payload)
+                    )),
+                },
+                None => Ok(None),
+            },
+        }
+    }
+}
+
+impl<T> Drop for ProducerHandle<'_, T> {
+    fn drop(&mut self) {
+        // Close the channel before joining: a producer blocked in `send`
+        // unblocks with an error the moment the receiver is gone.
+        drop(self.rx.take());
+        if let Some(handle) = self.join.take() {
+            let _ = handle.join(); // panic already surfaced via recv, or moot
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Spawn a producer thread inside `scope` that runs `produce(i)` for
+/// `i in 0..num_batches` **in order**, feeding a bounded channel of
+/// `depth` slots (the double buffer: the producer runs at most `depth`
+/// batches ahead of the consumer).
+pub fn spawn_producer<'scope, T, P>(
+    scope: &'scope Scope<'scope, '_>,
+    depth: usize,
+    num_batches: usize,
+    mut produce: P,
+) -> ProducerHandle<'scope, T>
+where
+    T: Send + 'scope,
+    P: FnMut(usize) -> T + Send + 'scope,
+{
+    let (tx, rx) = sync_channel::<T>(depth.max(1));
+    let join = scope.spawn(move || {
+        for i in 0..num_batches {
+            let item = produce(i);
+            if tx.send(item).is_err() {
+                break; // consumer gone (early exit / error path)
+            }
+        }
+    });
+    ProducerHandle { rx: Some(rx), join: Some(join) }
+}
+
+/// Run `consume(i, produce(i))` for `i in 0..num_batches` with stage one
+/// (`produce`) prefetched `depth` batches ahead on a background thread.
+///
+/// - `depth == 0` (or a single batch): strictly sequential, no thread — the
+///   baseline the equivalence tests compare against.
+/// - `depth > 0`: `produce` moves to a producer thread; `consume` stays on
+///   the caller's thread. Items arrive in index order, so the observable
+///   sequence of `(i, item)` pairs is identical to the sequential loop.
+///
+/// Returns measured [`PrefetchStats`]; a producer panic is returned as an
+/// error after the batches produced before the panic have been consumed.
+pub fn run_prefetched<T, P, C>(
+    num_batches: usize,
+    depth: usize,
+    mut produce: P,
+    mut consume: C,
+) -> crate::Result<PrefetchStats>
+where
+    T: Send,
+    P: FnMut(usize) -> T + Send,
+    C: FnMut(usize, T),
+{
+    let mut stats = PrefetchStats::default();
+    if depth == 0 || num_batches <= 1 {
+        for i in 0..num_batches {
+            let t0 = Instant::now();
+            let item = produce(i);
+            stats.wait_s += t0.elapsed().as_secs_f64();
+            consume(i, item);
+            stats.batches += 1;
+        }
+        return Ok(stats);
+    }
+    std::thread::scope(|scope| {
+        let mut producer = spawn_producer(scope, depth, num_batches, &mut produce);
+        for i in 0..num_batches {
+            let t0 = Instant::now();
+            let item = producer.recv()?.ok_or_else(|| {
+                anyhow::anyhow!("prefetch producer ended early at batch {i}/{num_batches}")
+            })?;
+            stats.wait_s += t0.elapsed().as_secs_f64();
+            consume(i, item);
+            stats.batches += 1;
+        }
+        Ok(stats)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefetched_order_matches_sequential() {
+        for depth in [0usize, 1, 2, 7] {
+            let mut seen = Vec::new();
+            let stats = run_prefetched(
+                25,
+                depth,
+                |i| i * i,
+                |i, item| {
+                    assert_eq!(item, i * i);
+                    seen.push(i);
+                },
+            )
+            .unwrap();
+            assert_eq!(seen, (0..25).collect::<Vec<_>>(), "depth {depth}");
+            assert_eq!(stats.batches, 25);
+        }
+    }
+
+    #[test]
+    fn zero_batches_is_a_noop() {
+        for depth in [0usize, 3] {
+            let stats =
+                run_prefetched(0, depth, |_| panic!("no batches"), |_, _: ()| {}).unwrap();
+            assert_eq!(stats.batches, 0);
+            assert_eq!(stats.wait_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn fewer_batches_than_depth() {
+        // The channel is deeper than the whole epoch: everything buffers,
+        // order still holds.
+        let mut got = Vec::new();
+        run_prefetched(3, 16, |i| i + 100, |_, v| got.push(v)).unwrap();
+        assert_eq!(got, vec![100, 101, 102]);
+    }
+
+    #[test]
+    fn producer_panic_propagates_as_error_without_hang() {
+        let mut consumed = 0usize;
+        let err = run_prefetched(
+            10,
+            2,
+            |i| {
+                if i == 3 {
+                    panic!("stage one exploded at batch {i}");
+                }
+                i
+            },
+            |_, _| consumed += 1,
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("panicked"), "{msg}");
+        assert!(msg.contains("stage one exploded"), "{msg}");
+        // Batches produced before the panic were consumed in order.
+        assert_eq!(consumed, 3);
+    }
+
+    #[test]
+    fn consumer_early_drop_shuts_producer_down() {
+        // Dropping the handle mid-stream must not hang even while the
+        // producer is blocked on a full channel.
+        std::thread::scope(|scope| {
+            let mut h = spawn_producer(scope, 1, 1000, |i| i);
+            assert_eq!(h.recv().unwrap(), Some(0));
+            drop(h); // closes the channel, joins the producer
+        });
+    }
+
+    #[test]
+    fn stats_measure_inline_time_when_sequential() {
+        let stats = run_prefetched(
+            4,
+            0,
+            |i| {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                i
+            },
+            |_, _| {},
+        )
+        .unwrap();
+        assert!(stats.wait_s >= 0.004, "inline produce time must be charged");
+    }
+}

@@ -41,7 +41,6 @@ fn multi(train: TrainConfig, workers: usize, epochs: usize, quant: bool) -> Mult
         workers,
         epochs,
         quantize_grads: quant,
-        overlap_quantization: true,
         interconnect: Interconnect::pcie3(),
     }
 }
@@ -114,6 +113,36 @@ fn one_worker_matches_minibatch_trainer_linkpred() {
         assert!(
             (ms.loss - loss).abs() < 1e-6,
             "epoch {e}: multigpu {} vs minibatch {}",
+            ms.loss,
+            loss
+        );
+    }
+}
+
+#[test]
+fn one_worker_with_prefetch_replays_sequential_minibatch_trainer() {
+    // The replay guarantee must hold *across* pipeline modes: a strictly
+    // sequential single-GPU run (prefetch 0) and a 1-worker data-parallel
+    // run prefetching 3 batches ahead are the same training trajectory —
+    // per-batch RNG streams are keyed by position, not by when stage one
+    // runs.
+    let epochs = 4;
+    let mut train = base_train(TrainMode::tango(8), epochs);
+    train.sampler.prefetch = 0;
+
+    let mut mb = MiniBatchTrainer::from_config(&train).unwrap();
+    let single = mb.run().unwrap();
+
+    let data = datasets::tiny(train.seed);
+    let mut piped = train.clone();
+    piped.sampler.prefetch = 3;
+    let mg = run_data_parallel(&multi(piped, 1, epochs, false), &data).unwrap();
+
+    assert_eq!(mg.epochs.len(), single.losses.len());
+    for (e, (ms, loss)) in mg.epochs.iter().zip(&single.losses).enumerate() {
+        assert!(
+            (ms.loss - loss).abs() < 1e-6,
+            "epoch {e}: prefetched multigpu {} vs sequential minibatch {}",
             ms.loss,
             loss
         );

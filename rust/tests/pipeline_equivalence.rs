@@ -1,0 +1,133 @@
+//! Pipelined-vs-sequential equivalence: `--prefetch 0` and `--prefetch N`
+//! must produce **bit-identical** training traces.
+//!
+//! Stage one (sampling + quantized gather) keys every batch's RNG stream by
+//! `mix_seeds(&[epoch, batch index])` alone, and the quantized feature
+//! store quantizes against one static scale — so running stage one on a
+//! producer thread, batches ahead of the training step, changes *when* work
+//! happens but never *what* is computed. These tests pin that for both
+//! tasks, both models and both precision modes, plus the pipeline's edge
+//! cases (tiny epochs, depth > batch count, producer panics).
+
+use tango::config::{parse_mode, ModelKind, TaskKind, TrainConfig};
+use tango::sampler::{run_prefetched, MiniBatchTrainer};
+
+fn cfg(model: ModelKind, mode: &str, task: Option<TaskKind>, prefetch: usize) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        model,
+        dataset: "tiny".into(),
+        epochs: 3,
+        lr: 0.1,
+        hidden: 8,
+        heads: 2,
+        layers: 2,
+        mode: parse_mode(mode, 8).unwrap(),
+        auto_bits: false,
+        seed: 7,
+        log_every: 0,
+        task,
+        ..Default::default()
+    };
+    cfg.sampler.enabled = true;
+    cfg.sampler.fanouts = vec![4, 4];
+    cfg.sampler.batch_size = 32;
+    cfg.sampler.prefetch = prefetch;
+    cfg
+}
+
+/// Full report of a run.
+fn traces_report(cfg: &TrainConfig) -> tango::coordinator::TrainReport {
+    MiniBatchTrainer::from_config(cfg).unwrap().run().unwrap()
+}
+
+/// Full loss + eval traces of a run (bitwise comparison via `==`).
+fn traces(cfg: &TrainConfig) -> (Vec<f32>, Vec<f32>) {
+    let r = traces_report(cfg);
+    (r.losses, r.evals)
+}
+
+#[test]
+fn prefetch_is_bit_identical_across_models_modes_and_tasks() {
+    for model in [ModelKind::Gcn, ModelKind::Gat] {
+        for mode in ["fp32", "tango"] {
+            for task in [None, Some(TaskKind::LinkPrediction)] {
+                let seq = traces(&cfg(model, mode, task, 0));
+                let piped = traces(&cfg(model, mode, task, 2));
+                assert_eq!(
+                    seq, piped,
+                    "prefetch changed the trace: model {model:?}, mode {mode}, task {task:?}"
+                );
+                // Deeper prefetch, same trace.
+                let deep = traces(&cfg(model, mode, task, 8));
+                assert_eq!(seq, deep, "deep prefetch drifted: {model:?}/{mode}/{task:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prefetch_deeper_than_the_epoch_is_fine() {
+    // tiny has 160 train nodes; batch 128 → 2 batches per epoch, far fewer
+    // than the prefetch depth — everything buffers, nothing deadlocks.
+    let mut a = cfg(ModelKind::Gcn, "tango", None, 0);
+    a.sampler.batch_size = 128;
+    let mut b = a.clone();
+    b.sampler.prefetch = 16;
+    assert_eq!(traces(&a), traces(&b));
+}
+
+#[test]
+fn quantized_cache_stats_still_surface_with_prefetch_on() {
+    // The feature store moves to the producer thread for every epoch; its
+    // hit/miss/eviction accounting must still land in TrainReport.cache.
+    let mut c = cfg(ModelKind::Gcn, "tango", None, 3);
+    c.sampler.cache_nodes = 32;
+    let mut t = MiniBatchTrainer::from_config(&c).unwrap();
+    let r = t.run().unwrap();
+    let stats = r.cache.expect("quantized run reports cache stats");
+    assert!(stats.hits + stats.misses > 0, "{stats:?}");
+    assert!(stats.evictions > 0, "160 train nodes must overflow 32 slots");
+    assert!(r.cache_bytes > 0);
+}
+
+#[test]
+fn measured_stage_one_wait_lands_in_the_report() {
+    // Sequential runs charge the whole inline sample+gather time as wait;
+    // it must be positive, finite and bounded by the training wall time.
+    let r = traces_report(&cfg(ModelKind::Gcn, "tango", None, 0));
+    assert!(r.prefetch_wait_s > 0.0, "inline stage one must be charged");
+    assert!(r.prefetch_wait_s <= r.wall_secs, "wait is a slice of the wall");
+    // Prefetched runs still report a finite, non-negative wait.
+    let p = traces_report(&cfg(ModelKind::Gcn, "tango", None, 2));
+    assert!(p.prefetch_wait_s.is_finite() && p.prefetch_wait_s >= 0.0);
+    assert!(p.prefetch_wait_s <= p.wall_secs);
+}
+
+#[test]
+fn producer_panic_is_an_error_not_a_hang() {
+    let err = run_prefetched(
+        5,
+        2,
+        |i| {
+            if i == 2 {
+                panic!("injected stage-one failure");
+            }
+            i
+        },
+        |_, _| {},
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected stage-one failure"), "{msg}");
+}
+
+#[test]
+fn empty_batch_list_and_tiny_epochs_are_noops_not_hangs() {
+    // Zero batches (an empty seed sweep) with a nonzero depth.
+    let stats = run_prefetched(0, 4, |_| unreachable!("no batches"), |_, _: ()| {}).unwrap();
+    assert_eq!(stats.batches, 0);
+    // One batch degenerates to the sequential path.
+    let mut got = Vec::new();
+    run_prefetched(1, 4, |i| i, |_, v| got.push(v)).unwrap();
+    assert_eq!(got, vec![0]);
+}

@@ -157,7 +157,6 @@ fn multigpu_speedup_grows_with_workers() {
             workers: k,
             epochs: 1,
             quantize_grads: quant,
-            overlap_quantization: true,
             interconnect: Interconnect::pcie3(),
         };
         let r = run_data_parallel(&mc, &data).unwrap();
