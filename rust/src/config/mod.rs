@@ -9,6 +9,8 @@ mod toml_lite;
 
 pub use toml_lite::TomlDoc;
 
+pub use crate::policy::PolicyConfig;
+
 use crate::graph::datasets::Task;
 use crate::model::TrainMode;
 
@@ -128,6 +130,11 @@ pub fn mode_name(mode: &TrainMode) -> &'static str {
 pub struct SamplerConfig {
     /// Train on sampled mini-batches instead of full-graph epochs.
     pub enabled: bool,
+    /// Weight fanout draws by global in-degree (`--sampler degree` — the
+    /// Degree-Quant importance rule: hub nodes preferentially stay in the
+    /// sampled frontier). Off = uniform draws, byte-identical to the
+    /// pre-policy sampler.
+    pub degree_biased: bool,
     /// Per-layer fanouts, input-side layer first. Repeated (last entry) or
     /// truncated to the model's layer count at trainer construction.
     pub fanouts: Vec<usize>,
@@ -153,6 +160,7 @@ impl Default for SamplerConfig {
     fn default() -> Self {
         SamplerConfig {
             enabled: false,
+            degree_biased: false,
             fanouts: vec![10, 10],
             batch_size: 512,
             seed: 0x5A17,
@@ -162,33 +170,93 @@ impl Default for SamplerConfig {
     }
 }
 
-/// Parse a comma-separated fanout list: `"10,10"`, `"15, 10, 5"`.
-pub fn parse_fanouts(s: &str) -> Result<Vec<usize>, String> {
+/// Parse one comma-separated knob list (the shared scaffold of
+/// [`parse_fanouts`], [`parse_degree_buckets`] and [`parse_bucket_bits`]):
+/// split on commas, trim, skip empty parts, parse every entry as `T`,
+/// reject a list with no entries.
+fn parse_csv<T: std::str::FromStr>(s: &str, what: &str, example: &str) -> Result<Vec<T>, String>
+where
+    T::Err: std::fmt::Display,
+{
     let mut out = Vec::new();
     for part in s.split(',') {
         let part = part.trim();
         if part.is_empty() {
             continue;
         }
-        out.push(part.parse::<usize>().map_err(|e| format!("fanout '{part}': {e}"))?);
+        out.push(part.parse::<T>().map_err(|e| format!("{what} '{part}': {e}"))?);
     }
     if out.is_empty() {
-        return Err(format!("no fanouts in '{s}'"));
+        return Err(format!("no {what} entries in '{s}' (e.g. {example})"));
     }
+    Ok(out)
+}
+
+/// Parse a comma-separated fanout list: `"10,10"`, `"15, 10, 5"`.
+pub fn parse_fanouts(s: &str) -> Result<Vec<usize>, String> {
+    let out = parse_csv::<usize>(s, "fanout", "--fanouts 10,10")?;
     if out.contains(&0) {
         return Err("fanouts must be >= 1".to_string());
     }
     Ok(out)
 }
 
-/// Parse a sampler kind name: `"neighbor"` enables mini-batch sampling,
-/// `"full"`/`"none"` keeps full-graph epochs.
-pub fn parse_sampler(name: &str) -> Result<bool, String> {
-    match name.to_ascii_lowercase().as_str() {
-        "neighbor" | "neighbour" => Ok(true),
-        "full" | "none" | "off" => Ok(false),
-        other => Err(format!("unknown sampler '{other}' (neighbor|full)")),
+/// The `--sampler` choice: full-graph epochs, uniform mini-batch sampling,
+/// or degree-biased mini-batch sampling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerChoice {
+    /// Full-graph epochs (sampling off).
+    Full,
+    /// Uniform neighbor sampling.
+    Neighbor,
+    /// Degree-biased neighbor sampling (fanout draws ∝ global in-degree).
+    Degree,
+}
+
+impl SamplerChoice {
+    /// Write the choice into a [`SamplerConfig`]'s `enabled`/`degree_biased`
+    /// pair — the one rule CLI and TOML share.
+    pub fn apply(self, sampler: &mut SamplerConfig) {
+        match self {
+            SamplerChoice::Full => {
+                sampler.enabled = false;
+                sampler.degree_biased = false;
+            }
+            SamplerChoice::Neighbor => {
+                sampler.enabled = true;
+                sampler.degree_biased = false;
+            }
+            SamplerChoice::Degree => {
+                sampler.enabled = true;
+                sampler.degree_biased = true;
+            }
+        }
     }
+}
+
+/// Parse a sampler kind name: `"neighbor"` enables uniform mini-batch
+/// sampling, `"degree"` enables degree-biased mini-batch sampling,
+/// `"full"`/`"none"` keeps full-graph epochs.
+pub fn parse_sampler(name: &str) -> Result<SamplerChoice, String> {
+    match name.to_ascii_lowercase().as_str() {
+        "neighbor" | "neighbour" => Ok(SamplerChoice::Neighbor),
+        "degree" | "degree-biased" | "importance" => Ok(SamplerChoice::Degree),
+        "full" | "none" | "off" => Ok(SamplerChoice::Full),
+        other => Err(format!("unknown sampler '{other}' (neighbor|degree|full)")),
+    }
+}
+
+/// Parse a comma-separated ascending in-degree boundary list:
+/// `"8,64"` → buckets `deg >= 64` / `8 <= deg < 64` / `deg < 8`
+/// (monotonicity is enforced by `TrainConfig::validate`).
+pub fn parse_degree_buckets(s: &str) -> Result<Vec<u32>, String> {
+    parse_csv::<u32>(s, "degree-buckets", "--degree-buckets 8,64")
+}
+
+/// Parse a comma-separated per-bucket bit-width list, hottest bucket
+/// first: `"8,6,4"` (range checks live in `TrainConfig::validate`).
+pub fn parse_bucket_bits(s: &str) -> Result<Vec<u8>, String> {
+    parse_csv::<u8>(s, "bucket-bits", "--bucket-bits 8,6,4")
 }
 
 /// Full training-run configuration.
@@ -218,6 +286,11 @@ pub struct TrainConfig {
     pub log_every: usize,
     /// Mini-batch neighbor-sampling mode (disabled = full-graph epochs).
     pub sampler: SamplerConfig,
+    /// Degree-aware mixed-precision policy for the sampled feature gather
+    /// (`--degree-buckets` / `--bucket-bits`, TOML `[policy]`). The default
+    /// is the uniform policy — one bucket at the mode's bit width,
+    /// bit-identical to a policy-less run.
+    pub policy: PolicyConfig,
     /// Task override (`--task nc|linkpred`); `None` follows the dataset's
     /// declared task.
     pub task: Option<TaskKind>,
@@ -239,6 +312,7 @@ impl Default for TrainConfig {
             seed: 42,
             log_every: 0,
             sampler: SamplerConfig::default(),
+            policy: PolicyConfig::default(),
             task: None,
         }
     }
@@ -300,7 +374,7 @@ impl TrainConfig {
             cfg.auto_bits = v == "true";
         }
         if let Some(v) = get("sampler") {
-            cfg.sampler.enabled = parse_sampler(v)?;
+            parse_sampler(v)?.apply(&mut cfg.sampler);
         }
         if let Some(v) = get("fanouts") {
             cfg.sampler.fanouts = parse_fanouts(v)?;
@@ -327,6 +401,14 @@ impl TrainConfig {
         }
         if let Some(v) = get("task") {
             cfg.task = Some(parse_task(v)?);
+        }
+        // Degree-aware mixed-precision knobs live in their own `[policy]`
+        // section (shared by `tango train` and `tango multigpu` configs).
+        if let Some(v) = doc.get("policy", "degree_buckets") {
+            cfg.policy.degree_buckets = parse_degree_buckets(v)?;
+        }
+        if let Some(v) = doc.get("policy", "bucket_bits") {
+            cfg.policy.bucket_bits = parse_bucket_bits(v)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -355,6 +437,26 @@ impl TrainConfig {
         }
         if self.hidden == 0 {
             return Err("hidden must be >= 1".to_string());
+        }
+        if self.mode.quantize && !(1..=8).contains(&self.mode.bits) {
+            return Err(format!(
+                "bits must be within 1..=8 for quantized modes, got {}",
+                self.mode.bits
+            ));
+        }
+        // Degree-aware policy: boundary monotonicity, width range and the
+        // bucket-count/width-count match (actionable messages come from
+        // the policy module itself).
+        self.policy.validate()?;
+        // The policy drives the *quantized* feature gather — without a
+        // quantized mode there is no store to apply it to, and silently
+        // training FP32 under a "mixed-precision" banner would mislead.
+        if !self.policy.is_uniform() && !self.mode.quantize {
+            return Err(
+                "--degree-buckets/--bucket-bits need a quantized mode (e.g. --mode tango); \
+                 FP32 runs gather full-precision rows and never apply a policy"
+                    .to_string(),
+            );
         }
         Ok(())
     }
@@ -441,9 +543,78 @@ prefetch = 4
         assert!(parse_fanouts("a,b").is_err());
         assert!(parse_fanouts("10,0").is_err());
         assert!(TrainConfig::from_toml("[train]\nbatch_size = 0\n").is_err());
-        assert!(parse_sampler("neighbor").unwrap());
-        assert!(!parse_sampler("full").unwrap());
+        assert_eq!(parse_sampler("neighbor").unwrap(), SamplerChoice::Neighbor);
+        assert_eq!(parse_sampler("degree").unwrap(), SamplerChoice::Degree);
+        assert_eq!(parse_sampler("full").unwrap(), SamplerChoice::Full);
         assert!(parse_sampler("metis").is_err());
+    }
+
+    #[test]
+    fn sampler_choice_applies_to_config() {
+        let mut s = SamplerConfig::default();
+        SamplerChoice::Degree.apply(&mut s);
+        assert!(s.enabled && s.degree_biased);
+        SamplerChoice::Neighbor.apply(&mut s);
+        assert!(s.enabled && !s.degree_biased);
+        SamplerChoice::Full.apply(&mut s);
+        assert!(!s.enabled && !s.degree_biased);
+        // TOML path: the degree sampler rides the existing `sampler` key.
+        let cfg = TrainConfig::from_toml("[train]\nsampler = \"degree\"\n").unwrap();
+        assert!(cfg.sampler.enabled && cfg.sampler.degree_biased);
+    }
+
+    #[test]
+    fn policy_section_parses_and_validates() {
+        let text = r#"
+[train]
+model = "gcn"
+sampler = "neighbor"
+
+[policy]
+degree_buckets = "8,64"
+bucket_bits = "8,6,4"
+"#;
+        let cfg = TrainConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.policy.degree_buckets, vec![8, 64]);
+        assert_eq!(cfg.policy.bucket_bits, vec![8, 6, 4]);
+        assert!(!cfg.policy.is_uniform());
+        // No [policy] section = the uniform default.
+        let plain = TrainConfig::from_toml("[train]\nmodel = \"gcn\"\n").unwrap();
+        assert!(plain.policy.is_uniform());
+        // Parser-level junk.
+        assert!(parse_degree_buckets("8,64").is_ok());
+        assert!(parse_degree_buckets("a,b").is_err());
+        assert!(parse_degree_buckets("").is_err());
+        assert!(parse_bucket_bits("8,6,4").is_ok());
+        assert!(parse_bucket_bits("eight").is_err());
+    }
+
+    #[test]
+    fn policy_validation_rejects_bad_knobs_with_actionable_messages() {
+        let err = |t: &str| TrainConfig::from_toml(t).unwrap_err();
+        // Widths outside 1..=8.
+        let e = err("[policy]\nbucket_bits = \"9\"\n");
+        assert!(e.contains("1..=8"), "{e}");
+        let e = err("[policy]\nbucket_bits = \"0\"\n");
+        assert!(e.contains("1..=8"), "{e}");
+        // Non-monotone boundaries.
+        let e = err("[policy]\ndegree_buckets = \"64,8\"\n");
+        assert!(e.contains("strictly increasing"), "{e}");
+        let e = err("[policy]\ndegree_buckets = \"8,8\"\n");
+        assert!(e.contains("strictly increasing"), "{e}");
+        // Bucket-count / width-count mismatch.
+        let e = err("[policy]\ndegree_buckets = \"8,64\"\nbucket_bits = \"8,4\"\n");
+        assert!(e.contains("3 buckets"), "{e}");
+        // A policy without a quantized mode is silently dead — reject it.
+        let e = err("[train]\nmode = \"fp32\"\n\n[policy]\ndegree_buckets = \"8\"\n");
+        assert!(e.contains("quantized mode"), "{e}");
+        // Same checks on a programmatic config.
+        let mut cfg = TrainConfig::default();
+        cfg.policy.degree_buckets = vec![8];
+        cfg.policy.bucket_bits = vec![8, 6, 4];
+        assert!(cfg.validate().is_err());
+        cfg.policy.bucket_bits = vec![8, 4];
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

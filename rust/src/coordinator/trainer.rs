@@ -40,6 +40,10 @@ pub struct TrainReport {
     pub cache: Option<CacheStats>,
     /// Bytes of INT8 rows held by the feature cache at run end.
     pub cache_bytes: usize,
+    /// Per-bucket gather accounting of the degree-aware mixed-precision
+    /// policy (sampled quantized runs only; the uniform policy reports one
+    /// bucket).
+    pub policy: Option<crate::policy::PolicyGatherReport>,
     /// Sampled runs: measured stage-one (sampling + gather) seconds *not*
     /// hidden by the prefetch pipeline — the whole inline stage-one time
     /// when `prefetch = 0`, only the consumer's channel-wait otherwise.
@@ -73,6 +77,16 @@ impl Trainer {
     /// Build with an externally supplied dataset (multi-worker path).
     pub fn with_dataset(mut cfg: TrainConfig, data: Dataset) -> crate::Result<Self> {
         cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        // The degree-aware policy lives in the sampled gather path; a
+        // full-graph run would silently ignore it while claiming mixed
+        // precision. (Checked here, not in `TrainConfig::validate`: the
+        // multi-GPU engine always samples and never consults `enabled`.)
+        if !cfg.policy.is_uniform() && !cfg.sampler.enabled {
+            anyhow::bail!(
+                "degree-buckets/bucket-bits apply to the sampled feature gather — \
+                 enable sampling (--sampler neighbor or --sampler degree) to use them"
+            );
+        }
         let task = TaskKind::resolve(cfg.task, data.task);
         let head = TaskHead::for_task(task);
         let out_dim = head.out_dim(&data, cfg.hidden);
@@ -161,6 +175,7 @@ impl Trainer {
             epochs_to_converge,
             cache: None,
             cache_bytes: 0,
+            policy: None,
             prefetch_wait_s: 0.0,
         })
     }
@@ -220,6 +235,19 @@ mod tests {
             log_every: 0,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn full_graph_run_rejects_a_dead_policy() {
+        // A non-uniform policy with sampling off would silently train
+        // single-scale while the config claims mixed precision.
+        let mut cfg = quick_cfg(ModelKind::Gcn, "tango");
+        cfg.policy.degree_buckets = vec![8];
+        let err = Trainer::from_config(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("sampled feature gather"), "{err:#}");
+        // With sampling on, the same policy is accepted.
+        cfg.sampler.enabled = true;
+        assert!(Trainer::from_config(&cfg).is_ok());
     }
 
     #[test]

@@ -23,12 +23,17 @@
 //!   [`TaskHead`](model::TaskHead)s for softmax-CE node classification and
 //!   dot-product link prediction, the inter-primitive quantized-tensor
 //!   cache and reuse detection, adaptive kernel selection, the mini-batch
-//!   neighbor-sampling subsystem ([`sampler`]: layered fanout sampling,
-//!   MFG block extraction, edge-seeded LP batches with seed-edge
-//!   exclusion, bounded quantized feature gathering, and the pipelined
-//!   batch-prefetch engine — the paper's §4.2 overlap: a producer thread
-//!   runs sampling + quantized gather `prefetch` batches ahead of the
-//!   training step, bit-identical to the sequential sweep), a multi-worker
+//!   neighbor-sampling subsystem ([`sampler`]: layered fanout sampling —
+//!   uniform or degree-biased, MFG block extraction, edge-seeded LP
+//!   batches with seed-edge exclusion, bounded quantized feature
+//!   gathering, and the pipelined batch-prefetch engine — the paper's
+//!   §4.2 overlap: a producer thread runs sampling + quantized gather
+//!   `prefetch` batches ahead of the training step, bit-identical to the
+//!   sequential sweep), the degree-aware mixed-precision policy subsystem
+//!   ([`policy`]: degree buckets × per-bucket bit widths with per-bucket
+//!   static scales and gather-traffic accounting — the Degree-Quant/BiFeat
+//!   rule that keeps hot nodes at high precision and compresses the cold
+//!   tail, `--degree-buckets 8,64 --bucket-bits 8,6,4`), a multi-worker
 //!   data-parallel simulator whose workers train persistent
 //!   [`AnyModel`](model::AnyModel)s on the same sampler `Block` pipeline
 //!   for both tasks (per-worker sampling streams *and* per-worker prefetch
@@ -63,6 +68,7 @@ pub mod metrics;
 pub mod model;
 pub mod multigpu;
 pub mod perfmodel;
+pub mod policy;
 pub mod primitives;
 pub mod quant;
 pub mod repro;

@@ -4,9 +4,9 @@
 //! tango train  [--config cfg.toml] [--model gcn|gat] [--dataset NAME]
 //!              [--task nc|linkpred] [--mode fp32|tango|test1|test2|exact]
 //!              [--epochs N] [--bits B] [--auto-bits] [--lr F] [--hidden N]
-//!              [--seed S] [--sampler neighbor|full] [--fanouts 10,10]
+//!              [--seed S] [--sampler neighbor|degree|full] [--fanouts 10,10]
 //!              [--batch-size N] [--sample-seed S] [--cache-nodes N]
-//!              [--prefetch N]
+//!              [--prefetch N] [--degree-buckets 8,64] [--bucket-bits 8,6,4]
 //! tango repro  <table1|fig2|fig7|...|fig16|table2|all> [--quick]
 //!              [--epochs N] [--speed-epochs N]
 //! tango plan                # print the derived quantization-caching plan
@@ -15,7 +15,17 @@
 //!                [--task nc|linkpred] [--quantize-grads]
 //!                [--fanouts 10,10] [--batch-size N] [--sample-seed S]
 //!                [--cache-nodes N] [--prefetch N]
+//!                [--sampler neighbor|degree] [--degree-buckets 8,64]
+//!                [--bucket-bits 8,6,4]
 //! ```
+//!
+//! `--degree-buckets`/`--bucket-bits` (TOML `[policy]`) configure the
+//! degree-aware mixed-precision policy for the sampled feature gather:
+//! ascending in-degree boundaries partition the nodes (bucket 0 hottest),
+//! and the width list — hottest bucket first — keeps high-degree nodes at
+//! high precision while compressing the cold tail below INT8. `--sampler
+//! degree` additionally weights fanout draws by global in-degree. Left
+//! unset, the uniform policy is bit-identical to previous behaviour.
 //!
 //! `--prefetch N` is the paper's §4.2 overlap: a producer thread runs
 //! neighbor sampling + the quantized feature gather up to `N` batches
@@ -66,8 +76,10 @@ fn print_help() {
         "tango — quantized GNN training (SC'23 reproduction)\n\n\
          subcommands:\n\
          \x20 train      train a GCN/GAT with Tango or baseline modes\n\
-         \x20            (--sampler neighbor for sampled mini-batches,\n\
-         \x20            --task nc|linkpred to pick the task head)\n\
+         \x20            (--sampler neighbor|degree for sampled mini-batches,\n\
+         \x20            --task nc|linkpred to pick the task head,\n\
+         \x20            --degree-buckets/--bucket-bits for the degree-aware\n\
+         \x20            mixed-precision gather policy)\n\
          \x20 repro      regenerate a paper table/figure (or 'all')\n\
          \x20 plan       print the quantization-caching plan for a GAT layer\n\
          \x20 artifacts  list and smoke-run the AOT artifacts\n\
@@ -75,6 +87,30 @@ fn print_help() {
          \x20            mini-batches (shares --fanouts/--batch-size/\n\
          \x20            --sample-seed/--cache-nodes/--prefetch with train)\n"
     );
+}
+
+/// Print the active degree-aware policy banner, if any (shared by `train`
+/// and `multigpu` so the two commands describe the same knobs identically).
+fn print_policy_config(policy: &tango::config::PolicyConfig, mode_bits: u8) {
+    if !policy.is_uniform() {
+        println!(
+            "policy: degree buckets {:?}, bucket bits {:?} (hottest first)",
+            policy.degree_buckets,
+            policy.effective_bits(mode_bits)
+        );
+    }
+}
+
+/// Print the per-bucket gather summary of a mixed-policy run (shared by
+/// `train` and `multigpu`).
+fn print_policy_report(policy: Option<&tango::policy::PolicyGatherReport>) {
+    if let Some(policy) = policy {
+        if policy.is_mixed() {
+            for line in policy.summary_lines() {
+                println!("{line}");
+            }
+        }
+    }
 }
 
 /// Read the `--config` file, if given (shared by `train` and `multigpu` so
@@ -119,8 +155,9 @@ fn train_config_with_toml(args: &Args, toml: Option<&str>) -> tango::Result<Trai
         cfg.auto_bits = true;
     }
     if let Some(s) = args.flags.get("sampler") {
-        cfg.sampler.enabled =
-            tango::config::parse_sampler(s).map_err(|e| anyhow::anyhow!(e))?;
+        tango::config::parse_sampler(s)
+            .map_err(|e| anyhow::anyhow!(e))?
+            .apply(&mut cfg.sampler);
     }
     if let Some(t) = args.flags.get("task") {
         cfg.task = Some(tango::config::parse_task(t).map_err(|e| anyhow::anyhow!(e))?);
@@ -135,6 +172,14 @@ fn train_config_with_toml(args: &Args, toml: Option<&str>) -> tango::Result<Trai
         anyhow::bail!("--cache-nodes must be >= 1 (omit the flag for an unbounded cache)");
     }
     cfg.sampler.prefetch = args.get_as("prefetch", cfg.sampler.prefetch);
+    if let Some(s) = args.flags.get("degree-buckets") {
+        cfg.policy.degree_buckets =
+            tango::config::parse_degree_buckets(s).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(s) = args.flags.get("bucket-bits") {
+        cfg.policy.bucket_bits =
+            tango::config::parse_bucket_bits(s).map_err(|e| anyhow::anyhow!(e))?;
+    }
     cfg.log_every = args.get_as("log-every", 10);
     // Reject degenerate knob combinations (e.g. `--batch-size 0`) with an
     // actionable message instead of panicking mid-run.
@@ -154,10 +199,14 @@ fn cmd_train(args: &Args) -> tango::Result<()> {
     );
     if cfg.sampler.enabled {
         println!(
-            "sampler: neighbor, fanouts {:?}, batch size {}, prefetch {}",
-            cfg.sampler.fanouts, cfg.sampler.batch_size, cfg.sampler.prefetch
+            "sampler: {}, fanouts {:?}, batch size {}, prefetch {}",
+            if cfg.sampler.degree_biased { "degree-biased" } else { "neighbor" },
+            cfg.sampler.fanouts,
+            cfg.sampler.batch_size,
+            cfg.sampler.prefetch
         );
     }
+    print_policy_config(&cfg.policy, cfg.mode.bits);
     let mut trainer = Trainer::from_config(&cfg)?;
     let task = trainer.task();
     println!(
@@ -189,6 +238,7 @@ fn cmd_train(args: &Args) -> tango::Result<()> {
     if let Some(stats) = report.cache {
         println!("feature cache: {}", stats.summary(report.cache_bytes));
     }
+    print_policy_report(report.policy.as_ref());
     Ok(())
 }
 
@@ -283,15 +333,17 @@ fn cmd_multigpu(args: &Args) -> tango::Result<()> {
     }
     let task = tango::config::TaskKind::resolve(cfg.train.task, data.task);
     println!(
-        "multigpu: {} workers, task {}, fanouts {:?}, batch size {}, {} payloads, \
-         prefetch {}",
+        "multigpu: {} workers, task {}, {} sampler, fanouts {:?}, batch size {}, \
+         {} payloads, prefetch {}",
         cfg.workers,
         tango::config::task_name(task),
+        if cfg.train.sampler.degree_biased { "degree-biased" } else { "uniform" },
         cfg.train.sampler.fanouts,
         cfg.train.sampler.batch_size,
         if cfg.quantize_grads { "quantized" } else { "fp32" },
         cfg.train.sampler.prefetch
     );
+    print_policy_config(&cfg.train.policy, cfg.train.mode.bits);
     let report = run_data_parallel(&cfg, &data)?;
     for (i, e) in report.epochs.iter().enumerate() {
         println!(
@@ -308,5 +360,6 @@ fn cmd_multigpu(args: &Args) -> tango::Result<()> {
     if let Some(stats) = report.cache {
         println!("shared feature cache: {}", stats.summary(report.cache_bytes));
     }
+    print_policy_report(report.policy.as_ref());
     Ok(())
 }

@@ -24,9 +24,26 @@ pub fn ring_transfer_bytes(n: usize, k: usize, elem_bytes: f64) -> f64 {
 ///   along with each transferred chunk — `2·(k−1)` chunk sends per worker
 ///   (reduce-scatter + all-gather), 4 bytes each.
 pub fn allreduce_payload_bytes(n: usize, k: usize, quantized: bool) -> f64 {
-    let elem_bytes = if quantized { 1.0 } else { 4.0 };
+    allreduce_payload_bits(n, k, if quantized { Some(8) } else { None })
+}
+
+/// [`allreduce_payload_bytes`] generalized to sub-byte payload widths:
+/// `bits = None` is FP32 (4-byte elements); `Some(b)` moves `b`-bit packed
+/// elements (`b/8` bytes each — `Some(8)` is exactly the INT8 accounting,
+/// and the 1-bit ternary grid charges two physical bits, see
+/// [`crate::quant::packed_bits_per_elem`]) plus the per-chunk FP32 scales.
+/// This is how quantized gradient exchange honours a non-INT8 run width
+/// (`--bits 4 --quantize-grads` charges half-byte elements).
+pub fn allreduce_payload_bits(n: usize, k: usize, bits: Option<u8>) -> f64 {
+    let elem_bytes = match bits {
+        None => 4.0,
+        Some(b) => {
+            assert!((1..=8).contains(&b), "payload width {b} unsupported (1..=8)");
+            crate::quant::packed_bits_per_elem(b) as f64 / 8.0
+        }
+    };
     let scale_bytes =
-        if quantized && k > 1 { 4.0 * 2.0 * (k as f64 - 1.0) } else { 0.0 };
+        if bits.is_some() && k > 1 { 4.0 * 2.0 * (k as f64 - 1.0) } else { 0.0 };
     ring_transfer_bytes(n, k, elem_bytes) + scale_bytes
 }
 
@@ -44,6 +61,13 @@ pub fn ring_messages(k: usize) -> usize {
 /// to what quantized gradient exchange does to the values (stochastic
 /// rounding, per-tensor scale riding along with the payload).
 pub fn ring_allreduce(grads: &mut [Vec<f32>], quantize_payload: bool, seed: u64) {
+    ring_allreduce_bits(grads, if quantize_payload { Some(8) } else { None }, seed)
+}
+
+/// [`ring_allreduce`] generalized to an explicit wire width: `None` moves
+/// FP32 payloads untouched, `Some(b)` quantizes each worker's contribution
+/// to `b` bits before "transfer" (`Some(8)` is exactly the INT8 path).
+pub fn ring_allreduce_bits(grads: &mut [Vec<f32>], bits: Option<u8>, seed: u64) {
     let k = grads.len();
     if k == 0 {
         return;
@@ -53,9 +77,9 @@ pub fn ring_allreduce(grads: &mut [Vec<f32>], quantize_payload: bool, seed: u64)
     // Reduce: sum of (possibly wire-quantized) contributions.
     let mut sum = vec![0.0f32; n];
     for (w, g) in grads.iter().enumerate() {
-        if quantize_payload {
+        if let Some(b) = bits {
             let t = Dense::from_vec(&[n], g.clone());
-            let q: QTensor = quantize(&t, 8, Rounding::Stochastic { seed: seed ^ w as u64 });
+            let q: QTensor = quantize(&t, b, Rounding::Stochastic { seed: seed ^ w as u64 });
             let deq = dequantize(&q);
             for (s, v) in sum.iter_mut().zip(deq.data()) {
                 *s += v;
@@ -126,6 +150,42 @@ mod tests {
         assert!(fp / q > 3.99, "{}", fp / q);
         assert_eq!(ring_messages(1), 0);
         assert_eq!(ring_messages(4), 6);
+    }
+
+    #[test]
+    fn payload_bits_generalize_the_int8_accounting() {
+        // Some(8) is exactly the bool path.
+        assert_eq!(
+            allreduce_payload_bits(1000, 4, Some(8)),
+            allreduce_payload_bytes(1000, 4, true)
+        );
+        assert_eq!(allreduce_payload_bits(1000, 4, None), allreduce_payload_bytes(1000, 4, false));
+        // Sub-byte widths shrink the element term but keep the scale term:
+        // 4-bit elements move half the bytes of INT8.
+        let q8 = allreduce_payload_bits(1000, 4, Some(8));
+        let q4 = allreduce_payload_bits(1000, 4, Some(4));
+        assert_eq!(q4, 750.0 + 24.0);
+        assert!(q4 < q8);
+        // The 1-bit ternary grid packs at two physical bits, same as 2-bit.
+        assert_eq!(
+            allreduce_payload_bits(1000, 4, Some(1)),
+            allreduce_payload_bits(1000, 4, Some(2))
+        );
+        assert_eq!(allreduce_payload_bits(1000, 1, Some(4)), 0.0);
+    }
+
+    #[test]
+    fn sub_byte_allreduce_still_agrees_and_approximates_the_mean() {
+        let a: Vec<f32> = (0..128).map(|i| (i as f32 * 0.29).sin()).collect();
+        let b: Vec<f32> = (0..128).map(|i| (i as f32 * 0.17).cos()).collect();
+        let want: Vec<f32> = a.iter().zip(&b).map(|(x, y)| (x + y) / 2.0).collect();
+        let mut grads = vec![a, b];
+        ring_allreduce_bits(&mut grads, Some(4), 11);
+        assert_eq!(grads[0], grads[1]);
+        let maxerr =
+            grads[0].iter().zip(&want).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        // 4-bit grid steps are ~1/7 of absmax; one step of slack per input.
+        assert!(maxerr < 0.3, "maxerr {maxerr}");
     }
 
     #[test]

@@ -8,9 +8,11 @@
 //!
 //! No GPUs or PCIe exist here, so the computation is real — worker threads
 //! run persistent GCN/GAT models over the sampler's [`crate::sampler::Block`]
-//! pipeline (per-worker [`crate::sampler::NeighborSampler`] streams, one
-//! process-wide [`crate::sampler::QuantFeatureStore`] for the feature
-//! gathers) and the ring all-reduce is numerically executed — while the
+//! pipeline (per-worker [`crate::sampler::NeighborSampler`] streams —
+//! uniform or degree-biased — and one process-wide
+//! [`crate::sampler::QuantFeatureStore`] for the feature gathers, driven by
+//! the shared degree-aware mixed-precision policy, see [`crate::policy`])
+//! and the ring all-reduce is numerically executed — while the
 //! *interconnect* is modelled: a bandwidth/latency/contention
 //! parameterisation of PCIe over which FP32 or quantized payloads are
 //! charged ([`Interconnect`], [`allreduce_payload_bytes`]).
@@ -25,6 +27,9 @@ mod allreduce;
 mod interconnect;
 mod worker;
 
-pub use allreduce::{allreduce_payload_bytes, ring_allreduce, ring_messages, ring_transfer_bytes};
+pub use allreduce::{
+    allreduce_payload_bits, allreduce_payload_bytes, ring_allreduce, ring_allreduce_bits,
+    ring_messages, ring_transfer_bytes,
+};
 pub use interconnect::Interconnect;
 pub use worker::{run_data_parallel, EpochStats, MultiGpuConfig, MultiGpuReport};

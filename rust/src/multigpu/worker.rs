@@ -6,8 +6,9 @@
 //! input features from one process-wide [`QuantFeatureStore`]. After every
 //! synchronous step the gradients move through the (numerically real) ring
 //! all-reduce, while the *interconnect* time is modelled per DESIGN.md
-//! §Substitutions with correct INT8-vs-FP32 byte accounting
-//! ([`allreduce_payload_bytes`]).
+//! §Substitutions with correct quantized-vs-FP32 byte accounting —
+//! including sub-byte packed widths when the run quantizes below INT8
+//! ([`allreduce_payload_bits`]).
 //!
 //! The paper's §4.2 overlap ("we overlap the feature quantization with the
 //! subgraph sampling") is **real** here, not modelled: each worker runs
@@ -26,7 +27,7 @@
 //! [`crate::sampler::MiniBatchTrainer`], so a 1-worker run replays it step
 //! for step on either task, with or without prefetch.
 
-use super::allreduce::{allreduce_payload_bytes, ring_allreduce, ring_messages};
+use super::allreduce::{allreduce_payload_bits, ring_allreduce_bits, ring_messages};
 use super::interconnect::Interconnect;
 use crate::config::{TaskKind, TomlDoc, TrainConfig};
 use crate::coordinator::qcache::CacheStats;
@@ -34,10 +35,11 @@ use crate::graph::datasets::{Dataset, Task};
 use crate::graph::partition::partition_nodes;
 use crate::graph::Csr;
 use crate::model::{softmax_cross_entropy, AnyModel, GnnModel, ModelSpec, Sgd, TaskHead};
+use crate::policy::PolicyGatherReport;
 use crate::quant::rng::mix_seeds;
 use crate::sampler::{
     adjust_fanouts, shuffled_batches, spawn_producer, BatchTarget, EdgeBatcher, FeatureGather,
-    NeighborSampler, PreparedBatch, ProducerHandle, QuantFeatureStore, SampleStage,
+    NeighborSampler, PreparedBatch, ProducerHandle, QuantFeatureStore, SampleStage, SamplerBias,
 };
 use crate::util::par;
 use std::sync::Mutex;
@@ -157,6 +159,9 @@ pub struct MultiGpuReport {
     pub cache: Option<CacheStats>,
     /// Bytes of INT8 rows held by the shared feature cache at run end.
     pub cache_bytes: usize,
+    /// Per-bucket gather accounting of the degree-aware mixed-precision
+    /// policy driving the shared store (None in FP32 mode).
+    pub policy: Option<PolicyGatherReport>,
 }
 
 impl MultiGpuReport {
@@ -228,14 +233,16 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
     let csr_in = Csr::from_coo(&data.graph);
     let degrees = data.graph.in_degrees();
     // One process-wide quantized feature store: the feature table is static,
-    // so all workers share a single scale and one hot-node row cache instead
-    // of quantizing per-worker copies (the BiFeat amortisation).
+    // so all workers share a single degree-bucketed policy (per-bucket
+    // static scales) and one hot-node row cache instead of quantizing
+    // per-worker copies (the BiFeat amortisation). The default uniform
+    // policy is the original single shared scale, bit for bit.
     let store: Option<Mutex<QuantFeatureStore>> = if train.mode.quantize {
-        Some(Mutex::new(QuantFeatureStore::with_capacity(
-            &data.features,
-            train.mode.bits,
-            train.sampler.cache_nodes,
-        )))
+        let policy = train
+            .policy
+            .materialize(train.mode.bits, &degrees, &data.features)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        Some(Mutex::new(QuantFeatureStore::with_policy(policy, train.sampler.cache_nodes)))
     } else {
         None
     };
@@ -252,16 +259,24 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
         .collect();
     // Per-worker samplers, outside the worker lock: stage one borrows them
     // on the producer threads while the training threads hold the models.
+    let bias = SamplerBias::from_config(&train.sampler);
     let samplers: Vec<NeighborSampler> = (0..k)
         .map(|w| {
-            NeighborSampler::new(
+            NeighborSampler::with_bias(
                 fanouts.clone(),
                 mix_seeds(&[train.sampler.seed, train.seed, w as u64]),
+                bias,
             )
         })
         .collect();
     let grad_elems = workers[0].lock().unwrap().model.num_params();
     let prefetch = train.sampler.prefetch;
+    // Quantized gradient exchange rides at the run's quantized width
+    // (INT8 by default; sub-byte modes pack sub-byte wire elements). FP32
+    // execution modes keep the historical INT8 wire when quantize_grads is
+    // on — there is no narrower width to inherit.
+    let grad_bits = if train.mode.quantize { train.mode.bits } else { 8 };
+    let wire_bits = if cfg.quantize_grads { Some(grad_bits) } else { None };
 
     let mut epochs = Vec::with_capacity(cfg.epochs);
     for epoch in 0..cfg.epochs {
@@ -393,15 +408,16 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                 // whose shard ran dry this round contribute nothing but
                 // still receive the averaged update below, staying in
                 // lockstep).
-                ring_allreduce(
+                ring_allreduce_bits(
                     &mut grads,
-                    cfg.quantize_grads,
+                    wire_bits,
                     mix_seeds(&[train.seed, epoch as u64, step as u64]),
                 );
                 // Modelled interconnect time: every worker joins the ring
-                // each step; quantized payloads move 1-byte elements plus
-                // per-chunk scales, FP32 payloads 4-byte elements.
-                let bytes = allreduce_payload_bytes(grad_elems, k, cfg.quantize_grads);
+                // each step; quantized payloads move packed `grad_bits`-bit
+                // elements plus per-chunk scales, FP32 payloads 4-byte
+                // elements.
+                let bytes = allreduce_payload_bits(grad_elems, k, wire_bits);
                 comm_s += cfg.interconnect.transfer_time(bytes, ring_messages(k), k);
                 // Apply the averaged gradient everywhere. A single FP32
                 // worker already holds exactly this state (mean of one
@@ -422,14 +438,14 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
         })?;
         epochs.push(stat);
     }
-    let (cache, cache_bytes) = match store {
+    let (cache, cache_bytes, policy) = match store {
         Some(m) => {
             let s = m.into_inner().unwrap();
-            (Some(s.stats()), s.cached_bytes())
+            (Some(s.stats()), s.cached_bytes(), Some(s.policy_report()))
         }
-        None => (None, 0),
+        None => (None, 0, None),
     };
-    Ok(MultiGpuReport { epochs, grad_elems, cache, cache_bytes })
+    Ok(MultiGpuReport { epochs, grad_elems, cache, cache_bytes, policy })
 }
 
 #[cfg(test)]
@@ -527,6 +543,36 @@ mod tests {
         let stats = r.cache.expect("quantized run shares one feature store");
         assert!(stats.hits + stats.misses > 0, "{stats:?}");
         assert!(r.cache_bytes > 0);
+        // The default uniform policy reports one INT8 bucket, packed 1:1.
+        let policy = r.policy.expect("quantized run reports its policy");
+        assert!(!policy.is_mixed());
+        assert_eq!(policy.bits, vec![8]);
+        assert_eq!(policy.packed_bytes(), policy.int8_bytes());
+    }
+
+    #[test]
+    fn mixed_policy_and_degree_sampler_run_data_parallel() {
+        let data = datasets::tiny(8);
+        let mut c = cfg(2, true);
+        c.train.mode = crate::model::TrainMode::tango(8);
+        c.train.sampler.degree_biased = true;
+        c.train.policy.degree_buckets = vec![6, 12];
+        c.train.policy.bucket_bits = vec![8, 6, 4];
+        let r = run_data_parallel(&c, &data).unwrap();
+        assert!(r.epochs.iter().all(|e| e.loss.is_finite()));
+        let policy = r.policy.expect("mixed run reports its policy");
+        assert!(policy.is_mixed());
+        assert_eq!(policy.bits, vec![8, 6, 4]);
+        assert!(
+            policy.packed_bytes() < policy.int8_bytes(),
+            "sub-INT8 buckets must shrink the gathered bytes: {} vs {}",
+            policy.packed_bytes(),
+            policy.int8_bytes()
+        );
+        // Deterministic under the mixed policy too.
+        let again = run_data_parallel(&c, &data).unwrap();
+        let l = |r: &MultiGpuReport| r.epochs.iter().map(|e| e.loss).collect::<Vec<f32>>();
+        assert_eq!(l(&r), l(&again));
     }
 
     #[test]

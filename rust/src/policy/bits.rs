@@ -1,0 +1,186 @@
+//! Per-bucket bit widths and the user-facing policy configuration.
+//!
+//! A [`BitPolicy`] maps degree buckets (hottest first — see
+//! [`DegreeBuckets`](super::DegreeBuckets)) to quantization bit widths.
+//! [`PolicyConfig`] is the raw knob pair the config layer carries
+//! (`--degree-buckets` / `--bucket-bits`, or the `[policy]` TOML section);
+//! it validates early with actionable messages and materializes into a
+//! [`FeaturePolicy`](super::FeaturePolicy) once a concrete graph and
+//! feature table are in hand.
+
+use super::buckets::DegreeBuckets;
+use super::feature::FeaturePolicy;
+use crate::tensor::Dense;
+
+/// Per-bucket quantization bit widths, hottest bucket first.
+///
+/// `--bucket-bits 8,6,4` with `--degree-buckets 8,64` keeps nodes of
+/// in-degree `>= 64` at INT8, mid-degree nodes at 6 bits, and compresses
+/// the `deg < 8` cold tail to 4 bits. Widths are `1..=8`; the 1-bit grid
+/// is ternary (`{-1, 0, +1}`) and packed accounting charges it two
+/// physical bits (see `quant::packed_bits_per_elem`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitPolicy {
+    bits: Vec<u8>,
+}
+
+impl BitPolicy {
+    /// Policy from a per-bucket width list. Rejects empty lists and widths
+    /// outside `1..=8`.
+    pub fn new(bits: Vec<u8>) -> Result<Self, String> {
+        if bits.is_empty() {
+            return Err(
+                "bucket-bits must name at least one width; e.g. --bucket-bits 8,6,4".to_string()
+            );
+        }
+        for &b in &bits {
+            if !(1..=8).contains(&b) {
+                return Err(format!(
+                    "bucket-bits entries must be within 1..=8, got {b}; \
+                     e.g. --bucket-bits 8,6,4"
+                ));
+            }
+        }
+        Ok(BitPolicy { bits })
+    }
+
+    /// One bucket at a single width.
+    pub fn uniform(bits: u8) -> Result<Self, String> {
+        Self::new(vec![bits])
+    }
+
+    /// The per-bucket width list (hottest bucket first).
+    pub fn bits(&self) -> &[u8] {
+        &self.bits
+    }
+
+    /// Width of one bucket.
+    pub fn bits_of(&self, bucket: usize) -> u8 {
+        self.bits[bucket]
+    }
+
+    /// Buckets this policy covers.
+    pub fn num_buckets(&self) -> usize {
+        self.bits.len()
+    }
+}
+
+/// The raw degree-aware policy knobs, as the config layer carries them
+/// (`TrainConfig::policy`). Both lists empty = the uniform policy: one
+/// bucket at the execution mode's bit width — configured that way the
+/// gather path is bit-identical to a policy-less run.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct PolicyConfig {
+    /// Ascending in-degree boundaries (`--degree-buckets 8,64`, TOML
+    /// `[policy] degree_buckets = "8,64"`); empty = one bucket.
+    pub degree_buckets: Vec<u32>,
+    /// Per-bucket bit widths, hottest bucket first (`--bucket-bits 8,6,4`,
+    /// TOML `[policy] bucket_bits = "8,6,4"`); empty = every bucket at the
+    /// mode's bit width.
+    pub bucket_bits: Vec<u8>,
+}
+
+impl PolicyConfig {
+    /// The default single-bucket policy.
+    pub fn uniform() -> Self {
+        PolicyConfig::default()
+    }
+
+    /// True when this is the single-bucket, mode-width policy (no knobs
+    /// set) — the configuration pinned bit-identical to pre-policy runs.
+    pub fn is_uniform(&self) -> bool {
+        self.degree_buckets.is_empty() && self.bucket_bits.is_empty()
+    }
+
+    /// Structural validation (no graph needed): boundary monotonicity,
+    /// width range, and the bucket-count/width-count match. Called by
+    /// `TrainConfig::validate` so every entry point (CLI, TOML,
+    /// programmatic) rejects broken policies before training starts.
+    pub fn validate(&self) -> Result<(), String> {
+        let buckets = DegreeBuckets::new(self.degree_buckets.clone())?;
+        if !self.bucket_bits.is_empty() {
+            BitPolicy::new(self.bucket_bits.clone())?;
+            if self.bucket_bits.len() != buckets.num_buckets() {
+                return Err(format!(
+                    "{} degree-bucket boundaries make {} buckets, but bucket-bits names {} \
+                     widths — pass exactly {} (hottest bucket first, e.g. --degree-buckets \
+                     8,64 --bucket-bits 8,6,4)",
+                    self.degree_buckets.len(),
+                    buckets.num_buckets(),
+                    self.bucket_bits.len(),
+                    buckets.num_buckets()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The effective per-bucket widths once the mode's default width is
+    /// known: an empty `bucket_bits` fills every bucket with
+    /// `default_bits`.
+    pub fn effective_bits(&self, default_bits: u8) -> Vec<u8> {
+        if self.bucket_bits.is_empty() {
+            vec![default_bits; self.degree_buckets.len() + 1]
+        } else {
+            self.bucket_bits.clone()
+        }
+    }
+
+    /// Materialize against a concrete graph: validate, assign every node
+    /// its bucket by in-degree, and derive per-bucket symmetric scales
+    /// from the feature table. `default_bits` (the execution mode's width)
+    /// fills the widths when `bucket_bits` is unset.
+    pub fn materialize(
+        &self,
+        default_bits: u8,
+        degrees: &[u32],
+        features: &Dense<f32>,
+    ) -> Result<FeaturePolicy, String> {
+        self.validate()?;
+        let buckets = DegreeBuckets::new(self.degree_buckets.clone())?;
+        let bits = BitPolicy::new(self.effective_bits(default_bits))?;
+        FeaturePolicy::materialize(buckets, bits, degrees, features)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_validate_range_and_nonempty() {
+        assert!(BitPolicy::new(vec![8, 6, 4]).is_ok());
+        assert!(BitPolicy::new(vec![1]).is_ok());
+        assert!(BitPolicy::new(vec![]).unwrap_err().contains("at least one"));
+        assert!(BitPolicy::new(vec![0]).unwrap_err().contains("1..=8"));
+        assert!(BitPolicy::new(vec![9]).unwrap_err().contains("1..=8"));
+        assert_eq!(BitPolicy::uniform(8).unwrap().bits(), &[8]);
+    }
+
+    #[test]
+    fn config_validates_count_match() {
+        let ok = PolicyConfig { degree_buckets: vec![8, 64], bucket_bits: vec![8, 6, 4] };
+        assert!(ok.validate().is_ok());
+        let mismatch = PolicyConfig { degree_buckets: vec![8, 64], bucket_bits: vec![8, 4] };
+        let err = mismatch.validate().unwrap_err();
+        assert!(err.contains("3 buckets"), "{err}");
+        assert!(err.contains("2 widths"), "{err}");
+        // Boundaries alone are fine (widths default to the mode's bits)…
+        let buckets_only = PolicyConfig { degree_buckets: vec![8, 64], bucket_bits: vec![] };
+        assert!(buckets_only.validate().is_ok());
+        assert_eq!(buckets_only.effective_bits(6), vec![6, 6, 6]);
+        // …and a single width alone is a one-bucket override.
+        let bits_only = PolicyConfig { degree_buckets: vec![], bucket_bits: vec![4] };
+        assert!(bits_only.validate().is_ok());
+        assert!(!bits_only.is_uniform());
+        assert!(PolicyConfig::uniform().is_uniform());
+    }
+
+    #[test]
+    fn config_rejects_bad_parts() {
+        let bad_bits = PolicyConfig { degree_buckets: vec![8], bucket_bits: vec![8, 0] };
+        assert!(bad_bits.validate().unwrap_err().contains("1..=8"));
+        let bad_bounds = PolicyConfig { degree_buckets: vec![64, 8], bucket_bits: vec![] };
+        assert!(bad_bounds.validate().unwrap_err().contains("strictly increasing"));
+    }
+}

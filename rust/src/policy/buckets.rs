@@ -1,0 +1,174 @@
+//! Degree-bucket partition: which nodes count as "hot".
+//!
+//! Degree-Quant's observation (see PAPERS.md) is that quantization error
+//! concentrates its accuracy damage on **high-in-degree** nodes — they
+//! aggregate many messages, so per-message rounding error compounds there —
+//! while the long cold tail of low-degree nodes tolerates aggressive
+//! compression. [`DegreeBuckets`] turns that observation into a partition:
+//! a short ascending boundary list splits the in-degree axis into
+//! contiguous ranges, and **bucket 0 is the hottest** (highest-degree)
+//! range so that policies reading "hot first" (`--bucket-bits 8,6,4`) keep
+//! the accuracy-critical nodes at high precision and compress the tail.
+
+/// A partition of nodes by in-degree into contiguous buckets.
+///
+/// Boundaries are ascending in-degree thresholds; `b` boundaries make
+/// `b + 1` buckets, **numbered hottest first**. With boundaries `[8, 64]`:
+///
+/// | bucket | in-degree range |
+/// |--------|-----------------|
+/// | 0      | `deg >= 64`     |
+/// | 1      | `8 <= deg < 64` |
+/// | 2      | `deg < 8`       |
+///
+/// The partition is complete and disjoint by construction — every degree
+/// falls in exactly one range (`tests/sampler_invariants.rs` pins this as a
+/// property). No boundaries means one bucket holding every node (the
+/// uniform policy).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DegreeBuckets {
+    /// Ascending in-degree thresholds (each `>= 1`, strictly increasing).
+    boundaries: Vec<u32>,
+}
+
+/// Sanity cap on the bucket count: policies are a handful of precision
+/// tiers, and per-node bucket ids are stored as `u8`.
+pub const MAX_BUCKETS: usize = 32;
+
+impl DegreeBuckets {
+    /// Partition from ascending boundaries. Rejects non-monotone or zero
+    /// boundaries with an actionable message (a boundary of 0 would make
+    /// the coldest bucket empty for every graph — in-degrees are
+    /// non-negative — which is always a config typo).
+    pub fn new(boundaries: Vec<u32>) -> Result<Self, String> {
+        if boundaries.len() + 1 > MAX_BUCKETS {
+            return Err(format!(
+                "{} degree-bucket boundaries make {} buckets — at most {MAX_BUCKETS} \
+                 precision tiers are supported",
+                boundaries.len(),
+                boundaries.len() + 1
+            ));
+        }
+        for (i, &b) in boundaries.iter().enumerate() {
+            if b == 0 {
+                return Err(
+                    "degree-buckets boundaries must be >= 1 (an in-degree threshold of 0 \
+                     leaves the coldest bucket empty); e.g. --degree-buckets 8,64"
+                        .to_string(),
+                );
+            }
+            if i > 0 && boundaries[i - 1] >= b {
+                return Err(format!(
+                    "degree-buckets boundaries must be strictly increasing, got {} then {b}; \
+                     e.g. --degree-buckets 8,64",
+                    boundaries[i - 1]
+                ));
+            }
+        }
+        Ok(DegreeBuckets { boundaries })
+    }
+
+    /// The single-bucket partition (every node in bucket 0).
+    pub fn uniform() -> Self {
+        DegreeBuckets { boundaries: Vec::new() }
+    }
+
+    /// Number of buckets (`boundaries + 1`).
+    pub fn num_buckets(&self) -> usize {
+        self.boundaries.len() + 1
+    }
+
+    /// The ascending boundary list.
+    pub fn boundaries(&self) -> &[u32] {
+        &self.boundaries
+    }
+
+    /// Bucket of an in-degree: the number of boundaries strictly above it,
+    /// so bucket 0 is the hottest range and the last bucket the coldest.
+    pub fn bucket_of(&self, degree: u32) -> usize {
+        self.boundaries.iter().filter(|&&b| degree < b).count()
+    }
+
+    /// Per-node bucket assignment (`u8` ids — see [`MAX_BUCKETS`]).
+    pub fn assign(&self, degrees: &[u32]) -> Vec<u8> {
+        degrees.iter().map(|&d| self.bucket_of(d) as u8).collect()
+    }
+
+    /// Human-readable in-degree range of a bucket (for report summaries):
+    /// `"deg >= 64"`, `"8 <= deg < 64"`, `"deg < 8"`, or `"all degrees"`
+    /// for the uniform partition. Shared with
+    /// [`PolicyGatherReport`](crate::policy::PolicyGatherReport) via
+    /// [`bucket_range_label`].
+    pub fn range_label(&self, bucket: usize) -> String {
+        bucket_range_label(&self.boundaries, bucket)
+    }
+}
+
+/// Range label of `bucket` under ascending `boundaries` (see
+/// [`DegreeBuckets::range_label`]).
+pub fn bucket_range_label(boundaries: &[u32], bucket: usize) -> String {
+    let m = boundaries.len();
+    assert!(bucket <= m, "bucket {bucket} out of range for {m} boundaries");
+    if m == 0 {
+        return "all degrees".to_string();
+    }
+    if bucket == 0 {
+        format!("deg >= {}", boundaries[m - 1])
+    } else if bucket == m {
+        format!("deg < {}", boundaries[0])
+    } else {
+        format!("{} <= deg < {}", boundaries[m - 1 - bucket], boundaries[m - bucket])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundaries_partition_the_degree_axis() {
+        let b = DegreeBuckets::new(vec![8, 64]).unwrap();
+        assert_eq!(b.num_buckets(), 3);
+        assert_eq!(b.bucket_of(1000), 0);
+        assert_eq!(b.bucket_of(64), 0);
+        assert_eq!(b.bucket_of(63), 1);
+        assert_eq!(b.bucket_of(8), 1);
+        assert_eq!(b.bucket_of(7), 2);
+        assert_eq!(b.bucket_of(0), 2);
+    }
+
+    #[test]
+    fn uniform_has_one_bucket() {
+        let b = DegreeBuckets::uniform();
+        assert_eq!(b.num_buckets(), 1);
+        for d in [0u32, 1, 7, 1 << 20] {
+            assert_eq!(b.bucket_of(d), 0);
+        }
+        assert_eq!(b.range_label(0), "all degrees");
+    }
+
+    #[test]
+    fn rejects_non_monotone_and_zero_boundaries() {
+        assert!(DegreeBuckets::new(vec![8, 8]).unwrap_err().contains("strictly increasing"));
+        assert!(DegreeBuckets::new(vec![64, 8]).unwrap_err().contains("strictly increasing"));
+        assert!(DegreeBuckets::new(vec![0, 8]).unwrap_err().contains(">= 1"));
+        assert!(DegreeBuckets::new((1..64).collect()).unwrap_err().contains("at most"));
+        assert!(DegreeBuckets::new(vec![]).is_ok());
+        assert!(DegreeBuckets::new(vec![1]).is_ok());
+    }
+
+    #[test]
+    fn assignment_matches_bucket_of() {
+        let b = DegreeBuckets::new(vec![2, 5]).unwrap();
+        let degrees = vec![0u32, 1, 2, 4, 5, 9];
+        assert_eq!(b.assign(&degrees), vec![2, 2, 1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn range_labels_cover_every_bucket() {
+        let b = DegreeBuckets::new(vec![8, 64]).unwrap();
+        assert_eq!(b.range_label(0), "deg >= 64");
+        assert_eq!(b.range_label(1), "8 <= deg < 64");
+        assert_eq!(b.range_label(2), "deg < 8");
+    }
+}

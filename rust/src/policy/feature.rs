@@ -1,0 +1,212 @@
+//! A policy materialized against a concrete graph + feature table.
+//!
+//! [`FeaturePolicy`] is what the gather path consumes: per-node bucket ids
+//! (from in-degrees) and per-bucket symmetric scales (from the feature
+//! table — the table is static across training, so per-bucket scales are
+//! static too, exactly like the single global scale they generalize).
+
+use super::bits::BitPolicy;
+use super::buckets::DegreeBuckets;
+use crate::quant::qmax_for_bits;
+use crate::tensor::Dense;
+
+/// Per-node bucket assignment + per-bucket `(scale, bits)`.
+///
+/// The **uniform** instance (one bucket at width `B`) reproduces the
+/// pre-policy store exactly: its single scale is the whole table's
+/// `absmax / qmax(B)` — the same fold `quant::scale_for_bits` computes —
+/// so uniform-policy gathers are bit-identical to policy-less ones.
+#[derive(Debug, Clone)]
+pub struct FeaturePolicy {
+    buckets: DegreeBuckets,
+    bits: BitPolicy,
+    /// Bucket id per node (`assignment[v]`), hottest bucket 0.
+    assignment: Vec<u8>,
+    /// Per-bucket symmetric scale (`absmax over the bucket's rows / qmax`);
+    /// an empty bucket keeps scale 1.0 so dequantization stays exact.
+    scales: Vec<f32>,
+    /// Nodes per bucket (assignment census, for reports).
+    node_counts: Vec<u64>,
+}
+
+impl FeaturePolicy {
+    /// Materialize: assign each node by in-degree and derive each bucket's
+    /// scale from its feature rows. `degrees` and `features` must describe
+    /// the same node set.
+    pub fn materialize(
+        buckets: DegreeBuckets,
+        bits: BitPolicy,
+        degrees: &[u32],
+        features: &Dense<f32>,
+    ) -> Result<Self, String> {
+        if bits.num_buckets() != buckets.num_buckets() {
+            return Err(format!(
+                "bit policy covers {} buckets but the degree partition has {}",
+                bits.num_buckets(),
+                buckets.num_buckets()
+            ));
+        }
+        if degrees.len() != features.rows() {
+            return Err(format!(
+                "degree list covers {} nodes but the feature table has {} rows",
+                degrees.len(),
+                features.rows()
+            ));
+        }
+        let assignment = buckets.assign(degrees);
+        let nb = buckets.num_buckets();
+        let mut absmax = vec![0.0f32; nb];
+        let mut node_counts = vec![0u64; nb];
+        for (v, &b) in assignment.iter().enumerate() {
+            let m = &mut absmax[b as usize];
+            for &x in features.row(v) {
+                *m = m.max(x.abs());
+            }
+            node_counts[b as usize] += 1;
+        }
+        let scales = (0..nb)
+            .map(|b| {
+                if absmax[b] == 0.0 {
+                    1.0
+                } else {
+                    absmax[b] / qmax_for_bits(bits.bits_of(b)) as f32
+                }
+            })
+            .collect();
+        Ok(FeaturePolicy { buckets, bits, assignment, scales, node_counts })
+    }
+
+    /// The uniform single-bucket policy at width `bits` — scale identical
+    /// to `quant::scale_for_bits(features, bits)`.
+    pub fn uniform(bits: u8, features: &Dense<f32>) -> Result<Self, String> {
+        let degrees = vec![0u32; features.rows()];
+        Self::materialize(DegreeBuckets::uniform(), BitPolicy::uniform(bits)?, &degrees, features)
+    }
+
+    /// Bucket count.
+    pub fn num_buckets(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// True when more than one `(scale, bits)` pair is live — i.e. the
+    /// gather path is genuinely mixed-precision.
+    pub fn is_mixed(&self) -> bool {
+        self.num_buckets() > 1
+    }
+
+    /// Bucket of a node.
+    pub fn bucket_of_node(&self, node: usize) -> usize {
+        self.assignment[node] as usize
+    }
+
+    /// Symmetric scale of a bucket.
+    pub fn scale(&self, bucket: usize) -> f32 {
+        self.scales[bucket]
+    }
+
+    /// Bit width of a bucket.
+    pub fn bits_of(&self, bucket: usize) -> u8 {
+        self.bits.bits_of(bucket)
+    }
+
+    /// The per-bucket width list (hottest first).
+    pub fn bits(&self) -> &[u8] {
+        self.bits.bits()
+    }
+
+    /// The degree partition.
+    pub fn buckets(&self) -> &DegreeBuckets {
+        &self.buckets
+    }
+
+    /// Nodes assigned to each bucket.
+    pub fn node_counts(&self) -> &[u64] {
+        &self.node_counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::random_features;
+    use crate::quant::scale_for_bits;
+
+    #[test]
+    fn uniform_scale_matches_global_scale_exactly() {
+        let f = random_features(40, 8, 3);
+        for bits in [8u8, 4] {
+            let p = FeaturePolicy::uniform(bits, &f).unwrap();
+            assert_eq!(p.num_buckets(), 1);
+            assert!(!p.is_mixed());
+            assert_eq!(p.scale(0), scale_for_bits(&f, bits), "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn bucket_scales_cover_each_buckets_rows() {
+        // Nodes 0..3 cold (deg 0), 4..7 hot (deg 10) under boundary [5].
+        let f = random_features(8, 4, 9);
+        let degrees = vec![0, 0, 0, 0, 10, 10, 10, 10];
+        let p = FeaturePolicy::materialize(
+            DegreeBuckets::new(vec![5]).unwrap(),
+            BitPolicy::new(vec![8, 4]).unwrap(),
+            &degrees,
+            &f,
+        )
+        .unwrap();
+        assert_eq!(p.num_buckets(), 2);
+        assert!(p.is_mixed());
+        assert_eq!(p.node_counts(), &[4, 4]);
+        for v in 0..4 {
+            assert_eq!(p.bucket_of_node(v), 1, "low degree is the cold bucket");
+        }
+        for v in 4..8 {
+            assert_eq!(p.bucket_of_node(v), 0, "high degree is the hot bucket");
+        }
+        // Each bucket's scale is its own rows' absmax over its qmax.
+        let hot_absmax =
+            (4..8).flat_map(|v| f.row(v)).fold(0.0f32, |m, &x| m.max(x.abs()));
+        let cold_absmax =
+            (0..4).flat_map(|v| f.row(v)).fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert_eq!(p.scale(0), hot_absmax / 127.0);
+        assert_eq!(p.scale(1), cold_absmax / 7.0);
+        assert_eq!(p.bits_of(0), 8);
+        assert_eq!(p.bits_of(1), 4);
+    }
+
+    #[test]
+    fn empty_bucket_gets_unit_scale() {
+        let f = random_features(4, 4, 1);
+        // Every node cold: the hot bucket is empty.
+        let p = FeaturePolicy::materialize(
+            DegreeBuckets::new(vec![100]).unwrap(),
+            BitPolicy::new(vec![8, 8]).unwrap(),
+            &vec![1u32; 4],
+            &f,
+        )
+        .unwrap();
+        assert_eq!(p.scale(0), 1.0);
+        assert_eq!(p.node_counts(), &[0, 4]);
+    }
+
+    #[test]
+    fn mismatched_shapes_are_rejected() {
+        let f = random_features(4, 4, 2);
+        assert!(FeaturePolicy::materialize(
+            DegreeBuckets::new(vec![5]).unwrap(),
+            BitPolicy::uniform(8).unwrap(),
+            &vec![1u32; 4],
+            &f,
+        )
+        .unwrap_err()
+        .contains("buckets"));
+        assert!(FeaturePolicy::materialize(
+            DegreeBuckets::uniform(),
+            BitPolicy::uniform(8).unwrap(),
+            &vec![1u32; 3],
+            &f,
+        )
+        .unwrap_err()
+        .contains("nodes"));
+    }
+}

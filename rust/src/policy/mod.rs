@@ -1,0 +1,45 @@
+//! Degree-aware mixed-precision policy subsystem.
+//!
+//! Tango's first contribution is a set of *rules* that decide where low
+//! precision is safe instead of paying a uniform accuracy tax. This module
+//! supplies the degree-aware rule the related work points at (Degree-Quant:
+//! high-in-degree nodes are the accuracy-critical ones under quantization;
+//! BiFeat: the feature gather is where the sampled-training byte traffic
+//! lives — see PAPERS.md): partition nodes by in-degree, keep the hot
+//! buckets at high precision, compress the cold tail hard, and optionally
+//! bias fanout sampling toward the same high-degree nodes.
+//!
+//! The pieces, hot path first:
+//!
+//! - [`DegreeBuckets`] — the partition: ascending in-degree boundaries,
+//!   bucket 0 hottest; complete and disjoint by construction;
+//! - [`BitPolicy`] — per-bucket quantization widths (`1..=8`), hottest
+//!   bucket first, so `--degree-buckets 8,64 --bucket-bits 8,6,4` reads
+//!   "INT8 above degree 64, 6 bits in the middle, 4-bit cold tail";
+//! - [`PolicyConfig`] — the raw knob pair carried by `TrainConfig::policy`
+//!   (CLI `--degree-buckets`/`--bucket-bits`, TOML `[policy]`), validated
+//!   early with actionable messages;
+//! - [`FeaturePolicy`] — the policy materialized against a concrete graph:
+//!   per-node bucket ids and per-bucket static symmetric scales (the
+//!   feature table is static, so per-bucket scales are too). Its uniform
+//!   instance reproduces the single global `(scale, bits)` exactly, which
+//!   is what keeps default runs bit-identical to pre-policy builds;
+//! - [`BucketGatherStats`] / [`PolicyGatherReport`] — per-bucket gather
+//!   traffic (rows, hits/misses, packed bytes vs uniform INT8) surfaced
+//!   through `TrainReport::policy` / `MultiGpuReport::policy` and the CLI.
+//!
+//! The consumer is the sampled gather path: `sampler::QuantFeatureStore`
+//! holds a `FeaturePolicy` and quantizes each node's row at its bucket's
+//! `(scale, bits)`; the degree-biased sampler mode
+//! (`sampler::SamplerBias::Degree`, `--sampler degree`) weights fanout
+//! draws by the same in-degrees the partition reads.
+
+mod bits;
+mod buckets;
+mod feature;
+mod report;
+
+pub use bits::{BitPolicy, PolicyConfig};
+pub use buckets::{bucket_range_label, DegreeBuckets, MAX_BUCKETS};
+pub use feature::FeaturePolicy;
+pub use report::{BucketGatherStats, PolicyGatherReport};

@@ -1,0 +1,148 @@
+//! Per-bucket gather accounting: where the mixed-precision bytes went.
+//!
+//! The policy's speed claim is measurable — fewer bytes gathered and
+//! transferred for cold-bucket rows — so the gather path counts row
+//! traffic per bucket and reports it next to what the same rows would have
+//! cost at uniform INT8. `TrainReport::policy` / `MultiGpuReport::policy`
+//! carry a [`PolicyGatherReport`] and the CLI prints its summary lines.
+
+use super::buckets::bucket_range_label;
+
+/// Cumulative gather traffic of one degree bucket.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct BucketGatherStats {
+    /// Feature rows gathered from this bucket (hits + misses).
+    pub rows: u64,
+    /// Rows served from the quantized row cache.
+    pub hits: u64,
+    /// Rows quantized fresh on this gather.
+    pub misses: u64,
+    /// Bytes those rows occupy at the bucket's policy width (packed).
+    pub packed_bytes: u64,
+    /// Bytes the same rows would occupy at uniform INT8.
+    pub int8_bytes: u64,
+}
+
+impl BucketGatherStats {
+    /// Fold another bucket's traffic into this one (totals row).
+    pub fn merge(&mut self, other: &BucketGatherStats) {
+        self.rows += other.rows;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.packed_bytes += other.packed_bytes;
+        self.int8_bytes += other.int8_bytes;
+    }
+}
+
+/// A whole run's per-bucket gather accounting, with the policy shape
+/// (boundaries, widths, node census) riding along so reports are
+/// self-describing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyGatherReport {
+    /// Ascending in-degree boundaries (empty = one bucket).
+    pub boundaries: Vec<u32>,
+    /// Per-bucket widths, hottest bucket first.
+    pub bits: Vec<u8>,
+    /// Nodes assigned to each bucket.
+    pub node_counts: Vec<u64>,
+    /// Per-bucket gather traffic, aligned with `bits`.
+    pub buckets: Vec<BucketGatherStats>,
+}
+
+impl PolicyGatherReport {
+    /// True when more than one precision tier is live.
+    pub fn is_mixed(&self) -> bool {
+        self.bits.len() > 1
+    }
+
+    /// Total gathered bytes at the policy widths.
+    pub fn packed_bytes(&self) -> u64 {
+        self.buckets.iter().map(|b| b.packed_bytes).sum()
+    }
+
+    /// Total gathered bytes had every row moved at uniform INT8.
+    pub fn int8_bytes(&self) -> u64 {
+        self.buckets.iter().map(|b| b.int8_bytes).sum()
+    }
+
+    /// Human summary, one line per bucket plus a totals line — what
+    /// `tango train` / `tango multigpu` print for mixed runs.
+    pub fn summary_lines(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(self.buckets.len() + 1);
+        for (i, st) in self.buckets.iter().enumerate() {
+            let total = st.hits + st.misses;
+            out.push(format!(
+                "bucket {i} ({}, {} bits): {} nodes, {} rows gathered \
+                 ({:.1}% hits), {:.1} KiB packed vs {:.1} KiB INT8",
+                bucket_range_label(&self.boundaries, i),
+                self.bits[i],
+                self.node_counts.get(i).copied().unwrap_or(0),
+                st.rows,
+                st.hits as f64 / total.max(1) as f64 * 100.0,
+                st.packed_bytes as f64 / 1024.0,
+                st.int8_bytes as f64 / 1024.0,
+            ));
+        }
+        let (packed, int8) = (self.packed_bytes(), self.int8_bytes());
+        out.push(format!(
+            "policy total: {:.1} KiB gathered vs {:.1} KiB at uniform INT8 ({:.2}x)",
+            packed as f64 / 1024.0,
+            int8 as f64 / 1024.0,
+            int8 as f64 / (packed as f64).max(1.0),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> PolicyGatherReport {
+        PolicyGatherReport {
+            boundaries: vec![8],
+            bits: vec![8, 4],
+            node_counts: vec![10, 90],
+            buckets: vec![
+                BucketGatherStats {
+                    rows: 100,
+                    hits: 60,
+                    misses: 40,
+                    packed_bytes: 1600,
+                    int8_bytes: 1600,
+                },
+                BucketGatherStats {
+                    rows: 300,
+                    hits: 100,
+                    misses: 200,
+                    packed_bytes: 2400,
+                    int8_bytes: 4800,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn totals_sum_buckets() {
+        let r = report();
+        assert!(r.is_mixed());
+        assert_eq!(r.packed_bytes(), 4000);
+        assert_eq!(r.int8_bytes(), 6400);
+        let mut total = BucketGatherStats::default();
+        for b in &r.buckets {
+            total.merge(b);
+        }
+        assert_eq!(total.rows, 400);
+        assert_eq!(total.hits, 160);
+        assert_eq!(total.packed_bytes, 4000);
+    }
+
+    #[test]
+    fn summary_names_every_bucket_and_the_total() {
+        let lines = report().summary_lines();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("deg >= 8") && lines[0].contains("8 bits"), "{}", lines[0]);
+        assert!(lines[1].contains("deg < 8") && lines[1].contains("4 bits"), "{}", lines[1]);
+        assert!(lines[2].contains("uniform INT8"), "{}", lines[2]);
+    }
+}

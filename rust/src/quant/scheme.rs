@@ -28,7 +28,7 @@ pub struct QTensor {
     pub data: Dense<i8>,
     /// Scaling factor `s = absmax / qmax`.
     pub scale: f32,
-    /// Bit width `B` (2..=8 on the CPU substrate).
+    /// Bit width `B` (1..=8 on the CPU substrate; 1 = sign grid).
     pub bits: u8,
 }
 
@@ -49,9 +49,10 @@ impl QTensor {
     }
 
     /// Payload bytes if packed at the nominal bit width (what a GPU/TPU
-    /// kernel would actually move; used by `perfmodel`).
+    /// kernel would actually move; used by `perfmodel`). 1-bit tensors
+    /// charge two bits per element — their grid has three states.
     pub fn packed_bytes(&self) -> usize {
-        (self.data.len() * self.bits as usize).div_ceil(8)
+        (self.data.len() * packed_bits_per_elem(self.bits)).div_ceil(8)
     }
 
     /// 2-D transpose of the quantized payload (scale is layout-invariant).
@@ -63,10 +64,27 @@ impl QTensor {
 }
 
 /// `2^(B-1) - 1`, the symmetric clip for `B`-bit signed quantization.
+///
+/// `B = 1` is the degenerate ternary grid: its nominal `2^0 - 1 = 0` clip
+/// would collapse every value, so it clips at 1 (`{-1, 0, +1}` — the
+/// policy subsystem's hardest cold-tail compression). Because that grid
+/// has three states, packed accounting charges it two physical bits per
+/// element ([`packed_bits_per_elem`]) — byte counts never claim
+/// compression no kernel could realize.
 #[inline]
 pub fn qmax_for_bits(bits: u8) -> i32 {
-    assert!((2..=8).contains(&bits), "bit width {bits} unsupported (2..=8)");
-    (1i32 << (bits - 1)) - 1
+    assert!((1..=8).contains(&bits), "bit width {bits} unsupported (1..=8)");
+    ((1i32 << (bits - 1)) - 1).max(1)
+}
+
+/// Physical bits one element occupies when packed at nominal width
+/// `bits`: the width itself, except the 1-bit ternary grid (`{-1, 0, +1}`,
+/// see [`qmax_for_bits`]) which needs two bits. Every packed-byte
+/// accounting site (gather traffic, all-reduce payloads, [`QTensor`])
+/// shares this rule.
+#[inline]
+pub fn packed_bits_per_elem(bits: u8) -> usize {
+    (bits as usize).max(2)
 }
 
 /// Dynamic symmetric scale for a tensor: `s = absmax / qmax`.
@@ -151,6 +169,14 @@ mod tests {
         assert_eq!(qmax_for_bits(8), 127);
         assert_eq!(qmax_for_bits(4), 7);
         assert_eq!(qmax_for_bits(2), 1);
+        // The ternary grid: 1-bit clips at 1, never 0 (scale division) —
+        // and packs at two physical bits (three states don't fit in one).
+        assert_eq!(qmax_for_bits(1), 1);
+        assert_eq!(packed_bits_per_elem(1), 2);
+        assert_eq!(packed_bits_per_elem(2), 2);
+        assert_eq!(packed_bits_per_elem(8), 8);
+        let x = Dense::from_vec(&[8], vec![1.0f32; 8]);
+        assert_eq!(quantize(&x, 1, Rounding::Nearest).packed_bytes(), 2);
     }
 
     #[test]

@@ -9,12 +9,16 @@
 //! (frequently re-sampled) nodes quantize once per run instead of once per
 //! batch.
 //!
-//! All rows share one symmetric scale derived from the full table (static
-//! data ⇒ static scale), which is what lets cached rows assemble into a
-//! single batch [`QTensor`].
+//! Precision is governed by a [`FeaturePolicy`] (see [`crate::policy`]):
+//! every node belongs to a degree bucket with its own static symmetric
+//! `(scale, bits)`. The **uniform** policy (one bucket) reproduces the
+//! original single global scale exactly — static data ⇒ static scales —
+//! and mixed policies compress cold-bucket rows below INT8, which the
+//! per-bucket [`BucketGatherStats`] accounting makes visible.
 
 use crate::coordinator::qcache::{CacheStats, QuantCache};
-use crate::quant::{dequantize, quantize_slice_nearest, scale_for_bits, QTensor};
+use crate::policy::{BucketGatherStats, FeaturePolicy, PolicyGatherReport};
+use crate::quant::{packed_bits_per_elem, quantize_slice_nearest, QTensor};
 use crate::tensor::Dense;
 use crate::util::par;
 use std::collections::HashMap;
@@ -35,19 +39,86 @@ pub fn gather_rows(features: &Dense<f32>, nodes: &[u32]) -> Dense<f32> {
     out
 }
 
-/// Quantized feature store: gathers batch feature slices as INT8 rows under
-/// one shared scale, caching per-node quantized rows for hot nodes.
+/// Bytes a feature row occupies packed at `bits` per element (the 1-bit
+/// ternary grid charges two physical bits — see
+/// [`crate::quant::packed_bits_per_elem`]).
+fn packed_row_bytes(dim: usize, bits: u8) -> u64 {
+    (dim * packed_bits_per_elem(bits)).div_ceil(8) as u64
+}
+
+/// One gathered batch of quantized feature rows under a (possibly mixed)
+/// per-bucket policy: the INT-grid payload plus each row's `(scale, bits)`.
+/// Uniform-policy batches have every row at the same pair, making this the
+/// row-wise generalization of a single batch [`QTensor`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantRows {
+    /// Quantized payload, `[rows, F]`, one i8 slot per element (sub-byte
+    /// widths are value-range-restricted; [`Self::packed_bytes`] charges
+    /// the nominal width).
+    pub data: Dense<i8>,
+    /// Per-row symmetric scale.
+    pub scales: Vec<f32>,
+    /// Per-row bit width.
+    pub bits: Vec<u8>,
+}
+
+impl QuantRows {
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Shape of the payload.
+    pub fn shape(&self) -> &[usize] {
+        self.data.shape()
+    }
+
+    /// Payload bytes if rows were packed at their nominal widths (what a
+    /// GPU kernel would actually move).
+    pub fn packed_bytes(&self) -> usize {
+        let dim = self.data.cols();
+        self.bits.iter().map(|&b| packed_row_bytes(dim, b) as usize).sum()
+    }
+
+    /// Dequantize every row at its own scale into a `[rows, F]` FP32
+    /// matrix (data-parallel, one chunk per row).
+    pub fn dequantize(&self) -> Dense<f32> {
+        let dim = self.data.cols();
+        let mut out: Dense<f32> = Dense::zeros(self.data.shape());
+        if dim == 0 || self.scales.is_empty() {
+            return out;
+        }
+        let data = self.data.data();
+        let scales = &self.scales;
+        par::for_each_chunk(out.data_mut(), dim, |i, chunk| {
+            let s = scales[i];
+            let row = &data[i * dim..i * dim + chunk.len()];
+            for (o, &q) in chunk.iter_mut().zip(row) {
+                *o = q as f32 * s;
+            }
+        });
+        out
+    }
+}
+
+/// Quantized feature store: gathers batch feature slices as quantized rows
+/// under a degree-bucketed [`FeaturePolicy`], caching per-node quantized
+/// rows for hot nodes. The uniform policy (the [`Self::new`] /
+/// [`Self::with_capacity`] constructors) is bit-identical to a single
+/// global `(scale, bits)` store.
 #[derive(Debug)]
 pub struct QuantFeatureStore {
-    scale: f32,
-    bits: u8,
+    policy: FeaturePolicy,
     cache: QuantCache,
+    /// Per-bucket gather traffic, aligned with the policy's buckets.
+    bucket_stats: Vec<BucketGatherStats>,
 }
 
 impl QuantFeatureStore {
-    /// Build a store for a feature table: one abs-max reduction derives the
-    /// shared scale; rows quantize lazily on first gather. The hot-node
-    /// cache is unbounded (every sampled node's row is kept for the run).
+    /// Build a uniform-policy store for a feature table: one abs-max
+    /// reduction derives the shared scale; rows quantize lazily on first
+    /// gather. The hot-node cache is unbounded (every sampled node's row is
+    /// kept for the run).
     pub fn new(features: &Dense<f32>, bits: u8) -> Self {
         Self::with_capacity(features, bits, 0)
     }
@@ -58,36 +129,60 @@ impl QuantFeatureStore {
     /// bound caps that at `max_nodes · F` bytes, evicting the oldest rows
     /// first (evictions are reported by [`Self::stats`]).
     pub fn with_capacity(features: &Dense<f32>, bits: u8, max_nodes: usize) -> Self {
+        let policy = FeaturePolicy::uniform(bits, features)
+            .expect("uniform feature policy is always valid for bits 1..=8");
+        Self::with_policy(policy, max_nodes)
+    }
+
+    /// Build over an already-materialized (possibly mixed) policy — the
+    /// degree-bucketed path. Scales were derived at materialization, so no
+    /// feature pass happens here; `max_nodes` bounds the hot-node cache
+    /// (0 = unbounded) exactly as in [`Self::with_capacity`].
+    pub fn with_policy(policy: FeaturePolicy, max_nodes: usize) -> Self {
         let cache =
             if max_nodes == 0 { QuantCache::new() } else { QuantCache::with_capacity(max_nodes) };
-        QuantFeatureStore { scale: scale_for_bits(features, bits), bits, cache }
+        let bucket_stats = vec![BucketGatherStats::default(); policy.num_buckets()];
+        QuantFeatureStore { policy, cache, bucket_stats }
     }
 
     /// Gather the quantized rows of `nodes` into one `[nodes.len(), F]`
-    /// [`QTensor`]. Rows of previously seen nodes come from the cache.
+    /// [`QuantRows`] batch, each row at its bucket's `(scale, bits)`. Rows
+    /// of previously seen nodes come from the cache.
     ///
     /// Runs in batch passes instead of row-at-a-time: classify every node
     /// against the cache, quantize the misses in parallel straight from
     /// their feature slices (no per-miss f32 staging copy), assemble the
     /// output in parallel, then admit the fresh rows. Assembly happens
     /// *before* admission, so a bound smaller than the batch (rows evicted
-    /// by this very call) still gathers exact values — the shared static
-    /// scale guarantees requantization is bit-identical anyway.
-    pub fn gather_quantized(&mut self, features: &Dense<f32>, nodes: &[u32]) -> QTensor {
+    /// by this very call) still gathers exact values — the static
+    /// per-bucket scales guarantee requantization is bit-identical anyway.
+    pub fn gather_quantized(&mut self, features: &Dense<f32>, nodes: &[u32]) -> QuantRows {
         let dim = features.cols();
-        let (scale, bits) = (self.scale, self.bits);
         // Pass 1: first sight of an uncached node is a miss; duplicates and
         // cached rows are hits. `miss_idx` maps each missing node to its
         // slot in `miss_nodes`/`miss_rows` — one structure serves dedup,
-        // assembly lookup and admission.
+        // assembly lookup and admission. Per-bucket traffic (rows, bytes at
+        // the policy width vs uniform INT8) is charged here too.
         let mut miss_nodes: Vec<u32> = Vec::new();
         let mut miss_idx: HashMap<u32, usize> = HashMap::new();
         let (mut hits, mut misses) = (0u64, 0u64);
+        let mut scales = Vec::with_capacity(nodes.len());
+        let mut bits = Vec::with_capacity(nodes.len());
         for &v in nodes {
+            let b = self.policy.bucket_of_node(v as usize);
+            let row_bits = self.policy.bits_of(b);
+            scales.push(self.policy.scale(b));
+            bits.push(row_bits);
+            let st = &mut self.bucket_stats[b];
+            st.rows += 1;
+            st.packed_bytes += packed_row_bytes(dim, row_bits);
+            st.int8_bytes += dim as u64;
             if self.cache.peek(v as u64).is_some() || miss_idx.contains_key(&v) {
                 hits += 1;
+                st.hits += 1;
             } else {
                 misses += 1;
+                st.misses += 1;
                 miss_idx.insert(v, miss_nodes.len());
                 miss_nodes.push(v);
             }
@@ -95,10 +190,14 @@ impl QuantFeatureStore {
         self.cache.count_hits(hits);
         self.cache.count_misses(misses);
         // Pass 2: quantize the missing rows in parallel, straight from
-        // their feature slices (shared helper with `quantize_with_scale` —
-        // cached rows cannot drift from direct quantization).
+        // their feature slices at their bucket's `(scale, bits)` (shared
+        // helper with `quantize_with_scale` — cached rows cannot drift from
+        // direct quantization).
+        let policy = &self.policy;
         let miss_rows: Vec<Vec<i8>> = par::map_range(miss_nodes.len(), |j| {
-            quantize_slice_nearest(features.row(miss_nodes[j] as usize), scale, bits)
+            let v = miss_nodes[j] as usize;
+            let b = policy.bucket_of_node(v);
+            quantize_slice_nearest(features.row(v), policy.scale(b), policy.bits_of(b))
         });
         // Pass 3: parallel assembly from cached + freshly quantized rows.
         let mut out = Dense::zeros(&[nodes.len(), dim]);
@@ -115,33 +214,65 @@ impl QuantFeatureStore {
         }
         // Pass 4: admit the fresh rows (oldest-first eviction under a bound).
         for (v, row) in miss_nodes.into_iter().zip(miss_rows) {
+            let b = self.policy.bucket_of_node(v as usize);
             self.cache.put(
                 v as u64,
-                QTensor { data: Dense::from_vec(&[1, dim], row), scale, bits },
+                QTensor {
+                    data: Dense::from_vec(&[1, dim], row),
+                    scale: self.policy.scale(b),
+                    bits: self.policy.bits_of(b),
+                },
             );
         }
-        QTensor { data: out, scale: self.scale, bits: self.bits }
+        QuantRows { data: out, scales, bits }
     }
 
     /// Gather and dequantize in one call — what the block forward consumes
     /// when the model itself runs on FP32 inputs.
     pub fn gather_dequantized(&mut self, features: &Dense<f32>, nodes: &[u32]) -> Dense<f32> {
-        dequantize(&self.gather_quantized(features, nodes))
+        self.gather_quantized(features, nodes).dequantize()
     }
 
-    /// Shared symmetric scale of every stored row.
+    /// **The** symmetric scale of a uniform-policy store. Panics on a
+    /// mixed store — there rows carry per-bucket scales
+    /// ([`QuantRows::scales`]) and no single number describes a batch;
+    /// read [`Self::policy`] instead.
     pub fn scale(&self) -> f32 {
-        self.scale
+        assert!(!self.is_mixed(), "mixed-policy stores have per-bucket scales (use policy())");
+        self.policy.scale(0)
     }
 
-    /// Bit width of the stored rows.
+    /// Bit width of a uniform-policy store (panics on a mixed store, like
+    /// [`Self::scale`]).
     pub fn bits(&self) -> u8 {
-        self.bits
+        assert!(!self.is_mixed(), "mixed-policy stores have per-bucket widths (use policy())");
+        self.policy.bits_of(0)
+    }
+
+    /// The materialized policy driving this store.
+    pub fn policy(&self) -> &FeaturePolicy {
+        &self.policy
+    }
+
+    /// True when more than one `(scale, bits)` pair is live.
+    pub fn is_mixed(&self) -> bool {
+        self.policy.is_mixed()
     }
 
     /// Cache hit/miss statistics (hit rate = hot-node reuse).
     pub fn stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// Per-bucket gather accounting with the policy shape riding along —
+    /// what `TrainReport::policy` / `MultiGpuReport::policy` surface.
+    pub fn policy_report(&self) -> PolicyGatherReport {
+        PolicyGatherReport {
+            boundaries: self.policy.buckets().boundaries().to_vec(),
+            bits: self.policy.bits().to_vec(),
+            node_counts: self.policy.node_counts().to_vec(),
+            buckets: self.bucket_stats.clone(),
+        }
     }
 
     /// Bytes held by cached quantized rows.
@@ -154,6 +285,7 @@ impl QuantFeatureStore {
 mod tests {
     use super::*;
     use crate::graph::generators::random_features;
+    use crate::policy::{BitPolicy, DegreeBuckets};
     use crate::quant::{quantize_with_scale, Rounding};
 
     #[test]
@@ -175,8 +307,10 @@ mod tests {
         let direct =
             quantize_with_scale(&gather_rows(&f, &nodes), store.scale(), 8, Rounding::Nearest);
         assert_eq!(q.data, direct.data);
-        assert_eq!(q.scale, direct.scale);
+        assert!(q.scales.iter().all(|&s| s == direct.scale), "uniform rows share the scale");
+        assert!(q.bits.iter().all(|&b| b == 8));
         assert_eq!(q.shape(), &[4, 4]);
+        assert_eq!(q.rows(), 4);
     }
 
     #[test]
@@ -200,7 +334,7 @@ mod tests {
         let nodes: Vec<u32> = (0..16).chain(0..16).collect();
         for chunk in nodes.chunks(8) {
             // Eviction changes *when* rows are requantized, never the values
-            // (the shared scale is static).
+            // (the per-bucket scales are static).
             let a = bounded.gather_quantized(&f, chunk);
             let b = unbounded.gather_quantized(&f, chunk);
             assert_eq!(a.data, b.data);
@@ -220,5 +354,88 @@ mod tests {
         let exact = gather_rows(&f, &nodes);
         // Nearest rounding: within half a grid step everywhere.
         assert!(approx.max_abs_diff(&exact) <= store.scale() / 2.0 + 1e-6);
+    }
+
+    /// A two-bucket policy over 8 nodes: 4..8 hot (8 bits), 0..4 cold
+    /// (4 bits).
+    fn mixed_policy(f: &Dense<f32>) -> FeaturePolicy {
+        let degrees: Vec<u32> = (0..8).map(|v| if v < 4 { 1 } else { 9 }).collect();
+        FeaturePolicy::materialize(
+            DegreeBuckets::new(vec![5]).unwrap(),
+            BitPolicy::new(vec![8, 4]).unwrap(),
+            &degrees,
+            f,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn mixed_gather_quantizes_each_row_at_its_bucket() {
+        let f = random_features(8, 6, 7);
+        let policy = mixed_policy(&f);
+        let (hot_scale, cold_scale) = (policy.scale(0), policy.scale(1));
+        let mut store = QuantFeatureStore::with_policy(policy, 0);
+        assert!(store.is_mixed());
+        let nodes = vec![0u32, 6, 2, 7];
+        let q = store.gather_quantized(&f, &nodes);
+        assert_eq!(q.scales, vec![cold_scale, hot_scale, cold_scale, hot_scale]);
+        assert_eq!(q.bits, vec![4, 8, 4, 8]);
+        // Every row equals direct quantization at its own (scale, bits).
+        for (i, &v) in nodes.iter().enumerate() {
+            let direct =
+                crate::quant::quantize_slice_nearest(f.row(v as usize), q.scales[i], q.bits[i]);
+            assert_eq!(q.data.row(i), direct.as_slice(), "row {i} (node {v})");
+        }
+        // Dequantize honours per-row scales.
+        let deq = q.dequantize();
+        for i in 0..nodes.len() {
+            for (a, &qv) in deq.row(i).iter().zip(q.data.row(i)) {
+                assert_eq!(*a, qv as f32 * q.scales[i]);
+            }
+        }
+        // Cold rows pack below INT8: 2 hot rows at 6 B + 2 cold at 3 B.
+        assert_eq!(q.packed_bytes(), 2 * 6 + 2 * 3);
+    }
+
+    #[test]
+    fn per_bucket_stats_split_traffic() {
+        let f = random_features(8, 6, 8);
+        let mut store = QuantFeatureStore::with_policy(mixed_policy(&f), 0);
+        store.gather_quantized(&f, &[0, 6, 2, 7]);
+        store.gather_quantized(&f, &[0, 6]);
+        let report = store.policy_report();
+        assert!(report.is_mixed());
+        assert_eq!(report.bits, vec![8, 4]);
+        assert_eq!(report.node_counts, vec![4, 4]);
+        let hot = report.buckets[0];
+        let cold = report.buckets[1];
+        assert_eq!(hot.rows, 3); // 6, 7, then 6 again
+        assert_eq!(hot.misses, 2);
+        assert_eq!(hot.hits, 1);
+        assert_eq!(cold.rows, 3); // 0, 2, then 0 again
+        assert_eq!(hot.int8_bytes, 3 * 6);
+        assert_eq!(hot.packed_bytes, 3 * 6); // 8-bit rows pack 1:1
+        assert_eq!(cold.int8_bytes, 3 * 6);
+        assert_eq!(cold.packed_bytes, 3 * 3); // 4-bit rows pack 2:1
+        assert!(report.packed_bytes() < report.int8_bytes());
+    }
+
+    #[test]
+    fn uniform_policy_store_matches_plain_store_bitwise() {
+        // The pre-policy equivalence at the store level: a single-bucket
+        // policy gathers exactly what the plain constructor does.
+        let f = random_features(12, 5, 11);
+        let uniform = FeaturePolicy::uniform(8, &f).unwrap();
+        let mut a = QuantFeatureStore::with_policy(uniform, 0);
+        let mut b = QuantFeatureStore::new(&f, 8);
+        let chunks: [&[u32]; 3] = [&[0, 3, 7], &[3, 3, 11], &[1, 0, 9]];
+        for chunk in chunks {
+            let qa = a.gather_quantized(&f, chunk);
+            let qb = b.gather_quantized(&f, chunk);
+            assert_eq!(qa, qb);
+            assert_eq!(qa.dequantize(), qb.dequantize());
+        }
+        assert_eq!(a.scale(), b.scale());
+        assert_eq!(a.stats(), b.stats());
     }
 }

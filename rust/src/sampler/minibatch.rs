@@ -23,7 +23,7 @@
 
 use super::{
     adjust_fanouts, run_prefetched, shuffled_batches, BatchTarget, EdgeBatcher, FeatureGather,
-    NeighborSampler, PreparedBatch, QuantFeatureStore, SampleStage,
+    NeighborSampler, PreparedBatch, QuantFeatureStore, SampleStage, SamplerBias,
 };
 use crate::config::{TaskKind, TrainConfig};
 use crate::coordinator::qcache::CacheStats;
@@ -33,6 +33,7 @@ use crate::graph::Csr;
 use crate::model::{
     softmax_cross_entropy, AnyModel, GnnModel, ModelSpec, Sgd, TaskHead, TrainMode,
 };
+use crate::policy::PolicyGatherReport;
 use crate::quant::rng::mix_seeds;
 use crate::quant::{derive_bits, DEFAULT_ERROR_TARGET};
 
@@ -82,22 +83,26 @@ impl MiniBatchTrainer {
         }
         let model = Self::build_model(&cfg, &data, out_dim);
         let fanouts = adjust_fanouts(&cfg.sampler.fanouts, cfg.layers);
+        let bias = SamplerBias::from_config(&cfg.sampler);
         // Seed formula shared with the multi-GPU workers (worker id 0), so a
         // 1-worker data-parallel run replays this trainer step for step.
         let sampler =
-            NeighborSampler::new(fanouts, mix_seeds(&[cfg.sampler.seed, cfg.seed, 0]));
+            NeighborSampler::with_bias(fanouts, mix_seeds(&[cfg.sampler.seed, cfg.seed, 0]), bias);
         let csr_in = Csr::from_coo(&data.graph);
         let degrees = data.graph.in_degrees();
         let edges = match task {
             Task::LinkPrediction => Some(EdgeBatcher::new(&data.graph)),
             Task::NodeClassification => None,
         };
+        // The degree-aware mixed-precision policy decides each node's
+        // `(scale, bits)`; the default uniform policy reproduces the single
+        // global scale exactly, so default runs stay bit-identical.
         let store = if cfg.mode.quantize {
-            Some(QuantFeatureStore::with_capacity(
-                &data.features,
-                cfg.mode.bits,
-                cfg.sampler.cache_nodes,
-            ))
+            let policy = cfg
+                .policy
+                .materialize(cfg.mode.bits, &degrees, &data.features)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            Some(QuantFeatureStore::with_policy(policy, cfg.sampler.cache_nodes))
         } else {
             None
         };
@@ -157,6 +162,12 @@ impl MiniBatchTrainer {
         self.store.as_ref().map(|s| s.stats())
     }
 
+    /// Per-bucket gather accounting of the mixed-precision policy (None in
+    /// FP32 mode).
+    pub fn policy_report(&self) -> Option<PolicyGatherReport> {
+        self.store.as_ref().map(|s| s.policy_report())
+    }
+
     /// Bytes held by the quantized feature cache.
     pub fn gather_cached_bytes(&self) -> usize {
         self.store.as_ref().map(|s| s.cached_bytes()).unwrap_or(0)
@@ -203,6 +214,7 @@ impl MiniBatchTrainer {
             epochs_to_converge,
             cache: self.gather_stats(),
             cache_bytes: self.gather_cached_bytes(),
+            policy: self.policy_report(),
             prefetch_wait_s: wait,
         })
     }

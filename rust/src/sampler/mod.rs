@@ -6,9 +6,11 @@
 //! in (BiFeat: the quantized feature gather dominates sampled step time;
 //! see PAPERS.md):
 //!
-//! - [`NeighborSampler`] — layered uniform neighbor sampling with per-layer
+//! - [`NeighborSampler`] — layered neighbor sampling with per-layer
 //!   fanouts over the in-edge CSR (DGL `MultiLayerNeighborSampler` shape),
-//!   plus [`shuffled_batches`] for the seeded epoch sweep and
+//!   uniform or degree-biased ([`SamplerBias`], `--sampler degree` — draws
+//!   weighted by global in-degree, the Degree-Quant importance rule), plus
+//!   [`shuffled_batches`] for the seeded epoch sweep and
 //!   [`NeighborSampler::sample_blocks_excluding`] for edge-exclusion
 //!   (the LP leakage guard);
 //! - [`Block`] — MFG-style bipartite blocks with compacted node ids,
@@ -22,9 +24,10 @@
 //!   lists and the per-batch exclusion set;
 //! - [`QuantFeatureStore`] / [`gather_rows`] — the per-batch feature
 //!   gather (data-parallel row copies and miss quantization); the quantized
-//!   path slices INT8 rows under one shared scale and caches hot
-//!   (frequently re-sampled) nodes in a
-//!   [`QuantCache`](crate::coordinator::QuantCache);
+//!   path slices rows at each node's degree-bucket `(scale, bits)` (see
+//!   [`crate::policy`] — the uniform policy is the original single shared
+//!   scale) into a [`QuantRows`] batch and caches hot (frequently
+//!   re-sampled) nodes in a [`QuantCache`](crate::coordinator::QuantCache);
 //! - [`run_prefetched`] / [`SampleStage`] — the pipelined batch-prefetch
 //!   engine (the paper's §4.2 overlap made real): a producer thread runs
 //!   stage one (sampling + quantized gather) for batches `t+1..t+depth`
@@ -48,9 +51,9 @@ mod pipeline;
 
 pub use block::Block;
 pub use edge::{sample_lp_step, EdgeBatch, EdgeBatcher};
-pub use gather::{gather_rows, QuantFeatureStore};
+pub use gather::{gather_rows, QuantFeatureStore, QuantRows};
 pub use minibatch::MiniBatchTrainer;
-pub use neighbor::{adjust_fanouts, shuffled_batches, NeighborSampler};
+pub use neighbor::{adjust_fanouts, shuffled_batches, NeighborSampler, SamplerBias};
 pub use pipeline::{
     run_prefetched, spawn_producer, BatchTarget, FeatureGather, PrefetchStats, PreparedBatch,
     ProducerHandle, SampleStage,

@@ -1,19 +1,53 @@
-//! Layered uniform neighbor sampling (DGL `MultiLayerNeighborSampler`
-//! shape): per-layer fanouts over the in-edge CSR, producing one [`Block`]
-//! per model layer with compacted node ids.
+//! Layered neighbor sampling (DGL `MultiLayerNeighborSampler` shape):
+//! per-layer fanouts over the in-edge CSR, producing one [`Block`] per
+//! model layer with compacted node ids.
 //!
 //! Sampling walks outward from the seed nodes: the last layer's block has
 //! the seeds as destinations; each earlier layer's destinations are the
 //! previous block's source frontier. Every draw comes from the same seeded
 //! xoshiro256++ stream the quantizer uses, so a `(sampler seed, stream,
 //! seeds)` triple always reproduces the same blocks.
+//!
+//! Fanout selection is either **uniform** (every admissible in-neighbor
+//! equally likely — the default, byte-identical to the pre-policy sampler)
+//! or **degree-biased** ([`SamplerBias::Degree`], `--sampler degree`):
+//! each draw picks among the remaining candidates with probability
+//! proportional to their *global* in-degree, the Degree-Quant-style
+//! importance rule that keeps the accuracy-critical hub nodes in the
+//! sampled computation graph. Both modes are stream-seeded and
+//! deterministic.
 
 use super::Block;
 use crate::graph::Csr;
 use crate::quant::rng::Xoshiro256pp;
 use std::collections::{HashMap, HashSet};
 
-/// Layered uniform neighbor sampler with per-layer fanouts.
+/// How fanout draws weight the candidate in-neighbors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SamplerBias {
+    /// Uniform without replacement (DGL default).
+    #[default]
+    Uniform,
+    /// Without replacement, each draw proportional to the candidate's
+    /// global in-degree (hubs preferentially kept in the frontier).
+    Degree,
+}
+
+impl SamplerBias {
+    /// The bias a [`SamplerConfig`](crate::config::SamplerConfig) asks
+    /// for — the ONE conversion `MiniBatchTrainer` and the multi-GPU
+    /// workers share, so the two engines (and their 1-worker replay
+    /// equivalence) cannot diverge when sampling modes grow.
+    pub fn from_config(sampler: &crate::config::SamplerConfig) -> Self {
+        if sampler.degree_biased {
+            SamplerBias::Degree
+        } else {
+            SamplerBias::Uniform
+        }
+    }
+}
+
+/// Layered neighbor sampler with per-layer fanouts.
 #[derive(Debug, Clone)]
 pub struct NeighborSampler {
     /// Per-layer fanouts, input-side layer first (`fanouts[l]` bounds the
@@ -21,14 +55,21 @@ pub struct NeighborSampler {
     pub fanouts: Vec<usize>,
     /// Base seed for the sampling streams.
     pub seed: u64,
+    /// Fanout selection weighting (uniform by default).
+    pub bias: SamplerBias,
 }
 
 impl NeighborSampler {
-    /// New sampler; `fanouts` must name at least one layer.
+    /// New uniform sampler; `fanouts` must name at least one layer.
     pub fn new(fanouts: Vec<usize>, seed: u64) -> Self {
+        Self::with_bias(fanouts, seed, SamplerBias::Uniform)
+    }
+
+    /// New sampler with an explicit fanout-selection bias.
+    pub fn with_bias(fanouts: Vec<usize>, seed: u64, bias: SamplerBias) -> Self {
         assert!(!fanouts.is_empty(), "need at least one fanout");
         assert!(fanouts.iter().all(|&f| f >= 1), "fanouts must be >= 1");
-        NeighborSampler { fanouts, seed }
+        NeighborSampler { fanouts, seed, bias }
     }
 
     /// Sample the per-layer blocks for one mini-batch.
@@ -107,12 +148,50 @@ impl NeighborSampler {
                 if take == 0 {
                     continue;
                 }
-                // Uniform without replacement: partial Fisher–Yates over an
-                // index window (degree <= fanout takes every in-edge).
                 let mut idx: Vec<usize> = (0..nbrs.len()).collect();
-                for i in 0..take {
-                    let j = i + (rng.next_u64() % (idx.len() - i) as u64) as usize;
-                    idx.swap(i, j);
+                match self.bias {
+                    SamplerBias::Uniform => {
+                        // Uniform without replacement: partial Fisher–Yates
+                        // over an index window (degree <= fanout takes every
+                        // in-edge). This arm's rng draw sequence is the
+                        // pre-policy sampler's, byte for byte.
+                        for i in 0..take {
+                            let j = i + (rng.next_u64() % (idx.len() - i) as u64) as usize;
+                            idx.swap(i, j);
+                        }
+                    }
+                    SamplerBias::Degree => {
+                        // Weighted without replacement: each draw picks
+                        // among the not-yet-taken candidates proportionally
+                        // to their global in-degree (integer weights — the
+                        // draw is exact and deterministic per stream). The
+                        // remaining-weight total is maintained incrementally
+                        // (subtract the taken weight) instead of re-summed
+                        // per draw. The pick itself is a linear scan —
+                        // O(fanout · degree) per destination — which is fine
+                        // at this repo's graph scale (hub in-degrees in the
+                        // hundreds); swap in a Fenwick tree over the weights
+                        // if hub degrees ever reach ~10^5.
+                        let mut weights: Vec<u64> = idx
+                            .iter()
+                            .map(|&k| u64::from(degrees[nbrs[k] as usize]).max(1))
+                            .collect();
+                        let mut total: u64 = weights.iter().sum();
+                        for i in 0..take {
+                            let mut r = rng.next_u64() % total;
+                            let mut j = i;
+                            for (off, &w) in weights[i..].iter().enumerate() {
+                                if r < w {
+                                    j = i + off;
+                                    break;
+                                }
+                                r -= w;
+                            }
+                            idx.swap(i, j);
+                            weights.swap(i, j);
+                            total -= weights[i];
+                        }
+                    }
                 }
                 for &k in idx.iter().take(take) {
                     let u = nbrs[k];
@@ -264,6 +343,37 @@ mod tests {
         let last = blocks.last().unwrap();
         let d2 = last.dst_nodes().iter().position(|&v| v == 2).unwrap();
         assert!(last.csr.row(d2).0.iter().any(|&u| last.src_nodes[u as usize] == 2));
+    }
+
+    #[test]
+    fn degree_bias_is_deterministic_and_respects_fanout() {
+        let (_, csr, deg) = parent();
+        let s = NeighborSampler::with_bias(vec![3, 2], 13, SamplerBias::Degree);
+        let seeds: Vec<u32> = vec![2, 6, 10];
+        let a = s.sample_blocks(&csr, &deg, &seeds, 4);
+        let b = s.sample_blocks(&csr, &deg, &seeds, 4);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.src_nodes, y.src_nodes);
+            assert_eq!(x.coo, y.coo);
+        }
+        assert_eq!(a[1].dst_nodes(), &seeds[..]);
+        let mut per_dst = vec![0usize; a[1].num_dst];
+        for e in 0..a[1].num_edges() {
+            per_dst[a[1].coo.dst[e] as usize] += 1;
+        }
+        assert!(per_dst.iter().all(|&c| (1..=2).contains(&c)), "{per_dst:?}");
+    }
+
+    #[test]
+    fn degree_bias_with_full_fanout_takes_every_in_edge() {
+        // Weights only matter when the fanout binds; a full-fanout layer
+        // keeps the whole in-neighborhood either way.
+        let (coo, csr, deg) = parent();
+        let s = NeighborSampler::with_bias(vec![1 << 30], 5, SamplerBias::Degree);
+        let seeds: Vec<u32> = (0..coo.num_nodes as u32).collect();
+        let blocks = s.sample_blocks(&csr, &deg, &seeds, 2);
+        assert_eq!(blocks[0].num_edges(), coo.num_edges());
+        assert_eq!(blocks[0].num_src(), coo.num_nodes);
     }
 
     #[test]

@@ -31,7 +31,6 @@ use super::{
     gather_rows, sample_lp_step, Block, EdgeBatcher, NeighborSampler, QuantFeatureStore,
 };
 use crate::graph::Csr;
-use crate::quant::dequantize;
 use crate::tensor::Dense;
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Mutex;
@@ -106,7 +105,7 @@ impl<'a> FeatureGather<'a> {
             }
             FeatureGather::Shared { features, store } => {
                 let q = store.lock().unwrap().gather_quantized(features, nodes);
-                dequantize(&q)
+                q.dequantize()
             }
         }
     }

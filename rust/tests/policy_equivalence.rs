@@ -1,0 +1,189 @@
+//! Degree-aware mixed-precision policy: equivalence and end-to-end runs.
+//!
+//! The load-bearing guarantee: the **uniform** policy (one bucket at the
+//! mode's width — the default when no policy knobs are set) is
+//! bit-identical to pre-policy behaviour. The policy module derives the
+//! single bucket's scale with the same fold `quant::scale_for_bits` uses
+//! and quantizes rows through the same `quantize_slice_nearest`, so the
+//! pinned traces here (and every pre-existing sampled/multi-GPU test)
+//! survive the subsystem unchanged. On top of that: mixed policies train
+//! end to end on both task heads and both engines, shrink gathered bytes
+//! below uniform INT8, and stay bit-identical across prefetch depths.
+
+use tango::config::{parse_mode, ModelKind, TaskKind, TrainConfig};
+use tango::graph::datasets;
+use tango::multigpu::{run_data_parallel, Interconnect, MultiGpuConfig};
+use tango::sampler::MiniBatchTrainer;
+
+fn cfg(mode: &str, epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        model: ModelKind::Gcn,
+        dataset: "tiny".into(),
+        epochs,
+        lr: 0.1,
+        hidden: 16,
+        heads: 2,
+        layers: 2,
+        mode: parse_mode(mode, 8).unwrap(),
+        auto_bits: false,
+        seed: 7,
+        log_every: 0,
+        ..Default::default()
+    };
+    cfg.sampler.enabled = true;
+    cfg.sampler.fanouts = vec![4, 4];
+    cfg.sampler.batch_size = 32;
+    cfg
+}
+
+fn mixed(mut cfg: TrainConfig) -> TrainConfig {
+    // tiny's in-degrees centre around ~9, so boundaries [6, 12] populate
+    // all three buckets.
+    cfg.policy.degree_buckets = vec![6, 12];
+    cfg.policy.bucket_bits = vec![8, 6, 4];
+    cfg
+}
+
+fn traces(cfg: &TrainConfig) -> (Vec<f32>, Vec<f32>) {
+    let r = MiniBatchTrainer::from_config(cfg).unwrap().run().unwrap();
+    (r.losses, r.evals)
+}
+
+#[test]
+fn explicit_single_bucket_policy_is_bit_identical_to_default() {
+    // Spelling the uniform policy out (one bucket, 8 bits) must not change
+    // a single loss or eval relative to the default (no policy knobs).
+    let base = cfg("tango", 4);
+    let mut explicit = base.clone();
+    explicit.policy.bucket_bits = vec![8];
+    assert_eq!(traces(&base), traces(&explicit));
+}
+
+#[test]
+fn uniform_policy_report_shows_one_full_width_bucket() {
+    let mut t = MiniBatchTrainer::from_config(&cfg("tango", 2)).unwrap();
+    let r = t.run().unwrap();
+    let policy = r.policy.expect("quantized run reports its policy");
+    assert!(!policy.is_mixed());
+    assert_eq!(policy.bits, vec![8]);
+    assert_eq!(policy.boundaries, Vec::<u32>::new());
+    // INT8 packs 1:1 — no compression claimed where none happens.
+    assert_eq!(policy.packed_bytes(), policy.int8_bytes());
+    assert!(policy.packed_bytes() > 0, "an epoch sweep gathers rows");
+    // FP32 runs have no store, hence no policy report.
+    let r = MiniBatchTrainer::from_config(&cfg("fp32", 2)).unwrap().run().unwrap();
+    assert!(r.policy.is_none());
+}
+
+#[test]
+fn mixed_policy_trains_nc_and_shrinks_gathered_bytes() {
+    let mut t = MiniBatchTrainer::from_config(&mixed(cfg("tango", 12))).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.losses.iter().all(|l| l.is_finite()), "{:?}", r.losses);
+    assert!(r.losses.last().unwrap() < &r.losses[0], "{:?}", r.losses);
+    let policy = r.policy.expect("mixed run reports its policy");
+    assert!(policy.is_mixed());
+    assert_eq!(policy.bits, vec![8, 6, 4]);
+    assert_eq!(policy.boundaries, vec![6, 12]);
+    assert!(
+        policy.packed_bytes() < policy.int8_bytes(),
+        "sub-INT8 buckets must shrink gathered bytes: {} vs {}",
+        policy.packed_bytes(),
+        policy.int8_bytes()
+    );
+    // Per-bucket rows add up to the cache traffic.
+    let rows: u64 = policy.buckets.iter().map(|b| b.rows).sum();
+    let stats = r.cache.expect("quantized run has cache stats");
+    assert_eq!(rows, stats.hits + stats.misses);
+}
+
+#[test]
+fn mixed_policy_trains_linkpred_end_to_end() {
+    let mut c = mixed(cfg("tango", 3));
+    c.task = Some(TaskKind::LinkPrediction);
+    let mut t = MiniBatchTrainer::from_config(&c).unwrap();
+    assert_eq!(t.task(), datasets::Task::LinkPrediction);
+    let r = t.run().unwrap();
+    assert!(r.losses.iter().all(|l| l.is_finite()), "{:?}", r.losses);
+    assert!(r.final_eval > 0.0 && r.final_eval <= 1.0, "AUC {}", r.final_eval);
+    assert!(r.policy.expect("mixed LP run reports its policy").is_mixed());
+}
+
+#[test]
+fn mixed_policy_is_bit_identical_across_prefetch_depths() {
+    // Per-bucket scales are static and batch streams are position-keyed,
+    // so the §4.2 overlap guarantee survives mixed precision.
+    let sequential = {
+        let mut c = mixed(cfg("tango", 3));
+        c.sampler.prefetch = 0;
+        traces(&c)
+    };
+    let default_prefetch = traces(&mixed(cfg("tango", 3))); // prefetch = 2
+    assert_eq!(default_prefetch, sequential, "default prefetch (2) vs sequential");
+    for depth in [5usize, 8] {
+        let mut c = mixed(cfg("tango", 3));
+        c.sampler.prefetch = depth;
+        assert_eq!(traces(&c), sequential, "depth {depth}");
+    }
+}
+
+#[test]
+fn degree_sampler_trains_and_is_deterministic() {
+    let mut c = cfg("tango", 4);
+    c.sampler.degree_biased = true;
+    let a = traces(&c);
+    let b = traces(&c);
+    assert_eq!(a, b, "degree-biased runs replay under a fixed seed");
+    assert!(a.0.iter().all(|l| l.is_finite()));
+    // And it genuinely samples differently from the uniform sweep.
+    let uniform = traces(&cfg("tango", 4));
+    assert_ne!(a.0, uniform.0, "degree bias must change the sampled blocks");
+}
+
+#[test]
+fn degree_sampler_with_mixed_policy_runs_multigpu() {
+    let mut train = mixed(cfg("tango", 2));
+    train.sampler.degree_biased = true;
+    train.sampler.batch_size = 16;
+    let mg = MultiGpuConfig {
+        train,
+        workers: 3,
+        epochs: 2,
+        quantize_grads: true,
+        interconnect: Interconnect::pcie3(),
+    };
+    let data = datasets::tiny(7);
+    let r = run_data_parallel(&mg, &data).unwrap();
+    assert_eq!(r.epochs.len(), 2);
+    assert!(r.epochs.iter().all(|e| e.loss.is_finite()));
+    let policy = r.policy.expect("mixed multigpu run reports its policy");
+    assert!(policy.is_mixed());
+    assert!(policy.packed_bytes() < policy.int8_bytes());
+}
+
+#[test]
+fn one_worker_multigpu_replays_minibatch_under_mixed_policy() {
+    // The step-for-step replay guarantee extends to mixed policies: same
+    // shared store semantics, same per-bucket scales, same streams.
+    let train = mixed(cfg("tango", 3));
+    let mut mb = MiniBatchTrainer::from_config(&train).unwrap();
+    let single = mb.run().unwrap();
+    let data = datasets::tiny(train.seed);
+    let mg = MultiGpuConfig {
+        train,
+        workers: 1,
+        epochs: 3,
+        quantize_grads: false,
+        interconnect: Interconnect::pcie3(),
+    };
+    let r = run_data_parallel(&mg, &data).unwrap();
+    assert_eq!(r.epochs.len(), single.losses.len());
+    for (e, (ms, loss)) in r.epochs.iter().zip(&single.losses).enumerate() {
+        assert!(
+            (ms.loss - loss).abs() < 1e-6,
+            "epoch {e}: multigpu {} vs minibatch {}",
+            ms.loss,
+            loss
+        );
+    }
+}

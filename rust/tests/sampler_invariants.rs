@@ -2,13 +2,16 @@
 //! `tango::util::prop`): sampled blocks are valid MFGs — compacted ids in
 //! range, every edge endpoint present and backed by a parent edge, fanout
 //! respected, layers chained, all deterministic under a fixed seed — the
-//! quantized feature gather matches direct quantization, and edge-seeded
-//! LP batches never leak their positive edges into the sampled messages.
+//! quantized feature gather matches direct quantization, edge-seeded LP
+//! batches never leak their positive edges into the sampled messages, the
+//! degree-bucket partition is complete/disjoint with monotone boundaries,
+//! and degree-biased fanout draws are weight-proportional (chi-square).
 
 use tango::graph::{Coo, Csr};
-use tango::quant::{quantize_with_scale, Rounding};
+use tango::policy::{BitPolicy, DegreeBuckets, FeaturePolicy};
+use tango::quant::{quantize_slice_nearest, quantize_with_scale, Rounding};
 use tango::sampler::{
-    gather_rows, shuffled_batches, EdgeBatcher, NeighborSampler, QuantFeatureStore,
+    gather_rows, shuffled_batches, EdgeBatcher, NeighborSampler, QuantFeatureStore, SamplerBias,
 };
 use tango::tensor::Dense;
 use tango::util::prop::{check, Gen};
@@ -196,8 +199,139 @@ fn prop_quantized_gather_matches_direct_quantization() {
         let direct =
             quantize_with_scale(&gather_rows(&feats, &nodes), store.scale(), 8, Rounding::Nearest);
         assert_eq!(q.data, direct.data, "cached rows must equal direct quantization");
-        assert_eq!(q.scale, direct.scale);
+        assert!(q.scales.iter().all(|&s| s == direct.scale), "uniform rows share the scale");
         // Re-gathering the same nodes is all hits, bit-identical.
+        let misses_before = store.stats().misses;
+        let q2 = store.gather_quantized(&feats, &nodes);
+        assert_eq!(q2, q);
+        assert_eq!(store.stats().misses, misses_before, "second gather must not quantize");
+    });
+}
+
+#[test]
+fn prop_degree_bucket_partition_is_complete_disjoint_and_monotone() {
+    check("degree buckets partition", 60, |g| {
+        // A random strictly-increasing boundary list (sort + dedup of
+        // random picks).
+        let m = g.usize_in(0, 4);
+        let mut bounds: Vec<u32> = (0..m).map(|_| g.usize_in(1, 100) as u32).collect();
+        bounds.sort_unstable();
+        bounds.dedup();
+        let buckets = DegreeBuckets::new(bounds.clone()).unwrap();
+        let nb = buckets.num_buckets();
+        assert_eq!(nb, bounds.len() + 1);
+        let n = g.usize_in(1, 200);
+        let degrees: Vec<u32> = (0..n).map(|_| g.usize_in(0, 150) as u32).collect();
+        let assign = buckets.assign(&degrees);
+        assert_eq!(assign.len(), n, "every node gets exactly one bucket");
+        let mut census = vec![0usize; nb];
+        let mlen = bounds.len();
+        for (v, &b) in assign.iter().enumerate() {
+            let b = b as usize;
+            assert!(b < nb, "bucket id out of range");
+            census[b] += 1;
+            // The bucket's documented degree range really holds (bucket 0
+            // hottest): the ranges tile the axis, so membership in one
+            // range excludes every other — disjointness.
+            let d = degrees[v];
+            if mlen > 0 {
+                if b == 0 {
+                    assert!(d >= bounds[mlen - 1], "deg {d} not in hottest bucket range");
+                } else if b == mlen {
+                    assert!(d < bounds[0], "deg {d} not in coldest bucket range");
+                } else {
+                    assert!(
+                        d >= bounds[mlen - 1 - b] && d < bounds[mlen - b],
+                        "deg {d} outside bucket {b} range"
+                    );
+                }
+            }
+        }
+        // Completeness: the census covers every node.
+        assert_eq!(census.iter().sum::<usize>(), n);
+        // Monotonicity is enforced: a shuffled (non-increasing) boundary
+        // list is rejected.
+        if bounds.len() >= 2 {
+            let mut rev = bounds.clone();
+            rev.reverse();
+            assert!(DegreeBuckets::new(rev).is_err(), "non-monotone boundaries must fail");
+        }
+    });
+}
+
+#[test]
+fn degree_biased_draws_are_weight_proportional() {
+    // Node 0 has in-neighbors 1, 2, 3 whose (caller-supplied) global
+    // in-degrees are 1, 3 and 6. A fanout-1 degree-biased draw must pick
+    // each with probability proportional to its weight; a chi-square
+    // statistic over many deterministic streams bounds the deviation
+    // (df = 2, threshold far beyond any plausible PRNG fluctuation).
+    let coo = Coo::new(4, vec![1, 2, 3], vec![0, 0, 0]);
+    let csr = Csr::from_coo(&coo);
+    let degrees = vec![1u32, 1, 3, 6];
+    let sampler = NeighborSampler::with_bias(vec![1], 99, SamplerBias::Degree);
+    let n = 9000u64;
+    let mut counts = [0u64; 4];
+    for stream in 0..n {
+        let blocks = sampler.sample_blocks(&csr, &degrees, &[0], stream);
+        assert_eq!(blocks[0].num_edges(), 1, "fanout 1 draws one in-edge");
+        let chosen = blocks[0].src_nodes[blocks[0].coo.src[0] as usize];
+        counts[chosen as usize] += 1;
+    }
+    assert_eq!(counts[0], 0, "node 0 is not its own in-neighbor");
+    let total_w = 10.0f64;
+    let mut chi2 = 0.0f64;
+    for (v, w) in [(1usize, 1.0f64), (2, 3.0), (3, 6.0)] {
+        let expected = n as f64 * w / total_w;
+        let observed = counts[v] as f64;
+        chi2 += (observed - expected) * (observed - expected) / expected;
+        assert!(observed > 0.0, "neighbor {v} never drawn: {counts:?}");
+    }
+    assert!(chi2 < 25.0, "chi-square {chi2} too large: {counts:?}");
+
+    // The uniform sampler over the same graph is degree-blind: roughly
+    // equal counts, wildly off the 1:3:6 weighting.
+    let uniform = NeighborSampler::new(vec![1], 99);
+    let mut ucounts = [0u64; 4];
+    for stream in 0..n {
+        let blocks = uniform.sample_blocks(&csr, &degrees, &[0], stream);
+        let chosen = blocks[0].src_nodes[blocks[0].coo.src[0] as usize];
+        ucounts[chosen as usize] += 1;
+    }
+    let expected = n as f64 / 3.0;
+    for v in 1..4 {
+        let dev = (ucounts[v] as f64 - expected).abs() / expected;
+        assert!(dev < 0.1, "uniform draw skewed at {v}: {ucounts:?}");
+    }
+}
+
+#[test]
+fn prop_mixed_policy_gather_matches_per_row_quantization() {
+    check("mixed policy gather", 30, |g| {
+        let n = g.usize_in(2, 24);
+        let d = g.usize_in(1, 8);
+        let feats = Dense::from_vec(&[n, d], g.f32_vec(n * d, -3.0, 3.0));
+        let degrees: Vec<u32> = (0..n).map(|_| g.usize_in(1, 20) as u32).collect();
+        let policy = FeaturePolicy::materialize(
+            DegreeBuckets::new(vec![5, 12]).unwrap(),
+            BitPolicy::new(vec![8, 6, 4]).unwrap(),
+            &degrees,
+            &feats,
+        )
+        .unwrap();
+        let mut store = QuantFeatureStore::with_policy(policy.clone(), 0);
+        let k = g.usize_in(1, 16);
+        let nodes: Vec<u32> = (0..k).map(|_| g.usize_in(0, n - 1) as u32).collect();
+        let q = store.gather_quantized(&feats, &nodes);
+        for (i, &v) in nodes.iter().enumerate() {
+            let b = policy.bucket_of_node(v as usize);
+            assert_eq!(q.scales[i], policy.scale(b), "row {i} scale");
+            assert_eq!(q.bits[i], policy.bits_of(b), "row {i} bits");
+            let direct =
+                quantize_slice_nearest(feats.row(v as usize), policy.scale(b), policy.bits_of(b));
+            assert_eq!(q.data.row(i), direct.as_slice(), "row {i} must match direct");
+        }
+        // Re-gathering hits the cache and stays bit-identical.
         let misses_before = store.stats().misses;
         let q2 = store.gather_quantized(&feats, &nodes);
         assert_eq!(q2, q);
