@@ -1,24 +1,54 @@
 //! Fig. 8 bench: end-to-end epoch time of FP32 / Tango / EXACT on GCN and
 //! GAT over the scaled datasets.
+//!
+//! Besides the printed table, the bench writes a machine-readable
+//! `BENCH_train_speed.json` at the repo root (schema
+//! `tango-bench/train_speed/v1`) so CI can archive speed numbers per
+//! commit. `--quick` trims the dataset sweep to Pubmed for smoke runs.
 
+use std::collections::BTreeMap;
 use tango::config::{ModelKind, TrainConfig};
 use tango::coordinator::Trainer;
 use tango::metrics::Table;
 use tango::model::TrainMode;
+use tango::util::cli::Args;
+use tango::util::json::Json;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
 
 fn main() {
+    let args = Args::from_env();
+    let quick = args.get_bool("quick");
     let epochs = 2usize;
+    let datasets: &[&str] = if quick {
+        &["Pubmed"]
+    } else {
+        &["ogbn-arxiv", "ogbn-products", "Pubmed", "DBLP", "Amazon"]
+    };
     let mut t = Table::new(
         "bench: end-to-end training (fig8)",
-        &["model", "dataset", "fp32 s/ep", "tango s/ep", "exact s/ep", "tango speedup", "exact speedup"],
+        &[
+            "model",
+            "dataset",
+            "fp32 s/ep",
+            "tango s/ep",
+            "exact s/ep",
+            "tango speedup",
+            "exact speedup",
+        ],
     );
+    let mut results: Vec<Json> = Vec::new();
     for model in [ModelKind::Gcn, ModelKind::Gat] {
         let name = if model == ModelKind::Gcn { "GCN" } else { "GAT" };
-        for ds in ["ogbn-arxiv", "ogbn-products", "Pubmed", "DBLP", "Amazon"] {
-            let time = |mode: TrainMode| -> f64 {
+        for ds in datasets {
+            // Per-epoch wall (the full budget: train sweep + eval) and the
+            // training-compute share of it, both averaged over the epochs.
+            let time = |mode: TrainMode| -> (f64, f64) {
                 let cfg = TrainConfig {
                     model,
-                    dataset: ds.into(),
+                    dataset: (*ds).into(),
                     epochs,
                     lr: 0.05,
                     hidden: 64,
@@ -31,22 +61,46 @@ fn main() {
                     ..Default::default()
                 };
                 let mut tr = Trainer::from_config(&cfg).unwrap();
-                tr.run().unwrap().wall_secs / epochs as f64
+                let report = tr.run().unwrap();
+                let compute = report.stage_totals().compute_s;
+                (report.wall_secs / epochs as f64, compute / epochs as f64)
             };
-            let fp = time(TrainMode::fp32());
-            let tg = time(TrainMode::tango(8));
-            let ex = time(TrainMode::exact(8));
+            let (fp, fp_c) = time(TrainMode::fp32());
+            let (tg, tg_c) = time(TrainMode::tango(8));
+            let (ex, ex_c) = time(TrainMode::exact(8));
             println!("{name} {ds}: fp32 {fp:.3}s tango {tg:.3}s exact {ex:.3}s");
             t.row(&[
                 name.into(),
-                ds.into(),
+                (*ds).into(),
                 format!("{fp:.3}"),
                 format!("{tg:.3}"),
                 format!("{ex:.3}"),
                 format!("{:.2}x", fp / tg),
                 format!("{:.2}x", fp / ex),
             ]);
+            results.push(obj(vec![
+                ("model", Json::Str(name.to_lowercase())),
+                ("dataset", Json::Str((*ds).to_string())),
+                ("fp32_s_per_epoch", Json::Num(fp)),
+                ("tango_s_per_epoch", Json::Num(tg)),
+                ("exact_s_per_epoch", Json::Num(ex)),
+                ("fp32_compute_s_per_epoch", Json::Num(fp_c)),
+                ("tango_compute_s_per_epoch", Json::Num(tg_c)),
+                ("exact_compute_s_per_epoch", Json::Num(ex_c)),
+                ("tango_speedup", Json::Num(fp / tg)),
+                ("exact_speedup", Json::Num(fp / ex)),
+            ]));
         }
     }
     t.print();
+    let artifact = obj(vec![
+        ("schema", Json::Str("tango-bench/train_speed/v1".into())),
+        ("bench", Json::Str("train_speed".into())),
+        ("epochs_per_run", Json::Num(epochs as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_train_speed.json");
+    std::fs::write(path, artifact.to_string()).expect("write BENCH_train_speed.json");
+    println!("wrote {path}");
 }

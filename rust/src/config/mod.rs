@@ -170,6 +170,28 @@ impl Default for SamplerConfig {
     }
 }
 
+/// Observability knobs (the `[metrics]` TOML section and the
+/// `--trace` / `--metrics-out` CLI flags; see [`crate::obs`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MetricsConfig {
+    /// Force tracing on/off for this run. `None` leaves the process-wide
+    /// default alone (on, unless the `TANGO_TRACE=0` env var disabled it).
+    pub trace: Option<bool>,
+    /// Write the structured JSON run artifact (`tango-metrics/v1`) to this
+    /// path after the run completes.
+    pub out: Option<String>,
+}
+
+/// Parse a TOML/CLI boolean (`"true"`/`"false"` only — the same strictness
+/// as the rest of the config surface).
+pub fn parse_bool(s: &str, what: &str) -> Result<bool, String> {
+    match s {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        other => Err(format!("{what} must be true|false, got '{other}'")),
+    }
+}
+
 /// Parse one comma-separated knob list (the shared scaffold of
 /// [`parse_fanouts`], [`parse_degree_buckets`] and [`parse_bucket_bits`]):
 /// split on commas, trim, skip empty parts, parse every entry as `T`,
@@ -294,6 +316,8 @@ pub struct TrainConfig {
     /// Task override (`--task nc|linkpred`); `None` follows the dataset's
     /// declared task.
     pub task: Option<TaskKind>,
+    /// Observability knobs (`[metrics]` / `--trace` / `--metrics-out`).
+    pub metrics: MetricsConfig,
 }
 
 impl Default for TrainConfig {
@@ -314,6 +338,7 @@ impl Default for TrainConfig {
             sampler: SamplerConfig::default(),
             policy: PolicyConfig::default(),
             task: None,
+            metrics: MetricsConfig::default(),
         }
     }
 }
@@ -409,6 +434,14 @@ impl TrainConfig {
         }
         if let Some(v) = doc.get("policy", "bucket_bits") {
             cfg.policy.bucket_bits = parse_bucket_bits(v)?;
+        }
+        // Observability knobs live in their own `[metrics]` section (shared
+        // by `tango train` and `tango multigpu` configs).
+        if let Some(v) = doc.get("metrics", "trace") {
+            cfg.metrics.trace = Some(parse_bool(v, "metrics.trace")?);
+        }
+        if let Some(v) = doc.get("metrics", "out") {
+            cfg.metrics.out = Some(v.to_string());
         }
         cfg.validate()?;
         Ok(cfg)
@@ -656,6 +689,18 @@ bucket_bits = "8,6,4"
         cfg.sampler.fanouts = vec![];
         assert!(cfg.validate().unwrap_err().contains("fanouts"));
         assert!(TrainConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn metrics_section_parses() {
+        let text = "[train]\nmodel = \"gcn\"\n\n[metrics]\ntrace = false\nout = \"m.json\"\n";
+        let cfg = TrainConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.metrics.trace, Some(false));
+        assert_eq!(cfg.metrics.out.as_deref(), Some("m.json"));
+        // Absent section = both knobs unset.
+        let plain = TrainConfig::from_toml("[train]\nmodel = \"gcn\"\n").unwrap();
+        assert_eq!(plain.metrics, MetricsConfig::default());
+        assert!(TrainConfig::from_toml("[metrics]\ntrace = \"loud\"\n").is_err());
     }
 
     #[test]

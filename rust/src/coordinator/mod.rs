@@ -23,4 +23,4 @@ pub use adaptive::{choose_spmm_kernel, SpmmKernel};
 pub use graph_ir::{CompGraph, OpKind, TensorId};
 pub use qcache::{CacheStats, QuantCache};
 pub use reuse::{detect_reuse, ReusePlan};
-pub use trainer::{TrainReport, Trainer};
+pub use trainer::{EpochStages, TrainReport, Trainer};

@@ -19,6 +19,48 @@ use crate::model::{
 use crate::quant::rng::Xoshiro256pp;
 use crate::quant::{derive_bits, DEFAULT_ERROR_TARGET};
 
+/// Where one epoch's wall time went.
+///
+/// `sample_s`/`gather_s` are stage-one *producer-side* work: when
+/// `prefetch > 0` they overlap with compute and do **not** sum into the
+/// wall. The consumer-side budget `wait_s + compute_s + eval_s`
+/// ([`accounted`](Self::accounted)) is what closes against the measured
+/// `wall_s` — within a small bookkeeping slack (shuffling, channel
+/// plumbing), asserted in `tests/training_integration.rs`.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct EpochStages {
+    /// Stage-one sampling seconds (producer side; 0 for full-graph runs).
+    pub sample_s: f64,
+    /// Stage-one feature-gather seconds (producer side; 0 for full-graph).
+    pub gather_s: f64,
+    /// Stage-one seconds *not* hidden by the prefetch pipeline (the whole
+    /// inline stage-one time when `prefetch = 0`).
+    pub wait_s: f64,
+    /// Forward + backward + update seconds on the training thread.
+    pub compute_s: f64,
+    /// Evaluation seconds.
+    pub eval_s: f64,
+    /// Measured epoch wall seconds (training sweep + evaluation).
+    pub wall_s: f64,
+}
+
+impl EpochStages {
+    /// Consumer-side accounted seconds: `wait + compute + eval`.
+    pub fn accounted(&self) -> f64 {
+        self.wait_s + self.compute_s + self.eval_s
+    }
+
+    /// Fold another epoch's stages in (run totals).
+    pub fn add(&mut self, other: &EpochStages) {
+        self.sample_s += other.sample_s;
+        self.gather_s += other.gather_s;
+        self.wait_s += other.wait_s;
+        self.compute_s += other.compute_s;
+        self.eval_s += other.eval_s;
+        self.wall_s += other.wall_s;
+    }
+}
+
 /// One training run's results.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
@@ -28,7 +70,9 @@ pub struct TrainReport {
     pub evals: Vec<f32>,
     /// Final evaluation metric.
     pub final_eval: f32,
-    /// Total wall-clock training seconds (forward+backward+update only).
+    /// Total measured wall seconds across epochs — the *full* budget
+    /// (training sweep + per-epoch evaluation) that [`stages`](Self::stages)
+    /// breaks down, not just forward+backward+update.
     pub wall_secs: f64,
     /// Bit width used (after auto-derivation if enabled).
     pub bits: u8,
@@ -49,6 +93,20 @@ pub struct TrainReport {
     /// when `prefetch = 0`, only the consumer's channel-wait otherwise.
     /// 0 for full-graph runs.
     pub prefetch_wait_s: f64,
+    /// Per-epoch stage breakdown; each entry's `wait + compute + eval`
+    /// closes against its measured `wall_s`.
+    pub stages: Vec<EpochStages>,
+}
+
+impl TrainReport {
+    /// Sum of the per-epoch stage breakdown (whole-run budget).
+    pub fn stage_totals(&self) -> EpochStages {
+        let mut t = EpochStages::default();
+        for s in &self.stages {
+            t.add(s);
+        }
+        t
+    }
 }
 
 /// The training coordinator.
@@ -146,11 +204,24 @@ impl Trainer {
         }
         let mut losses = Vec::with_capacity(self.cfg.epochs);
         let mut evals = Vec::with_capacity(self.cfg.epochs);
+        let mut stages = Vec::with_capacity(self.cfg.epochs);
         let mut wall = 0.0f64;
         for epoch in 0..self.cfg.epochs {
+            let _epoch_span = crate::obs::span("epoch");
+            let t_epoch = std::time::Instant::now();
             let (loss, secs) = crate::metrics::time_once(|| self.train_epoch(epoch as u64));
-            wall += secs;
-            let eval = self.evaluate();
+            let (eval, eval_s) = crate::metrics::time_once(|| {
+                let _s = crate::obs::span("eval");
+                self.evaluate()
+            });
+            let wall_s = t_epoch.elapsed().as_secs_f64();
+            wall += wall_s;
+            stages.push(EpochStages {
+                compute_s: secs,
+                eval_s,
+                wall_s,
+                ..EpochStages::default()
+            });
             if self.cfg.log_every > 0 && epoch % self.cfg.log_every == 0 {
                 println!(
                     "epoch {epoch:>4}  loss {loss:>8.4}  eval {eval:>6.4}  ({:.1} ms)",
@@ -177,6 +248,7 @@ impl Trainer {
             cache_bytes: 0,
             policy: None,
             prefetch_wait_s: 0.0,
+            stages,
         })
     }
 
@@ -184,6 +256,7 @@ impl Trainer {
     /// model — see `model/mod.rs`). Destructuring `self` gives the model,
     /// optimizer and dataset disjoint borrows, so nothing is cloned.
     fn train_epoch(&mut self, epoch: u64) -> f32 {
+        let _compute_span = crate::obs::span("compute");
         let Trainer { task, model, opt, data, cfg, .. } = self;
         match task {
             Task::NodeClassification => {

@@ -39,7 +39,11 @@
 //!   for both tasks (per-worker sampling streams *and* per-worker prefetch
 //!   producers with measured overlap, one process-wide quantized feature
 //!   store, per-step quantized ring all-reduce over a modelled PCIe
-//!   interconnect), an analytical GPU cost model, and the PJRT runtime
+//!   interconnect), the observability layer ([`obs`]: zero-dep hierarchical
+//!   spans, counters/gauges, log-bucketed p50/p95/p99 latency histograms
+//!   and the `--metrics-out` JSON run artifact — a true no-op when disabled
+//!   via `TANGO_TRACE=0`, so bit-identity and bench numbers are
+//!   unaffected), an analytical GPU cost model, and the PJRT runtime
 //!   that executes jax-lowered artifacts.
 //! - **Layer 2 (`python/compile/model.py`)** — GCN/GAT forward/backward in
 //!   JAX, AOT-lowered to HLO text under `artifacts/`.
@@ -67,6 +71,7 @@ pub mod graph;
 pub mod metrics;
 pub mod model;
 pub mod multigpu;
+pub mod obs;
 pub mod perfmodel;
 pub mod policy;
 pub mod primitives;

@@ -7,6 +7,7 @@
 //!              [--seed S] [--sampler neighbor|degree|full] [--fanouts 10,10]
 //!              [--batch-size N] [--sample-seed S] [--cache-nodes N]
 //!              [--prefetch N] [--degree-buckets 8,64] [--bucket-bits 8,6,4]
+//!              [--metrics-out m.json] [--trace true|false]
 //! tango repro  <table1|fig2|fig7|...|fig16|table2|all> [--quick]
 //!              [--epochs N] [--speed-epochs N]
 //! tango plan                # print the derived quantization-caching plan
@@ -16,8 +17,17 @@
 //!                [--fanouts 10,10] [--batch-size N] [--sample-seed S]
 //!                [--cache-nodes N] [--prefetch N]
 //!                [--sampler neighbor|degree] [--degree-buckets 8,64]
-//!                [--bucket-bits 8,6,4]
+//!                [--bucket-bits 8,6,4] [--metrics-out m.json]
+//!                [--trace true|false]
 //! ```
+//!
+//! `--metrics-out PATH` (TOML `[metrics] out`) writes the structured
+//! `tango-metrics/v1` JSON run artifact after the run: per-epoch stage
+//! breakdown (`sample/gather/wait/compute/comm/eval/wall`), the span tree,
+//! per-primitive latency histograms with `p50/p95/p99`, counters, gauges
+//! and the cache/policy reports. `--trace false` (TOML `[metrics]
+//! trace = false`, env `TANGO_TRACE=0`) turns the tracing layer into a true
+//! no-op — losses and RNG streams are bit-identical either way.
 //!
 //! `--degree-buckets`/`--bucket-bits` (TOML `[policy]`) configure the
 //! degree-aware mixed-precision policy for the sampled feature gather:
@@ -113,6 +123,16 @@ fn print_policy_report(policy: Option<&tango::policy::PolicyGatherReport>) {
     }
 }
 
+/// Apply a run's `[metrics]` knobs before training starts: honour an
+/// explicit `--trace` override and clear the process-global registry so the
+/// artifact describes this run alone (shared by `train` and `multigpu`).
+fn apply_metrics_config(metrics: &tango::config::MetricsConfig) {
+    if let Some(on) = metrics.trace {
+        tango::obs::set_enabled(on);
+    }
+    tango::obs::reset();
+}
+
 /// Read the `--config` file, if given (shared by `train` and `multigpu` so
 /// the TOML is read and parsed once per run).
 fn config_text(args: &Args) -> tango::Result<Option<String>> {
@@ -180,6 +200,13 @@ fn train_config_with_toml(args: &Args, toml: Option<&str>) -> tango::Result<Trai
         cfg.policy.bucket_bits =
             tango::config::parse_bucket_bits(s).map_err(|e| anyhow::anyhow!(e))?;
     }
+    if let Some(t) = args.flags.get("trace") {
+        cfg.metrics.trace =
+            Some(tango::config::parse_bool(t, "--trace").map_err(|e| anyhow::anyhow!(e))?);
+    }
+    if let Some(p) = args.flags.get("metrics-out") {
+        cfg.metrics.out = Some(p.clone());
+    }
     cfg.log_every = args.get_as("log-every", 10);
     // Reject degenerate knob combinations (e.g. `--batch-size 0`) with an
     // actionable message instead of panicking mid-run.
@@ -207,6 +234,7 @@ fn cmd_train(args: &Args) -> tango::Result<()> {
         );
     }
     print_policy_config(&cfg.policy, cfg.mode.bits);
+    apply_metrics_config(&cfg.metrics);
     let mut trainer = Trainer::from_config(&cfg)?;
     let task = trainer.task();
     println!(
@@ -235,10 +263,33 @@ fn cmd_train(args: &Args) -> tango::Result<()> {
             report.prefetch_wait_s / report.wall_secs.max(1e-12) * 100.0
         );
     }
+    let totals = report.stage_totals();
+    println!(
+        "stage budget: wait {} + compute {} + eval {} = {} of wall {}{}",
+        fmt_time(totals.wait_s),
+        fmt_time(totals.compute_s),
+        fmt_time(totals.eval_s),
+        fmt_time(totals.accounted()),
+        fmt_time(totals.wall_s),
+        if cfg.sampler.enabled {
+            format!(
+                " | producer-side (overlapped): sample {} + gather {}",
+                fmt_time(totals.sample_s),
+                fmt_time(totals.gather_s)
+            )
+        } else {
+            String::new()
+        }
+    );
     if let Some(stats) = report.cache {
         println!("feature cache: {}", stats.summary(report.cache_bytes));
     }
     print_policy_report(report.policy.as_ref());
+    if let Some(path) = cfg.metrics.out.as_deref() {
+        let artifact = tango::obs::train_artifact(&cfg, &report, &tango::obs::snapshot());
+        tango::obs::write_artifact(path, &artifact)?;
+        println!("metrics artifact: {path}");
+    }
     Ok(())
 }
 
@@ -344,16 +395,20 @@ fn cmd_multigpu(args: &Args) -> tango::Result<()> {
         cfg.train.sampler.prefetch
     );
     print_policy_config(&cfg.train.policy, cfg.train.mode.bits);
+    apply_metrics_config(&cfg.train.metrics);
     let report = run_data_parallel(&cfg, &data)?;
     for (i, e) in report.epochs.iter().enumerate() {
         println!(
-            "epoch {i}: {} steps, compute {} + comm {} + wait {} = {}  (loss {:.4})",
+            "epoch {i}: {} steps, compute {} + comm {} + wait {} = {}  (loss {:.4}; \
+             producer sample {} / gather {})",
             e.steps,
             fmt_time(e.compute_s),
             fmt_time(e.comm_s),
             fmt_time(e.wait_s),
             fmt_time(e.total()),
-            e.loss
+            e.loss,
+            fmt_time(e.sample_s),
+            fmt_time(e.gather_s)
         );
     }
     println!("total modelled wall time: {}", fmt_time(report.total_time()));
@@ -361,5 +416,10 @@ fn cmd_multigpu(args: &Args) -> tango::Result<()> {
         println!("shared feature cache: {}", stats.summary(report.cache_bytes));
     }
     print_policy_report(report.policy.as_ref());
+    if let Some(path) = cfg.train.metrics.out.as_deref() {
+        let artifact = tango::obs::multigpu_artifact(&cfg, &report, &tango::obs::snapshot());
+        tango::obs::write_artifact(path, &artifact)?;
+        println!("metrics artifact: {path}");
+    }
     Ok(())
 }

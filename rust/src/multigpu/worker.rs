@@ -40,6 +40,7 @@ use crate::quant::rng::mix_seeds;
 use crate::sampler::{
     adjust_fanouts, shuffled_batches, spawn_producer, BatchTarget, EdgeBatcher, FeatureGather,
     NeighborSampler, PreparedBatch, ProducerHandle, QuantFeatureStore, SampleStage, SamplerBias,
+    StageTimes,
 };
 use crate::util::par;
 use std::sync::Mutex;
@@ -137,6 +138,13 @@ pub struct EpochStats {
     /// `prefetch = 0` this is the whole inline sample+gather time, so
     /// sequential and pipelined totals compare apples to apples.
     pub wait_s: f64,
+    /// Stage-one sampling seconds summed over every worker's producer
+    /// (real, measured; overlapped with compute when `prefetch > 0`, so it
+    /// does not add into [`total`](Self::total)).
+    pub sample_s: f64,
+    /// Stage-one feature-gather seconds summed over every worker's
+    /// producer (real, measured; overlapped like `sample_s`).
+    pub gather_s: f64,
     /// Mean training loss across workers and steps.
     pub loss: f32,
 }
@@ -289,6 +297,11 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
         // The whole epoch runs inside one thread scope: each worker's
         // stage-one producer prefetches its shard's batches while the
         // synchronous step rounds below consume them.
+        let _epoch_span = crate::obs::span("mg_epoch");
+        // One shared stage-one time account for the epoch: every worker's
+        // producer charges into it (atomics), so `EpochStats` reports the
+        // summed sample/gather work across all workers.
+        let times = StageTimes::default();
         let stat = std::thread::scope(|scope| -> crate::Result<EpochStats> {
             let sources: Vec<BatchSource> = (0..k)
                 .map(|w| {
@@ -299,6 +312,7 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                         labels: &data.labels,
                         lp: batcher.as_ref().map(|b| (b, head.neg_per_pos())),
                         gather: FeatureGather::shared(&data.features, store.as_ref()),
+                        times: &times,
                     };
                     let wb = &batches[w];
                     if prefetch == 0 {
@@ -353,6 +367,7 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                     let wait = t_wait.elapsed().as_secs_f64();
                     let mut guard = workers[w].lock().unwrap();
                     let ws = &mut *guard;
+                    let _step_span = crate::obs::span("worker_step");
                     let t0 = Instant::now();
                     let before = ws.model.params_flat();
                     let loss = match &prepared.target {
@@ -418,6 +433,7 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                 // elements plus per-chunk scales, FP32 payloads 4-byte
                 // elements.
                 let bytes = allreduce_payload_bits(grad_elems, k, wire_bits);
+                crate::obs::counter_add("multigpu.allreduce_wire_bytes", bytes as u64);
                 comm_s += cfg.interconnect.transfer_time(bytes, ring_messages(k), k);
                 // Apply the averaged gradient everywhere. A single FP32
                 // worker already holds exactly this state (mean of one
@@ -434,7 +450,15 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                 }
             }
             let loss = if loss_n == 0 { 0.0 } else { loss_sum / loss_n as f32 };
-            Ok(EpochStats { steps, compute_s, comm_s, wait_s, loss })
+            Ok(EpochStats {
+                steps,
+                compute_s,
+                comm_s,
+                wait_s,
+                sample_s: times.sample_s(),
+                gather_s: times.gather_s(),
+                loss,
+            })
         })?;
         epochs.push(stat);
     }

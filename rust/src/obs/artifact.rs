@@ -1,0 +1,313 @@
+//! Structured JSON run artifacts (`--metrics-out`).
+//!
+//! One assembly path serves the CLI and the golden-schema test
+//! (`tests/metrics_schema.rs`): [`train_artifact`] / [`multigpu_artifact`]
+//! build a [`Json`] tree with a **stable top-level key set** —
+//!
+//! `schema, command, config, epochs, report, counters, gauges, histograms,
+//! spans, cache, policy`
+//!
+//! — where absent sections are `null`, never missing, so downstream
+//! tooling can index unconditionally. Every epoch entry carries the same
+//! 7-key `stages` object (`sample_s, gather_s, wait_s, compute_s, comm_s,
+//! eval_s, wall_s`; single-GPU runs report `comm_s = 0`, multi-GPU runs
+//! `eval_s = 0`), and every histogram/span carries `p50/p95/p99`.
+
+use super::registry::{Metrics, SpanStat};
+use crate::config::{mode_name, TrainConfig};
+use crate::coordinator::qcache::CacheStats;
+use crate::coordinator::{EpochStages, TrainReport};
+use crate::multigpu::{MultiGpuConfig, MultiGpuReport};
+use crate::policy::PolicyGatherReport;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Artifact schema identifier (bump on breaking shape changes).
+pub const SCHEMA: &str = "tango-metrics/v1";
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn int(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn s(v: impl Into<String>) -> Json {
+    Json::Str(v.into())
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn stages_json(st: &EpochStages, comm_s: f64) -> Json {
+    obj(vec![
+        ("sample_s", num(st.sample_s)),
+        ("gather_s", num(st.gather_s)),
+        ("wait_s", num(st.wait_s)),
+        ("compute_s", num(st.compute_s)),
+        ("comm_s", num(comm_s)),
+        ("eval_s", num(st.eval_s)),
+        ("wall_s", num(st.wall_s)),
+    ])
+}
+
+fn hist_json(h: &super::hist::Histogram) -> Json {
+    obj(vec![
+        ("count", int(h.count())),
+        ("sum_s", num(h.sum())),
+        ("mean_s", num(h.mean())),
+        ("min_s", num(h.min())),
+        ("max_s", num(h.max())),
+        ("p50_s", num(h.percentile(0.50))),
+        ("p95_s", num(h.percentile(0.95))),
+        ("p99_s", num(h.percentile(0.99))),
+    ])
+}
+
+fn span_json(sp: &SpanStat) -> Json {
+    obj(vec![
+        ("calls", int(sp.calls)),
+        ("total_s", num(sp.total_s)),
+        ("mean_s", num(sp.hist.mean())),
+        ("p50_s", num(sp.hist.percentile(0.50))),
+        ("p95_s", num(sp.hist.percentile(0.95))),
+        ("p99_s", num(sp.hist.percentile(0.99))),
+        ("max_s", num(sp.hist.max())),
+    ])
+}
+
+fn metrics_json(m: &Metrics) -> (Json, Json, Json, Json) {
+    let counters: BTreeMap<String, Json> =
+        m.counters.iter().map(|(k, &v)| (k.clone(), int(v))).collect();
+    let gauges: BTreeMap<String, Json> =
+        m.gauges.iter().map(|(k, &v)| (k.clone(), num(v))).collect();
+    let hists: BTreeMap<String, Json> =
+        m.hists.iter().map(|(k, h)| (k.clone(), hist_json(h))).collect();
+    let spans: BTreeMap<String, Json> =
+        m.spans.iter().map(|(k, sp)| (k.clone(), span_json(sp))).collect();
+    (Json::Obj(counters), Json::Obj(gauges), Json::Obj(hists), Json::Obj(spans))
+}
+
+fn cache_json(c: Option<&CacheStats>) -> Json {
+    match c {
+        None => Json::Null,
+        Some(c) => obj(vec![
+            ("hits", int(c.hits)),
+            ("misses", int(c.misses)),
+            ("evictions", int(c.evictions)),
+        ]),
+    }
+}
+
+fn policy_json(p: Option<&PolicyGatherReport>) -> Json {
+    let Some(p) = p else { return Json::Null };
+    let buckets: Vec<Json> = p
+        .buckets
+        .iter()
+        .map(|b| {
+            obj(vec![
+                ("rows", int(b.rows)),
+                ("hits", int(b.hits)),
+                ("misses", int(b.misses)),
+                ("packed_bytes", int(b.packed_bytes)),
+                ("int8_bytes", int(b.int8_bytes)),
+                ("error_x", b.mean_error().map(num).unwrap_or(Json::Null)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("boundaries", Json::Arr(p.boundaries.iter().map(|&b| int(b as u64)).collect())),
+        ("bits", Json::Arr(p.bits.iter().map(|&b| int(b as u64)).collect())),
+        ("node_counts", Json::Arr(p.node_counts.iter().map(|&n| int(n)).collect())),
+        ("buckets", Json::Arr(buckets)),
+        ("packed_bytes", int(p.packed_bytes())),
+        ("int8_bytes", int(p.int8_bytes())),
+    ])
+}
+
+fn train_config_json(cfg: &TrainConfig) -> Json {
+    obj(vec![
+        ("model", s(format!("{:?}", cfg.model).to_lowercase())),
+        ("dataset", s(cfg.dataset.clone())),
+        ("mode", s(mode_name(&cfg.mode))),
+        ("bits", int(cfg.mode.bits as u64)),
+        ("epochs", int(cfg.epochs as u64)),
+        ("lr", num(cfg.lr as f64)),
+        ("hidden", int(cfg.hidden as u64)),
+        ("heads", int(cfg.heads as u64)),
+        ("layers", int(cfg.layers as u64)),
+        ("seed", int(cfg.seed)),
+        (
+            "sampler",
+            obj(vec![
+                ("enabled", Json::Bool(cfg.sampler.enabled)),
+                ("degree_biased", Json::Bool(cfg.sampler.degree_biased)),
+                (
+                    "fanouts",
+                    Json::Arr(cfg.sampler.fanouts.iter().map(|&f| int(f as u64)).collect()),
+                ),
+                ("batch_size", int(cfg.sampler.batch_size as u64)),
+                ("seed", int(cfg.sampler.seed)),
+                ("cache_nodes", int(cfg.sampler.cache_nodes as u64)),
+                ("prefetch", int(cfg.sampler.prefetch as u64)),
+            ]),
+        ),
+        (
+            "policy",
+            obj(vec![
+                (
+                    "degree_buckets",
+                    Json::Arr(cfg.policy.degree_buckets.iter().map(|&b| int(b as u64)).collect()),
+                ),
+                (
+                    "bucket_bits",
+                    Json::Arr(cfg.policy.bucket_bits.iter().map(|&b| int(b as u64)).collect()),
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// Assemble the `tango train` run artifact.
+pub fn train_artifact(cfg: &TrainConfig, report: &TrainReport, metrics: &Metrics) -> Json {
+    let epochs: Vec<Json> = report
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(i, st)| {
+            obj(vec![
+                ("epoch", int(i as u64)),
+                ("loss", num(report.losses.get(i).copied().unwrap_or(0.0) as f64)),
+                ("eval", num(report.evals.get(i).copied().unwrap_or(0.0) as f64)),
+                ("stages", stages_json(st, 0.0)),
+            ])
+        })
+        .collect();
+    let totals = report.stage_totals();
+    let (counters, gauges, histograms, spans) = metrics_json(metrics);
+    obj(vec![
+        ("schema", s(SCHEMA)),
+        ("command", s("train")),
+        ("config", train_config_json(cfg)),
+        ("epochs", Json::Arr(epochs)),
+        (
+            "report",
+            obj(vec![
+                ("final_eval", num(report.final_eval as f64)),
+                ("bits", int(report.bits as u64)),
+                ("epochs_to_converge", int(report.epochs_to_converge as u64)),
+                ("wall_secs", num(report.wall_secs)),
+                ("prefetch_wait_s", num(report.prefetch_wait_s)),
+                ("cache_bytes", int(report.cache_bytes as u64)),
+                ("stage_totals", stages_json(&totals, 0.0)),
+            ]),
+        ),
+        ("counters", counters),
+        ("gauges", gauges),
+        ("histograms", histograms),
+        ("spans", spans),
+        ("cache", cache_json(report.cache.as_ref())),
+        ("policy", policy_json(report.policy.as_ref())),
+    ])
+}
+
+/// Assemble the `tango multigpu` run artifact.
+pub fn multigpu_artifact(
+    cfg: &MultiGpuConfig,
+    report: &MultiGpuReport,
+    metrics: &Metrics,
+) -> Json {
+    let epochs: Vec<Json> = report
+        .epochs
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let st = EpochStages {
+                sample_s: e.sample_s,
+                gather_s: e.gather_s,
+                wait_s: e.wait_s,
+                compute_s: e.compute_s,
+                eval_s: 0.0,
+                wall_s: e.total(),
+            };
+            obj(vec![
+                ("epoch", int(i as u64)),
+                ("steps", int(e.steps as u64)),
+                ("loss", num(e.loss as f64)),
+                ("stages", stages_json(&st, e.comm_s)),
+            ])
+        })
+        .collect();
+    let (counters, gauges, histograms, spans) = metrics_json(metrics);
+    obj(vec![
+        ("schema", s(SCHEMA)),
+        ("command", s("multigpu")),
+        (
+            "config",
+            obj(vec![
+                ("train", train_config_json(&cfg.train)),
+                ("workers", int(cfg.workers as u64)),
+                ("epochs", int(cfg.epochs as u64)),
+                ("quantize_grads", Json::Bool(cfg.quantize_grads)),
+            ]),
+        ),
+        ("epochs", Json::Arr(epochs)),
+        (
+            "report",
+            obj(vec![
+                ("total_time_s", num(report.total_time())),
+                ("grad_elems", int(report.grad_elems as u64)),
+                ("cache_bytes", int(report.cache_bytes as u64)),
+            ]),
+        ),
+        ("counters", counters),
+        ("gauges", gauges),
+        ("histograms", histograms),
+        ("spans", spans),
+        ("cache", cache_json(report.cache.as_ref())),
+        ("policy", policy_json(report.policy.as_ref())),
+    ])
+}
+
+/// Serialize an artifact to `path` (pretty-printing is the consumer's job —
+/// the writer emits the deterministic single-line form of `util/json.rs`).
+pub fn write_artifact(path: &str, artifact: &Json) -> crate::Result<()> {
+    std::fs::write(path, artifact.to_string())
+        .map_err(|e| anyhow::anyhow!("writing metrics artifact {path}: {e}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Histogram;
+
+    #[test]
+    fn stage_json_always_has_the_seven_keys() {
+        let st = EpochStages::default();
+        let j = stages_json(&st, 0.0);
+        let Json::Obj(map) = j else { panic!("stages must be an object") };
+        let keys: Vec<&str> = map.keys().map(|k| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            vec!["comm_s", "compute_s", "eval_s", "gather_s", "sample_s", "wait_s", "wall_s"]
+        );
+    }
+
+    #[test]
+    fn hist_json_carries_percentiles() {
+        let mut h = Histogram::default();
+        for i in 1..=20 {
+            h.record(i as f64 * 1e-3);
+        }
+        let Json::Obj(map) = hist_json(&h) else { panic!() };
+        for k in ["count", "p50_s", "p95_s", "p99_s", "mean_s", "max_s"] {
+            assert!(map.contains_key(k), "missing {k}");
+        }
+        let p50 = map["p50_s"].as_f64().unwrap();
+        let p99 = map["p99_s"].as_f64().unwrap();
+        assert!(p50 <= p99);
+    }
+}

@@ -1,0 +1,190 @@
+//! Log-bucketed latency histogram.
+//!
+//! Buckets grow by powers of two from a 1 ns floor, so 64 buckets span
+//! sub-nanosecond to ~584 years with a worst-case quantile error of 2×.
+//! Exact `min`/`max`/`sum` ride along, and percentiles are clamped to the
+//! observed `[min, max]` — the quantile function is monotone in `q` and
+//! `p50 <= p95 <= p99 <= max` holds by construction (the property
+//! `tests/obs_invariants.rs` fuzzes).
+
+/// Number of power-of-two buckets.
+const BUCKETS: usize = 64;
+/// Lower resolution bound, seconds (1 ns).
+const BASE: f64 = 1e-9;
+
+/// A mergeable log-bucketed histogram over non-negative durations (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: [0; BUCKETS], count: 0, sum: 0.0, min: f64::INFINITY, max: 0.0 }
+    }
+}
+
+/// Bucket index for a duration: bucket 0 holds `v <= 1ns`, bucket `i` holds
+/// `(2^{i-1}, 2^i]` ns, the last bucket catches everything larger.
+fn bucket_of(v: f64) -> usize {
+    if !(v > BASE) {
+        return 0;
+    }
+    (((v / BASE).log2().ceil()) as usize).min(BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `i`, in seconds.
+fn bucket_upper(i: usize) -> f64 {
+    BASE * (1u64 << i.min(62)) as f64
+}
+
+impl Histogram {
+    /// Record one observation (negative/NaN values clamp to 0).
+    pub fn record(&mut self, secs: f64) {
+        let v = if secs.is_finite() && secs > 0.0 { secs } else { 0.0 };
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Total number of observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all observations, seconds.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean observation, seconds (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Smallest observation (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest observation (0 when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate `q`-quantile (`q` in `[0, 1]`): the upper bound of the
+    /// bucket holding the rank-`ceil(q·count)` observation, clamped to the
+    /// exact observed `[min, max]`. Monotone in `q`; 0 when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_upper(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram into this one. Merging is associative and
+    /// commutative (bucket-wise sums + min/max folds).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zeroes() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn single_observation_percentiles_are_exact() {
+        let mut h = Histogram::default();
+        h.record(3.5e-3);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.percentile(q), 3.5e-3, "q={q}");
+        }
+    }
+
+    #[test]
+    fn percentile_within_2x_of_true_value() {
+        let mut h = Histogram::default();
+        // 100 observations 1ms..100ms.
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        let p50 = h.percentile(0.5);
+        // True p50 = 50ms; bucket bound error is <= 2x, clamped to max.
+        assert!(p50 >= 50e-3 && p50 <= 100e-3, "p50={p50}");
+        assert!(h.percentile(0.99) <= h.max());
+    }
+
+    #[test]
+    fn monotone_in_q() {
+        let mut h = Histogram::default();
+        for i in 0..1000u64 {
+            h.record((i as f64 * 0.37).sin().abs() * 1e-2 + 1e-6);
+        }
+        let mut prev = 0.0;
+        for i in 0..=100 {
+            let v = h.percentile(i as f64 / 100.0);
+            assert!(v >= prev, "q={} gave {v} < {prev}", i as f64 / 100.0);
+            prev = v;
+        }
+        assert!(prev <= h.max());
+    }
+
+    #[test]
+    fn merge_matches_combined_recording() {
+        let vals_a = [1e-6, 5e-4, 2e-3];
+        let vals_b = [9e-7, 1e-1, 3e-5, 4e-2];
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        let mut both = Histogram::default();
+        for v in vals_a {
+            a.record(v);
+            both.record(v);
+        }
+        for v in vals_b {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, both);
+    }
+}

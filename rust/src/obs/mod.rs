@@ -1,0 +1,43 @@
+//! Zero-dependency tracing + metrics (the observability layer).
+//!
+//! Tango's argument is a time budget — quantization overhead hidden behind
+//! sampling, primitives made faster — so the reproduction needs trustworthy
+//! per-stage numbers, not coarse aggregates. This module provides them
+//! without perturbing what it measures:
+//!
+//! - [`span`] — RAII hierarchical timers keyed by the `/`-joined path of
+//!   the enclosing spans on the same thread (`"epoch/eval"`,
+//!   `"stage1/gather"`), aggregated in a thread-safe registry;
+//! - [`timed`] — flat per-call latency histograms for hot primitives
+//!   (`prim.qgemm`, `prim.spmm.*`, `allreduce.ring`);
+//! - [`counter_add`] / [`gauge_set`] — named counters (rows gathered,
+//!   cache hits/misses, packed wire bytes) and gauges (per-bucket mean
+//!   `Error_X`);
+//! - [`Histogram`] — log-bucketed latencies with `p50/p95/p99`;
+//! - [`train_artifact`] / [`multigpu_artifact`] / [`write_artifact`] — the
+//!   `--metrics-out` structured JSON run artifact.
+//!
+//! **Off means off**: every recording entry point checks [`enabled`] with
+//! one relaxed atomic load and returns before reading a clock or touching
+//! the registry. Tracing starts on; `TANGO_TRACE=0` (or `[metrics]
+//! trace = false` / `--trace false`) disables it. On or off, the
+//! instrumentation only *reads* training values — losses, weights and RNG
+//! streams are bit-identical either way (`tests/obs_invariants.rs`).
+//!
+//! The registry is process-global and accumulates across runs in one
+//! process; per-run numbers that feed reports
+//! ([`TrainReport::stages`](crate::coordinator::TrainReport)) use run-local
+//! accounting ([`StageTimes`](crate::sampler::StageTimes)) instead, so
+//! parallel test threads cannot contaminate each other.
+
+mod artifact;
+mod hist;
+mod registry;
+mod span;
+
+pub use artifact::{multigpu_artifact, train_artifact, write_artifact, SCHEMA};
+pub use hist::Histogram;
+pub use registry::{
+    counter_add, enabled, gauge_set, observe, reset, set_enabled, snapshot, Metrics, SpanStat,
+};
+pub use span::{span, timed, Span, Timed};

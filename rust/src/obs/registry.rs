@@ -1,0 +1,205 @@
+//! Global metrics registry: named counters, gauges, histograms and
+//! hierarchical span stats behind one mutex, plus the process-wide enable
+//! flag (`TANGO_TRACE=0|false|off` disables at startup; config/CLI can flip
+//! it with [`set_enabled`]).
+//!
+//! Every recording entry point checks [`enabled`] with a single relaxed
+//! atomic load and returns before touching the mutex or formatting any
+//! name — disabled tracing costs one branch, which is what keeps the
+//! bit-identity and bench guarantees intact (timers never touch RNG state
+//! or training values either way; see `tests/obs_invariants.rs`).
+//!
+//! The registry accumulates over the whole process. CLI runs snapshot it
+//! once at exit for the `--metrics-out` artifact; per-run *reports*
+//! ([`TrainReport`](crate::coordinator::TrainReport) stage budgets) use
+//! run-local accounting instead, so parallel test threads sharing this
+//! global cannot contaminate each other's numbers.
+
+use super::hist::Histogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Aggregate stats for one span path (e.g. `"epoch/stage1/gather"`).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct SpanStat {
+    /// Number of times the span closed.
+    pub calls: u64,
+    /// Total time spent inside, seconds.
+    pub total_s: f64,
+    /// Per-call latency distribution.
+    pub hist: Histogram,
+}
+
+impl SpanStat {
+    fn record(&mut self, secs: f64) {
+        self.calls += 1;
+        self.total_s += secs;
+        self.hist.record(secs);
+    }
+
+    /// Fold another span's stats in (associative, commutative).
+    pub fn merge(&mut self, other: &SpanStat) {
+        self.calls += other.calls;
+        self.total_s += other.total_s;
+        self.hist.merge(&other.hist);
+    }
+}
+
+/// A point-in-time copy of everything recorded so far.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct Metrics {
+    /// Monotonic named counters (events, bytes, rows).
+    pub counters: BTreeMap<String, u64>,
+    /// Last-written named gauges (levels, running means).
+    pub gauges: BTreeMap<String, f64>,
+    /// Flat named latency histograms ([`timed`](super::timed) guards).
+    pub hists: BTreeMap<String, Histogram>,
+    /// Hierarchical span stats keyed by `/`-joined path.
+    pub spans: BTreeMap<String, SpanStat>,
+}
+
+impl Metrics {
+    /// Fold `other` into `self`. Counter/histogram/span merging is
+    /// associative and commutative; gauges take `other`'s value (last
+    /// writer wins), which keeps merge associative.
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, v) in &other.hists {
+            self.hists.entry(k.clone()).or_default().merge(v);
+        }
+        for (k, v) in &other.spans {
+            self.spans.entry(k.clone()).or_default().merge(v);
+        }
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty()
+            && self.gauges.is_empty()
+            && self.hists.is_empty()
+            && self.spans.is_empty()
+    }
+}
+
+fn enabled_cell() -> &'static AtomicBool {
+    static CELL: OnceLock<AtomicBool> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let off = matches!(
+            std::env::var("TANGO_TRACE").as_deref(),
+            Ok("0") | Ok("false") | Ok("off") | Ok("no")
+        );
+        AtomicBool::new(!off)
+    })
+}
+
+/// Whether tracing is currently on (default yes; `TANGO_TRACE=0` starts off).
+#[inline]
+pub fn enabled() -> bool {
+    enabled_cell().load(Ordering::Relaxed)
+}
+
+/// Flip tracing on/off for the whole process (config `[metrics] trace`).
+pub fn set_enabled(on: bool) {
+    enabled_cell().store(on, Ordering::Relaxed);
+}
+
+fn global() -> &'static Mutex<Metrics> {
+    static GLOBAL: OnceLock<Mutex<Metrics>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Mutex::new(Metrics::default()))
+}
+
+fn with_global(f: impl FnOnce(&mut Metrics)) {
+    // A poisoned lock only means another thread panicked mid-record;
+    // metrics stay usable.
+    let mut g = global().lock().unwrap_or_else(|e| e.into_inner());
+    f(&mut g);
+}
+
+/// Add `n` to the named counter.
+pub fn counter_add(name: &str, n: u64) {
+    if !enabled() {
+        return;
+    }
+    with_global(|m| *m.counters.entry(name.to_string()).or_insert(0) += n);
+}
+
+/// Set the named gauge to `v`.
+pub fn gauge_set(name: &str, v: f64) {
+    if !enabled() {
+        return;
+    }
+    with_global(|m| {
+        m.gauges.insert(name.to_string(), v);
+    });
+}
+
+/// Record one duration into the named flat histogram.
+pub fn observe(name: &str, secs: f64) {
+    if !enabled() {
+        return;
+    }
+    with_global(|m| m.hists.entry(name.to_string()).or_default().record(secs));
+}
+
+/// Record one closed span occurrence under its full path.
+pub(crate) fn record_span(path: &str, secs: f64) {
+    with_global(|m| m.spans.entry(path.to_string()).or_default().record(secs));
+}
+
+/// Copy out everything recorded so far.
+pub fn snapshot() -> Metrics {
+    let g = global().lock().unwrap_or_else(|e| e.into_inner());
+    g.clone()
+}
+
+/// Clear the registry (tests, and the CLI before a run so the
+/// `--metrics-out` artifact describes that run alone).
+pub fn reset() {
+    with_global(|m| *m = Metrics::default());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        counter_add("test.registry.counter", 3);
+        counter_add("test.registry.counter", 4);
+        let snap = snapshot();
+        // >= because other tests in this binary may add to the registry too;
+        // the unique name keeps this exact.
+        assert_eq!(snap.counters.get("test.registry.counter"), Some(&7));
+    }
+
+    #[test]
+    fn gauges_take_last_value() {
+        gauge_set("test.registry.gauge", 1.5);
+        gauge_set("test.registry.gauge", 2.5);
+        assert_eq!(snapshot().gauges.get("test.registry.gauge"), Some(&2.5));
+    }
+
+    #[test]
+    fn merge_is_associative_on_counters() {
+        let mk = |k: &str, v: u64| {
+            let mut m = Metrics::default();
+            m.counters.insert(k.into(), v);
+            m
+        };
+        let (a, b, c) = (mk("x", 1), mk("x", 2), mk("y", 5));
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc);
+    }
+}

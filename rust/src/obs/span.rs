@@ -1,0 +1,128 @@
+//! RAII timers: hierarchical [`span`]s and flat [`timed`] histogram guards.
+//!
+//! A span pushes its name onto a thread-local path stack on creation and,
+//! on drop, records its elapsed time against the `/`-joined path — so
+//! `span("epoch")` enclosing `span("eval")` yields registry entries
+//! `"epoch"` and `"epoch/eval"`, and stats aggregate per *position in the
+//! call tree*, not just per name. Paths are per-thread: a producer thread's
+//! `"stage1/gather"` does not nest under the consumer's `"epoch"`.
+//!
+//! [`timed`] is the flat variant for hot primitives (`spmm`, `qgemm`):
+//! one histogram per static name regardless of caller, so per-call latency
+//! distributions stay comparable across every call site.
+//!
+//! Both guards are inert (no clock read, no thread-local touch) when
+//! tracing is [disabled](super::enabled).
+
+use super::registry;
+use std::cell::RefCell;
+use std::time::Instant;
+
+thread_local! {
+    /// Current `/`-joined span path plus the stack of lengths to truncate
+    /// back to on pop (avoids re-joining segments on every drop).
+    static PATH: RefCell<(String, Vec<usize>)> =
+        const { RefCell::new((String::new(), Vec::new())) };
+}
+
+/// RAII guard for one hierarchical span; records on drop.
+#[must_use = "a span measures the scope it lives in; binding to _ drops it immediately"]
+pub struct Span {
+    start: Option<Instant>,
+}
+
+/// Open a hierarchical span named `name` on this thread. Returns a guard
+/// that records `<parent-path>/<name>` when dropped. No-op while disabled.
+pub fn span(name: &str) -> Span {
+    if !registry::enabled() {
+        return Span { start: None };
+    }
+    PATH.with(|p| {
+        let (path, stack) = &mut *p.borrow_mut();
+        stack.push(path.len());
+        if !path.is_empty() {
+            path.push('/');
+        }
+        path.push_str(name);
+    });
+    Span { start: Some(Instant::now()) }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let secs = start.elapsed().as_secs_f64();
+        PATH.with(|p| {
+            let (path, stack) = &mut *p.borrow_mut();
+            registry::record_span(path, secs);
+            if let Some(len) = stack.pop() {
+                path.truncate(len);
+            }
+        });
+    }
+}
+
+/// RAII guard for one flat histogram observation; records on drop.
+#[must_use = "a timer measures the scope it lives in; binding to _ drops it immediately"]
+pub struct Timed {
+    name: &'static str,
+    start: Option<Instant>,
+}
+
+/// Time a scope into the flat histogram `name`. No-op while disabled.
+pub fn timed(name: &'static str) -> Timed {
+    if !registry::enabled() {
+        return Timed { name, start: None };
+    }
+    Timed { name, start: Some(Instant::now()) }
+}
+
+impl Drop for Timed {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            registry::observe(self.name, start.elapsed().as_secs_f64());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_spans_record_full_paths() {
+        {
+            let _a = span("test.span.outer");
+            let _b = span("test.span.inner");
+        }
+        let snap = registry::snapshot();
+        assert!(snap.spans.contains_key("test.span.outer"), "{:?}", snap.spans.keys());
+        assert!(snap.spans.contains_key("test.span.outer/test.span.inner"));
+    }
+
+    #[test]
+    fn sibling_spans_share_a_parent_path() {
+        {
+            let _a = span("test.span.parent");
+            {
+                let _x = span("x");
+            }
+            {
+                let _y = span("y");
+            }
+        }
+        let snap = registry::snapshot();
+        assert!(snap.spans.contains_key("test.span.parent/x"));
+        assert!(snap.spans.contains_key("test.span.parent/y"));
+    }
+
+    #[test]
+    fn timed_records_flat_histogram() {
+        {
+            let _t = timed("test.span.timed");
+        }
+        let snap = registry::snapshot();
+        let h = snap.hists.get("test.span.timed").expect("histogram exists");
+        assert!(h.count() >= 1);
+    }
+}

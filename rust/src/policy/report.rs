@@ -9,7 +9,7 @@
 use super::buckets::bucket_range_label;
 
 /// Cumulative gather traffic of one degree bucket.
-#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct BucketGatherStats {
     /// Feature rows gathered from this bucket (hits + misses).
     pub rows: u64,
@@ -21,6 +21,11 @@ pub struct BucketGatherStats {
     pub packed_bytes: u64,
     /// Bytes the same rows would occupy at uniform INT8.
     pub int8_bytes: u64,
+    /// Sum of per-row `Error_X` (paper Eq. 4) over freshly quantized rows —
+    /// only measured while tracing is on (see [`crate::obs`]), 0 otherwise.
+    pub err_sum: f64,
+    /// Rows whose `Error_X` was measured into `err_sum`.
+    pub err_rows: u64,
 }
 
 impl BucketGatherStats {
@@ -31,6 +36,18 @@ impl BucketGatherStats {
         self.misses += other.misses;
         self.packed_bytes += other.packed_bytes;
         self.int8_bytes += other.int8_bytes;
+        self.err_sum += other.err_sum;
+        self.err_rows += other.err_rows;
+    }
+
+    /// Mean measured quantization `Error_X` of this bucket's fresh rows
+    /// (`None` when nothing was measured — tracing off or no misses).
+    pub fn mean_error(&self) -> Option<f64> {
+        if self.err_rows == 0 {
+            None
+        } else {
+            Some(self.err_sum / self.err_rows as f64)
+        }
     }
 }
 
@@ -71,9 +88,13 @@ impl PolicyGatherReport {
         let mut out = Vec::with_capacity(self.buckets.len() + 1);
         for (i, st) in self.buckets.iter().enumerate() {
             let total = st.hits + st.misses;
+            let err = match st.mean_error() {
+                Some(e) => format!(", Error_X {e:.4}"),
+                None => String::new(),
+            };
             out.push(format!(
                 "bucket {i} ({}, {} bits): {} nodes, {} rows gathered \
-                 ({:.1}% hits), {:.1} KiB packed vs {:.1} KiB INT8",
+                 ({:.1}% hits), {:.1} KiB packed vs {:.1} KiB INT8{err}",
                 bucket_range_label(&self.boundaries, i),
                 self.bits[i],
                 self.node_counts.get(i).copied().unwrap_or(0),
@@ -110,6 +131,7 @@ mod tests {
                     misses: 40,
                     packed_bytes: 1600,
                     int8_bytes: 1600,
+                    ..Default::default()
                 },
                 BucketGatherStats {
                     rows: 300,
@@ -117,6 +139,8 @@ mod tests {
                     misses: 200,
                     packed_bytes: 2400,
                     int8_bytes: 4800,
+                    err_sum: 6.0,
+                    err_rows: 200,
                 },
             ],
         }
@@ -144,5 +168,21 @@ mod tests {
         assert!(lines[0].contains("deg >= 8") && lines[0].contains("8 bits"), "{}", lines[0]);
         assert!(lines[1].contains("deg < 8") && lines[1].contains("4 bits"), "{}", lines[1]);
         assert!(lines[2].contains("uniform INT8"), "{}", lines[2]);
+        // Error_X appears only where it was measured (bucket 1's 200 rows).
+        assert!(!lines[0].contains("Error_X"), "{}", lines[0]);
+        assert!(lines[1].contains("Error_X 0.0300"), "{}", lines[1]);
+    }
+
+    #[test]
+    fn mean_error_needs_measured_rows() {
+        let r = report();
+        assert_eq!(r.buckets[0].mean_error(), None);
+        assert_eq!(r.buckets[1].mean_error(), Some(0.03));
+        let mut total = BucketGatherStats::default();
+        for b in &r.buckets {
+            total.merge(b);
+        }
+        assert_eq!(total.err_rows, 200);
+        assert_eq!(total.mean_error(), Some(0.03));
     }
 }

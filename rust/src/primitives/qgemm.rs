@@ -41,6 +41,7 @@ pub struct QGemmOutput {
 /// INT8×INT8→INT32 product, and returns the dequantized result together
 /// with the fused output scale and the quantized input copies.
 pub fn qgemm(a: &Dense<f32>, b: &Dense<f32>, bits: u8, rounding: Rounding) -> QGemmOutput {
+    let _t = crate::obs::timed("prim.qgemm");
     assert_eq!(a.cols(), b.rows(), "qgemm inner dims");
     // "On-the-fly" on the CPU substrate: one sweep per input computing the
     // scale, one sweep rounding. (A GPU fuses these into the tile loads; the
@@ -63,6 +64,7 @@ fn derange(r: Rounding) -> Rounding {
 /// e.g. cached from the forward pass — so the kernel skips quantization
 /// entirely. Returns the dequantized result and its fused output scale.
 pub fn qgemm_prequantized(qa: &QTensor, qb: &QTensor, out_bits: u8) -> (Dense<f32>, f32) {
+    let _t = crate::obs::timed("prim.qgemm.prequantized");
     let (m, k) = (qa.data.rows(), qa.data.cols());
     let (kb, n) = (qb.data.rows(), qb.data.cols());
     assert_eq!(k, kb, "qgemm inner dims: {k} vs {kb}");

@@ -36,6 +36,25 @@ pub fn error_x_quantized(x: &Dense<f32>, q: &QTensor) -> f32 {
     error_x(x, &dequantize(q))
 }
 
+/// `Error_X` of one feature slice against its quantized row at `scale`
+/// (dequantizing as `q_i * scale` on the fly — no staging copy). This is
+/// the per-row form the quantized feature gather measures per degree bucket
+/// while tracing (see [`crate::obs`]).
+///
+/// Panics if lengths differ.
+pub fn error_x_slice(x: &[f32], q: &[i8], scale: f32) -> f32 {
+    assert_eq!(x.len(), q.len(), "Error_X needs same-length slices");
+    if x.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for (&a, &qv) in x.iter().zip(q.iter()) {
+        let b = qv as f32 * scale;
+        acc += ((a - b) / (a + b + EPSILON)).abs() as f64;
+    }
+    (acc / x.len() as f64) as f32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,6 +105,16 @@ mod tests {
     fn empty_tensor_is_zero_error() {
         let x: Dense<f32> = Dense::zeros(&[0]);
         assert_eq!(error_x(&x, &x.clone()), 0.0);
+    }
+
+    #[test]
+    fn slice_form_matches_tensor_form() {
+        let x = Dense::from_vec(&[6], vec![0.4f32, -0.9, 0.05, 1.3, -1.3, 0.0]);
+        let q = quantize(&x, 6, Rounding::Nearest);
+        let via_tensor = error_x_quantized(&x, &q);
+        let via_slice = error_x_slice(x.data(), q.data.data(), q.scale);
+        assert!((via_tensor - via_slice).abs() < 1e-7, "{via_tensor} vs {via_slice}");
+        assert_eq!(error_x_slice(&[], &[], 1.0), 0.0);
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub mod rng;
 mod scheme;
 
 pub use bits::{derive_bits, BitDerivation, DEFAULT_ERROR_TARGET};
-pub use error::{error_x, error_x_quantized, EPSILON};
+pub use error::{error_x, error_x_quantized, error_x_slice, EPSILON};
 pub use scheme::{
     dequantize, packed_bits_per_elem, qmax_for_bits, quantize, quantize_slice_nearest,
     quantize_with_scale, scale_for_bits, QTensor, Rounding,

@@ -158,6 +158,11 @@ impl QuantFeatureStore {
     /// per-bucket scales guarantee requantization is bit-identical anyway.
     pub fn gather_quantized(&mut self, features: &Dense<f32>, nodes: &[u32]) -> QuantRows {
         let dim = features.cols();
+        // Tracing reads values but never writes them: Error_X measurement
+        // and traffic counters cannot perturb the quantized payload (the
+        // bit-identity test in `tests/obs_invariants.rs`).
+        let traced = crate::obs::enabled();
+        let (mut batch_packed, mut batch_int8) = (0u64, 0u64);
         // Pass 1: first sight of an uncached node is a miss; duplicates and
         // cached rows are hits. `miss_idx` maps each missing node to its
         // slot in `miss_nodes`/`miss_rows` — one structure serves dedup,
@@ -175,8 +180,11 @@ impl QuantFeatureStore {
             bits.push(row_bits);
             let st = &mut self.bucket_stats[b];
             st.rows += 1;
-            st.packed_bytes += packed_row_bytes(dim, row_bits);
+            let row_packed = packed_row_bytes(dim, row_bits);
+            st.packed_bytes += row_packed;
             st.int8_bytes += dim as u64;
+            batch_packed += row_packed;
+            batch_int8 += dim as u64;
             if self.cache.peek(v as u64).is_some() || miss_idx.contains_key(&v) {
                 hits += 1;
                 st.hits += 1;
@@ -193,11 +201,21 @@ impl QuantFeatureStore {
         // their feature slices at their bucket's `(scale, bits)` (shared
         // helper with `quantize_with_scale` — cached rows cannot drift from
         // direct quantization).
+        // When tracing, each fresh row also measures its Error_X (paper
+        // Eq. 4) against the FP32 source — the per-bucket quantization-error
+        // evidence the Degree-Quant/A²Q bit assignments are justified from.
         let policy = &self.policy;
-        let miss_rows: Vec<Vec<i8>> = par::map_range(miss_nodes.len(), |j| {
+        let miss_rows: Vec<(Vec<i8>, f32)> = par::map_range(miss_nodes.len(), |j| {
             let v = miss_nodes[j] as usize;
             let b = policy.bucket_of_node(v);
-            quantize_slice_nearest(features.row(v), policy.scale(b), policy.bits_of(b))
+            let scale = policy.scale(b);
+            let row = quantize_slice_nearest(features.row(v), scale, policy.bits_of(b));
+            let err = if traced {
+                crate::quant::error_x_slice(features.row(v), &row, scale)
+            } else {
+                0.0
+            };
+            (row, err)
         });
         // Pass 3: parallel assembly from cached + freshly quantized rows.
         let mut out = Dense::zeros(&[nodes.len(), dim]);
@@ -206,15 +224,22 @@ impl QuantFeatureStore {
             par::for_each_chunk(out.data_mut(), dim, |i, chunk| {
                 let v = nodes[i];
                 let row: &[i8] = match miss_idx.get(&v) {
-                    Some(&j) => miss_rows[j].as_slice(),
+                    Some(&j) => miss_rows[j].0.as_slice(),
                     None => cache.peek(v as u64).expect("row cached in pass 1").data.data(),
                 };
                 chunk.copy_from_slice(row);
             });
         }
-        // Pass 4: admit the fresh rows (oldest-first eviction under a bound).
-        for (v, row) in miss_nodes.into_iter().zip(miss_rows) {
+        // Pass 4: admit the fresh rows (oldest-first eviction under a bound)
+        // and, when tracing, fold their measured Error_X into the bucket
+        // accounting.
+        for (v, (row, err)) in miss_nodes.into_iter().zip(miss_rows) {
             let b = self.policy.bucket_of_node(v as usize);
+            if traced {
+                let st = &mut self.bucket_stats[b];
+                st.err_sum += err as f64;
+                st.err_rows += 1;
+            }
             self.cache.put(
                 v as u64,
                 QTensor {
@@ -223,6 +248,18 @@ impl QuantFeatureStore {
                     bits: self.policy.bits_of(b),
                 },
             );
+        }
+        if traced {
+            crate::obs::counter_add("gather.rows", nodes.len() as u64);
+            crate::obs::counter_add("gather.cache_hits", hits);
+            crate::obs::counter_add("gather.cache_misses", misses);
+            crate::obs::counter_add("gather.packed_bytes", batch_packed);
+            crate::obs::counter_add("gather.int8_bytes", batch_int8);
+            for (b, st) in self.bucket_stats.iter().enumerate() {
+                if let Some(mean) = st.mean_error() {
+                    crate::obs::gauge_set(&format!("gather.error_x.bucket{b}"), mean);
+                }
+            }
         }
         QuantRows { data: out, scales, bits }
     }

@@ -23,11 +23,11 @@
 
 use super::{
     adjust_fanouts, run_prefetched, shuffled_batches, BatchTarget, EdgeBatcher, FeatureGather,
-    NeighborSampler, PreparedBatch, QuantFeatureStore, SampleStage, SamplerBias,
+    NeighborSampler, PreparedBatch, QuantFeatureStore, SampleStage, SamplerBias, StageTimes,
 };
 use crate::config::{TaskKind, TrainConfig};
 use crate::coordinator::qcache::CacheStats;
-use crate::coordinator::TrainReport;
+use crate::coordinator::{EpochStages, TrainReport};
 use crate::graph::datasets::{self, Dataset, Task};
 use crate::graph::Csr;
 use crate::model::{
@@ -182,14 +182,22 @@ impl MiniBatchTrainer {
     pub fn run(&mut self) -> crate::Result<TrainReport> {
         let mut losses = Vec::with_capacity(self.cfg.epochs);
         let mut evals = Vec::with_capacity(self.cfg.epochs);
+        let mut stages = Vec::with_capacity(self.cfg.epochs);
         let mut wall = 0.0f64;
         let mut wait = 0.0f64;
         for epoch in 0..self.cfg.epochs {
+            let _epoch_span = crate::obs::span("epoch");
+            let t_epoch = std::time::Instant::now();
             let (res, secs) = crate::metrics::time_once(|| self.train_epoch(epoch as u64));
-            let (loss, wait_s) = res?;
-            wall += secs;
-            wait += wait_s;
-            let eval = self.evaluate();
+            let (loss, mut stage) = res?;
+            let (eval, eval_s) = crate::metrics::time_once(|| {
+                let _s = crate::obs::span("eval");
+                self.evaluate()
+            });
+            stage.eval_s = eval_s;
+            stage.wall_s = t_epoch.elapsed().as_secs_f64();
+            wall += stage.wall_s;
+            wait += stage.wait_s;
             if self.cfg.log_every > 0 && epoch % self.cfg.log_every == 0 {
                 println!(
                     "epoch {epoch:>4}  loss {loss:>8.4}  eval {eval:>6.4}  ({:.1} ms)",
@@ -198,6 +206,7 @@ impl MiniBatchTrainer {
             }
             losses.push(loss);
             evals.push(eval);
+            stages.push(stage);
         }
         let final_eval = *evals.last().unwrap_or(&0.0);
         let final_loss = *losses.last().unwrap_or(&f32::INFINITY);
@@ -216,6 +225,7 @@ impl MiniBatchTrainer {
             cache_bytes: self.gather_cached_bytes(),
             policy: self.policy_report(),
             prefetch_wait_s: wait,
+            stages,
         })
     }
 
@@ -224,8 +234,8 @@ impl MiniBatchTrainer {
     /// workers) produces batches `prefetch` ahead on a producer thread
     /// while this thread steps the model; `prefetch = 0` runs the same
     /// loop strictly sequentially. Returns the mean batch loss and the
-    /// measured stage-one seconds the pipeline failed to hide.
-    fn train_epoch(&mut self, epoch: u64) -> crate::Result<(f32, f64)> {
+    /// epoch's stage accounting (eval/wall filled in by the caller).
+    fn train_epoch(&mut self, epoch: u64) -> crate::Result<(f32, EpochStages)> {
         let shuffle_seed = mix_seeds(&[self.cfg.seed, epoch]);
         let batches = match self.task {
             Task::NodeClassification => shuffled_batches(
@@ -240,6 +250,9 @@ impl MiniBatchTrainer {
             ),
         };
         let neg_per_pos = self.head.neg_per_pos();
+        // Run-local stage-one accounting: must outlive `stage` below, which
+        // the producer thread borrows.
+        let times = StageTimes::default();
         // Field-level borrow split: stage one owns the sampler + store side
         // of `self` (moved to the producer thread), the consumer keeps the
         // model + optimizer side.
@@ -251,14 +264,18 @@ impl MiniBatchTrainer {
             labels: &data.labels,
             lp: edges.as_ref().map(|b| (b, neg_per_pos)),
             gather: FeatureGather::new(&data.features, store.as_mut()),
+            times: &times,
         };
         let mut total = 0.0f32;
         let mut steps = 0usize;
+        let mut compute_s = 0.0f64;
         let stats = run_prefetched(
             batches.len(),
             cfg.sampler.prefetch,
             |bi| stage.prepare(&batches[bi], mix_seeds(&[epoch, bi as u64])),
             |_, pb: PreparedBatch| {
+                let t0 = std::time::Instant::now();
+                let _step_span = crate::obs::span("compute");
                 let loss = match &pb.target {
                     BatchTarget::Nc { labels } => {
                         let nodes: Vec<u32> = (0..labels.len() as u32).collect();
@@ -278,10 +295,18 @@ impl MiniBatchTrainer {
                 };
                 total += loss;
                 steps += 1;
+                compute_s += t0.elapsed().as_secs_f64();
             },
         )?;
         let loss = if steps == 0 { 0.0 } else { total / steps as f32 };
-        Ok((loss, stats.wait_s))
+        let stage = EpochStages {
+            sample_s: times.sample_s(),
+            gather_s: times.gather_s(),
+            wait_s: stats.wait_s,
+            compute_s,
+            ..EpochStages::default()
+        };
+        Ok((loss, stage))
     }
 
     /// Full-graph evaluation on the held-out split (the model is bound to

@@ -56,5 +56,5 @@ pub use minibatch::MiniBatchTrainer;
 pub use neighbor::{adjust_fanouts, shuffled_batches, NeighborSampler, SamplerBias};
 pub use pipeline::{
     run_prefetched, spawn_producer, BatchTarget, FeatureGather, PrefetchStats, PreparedBatch,
-    ProducerHandle, SampleStage,
+    ProducerHandle, SampleStage, StageTimes,
 };

@@ -108,6 +108,7 @@ impl NeighborSampler {
         stream: u64,
         exclude: &HashSet<(u32, u32)>,
     ) -> Vec<Block> {
+        let _t = crate::obs::timed("sampler.sample_blocks");
         let mut rng = Xoshiro256pp::new(self.seed ^ stream.wrapping_mul(0x9E3779B97F4A7C15));
         // Destinations that actually have an excluded in-edge — every other
         // frontier node takes the allocation-free fast path below.

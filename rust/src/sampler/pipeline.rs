@@ -32,10 +32,47 @@ use super::{
 };
 use crate::graph::Csr;
 use crate::tensor::Dense;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Mutex;
 use std::thread::{Scope, ScopedJoinHandle};
 use std::time::Instant;
+
+/// Shared stage-one time accounting: how long the producer side spent
+/// sampling vs gathering, summed across every `prepare` call that writes
+/// here (atomics, so producer threads of any count can share one instance).
+///
+/// This is *run-local* — each epoch owns its own `StageTimes` — so the
+/// numbers land in [`EpochStages`](crate::coordinator::EpochStages) without
+/// going through the process-global [`obs`](crate::obs) registry (which
+/// parallel test runs share).
+#[derive(Debug, Default)]
+pub struct StageTimes {
+    sample_ns: AtomicU64,
+    gather_ns: AtomicU64,
+}
+
+impl StageTimes {
+    /// Charge `secs` of neighbor-sampling work.
+    pub fn add_sample(&self, secs: f64) {
+        self.sample_ns.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Charge `secs` of feature-gather work.
+    pub fn add_gather(&self, secs: f64) {
+        self.gather_ns.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Total sampling seconds charged so far.
+    pub fn sample_s(&self) -> f64 {
+        self.sample_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Total gather seconds charged so far.
+    pub fn gather_s(&self) -> f64 {
+        self.gather_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
 
 /// What the consumer needs besides blocks + features to run the step.
 #[derive(Debug, Clone)]
@@ -128,34 +165,59 @@ pub struct SampleStage<'a> {
     pub lp: Option<(&'a EdgeBatcher, usize)>,
     /// The feature gather (plain, quantized-owned or quantized-shared).
     pub gather: FeatureGather<'a>,
+    /// Run-local sample/gather time accounting this stage charges into.
+    pub times: &'a StageTimes,
 }
 
 impl SampleStage<'_> {
     /// Run stage one for one batch: sample (node- or edge-seeded with the
     /// leakage guard), gather features for the input frontier — borrowing
     /// `blocks[0].src_nodes` in place, no per-batch copy — and assemble the
-    /// loss-side payload.
+    /// loss-side payload. Sampling and gather times are charged to `times`
+    /// (and, when tracing is on, recorded as `stage1/sample` /
+    /// `stage1/gather` spans on the calling thread).
     pub fn prepare(&mut self, batch: &[u32], stream: u64) -> PreparedBatch {
+        let _stage_span = crate::obs::span("stage1");
+        crate::obs::counter_add("pipeline.batches_prepared", 1);
         match self.lp {
             None => {
-                let blocks =
-                    self.sampler.sample_blocks(self.csr_in, self.degrees, batch, stream);
-                let x0 = self.gather.gather(&blocks[0].src_nodes);
+                let t0 = Instant::now();
+                let blocks = {
+                    let _s = crate::obs::span("sample");
+                    self.sampler.sample_blocks(self.csr_in, self.degrees, batch, stream)
+                };
+                self.times.add_sample(t0.elapsed().as_secs_f64());
+                let t1 = Instant::now();
+                let x0 = {
+                    let _s = crate::obs::span("gather");
+                    self.gather.gather(&blocks[0].src_nodes)
+                };
+                self.times.add_gather(t1.elapsed().as_secs_f64());
                 let labels: Vec<u32> =
                     batch.iter().map(|&v| self.labels[v as usize]).collect();
                 PreparedBatch { blocks, x0, target: BatchTarget::Nc { labels } }
             }
             Some((batcher, neg_per_pos)) => {
-                let (blocks, pairs) = sample_lp_step(
-                    batcher,
-                    self.sampler,
-                    self.csr_in,
-                    self.degrees,
-                    batch,
-                    stream,
-                    neg_per_pos,
-                );
-                let x0 = self.gather.gather(&blocks[0].src_nodes);
+                let t0 = Instant::now();
+                let (blocks, pairs) = {
+                    let _s = crate::obs::span("sample");
+                    sample_lp_step(
+                        batcher,
+                        self.sampler,
+                        self.csr_in,
+                        self.degrees,
+                        batch,
+                        stream,
+                        neg_per_pos,
+                    )
+                };
+                self.times.add_sample(t0.elapsed().as_secs_f64());
+                let t1 = Instant::now();
+                let x0 = {
+                    let _s = crate::obs::span("gather");
+                    self.gather.gather(&blocks[0].src_nodes)
+                };
+                self.times.add_gather(t1.elapsed().as_secs_f64());
                 PreparedBatch { blocks, x0, target: BatchTarget::Lp { pairs } }
             }
         }

@@ -1,0 +1,236 @@
+//! Golden-schema test for the `--metrics-out` artifacts (PR 6 satellite).
+//!
+//! Builds the `tango train` and `tango multigpu` artifacts through the same
+//! assembly path the CLI uses ([`tango::obs::train_artifact`] /
+//! [`tango::obs::multigpu_artifact`]) from real small runs, then compares
+//! the full recursive key structure against a checked-in expected set.
+//! Dynamic-name maps (`counters`, `gauges`, `histograms`, `spans`) collapse
+//! to `<name>.*` — their keys vary with instrumentation, their *presence*
+//! does not. Adding, renaming or dropping an artifact field fails this test
+//! until the golden list (and the schema version, if the change breaks
+//! consumers) is updated deliberately.
+
+use std::collections::BTreeSet;
+use tango::config::{ModelKind, SamplerConfig, TrainConfig};
+use tango::graph::datasets;
+use tango::multigpu::{run_data_parallel, Interconnect, MultiGpuConfig};
+use tango::obs;
+use tango::sampler::MiniBatchTrainer;
+use tango::util::json::Json;
+
+/// Recursively collect the artifact's key paths. Arrays recurse into their
+/// first element as `path[]`; the four dynamic-name maps become `path.*`.
+fn collect(prefix: &str, j: &Json, out: &mut BTreeSet<String>) {
+    match j {
+        Json::Obj(map) => {
+            for (k, v) in map {
+                let p = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                if matches!(p.as_str(), "counters" | "gauges" | "histograms" | "spans") {
+                    out.insert(format!("{p}.*"));
+                    continue;
+                }
+                collect(&p, v, out);
+            }
+        }
+        Json::Arr(items) => {
+            let p = format!("{prefix}[]");
+            match items.first() {
+                Some(first @ Json::Obj(_)) => collect(&p, first, out),
+                _ => {
+                    out.insert(p);
+                }
+            }
+        }
+        _ => {
+            out.insert(prefix.to_string());
+        }
+    }
+}
+
+fn keys_of(j: &Json) -> Vec<String> {
+    let mut out = BTreeSet::new();
+    collect("", j, &mut out);
+    out.into_iter().collect()
+}
+
+/// The train-config subtree (shared by both artifacts), rooted at `base`.
+fn config_keys(base: &str) -> Vec<String> {
+    [
+        "bits",
+        "dataset",
+        "epochs",
+        "heads",
+        "hidden",
+        "layers",
+        "lr",
+        "mode",
+        "model",
+        "policy.bucket_bits[]",
+        "policy.degree_buckets[]",
+        "sampler.batch_size",
+        "sampler.cache_nodes",
+        "sampler.degree_biased",
+        "sampler.enabled",
+        "sampler.fanouts[]",
+        "sampler.prefetch",
+        "sampler.seed",
+        "seed",
+    ]
+    .iter()
+    .map(|k| format!("{base}.{k}"))
+    .collect()
+}
+
+/// Keys shared by both artifacts outside `config`/`report`.
+fn shared_keys() -> Vec<String> {
+    let mut v: Vec<String> = [
+        "cache.evictions",
+        "cache.hits",
+        "cache.misses",
+        "command",
+        "counters.*",
+        "gauges.*",
+        "histograms.*",
+        "policy.bits[]",
+        "policy.boundaries[]",
+        "policy.buckets[].error_x",
+        "policy.buckets[].hits",
+        "policy.buckets[].int8_bytes",
+        "policy.buckets[].misses",
+        "policy.buckets[].packed_bytes",
+        "policy.buckets[].rows",
+        "policy.int8_bytes",
+        "policy.node_counts[]",
+        "policy.packed_bytes",
+        "schema",
+        "spans.*",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    for st in STAGE_KEYS {
+        v.push(format!("epochs[].stages.{st}"));
+    }
+    v
+}
+
+const STAGE_KEYS: [&str; 7] =
+    ["comm_s", "compute_s", "eval_s", "gather_s", "sample_s", "wait_s", "wall_s"];
+
+fn sorted(mut v: Vec<String>) -> Vec<String> {
+    v.sort();
+    v
+}
+
+fn base_train() -> TrainConfig {
+    TrainConfig {
+        model: ModelKind::Gcn,
+        dataset: "tiny".into(),
+        epochs: 2,
+        hidden: 8,
+        seed: 9,
+        sampler: SamplerConfig {
+            enabled: true,
+            fanouts: vec![4, 4],
+            batch_size: 32,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn train_artifact_matches_golden_key_set() {
+    let cfg = base_train();
+    let mut t = MiniBatchTrainer::with_dataset(cfg.clone(), datasets::tiny(cfg.seed)).unwrap();
+    let report = t.run().unwrap();
+    assert!(!report.stages.is_empty(), "sampled run reports per-epoch stages");
+    let artifact = obs::train_artifact(&cfg, &report, &obs::snapshot());
+    assert_eq!(artifact.get("schema").unwrap().as_str(), Some(obs::SCHEMA));
+    assert_eq!(artifact.get("command").unwrap().as_str(), Some("train"));
+
+    let mut expected = shared_keys();
+    expected.extend(config_keys("config"));
+    expected.extend(
+        [
+            "epochs[].epoch",
+            "epochs[].eval",
+            "epochs[].loss",
+            "report.bits",
+            "report.cache_bytes",
+            "report.epochs_to_converge",
+            "report.final_eval",
+            "report.prefetch_wait_s",
+            "report.wall_secs",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    for st in STAGE_KEYS {
+        expected.push(format!("report.stage_totals.{st}"));
+    }
+    assert_eq!(keys_of(&artifact), sorted(expected));
+
+    // The artifact round-trips through the JSON writer/parser.
+    let reparsed = Json::parse(&artifact.to_string()).unwrap();
+    assert_eq!(reparsed, artifact);
+}
+
+#[test]
+fn multigpu_artifact_matches_golden_key_set() {
+    let cfg = MultiGpuConfig {
+        train: base_train(),
+        workers: 2,
+        epochs: 2,
+        quantize_grads: true,
+        interconnect: Interconnect::pcie3(),
+    };
+    let data = datasets::tiny(cfg.train.seed);
+    let report = run_data_parallel(&cfg, &data).unwrap();
+    let artifact = obs::multigpu_artifact(&cfg, &report, &obs::snapshot());
+    assert_eq!(artifact.get("schema").unwrap().as_str(), Some(obs::SCHEMA));
+    assert_eq!(artifact.get("command").unwrap().as_str(), Some("multigpu"));
+
+    let mut expected = shared_keys();
+    expected.extend(config_keys("config.train"));
+    expected.extend(
+        [
+            "config.epochs",
+            "config.quantize_grads",
+            "config.workers",
+            "epochs[].epoch",
+            "epochs[].loss",
+            "epochs[].steps",
+            "report.cache_bytes",
+            "report.grad_elems",
+            "report.total_time_s",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    assert_eq!(keys_of(&artifact), sorted(expected));
+
+    let reparsed = Json::parse(&artifact.to_string()).unwrap();
+    assert_eq!(reparsed, artifact);
+}
+
+#[test]
+fn absent_sections_are_null_not_missing() {
+    // An FP32 full-graph run has no cache and no policy report — the keys
+    // must still exist (as null) so downstream tooling indexes blindly.
+    let mut cfg = base_train();
+    cfg.sampler.enabled = false;
+    cfg.mode = tango::model::TrainMode::fp32();
+    let mut t = tango::coordinator::Trainer::with_dataset(cfg.clone(), datasets::tiny(cfg.seed))
+        .unwrap();
+    let report = t.run().unwrap();
+    let artifact = obs::train_artifact(&cfg, &report, &obs::snapshot());
+    assert_eq!(artifact.get("cache"), Some(&Json::Null));
+    assert_eq!(artifact.get("policy"), Some(&Json::Null));
+    // Stage objects keep all seven keys even when some stages are zero.
+    let epochs = artifact.get("epochs").unwrap().as_arr().unwrap();
+    let stages = epochs[0].get("stages").unwrap();
+    for st in STAGE_KEYS {
+        assert!(stages.get(st).is_some(), "missing stage key {st}");
+    }
+}

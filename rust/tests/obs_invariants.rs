@@ -1,0 +1,231 @@
+//! Observability invariants (PR 6 tentpole guarantees):
+//!
+//! 1. hierarchical spans record full `/`-joined paths and are thread-safe;
+//! 2. histogram percentiles are ordered (`p50 <= p95 <= p99 <= max`) and
+//!    monotone in `q` under fuzzed inputs;
+//! 3. metrics merging is associative (counters, histograms, spans);
+//! 4. **bit-identity**: a traced run produces exactly the same losses as an
+//!    untraced one — the instrumentation only reads training values.
+//!
+//! The enabled flag and the registry are process-global, so every test that
+//! toggles or reads them serializes on one lock (`with_tracing`) and always
+//! restores tracing to on.
+
+use std::sync::Mutex;
+use tango::config::{ModelKind, SamplerConfig, TrainConfig};
+use tango::obs::{self, Histogram, Metrics};
+use tango::quant::rng::Xoshiro256pp;
+use tango::sampler::MiniBatchTrainer;
+
+/// Serializes every test that touches the process-global enabled flag or
+/// expects exclusive use of the global registry.
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with tracing forced to `on`, restoring tracing afterwards.
+fn with_tracing<T>(on: bool, f: impl FnOnce() -> T) -> T {
+    let _guard = TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    obs::set_enabled(on);
+    let out = f();
+    obs::set_enabled(true);
+    out
+}
+
+fn sampled_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        model: ModelKind::Gcn,
+        dataset: "tiny".into(),
+        epochs,
+        hidden: 16,
+        seed: 11,
+        sampler: SamplerConfig {
+            enabled: true,
+            fanouts: vec![6, 6],
+            batch_size: 48,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn spans_nest_into_full_paths() {
+    with_tracing(true, || {
+        obs::reset();
+        {
+            let _outer = obs::span("inv.outer");
+            {
+                let _inner = obs::span("inv.inner");
+            }
+            {
+                let _other = obs::span("inv.other");
+            }
+        }
+        let snap = obs::snapshot();
+        for path in ["inv.outer", "inv.outer/inv.inner", "inv.outer/inv.other"] {
+            let sp = snap.spans.get(path).unwrap_or_else(|| panic!("missing span {path}"));
+            assert_eq!(sp.calls, 1, "{path}");
+            assert!(sp.total_s >= 0.0);
+        }
+        // Sibling paths never concatenate: no "inv.inner/inv.other".
+        assert!(!snap.spans.contains_key("inv.outer/inv.inner/inv.other"));
+    });
+}
+
+#[test]
+fn spans_and_counters_are_thread_safe() {
+    const THREADS: usize = 8;
+    const PER_THREAD: u64 = 200;
+    with_tracing(true, || {
+        obs::reset();
+        std::thread::scope(|scope| {
+            for _ in 0..THREADS {
+                scope.spawn(|| {
+                    for _ in 0..PER_THREAD {
+                        let _s = obs::span("inv.mt");
+                        obs::counter_add("inv.mt.counter", 1);
+                        obs::observe("inv.mt.hist", 1e-6);
+                    }
+                });
+            }
+        });
+        let snap = obs::snapshot();
+        let n = THREADS as u64 * PER_THREAD;
+        assert_eq!(snap.counters.get("inv.mt.counter"), Some(&n));
+        assert_eq!(snap.hists.get("inv.mt.hist").unwrap().count(), n);
+        // Every thread's spans are roots of their own thread path, so they
+        // all aggregate under the bare name.
+        assert_eq!(snap.spans.get("inv.mt").unwrap().calls, n);
+    });
+}
+
+#[test]
+fn percentiles_are_ordered_and_monotone_under_fuzzing() {
+    let mut rng = Xoshiro256pp::new(0xB0B);
+    for case in 0..50 {
+        let mut h = Histogram::default();
+        let n = 1 + (rng.next_u64() % 400) as usize;
+        for _ in 0..n {
+            // Mix magnitudes from ns to minutes (and some junk values the
+            // histogram must clamp).
+            let exp = (rng.next_u64() % 12) as i32 - 9;
+            let v = rng.next_f32() as f64 * 10f64.powi(exp);
+            h.record(if case % 7 == 0 { -v } else { v });
+        }
+        let p50 = h.percentile(0.50);
+        let p95 = h.percentile(0.95);
+        let p99 = h.percentile(0.99);
+        assert!(p50 <= p95, "case {case}: p50 {p50} > p95 {p95}");
+        assert!(p95 <= p99, "case {case}: p95 {p95} > p99 {p99}");
+        assert!(p99 <= h.max(), "case {case}: p99 {p99} > max {}", h.max());
+        assert!(h.min() <= p50, "case {case}: min {} > p50 {p50}", h.min());
+        let mut prev = 0.0;
+        for i in 0..=20 {
+            let v = h.percentile(i as f64 / 20.0);
+            assert!(v >= prev, "case {case}: quantile not monotone at q={}", i as f64 / 20.0);
+            prev = v;
+        }
+    }
+}
+
+#[test]
+fn metrics_merge_is_associative() {
+    let mut rng = Xoshiro256pp::new(77);
+    // Durations on a dyadic grid (multiples of 2^-10, bounded): their f64
+    // sums are exact, so merge associativity is exact equality rather than
+    // up-to-rounding. Keys overlap across the three metrics (`c0..c2`,
+    // `h0/h1`, `s0/s1`) so every merge exercises real folding.
+    let mut make = || {
+        let mut dur = |rng: &mut Xoshiro256pp| (rng.next_u64() % 4096) as f64 / 1024.0;
+        let mut m = Metrics::default();
+        for i in 0..4 {
+            *m.counters.entry(format!("c{}", i % 3)).or_insert(0) += 1 + rng.next_u64() % 100;
+            let mut h = Histogram::default();
+            for _ in 0..4 {
+                h.record(dur(&mut rng));
+            }
+            m.hists.entry(format!("h{}", i % 2)).or_default().merge(&h);
+            let sp = m.spans.entry(format!("s{}", i % 2)).or_default();
+            sp.calls += 1;
+            sp.total_s += dur(&mut rng);
+            sp.hist.record(dur(&mut rng));
+        }
+        m
+    };
+    let (a, b, c) = (make(), make(), make());
+    // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)
+    let mut left = a.clone();
+    left.merge(&b);
+    left.merge(&c);
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut right = a.clone();
+    right.merge(&bc);
+    assert_eq!(left, right);
+    // Merging an empty registry is the identity.
+    let mut with_empty = left.clone();
+    with_empty.merge(&Metrics::default());
+    assert_eq!(with_empty, left);
+}
+
+#[test]
+fn traced_runs_are_bit_identical_to_untraced() {
+    let run = |trace: bool| -> (Vec<f32>, Vec<f32>) {
+        with_tracing(trace, || {
+            obs::reset();
+            let mut t = MiniBatchTrainer::from_config(&sampled_cfg(4)).unwrap();
+            let r = t.run().unwrap();
+            (r.losses, r.evals)
+        })
+    };
+    let (traced_losses, traced_evals) = run(true);
+    let (plain_losses, plain_evals) = run(false);
+    assert_eq!(traced_losses, plain_losses, "tracing must not perturb training");
+    assert_eq!(traced_evals, plain_evals, "tracing must not perturb evaluation");
+}
+
+#[test]
+fn disabled_tracing_records_nothing() {
+    with_tracing(false, || {
+        obs::reset();
+        {
+            let _s = obs::span("inv.off.span");
+            let _t = obs::timed("inv.off.timed");
+            obs::counter_add("inv.off.counter", 1);
+            obs::gauge_set("inv.off.gauge", 1.0);
+            obs::observe("inv.off.hist", 1.0);
+        }
+        assert!(obs::snapshot().is_empty(), "off must mean off");
+    });
+}
+
+#[test]
+fn traced_sampled_run_populates_the_expected_surface() {
+    with_tracing(true, || {
+        obs::reset();
+        let mut t = MiniBatchTrainer::from_config(&sampled_cfg(2)).unwrap();
+        t.run().unwrap();
+        let snap = obs::snapshot();
+        for span in ["epoch", "epoch/eval", "stage1", "stage1/sample", "stage1/gather"] {
+            assert!(snap.spans.contains_key(span), "missing span {span}: {:?}", snap.spans.keys());
+        }
+        for counter in
+            ["pipeline.batches_prepared", "gather.rows", "gather.cache_hits", "gather.cache_misses"]
+        {
+            assert!(
+                snap.counters.contains_key(counter),
+                "missing counter {counter}: {:?}",
+                snap.counters.keys()
+            );
+        }
+        assert!(
+            snap.gauges.keys().any(|k| k.starts_with("gather.error_x.bucket")),
+            "per-bucket Error_X gauges: {:?}",
+            snap.gauges.keys()
+        );
+        assert!(
+            snap.hists.contains_key("sampler.sample_blocks"),
+            "{:?}",
+            snap.hists.keys()
+        );
+    });
+}

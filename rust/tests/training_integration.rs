@@ -136,6 +136,59 @@ fn task_flag_runs_sampled_linkpred_on_generated_nc_graph() {
 }
 
 #[test]
+fn stage_budget_closes_against_wall() {
+    // PR 6: `wall_secs` is the *full* epoch budget (training sweep + eval)
+    // and the per-epoch stage breakdown accounts for it. The consumer-side
+    // stages (`wait + compute + eval`) must close against the measured wall
+    // within 5% relative slack plus a small absolute allowance per epoch
+    // for the untimed seams (batch shuffling, channel plumbing).
+    let check = |report: &tango::coordinator::TrainReport, epochs: usize, what: &str| {
+        assert_eq!(report.stages.len(), epochs, "{what}: one stage entry per epoch");
+        let totals = report.stage_totals();
+        assert!(
+            (totals.wall_s - report.wall_secs).abs() <= 1e-6 * report.wall_secs.max(1e-9),
+            "{what}: per-epoch walls must sum to wall_secs ({} vs {})",
+            totals.wall_s,
+            report.wall_secs
+        );
+        for (i, st) in report.stages.iter().enumerate() {
+            assert!(
+                st.accounted() <= st.wall_s * 1.05 + 2e-3,
+                "{what} epoch {i}: accounted {} exceeds wall {}",
+                st.accounted(),
+                st.wall_s
+            );
+        }
+        let slack = 0.05 * report.wall_secs + 2e-3 * epochs as f64;
+        assert!(
+            (report.wall_secs - totals.accounted()).abs() <= slack,
+            "{what}: budget does not close: wall {} vs accounted {} (slack {slack})",
+            report.wall_secs,
+            totals.accounted()
+        );
+    };
+
+    // Full-graph: wait is zero, compute + eval is the whole epoch.
+    let mut t =
+        Trainer::from_config(&cfg(ModelKind::Gcn, "Pubmed", TrainMode::tango(8), 3)).unwrap();
+    let full = t.run().unwrap();
+    check(&full, 3, "full-graph");
+    assert!(full.stage_totals().wait_s == 0.0, "full-graph runs have no stage-one wait");
+
+    // Sampled with prefetch disabled: stage one runs inline, so it is all
+    // visible consumer-side wait and the budget still closes.
+    let mut c = cfg(ModelKind::Gcn, "Pubmed", TrainMode::tango(8), 3);
+    c.sampler.enabled = true;
+    c.sampler.fanouts = vec![5, 5];
+    c.sampler.batch_size = 256;
+    c.sampler.prefetch = 0;
+    let mut t = Trainer::from_config(&c).unwrap();
+    let sampled = t.run().unwrap();
+    check(&sampled, 3, "sampled-inline");
+    assert!(sampled.stage_totals().wait_s > 0.0, "inline stage one must be accounted as wait");
+}
+
+#[test]
 fn multigpu_speedup_grows_with_workers() {
     // Fig. 9's shape: quantized-vs-fp32 comm advantage grows with workers.
     // comm_s is the modelled interconnect time, so tiny keeps the real
