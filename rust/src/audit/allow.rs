@@ -1,0 +1,171 @@
+//! The vetted-exception list (`audit.allow.toml`).
+//!
+//! Format — one `[allow.<slug>]` section per exception, parsed with the
+//! repo's own TOML-subset reader:
+//!
+//! ```toml
+//! [allow.par-slab-invariant]
+//! rule = "P1"                      # D1 | O1 | C1 | P1
+//! path = "rust/src/util/par.rs"    # suffix match on the finding's path
+//! contains = "batch claimed twice" # optional: substring of the flagged
+//!                                  # line or message
+//! reason = "slab slots are filled exactly once by construction"
+//! ```
+//!
+//! An entry suppresses every finding it matches; an entry that matches
+//! nothing is reported as a warning (stale exceptions hide regressions),
+//! which `--deny-warnings` promotes to failure.
+
+use super::{Finding, Rule};
+use crate::config::TomlDoc;
+
+/// One parsed `[allow.<name>]` entry.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    /// The `<slug>` after `allow.`.
+    pub name: String,
+    /// Rule this entry suppresses.
+    pub rule: Rule,
+    /// Path suffix the finding must end with.
+    pub path: String,
+    /// Optional substring of the finding's snippet or message.
+    pub contains: Option<String>,
+    /// One-line justification (required — an excuse-free allowlist rots).
+    pub reason: String,
+}
+
+/// The whole allowlist.
+#[derive(Debug, Clone, Default)]
+pub struct Allowlist {
+    /// Entries in file order.
+    pub entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    /// An empty list (no `audit.allow.toml` present).
+    pub fn empty() -> Allowlist {
+        Allowlist::default()
+    }
+
+    /// Parse the allowlist text; errors name the offending section.
+    pub fn parse(text: &str) -> Result<Allowlist, String> {
+        let doc = TomlDoc::parse(text)?;
+        let mut entries = Vec::new();
+        for sec in doc.sections() {
+            if sec.is_empty() {
+                continue;
+            }
+            let name = sec
+                .strip_prefix("allow.")
+                .ok_or_else(|| format!("section [{sec}]: expected [allow.<name>]"))?
+                .to_string();
+            let field = |k: &str| {
+                doc.get(sec, k)
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("[{sec}]: missing required key `{k}`"))
+            };
+            let rule_s = field("rule")?;
+            let rule = Rule::parse(&rule_s)
+                .ok_or_else(|| format!("[{sec}]: unknown rule {rule_s:?} (D1|O1|C1|P1)"))?;
+            let reason = field("reason")?;
+            if reason.trim().is_empty() {
+                return Err(format!("[{sec}]: empty reason"));
+            }
+            entries.push(AllowEntry {
+                name,
+                rule,
+                path: field("path")?,
+                contains: doc.get(sec, "contains").map(str::to_string),
+                reason,
+            });
+        }
+        Ok(Allowlist { entries })
+    }
+
+    /// Index of the first entry matching `f`, if any.
+    pub fn match_finding(&self, f: &Finding) -> Option<usize> {
+        self.entries.iter().position(|e| {
+            e.rule == f.rule
+                && f.path.ends_with(&e.path)
+                && e.contains
+                    .as_deref()
+                    .map(|c| f.snippet.contains(c) || f.message.contains(c))
+                    .unwrap_or(true)
+        })
+    }
+
+    /// Split raw findings into `(kept, suppressed-with-entry-name,
+    /// unused-entry-names)`.
+    pub fn apply(
+        &self,
+        findings: Vec<Finding>,
+    ) -> (Vec<Finding>, Vec<(String, Finding)>, Vec<String>) {
+        let mut used = vec![false; self.entries.len()];
+        let mut kept = Vec::new();
+        let mut suppressed = Vec::new();
+        for f in findings {
+            match self.match_finding(&f) {
+                Some(i) => {
+                    used[i] = true;
+                    suppressed.push((self.entries[i].name.clone(), f));
+                }
+                None => kept.push(f),
+            }
+        }
+        let unused = self
+            .entries
+            .iter()
+            .zip(&used)
+            .filter(|(_, u)| !**u)
+            .map(|(e, _)| e.name.clone())
+            .collect();
+        (kept, suppressed, unused)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding() -> Finding {
+        Finding {
+            rule: Rule::P1,
+            path: "rust/src/util/par.rs".into(),
+            line: 63,
+            message: "`.expect(\"` in library code".into(),
+            snippet: ".expect(\"batch claimed twice\");".into(),
+        }
+    }
+
+    #[test]
+    fn parse_match_and_usage_tracking() {
+        let a = Allowlist::parse(
+            "[allow.par-slab]\nrule = \"P1\"\npath = \"util/par.rs\"\n\
+             contains = \"batch claimed twice\"\nreason = \"slab invariant\"\n\
+             [allow.stale]\nrule = \"D1\"\npath = \"nope.rs\"\nreason = \"x\"\n",
+        )
+        .unwrap();
+        let (kept, suppressed, unused) = a.apply(vec![finding()]);
+        assert!(kept.is_empty());
+        assert_eq!(suppressed.len(), 1);
+        assert_eq!(suppressed[0].0, "par-slab");
+        assert_eq!(unused, vec!["stale".to_string()]);
+    }
+
+    #[test]
+    fn wrong_rule_or_substring_does_not_match() {
+        let a = Allowlist::parse(
+            "[allow.x]\nrule = \"O1\"\npath = \"util/par.rs\"\nreason = \"r\"\n",
+        )
+        .unwrap();
+        assert_eq!(a.match_finding(&finding()), None);
+    }
+
+    #[test]
+    fn malformed_entries_error_with_section_name() {
+        assert!(Allowlist::parse("[allow.x]\npath = \"p\"\nreason = \"r\"\n")
+            .unwrap_err()
+            .contains("allow.x"));
+        assert!(Allowlist::parse("[notallow.x]\nrule = \"P1\"\n").is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! `tango-audit` — repo-specific static analysis (the compile-time
+//! correctness tooling).
+//!
+//! Tango's invariants live outside the type system: bit-identical replay
+//! across prefetch depths and worker counts, a pinned `tango-metrics/v1`
+//! key schema, and a three-way CLI/TOML/docs config surface. This module
+//! is a zero-dependency line/token scanner over `rust/src/**` that turns
+//! those reviewer-discipline rules into machine-checked ones:
+//!
+//! - **D1 (determinism)** — no `SystemTime`/`Instant::now` outside the
+//!   observability and metrics layers, and no iteration over `HashMap`/
+//!   `HashSet` (per-process random order — the bit-identity bug class);
+//!   require sorted or `BTreeMap` iteration instead.
+//! - **O1 (obs keys)** — every `span`/`timed`/`counter_add`/`gauge_set`
+//!   key must be a constant from [`crate::obs::keys`], never an inline
+//!   string literal, so the metrics artifact schema cannot drift silently.
+//! - **C1 (config surface)** — every `--flag` parsed in `main.rs` must
+//!   have a matching TOML key in `config/` and a mention in
+//!   `configs/*.toml`, and vice versa.
+//! - **P1 (no panics)** — no `unwrap()`/`expect()`/`panic!` in library
+//!   code outside tests and benches.
+//!
+//! Vetted exceptions live in `audit.allow.toml` at the repo root, each
+//! with a one-line justification; unused entries are warnings (failures
+//! under `--deny-warnings`). The scanner skips `#[cfg(test)]` modules
+//! (always file-tail in this repo), comment lines, and its own sources
+//! (which contain the banned tokens as pattern strings — the rules are
+//! instead exercised on inline fixtures in `tests/audit_self.rs`).
+//!
+//! Run locally: `cargo run --bin tango_audit -- --deny-warnings`.
+//! See `rust/src/audit/README.md` for the full rule/allowlist reference.
+
+mod allow;
+mod report;
+mod scanner;
+mod surface;
+
+pub use allow::{AllowEntry, Allowlist};
+pub use report::{Report, SCHEMA};
+pub use scanner::scan_source;
+pub use surface::{check_surface, extract_cli_flags, extract_mentions, extract_toml_keys, Extracted};
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// One audit rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// Determinism: no wall-clock reads or hash-order iteration in seeded paths.
+    D1,
+    /// Obs keys: no inline string keys at `span`/`timed`/counter/gauge sites.
+    O1,
+    /// Config surface: CLI flags, TOML keys and config-file mentions agree.
+    C1,
+    /// No `unwrap()`/`expect()`/`panic!` in library code.
+    P1,
+}
+
+impl Rule {
+    /// Short rule id, as printed in diagnostics and the allowlist.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::D1 => "D1",
+            Rule::O1 => "O1",
+            Rule::C1 => "C1",
+            Rule::P1 => "P1",
+        }
+    }
+
+    /// Parse a rule id.
+    pub fn parse(s: &str) -> Option<Rule> {
+        match s {
+            "D1" => Some(Rule::D1),
+            "O1" => Some(Rule::O1),
+            "C1" => Some(Rule::C1),
+            "P1" => Some(Rule::P1),
+            _ => None,
+        }
+    }
+}
+
+/// One diagnostic: rule, repo-relative `path:line`, message and the
+/// flagged source line (what allowlist `contains` patterns match on).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// The rule that fired.
+    pub rule: Rule,
+    /// Repo-relative path with forward slashes.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable description.
+    pub message: String,
+    /// The trimmed source line (or symbol) that triggered the finding.
+    pub snippet: String,
+}
+
+impl Finding {
+    /// `path:line: rule message` — the diagnostic line format.
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.path, self.line, self.rule.name(), self.message)
+    }
+}
+
+/// Files under `rust/src` the scanner must not read: the audit sources
+/// themselves contain every banned token as a pattern string.
+fn is_excluded(rel: &str) -> bool {
+    rel.starts_with("rust/src/audit/") || rel == "rust/src/bin/tango_audit.rs"
+}
+
+/// Recursively list `.rs` files under `dir` as repo-relative paths
+/// (sorted, so findings and reports are deterministic).
+fn walk_rs(dir: &Path, rel: &str, out: &mut Vec<String>) -> crate::Result<()> {
+    let mut entries: Vec<(String, bool)> = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let is_dir = entry.file_type()?.is_dir();
+        entries.push((name, is_dir));
+    }
+    entries.sort();
+    for (name, is_dir) in entries {
+        let child_rel = format!("{rel}/{name}");
+        if is_dir {
+            walk_rs(&dir.join(&name), &child_rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(child_rel);
+        }
+    }
+    Ok(())
+}
+
+/// Run the full audit from a repo root, applying `allow` to the raw
+/// findings. Returns the report; it is the caller's job to pick an exit
+/// code from [`Report::ok`].
+pub fn run(root: &Path, allow: &Allowlist) -> crate::Result<Report> {
+    let src = root.join("rust").join("src");
+    if !src.is_dir() {
+        anyhow::bail!("{} is not a repo root (no rust/src)", root.display());
+    }
+    let mut files = Vec::new();
+    walk_rs(&src, "rust/src", &mut files)?;
+
+    let mut findings = Vec::new();
+    let mut files_scanned = 0usize;
+    for rel in &files {
+        if is_excluded(rel) {
+            continue;
+        }
+        let text = std::fs::read_to_string(root.join(rel))?;
+        findings.extend(scan_source(rel, &text));
+        files_scanned += 1;
+    }
+
+    // C1: cross-reference the CLI flag surface, the TOML key surface and
+    // the example-config mentions.
+    let main_rel = "rust/src/main.rs";
+    let main_text = std::fs::read_to_string(root.join(main_rel))?;
+    let flags = extract_cli_flags(main_rel, &main_text);
+    let mut keys = Vec::new();
+    for rel in ["rust/src/config/mod.rs", "rust/src/multigpu/worker.rs"] {
+        let text = std::fs::read_to_string(root.join(rel))?;
+        keys.extend(extract_toml_keys(rel, &text));
+    }
+    let mut mentions = BTreeSet::new();
+    let configs = root.join("configs");
+    if configs.is_dir() {
+        let mut toml_files: Vec<String> = Vec::new();
+        for entry in std::fs::read_dir(&configs)? {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if name.ends_with(".toml") {
+                toml_files.push(name);
+            }
+        }
+        toml_files.sort();
+        for name in toml_files {
+            let text = std::fs::read_to_string(configs.join(name))?;
+            mentions.extend(extract_mentions(&text));
+        }
+    }
+    findings.extend(check_surface(&flags, &keys, &mentions));
+
+    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    let (kept, suppressed, unused) = allow.apply(findings);
+    let warnings: Vec<String> = unused
+        .into_iter()
+        .map(|n| format!("unused allowlist entry [allow.{n}] — fix shipped? delete the entry"))
+        .collect();
+    Ok(Report { files_scanned, findings: kept, suppressed, warnings })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_names_round_trip() {
+        for r in [Rule::D1, Rule::O1, Rule::C1, Rule::P1] {
+            assert_eq!(Rule::parse(r.name()), Some(r));
+        }
+        assert_eq!(Rule::parse("Z9"), None);
+    }
+
+    #[test]
+    fn exclusions_cover_the_scanner_itself() {
+        assert!(is_excluded("rust/src/audit/scanner.rs"));
+        assert!(is_excluded("rust/src/bin/tango_audit.rs"));
+        assert!(!is_excluded("rust/src/main.rs"));
+    }
+}

@@ -1,0 +1,134 @@
+//! The audit result: human-readable rendering and the machine-readable
+//! `tango-audit/v1` JSON artifact (same shape discipline as the
+//! `tango-metrics/v1` run artifact: deterministic key order, schema tag).
+
+use super::Finding;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Schema tag of the JSON report.
+pub const SCHEMA: &str = "tango-audit/v1";
+
+/// Everything one audit run produced.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Files scanned by the line rules (exclusions already applied).
+    pub files_scanned: usize,
+    /// Findings that survived the allowlist — each one fails the audit.
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by an allowlist entry, with the entry name.
+    pub suppressed: Vec<(String, Finding)>,
+    /// Non-fatal issues (unused allowlist entries); fatal under
+    /// `--deny-warnings`.
+    pub warnings: Vec<String>,
+}
+
+impl Report {
+    /// Does this run pass?
+    pub fn ok(&self, deny_warnings: bool) -> bool {
+        self.findings.is_empty() && (!deny_warnings || self.warnings.is_empty())
+    }
+
+    /// Multi-line human-readable summary (diagnostics first).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.render());
+            out.push('\n');
+            out.push_str(&format!("    | {}\n", f.snippet));
+        }
+        for w in &self.warnings {
+            out.push_str(&format!("warning: {w}\n"));
+        }
+        out.push_str(&format!(
+            "tango-audit: {} files scanned, {} finding(s), {} allowed, {} warning(s)\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.suppressed.len(),
+            self.warnings.len()
+        ));
+        out
+    }
+
+    /// The `tango-audit/v1` JSON document.
+    pub fn to_json(&self) -> Json {
+        let finding_json = |f: &Finding| {
+            let mut m = BTreeMap::new();
+            m.insert("rule".to_string(), Json::Str(f.rule.name().to_string()));
+            m.insert("path".to_string(), Json::Str(f.path.clone()));
+            m.insert("line".to_string(), Json::Num(f.line as f64));
+            m.insert("message".to_string(), Json::Str(f.message.clone()));
+            m.insert("snippet".to_string(), Json::Str(f.snippet.clone()));
+            Json::Obj(m)
+        };
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".to_string(), Json::Str(SCHEMA.to_string()));
+        doc.insert("files_scanned".to_string(), Json::Num(self.files_scanned as f64));
+        doc.insert(
+            "findings".to_string(),
+            Json::Arr(self.findings.iter().map(&finding_json).collect()),
+        );
+        doc.insert(
+            "allowed".to_string(),
+            Json::Arr(
+                self.suppressed
+                    .iter()
+                    .map(|(name, f)| {
+                        let mut m = BTreeMap::new();
+                        m.insert("entry".to_string(), Json::Str(name.clone()));
+                        m.insert("finding".to_string(), finding_json(f));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        doc.insert(
+            "warnings".to_string(),
+            Json::Arr(self.warnings.iter().map(|w| Json::Str(w.clone())).collect()),
+        );
+        Json::Obj(doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::Rule;
+
+    fn report() -> Report {
+        Report {
+            files_scanned: 3,
+            findings: vec![Finding {
+                rule: Rule::D1,
+                path: "rust/src/x.rs".into(),
+                line: 7,
+                message: "m".into(),
+                snippet: "s".into(),
+            }],
+            suppressed: vec![],
+            warnings: vec!["unused allowlist entry [allow.z]".into()],
+        }
+    }
+
+    #[test]
+    fn ok_gates_on_findings_and_warnings() {
+        let mut r = report();
+        assert!(!r.ok(false));
+        r.findings.clear();
+        assert!(r.ok(false));
+        assert!(!r.ok(true)); // warning still present
+        r.warnings.clear();
+        assert!(r.ok(true));
+    }
+
+    #[test]
+    fn json_carries_schema_and_findings() {
+        let j = report().to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        let f = &j.get("findings").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(f.get("rule").and_then(Json::as_str), Some("D1"));
+        assert_eq!(f.get("line").and_then(Json::as_usize), Some(7));
+        // Round-trips through the repo's own parser.
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

@@ -1,0 +1,291 @@
+//! The per-file line/token scanner: rules D1 (determinism), O1 (obs keys)
+//! and P1 (no panics).
+//!
+//! Deliberately a token scanner, not a parser: the rules are phrased so
+//! that substring + word-boundary checks over non-comment, non-test lines
+//! are exact enough, and the allowlist absorbs the few vetted exceptions.
+//! Scanning stops at the first `#[cfg(test)]` line — test modules sit at
+//! the end of every file in this repo — and `//`-prefixed lines are
+//! skipped so doc comments can talk about `unwrap()` freely.
+
+use super::{Finding, Rule};
+use std::collections::BTreeSet;
+
+/// Wall-clock tokens banned outside the observability/metrics layers (D1).
+const CLOCK_TOKENS: [&str; 2] = ["SystemTime", "Instant::now"];
+
+/// Panic-path tokens banned in library code (P1). `.expect(` is matched
+/// with its opening quote so `Parser::expect(b'"')`-style byte helpers
+/// don't false-positive.
+const PANIC_TOKENS: [&str; 3] = [".unwrap()", ".expect(\"", "panic!("];
+
+/// Hash-ordered iteration methods banned on `HashMap`/`HashSet` values (D1).
+const ITER_METHODS: [&str; 7] =
+    [".iter()", ".keys()", ".values()", ".values_mut()", ".into_iter()", ".drain(", ".retain("];
+
+/// Obs entry points whose first argument must be a `obs::keys` constant (O1).
+const OBS_FNS: [&str; 4] = ["span", "timed", "counter_add", "gauge_set"];
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Find `tok` in `line[from..]` at a position not preceded by an
+/// identifier byte (so `span(` does not match `print_span(`).
+fn find_bounded(line: &str, tok: &str, from: usize) -> Option<usize> {
+    let bytes = line.as_bytes();
+    let mut start = from;
+    while let Some(rel) = line.get(start..).and_then(|s| s.find(tok)) {
+        let at = start + rel;
+        if at == 0 || !is_ident_byte(bytes[at - 1]) {
+            return Some(at);
+        }
+        start = at + 1;
+    }
+    None
+}
+
+/// Read an identifier starting at byte `at`.
+fn ident_at(line: &str, at: usize) -> Option<&str> {
+    let bytes = line.as_bytes();
+    if at >= bytes.len() || !is_ident_byte(bytes[at]) || bytes[at].is_ascii_digit() {
+        return None;
+    }
+    let mut end = at;
+    while end < bytes.len() && is_ident_byte(bytes[end]) {
+        end += 1;
+    }
+    line.get(at..end)
+}
+
+/// Read the identifier that *ends* at byte `end` (exclusive).
+fn ident_ending_at(line: &str, end: usize) -> Option<&str> {
+    let bytes = line.as_bytes();
+    let mut start = end;
+    while start > 0 && is_ident_byte(bytes[start - 1]) {
+        start -= 1;
+    }
+    if start == end || bytes[start].is_ascii_digit() {
+        return None;
+    }
+    line.get(start..end)
+}
+
+/// Is this file inside the layers allowed to read wall clocks (D1)?
+/// `obs` *is* the timing layer; `metrics` is the bench/report layer whose
+/// whole job is wall-clock measurement.
+fn clock_allowed(path: &str) -> bool {
+    path.starts_with("rust/src/obs/") || path.starts_with("rust/src/metrics/")
+}
+
+/// Track identifiers bound to `HashMap`/`HashSet` values in this file so
+/// far, honouring `let` shadowing (re-binding a name to a non-hash value
+/// — e.g. draining a set into a `Vec` to sort it — untracks the name).
+fn update_tracked(line: &str, tracked: &mut BTreeSet<String>) {
+    let hashy = line.contains("HashMap") || line.contains("HashSet");
+    let mut from = 0;
+    while let Some(at) = find_bounded(line, "let ", from) {
+        let mut p = at + 4;
+        let bytes = line.as_bytes();
+        while p < bytes.len() && bytes[p] == b' ' {
+            p += 1;
+        }
+        if line.get(p..).is_some_and(|s| s.starts_with("mut ")) {
+            p += 4;
+            while p < bytes.len() && bytes[p] == b' ' {
+                p += 1;
+            }
+        }
+        if let Some(name) = ident_at(line, p) {
+            if hashy {
+                tracked.insert(name.to_string());
+            } else {
+                tracked.remove(name);
+            }
+        }
+        from = at + 4;
+    }
+    // Type-position declarations — struct fields and fn params:
+    // `name: HashMap<..>`, `name: &HashSet<..>`, `name: std::collections::…`.
+    for ty in ["HashMap<", "HashSet<"] {
+        let mut from = 0;
+        while let Some(at) = find_bounded(line, ty, from) {
+            let mut before = &line[..at];
+            before = before.strip_suffix("std::collections::").unwrap_or(before);
+            before = before.trim_end();
+            before = before.strip_suffix('&').unwrap_or(before).trim_end();
+            if let Some(rest) = before.strip_suffix(':') {
+                let rest = rest.trim_end();
+                if let Some(name) = ident_ending_at(rest, rest.len()) {
+                    tracked.insert(name.to_string());
+                }
+            }
+            from = at + 1;
+        }
+    }
+}
+
+/// D1 (iteration half): does `line` iterate any tracked hash container?
+fn hash_iteration(line: &str, tracked: &BTreeSet<String>) -> Option<String> {
+    for name in tracked {
+        for meth in ITER_METHODS {
+            let pat = format!("{name}{meth}");
+            if find_bounded(line, &pat, 0).is_some() {
+                return Some(pat);
+            }
+        }
+        // `for x in &name` / `for x in name` loop headers.
+        for prefix in ["in &", "in "] {
+            let pat = format!("{prefix}{name}");
+            let mut from = 0;
+            while let Some(at) = find_bounded(line, &pat, from) {
+                let end = at + pat.len();
+                if !line.as_bytes().get(end).copied().is_some_and(is_ident_byte) {
+                    return Some(format!("for … {pat}"));
+                }
+                from = at + 1;
+            }
+        }
+    }
+    None
+}
+
+/// O1: does `line` pass an inline string (or `format!`) as an obs key?
+fn inline_obs_key(line: &str) -> Option<&'static str> {
+    for f in OBS_FNS {
+        let mut from = 0;
+        while let Some(at) = find_bounded(line, f, from) {
+            let rest = line[at + f.len()..].trim_start();
+            if let Some(args) = rest.strip_prefix('(') {
+                let args = args.trim_start();
+                if args.starts_with('"')
+                    || args.starts_with("format!")
+                    || args.starts_with("&format!")
+                {
+                    return Some(f);
+                }
+            }
+            from = at + f.len();
+        }
+    }
+    None
+}
+
+/// Scan one file's source for the line rules (D1, O1, P1). `path` is the
+/// repo-relative path the findings are reported under; the rules it
+/// selects (e.g. the obs-layer clock allowance) key off it.
+pub fn scan_source(path: &str, text: &str) -> Vec<Finding> {
+    let in_obs = path.starts_with("rust/src/obs/");
+    let mut findings = Vec::new();
+    let mut tracked: BTreeSet<String> = BTreeSet::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line_no = lineno + 1;
+        let trimmed = raw.trim();
+        if trimmed.starts_with("#[cfg(test)") {
+            break;
+        }
+        if trimmed.starts_with("//") {
+            continue;
+        }
+        let snip = trimmed.to_string();
+
+        if !clock_allowed(path) {
+            for tok in CLOCK_TOKENS {
+                if raw.contains(tok) {
+                    findings.push(Finding {
+                        rule: Rule::D1,
+                        path: path.to_string(),
+                        line: line_no,
+                        message: format!(
+                            "wall-clock read `{tok}` in a seeded path — move timing into the \
+                             obs layer or allowlist it"
+                        ),
+                        snippet: snip.clone(),
+                    });
+                }
+            }
+        }
+
+        update_tracked(raw, &mut tracked);
+        if let Some(pat) = hash_iteration(raw, &tracked) {
+            findings.push(Finding {
+                rule: Rule::D1,
+                path: path.to_string(),
+                line: line_no,
+                message: format!(
+                    "iteration over a HashMap/HashSet (`{pat}`) — order is per-process \
+                     random; collect + sort, or use a BTreeMap"
+                ),
+                snippet: snip.clone(),
+            });
+        }
+
+        if !in_obs {
+            if let Some(f) = inline_obs_key(raw) {
+                findings.push(Finding {
+                    rule: Rule::O1,
+                    path: path.to_string(),
+                    line: line_no,
+                    message: format!(
+                        "inline string key at `{f}(…)` — name the key in obs::keys and use \
+                         the constant"
+                    ),
+                    snippet: snip.clone(),
+                });
+            }
+        }
+
+        for tok in PANIC_TOKENS {
+            // Method tokens start with `.` and follow an expression, so a
+            // plain substring match is the right check; `panic!(` needs the
+            // word boundary so `some_panic!(` variants don't slip in.
+            let hit = if tok.starts_with('.') {
+                raw.contains(tok)
+            } else {
+                find_bounded(raw, tok, 0).is_some()
+            };
+            if hit {
+                findings.push(Finding {
+                    rule: Rule::P1,
+                    path: path.to_string(),
+                    line: line_no,
+                    message: format!(
+                        "`{tok}` in library code — propagate a Result (or allowlist with a \
+                         justification)",
+                    ),
+                    snippet: snip.clone(),
+                });
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_find_respects_word_starts() {
+        assert_eq!(find_bounded("print_span(x)", "span", 0), None);
+        assert_eq!(find_bounded("obs::span(x)", "span", 0), Some(5));
+    }
+
+    #[test]
+    fn tracking_honours_shadowing() {
+        let mut t = BTreeSet::new();
+        update_tracked("let mut chosen = std::collections::HashSet::new();", &mut t);
+        assert!(t.contains("chosen"));
+        update_tracked("let mut chosen: Vec<u32> = chosen.into_iter().collect();", &mut t);
+        assert!(!t.contains("chosen"));
+    }
+
+    #[test]
+    fn field_declarations_are_tracked() {
+        let mut t = BTreeSet::new();
+        update_tracked("    entries: HashMap<u64, QTensor>,", &mut t);
+        assert!(t.contains("entries"));
+        assert!(hash_iteration("self.entries.values().sum()", &t).is_some());
+        assert!(hash_iteration("self.entries.get(&k)", &t).is_none());
+    }
+}

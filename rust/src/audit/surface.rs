@@ -1,0 +1,266 @@
+//! Rule C1: three-way config-surface symmetry.
+//!
+//! The same knob is spelled three ways — a `--flag` parsed in `main.rs`, a
+//! TOML key read in `config/mod.rs` (or `multigpu/worker.rs`), and a
+//! `key = value` mention (live or commented) in `configs/*.toml` that
+//! documents it. Any knob present in one spelling and missing in another
+//! is exactly how config drift ships: a flag nobody can set from a file,
+//! or a file key silently ignored. C1 extracts all three surfaces
+//! syntactically and cross-references them.
+//!
+//! Flag names normalise `-` to `_`; the one deliberate rename
+//! (`--metrics-out` ↔ `[metrics] out`) is a built-in alias. Knobs that
+//! are CLI-only by design (`--config` itself, `repro` effort knobs) live
+//! in `audit.allow.toml`.
+
+use super::{Finding, Rule};
+use std::collections::BTreeSet;
+
+/// Deliberate flag↔key renames: `(normalised flag, TOML key)`.
+const ALIASES: [(&str, &str); 1] = [("metrics_out", "out")];
+
+/// One extracted config symbol with where it was first seen.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Extracted {
+    /// Symbol as written (flag names keep their dashes).
+    pub name: String,
+    /// Repo-relative file it was extracted from.
+    pub file: String,
+    /// 1-based line of the first occurrence.
+    pub line: usize,
+}
+
+/// Non-test, non-comment lines of a Rust source file.
+fn code_lines(text: &str) -> impl Iterator<Item = (usize, &str)> {
+    text.lines()
+        .enumerate()
+        .take_while(|(_, l)| !l.trim().starts_with("#[cfg(test)"))
+        .filter(|(_, l)| !l.trim().starts_with("//"))
+        .map(|(i, l)| (i + 1, l))
+}
+
+/// Read a leading `"quoted"` string (after optional whitespace).
+fn quoted_prefix(s: &str) -> Option<&str> {
+    let rest = s.trim_start().strip_prefix('"')?;
+    rest.find('"').map(|end| &rest[..end])
+}
+
+/// Extract the `--flag` names `main.rs` consults, by its accessor idioms:
+/// `args.flags.get/contains_key`, `args.get/get_bool/get_as/try_get_as`,
+/// and the local `flag(args, "…")` helper.
+pub fn extract_cli_flags(file: &str, text: &str) -> Vec<Extracted> {
+    const PATTERNS: [&str; 7] = [
+        "args.flags.get(",
+        "args.flags.contains_key(",
+        "args.get_bool(",
+        "args.get(",
+        "args.get_as(",
+        "args.try_get_as(",
+        "flag(args,",
+    ];
+    let mut out: Vec<Extracted> = Vec::new();
+    for (line_no, line) in code_lines(text) {
+        for pat in PATTERNS {
+            let mut from = 0;
+            while let Some(rel) = line.get(from..).and_then(|s| s.find(pat)) {
+                let after = from + rel + pat.len();
+                if let Some(name) = quoted_prefix(&line[after..]) {
+                    if !out.iter().any(|e| e.name == name) {
+                        out.push(Extracted {
+                            name: name.to_string(),
+                            file: file.to_string(),
+                            line: line_no,
+                        });
+                    }
+                }
+                from = after;
+            }
+        }
+    }
+    out
+}
+
+/// Extract the TOML keys a config reader consults: `doc.get("sec", "key")`
+/// (two quoted args — take the key) and the curried `get("key")` closure
+/// idiom (one quoted arg, closed immediately).
+pub fn extract_toml_keys(file: &str, text: &str) -> Vec<Extracted> {
+    let mut out: Vec<Extracted> = Vec::new();
+    let mut push = |name: &str, file: &str, line: usize, out: &mut Vec<Extracted>| {
+        if !out.iter().any(|e| e.name == name) {
+            out.push(Extracted { name: name.to_string(), file: file.to_string(), line });
+        }
+    };
+    for (line_no, line) in code_lines(text) {
+        let mut from = 0;
+        while let Some(rel) = line.get(from..).and_then(|s| s.find("get(")) {
+            let at = from + rel;
+            from = at + 4;
+            // Word boundary: `get(` but not `target(` etc.
+            let prev = if at > 0 { Some(line.as_bytes()[at - 1]) } else { None };
+            if prev.is_some_and(|b| b == b'_' || b.is_ascii_alphanumeric()) {
+                continue;
+            }
+            let args = &line[at + 4..];
+            let Some(first) = quoted_prefix(args) else { continue };
+            let after_first = args.trim_start();
+            // Skip the opening quote, the content and the closing quote.
+            let rest = &after_first[first.len() + 2..];
+            let rest = rest.trim_start();
+            if let Some(two) = rest.strip_prefix(',') {
+                if let Some(second) = quoted_prefix(two) {
+                    push(second, file, line_no, &mut out);
+                }
+                // `doc.get("train", k)` — dynamic key, the closure idiom
+                // below captures its call sites instead.
+            } else if rest.starts_with(')') {
+                push(first, file, line_no, &mut out);
+            }
+        }
+    }
+    out
+}
+
+/// Extract the key names mentioned in a `configs/*.toml` text — live
+/// `key = value` lines and commented `# key = value` documentation lines.
+pub fn extract_mentions(text: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for raw in text.lines() {
+        let mut s = raw.trim_start();
+        s = s.strip_prefix('#').unwrap_or(s).trim_start();
+        let Some(eq) = s.find('=') else { continue };
+        let name = s[..eq].trim_end();
+        if !name.is_empty()
+            && name.bytes().all(|b| b == b'_' || b.is_ascii_alphanumeric())
+            && !name.as_bytes()[0].is_ascii_digit()
+        {
+            out.insert(name.to_string());
+        }
+    }
+    out
+}
+
+/// Flag name → the canonical TOML spelling it must appear as.
+fn canonical(flag: &str) -> String {
+    let norm = flag.replace('-', "_");
+    for (f, k) in ALIASES {
+        if norm == f {
+            return k.to_string();
+        }
+    }
+    norm
+}
+
+/// Cross-reference the three surfaces and emit a C1 finding per asymmetry.
+pub fn check_surface(
+    flags: &[Extracted],
+    keys: &[Extracted],
+    mentions: &BTreeSet<String>,
+) -> Vec<Finding> {
+    let key_names: BTreeSet<&str> = keys.iter().map(|e| e.name.as_str()).collect();
+    let flag_canon: BTreeSet<String> = flags.iter().map(|e| canonical(&e.name)).collect();
+    let mut findings = Vec::new();
+    for e in flags {
+        let canon = canonical(&e.name);
+        if !key_names.contains(canon.as_str()) {
+            findings.push(Finding {
+                rule: Rule::C1,
+                path: e.file.clone(),
+                line: e.line,
+                message: format!(
+                    "flag --{} has no matching TOML key `{canon}` in the config readers",
+                    e.name
+                ),
+                snippet: format!("--{}", e.name),
+            });
+        }
+        if !mentions.contains(canon.as_str()) {
+            findings.push(Finding {
+                rule: Rule::C1,
+                path: e.file.clone(),
+                line: e.line,
+                message: format!(
+                    "flag --{} is not mentioned (even commented) as `{canon} =` in configs/*.toml",
+                    e.name
+                ),
+                snippet: format!("--{}", e.name),
+            });
+        }
+    }
+    for e in keys {
+        if !flag_canon.contains(&e.name) {
+            findings.push(Finding {
+                rule: Rule::C1,
+                path: e.file.clone(),
+                line: e.line,
+                message: format!("TOML key `{}` has no matching --flag in main.rs", e.name),
+                snippet: e.name.clone(),
+            });
+        }
+        if !mentions.contains(&e.name) {
+            findings.push(Finding {
+                rule: Rule::C1,
+                path: e.file.clone(),
+                line: e.line,
+                message: format!(
+                    "TOML key `{}` is not mentioned (even commented) in configs/*.toml",
+                    e.name
+                ),
+                snippet: e.name.clone(),
+            });
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_and_keys_extract_from_idioms() {
+        let flags = extract_cli_flags(
+            "m.rs",
+            "cfg.epochs = flag(args, \"epochs\", cfg.epochs)?;\nif args.get_bool(\"quick\") {}",
+        );
+        let names: Vec<&str> = flags.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["epochs", "quick"]);
+
+        let keys = extract_toml_keys(
+            "c.rs",
+            concat!(
+                "let get = |k: &str| doc.get(\"train\", k);\n",
+                "get(\"lr\")\n",
+                "doc.get(\"policy\", \"bucket_bits\")"
+            ),
+        );
+        let names: Vec<&str> = keys.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["lr", "bucket_bits"]);
+    }
+
+    #[test]
+    fn mentions_include_commented_keys() {
+        let m = extract_mentions("[train]\nlr = 0.1\n# heads = 4\n# not a key line\n");
+        assert!(m.contains("lr") && m.contains("heads"));
+        assert!(!m.contains("not"));
+    }
+
+    #[test]
+    fn asymmetries_fire_per_direction() {
+        let flags = vec![Extracted { name: "only-flag".into(), file: "m.rs".into(), line: 3 }];
+        let keys = vec![Extracted { name: "only_key".into(), file: "c.rs".into(), line: 9 }];
+        let mentions = BTreeSet::new();
+        let f = check_surface(&flags, &keys, &mentions);
+        assert_eq!(f.len(), 4); // each side: missing counterpart + missing mention
+        assert!(f.iter().all(|x| x.rule == Rule::C1));
+        assert_eq!(f[0].line, 3);
+        assert_eq!(f[2].line, 9);
+    }
+
+    #[test]
+    fn metrics_out_alias_is_symmetric() {
+        let flags = vec![Extracted { name: "metrics-out".into(), file: "m.rs".into(), line: 1 }];
+        let keys = vec![Extracted { name: "out".into(), file: "c.rs".into(), line: 1 }];
+        let mentions: BTreeSet<String> = ["out".to_string()].into_iter().collect();
+        assert!(check_surface(&flags, &keys, &mentions).is_empty());
+    }
+}

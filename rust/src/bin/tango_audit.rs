@@ -1,0 +1,48 @@
+//! `tango-audit` — run the repo's static-analysis pass from the CLI.
+//!
+//! ```text
+//! tango_audit [--root DIR] [--json PATH] [--deny-warnings]
+//! ```
+//!
+//! Exit code 0 iff no findings survive `audit.allow.toml` (and, under
+//! `--deny-warnings`, no warnings — e.g. stale allowlist entries).
+//! `--json PATH` additionally writes the `tango-audit/v1` report.
+//! Rules and allowlist format: `rust/src/audit/README.md`.
+
+use std::path::Path;
+use tango::audit::{self, Allowlist};
+use tango::util::cli::Args;
+
+fn run() -> tango::Result<bool> {
+    let args = Args::from_env();
+    let root = args.get("root", ".").to_string();
+    let deny_warnings = args.get_bool("deny-warnings");
+    let root = Path::new(&root);
+
+    let allow_path = root.join("audit.allow.toml");
+    let allow = if allow_path.is_file() {
+        let text = std::fs::read_to_string(&allow_path)?;
+        Allowlist::parse(&text).map_err(|e| anyhow::anyhow!("audit.allow.toml: {e}"))?
+    } else {
+        Allowlist::empty()
+    };
+
+    let report = audit::run(root, &allow)?;
+    print!("{}", report.render_text());
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, report.to_json().to_string() + "\n")?;
+        println!("report: {path}");
+    }
+    Ok(report.ok(deny_warnings))
+}
+
+fn main() {
+    match run() {
+        Ok(true) => {}
+        Ok(false) => std::process::exit(1),
+        Err(e) => {
+            eprintln!("tango-audit error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -77,7 +77,15 @@ pub fn modelled_costs(edges: usize, heads: usize, dim: usize, costs: &AdaptiveCo
 /// `heads` heads of width `dim` each.
 pub fn choose_spmm_kernel(edges: usize, heads: usize, dim: usize, costs: &AdaptiveCosts) -> SpmmKernel {
     let all = modelled_costs(edges, heads, dim, costs);
-    all.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap().0
+    // First strict minimum over a fixed-size non-empty array (same tie-break
+    // as `min_by`), without the unwrap the iterator API would force.
+    let mut best = all[0];
+    for cand in &all[1..] {
+        if cand.1 < best.1 {
+            best = *cand;
+        }
+    }
+    best.0
 }
 
 #[cfg(test)]

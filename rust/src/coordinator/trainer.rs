@@ -124,11 +124,8 @@ impl Trainer {
     /// Build everything from a config (loads the dataset, derives bits if
     /// requested, initialises the model).
     pub fn from_config(cfg: &TrainConfig) -> crate::Result<Self> {
-        let data = if cfg.dataset == "tiny" {
-            datasets::tiny(cfg.seed)
-        } else {
-            datasets::load_by_name(&cfg.dataset, cfg.seed)
-        };
+        let data = datasets::load_by_name_checked(&cfg.dataset, cfg.seed)
+            .map_err(|e| anyhow::anyhow!(e))?;
         Self::with_dataset(cfg.clone(), data)
     }
 
@@ -207,11 +204,11 @@ impl Trainer {
         let mut stages = Vec::with_capacity(self.cfg.epochs);
         let mut wall = 0.0f64;
         for epoch in 0..self.cfg.epochs {
-            let _epoch_span = crate::obs::span("epoch");
+            let _epoch_span = crate::obs::span(crate::obs::keys::SPAN_EPOCH);
             let t_epoch = std::time::Instant::now();
             let (loss, secs) = crate::metrics::time_once(|| self.train_epoch(epoch as u64));
             let (eval, eval_s) = crate::metrics::time_once(|| {
-                let _s = crate::obs::span("eval");
+                let _s = crate::obs::span(crate::obs::keys::SPAN_EVAL);
                 self.evaluate()
             });
             let wall_s = t_epoch.elapsed().as_secs_f64();
@@ -256,7 +253,7 @@ impl Trainer {
     /// model — see `model/mod.rs`). Destructuring `self` gives the model,
     /// optimizer and dataset disjoint borrows, so nothing is cloned.
     fn train_epoch(&mut self, epoch: u64) -> f32 {
-        let _compute_span = crate::obs::span("compute");
+        let _compute_span = crate::obs::span(crate::obs::keys::SPAN_COMPUTE);
         let Trainer { task, model, opt, data, cfg, .. } = self;
         match task {
             Task::NodeClassification => {

@@ -175,9 +175,25 @@ pub fn load(spec: &DatasetSpec, seed: u64) -> Dataset {
     }
 }
 
-/// Load by name with the default seed. Panics on unknown names.
+/// Load by name with the default seed. Panics on unknown names — test and
+/// bench convenience only; library paths use [`load_by_name_checked`].
 pub fn load_by_name(name: &str, seed: u64) -> Dataset {
     load(spec(name).unwrap_or_else(|| panic!("unknown dataset {name}")), seed)
+}
+
+/// Load by name (including the test-scale `"tiny"`), reporting unknown
+/// names as an actionable error instead of panicking.
+pub fn load_by_name_checked(name: &str, seed: u64) -> Result<Dataset, String> {
+    if name.eq_ignore_ascii_case("tiny") {
+        return Ok(tiny(seed));
+    }
+    match spec(name) {
+        Some(s) => Ok(load(s, seed)),
+        None => Err(format!(
+            "unknown dataset {name:?}; known: tiny, {}",
+            SPECS.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+        )),
+    }
 }
 
 /// A miniature dataset for unit tests and the quickstart example.
@@ -206,6 +222,14 @@ mod tests {
         }
         assert!(spec("pubmed").is_some(), "case-insensitive lookup");
         assert!(spec("nope").is_none());
+    }
+
+    #[test]
+    fn checked_loader_resolves_and_reports() {
+        assert_eq!(load_by_name_checked("tiny", 1).unwrap().name, "tiny");
+        assert_eq!(load_by_name_checked("Pubmed", 1).unwrap().name, "Pubmed");
+        let err = load_by_name_checked("nope", 1).unwrap_err();
+        assert!(err.contains("unknown dataset") && err.contains("Pubmed"), "{err}");
     }
 
     #[test]

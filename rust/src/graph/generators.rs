@@ -53,6 +53,12 @@ pub fn power_law(num_nodes: usize, edges_per_node: usize, seed: u64) -> Coo {
             let t = targets[(rng.next_u64() % targets.len() as u64) as usize];
             chosen.insert(t);
         }
+        // HashSet iteration order varies per process (random hasher seed);
+        // the edge list feeds every downstream RNG-consuming stage, so emit
+        // the chosen targets in sorted order to keep graphs bit-identical
+        // across runs (audit rule D1).
+        let mut chosen: Vec<u32> = chosen.into_iter().collect();
+        chosen.sort_unstable();
         for &t in &chosen {
             src.push(v as u32);
             dst.push(t);
@@ -157,6 +163,28 @@ mod tests {
         let avg = g.num_edges() as f64 / 2000.0;
         // A heavy tail: hub degree far above the average.
         assert!(max > 10.0 * avg, "max={max} avg={avg}");
+    }
+
+    #[test]
+    fn power_law_deterministic_and_sorted_per_node() {
+        // Regression for the D1 bug class: edge emission used to iterate a
+        // HashSet, whose order changes per process. Same-process equality
+        // alone cannot catch that, so also pin the per-node target order
+        // to be sorted — a process-independent property.
+        let a = power_law(300, 3, 9);
+        let b = power_law(300, 3, 9);
+        assert_eq!(a, b);
+        let mut i = 0;
+        while i < a.num_edges() {
+            let v = a.src[i];
+            let mut j = i;
+            while j < a.num_edges() && a.src[j] == v {
+                j += 1;
+            }
+            let block = &a.dst[i..j];
+            assert!(block.windows(2).all(|w| w[0] < w[1]), "node {v} targets unsorted: {block:?}");
+            i = j;
+        }
     }
 
     #[test]

@@ -45,6 +45,14 @@
 //!   via `TANGO_TRACE=0`, so bit-identity and bench numbers are
 //!   unaffected), an analytical GPU cost model, and the PJRT runtime
 //!   that executes jax-lowered artifacts.
+//! - **Static analysis** — [`audit`] and the `tango_audit` binary: a
+//!   zero-dependency, repo-specific pass over `rust/src/**` that enforces
+//!   the invariants the compiler cannot see — determinism (no stray
+//!   clocks, no hash-order iteration; rule D1), the central obs-key
+//!   registry ([`obs::keys`]; rule O1), config-surface symmetry between
+//!   `--flags`, TOML keys and `configs/*.toml` (rule C1), and no panic
+//!   paths in library code (rule P1) — with vetted exceptions in
+//!   `audit.allow.toml`. CI runs it as a blocking job.
 //! - **Layer 2 (`python/compile/model.py`)** — GCN/GAT forward/backward in
 //!   JAX, AOT-lowered to HLO text under `artifacts/`.
 //! - **Layer 1 (`python/compile/kernels/`)** — Pallas kernels (quantize,
@@ -65,6 +73,7 @@
 //! println!("final accuracy: {:.4}", report.final_eval);
 //! ```
 
+pub mod audit;
 pub mod config;
 pub mod coordinator;
 pub mod graph;

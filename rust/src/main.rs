@@ -142,6 +142,15 @@ fn config_text(args: &Args) -> tango::Result<Option<String>> {
     }
 }
 
+/// Parse a `--flag` override through the binary's `Result` exit path, so a
+/// malformed value prints one clear error instead of a panic backtrace.
+fn flag<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> tango::Result<T>
+where
+    T::Err: std::fmt::Debug,
+{
+    args.try_get_as(key, default).map_err(|e| anyhow::anyhow!(e))
+}
+
 fn train_config_from(args: &Args) -> tango::Result<TrainConfig> {
     train_config_with_toml(args, config_text(args)?.as_deref())
 }
@@ -159,13 +168,13 @@ fn train_config_with_toml(args: &Args, toml: Option<&str>) -> tango::Result<Trai
     if let Some(d) = args.flags.get("dataset") {
         cfg.dataset = d.clone();
     }
-    cfg.epochs = args.get_as("epochs", cfg.epochs);
-    cfg.lr = args.get_as("lr", cfg.lr);
-    cfg.hidden = args.get_as("hidden", cfg.hidden);
-    cfg.heads = args.get_as("heads", cfg.heads);
-    cfg.layers = args.get_as("layers", cfg.layers);
-    cfg.seed = args.get_as("seed", cfg.seed);
-    let bits: u8 = args.get_as("bits", cfg.mode.bits);
+    cfg.epochs = flag(args, "epochs", cfg.epochs)?;
+    cfg.lr = flag(args, "lr", cfg.lr)?;
+    cfg.hidden = flag(args, "hidden", cfg.hidden)?;
+    cfg.heads = flag(args, "heads", cfg.heads)?;
+    cfg.layers = flag(args, "layers", cfg.layers)?;
+    cfg.seed = flag(args, "seed", cfg.seed)?;
+    let bits: u8 = flag(args, "bits", cfg.mode.bits)?;
     if let Some(m) = args.flags.get("mode") {
         cfg.mode = parse_mode(m, bits).map_err(|e| anyhow::anyhow!(e))?;
     } else {
@@ -185,13 +194,13 @@ fn train_config_with_toml(args: &Args, toml: Option<&str>) -> tango::Result<Trai
     if let Some(f) = args.flags.get("fanouts") {
         cfg.sampler.fanouts = tango::config::parse_fanouts(f).map_err(|e| anyhow::anyhow!(e))?;
     }
-    cfg.sampler.batch_size = args.get_as("batch-size", cfg.sampler.batch_size);
-    cfg.sampler.seed = args.get_as("sample-seed", cfg.sampler.seed);
-    cfg.sampler.cache_nodes = args.get_as("cache-nodes", cfg.sampler.cache_nodes);
+    cfg.sampler.batch_size = flag(args, "batch-size", cfg.sampler.batch_size)?;
+    cfg.sampler.seed = flag(args, "sample-seed", cfg.sampler.seed)?;
+    cfg.sampler.cache_nodes = flag(args, "cache-nodes", cfg.sampler.cache_nodes)?;
     if args.flags.contains_key("cache-nodes") && cfg.sampler.cache_nodes == 0 {
         anyhow::bail!("--cache-nodes must be >= 1 (omit the flag for an unbounded cache)");
     }
-    cfg.sampler.prefetch = args.get_as("prefetch", cfg.sampler.prefetch);
+    cfg.sampler.prefetch = flag(args, "prefetch", cfg.sampler.prefetch)?;
     if let Some(s) = args.flags.get("degree-buckets") {
         cfg.policy.degree_buckets =
             tango::config::parse_degree_buckets(s).map_err(|e| anyhow::anyhow!(e))?;
@@ -207,7 +216,7 @@ fn train_config_with_toml(args: &Args, toml: Option<&str>) -> tango::Result<Trai
     if let Some(p) = args.flags.get("metrics-out") {
         cfg.metrics.out = Some(p.clone());
     }
-    cfg.log_every = args.get_as("log-every", 10);
+    cfg.log_every = flag(args, "log-every", 10)?;
     // Reject degenerate knob combinations (e.g. `--batch-size 0`) with an
     // actionable message instead of panicking mid-run.
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
@@ -296,9 +305,9 @@ fn cmd_train(args: &Args) -> tango::Result<()> {
 fn cmd_repro(args: &Args) -> tango::Result<()> {
     let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let cfg = ReproConfig {
-        epochs: args.get_as("epochs", 30),
-        speed_epochs: args.get_as("speed-epochs", 5),
-        seed: args.get_as("seed", 42),
+        epochs: flag(args, "epochs", 30)?,
+        speed_epochs: flag(args, "speed-epochs", 5)?,
+        seed: flag(args, "seed", 42)?,
         quick: args.get_bool("quick"),
     };
     for table in repro::run(id, &cfg)? {
@@ -334,7 +343,11 @@ fn cmd_artifacts(args: &Args) -> tango::Result<()> {
     println!("artifacts in {dir}:");
     let names: Vec<String> = rt.names().iter().map(|s| s.to_string()).collect();
     for name in &names {
-        let spec = rt.manifest.get(name).unwrap().clone();
+        let spec = rt
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name} listed but missing from manifest"))?
+            .clone();
         println!(
             "  {:<22} {} inputs, {} outputs — {}",
             spec.name,
@@ -344,7 +357,11 @@ fn cmd_artifacts(args: &Args) -> tango::Result<()> {
         );
     }
     // Smoke-run the quantize artifact (smallest).
-    let spec = rt.manifest.get("quantize8").unwrap().clone();
+    let spec = rt
+        .manifest
+        .get("quantize8")
+        .ok_or_else(|| anyhow::anyhow!("manifest in {dir} has no quantize8 artifact"))?
+        .clone();
     let shape = spec.inputs[0].shape.clone();
     let x = tango::graph::generators::random_features(shape[0], shape[1], 7);
     let out = rt.run("quantize8", &[tango::runtime::Value::F32(x)])?;
@@ -357,20 +374,17 @@ fn cmd_multigpu(args: &Args) -> tango::Result<()> {
     // and the [train] TOML keys) are the unified ones `tango train` reads.
     let toml = config_text(args)?;
     let train = train_config_with_toml(args, toml.as_deref())?;
-    let data = if train.dataset == "tiny" {
-        tango::graph::datasets::tiny(train.seed)
-    } else {
-        tango::graph::datasets::load_by_name(&train.dataset, train.seed)
-    };
+    let data = tango::graph::datasets::load_by_name_checked(&train.dataset, train.seed)
+        .map_err(|e| anyhow::anyhow!(e))?;
     let mut cfg = MultiGpuConfig::new(train);
     if let Some(text) = &toml {
         cfg.apply_toml(text).map_err(|e| anyhow::anyhow!(e))?;
     }
-    cfg.workers = args.get_as("workers", cfg.workers);
-    cfg.epochs = args.get_as("epochs", cfg.epochs);
+    cfg.workers = flag(args, "workers", cfg.workers)?;
+    cfg.epochs = flag(args, "epochs", cfg.epochs)?;
     // A `[multigpu] prefetch` key overrides `[train]`'s — but the CLI flag
     // wins over both (same precedence as --workers/--epochs above).
-    cfg.train.sampler.prefetch = args.get_as("prefetch", cfg.train.sampler.prefetch);
+    cfg.train.sampler.prefetch = flag(args, "prefetch", cfg.train.sampler.prefetch)?;
     if args.get_bool("quantize-grads") {
         cfg.quantize_grads = true;
     }

@@ -68,12 +68,13 @@ pub fn ring_allreduce(grads: &mut [Vec<f32>], quantize_payload: bool, seed: u64)
 /// FP32 payloads untouched, `Some(b)` quantizes each worker's contribution
 /// to `b` bits before "transfer" (`Some(8)` is exactly the INT8 path).
 pub fn ring_allreduce_bits(grads: &mut [Vec<f32>], bits: Option<u8>, seed: u64) {
-    let _t = crate::obs::timed("allreduce.ring");
+    let _t = crate::obs::timed(crate::obs::keys::TIMED_ALLREDUCE_RING);
     let k = grads.len();
     if k == 0 {
         return;
     }
-    crate::obs::counter_add("multigpu.allreduce_elems", (k * grads[0].len()) as u64);
+    let elems = (k * grads[0].len()) as u64;
+    crate::obs::counter_add(crate::obs::keys::CTR_MULTIGPU_ALLREDUCE_ELEMS, elems);
     let n = grads[0].len();
     assert!(grads.iter().all(|g| g.len() == n), "ragged gradients");
     // Reduce: sum of (possibly wire-quantized) contributions.

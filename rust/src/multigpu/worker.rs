@@ -277,7 +277,8 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
             )
         })
         .collect();
-    let grad_elems = workers[0].lock().unwrap().model.num_params();
+    let grad_elems =
+        workers[0].lock().unwrap_or_else(|e| e.into_inner()).model.num_params();
     let prefetch = train.sampler.prefetch;
     // Quantized gradient exchange rides at the run's quantized width
     // (INT8 by default; sub-byte modes pack sub-byte wire elements). FP32
@@ -297,7 +298,7 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
         // The whole epoch runs inside one thread scope: each worker's
         // stage-one producer prefetches its shard's batches while the
         // synchronous step rounds below consume them.
-        let _epoch_span = crate::obs::span("mg_epoch");
+        let _epoch_span = crate::obs::span(crate::obs::keys::SPAN_MG_EPOCH);
         // One shared stage-one time account for the epoch: every worker's
         // producer charges into it (atomics), so `EpochStats` reports the
         // summed sample/gather work across all workers.
@@ -348,12 +349,14 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                     }
                     let t_wait = Instant::now();
                     let prepared = match &sources[w] {
-                        BatchSource::Inline(stage) => stage.lock().unwrap().prepare(
-                            &batches[w][step],
-                            mix_seeds(&[epoch as u64, step as u64]),
-                        ),
+                        BatchSource::Inline(stage) => {
+                            stage.lock().unwrap_or_else(|e| e.into_inner()).prepare(
+                                &batches[w][step],
+                                mix_seeds(&[epoch as u64, step as u64]),
+                            )
+                        }
                         BatchSource::Prefetched(handle) => {
-                            match handle.lock().unwrap().recv() {
+                            match handle.lock().unwrap_or_else(|e| e.into_inner()).recv() {
                                 Ok(Some(p)) => p,
                                 Ok(None) => {
                                     return Some(Err(anyhow::anyhow!(
@@ -365,9 +368,9 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                         }
                     };
                     let wait = t_wait.elapsed().as_secs_f64();
-                    let mut guard = workers[w].lock().unwrap();
+                    let mut guard = workers[w].lock().unwrap_or_else(|e| e.into_inner());
                     let ws = &mut *guard;
-                    let _step_span = crate::obs::span("worker_step");
+                    let _step_span = crate::obs::span(crate::obs::keys::SPAN_WORKER_STEP);
                     let t0 = Instant::now();
                     let before = ws.model.params_flat();
                     let loss = match &prepared.target {
@@ -433,7 +436,10 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                 // elements plus per-chunk scales, FP32 payloads 4-byte
                 // elements.
                 let bytes = allreduce_payload_bits(grad_elems, k, wire_bits);
-                crate::obs::counter_add("multigpu.allreduce_wire_bytes", bytes as u64);
+                crate::obs::counter_add(
+                    crate::obs::keys::CTR_MULTIGPU_ALLREDUCE_WIRE_BYTES,
+                    bytes as u64,
+                );
                 comm_s += cfg.interconnect.transfer_time(bytes, ring_messages(k), k);
                 // Apply the averaged gradient everywhere. A single FP32
                 // worker already holds exactly this state (mean of one
@@ -445,7 +451,7 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                         *pi -= train.lr * gi;
                     }
                     for ws in &workers {
-                        ws.lock().unwrap().model.set_params_flat(&p);
+                        ws.lock().unwrap_or_else(|e| e.into_inner()).model.set_params_flat(&p);
                     }
                 }
             }
@@ -464,7 +470,7 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
     }
     let (cache, cache_bytes, policy) = match store {
         Some(m) => {
-            let s = m.into_inner().unwrap();
+            let s = m.into_inner().unwrap_or_else(|e| e.into_inner());
             (Some(s.stats()), s.cached_bytes(), Some(s.policy_report()))
         }
         None => (None, 0, None),

@@ -1,0 +1,123 @@
+//! Central registry of every observability key string.
+//!
+//! The metrics artifact (`tango-metrics/v1`) is a consumed schema: span
+//! paths, counter names and gauge names end up in JSON that downstream
+//! tooling (and `tests/metrics_schema.rs`) keys on. An inline string at a
+//! call site can drift — renamed in one place, stale in the artifact —
+//! without any compiler help. So every `span` / `timed` / `counter_add` /
+//! `gauge_set` key lives here as a named constant, and the `tango-audit`
+//! O1 rule rejects string literals at obs call sites outside this module.
+//!
+//! Dynamic keys (the per-bucket `Error_X` gauges) get constructor
+//! functions instead of constants, keeping the naming scheme pinned in
+//! exactly one place.
+
+// ---- hierarchical span segments (obs::span) --------------------------------
+
+/// Per-epoch span enclosing one full training epoch (full-graph + sampled).
+pub const SPAN_EPOCH: &str = "epoch";
+/// Held-out evaluation inside an epoch (`epoch/eval` in the artifact).
+pub const SPAN_EVAL: &str = "eval";
+/// Model forward/backward/step over one batch (`epoch/compute`).
+pub const SPAN_COMPUTE: &str = "compute";
+/// Per-epoch span of the multi-GPU coordinator loop.
+pub const SPAN_MG_EPOCH: &str = "mg_epoch";
+/// One worker's compute+allreduce step inside `mg_epoch`.
+pub const SPAN_WORKER_STEP: &str = "worker_step";
+/// Producer-side stage-1 (sample + quantized gather) in the prefetch pipeline.
+pub const SPAN_STAGE1: &str = "stage1";
+/// Neighbor sampling inside `stage1` (or inline when prefetch is off).
+pub const SPAN_SAMPLE: &str = "sample";
+/// Quantized feature gather inside `stage1` (or inline).
+pub const SPAN_GATHER: &str = "gather";
+
+// ---- flat per-call histograms (obs::timed) ---------------------------------
+
+/// Ring all-reduce of one gradient tensor.
+pub const TIMED_ALLREDUCE_RING: &str = "allreduce.ring";
+/// Edge-weighted FP32 SPMM.
+pub const TIMED_PRIM_SPMM_EDGE_WEIGHTED: &str = "prim.spmm.edge_weighted";
+/// Edge-weighted SPMM over quantized features.
+pub const TIMED_PRIM_QSPMM_EDGE_WEIGHTED: &str = "prim.qspmm.edge_weighted";
+/// CSR-ordered FP32 SPMM.
+pub const TIMED_PRIM_SPMM_CSR: &str = "prim.spmm.csr";
+/// Quantize-then-multiply GEMM.
+pub const TIMED_PRIM_QGEMM: &str = "prim.qgemm";
+/// GEMM over an already-quantized left operand.
+pub const TIMED_PRIM_QGEMM_PREQUANTIZED: &str = "prim.qgemm.prequantized";
+/// Multi-layer neighbor-block sampling for one minibatch.
+pub const TIMED_SAMPLER_SAMPLE_BLOCKS: &str = "sampler.sample_blocks";
+
+// ---- counters (obs::counter_add) -------------------------------------------
+
+/// Bytes actually moved on the simulated wire by quantized all-reduce.
+pub const CTR_MULTIGPU_ALLREDUCE_WIRE_BYTES: &str = "multigpu.allreduce_wire_bytes";
+/// Gradient elements all-reduced.
+pub const CTR_MULTIGPU_ALLREDUCE_ELEMS: &str = "multigpu.allreduce_elems";
+/// Batches fully prepared by the prefetch producer.
+pub const CTR_PIPELINE_BATCHES_PREPARED: &str = "pipeline.batches_prepared";
+/// Feature rows gathered (cache hits + misses).
+pub const CTR_GATHER_ROWS: &str = "gather.rows";
+/// Gather rows served from the quantized cache.
+pub const CTR_GATHER_CACHE_HITS: &str = "gather.cache_hits";
+/// Gather rows quantized on demand (cache misses).
+pub const CTR_GATHER_CACHE_MISSES: &str = "gather.cache_misses";
+/// Bytes of sub-byte packed payload produced by gathers.
+pub const CTR_GATHER_PACKED_BYTES: &str = "gather.packed_bytes";
+/// Bytes after unpacking to int8 working format.
+pub const CTR_GATHER_INT8_BYTES: &str = "gather.int8_bytes";
+
+// ---- dynamic gauge families (obs::gauge_set) -------------------------------
+
+/// Gauge name for the mean quantization `Error_X` of degree bucket `b`
+/// (paper Fig. 4's per-bucket error decomposition).
+pub fn gather_error_x_bucket(b: usize) -> String {
+    format!("gather.error_x.bucket{b}")
+}
+
+/// Every static key, for schema tests and exhaustive artifact checks.
+pub const ALL_STATIC_KEYS: &[&str] = &[
+    SPAN_EPOCH,
+    SPAN_EVAL,
+    SPAN_COMPUTE,
+    SPAN_MG_EPOCH,
+    SPAN_WORKER_STEP,
+    SPAN_STAGE1,
+    SPAN_SAMPLE,
+    SPAN_GATHER,
+    TIMED_ALLREDUCE_RING,
+    TIMED_PRIM_SPMM_EDGE_WEIGHTED,
+    TIMED_PRIM_QSPMM_EDGE_WEIGHTED,
+    TIMED_PRIM_SPMM_CSR,
+    TIMED_PRIM_QGEMM,
+    TIMED_PRIM_QGEMM_PREQUANTIZED,
+    TIMED_SAMPLER_SAMPLE_BLOCKS,
+    CTR_MULTIGPU_ALLREDUCE_WIRE_BYTES,
+    CTR_MULTIGPU_ALLREDUCE_ELEMS,
+    CTR_PIPELINE_BATCHES_PREPARED,
+    CTR_GATHER_ROWS,
+    CTR_GATHER_CACHE_HITS,
+    CTR_GATHER_CACHE_MISSES,
+    CTR_GATHER_PACKED_BYTES,
+    CTR_GATHER_INT8_BYTES,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_are_unique_and_nonempty() {
+        let mut seen = std::collections::BTreeSet::new();
+        for k in ALL_STATIC_KEYS {
+            assert!(!k.is_empty());
+            assert!(seen.insert(*k), "duplicate obs key {k}");
+        }
+    }
+
+    #[test]
+    fn dynamic_gauge_names_are_stable() {
+        assert_eq!(gather_error_x_bucket(0), "gather.error_x.bucket0");
+        assert_eq!(gather_error_x_bucket(3), "gather.error_x.bucket3");
+    }
+}

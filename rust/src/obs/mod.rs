@@ -13,6 +13,8 @@
 //! - [`counter_add`] / [`gauge_set`] — named counters (rows gathered,
 //!   cache hits/misses, packed wire bytes) and gauges (per-bucket mean
 //!   `Error_X`);
+//! - [`keys`] — the central registry of span/counter/gauge key strings;
+//!   call sites name keys via these constants only (audit rule O1);
 //! - [`Histogram`] — log-bucketed latencies with `p50/p95/p99`;
 //! - [`train_artifact`] / [`multigpu_artifact`] / [`write_artifact`] — the
 //!   `--metrics-out` structured JSON run artifact.
@@ -32,6 +34,7 @@
 
 mod artifact;
 mod hist;
+pub mod keys;
 mod registry;
 mod span;
 

@@ -41,7 +41,7 @@ pub struct QGemmOutput {
 /// INT8×INT8→INT32 product, and returns the dequantized result together
 /// with the fused output scale and the quantized input copies.
 pub fn qgemm(a: &Dense<f32>, b: &Dense<f32>, bits: u8, rounding: Rounding) -> QGemmOutput {
-    let _t = crate::obs::timed("prim.qgemm");
+    let _t = crate::obs::timed(crate::obs::keys::TIMED_PRIM_QGEMM);
     assert_eq!(a.cols(), b.rows(), "qgemm inner dims");
     // "On-the-fly" on the CPU substrate: one sweep per input computing the
     // scale, one sweep rounding. (A GPU fuses these into the tile loads; the
@@ -64,7 +64,7 @@ fn derange(r: Rounding) -> Rounding {
 /// e.g. cached from the forward pass — so the kernel skips quantization
 /// entirely. Returns the dequantized result and its fused output scale.
 pub fn qgemm_prequantized(qa: &QTensor, qb: &QTensor, out_bits: u8) -> (Dense<f32>, f32) {
-    let _t = crate::obs::timed("prim.qgemm.prequantized");
+    let _t = crate::obs::timed(crate::obs::keys::TIMED_PRIM_QGEMM_PREQUANTIZED);
     let (m, k) = (qa.data.rows(), qa.data.cols());
     let (kb, n) = (qb.data.rows(), qb.data.cols());
     assert_eq!(k, kb, "qgemm inner dims: {k} vs {kb}");
@@ -122,10 +122,10 @@ pub fn qgemm_prequantized(qa: &QTensor, qb: &QTensor, out_bits: u8) -> (Dense<f3
                 local_max = local_max.max(v.abs());
             }
         }
-        let mut g = panel_max.lock().unwrap();
+        let mut g = panel_max.lock().unwrap_or_else(|e| e.into_inner());
         *g = g.max(local_max);
     });
-    let absmax = panel_max.into_inner().unwrap();
+    let absmax = panel_max.into_inner().unwrap_or_else(|e| e.into_inner());
     let qmax = ((1i32 << (out_bits - 1)) - 1) as f32;
     let out_scale = if absmax == 0.0 { 1.0 } else { absmax / qmax };
     (out, out_scale)

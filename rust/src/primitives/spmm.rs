@@ -16,7 +16,7 @@ use crate::util::par;
 /// This is forward step 5 of Fig. 1a (and, on the reversed CSR, backward
 /// step 4). `alpha: [E, H]`, `h: [N, H*D]` → `[N, H*D]`.
 pub fn spmm_edge_weighted(csr: &Csr, alpha: &Dense<f32>, h: &Dense<f32>, heads: usize) -> Dense<f32> {
-    let _t = crate::obs::timed("prim.spmm.edge_weighted");
+    let _t = crate::obs::timed(crate::obs::keys::TIMED_PRIM_SPMM_EDGE_WEIGHTED);
     let n = csr.num_nodes;
     let hd = h.cols();
     assert_eq!(alpha.cols(), heads, "alpha must be [E, heads]");
@@ -48,7 +48,7 @@ pub fn spmm_edge_weighted(csr: &Csr, alpha: &Dense<f32>, h: &Dense<f32>, heads: 
 /// 4-byte elements; accumulation is i32; a single fused `s_α·s_h` multiply
 /// dequantizes the output.
 pub fn qspmm_edge_weighted(csr: &Csr, qalpha: &QTensor, qh: &QTensor, heads: usize) -> Dense<f32> {
-    let _t = crate::obs::timed("prim.qspmm.edge_weighted");
+    let _t = crate::obs::timed(crate::obs::keys::TIMED_PRIM_QSPMM_EDGE_WEIGHTED);
     let n = csr.num_nodes;
     let hd = qh.data.cols();
     let d = hd / heads;
@@ -78,7 +78,7 @@ pub fn qspmm_edge_weighted(csr: &Csr, qalpha: &QTensor, qh: &QTensor, heads: usi
 /// Two-matrix CSR SPMM, cuSPARSE-shaped: `out = A · X` where `A`'s stored
 /// values are `values[edge_id]` (a single scalar per edge, no heads).
 pub fn spmm_csr_values(csr: &Csr, values: &[f32], x: &Dense<f32>) -> Dense<f32> {
-    let _t = crate::obs::timed("prim.spmm.csr");
+    let _t = crate::obs::timed(crate::obs::keys::TIMED_PRIM_SPMM_CSR);
     assert_eq!(values.len(), csr.num_edges);
     let n = csr.num_nodes;
     let f = x.cols();

@@ -44,7 +44,7 @@ fn base_train(cfg: &ReproConfig, model: ModelKind, dataset: &str, mode: TrainMod
 
 /// Fig. 2: (a) accuracy at bit widths chosen for different `Error_X`
 /// targets; (b) the bit width the rule derives per dataset at 0.3.
-pub fn fig2(cfg: &ReproConfig) -> Vec<Table> {
+pub fn fig2(cfg: &ReproConfig) -> crate::Result<Vec<Table>> {
     let mut a = Table::new(
         "Fig. 2a — eval accuracy vs Error_X target (GCN)",
         &["dataset", "target", "derived bits", "accuracy", "fp32 accuracy"],
@@ -55,12 +55,12 @@ pub fn fig2(cfg: &ReproConfig) -> Vec<Table> {
     );
     for ds in nc_datasets(cfg) {
         // FP32 reference accuracy.
-        let mut fp = Trainer::from_config(&base_train(cfg, ModelKind::Gcn, ds, TrainMode::fp32())).unwrap();
-        let fp_acc = fp.run().unwrap().final_eval;
+        let mut fp = Trainer::from_config(&base_train(cfg, ModelKind::Gcn, ds, TrainMode::fp32()))?;
+        let fp_acc = fp.run()?.final_eval;
         // The rule's probe tensor.
-        let data = if ds == "tiny" { datasets::tiny(cfg.seed) } else { datasets::load_by_name(ds, cfg.seed) };
+        let data = datasets::load_by_name_checked(ds, cfg.seed).map_err(|e| anyhow::anyhow!(e))?;
         let probe = {
-            let t = Trainer::from_config(&base_train(cfg, ModelKind::Gcn, ds, TrainMode::fp32())).unwrap();
+            let t = Trainer::from_config(&base_train(cfg, ModelKind::Gcn, ds, TrainMode::fp32()))?;
             let _ = t; // trainer builds the model; re-derive via a fresh model below
             let gcn = crate::model::GcnModel::new(
                 crate::model::GcnConfig {
@@ -78,8 +78,13 @@ pub fn fig2(cfg: &ReproConfig) -> Vec<Table> {
         for &target in &[0.1f32, 0.3, 0.5, 0.7] {
             let d = derive_bits(&probe, target);
             let mut t =
-                Trainer::from_config(&base_train(cfg, ModelKind::Gcn, ds, TrainMode::tango(d.bits))).unwrap();
-            let acc = t.run().unwrap().final_eval;
+                Trainer::from_config(&base_train(
+                    cfg,
+                    ModelKind::Gcn,
+                    ds,
+                    TrainMode::tango(d.bits),
+                ))?;
+            let acc = t.run()?.final_eval;
             a.row(&[
                 ds.into(),
                 format!("{target:.1}"),
@@ -94,12 +99,12 @@ pub fn fig2(cfg: &ReproConfig) -> Vec<Table> {
         row.push(d.bits.to_string());
         b.row(&row);
     }
-    vec![a, b]
+    Ok(vec![a, b])
 }
 
 /// Fig. 7: convergence of Tango vs Test1 (quantized pre-softmax layer) vs
 /// Test2 (nearest rounding) vs the FP32 baseline.
-pub fn fig7(cfg: &ReproConfig) -> Vec<Table> {
+pub fn fig7(cfg: &ReproConfig) -> crate::Result<Vec<Table>> {
     let mut tables = Vec::new();
     for model in [ModelKind::Gcn, ModelKind::Gat] {
         let name = if model == ModelKind::Gcn { "GCN" } else { "GAT" };
@@ -115,15 +120,15 @@ pub fn fig7(cfg: &ReproConfig) -> Vec<Table> {
                 TrainMode::tango_test1(8),
                 TrainMode::tango_test2(8),
             ] {
-                let mut tr = Trainer::from_config(&base_train(cfg, model, ds, mode)).unwrap();
-                let r = tr.run().unwrap();
+                let mut tr = Trainer::from_config(&base_train(cfg, model, ds, mode))?;
+                let r = tr.run()?;
                 cells.push(format!("{:.4} ({}ep)", r.final_eval, r.epochs_to_converge));
             }
             t.row(&cells);
         }
         tables.push(t);
     }
-    tables
+    Ok(tables)
 }
 
 #[cfg(test)]
@@ -133,7 +138,7 @@ mod tests {
     #[test]
     fn fig2_quick_produces_rows() {
         let cfg = ReproConfig { epochs: 5, quick: true, ..Default::default() };
-        let tables = fig2(&cfg);
+        let tables = fig2(&cfg).unwrap();
         assert_eq!(tables.len(), 2);
         assert_eq!(tables[0].len(), 4); // four targets × one quick dataset
         assert_eq!(tables[1].len(), 1);
@@ -142,7 +147,7 @@ mod tests {
     #[test]
     fn fig7_quick_produces_rows() {
         let cfg = ReproConfig { epochs: 5, quick: true, ..Default::default() };
-        let tables = fig7(&cfg);
+        let tables = fig7(&cfg).unwrap();
         assert_eq!(tables.len(), 2);
         assert_eq!(tables[0].len(), 1);
     }

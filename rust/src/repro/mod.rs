@@ -41,10 +41,10 @@ impl Default for ReproConfig {
 pub fn run(id: &str, cfg: &ReproConfig) -> crate::Result<Vec<Table>> {
     let tables: Vec<Table> = match id {
         "table1" => vec![table1(cfg)],
-        "fig2" => fig2(cfg),
-        "fig7" => fig7(cfg),
-        "fig8" => vec![fig8(cfg)],
-        "fig9" => vec![fig9(cfg)],
+        "fig2" => fig2(cfg)?,
+        "fig7" => fig7(cfg)?,
+        "fig8" => vec![fig8(cfg)?],
+        "fig9" => vec![fig9(cfg)?],
         "fig10" => vec![fig10(cfg)],
         "fig11" => fig11(cfg),
         "fig12" => vec![fig12(cfg)],

@@ -57,7 +57,7 @@ fn speed_cfg(cfg: &ReproConfig, model: ModelKind, dataset: &str, mode: TrainMode
 
 /// Fig. 8: end-to-end training time of Tango and EXACT relative to the
 /// FP32 "DGL" baseline, GCN and GAT, all five datasets.
-pub fn fig8(cfg: &ReproConfig) -> Table {
+pub fn fig8(cfg: &ReproConfig) -> crate::Result<Table> {
     let mut t = Table::new(
         "Fig. 8 — training speedup over FP32 baseline (measured, CPU substrate)",
         &["model", "dataset", "fp32 s/epoch", "Tango speedup", "EXACT speedup"],
@@ -70,13 +70,13 @@ pub fn fig8(cfg: &ReproConfig) -> Table {
     for model in [ModelKind::Gcn, ModelKind::Gat] {
         let name = if model == ModelKind::Gcn { "GCN" } else { "GAT" };
         for ds in &datasets {
-            let time_of = |mode: TrainMode| -> f64 {
-                let mut tr = Trainer::from_config(&speed_cfg(cfg, model, ds, mode)).unwrap();
-                tr.run().unwrap().wall_secs / cfg.speed_epochs as f64
+            let time_of = |mode: TrainMode| -> crate::Result<f64> {
+                let mut tr = Trainer::from_config(&speed_cfg(cfg, model, ds, mode))?;
+                Ok(tr.run()?.wall_secs / cfg.speed_epochs as f64)
             };
-            let fp = time_of(TrainMode::fp32());
-            let tango = time_of(TrainMode::tango(8));
-            let exact = time_of(TrainMode::exact(8));
+            let fp = time_of(TrainMode::fp32())?;
+            let tango = time_of(TrainMode::tango(8))?;
+            let exact = time_of(TrainMode::exact(8))?;
             t.row(&[
                 name.into(),
                 (*ds).into(),
@@ -86,21 +86,18 @@ pub fn fig8(cfg: &ReproConfig) -> Table {
             ]);
         }
     }
-    t
+    Ok(t)
 }
 
 /// Fig. 9: multi-GPU speedup of quantized vs FP32 gradient exchange as the
 /// worker count grows (modelled PCIe, real computation + all-reduce).
-pub fn fig9(cfg: &ReproConfig) -> Table {
+pub fn fig9(cfg: &ReproConfig) -> crate::Result<Table> {
     let mut t = Table::new(
         "Fig. 9 — multi-GPU speedup (Tango vs FP32 all-reduce)",
         &["model", "workers", "fp32 epoch (s)", "tango epoch (s)", "speedup"],
     );
-    let data = if cfg.quick {
-        datasets::tiny(cfg.seed)
-    } else {
-        datasets::load_by_name("ogbn-arxiv", cfg.seed)
-    };
+    let ds = if cfg.quick { "tiny" } else { "ogbn-arxiv" };
+    let data = datasets::load_by_name_checked(ds, cfg.seed).map_err(|e| anyhow::anyhow!(e))?;
     let workers: Vec<usize> = if cfg.quick { vec![2, 3] } else { vec![2, 3, 4, 5, 6] };
     for model in [ModelKind::Gcn, ModelKind::Gat] {
         let name = if model == ModelKind::Gcn { "GCN" } else { "GAT" };
@@ -122,8 +119,8 @@ pub fn fig9(cfg: &ReproConfig) -> Table {
                     interconnect: Interconnect::pcie3(),
                 }
             };
-            let fp = run_data_parallel(&mk(false), &data).unwrap();
-            let tg = run_data_parallel(&mk(true), &data).unwrap();
+            let fp = run_data_parallel(&mk(false), &data)?;
+            let tg = run_data_parallel(&mk(true), &data)?;
             let fp_t = fp.total_time() / fp.epochs.len() as f64;
             let tg_t = tg.total_time() / tg.epochs.len() as f64;
             t.row(&[
@@ -135,7 +132,7 @@ pub fn fig9(cfg: &ReproConfig) -> Table {
             ]);
         }
     }
-    t
+    Ok(t)
 }
 
 #[cfg(test)]
@@ -151,7 +148,7 @@ mod tests {
     #[test]
     fn fig8_quick_runs() {
         let cfg = ReproConfig { speed_epochs: 1, quick: true, ..Default::default() };
-        let t = fig8(&cfg);
+        let t = fig8(&cfg).unwrap();
         assert_eq!(t.len(), 2); // GCN + GAT on tiny
     }
 }

@@ -250,14 +250,14 @@ impl QuantFeatureStore {
             );
         }
         if traced {
-            crate::obs::counter_add("gather.rows", nodes.len() as u64);
-            crate::obs::counter_add("gather.cache_hits", hits);
-            crate::obs::counter_add("gather.cache_misses", misses);
-            crate::obs::counter_add("gather.packed_bytes", batch_packed);
-            crate::obs::counter_add("gather.int8_bytes", batch_int8);
+            crate::obs::counter_add(crate::obs::keys::CTR_GATHER_ROWS, nodes.len() as u64);
+            crate::obs::counter_add(crate::obs::keys::CTR_GATHER_CACHE_HITS, hits);
+            crate::obs::counter_add(crate::obs::keys::CTR_GATHER_CACHE_MISSES, misses);
+            crate::obs::counter_add(crate::obs::keys::CTR_GATHER_PACKED_BYTES, batch_packed);
+            crate::obs::counter_add(crate::obs::keys::CTR_GATHER_INT8_BYTES, batch_int8);
             for (b, st) in self.bucket_stats.iter().enumerate() {
                 if let Some(mean) = st.mean_error() {
-                    crate::obs::gauge_set(&format!("gather.error_x.bucket{b}"), mean);
+                    crate::obs::gauge_set(&crate::obs::keys::gather_error_x_bucket(b), mean);
                 }
             }
         }

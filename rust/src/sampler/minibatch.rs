@@ -60,11 +60,8 @@ impl MiniBatchTrainer {
     /// Build everything from a config (loads the dataset, derives bits if
     /// requested, initialises the model and sampler).
     pub fn from_config(cfg: &TrainConfig) -> crate::Result<Self> {
-        let data = if cfg.dataset == "tiny" {
-            datasets::tiny(cfg.seed)
-        } else {
-            datasets::load_by_name(&cfg.dataset, cfg.seed)
-        };
+        let data = datasets::load_by_name_checked(&cfg.dataset, cfg.seed)
+            .map_err(|e| anyhow::anyhow!(e))?;
         Self::with_dataset(cfg.clone(), data)
     }
 
@@ -186,12 +183,12 @@ impl MiniBatchTrainer {
         let mut wall = 0.0f64;
         let mut wait = 0.0f64;
         for epoch in 0..self.cfg.epochs {
-            let _epoch_span = crate::obs::span("epoch");
+            let _epoch_span = crate::obs::span(crate::obs::keys::SPAN_EPOCH);
             let t_epoch = std::time::Instant::now();
             let (res, secs) = crate::metrics::time_once(|| self.train_epoch(epoch as u64));
             let (loss, mut stage) = res?;
             let (eval, eval_s) = crate::metrics::time_once(|| {
-                let _s = crate::obs::span("eval");
+                let _s = crate::obs::span(crate::obs::keys::SPAN_EVAL);
                 self.evaluate()
             });
             stage.eval_s = eval_s;
@@ -275,7 +272,7 @@ impl MiniBatchTrainer {
             |bi| stage.prepare(&batches[bi], mix_seeds(&[epoch, bi as u64])),
             |_, pb: PreparedBatch| {
                 let t0 = std::time::Instant::now();
-                let _step_span = crate::obs::span("compute");
+                let _step_span = crate::obs::span(crate::obs::keys::SPAN_COMPUTE);
                 let loss = match &pb.target {
                     BatchTarget::Nc { labels } => {
                         let nodes: Vec<u32> = (0..labels.len() as u32).collect();

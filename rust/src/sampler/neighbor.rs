@@ -108,7 +108,7 @@ impl NeighborSampler {
         stream: u64,
         exclude: &HashSet<(u32, u32)>,
     ) -> Vec<Block> {
-        let _t = crate::obs::timed("sampler.sample_blocks");
+        let _t = crate::obs::timed(crate::obs::keys::TIMED_SAMPLER_SAMPLE_BLOCKS);
         let mut rng = Xoshiro256pp::new(self.seed ^ stream.wrapping_mul(0x9E3779B97F4A7C15));
         // Destinations that actually have an excluded in-edge — every other
         // frontier node takes the allocation-free fast path below.
@@ -224,8 +224,10 @@ pub fn adjust_fanouts(fanouts: &[usize], layers: usize) -> Vec<usize> {
         out.push(10);
     }
     let layers = layers.max(1);
-    while out.len() < layers {
-        out.push(*out.last().unwrap());
+    if let Some(&last) = out.last() {
+        while out.len() < layers {
+            out.push(last);
+        }
     }
     out.truncate(layers);
     out

@@ -141,7 +141,10 @@ impl<'a> FeatureGather<'a> {
                 store.gather_dequantized(features, nodes)
             }
             FeatureGather::Shared { features, store } => {
-                let q = store.lock().unwrap().gather_quantized(features, nodes);
+                let q = store
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .gather_quantized(features, nodes);
                 q.dequantize()
             }
         }
@@ -177,19 +180,19 @@ impl SampleStage<'_> {
     /// (and, when tracing is on, recorded as `stage1/sample` /
     /// `stage1/gather` spans on the calling thread).
     pub fn prepare(&mut self, batch: &[u32], stream: u64) -> PreparedBatch {
-        let _stage_span = crate::obs::span("stage1");
-        crate::obs::counter_add("pipeline.batches_prepared", 1);
+        let _stage_span = crate::obs::span(crate::obs::keys::SPAN_STAGE1);
+        crate::obs::counter_add(crate::obs::keys::CTR_PIPELINE_BATCHES_PREPARED, 1);
         match self.lp {
             None => {
                 let t0 = Instant::now();
                 let blocks = {
-                    let _s = crate::obs::span("sample");
+                    let _s = crate::obs::span(crate::obs::keys::SPAN_SAMPLE);
                     self.sampler.sample_blocks(self.csr_in, self.degrees, batch, stream)
                 };
                 self.times.add_sample(t0.elapsed().as_secs_f64());
                 let t1 = Instant::now();
                 let x0 = {
-                    let _s = crate::obs::span("gather");
+                    let _s = crate::obs::span(crate::obs::keys::SPAN_GATHER);
                     self.gather.gather(&blocks[0].src_nodes)
                 };
                 self.times.add_gather(t1.elapsed().as_secs_f64());
@@ -200,7 +203,7 @@ impl SampleStage<'_> {
             Some((batcher, neg_per_pos)) => {
                 let t0 = Instant::now();
                 let (blocks, pairs) = {
-                    let _s = crate::obs::span("sample");
+                    let _s = crate::obs::span(crate::obs::keys::SPAN_SAMPLE);
                     sample_lp_step(
                         batcher,
                         self.sampler,
@@ -214,7 +217,7 @@ impl SampleStage<'_> {
                 self.times.add_sample(t0.elapsed().as_secs_f64());
                 let t1 = Instant::now();
                 let x0 = {
-                    let _s = crate::obs::span("gather");
+                    let _s = crate::obs::span(crate::obs::keys::SPAN_GATHER);
                     self.gather.gather(&blocks[0].src_nodes)
                 };
                 self.times.add_gather(t1.elapsed().as_secs_f64());

@@ -24,8 +24,9 @@ impl Args {
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
                 } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = iter.next().unwrap();
-                    out.flags.insert(stripped.to_string(), v);
+                    if let Some(v) = iter.next() {
+                        out.flags.insert(stripped.to_string(), v);
+                    }
                 } else {
                     out.flags.insert(stripped.to_string(), "true".to_string());
                 }
@@ -58,6 +59,19 @@ impl Args {
         }
     }
 
+    /// Flag parsed to any `FromStr` type, with default; malformed values
+    /// become an error instead of a panic, so binaries can report them
+    /// through their normal `Result` exit path (audit rule P1).
+    pub fn try_get_as<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Debug,
+    {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}={v}: {e:?}")),
+        }
+    }
+
     /// Boolean flag: present (or "true"/"1") means true.
     pub fn get_bool(&self, key: &str) -> bool {
         matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
@@ -87,6 +101,13 @@ mod tests {
         let a = parse(&["bench"]);
         assert_eq!(a.get("dataset", "tiny"), "tiny");
         assert_eq!(a.get_as::<u64>("seed", 7), 7);
+    }
+
+    #[test]
+    fn try_get_as_reports_malformed_values() {
+        let a = parse(&["train", "--epochs", "ten"]);
+        assert!(a.try_get_as::<usize>("epochs", 1).is_err());
+        assert_eq!(a.try_get_as::<usize>("missing", 4), Ok(4));
     }
 
     #[test]

@@ -217,7 +217,10 @@ impl<'a> Parser<'a> {
                 Some(_) => {
                     // Consume one UTF-8 scalar.
                     let rest = std::str::from_utf8(&self.bytes[self.pos..])?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest
+                        .chars()
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
                     out.push(c);
                     self.pos += c.len_utf8();
                 }

@@ -60,7 +60,11 @@ where
                 if b >= slots.len() {
                     break;
                 }
-                let slab = slots[b].lock().unwrap().take().expect("batch claimed twice");
+                let slab = slots[b]
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .take()
+                    .expect("batch claimed twice");
                 for (i, chunk) in slab.chunks_mut(chunk_len).enumerate() {
                     f(b * batch + i, chunk);
                 }
@@ -92,13 +96,13 @@ where
                 let lo = b * batch;
                 let hi = (lo + batch).min(n);
                 let vals: Vec<O> = (lo..hi).map(&f).collect();
-                *slots[b].lock().unwrap() = Some(vals);
+                *slots[b].lock().unwrap_or_else(|e| e.into_inner()) = Some(vals);
             });
         }
     });
     let mut out = Vec::with_capacity(n);
     for slot in slots {
-        out.extend(slot.into_inner().unwrap().expect("batch unfilled"));
+        out.extend(slot.into_inner().unwrap_or_else(|e| e.into_inner()).expect("batch unfilled"));
     }
     out
 }

@@ -1,0 +1,217 @@
+//! Self-test for `tango-audit` (rust/src/audit/).
+//!
+//! Two halves:
+//! 1. the full audit over this very tree must come back clean — zero
+//!    findings after `audit.allow.toml`, zero stale allowlist entries —
+//!    which is the same bar the CI `audit` job enforces;
+//! 2. each rule must demonstrably *fire* on a small inline fixture with
+//!    the right `file:line`, since the audit's own sources are excluded
+//!    from the scan and would otherwise never prove the rules work.
+//!
+//! Cargo runs integration tests with the package root as the working
+//! directory, so `.` is the repo root here.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+use tango::audit::{
+    self, check_surface, extract_cli_flags, extract_mentions, extract_toml_keys, Allowlist, Rule,
+};
+use tango::util::json::Json;
+
+// ---------------------------------------------------------------- clean tree
+
+#[test]
+fn repo_tree_is_clean_under_the_shipped_allowlist() {
+    let allow_text = std::fs::read_to_string("audit.allow.toml").expect("audit.allow.toml at root");
+    let allow = Allowlist::parse(&allow_text).expect("allowlist parses");
+    let report = audit::run(Path::new("."), &allow).expect("audit runs");
+
+    for f in &report.findings {
+        eprintln!("{}\n    | {}", f.render(), f.snippet);
+    }
+    for w in &report.warnings {
+        eprintln!("warning: {w}");
+    }
+    assert!(report.findings.is_empty(), "{} unallowed finding(s)", report.findings.len());
+    assert!(report.warnings.is_empty(), "{} stale allowlist entr(ies)", report.warnings.len());
+    assert!(report.ok(true), "report must pass under --deny-warnings");
+
+    // Sanity: the scan actually covered the tree, and the allowlist is
+    // doing real work (every entry suppresses at least one finding).
+    assert!(report.files_scanned > 30, "only {} files scanned", report.files_scanned);
+    assert!(!report.suppressed.is_empty());
+
+    // The machine-readable artifact round-trips through the repo's parser.
+    let json = report.to_json();
+    assert_eq!(json.get("schema").and_then(Json::as_str), Some(audit::SCHEMA));
+    assert!(Json::parse(&json.to_string()).is_ok());
+}
+
+// ------------------------------------------------------------- D1: clocks
+
+#[test]
+fn d1_fires_on_clock_reads_outside_the_obs_layers() {
+    let src = "fn f() {\n    let t = std::time::Instant::now();\n    t.elapsed()\n}\n";
+    let f = audit::scan_source("rust/src/fake.rs", src);
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].rule, Rule::D1);
+    assert_eq!((f[0].path.as_str(), f[0].line), ("rust/src/fake.rs", 2));
+    assert!(f[0].snippet.contains("Instant::now"));
+
+    // The observability and metrics layers are the timing layers.
+    assert!(audit::scan_source("rust/src/obs/fake.rs", src).is_empty());
+    assert!(audit::scan_source("rust/src/metrics/fake.rs", src).is_empty());
+}
+
+// ---------------------------------------------------- D1: hash iteration
+
+#[test]
+fn d1_fires_on_hash_iteration() {
+    let src = concat!(
+        "fn f() {\n",
+        "    let mut seen: std::collections::HashSet<u32> = Default::default();\n",
+        "    for v in &seen {\n",
+        "        let _ = v;\n",
+        "    }\n",
+        "}\n"
+    );
+    let f = audit::scan_source("rust/src/fake.rs", src);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].rule, f[0].line), (Rule::D1, 3));
+
+    // Field declarations track too: iterating a HashMap-typed field fires.
+    let src = concat!(
+        "struct C {\n",
+        "    entries: std::collections::HashMap<u64, u32>,\n",
+        "}\n",
+        "impl C {\n",
+        "    fn total(&self) -> u32 {\n",
+        "        self.entries.values().sum()\n",
+        "    }\n",
+        "}\n"
+    );
+    let f = audit::scan_source("rust/src/fake.rs", src);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].rule, f[0].line), (Rule::D1, 6));
+}
+
+#[test]
+fn d1_sanctions_the_drain_and_sort_idiom() {
+    // Re-binding the name to a non-hash value (collect + sort) untracks it
+    // — this is exactly the fix `graph/generators.rs::power_law` ships.
+    let src = concat!(
+        "fn f() {\n",
+        "    let mut chosen = std::collections::HashSet::new();\n",
+        "    chosen.insert(1u32);\n",
+        "    let mut chosen: Vec<u32> = chosen.into_iter().collect();\n",
+        "    chosen.sort_unstable();\n",
+        "    for t in &chosen {\n",
+        "        let _ = t;\n",
+        "    }\n",
+        "}\n"
+    );
+    assert!(audit::scan_source("rust/src/fake.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------ O1: obs keys
+
+#[test]
+fn o1_fires_on_inline_obs_keys_and_accepts_constants() {
+    let src = concat!(
+        "fn f() {\n",
+        "    let _g = span(\"epoch\");\n",
+        "    counter_add(crate::obs::keys::CTR_GATHER_ROWS, 1);\n",
+        "}\n"
+    );
+    let f = audit::scan_source("rust/src/fake.rs", src);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].rule, f[0].line), (Rule::O1, 2));
+    assert!(f[0].message.contains("obs::keys"));
+
+    // format!-built keys are inline too (dynamic families get constructor
+    // functions in obs::keys instead).
+    let f = audit::scan_source("rust/src/fake.rs", "fn f() { timed(&format!(\"k{}\", 1)); }\n");
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].rule, Rule::O1);
+
+    // Inside the obs layer itself the entry points handle raw strings.
+    assert!(audit::scan_source("rust/src/obs/fake.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------- P1: panics
+
+#[test]
+fn p1_fires_on_panic_paths_but_not_comments_or_tests() {
+    let src = concat!(
+        "//! Doc comments may say unwrap() freely.\n",
+        "fn f(x: Option<u32>) -> u32 {\n",
+        "    x.unwrap()\n",
+        "}\n",
+        "#[cfg(test)]\n",
+        "mod tests {\n",
+        "    fn g(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        "}\n"
+    );
+    let f = audit::scan_source("rust/src/fake.rs", src);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].rule, f[0].path.as_str(), f[0].line), (Rule::P1, "rust/src/fake.rs", 3));
+
+    let f = audit::scan_source("rust/src/fake.rs", "fn f() { panic!(\"boom\"); }\n");
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].rule, Rule::P1);
+
+    let f = audit::scan_source("rust/src/fake.rs", "fn f(x: Option<u32>) { x.expect(\"set\"); }\n");
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].rule, Rule::P1);
+
+    // Byte-argument `expect` helpers (json.rs-style parsers) are not the
+    // panicking Option/Result API.
+    assert!(audit::scan_source("rust/src/fake.rs", "fn f(p: &mut P) { p.expect(b'x'); }\n")
+        .is_empty());
+}
+
+// ------------------------------------------------------- C1: config surface
+
+#[test]
+fn c1_cross_references_flags_keys_and_mentions() {
+    let flags = extract_cli_flags(
+        "rust/src/main.rs",
+        "cfg.lr = flag(args, \"lr\", cfg.lr)?;\nlet quick = args.get_bool(\"quick\");\n",
+    );
+    let keys = extract_toml_keys(
+        "rust/src/config/mod.rs",
+        "let get = |k: &str| doc.get(\"train\", k);\nget(\"lr\")\n",
+    );
+    let mentions: BTreeSet<String> = extract_mentions("[train]\nlr = 0.05\n");
+
+    // `lr` is symmetric across all three surfaces; `quick` is missing both
+    // a TOML key and a config-file mention.
+    let f = check_surface(&flags, &keys, &mentions);
+    assert_eq!(f.len(), 2);
+    assert!(f.iter().all(|x| x.rule == Rule::C1 && x.snippet == "--quick"));
+    assert_eq!((f[0].path.as_str(), f[0].line), ("rust/src/main.rs", 2));
+
+    // And the reverse direction: a key nobody can set from the CLI.
+    let orphan = extract_toml_keys("rust/src/config/mod.rs", "get(\"ghost\")\n");
+    let f = check_surface(&[], &orphan, &mentions);
+    assert_eq!(f.len(), 2); // no flag + no mention
+    assert!(f.iter().all(|x| x.snippet == "ghost"));
+}
+
+// ------------------------------------------------- allowlist gate behaviour
+
+#[test]
+fn allowlist_suppresses_matching_findings_and_reports_stale_entries() {
+    let allow = Allowlist::parse(
+        "[allow.fixture]\nrule = \"P1\"\npath = \"rust/src/fake.rs\"\n\
+         contains = \"x.unwrap()\"\nreason = \"fixture\"\n\
+         [allow.stale]\nrule = \"D1\"\npath = \"rust/src/nope.rs\"\nreason = \"old\"\n",
+    )
+    .unwrap();
+    let findings = audit::scan_source("rust/src/fake.rs", "fn f(x: Option<u32>) { x.unwrap(); }\n");
+    let (kept, suppressed, unused) = allow.apply(findings);
+    assert!(kept.is_empty());
+    assert_eq!(suppressed.len(), 1);
+    assert_eq!(suppressed[0].0, "fixture");
+    assert_eq!(unused, vec!["stale".to_string()]);
+}
