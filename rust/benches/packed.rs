@@ -1,0 +1,158 @@
+//! Packed-kernel bench: sub-byte SPMM directly on bit-packed rows vs the
+//! dequantize-to-f32 path, over the same skewed-degree
+//! (preferential-attachment) graph the policy bench uses.
+//!
+//! The dequantize baseline is what the `Dequantize` backend does with a
+//! packed gather payload: materialize the f32 matrix
+//! (`QuantRows::dequantize`) and run the FP32 SPMM. The packed path
+//! (`packed_spmm`, the `--packed-compute` backend) consumes the bitstream
+//! directly — at 4 bits and below it reads an 8–16× smaller random-access
+//! operand and skips the f32 materialization entirely, which is the paper's
+//! §3.3 "quantization must pay at compute time" claim in miniature. The run
+//! asserts the packed SPMM epoch wins at every width ≤ 4 bits and emits a
+//! machine-readable `BENCH_packed.json` (schema `tango-bench/packed/v1`)
+//! beside `BENCH_train_speed.json` so CI can archive per-subsystem speed
+//! trajectories.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+use tango::graph::generators::{power_law, random_features};
+use tango::graph::Csr;
+use tango::metrics::Table;
+use tango::policy::PolicyConfig;
+use tango::primitives::{packed_spmm, spmm_edge_weighted};
+use tango::quant::{dequantize, quantize, Rounding};
+use tango::sampler::{QuantFeatureStore, QuantRows};
+use tango::util::cli::Args;
+use tango::util::json::Json;
+
+/// Graph size: big enough to stress memory traffic, small enough for CI.
+const NODES: usize = 8000;
+/// Preferential-attachment edges per node (skewed in-degrees).
+const EDGES_PER_NODE: usize = 4;
+/// Feature width.
+const DIM: usize = 64;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// Total wall seconds of `iters` runs of `body` after `warm` warmups.
+fn time_iters(warm: usize, iters: usize, mut body: impl FnMut()) -> f64 {
+    for _ in 0..warm {
+        body();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        body();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    // Pin the worker pool for stable measurements.
+    if std::env::var("TANGO_THREADS").is_err() {
+        std::env::set_var("TANGO_THREADS", "4");
+    }
+    let args = Args::from_env();
+    let quick = args.get_bool("quick");
+    let iters = if quick { 8 } else { 30 };
+
+    let coo = power_law(NODES, EDGES_PER_NODE, 7)
+        .with_reverse_edges()
+        .dedup()
+        .with_self_loops();
+    let csr = Csr::from_coo(&coo);
+    let degrees = coo.in_degrees();
+    let features = random_features(NODES, DIM, 11);
+    let edges = coo.num_edges();
+    println!("graph: {NODES} nodes, {edges} edges, dim {DIM}, {iters} iters/config\n");
+
+    // One shared edge-weight operand (α in the aggregation) for every
+    // config; only the node-feature operand changes representation.
+    let qalpha = quantize(&random_features(edges, 1, 13), 8, Rounding::Nearest);
+    let alpha_f32 = dequantize(&qalpha);
+
+    // Uniform widths, plus the PR-5 skewed-degree mixed policy (hubs at
+    // INT8, cold tail at 6/4 bits) gathered over the full node set.
+    let mixed_rows = {
+        let pc = PolicyConfig { degree_buckets: vec![8, 32], bucket_bits: vec![8, 6, 4] };
+        let policy = pc.materialize(8, &degrees, &features).expect("valid policy");
+        let mut store = QuantFeatureStore::with_policy(policy, 0);
+        let all: Vec<u32> = (0..NODES as u32).collect();
+        store.gather_quantized(&features, &all)
+    };
+    let configs: Vec<(String, QuantRows, Option<u8>)> = [8u8, 4, 2, 1]
+        .iter()
+        .map(|&bits| {
+            let q = quantize(&features, bits, Rounding::Nearest);
+            (format!("uniform {bits}-bit"), QuantRows::from_qtensor(&q), Some(bits))
+        })
+        .chain(std::iter::once(("mixed 8/6/4".to_string(), mixed_rows, None)))
+        .collect();
+
+    let mut t = Table::new(
+        "bench: packed SPMM vs dequantize-to-f32 (one epoch = one full-graph SPMM)",
+        &["config", "packed KiB", "f32 KiB", "dequant s", "packed s", "speedup"],
+    );
+    let mut results: Vec<Json> = Vec::new();
+    let f32_bytes = NODES * DIM * 4;
+    for (name, rows, bits) in &configs {
+        let deq_s = time_iters(2, iters, || {
+            let h = rows.dequantize();
+            std::hint::black_box(spmm_edge_weighted(&csr, &alpha_f32, &h, 1).len());
+        });
+        let packed_s = time_iters(2, iters, || {
+            std::hint::black_box(packed_spmm(&csr, &qalpha, rows, 1).len());
+        });
+        let speedup = deq_s / packed_s.max(1e-12);
+        println!(
+            "{name}: dequantize {deq_s:.4} s, packed {packed_s:.4} s ({speedup:.2}x), \
+             payload {:.1} KiB vs {:.1} KiB f32",
+            rows.packed_bytes() as f64 / 1024.0,
+            f32_bytes as f64 / 1024.0
+        );
+        t.row(&[
+            name.clone(),
+            format!("{:.1}", rows.packed_bytes() as f64 / 1024.0),
+            format!("{:.1}", f32_bytes as f64 / 1024.0),
+            format!("{deq_s:.4}"),
+            format!("{packed_s:.4}"),
+            format!("{speedup:.2}x"),
+        ]);
+        results.push(obj(vec![
+            ("config", Json::Str(name.clone())),
+            ("bits", bits.map(|b| Json::Num(b as f64)).unwrap_or(Json::Null)),
+            ("packed_bytes", Json::Num(rows.packed_bytes() as f64)),
+            ("f32_bytes", Json::Num(f32_bytes as f64)),
+            ("dequantize_s", Json::Num(deq_s)),
+            ("packed_s", Json::Num(packed_s)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+        // The acceptance criterion: at ≤ 4 bits, computing on the packed
+        // payload must beat dequantize-then-f32-SPMM on this graph.
+        if let Some(b) = bits {
+            if *b <= 4 {
+                assert!(
+                    packed_s < deq_s,
+                    "{name}: packed SPMM must win at <= 4 bits ({packed_s:.4} vs {deq_s:.4} s)"
+                );
+            }
+        }
+    }
+    t.print();
+
+    let artifact = obj(vec![
+        ("schema", Json::Str("tango-bench/packed/v1".into())),
+        ("bench", Json::Str("packed".into())),
+        ("nodes", Json::Num(NODES as f64)),
+        ("edges", Json::Num(edges as f64)),
+        ("dim", Json::Num(DIM as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_packed.json");
+    std::fs::write(path, artifact.to_string()).expect("write BENCH_packed.json");
+    println!("\nwrote {path}");
+}

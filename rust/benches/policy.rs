@@ -69,7 +69,7 @@ fn main() {
         for (bi, batch) in batches.iter().enumerate() {
             let blocks = sampler.sample_blocks(&csr, &degrees, batch, bi as u64);
             let q = store.gather_quantized(&features, &blocks[0].src_nodes);
-            std::hint::black_box(q.data.len());
+            std::hint::black_box(q.packed_bytes());
         }
         let secs = t0.elapsed().as_secs_f64();
         let report = store.policy_report();

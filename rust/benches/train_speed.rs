@@ -35,8 +35,10 @@ fn main() {
             "fp32 s/ep",
             "tango s/ep",
             "exact s/ep",
+            "tango4p s/ep",
             "tango speedup",
             "exact speedup",
+            "tango4p speedup",
         ],
     );
     let mut results: Vec<Json> = Vec::new();
@@ -45,7 +47,7 @@ fn main() {
         for ds in datasets {
             // Per-epoch wall (the full budget: train sweep + eval) and the
             // training-compute share of it, both averaged over the epochs.
-            let time = |mode: TrainMode| -> (f64, f64) {
+            let time = |mode: TrainMode, packed: bool| -> (f64, f64) {
                 let cfg = TrainConfig {
                     model,
                     dataset: (*ds).into(),
@@ -58,6 +60,7 @@ fn main() {
                     auto_bits: false,
                     seed: 42,
                     log_every: 0,
+                    packed_compute: packed,
                     ..Default::default()
                 };
                 let mut tr = Trainer::from_config(&cfg).unwrap();
@@ -65,18 +68,26 @@ fn main() {
                 let compute = report.stage_totals().compute_s;
                 (report.wall_secs / epochs as f64, compute / epochs as f64)
             };
-            let (fp, fp_c) = time(TrainMode::fp32());
-            let (tg, tg_c) = time(TrainMode::tango(8));
-            let (ex, ex_c) = time(TrainMode::exact(8));
-            println!("{name} {ds}: fp32 {fp:.3}s tango {tg:.3}s exact {ex:.3}s");
+            let (fp, fp_c) = time(TrainMode::fp32(), false);
+            let (tg, tg_c) = time(TrainMode::tango(8), false);
+            let (ex, ex_c) = time(TrainMode::exact(8), false);
+            // The packed 4-bit configuration: sub-byte kernels end to end
+            // (`--packed-compute`, the `PrimitiveBackend::Packed` seam).
+            let (t4p, t4p_c) = time(TrainMode::tango(4), true);
+            println!(
+                "{name} {ds}: fp32 {fp:.3}s tango {tg:.3}s exact {ex:.3}s \
+                 tango4-packed {t4p:.3}s"
+            );
             t.row(&[
                 name.into(),
                 (*ds).into(),
                 format!("{fp:.3}"),
                 format!("{tg:.3}"),
                 format!("{ex:.3}"),
+                format!("{t4p:.3}"),
                 format!("{:.2}x", fp / tg),
                 format!("{:.2}x", fp / ex),
+                format!("{:.2}x", fp / t4p),
             ]);
             results.push(obj(vec![
                 ("model", Json::Str(name.to_lowercase())),
@@ -87,8 +98,11 @@ fn main() {
                 ("fp32_compute_s_per_epoch", Json::Num(fp_c)),
                 ("tango_compute_s_per_epoch", Json::Num(tg_c)),
                 ("exact_compute_s_per_epoch", Json::Num(ex_c)),
+                ("tango4_packed_s_per_epoch", Json::Num(t4p)),
+                ("tango4_packed_compute_s_per_epoch", Json::Num(t4p_c)),
                 ("tango_speedup", Json::Num(fp / tg)),
                 ("exact_speedup", Json::Num(fp / ex)),
+                ("tango4_packed_speedup", Json::Num(fp / t4p)),
             ]));
         }
     }

@@ -313,6 +313,11 @@ pub struct TrainConfig {
     /// is the uniform policy — one bucket at the mode's bit width,
     /// bit-identical to a policy-less run.
     pub policy: PolicyConfig,
+    /// Run quantized primitives directly on bit-packed payloads
+    /// (`--packed-compute` / `packed_compute` — the
+    /// [`PrimitiveBackend`](crate::primitives::PrimitiveBackend) seam).
+    /// Off = dequantize-to-f32 kernels, bit-identical numerics either way.
+    pub packed_compute: bool,
     /// Task override (`--task nc|linkpred`); `None` follows the dataset's
     /// declared task.
     pub task: Option<TaskKind>,
@@ -337,6 +342,7 @@ impl Default for TrainConfig {
             log_every: 0,
             sampler: SamplerConfig::default(),
             policy: PolicyConfig::default(),
+            packed_compute: false,
             task: None,
             metrics: MetricsConfig::default(),
         }
@@ -424,6 +430,9 @@ impl TrainConfig {
         if let Some(v) = get("prefetch") {
             cfg.sampler.prefetch = v.parse().map_err(|e| format!("prefetch: {e}"))?;
         }
+        if let Some(v) = get("packed_compute") {
+            cfg.packed_compute = parse_bool(v, "packed_compute")?;
+        }
         if let Some(v) = get("task") {
             cfg.task = Some(parse_task(v)?);
         }
@@ -488,6 +497,16 @@ impl TrainConfig {
             return Err(
                 "--degree-buckets/--bucket-bits need a quantized mode (e.g. --mode tango); \
                  FP32 runs gather full-precision rows and never apply a policy"
+                    .to_string(),
+            );
+        }
+        // Packed compute reroutes the *quantized* kernels — an FP32 run has
+        // no packed operands to hand them, so the flag would silently do
+        // nothing. Reject it instead.
+        if self.packed_compute && !self.mode.quantize {
+            return Err(
+                "--packed-compute needs a quantized mode (e.g. --mode tango); \
+                 FP32 runs never materialize packed operands"
                     .to_string(),
             );
         }
@@ -689,6 +708,28 @@ bucket_bits = "8,6,4"
         cfg.sampler.fanouts = vec![];
         assert!(cfg.validate().unwrap_err().contains("fanouts"));
         assert!(TrainConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn packed_compute_key_parses_and_requires_quantized_mode() {
+        let cfg = TrainConfig::from_toml("[train]\npacked_compute = true\n").unwrap();
+        assert!(cfg.packed_compute);
+        // Absent key = off; tolerated alongside any quantized mode.
+        let plain = TrainConfig::from_toml("[train]\nmodel = \"gcn\"\n").unwrap();
+        assert!(!plain.packed_compute);
+        let e2 = TrainConfig::from_toml("[train]\nmode = \"test2\"\npacked_compute = true\n");
+        assert!(e2.is_ok());
+        // Strict boolean, like the rest of the surface.
+        assert!(TrainConfig::from_toml("[train]\npacked_compute = \"yes\"\n").is_err());
+        // Packed kernels only exist for quantized operands.
+        let e = TrainConfig::from_toml("[train]\nmode = \"fp32\"\npacked_compute = true\n")
+            .unwrap_err();
+        assert!(e.contains("quantized mode"), "{e}");
+        let mut cfg = TrainConfig::default();
+        cfg.packed_compute = true;
+        assert!(cfg.validate().is_ok());
+        cfg.mode = TrainMode::fp32();
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

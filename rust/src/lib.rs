@@ -33,7 +33,15 @@
 //!   ([`policy`]: degree buckets × per-bucket bit widths with per-bucket
 //!   static scales and gather-traffic accounting — the Degree-Quant/BiFeat
 //!   rule that keeps hot nodes at high precision and compresses the cold
-//!   tail, `--degree-buckets 8,64 --bucket-bits 8,6,4`), a multi-worker
+//!   tail, `--degree-buckets 8,64 --bucket-bits 8,6,4`), true bit-packed
+//!   sub-byte storage and compute ([`quant::pack`]: LSB-first bitstreams
+//!   behind [`QuantRows`](sampler::QuantRows);
+//!   [`primitives::packed`]: SPMM/QGEMM kernels that consume the packed
+//!   payload directly, dispatched per call site through the
+//!   [`PrimitiveBackend`](primitives::PrimitiveBackend) seam —
+//!   `--packed-compute`, bit-identical numerics to the dequantize path,
+//!   and the same seam a future GPU/Pallas artifact dispatch plugs into),
+//!   a multi-worker
 //!   data-parallel simulator whose workers train persistent
 //!   [`AnyModel`](model::AnyModel)s on the same sampler `Block` pipeline
 //!   for both tasks (per-worker sampling streams *and* per-worker prefetch

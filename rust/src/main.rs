@@ -7,7 +7,7 @@
 //!              [--seed S] [--sampler neighbor|degree|full] [--fanouts 10,10]
 //!              [--batch-size N] [--sample-seed S] [--cache-nodes N]
 //!              [--prefetch N] [--degree-buckets 8,64] [--bucket-bits 8,6,4]
-//!              [--metrics-out m.json] [--trace true|false]
+//!              [--packed-compute] [--metrics-out m.json] [--trace true|false]
 //! tango repro  <table1|fig2|fig7|...|fig16|table2|all> [--quick]
 //!              [--epochs N] [--speed-epochs N]
 //! tango plan                # print the derived quantization-caching plan
@@ -17,9 +17,16 @@
 //!                [--fanouts 10,10] [--batch-size N] [--sample-seed S]
 //!                [--cache-nodes N] [--prefetch N]
 //!                [--sampler neighbor|degree] [--degree-buckets 8,64]
-//!                [--bucket-bits 8,6,4] [--metrics-out m.json]
-//!                [--trace true|false]
+//!                [--bucket-bits 8,6,4] [--packed-compute]
+//!                [--metrics-out m.json] [--trace true|false]
 //! ```
+//!
+//! `--packed-compute` (TOML `[train] packed_compute`) flips the
+//! [`PrimitiveBackend`](tango::primitives::PrimitiveBackend) seam: quantized
+//! SPMM/GEMM run directly on bit-packed sub-byte payloads instead of
+//! dequantizing to f32 first, and the sampled feature gather hands the model
+//! still-packed [`QuantRows`](tango::sampler::QuantRows). Losses and RNG
+//! streams are bit-identical either way; only the memory traffic changes.
 //!
 //! `--metrics-out PATH` (TOML `[metrics] out`) writes the structured
 //! `tango-metrics/v1` JSON run artifact after the run: per-epoch stage
@@ -209,6 +216,9 @@ fn train_config_with_toml(args: &Args, toml: Option<&str>) -> tango::Result<Trai
         cfg.policy.bucket_bits =
             tango::config::parse_bucket_bits(s).map_err(|e| anyhow::anyhow!(e))?;
     }
+    if args.get_bool("packed-compute") {
+        cfg.packed_compute = true;
+    }
     if let Some(t) = args.flags.get("trace") {
         cfg.metrics.trace =
             Some(tango::config::parse_bool(t, "--trace").map_err(|e| anyhow::anyhow!(e))?);
@@ -243,6 +253,9 @@ fn cmd_train(args: &Args) -> tango::Result<()> {
         );
     }
     print_policy_config(&cfg.policy, cfg.mode.bits);
+    if cfg.packed_compute {
+        println!("backend: packed sub-byte kernels (--packed-compute)");
+    }
     apply_metrics_config(&cfg.metrics);
     let mut trainer = Trainer::from_config(&cfg)?;
     let task = trainer.task();
@@ -409,6 +422,9 @@ fn cmd_multigpu(args: &Args) -> tango::Result<()> {
         cfg.train.sampler.prefetch
     );
     print_policy_config(&cfg.train.policy, cfg.train.mode.bits);
+    if cfg.train.packed_compute {
+        println!("backend: packed sub-byte kernels (--packed-compute)");
+    }
     apply_metrics_config(&cfg.train.metrics);
     let report = run_data_parallel(&cfg, &data)?;
     for (i, e) in report.epochs.iter().enumerate() {

@@ -33,8 +33,8 @@ use super::{GnnModel, LossGrad, ModelSpec, TrainMode};
 use crate::graph::{Coo, Incidence};
 use crate::primitives::{
     edge_softmax, edge_softmax_backward, gemm_f32, incidence_spmm, leaky_relu,
-    leaky_relu_backward, qgemm, qgemm_prequantized, qsddmm_add, qsddmm_dot, qspmm_edge_weighted,
-    sddmm_add, sddmm_dot, spmm_edge_weighted,
+    leaky_relu_backward, qgemm, qgemm_prequantized, qsddmm_add, qsddmm_dot, sddmm_add,
+    sddmm_dot, spmm_edge_weighted,
 };
 use crate::quant::rng::Xoshiro256pp;
 use crate::quant::{dequantize, quantize, QTensor, Rounding};
@@ -218,7 +218,7 @@ impl GatModel {
             let (agg, qh_prime) = if quant {
                 let qa = quantize(&alpha, mode.bits, mode.rounding(self.step_count, 600 + l as u64));
                 let qh = quantize(&h_prime, mode.bits, mode.rounding(self.step_count, 700 + l as u64));
-                (qspmm_edge_weighted(&blk.csr, &qa, &qh, heads), Some(qh))
+                (mode.backend.qspmm(&blk.csr, &qa, &qh, heads), Some(qh))
             } else if mode.exact_style {
                 (
                     spmm_edge_weighted(
@@ -320,7 +320,7 @@ impl GatModel {
             // Step 4': ∂H' over the source frontier (reversed-block SPMM).
             let mut dh_prime = if let Some(qg) = &q_grad {
                 let qa = quantize(&cache.alpha, mode.bits, mode.rounding(self.step_count, 900 + l as u64));
-                qspmm_edge_weighted(&blk.csr_rev, &qa, qg, heads)
+                mode.backend.qspmm(&blk.csr_rev, &qa, qg, heads)
             } else if mode.exact_style {
                 spmm_edge_weighted(
                     &blk.csr_rev,
@@ -754,6 +754,29 @@ mod tests {
             }
             assert_eq!(a.params_flat(), b.params_flat());
         }
+    }
+
+    #[test]
+    fn packed_backend_replays_dequantize_backend_exactly() {
+        // Multi-head GAT through PrimitiveBackend::Packed must be bitwise
+        // the dense-i8 run — the seam only changes the SPMM's data layout.
+        use crate::primitives::PrimitiveBackend;
+        let mut packed_mode = TrainMode::tango(8);
+        packed_mode.backend = PrimitiveBackend::Packed;
+        let (mut a, d) = tiny_model(TrainMode::tango(8));
+        let (mut b, _) = tiny_model(packed_mode);
+        let mut opt_a = Sgd::new(0.05);
+        let mut opt_b = Sgd::new(0.05);
+        for _ in 0..2 {
+            let (la, _) = a.train_step(&d.features, &mut opt_a, |lg| {
+                softmax_cross_entropy(lg, &d.labels, &d.train_nodes)
+            });
+            let (lb, _) = b.train_step(&d.features, &mut opt_b, |lg| {
+                softmax_cross_entropy(lg, &d.labels, &d.train_nodes)
+            });
+            assert_eq!(la, lb, "losses must be bitwise equal across backends");
+        }
+        assert_eq!(a.params_flat(), b.params_flat());
     }
 
     #[test]

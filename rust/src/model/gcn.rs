@@ -13,20 +13,22 @@
 //!
 //! - GEMM runs as [`qgemm`] with fused output scale; the quantized inputs
 //!   (`X_q`, `W_q`) are cached for the backward GEMMs (Fig. 10 reuse);
-//! - SPMM runs as [`qspmm_edge_weighted`] on INT8 payloads; sampled blocks
-//!   quantize their edge norms per step (they change every batch), while
-//!   the static identity-block norms are quantized once at build — with
-//!   deterministic nearest rounding the two are bit-identical;
+//! - SPMM runs on INT8 payloads through the
+//!   [`crate::primitives::PrimitiveBackend`] seam (dense-i8 or bit-packed
+//!   kernels — bit-identical arms); sampled blocks quantize their edge
+//!   norms per step (they change every batch), while the static
+//!   identity-block norms are quantized once at build — with deterministic
+//!   nearest rounding the two are bit-identical;
 //! - the backward gradient `∂(XW)` is quantized **once** and reused by both
 //!   backward GEMMs — the inter-primitive caching rule (§3.3);
 //! - the final layer stays FP32 while `fp32_pre_softmax` is set (§3.2).
 
 use super::{GnnModel, LossGrad, ModelSpec, TrainMode};
 use crate::graph::Coo;
-use crate::primitives::{gemm_f32, qgemm, qgemm_prequantized, qspmm_edge_weighted, spmm_csr_values};
+use crate::primitives::{gemm_f32, packed_qgemm, qgemm, qgemm_prequantized, spmm_csr_values};
 use crate::quant::rng::Xoshiro256pp;
 use crate::quant::{dequantize, quantize, QTensor, Rounding};
-use crate::sampler::Block;
+use crate::sampler::{Block, QuantRows};
 use crate::tensor::Dense;
 use std::sync::Arc;
 
@@ -139,10 +141,24 @@ impl GcnModel {
         x0: &Dense<f32>,
     ) -> (Dense<f32>, Vec<LayerCache>) {
         assert_eq!(blocks.len(), self.layers.len(), "one block per layer");
-        let mode = self.cfg.mode;
         let mut caches = Vec::with_capacity(self.layers.len());
-        let mut x = x0.clone();
-        for (l, layer) in self.layers.iter().enumerate() {
+        let out = self.forward_layers_from(blocks, x0.clone(), 0, &mut caches);
+        (out, caches)
+    }
+
+    /// The shared per-layer forward loop from layer `start` on; `x` holds
+    /// input rows for `blocks[start]`'s source nodes. Packed-input steps
+    /// ([`Self::forward_blocks_packed`]) run layer 0 on the packed rows and
+    /// re-enter here at `start = 1`.
+    fn forward_layers_from(
+        &self,
+        blocks: &[&Block],
+        mut x: Dense<f32>,
+        start: usize,
+        caches: &mut Vec<LayerCache>,
+    ) -> Dense<f32> {
+        let mode = self.cfg.mode;
+        for (l, layer) in self.layers.iter().enumerate().skip(start) {
             let blk = blocks[l];
             assert_eq!(x.rows(), blk.num_src(), "layer {l}: input rows != block src nodes");
             let (xw, qx, qw) = if self.layer_quantized(l) {
@@ -165,7 +181,7 @@ impl GcnModel {
                 } else {
                     Self::quantize_block_norm(blk, mode.bits)
                 };
-                (qspmm_edge_weighted(&blk.csr, &qnorm, &qxw, 1), Some(qnorm))
+                (mode.backend.qspmm(&blk.csr, &qnorm, &qxw, 1), Some(qnorm))
             } else if mode.exact_style {
                 (spmm_csr_values(&blk.csr, &blk.norm, &self.exact_roundtrip(&xw)), None)
             } else {
@@ -175,7 +191,51 @@ impl GcnModel {
             caches.push(LayerCache { x: x.clone(), z, qx, qw, qnorm });
             x = out;
         }
-        (x, caches)
+        x
+    }
+
+    /// Packed-input forward: layer 0's GEMM consumes the bit-packed gather
+    /// output directly ([`packed_qgemm`]) — the rows are never expanded to
+    /// one-slot-per-element i8, let alone FP32. Later layers re-enter the
+    /// shared loop. Callers must have checked [`Self::layer_quantized`]`(0)`.
+    fn forward_blocks_packed(
+        &self,
+        blocks: &[&Block],
+        x0: &QuantRows,
+    ) -> (Dense<f32>, Vec<LayerCache>) {
+        assert_eq!(blocks.len(), self.layers.len(), "one block per layer");
+        let mode = self.cfg.mode;
+        let blk = blocks[0];
+        assert_eq!(x0.rows(), blk.num_src(), "layer 0: input rows != block src nodes");
+        let layer = &self.layers[0];
+        let qw = quantize(&layer.w, mode.bits, mode.rounding(self.step_count, 0));
+        let (xw, _) = packed_qgemm(x0, &qw, mode.bits);
+        // Backward's ∂W GEMM wants `X_q` as a dense single-scale tensor:
+        // reuse the packed rows when their policy is uniform, else
+        // re-quantize the dequantized rows at one batch-level scale.
+        let qx = x0.to_qtensor().unwrap_or_else(|| {
+            quantize(&x0.dequantize(), mode.bits, mode.rounding(self.step_count, 0))
+        });
+        let qxw = quantize(&xw, mode.bits, mode.rounding(self.step_count, 100));
+        let qnorm = if std::ptr::eq(blk, self.full_block.as_ref()) {
+            self.full_qnorm.clone()
+        } else {
+            Self::quantize_block_norm(blk, mode.bits)
+        };
+        let z = mode.backend.qspmm(&blk.csr, &qnorm, &qxw, 1);
+        let out = if self.layers.len() > 1 { relu(&z) } else { z.clone() };
+        let mut caches = Vec::with_capacity(self.layers.len());
+        // The FP32 input is never materialized on this path; the quantized
+        // backward arm reads only `qx`/`qw`/`qnorm`, so cache an empty `x`.
+        caches.push(LayerCache {
+            x: Dense::zeros(&[0, 0]),
+            z,
+            qx: Some(qx),
+            qw: Some(qw),
+            qnorm: Some(qnorm),
+        });
+        let logits = self.forward_layers_from(blocks, out, 1, &mut caches);
+        (logits, caches)
     }
 
     /// Per-block edge norms as a quantized `[E, 1]` tensor. Deterministic
@@ -229,6 +289,31 @@ impl GcnModel {
         self.train_step_refs(&refs, x0, opt, loss_grad)
     }
 
+    /// One mini-batch training step whose input arrives bit-packed. When
+    /// layer 0 runs quantized its GEMM consumes the packed rows in place
+    /// ([`packed_qgemm`]); otherwise (FP32 / EXACT first layer) this falls
+    /// back to dequantizing into the dense-input step.
+    pub fn train_step_packed_rows(
+        &mut self,
+        blocks: &[Block],
+        x0: &QuantRows,
+        opt: &mut super::Sgd,
+        loss_grad: impl FnOnce(&Dense<f32>) -> (f32, Dense<f32>),
+    ) -> (f32, Dense<f32>) {
+        if !self.layer_quantized(0) {
+            return self.train_step_blocks(blocks, &x0.dequantize(), opt, loss_grad);
+        }
+        let refs: Vec<&Block> = blocks.iter().collect();
+        let (logits, caches) = self.forward_blocks_packed(&refs, x0);
+        let (loss, dlogits) = loss_grad(&logits);
+        self.backward_blocks(&refs, &caches, dlogits);
+        for (i, layer) in self.layers.iter_mut().enumerate() {
+            opt.step(i, &mut layer.w, &layer.grad_w);
+        }
+        self.step_count += 1;
+        (loss, logits)
+    }
+
     fn train_step_refs(
         &mut self,
         blocks: &[&Block],
@@ -264,7 +349,7 @@ impl GcnModel {
                 let qg = quantize(&grad, mode.bits, mode.rounding(self.step_count, 200 + l as u64));
                 // Reuse the forward's quantized block norms (§3.3 rule).
                 let qnorm = cache.qnorm.as_ref().expect("forward cached block qnorm");
-                qspmm_edge_weighted(&blk.csr_rev, qnorm, &qg, 1)
+                mode.backend.qspmm(&blk.csr_rev, qnorm, &qg, 1)
             } else if mode.exact_style {
                 spmm_csr_values(&blk.csr_rev, &blk.norm, &self.exact_roundtrip(&grad))
             } else {
@@ -379,6 +464,16 @@ impl GnnModel for GcnModel {
         loss_grad: LossGrad,
     ) -> (f32, Dense<f32>) {
         GcnModel::train_step_blocks(self, blocks, x0, opt, |lg| loss_grad(lg))
+    }
+
+    fn train_step_packed(
+        &mut self,
+        blocks: &[Block],
+        x0: &QuantRows,
+        opt: &mut super::Sgd,
+        loss_grad: LossGrad,
+    ) -> (f32, Dense<f32>) {
+        GcnModel::train_step_packed_rows(self, blocks, x0, opt, |lg| loss_grad(lg))
     }
 
     fn first_layer_output(&self, features: &Dense<f32>) -> Dense<f32> {
@@ -591,6 +686,84 @@ mod tests {
             }
             assert_eq!(a.params_flat(), b.params_flat());
         }
+    }
+
+    #[test]
+    fn packed_input_step_tracks_dense_step() {
+        // Feeding the step bit-packed rows (layer-0 GEMM on packed bits)
+        // must track the dense-input step that consumes the dequantized
+        // copy of the same rows. With nearest rounding the quantized codes
+        // survive the round-trip, so the two paths agree to float noise.
+        use crate::sampler::QuantRows;
+        let mode = TrainMode::tango_test2(8);
+        let (mut dense_m, d) = tiny_model(mode);
+        let (mut packed_m, _) = tiny_model(mode);
+        let ident = Block::identity(&d.graph, &d.graph.in_degrees());
+        let blocks = vec![ident.clone(), ident];
+        let q = QuantRows::from_qtensor(&quantize(&d.features, 8, Rounding::Nearest));
+        let x0 = q.dequantize();
+        let mut opt_a = Sgd::new(0.05);
+        let mut opt_b = Sgd::new(0.05);
+        for _ in 0..3 {
+            let (la, _) = dense_m.train_step_blocks(&blocks, &x0, &mut opt_a, |lg| {
+                softmax_cross_entropy(lg, &d.labels, &d.train_nodes)
+            });
+            let (lb, _) = packed_m.train_step_packed_rows(&blocks, &q, &mut opt_b, |lg| {
+                softmax_cross_entropy(lg, &d.labels, &d.train_nodes)
+            });
+            assert!(lb.is_finite());
+            assert!((la - lb).abs() < 1e-3, "packed loss {lb} vs dense {la}");
+        }
+        let pa = dense_m.params_flat();
+        let pb = packed_m.params_flat();
+        let max_diff =
+            pa.iter().zip(pb.iter()).fold(0.0f32, |m, (x, y)| m.max((x - y).abs()));
+        assert!(max_diff < 1e-3, "post-step param diff {max_diff}");
+    }
+
+    #[test]
+    fn packed_input_falls_back_when_layer0_is_fp32() {
+        // FP32 mode can't consume packed rows in layer 0 — the packed step
+        // must be *exactly* the dense step on the dequantized rows.
+        use crate::sampler::QuantRows;
+        let (mut a, d) = tiny_model(TrainMode::fp32());
+        let (mut b, _) = tiny_model(TrainMode::fp32());
+        let ident = Block::identity(&d.graph, &d.graph.in_degrees());
+        let blocks = vec![ident.clone(), ident];
+        let q = QuantRows::from_qtensor(&quantize(&d.features, 8, Rounding::Nearest));
+        let mut opt_a = Sgd::new(0.05);
+        let mut opt_b = Sgd::new(0.05);
+        let (la, _) = a.train_step_blocks(&blocks, &q.dequantize(), &mut opt_a, |lg| {
+            softmax_cross_entropy(lg, &d.labels, &d.train_nodes)
+        });
+        let (lb, _) = b.train_step_packed_rows(&blocks, &q, &mut opt_b, |lg| {
+            softmax_cross_entropy(lg, &d.labels, &d.train_nodes)
+        });
+        assert_eq!(la, lb, "fallback must be bitwise the dense step");
+        assert_eq!(a.params_flat(), b.params_flat());
+    }
+
+    #[test]
+    fn packed_backend_replays_dequantize_backend_exactly() {
+        // Flipping PrimitiveBackend::Packed on changes only *how* the SPMM
+        // consumes its quantized operand — training must be bit-identical.
+        use crate::primitives::PrimitiveBackend;
+        let mut packed_mode = TrainMode::tango(8);
+        packed_mode.backend = PrimitiveBackend::Packed;
+        let (mut a, d) = tiny_model(TrainMode::tango(8));
+        let (mut b, _) = tiny_model(packed_mode);
+        let mut opt_a = Sgd::new(0.05);
+        let mut opt_b = Sgd::new(0.05);
+        for _ in 0..3 {
+            let (la, _) = a.train_step(&d.features, &mut opt_a, |lg| {
+                softmax_cross_entropy(lg, &d.labels, &d.train_nodes)
+            });
+            let (lb, _) = b.train_step(&d.features, &mut opt_b, |lg| {
+                softmax_cross_entropy(lg, &d.labels, &d.train_nodes)
+            });
+            assert_eq!(la, lb, "losses must be bitwise equal across backends");
+        }
+        assert_eq!(a.params_flat(), b.params_flat());
     }
 
     #[test]

@@ -45,8 +45,9 @@ pub use optim::Sgd;
 
 use crate::config::ModelKind;
 use crate::graph::Coo;
+use crate::primitives::PrimitiveBackend;
 use crate::quant::Rounding;
-use crate::sampler::Block;
+use crate::sampler::{BatchInput, Block, QuantRows};
 use crate::tensor::Dense;
 
 /// How a training step executes its primitives.
@@ -65,17 +66,35 @@ pub struct TrainMode {
     pub exact_style: bool,
     /// Quantization bit width.
     pub bits: u8,
+    /// Which kernel family quantized primitives dispatch to — the
+    /// [`PrimitiveBackend`] seam, set from `TrainConfig::packed_compute`.
+    /// Irrelevant (and left at the default) when `quantize` is off.
+    pub backend: PrimitiveBackend,
 }
 
 impl TrainMode {
     /// Full-precision baseline (the paper's "DGL").
     pub fn fp32() -> Self {
-        TrainMode { quantize: false, stochastic: false, fp32_pre_softmax: true, exact_style: false, bits: 8 }
+        TrainMode {
+            quantize: false,
+            stochastic: false,
+            fp32_pre_softmax: true,
+            exact_style: false,
+            bits: 8,
+            backend: PrimitiveBackend::Dequantize,
+        }
     }
 
     /// Tango with all accuracy rules on.
     pub fn tango(bits: u8) -> Self {
-        TrainMode { quantize: true, stochastic: true, fp32_pre_softmax: true, exact_style: false, bits }
+        TrainMode {
+            quantize: true,
+            stochastic: true,
+            fp32_pre_softmax: true,
+            exact_style: false,
+            bits,
+            backend: PrimitiveBackend::Dequantize,
+        }
     }
 
     /// Fig. 7 "Test1": Tango but the pre-softmax layer is quantized too.
@@ -90,7 +109,14 @@ impl TrainMode {
 
     /// The EXACT-style baseline of Fig. 8.
     pub fn exact(bits: u8) -> Self {
-        TrainMode { quantize: false, stochastic: false, fp32_pre_softmax: true, exact_style: true, bits }
+        TrainMode {
+            quantize: false,
+            stochastic: false,
+            fp32_pre_softmax: true,
+            exact_style: true,
+            bits,
+            backend: PrimitiveBackend::Dequantize,
+        }
     }
 
     /// Rounding mode for a given training step (seeds derive from the step
@@ -130,6 +156,8 @@ impl ModelSpec {
     /// Derive a spec from a training config plus the dataset-dependent
     /// dimensions (the one construction rule all training engines share).
     pub fn from_train(cfg: &crate::config::TrainConfig, in_dim: usize, out_dim: usize) -> Self {
+        let mut mode = cfg.mode;
+        mode.backend = PrimitiveBackend::from_flag(cfg.packed_compute);
         ModelSpec {
             kind: cfg.model,
             in_dim,
@@ -137,7 +165,7 @@ impl ModelSpec {
             out_dim,
             heads: cfg.heads,
             layers: cfg.layers,
-            mode: cfg.mode,
+            mode,
         }
     }
 }
@@ -185,6 +213,38 @@ pub trait GnnModel: Send {
         opt: &mut Sgd,
         loss_grad: LossGrad,
     ) -> (f32, Dense<f32>);
+
+    /// One mini-batch training step whose input features arrive bit-packed
+    /// ([`QuantRows`], straight from the quantized gather). The default
+    /// dequantizes to FP32 and runs [`GnnModel::train_step_blocks`]; models
+    /// whose first layer can consume packed rows directly (GCN's layer-0
+    /// GEMM) override this to skip the round-trip.
+    fn train_step_packed(
+        &mut self,
+        blocks: &[Block],
+        x0: &QuantRows,
+        opt: &mut Sgd,
+        loss_grad: LossGrad,
+    ) -> (f32, Dense<f32>) {
+        self.train_step_blocks(blocks, &x0.dequantize(), opt, loss_grad)
+    }
+
+    /// One mini-batch training step over whatever input form the pipeline
+    /// produced ([`BatchInput`]): FP32 rows go to
+    /// [`GnnModel::train_step_blocks`], packed rows to
+    /// [`GnnModel::train_step_packed`].
+    fn train_step_input(
+        &mut self,
+        blocks: &[Block],
+        x0: &BatchInput,
+        opt: &mut Sgd,
+        loss_grad: LossGrad,
+    ) -> (f32, Dense<f32>) {
+        match x0 {
+            BatchInput::F32(x) => self.train_step_blocks(blocks, x, opt, loss_grad),
+            BatchInput::Packed(q) => self.train_step_packed(blocks, q, opt, loss_grad),
+        }
+    }
 
     /// The output of the *first layer* in the current state, evaluated in
     /// FP32 — the tensor the bit-derivation rule (Fig. 2) probes.
@@ -272,6 +332,19 @@ impl GnnModel for AnyModel {
         }
     }
 
+    fn train_step_packed(
+        &mut self,
+        blocks: &[Block],
+        x0: &QuantRows,
+        opt: &mut Sgd,
+        loss_grad: LossGrad,
+    ) -> (f32, Dense<f32>) {
+        match self {
+            AnyModel::Gcn(m) => m.train_step_packed(blocks, x0, opt, loss_grad),
+            AnyModel::Gat(m) => m.train_step_packed(blocks, x0, opt, loss_grad),
+        }
+    }
+
     fn first_layer_output(&self, features: &Dense<f32>) -> Dense<f32> {
         match self {
             AnyModel::Gcn(m) => m.first_layer_output(features),
@@ -317,6 +390,11 @@ mod tests {
         assert!(e.exact_style && !e.quantize);
         let f = TrainMode::fp32();
         assert!(!f.quantize && !f.exact_style);
+        // Every paper arm starts on the dense-i8 reference backend; packed
+        // compute is opted into via TrainConfig::packed_compute.
+        for m in [t, t1, t2, e, f] {
+            assert_eq!(m.backend, PrimitiveBackend::Dequantize);
+        }
     }
 
     #[test]

@@ -313,6 +313,7 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                         labels: &data.labels,
                         lp: batcher.as_ref().map(|b| (b, head.neg_per_pos())),
                         gather: FeatureGather::shared(&data.features, store.as_ref()),
+                        packed: train.packed_compute,
                         times: &times,
                     };
                     let wb = &batches[w];
@@ -377,7 +378,7 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                         BatchTarget::Nc { labels } => {
                             let nodes: Vec<u32> = (0..labels.len() as u32).collect();
                             ws.model
-                                .train_step_blocks(
+                                .train_step_input(
                                     &prepared.blocks,
                                     &prepared.x0,
                                     &mut ws.opt,
@@ -387,7 +388,7 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                         }
                         BatchTarget::Lp { pairs } => {
                             ws.model
-                                .train_step_blocks(
+                                .train_step_input(
                                     &prepared.blocks,
                                     &prepared.x0,
                                     &mut ws.opt,
@@ -600,6 +601,21 @@ mod tests {
             policy.int8_bytes()
         );
         // Deterministic under the mixed policy too.
+        let again = run_data_parallel(&c, &data).unwrap();
+        let l = |r: &MultiGpuReport| r.epochs.iter().map(|e| e.loss).collect::<Vec<f32>>();
+        assert_eq!(l(&r), l(&again));
+    }
+
+    #[test]
+    fn packed_compute_runs_data_parallel() {
+        // Workers consume still-packed gather rows (train_step_input's
+        // Packed arm) — finite losses, deterministic replay.
+        let data = datasets::tiny(10);
+        let mut c = cfg(2, false);
+        c.train.mode = crate::model::TrainMode::tango(8);
+        c.train.packed_compute = true;
+        let r = run_data_parallel(&c, &data).unwrap();
+        assert!(r.epochs.iter().all(|e| e.loss.is_finite()));
         let again = run_data_parallel(&c, &data).unwrap();
         let l = |r: &MultiGpuReport| r.epochs.iter().map(|e| e.loss).collect::<Vec<f32>>();
         assert_eq!(l(&r), l(&again));

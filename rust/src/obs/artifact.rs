@@ -139,6 +139,7 @@ fn train_config_json(cfg: &TrainConfig) -> Json {
         ("heads", int(cfg.heads as u64)),
         ("layers", int(cfg.layers as u64)),
         ("seed", int(cfg.seed)),
+        ("packed_compute", Json::Bool(cfg.packed_compute)),
         (
             "sampler",
             obj(vec![

@@ -47,6 +47,10 @@ pub const TIMED_PRIM_QGEMM: &str = "prim.qgemm";
 pub const TIMED_PRIM_QGEMM_PREQUANTIZED: &str = "prim.qgemm.prequantized";
 /// Multi-layer neighbor-block sampling for one minibatch.
 pub const TIMED_SAMPLER_SAMPLE_BLOCKS: &str = "sampler.sample_blocks";
+/// Edge-weighted SPMM computing directly on bit-packed sub-byte rows.
+pub const TIMED_PRIM_PACKED_SPMM: &str = "prim.packed.spmm";
+/// Dense GEMM over a bit-packed left operand (per-row scales).
+pub const TIMED_PRIM_PACKED_QGEMM: &str = "prim.packed.qgemm";
 
 // ---- counters (obs::counter_add) -------------------------------------------
 
@@ -92,6 +96,8 @@ pub const ALL_STATIC_KEYS: &[&str] = &[
     TIMED_PRIM_QGEMM,
     TIMED_PRIM_QGEMM_PREQUANTIZED,
     TIMED_SAMPLER_SAMPLE_BLOCKS,
+    TIMED_PRIM_PACKED_SPMM,
+    TIMED_PRIM_PACKED_QGEMM,
     CTR_MULTIGPU_ALLREDUCE_WIRE_BYTES,
     CTR_MULTIGPU_ALLREDUCE_ELEMS,
     CTR_PIPELINE_BATCHES_PREPARED,

@@ -17,8 +17,29 @@
 //!
 //! The FP32 versions double as the "cuBLAS/cuSPARSE/DGL" baselines of the
 //! paper's evaluation; the quantized versions are Tango's contributions.
+//!
+//! # Backend dispatch
+//!
+//! Quantized call sites in the models don't hard-code a kernel — they go
+//! through [`PrimitiveBackend`], the seam that selects *how* a quantized
+//! operand is consumed:
+//!
+//! - [`PrimitiveBackend::Dequantize`] (default) runs the dense-i8 kernels
+//!   ([`qspmm_edge_weighted`], [`qgemm_prequantized`]) — one i8 slot per
+//!   element regardless of nominal width;
+//! - [`PrimitiveBackend::Packed`] runs the bit-packed kernels in
+//!   [`packed`] ([`packed_spmm`], [`packed_qgemm`]) — sub-byte rows stay
+//!   packed into the multiply (`--packed-compute`).
+//!
+//! On uniform-scale operands the two arms are bit-identical by
+//! construction (pinned in `tests/packed_kernels.rs`), so flipping the
+//! backend never changes training numerics — only where the bytes and
+//! FLOPs go. This is the same seam the ROADMAP wants for dispatching a
+//! future Pallas/PJRT (or any GPU) artifact per primitive: add a variant,
+//! not a fork of the model code.
 
 pub mod gemm;
+pub mod packed;
 pub mod qgemm;
 pub mod sddmm;
 pub mod softmax;
@@ -26,6 +47,7 @@ pub mod spmm;
 pub mod spmv;
 
 pub use gemm::{gemm_f32, gemm_f32_at_b, gemm_f32_a_bt};
+pub use packed::{packed_qgemm, packed_spmm};
 pub use qgemm::{qgemm, qgemm_prequantized, QGemmOutput};
 pub use sddmm::{
     qsddmm_add, qsddmm_dot, sddmm_add, sddmm_broadcast_dst, sddmm_dot,
@@ -36,3 +58,44 @@ pub use spmm::{
     spmm_edge_weighted, spmm_per_head,
 };
 pub use spmv::{spmm_via_spmvs, spmv_csr};
+
+use crate::graph::Csr;
+use crate::quant::QTensor;
+use crate::sampler::QuantRows;
+use crate::tensor::Dense;
+
+/// The kernel family a quantized call site dispatches to — see the module
+/// docs. Carried on `TrainMode` and set from `TrainConfig::packed_compute`,
+/// so the mini-batch trainer and every multi-GPU worker inherit one choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrimitiveBackend {
+    /// Dense-i8 / dequantize-to-f32 reference kernels (the default).
+    #[default]
+    Dequantize,
+    /// Bit-packed sub-byte kernels ([`packed`]).
+    Packed,
+}
+
+impl PrimitiveBackend {
+    /// Backend for a `packed_compute` flag value.
+    pub fn from_flag(packed: bool) -> Self {
+        if packed {
+            PrimitiveBackend::Packed
+        } else {
+            PrimitiveBackend::Dequantize
+        }
+    }
+
+    /// Edge-weighted SPMM over an already-quantized dense operand,
+    /// dispatched per backend. Both arms are bit-identical (the packed arm
+    /// packs `qh`'s rows at its uniform scale first), so model code can
+    /// route every quantized SPMM through here unconditionally.
+    pub fn qspmm(&self, csr: &Csr, qalpha: &QTensor, qh: &QTensor, heads: usize) -> Dense<f32> {
+        match self {
+            PrimitiveBackend::Dequantize => qspmm_edge_weighted(csr, qalpha, qh, heads),
+            PrimitiveBackend::Packed => {
+                packed_spmm(csr, qalpha, &QuantRows::from_qtensor(qh), heads)
+            }
+        }
+    }
+}

@@ -1,0 +1,321 @@
+//! Kernels that compute **directly on bit-packed sub-byte rows** (paper
+//! §3.3; QGTC direction, PAPERS.md) — the point where the policy's 1/2/4-bit
+//! rows stop being a wire-format trick and start paying at compute time.
+//!
+//! Both kernels consume a [`QuantRows`] payload (LSB-first bitstreams, see
+//! [`crate::quant::pack`]) without ever materializing an f32 copy:
+//!
+//! - [`packed_spmm`] — the rectangular block aggregation
+//!   `out[v] = Σ_e α[e,h] · row[u,(h,d)]`. Rows decode on the fly (nibble /
+//!   crumb LUT lanes for 2/4-bit, raw bytes for 8-bit); the 1-bit ternary
+//!   grid gets a word-level treatment: 64-bit words split into plus/minus
+//!   crumb planes with `AND` masks and `trailing_zeros` walks over the set
+//!   bits only, so zero elements cost nothing. Accumulation is exact i32
+//!   when every row shares one scale (bit-identical to
+//!   [`qspmm_edge_weighted`](super::qspmm_edge_weighted) by construction),
+//!   with a single fused `s_α·s_row` dequantize at the store; mixed-width
+//!   batches fold each edge at its source row's scale instead.
+//! - [`packed_qgemm`] — the dense layer transform `C = A·B` with a packed
+//!   left operand. Mirrors
+//!   [`qgemm_prequantized`](super::qgemm_prequantized)'s panel loop (4-way
+//!   K-unroll, zero-skip, fused output abs-max) but unpacks each A-row once
+//!   per panel row and dequantizes at `s_row[i]·s_B` — bit-identical to the
+//!   dense-i8 kernel on uniform input, per-row-scaled on mixed input.
+//!
+//! The kernels assume on-grid payloads (`|q| <= qmax_for_bits(bits)`),
+//! which every quantizer in the crate guarantees; the ternary word path in
+//! particular relies on `{-1, 0, +1}` crumbs only.
+//!
+//! Equivalence against the dequantize/unpacked reference is pinned in
+//! `tests/packed_kernels.rs`; the speed claim (packed beats
+//! dequantize-to-f32 at ≤4-bit) is asserted by `benches/packed.rs`.
+
+use crate::graph::Csr;
+use crate::quant::QTensor;
+use crate::sampler::QuantRows;
+use crate::tensor::Dense;
+use crate::util::par;
+
+/// Row-panel height per parallel task (mirrors `qgemm_prequantized` so the
+/// uniform case is bit-identical, store order included).
+const PANEL: usize = 64;
+
+/// Mask selecting bit 0 of every 2-bit crumb in a 64-bit word.
+const CRUMB_LO: u64 = 0x5555_5555_5555_5555;
+
+/// Edge-weighted SPMM over bit-packed rows:
+/// `out[v,(h,d)] = Σ_{e=(u→v)} α[e,h] · row[u,(h,d)]`, with `α` a dense-i8
+/// [`QTensor`] (`[E, heads]`) and the node features a packed [`QuantRows`]
+/// (`[N, heads*D]`). Uniform-scale batches accumulate in exact i32 and
+/// dequantize once at `s_α·s_row` (bit-identical to the dense-i8 kernel);
+/// mixed batches fold `s_α·s_row[u]` per edge.
+pub fn packed_spmm(csr: &Csr, qalpha: &QTensor, rows: &QuantRows, heads: usize) -> Dense<f32> {
+    let _t = crate::obs::timed(crate::obs::keys::TIMED_PRIM_PACKED_SPMM);
+    let n = csr.num_nodes;
+    let hd = rows.dim();
+    assert_eq!(qalpha.data.cols(), heads, "alpha must be [E, heads]");
+    assert_eq!(qalpha.data.rows(), csr.num_edges);
+    assert_eq!(hd % heads, 0, "feature dim {hd} not divisible by heads {heads}");
+    let d = hd / heads;
+    let mut out = Dense::zeros(&[n, hd]);
+    match rows.uniform() {
+        Some((s, _)) => {
+            let deq = qalpha.scale * s;
+            par::for_each_chunk(out.data_mut(), hd, |v, orow| {
+                let (srcs, eids) = csr.row(v);
+                let mut acc = vec![0i32; hd];
+                let mut scratch = vec![0i8; hd];
+                for (&u, &e) in srcs.iter().zip(eids.iter()) {
+                    let u = u as usize;
+                    let arow = qalpha.data.row(e as usize);
+                    if heads == 1 && rows.bits[u] == 1 {
+                        ternary_accumulate_i32(&mut acc, rows.packed_row(u), arow[0] as i32);
+                        continue;
+                    }
+                    rows.unpack_row_into(u, &mut scratch);
+                    for hh in 0..heads {
+                        let a = arow[hh] as i32;
+                        let base = hh * d;
+                        for dd in 0..d {
+                            acc[base + dd] += a * scratch[base + dd] as i32;
+                        }
+                    }
+                }
+                for (o, &acc_v) in orow.iter_mut().zip(acc.iter()) {
+                    *o = acc_v as f32 * deq;
+                }
+            });
+        }
+        None => {
+            let s_a = qalpha.scale;
+            par::for_each_chunk(out.data_mut(), hd, |v, orow| {
+                let (srcs, eids) = csr.row(v);
+                let mut scratch = vec![0i8; hd];
+                for (&u, &e) in srcs.iter().zip(eids.iter()) {
+                    let u = u as usize;
+                    let fac = s_a * rows.scales[u];
+                    let arow = qalpha.data.row(e as usize);
+                    if heads == 1 && rows.bits[u] == 1 {
+                        ternary_accumulate_f32(orow, rows.packed_row(u), arow[0] as i32, fac);
+                        continue;
+                    }
+                    rows.unpack_row_into(u, &mut scratch);
+                    for hh in 0..heads {
+                        let a = arow[hh] as i32;
+                        let base = hh * d;
+                        for dd in 0..d {
+                            orow[base + dd] += (a * scratch[base + dd] as i32) as f32 * fac;
+                        }
+                    }
+                }
+            });
+        }
+    }
+    out
+}
+
+/// Word-level ternary accumulation, i32 accumulators: split each 64-bit
+/// word of crumbs into "nonzero" (`bit 0`) and "minus" (`bit 1`) planes and
+/// walk only the set bits. Padding crumbs are `0b00`, so the walk never
+/// touches elements past the row's logical length. Adding `a·t` for
+/// `t ∈ {-1,0,+1}` this way is exactly the generic loop's arithmetic.
+fn ternary_accumulate_i32(acc: &mut [i32], packed: &[u8], a: i32) {
+    if a == 0 {
+        return; // every contribution is a·t = 0
+    }
+    let mut base = 0usize;
+    let mut words = packed.chunks_exact(8);
+    for wbytes in &mut words {
+        let mut arr = [0u8; 8];
+        arr.copy_from_slice(wbytes);
+        let w = u64::from_le_bytes(arr);
+        if w != 0 {
+            let nonzero = w & CRUMB_LO;
+            let minus = (w >> 1) & CRUMB_LO;
+            let mut plus = nonzero & !minus;
+            let mut neg = minus;
+            while plus != 0 {
+                acc[base + (plus.trailing_zeros() >> 1) as usize] += a;
+                plus &= plus - 1;
+            }
+            while neg != 0 {
+                acc[base + (neg.trailing_zeros() >> 1) as usize] -= a;
+                neg &= neg - 1;
+            }
+        }
+        base += 32;
+    }
+    for &b in words.remainder() {
+        let lanes = &crate::quant::pack::CRUMB_LUT[b as usize];
+        let take = (acc.len() - base).min(4);
+        for (j, &t) in lanes[..take].iter().enumerate() {
+            acc[base + j] += a * t as i32;
+        }
+        base += take;
+    }
+}
+
+/// Word-level ternary accumulation, f32 accumulators (the mixed-width SPMM
+/// arm): identical plane walk, contributions pre-scaled by `fac` — bitwise
+/// equal to the generic `(a·t) as f32 * fac` fold for `t ∈ {-1,0,+1}`.
+fn ternary_accumulate_f32(orow: &mut [f32], packed: &[u8], a: i32, fac: f32) {
+    let plus_v = a as f32 * fac;
+    let minus_v = (-a) as f32 * fac;
+    let mut base = 0usize;
+    let mut words = packed.chunks_exact(8);
+    for wbytes in &mut words {
+        let mut arr = [0u8; 8];
+        arr.copy_from_slice(wbytes);
+        let w = u64::from_le_bytes(arr);
+        if w != 0 {
+            let nonzero = w & CRUMB_LO;
+            let minus = (w >> 1) & CRUMB_LO;
+            let mut plus = nonzero & !minus;
+            let mut neg = minus;
+            while plus != 0 {
+                orow[base + (plus.trailing_zeros() >> 1) as usize] += plus_v;
+                plus &= plus - 1;
+            }
+            while neg != 0 {
+                orow[base + (neg.trailing_zeros() >> 1) as usize] += minus_v;
+                neg &= neg - 1;
+            }
+        }
+        base += 32;
+    }
+    for &b in words.remainder() {
+        let lanes = &crate::quant::pack::CRUMB_LUT[b as usize];
+        let take = (orow.len() - base).min(4);
+        for (j, &t) in lanes[..take].iter().enumerate() {
+            orow[base + j] += (a * t as i32) as f32 * fac;
+        }
+        base += take;
+    }
+}
+
+/// Dense GEMM with a bit-packed left operand: `C = A·B` where `A` is a
+/// packed [`QuantRows`] (`[M, K]`, per-row scales) and `B` a dense-i8
+/// [`QTensor`] (`[K, N]`). Each output row dequantizes at `s_row[i]·s_B`;
+/// the output's own scale falls out of the fused store-loop abs-max exactly
+/// as in [`qgemm_prequantized`](super::qgemm_prequantized). Returns
+/// `(C, s_C)`.
+pub fn packed_qgemm(qa: &QuantRows, qb: &QTensor, out_bits: u8) -> (Dense<f32>, f32) {
+    let _t = crate::obs::timed(crate::obs::keys::TIMED_PRIM_PACKED_QGEMM);
+    let (m, k) = (qa.rows(), qa.dim());
+    let (kb, n) = (qb.data.rows(), qb.data.cols());
+    assert_eq!(k, kb, "packed_qgemm inner dims: {k} vs {kb}");
+    let s_b = qb.scale;
+    let mut out = Dense::zeros(&[m, n]);
+    let bd = qb.data.data();
+    let panel_max = std::sync::Mutex::new(0.0f32);
+    par::for_each_chunk(out.data_mut(), PANEL * n, |panel, chunk| {
+        let i0 = panel * PANEL;
+        let rows = chunk.len() / n;
+        let mut acc = vec![0i32; n];
+        let mut arow_buf = vec![0i8; k];
+        let mut local_max = 0.0f32;
+        for r in 0..rows {
+            qa.unpack_row_into(i0 + r, &mut arow_buf);
+            let arow = &arow_buf[..];
+            let deq = qa.scales[i0 + r] * s_b;
+            acc.iter_mut().for_each(|v| *v = 0);
+            // Same INT8×INT8→INT32 dataflow as the dense-i8 kernel: 4-way
+            // K-unroll with zero-skip (sub-byte rows are zero-heavy, so the
+            // skip fires more often the colder the row).
+            let mut kk = 0;
+            while kk + 4 <= k {
+                let a0 = arow[kk] as i32;
+                let a1 = arow[kk + 1] as i32;
+                let a2 = arow[kk + 2] as i32;
+                let a3 = arow[kk + 3] as i32;
+                if a0 | a1 | a2 | a3 != 0 {
+                    let b0 = &bd[kk * n..(kk + 1) * n];
+                    let b1 = &bd[(kk + 1) * n..(kk + 2) * n];
+                    let b2 = &bd[(kk + 2) * n..(kk + 3) * n];
+                    let b3 = &bd[(kk + 3) * n..(kk + 4) * n];
+                    for j in 0..n {
+                        acc[j] += a0 * b0[j] as i32
+                            + a1 * b1[j] as i32
+                            + a2 * b2[j] as i32
+                            + a3 * b3[j] as i32;
+                    }
+                }
+                kk += 4;
+            }
+            while kk < k {
+                let aik = arow[kk] as i32;
+                if aik != 0 {
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        acc[j] += aik * brow[j] as i32;
+                    }
+                }
+                kk += 1;
+            }
+            let crow = &mut chunk[r * n..(r + 1) * n];
+            for j in 0..n {
+                let v = acc[j] as f32 * deq;
+                crow[j] = v;
+                local_max = local_max.max(v.abs());
+            }
+        }
+        let mut g = panel_max.lock().unwrap_or_else(|e| e.into_inner());
+        *g = g.max(local_max);
+    });
+    let absmax = panel_max.into_inner().unwrap_or_else(|e| e.into_inner());
+    let qmax = ((1i32 << (out_bits - 1)) - 1) as f32;
+    let out_scale = if absmax == 0.0 { 1.0 } else { absmax / qmax };
+    (out, out_scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{erdos_renyi, random_features};
+    use crate::primitives::{qgemm_prequantized, qspmm_edge_weighted};
+    use crate::quant::{quantize, Rounding};
+
+    /// Uniform batches: the packed SPMM is bit-identical to the dense-i8
+    /// kernel at every width, including the ternary word path.
+    #[test]
+    fn uniform_packed_spmm_matches_dense_i8_kernel() {
+        let g = erdos_renyi(60, 400, 21);
+        let csr = Csr::from_coo(&g);
+        for (heads, bits) in [(1usize, 8u8), (1, 4), (1, 2), (1, 1), (2, 4), (2, 1)] {
+            let alpha = random_features(400, heads, 22);
+            let h = random_features(60, heads * 12, 23);
+            let qa = quantize(&alpha, 8, Rounding::Nearest);
+            let qh = quantize(&h, bits, Rounding::Nearest);
+            let dense = qspmm_edge_weighted(&csr, &qa, &qh, heads);
+            let packed = packed_spmm(&csr, &qa, &QuantRows::from_qtensor(&qh), heads);
+            assert_eq!(dense, packed, "heads {heads} bits {bits}");
+        }
+    }
+
+    /// Uniform batches: the packed QGEMM is bit-identical to
+    /// `qgemm_prequantized`, fused output scale included.
+    #[test]
+    fn uniform_packed_qgemm_matches_dense_i8_kernel() {
+        for bits in [8u8, 4, 2, 1] {
+            let a = random_features(70, 33, 31);
+            let b = random_features(33, 9, 32);
+            let qa = quantize(&a, bits, Rounding::Nearest);
+            let qb = quantize(&b, 8, Rounding::Nearest);
+            let (dense, s_dense) = qgemm_prequantized(&qa, &qb, 8);
+            let (packed, s_packed) = packed_qgemm(&QuantRows::from_qtensor(&qa), &qb, 8);
+            assert_eq!(dense, packed, "bits {bits}");
+            assert_eq!(s_dense, s_packed, "bits {bits}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha must be [E, heads]")]
+    fn packed_spmm_rejects_bad_alpha_cols() {
+        let g = erdos_renyi(10, 30, 41);
+        let csr = Csr::from_coo(&g);
+        let qa = quantize(&random_features(30, 2, 42), 8, Rounding::Nearest);
+        let qh = quantize(&random_features(10, 8, 43), 4, Rounding::Nearest);
+        // alpha has 2 heads but the call claims 1.
+        let _ = packed_spmm(&csr, &qa, &QuantRows::from_qtensor(&qh), 1);
+    }
+}

@@ -51,6 +51,9 @@ pub fn qspmm_edge_weighted(csr: &Csr, qalpha: &QTensor, qh: &QTensor, heads: usi
     let _t = crate::obs::timed(crate::obs::keys::TIMED_PRIM_QSPMM_EDGE_WEIGHTED);
     let n = csr.num_nodes;
     let hd = qh.data.cols();
+    assert_eq!(qalpha.data.cols(), heads, "alpha must be [E, heads]");
+    assert_eq!(qalpha.data.rows(), csr.num_edges);
+    assert_eq!(hd % heads, 0, "feature dim {hd} not divisible by heads {heads}");
     let d = hd / heads;
     let deq = qalpha.scale * qh.scale;
     let mut out = Dense::zeros(&[n, hd]);
@@ -271,6 +274,30 @@ mod tests {
         let values: Vec<f32> = alpha.data().to_vec();
         let b = spmm_csr_values(&csr, &values, &h);
         assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha must be [E, heads]")]
+    fn quantized_spmm_validates_alpha_head_count() {
+        // Regression: the quantized kernel used to skip the shape checks its
+        // FP32 twin performs and silently computed garbage on a 2-head alpha
+        // passed with heads = 1.
+        let g = erdos_renyi(12, 40, 13);
+        let csr = Csr::from_coo(&g);
+        let qa = quantize(&random_features(40, 2, 14), 8, Rounding::Nearest);
+        let qh = quantize(&random_features(12, 8, 15), 8, Rounding::Nearest);
+        let _ = qspmm_edge_weighted(&csr, &qa, &qh, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible by heads")]
+    fn quantized_spmm_validates_head_divisibility() {
+        let g = erdos_renyi(12, 40, 16);
+        let csr = Csr::from_coo(&g);
+        let qa = quantize(&random_features(40, 3, 17), 8, Rounding::Nearest);
+        // 8 features are not divisible into 3 heads.
+        let qh = quantize(&random_features(12, 8, 18), 8, Rounding::Nearest);
+        let _ = qspmm_edge_weighted(&csr, &qa, &qh, 3);
     }
 
     #[test]

@@ -17,15 +17,19 @@
 //! - [`Rounding`] — nearest vs stochastic rounding (Eq. 3);
 //! - [`quantize`] / [`QTensor`] — symmetric quantize/dequantize (Eq. 1/2);
 //! - [`error_x`] — the relative quantization-error metric (Eq. 4);
-//! - [`derive_bits`] — the lightweight bit-derivation rule (Fig. 2).
+//! - [`derive_bits`] — the lightweight bit-derivation rule (Fig. 2);
+//! - [`pack`] — LSB-first sub-byte bit-packing, the physical layout behind
+//!   `QuantRows` and the packed kernels in [`crate::primitives`].
 
 mod bits;
 mod error;
+pub mod pack;
 pub mod rng;
 mod scheme;
 
 pub use bits::{derive_bits, BitDerivation, DEFAULT_ERROR_TARGET};
 pub use error::{error_x, error_x_quantized, error_x_slice, EPSILON};
+pub use pack::{pack_row, pack_row_into, packed_len, unpack_row, unpack_row_into};
 pub use scheme::{
     dequantize, packed_bits_per_elem, qmax_for_bits, quantize, quantize_slice_nearest,
     quantize_with_scale, scale_for_bits, QTensor, Rounding,

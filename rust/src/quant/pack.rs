@@ -1,0 +1,224 @@
+//! Bit-packing for sub-byte quantized rows (paper §3.3 / QGTC direction).
+//!
+//! A row of `B`-bit quantized values packs at
+//! [`packed_bits_per_elem`]`(B)` physical bits per element into an
+//! LSB-first bitstream: element `i` occupies bits `[i*w, (i+1)*w)` of the
+//! row's byte buffer, where `w = packed_bits_per_elem(B)`. Fields are
+//! two's-complement at width `w`, so unpacking is a shift + sign-extend.
+//! Each row is padded to a whole byte, which makes the packed length equal
+//! the nominal accounting every byte-counting site already charges
+//! ([`packed_len`] == the old "nominal" `packed_row_bytes`).
+//!
+//! Width specifics:
+//!
+//! - **8-bit** rows are a raw `i8 → u8` byte copy (the fast case);
+//! - **4-bit** rows pack two values per byte (nibble pairs) and unpack
+//!   through a 256-entry byte → two-lane LUT;
+//! - **1/2-bit** rows pack four values per byte (crumbs; the 1-bit ternary
+//!   grid `{-1, 0, +1}` needs two physical bits — see
+//!   [`qmax_for_bits`](super::qmax_for_bits)) and unpack through a
+//!   byte → four-lane LUT;
+//! - **3/5/6/7-bit** rows use the generic bit-cursor path.
+//!
+//! Round-trip bit-identity at every width 1..=8 is pinned by the unit
+//! tests here and the property tests in `tests/packed_kernels.rs`.
+
+use super::packed_bits_per_elem;
+
+/// Bytes `n` elements occupy packed at nominal width `bits` (row padded to
+/// a whole byte). This is the same arithmetic the gather/all-reduce byte
+/// accounting has always charged — packing makes it the real allocation.
+#[inline]
+pub fn packed_len(n: usize, bits: u8) -> usize {
+    (n * packed_bits_per_elem(bits)).div_ceil(8)
+}
+
+/// Sign-extend the low `w` bits of `raw` (a two's-complement field).
+#[inline(always)]
+fn sign_extend(raw: u8, w: u32) -> i8 {
+    ((raw << (8 - w)) as i8) >> (8 - w)
+}
+
+/// Byte → four 2-bit lanes (crumbs), sign-extended. Serves both the 2-bit
+/// grid and the 1-bit ternary grid (which stores `{-1, 0, +1}` as crumbs).
+pub(crate) const CRUMB_LUT: [[i8; 4]; 256] = build_crumb_lut();
+
+/// Byte → two 4-bit lanes (nibbles), sign-extended.
+pub(crate) const NIBBLE_LUT: [[i8; 2]; 256] = build_nibble_lut();
+
+const fn build_crumb_lut() -> [[i8; 4]; 256] {
+    let mut t = [[0i8; 4]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut lane = 0usize;
+        while lane < 4 {
+            let raw = ((b >> (2 * lane)) & 0b11) as u8;
+            t[b][lane] = ((raw << 6) as i8) >> 6;
+            lane += 1;
+        }
+        b += 1;
+    }
+    t
+}
+
+const fn build_nibble_lut() -> [[i8; 2]; 256] {
+    let mut t = [[0i8; 2]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut lane = 0usize;
+        while lane < 2 {
+            let raw = ((b >> (4 * lane)) & 0b1111) as u8;
+            t[b][lane] = ((raw << 4) as i8) >> 4;
+            lane += 1;
+        }
+        b += 1;
+    }
+    t
+}
+
+/// Pack a row of quantized values into `out` (must hold exactly
+/// [`packed_len`]`(values.len(), bits)` bytes, pre-zeroed). Values must lie
+/// on the `bits`-bit grid (`|v| <= qmax_for_bits(bits)`), which every
+/// quantizer in the crate guarantees.
+pub fn pack_row_into(values: &[i8], bits: u8, out: &mut [u8]) {
+    let w = packed_bits_per_elem(bits) as u32;
+    debug_assert_eq!(out.len(), packed_len(values.len(), bits));
+    if w == 8 {
+        for (o, &v) in out.iter_mut().zip(values) {
+            *o = v as u8;
+        }
+        return;
+    }
+    let mask = (1u16 << w) - 1;
+    let mut cursor = 0usize; // bit offset into `out`
+    for &v in values {
+        let field = (v as u8 as u16) & mask;
+        let byte = cursor / 8;
+        let shift = (cursor % 8) as u16;
+        out[byte] |= (field << shift) as u8;
+        let spill = shift + w as u16;
+        if spill > 8 {
+            out[byte + 1] |= (field >> (8 - shift)) as u8;
+        }
+        cursor += w as usize;
+    }
+}
+
+/// Pack a row of quantized values at nominal width `bits` into a fresh
+/// buffer of [`packed_len`]`(values.len(), bits)` bytes.
+pub fn pack_row(values: &[i8], bits: u8) -> Vec<u8> {
+    let mut out = vec![0u8; packed_len(values.len(), bits)];
+    pack_row_into(values, bits, &mut out);
+    out
+}
+
+/// Unpack a packed row back to one i8 per element. `out.len()` is the
+/// element count; `packed` must hold [`packed_len`]`(out.len(), bits)`
+/// bytes. Exact inverse of [`pack_row_into`] for on-grid values.
+pub fn unpack_row_into(packed: &[u8], bits: u8, out: &mut [i8]) {
+    let w = packed_bits_per_elem(bits) as u32;
+    debug_assert_eq!(packed.len(), packed_len(out.len(), bits));
+    match w {
+        8 => {
+            for (o, &b) in out.iter_mut().zip(packed) {
+                *o = b as i8;
+            }
+        }
+        4 => {
+            let mut chunks = out.chunks_exact_mut(2);
+            for (pair, &b) in (&mut chunks).zip(packed) {
+                pair.copy_from_slice(&NIBBLE_LUT[b as usize]);
+            }
+            let rem = chunks.into_remainder();
+            if !rem.is_empty() {
+                rem[0] = NIBBLE_LUT[packed[packed.len() - 1] as usize][0];
+            }
+        }
+        2 => {
+            let mut chunks = out.chunks_exact_mut(4);
+            for (quad, &b) in (&mut chunks).zip(packed) {
+                quad.copy_from_slice(&CRUMB_LUT[b as usize]);
+            }
+            let rem = chunks.into_remainder();
+            if !rem.is_empty() {
+                let lanes = &CRUMB_LUT[packed[packed.len() - 1] as usize];
+                rem.copy_from_slice(&lanes[..rem.len()]);
+            }
+        }
+        _ => {
+            let mask = (1u16 << w) - 1;
+            let mut cursor = 0usize;
+            for o in out.iter_mut() {
+                let byte = cursor / 8;
+                let shift = (cursor % 8) as u16;
+                let mut field = (packed[byte] as u16) >> shift;
+                if shift + w as u16 > 8 {
+                    field |= (packed[byte + 1] as u16) << (8 - shift);
+                }
+                *o = sign_extend((field & mask) as u8, w);
+                cursor += w as usize;
+            }
+        }
+    }
+}
+
+/// Unpack a packed row of `n` elements into a fresh i8 vector.
+pub fn unpack_row(packed: &[u8], bits: u8, n: usize) -> Vec<i8> {
+    let mut out = vec![0i8; n];
+    unpack_row_into(packed, bits, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::qmax_for_bits;
+
+    /// Every on-grid value at every width round-trips bit-identically.
+    #[test]
+    fn roundtrip_exhaustive_per_width() {
+        for bits in 1..=8u8 {
+            let qmax = qmax_for_bits(bits) as i8;
+            // All grid values, plus repeats to exercise odd row lengths.
+            let mut values: Vec<i8> = (-qmax..=qmax).collect();
+            values.extend_from_slice(&[0, qmax, -qmax, 1, -1]);
+            for take in [1usize, 2, 3, 4, 5, 7, 8, values.len()] {
+                let row = &values[..take.min(values.len())];
+                let packed = pack_row(row, bits);
+                assert_eq!(packed.len(), packed_len(row.len(), bits), "bits {bits}");
+                let back = unpack_row(&packed, bits, row.len());
+                assert_eq!(back.as_slice(), row, "bits {bits} len {}", row.len());
+            }
+        }
+    }
+
+    /// The packed length is the nominal accounting every byte-counting
+    /// site charges: `ceil(n * packed_bits_per_elem / 8)`.
+    #[test]
+    fn packed_len_matches_nominal_accounting() {
+        assert_eq!(packed_len(16, 8), 16);
+        assert_eq!(packed_len(16, 4), 8);
+        assert_eq!(packed_len(16, 2), 4);
+        assert_eq!(packed_len(16, 1), 4); // ternary charges 2 bits/elem
+        assert_eq!(packed_len(12, 1), 3); // no per-plane padding
+        assert_eq!(packed_len(5, 3), 2);
+        assert_eq!(packed_len(5, 6), 4);
+        assert_eq!(packed_len(0, 4), 0);
+    }
+
+    #[test]
+    fn luts_sign_extend() {
+        // 0b11 crumb = -1, 0b01 = +1, 0b00 = 0.
+        assert_eq!(CRUMB_LUT[0b11_00_01_11], [-1, 1, 0, -1]);
+        // 0b1111 nibble = -1, 0b0111 = 7.
+        assert_eq!(NIBBLE_LUT[0b0111_1111], [-1, 7]);
+        assert_eq!(NIBBLE_LUT[0b1001_0110], [6, -7]);
+    }
+
+    #[test]
+    fn eight_bit_rows_are_raw_bytes() {
+        let row: Vec<i8> = vec![-128, -1, 0, 1, 127];
+        let packed = pack_row(&row, 8);
+        assert_eq!(packed, row.iter().map(|&v| v as u8).collect::<Vec<_>>());
+    }
+}

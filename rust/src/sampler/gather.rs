@@ -18,6 +18,7 @@
 
 use crate::coordinator::qcache::{CacheStats, QuantCache};
 use crate::policy::{BucketGatherStats, FeaturePolicy, PolicyGatherReport};
+use crate::quant::pack::{pack_row, packed_len, unpack_row_into};
 use crate::quant::{packed_bits_per_elem, quantize_slice_nearest, QTensor};
 use crate::tensor::Dense;
 use crate::util::par;
@@ -47,15 +48,24 @@ fn packed_row_bytes(dim: usize, bits: u8) -> u64 {
 }
 
 /// One gathered batch of quantized feature rows under a (possibly mixed)
-/// per-bucket policy: the INT-grid payload plus each row's `(scale, bits)`.
-/// Uniform-policy batches have every row at the same pair, making this the
-/// row-wise generalization of a single batch [`QTensor`].
+/// per-bucket policy: a **bit-packed** payload plus each row's
+/// `(scale, bits)`. Uniform-policy batches have every row at the same pair,
+/// making this the row-wise generalization of a single batch [`QTensor`].
+///
+/// Rows are stored packed at their nominal widths (LSB-first bitstreams,
+/// see [`crate::quant::pack`]), so [`Self::packed_bytes`] is the *actual*
+/// allocation, not nominal accounting — a 4-bit row really occupies half a
+/// byte per element. The packed kernels in [`crate::primitives::packed`]
+/// consume this payload directly; [`Self::dequantize`] is the
+/// dequantize-to-f32 fallback path.
 #[derive(Debug, Clone, PartialEq)]
 pub struct QuantRows {
-    /// Quantized payload, `[rows, F]`, one i8 slot per element (sub-byte
-    /// widths are value-range-restricted; [`Self::packed_bytes`] charges
-    /// the nominal width).
-    pub data: Dense<i8>,
+    /// Bit-packed payload: row `i` occupies `buf[offsets[i]..offsets[i+1]]`.
+    buf: Vec<u8>,
+    /// Row byte boundaries into `buf` (`rows + 1` entries, `offsets[0] = 0`).
+    offsets: Vec<usize>,
+    /// Logical shape `[rows, F]` of the unpacked payload.
+    shape: [usize; 2],
     /// Per-row symmetric scale.
     pub scales: Vec<f32>,
     /// Per-row bit width.
@@ -63,37 +73,114 @@ pub struct QuantRows {
 }
 
 impl QuantRows {
+    /// Pack already-quantized i8 rows (each at `bits[i]` / `scales[i]`)
+    /// into the bit-packed payload. Rows pack in parallel.
+    pub fn from_i8_rows(data: &Dense<i8>, scales: Vec<f32>, bits: Vec<u8>) -> Self {
+        let (rows, dim) = (data.rows(), data.cols());
+        debug_assert_eq!(scales.len(), rows);
+        debug_assert_eq!(bits.len(), rows);
+        let mut offsets = Vec::with_capacity(rows + 1);
+        offsets.push(0usize);
+        for &b in &bits {
+            offsets.push(offsets[offsets.len() - 1] + packed_len(dim, b));
+        }
+        let packed: Vec<Vec<u8>> = par::map_range(rows, |i| pack_row(data.row(i), bits[i]));
+        let mut buf = Vec::with_capacity(offsets[rows]);
+        for r in &packed {
+            buf.extend_from_slice(r);
+        }
+        QuantRows { buf, offsets, shape: [rows, dim], scales, bits }
+    }
+
+    /// Pack a uniform batch [`QTensor`] — every row at the tensor's single
+    /// `(scale, bits)`. This is how the model's block forward hands an
+    /// already-quantized dense operand to the packed kernels.
+    pub fn from_qtensor(q: &QTensor) -> Self {
+        let rows = q.data.rows();
+        Self::from_i8_rows(&q.data, vec![q.scale; rows], vec![q.bits; rows])
+    }
+
     /// Row count.
     pub fn rows(&self) -> usize {
         self.scales.len()
     }
 
-    /// Shape of the payload.
-    pub fn shape(&self) -> &[usize] {
-        self.data.shape()
+    /// Feature dimension (unpacked elements per row).
+    pub fn dim(&self) -> usize {
+        self.shape[1]
     }
 
-    /// Payload bytes if rows were packed at their nominal widths (what a
-    /// GPU kernel would actually move).
+    /// Logical shape `[rows, F]` of the unpacked payload.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Packed payload bytes — the real allocation (each row at its nominal
+    /// width, padded to whole bytes).
     pub fn packed_bytes(&self) -> usize {
-        let dim = self.data.cols();
-        self.bits.iter().map(|&b| packed_row_bytes(dim, b) as usize).sum()
+        self.buf.len()
+    }
+
+    /// The packed bytes of row `i` (an LSB-first bitstream at
+    /// `packed_bits_per_elem(bits[i])` bits per element).
+    pub fn packed_row(&self, i: usize) -> &[u8] {
+        &self.buf[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// Unpack row `i` into `out` (`out.len()` must be [`Self::dim`]).
+    pub fn unpack_row_into(&self, i: usize, out: &mut [i8]) {
+        unpack_row_into(self.packed_row(i), self.bits[i], out);
+    }
+
+    /// Unpack row `i` into a fresh i8 vector.
+    pub fn row_i8(&self, i: usize) -> Vec<i8> {
+        let mut out = vec![0i8; self.dim()];
+        self.unpack_row_into(i, &mut out);
+        out
+    }
+
+    /// Unpack the whole payload to one i8 slot per element (data-parallel,
+    /// one chunk per row) — the 8-bit-style dense view.
+    pub fn unpack_dense(&self) -> Dense<i8> {
+        let dim = self.dim();
+        let mut out: Dense<i8> = Dense::zeros(&self.shape);
+        if dim == 0 || self.scales.is_empty() {
+            return out;
+        }
+        par::for_each_chunk(out.data_mut(), dim, |i, chunk| {
+            unpack_row_into(self.packed_row(i), self.bits[i], chunk);
+        });
+        out
+    }
+
+    /// `Some((scale, bits))` when every row shares one pair — the case
+    /// where the batch is exactly a bit-packed [`QTensor`].
+    pub fn uniform(&self) -> Option<(f32, u8)> {
+        let (&s0, &b0) = (self.scales.first()?, self.bits.first()?);
+        let same = self.scales.iter().all(|&s| s == s0) && self.bits.iter().all(|&b| b == b0);
+        same.then_some((s0, b0))
+    }
+
+    /// Unpack a uniform batch back into a [`QTensor`] (`None` when rows
+    /// carry mixed `(scale, bits)` pairs).
+    pub fn to_qtensor(&self) -> Option<QTensor> {
+        let (scale, bits) = self.uniform()?;
+        Some(QTensor { data: self.unpack_dense(), scale, bits })
     }
 
     /// Dequantize every row at its own scale into a `[rows, F]` FP32
     /// matrix (data-parallel, one chunk per row).
     pub fn dequantize(&self) -> Dense<f32> {
-        let dim = self.data.cols();
-        let mut out: Dense<f32> = Dense::zeros(self.data.shape());
+        let dim = self.dim();
+        let mut out: Dense<f32> = Dense::zeros(&self.shape);
         if dim == 0 || self.scales.is_empty() {
             return out;
         }
-        let data = self.data.data();
-        let scales = &self.scales;
         par::for_each_chunk(out.data_mut(), dim, |i, chunk| {
-            let s = scales[i];
-            let row = &data[i * dim..i * dim + chunk.len()];
-            for (o, &q) in chunk.iter_mut().zip(row) {
+            let s = self.scales[i];
+            let mut row = vec![0i8; dim];
+            unpack_row_into(self.packed_row(i), self.bits[i], &mut row);
+            for (o, &q) in chunk.iter_mut().zip(&row) {
                 *o = q as f32 * s;
             }
         });
@@ -217,18 +304,28 @@ impl QuantFeatureStore {
             };
             (row, err)
         });
-        // Pass 3: parallel assembly from cached + freshly quantized rows.
-        let mut out = Dense::zeros(&[nodes.len(), dim]);
-        if dim > 0 && !nodes.is_empty() {
-            let cache = &self.cache;
-            par::for_each_chunk(out.data_mut(), dim, |i, chunk| {
-                let v = nodes[i];
-                let row: &[i8] = match miss_idx.get(&v) {
-                    Some(&j) => miss_rows[j].0.as_slice(),
-                    None => cache.peek(v as u64).expect("row cached in pass 1").data.data(),
-                };
-                chunk.copy_from_slice(row);
-            });
+        // Pass 3: parallel assembly — each row bit-packs straight from its
+        // i8 source (fresh quantization or cache hit) at its nominal width,
+        // so the batch payload is the real packed allocation. Cached rows
+        // stay dense i8 (repacking a hot row is far cheaper than the
+        // quantization the cache skips, and the cache serves every width).
+        let mut offsets = Vec::with_capacity(nodes.len() + 1);
+        offsets.push(0usize);
+        for &b in &bits {
+            offsets.push(offsets[offsets.len() - 1] + packed_len(dim, b));
+        }
+        let cache = &self.cache;
+        let packed_rows: Vec<Vec<u8>> = par::map_range(nodes.len(), |i| {
+            let v = nodes[i];
+            let row: &[i8] = match miss_idx.get(&v) {
+                Some(&j) => miss_rows[j].0.as_slice(),
+                None => cache.peek(v as u64).expect("row cached in pass 1").data.data(),
+            };
+            pack_row(row, bits[i])
+        });
+        let mut buf = Vec::with_capacity(offsets[nodes.len()]);
+        for r in &packed_rows {
+            buf.extend_from_slice(r);
         }
         // Pass 4: admit the fresh rows (oldest-first eviction under a bound)
         // and, when tracing, fold their measured Error_X into the bucket
@@ -261,7 +358,7 @@ impl QuantFeatureStore {
                 }
             }
         }
-        QuantRows { data: out, scales, bits }
+        QuantRows { buf, offsets, shape: [nodes.len(), dim], scales, bits }
     }
 
     /// Gather and dequantize in one call — what the block forward consumes
@@ -343,7 +440,9 @@ mod tests {
         let q = store.gather_quantized(&f, &nodes);
         let direct =
             quantize_with_scale(&gather_rows(&f, &nodes), store.scale(), 8, Rounding::Nearest);
-        assert_eq!(q.data, direct.data);
+        assert_eq!(q.unpack_dense(), direct.data);
+        assert_eq!(q.packed_bytes(), 4 * 4, "8-bit rows pack 1:1");
+        assert_eq!(q.to_qtensor().expect("uniform batch"), direct);
         assert!(q.scales.iter().all(|&s| s == direct.scale), "uniform rows share the scale");
         assert!(q.bits.iter().all(|&b| b == 8));
         assert_eq!(q.shape(), &[4, 4]);
@@ -374,7 +473,7 @@ mod tests {
             // (the per-bucket scales are static).
             let a = bounded.gather_quantized(&f, chunk);
             let b = unbounded.gather_quantized(&f, chunk);
-            assert_eq!(a.data, b.data);
+            assert_eq!(a, b);
         }
         assert!(bounded.stats().evictions > 0, "{:?}", bounded.stats());
         assert_eq!(unbounded.stats().evictions, 0);
@@ -417,21 +516,28 @@ mod tests {
         let q = store.gather_quantized(&f, &nodes);
         assert_eq!(q.scales, vec![cold_scale, hot_scale, cold_scale, hot_scale]);
         assert_eq!(q.bits, vec![4, 8, 4, 8]);
-        // Every row equals direct quantization at its own (scale, bits).
+        // Every row unpacks to exactly direct quantization at its own
+        // (scale, bits) — packing is lossless on the grid.
         for (i, &v) in nodes.iter().enumerate() {
             let direct =
                 crate::quant::quantize_slice_nearest(f.row(v as usize), q.scales[i], q.bits[i]);
-            assert_eq!(q.data.row(i), direct.as_slice(), "row {i} (node {v})");
+            assert_eq!(q.row_i8(i), direct, "row {i} (node {v})");
         }
+        // Mixed rows never collapse to a single QTensor.
+        assert!(q.uniform().is_none() && q.to_qtensor().is_none());
         // Dequantize honours per-row scales.
         let deq = q.dequantize();
         for i in 0..nodes.len() {
-            for (a, &qv) in deq.row(i).iter().zip(q.data.row(i)) {
+            let row = q.row_i8(i);
+            for (a, &qv) in deq.row(i).iter().zip(row.iter()) {
                 assert_eq!(*a, qv as f32 * q.scales[i]);
             }
         }
-        // Cold rows pack below INT8: 2 hot rows at 6 B + 2 cold at 3 B.
+        // Cold rows really pack below INT8 now: the payload allocation is
+        // 2 hot rows at 6 B + 2 cold (4-bit) rows at 3 B.
         assert_eq!(q.packed_bytes(), 2 * 6 + 2 * 3);
+        assert_eq!(q.packed_row(0).len(), 3, "4-bit row occupies 3 bytes for 6 elems");
+        assert_eq!(q.packed_row(1).len(), 6, "8-bit row packs 1:1");
     }
 
     #[test]

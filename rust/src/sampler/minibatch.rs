@@ -261,6 +261,7 @@ impl MiniBatchTrainer {
             labels: &data.labels,
             lp: edges.as_ref().map(|b| (b, neg_per_pos)),
             gather: FeatureGather::new(&data.features, store.as_mut()),
+            packed: cfg.packed_compute,
             times: &times,
         };
         let mut total = 0.0f32;
@@ -277,14 +278,14 @@ impl MiniBatchTrainer {
                     BatchTarget::Nc { labels } => {
                         let nodes: Vec<u32> = (0..labels.len() as u32).collect();
                         model
-                            .train_step_blocks(&pb.blocks, &pb.x0, opt, &mut |lg| {
+                            .train_step_input(&pb.blocks, &pb.x0, opt, &mut |lg| {
                                 softmax_cross_entropy(lg, labels, &nodes)
                             })
                             .0
                     }
                     BatchTarget::Lp { pairs } => {
                         model
-                            .train_step_blocks(&pb.blocks, &pb.x0, opt, &mut |emb| {
+                            .train_step_input(&pb.blocks, &pb.x0, opt, &mut |emb| {
                                 TaskHead::lp_loss_grad(emb, pairs)
                             })
                             .0
@@ -356,6 +357,21 @@ mod tests {
         assert!(t.gather_cached_bytes() > 0);
         assert_eq!(r.cache, Some(stats));
         assert_eq!(r.cache_bytes, t.gather_cached_bytes());
+    }
+
+    #[test]
+    fn packed_compute_minibatch_learns_tiny() {
+        // End-to-end packed pipeline: gather stays bit-packed into the
+        // model (GCN consumes it in layer 0; GAT dequantizes lazily).
+        for model in [ModelKind::Gcn, ModelKind::Gat] {
+            let mut cfg = mb_cfg(model, "tango", 15);
+            cfg.packed_compute = true;
+            let mut t = MiniBatchTrainer::from_config(&cfg).unwrap();
+            let r = t.run().unwrap();
+            assert!(r.losses.iter().all(|l| l.is_finite()), "{:?}", r.losses);
+            assert!(r.losses.last().unwrap() < &r.losses[0], "{model:?}: {:?}", r.losses);
+            assert!(r.final_eval > 0.3, "{model:?} eval {}", r.final_eval);
+        }
     }
 
     #[test]

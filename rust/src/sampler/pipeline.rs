@@ -29,6 +29,7 @@
 
 use super::{
     gather_rows, sample_lp_step, Block, EdgeBatcher, NeighborSampler, QuantFeatureStore,
+    QuantRows,
 };
 use crate::graph::Csr;
 use crate::tensor::Dense;
@@ -85,14 +86,44 @@ pub enum BatchTarget {
     Lp { pairs: Vec<(u32, u32, f32)> },
 }
 
-/// One fully prepared mini-batch — everything `train_step_blocks` consumes.
+/// The input-feature payload of a prepared batch: dense FP32 rows, or the
+/// quantized gather's bit-packed rows handed to the model untouched
+/// (`packed_compute` — the sub-byte payload stays packed into the layer-0
+/// GEMM instead of round-tripping through FP32).
+#[derive(Debug)]
+pub enum BatchInput {
+    /// Dense FP32 rows (plain gather, or a quantized gather dequantized).
+    F32(Dense<f32>),
+    /// Bit-packed quantized rows straight from the gather.
+    Packed(QuantRows),
+}
+
+impl BatchInput {
+    /// Number of feature rows.
+    pub fn rows(&self) -> usize {
+        match self {
+            BatchInput::F32(x) => x.rows(),
+            BatchInput::Packed(q) => q.rows(),
+        }
+    }
+
+    /// The rows as dense FP32, dequantizing a packed payload.
+    pub fn to_f32(&self) -> Dense<f32> {
+        match self {
+            BatchInput::F32(x) => x.clone(),
+            BatchInput::Packed(q) => q.dequantize(),
+        }
+    }
+}
+
+/// One fully prepared mini-batch — everything `train_step_input` consumes.
 #[derive(Debug)]
 pub struct PreparedBatch {
     /// Per-layer sampled blocks, input-side first.
     pub blocks: Vec<Block>,
-    /// Gathered input features for `blocks[0].src_nodes` (dequantized when
-    /// the run quantizes the gather).
-    pub x0: Dense<f32>,
+    /// Gathered input features for `blocks[0].src_nodes` — FP32, or still
+    /// bit-packed when the stage runs with `packed` set.
+    pub x0: BatchInput,
     /// Loss-side payload.
     pub target: BatchTarget,
 }
@@ -149,6 +180,29 @@ impl<'a> FeatureGather<'a> {
             }
         }
     }
+
+    /// Gather the feature rows of `nodes` in the form the consumer asked
+    /// for: still bit-packed when `packed` is set and the gather is
+    /// quantized (the sub-byte payload skips the dequantize entirely), FP32
+    /// otherwise. A plain gather has no quantized rows to pass through, so
+    /// `packed` degrades to FP32 there.
+    pub fn gather_input(&mut self, nodes: &[u32], packed: bool) -> BatchInput {
+        if !packed {
+            return BatchInput::F32(self.gather(nodes));
+        }
+        match self {
+            FeatureGather::Plain(features) => BatchInput::F32(gather_rows(features, nodes)),
+            FeatureGather::Quantized { features, store } => {
+                BatchInput::Packed(store.gather_quantized(features, nodes))
+            }
+            FeatureGather::Shared { features, store } => BatchInput::Packed(
+                store
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .gather_quantized(features, nodes),
+            ),
+        }
+    }
 }
 
 /// Stage one of the pipeline: sample the blocks for a batch of seeds (nodes
@@ -168,6 +222,9 @@ pub struct SampleStage<'a> {
     pub lp: Option<(&'a EdgeBatcher, usize)>,
     /// The feature gather (plain, quantized-owned or quantized-shared).
     pub gather: FeatureGather<'a>,
+    /// Hand the quantized gather's rows to the model still bit-packed
+    /// (`packed_compute`) instead of dequantizing them to FP32.
+    pub packed: bool,
     /// Run-local sample/gather time accounting this stage charges into.
     pub times: &'a StageTimes,
 }
@@ -193,7 +250,7 @@ impl SampleStage<'_> {
                 let t1 = Instant::now();
                 let x0 = {
                     let _s = crate::obs::span(crate::obs::keys::SPAN_GATHER);
-                    self.gather.gather(&blocks[0].src_nodes)
+                    self.gather.gather_input(&blocks[0].src_nodes, self.packed)
                 };
                 self.times.add_gather(t1.elapsed().as_secs_f64());
                 let labels: Vec<u32> =
@@ -218,7 +275,7 @@ impl SampleStage<'_> {
                 let t1 = Instant::now();
                 let x0 = {
                     let _s = crate::obs::span(crate::obs::keys::SPAN_GATHER);
-                    self.gather.gather(&blocks[0].src_nodes)
+                    self.gather.gather_input(&blocks[0].src_nodes, self.packed)
                 };
                 self.times.add_gather(t1.elapsed().as_secs_f64());
                 PreparedBatch { blocks, x0, target: BatchTarget::Lp { pairs } }

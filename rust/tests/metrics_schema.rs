@@ -65,6 +65,7 @@ fn config_keys(base: &str) -> Vec<String> {
         "lr",
         "mode",
         "model",
+        "packed_compute",
         "policy.bucket_bits[]",
         "policy.degree_buckets[]",
         "sampler.batch_size",

@@ -1,0 +1,216 @@
+//! Property tests for the bit-packed payload and the packed sub-byte
+//! kernels (`quant::pack`, `sampler::QuantRows`, `primitives::packed`):
+//!
+//! - pack → unpack is bit-identical at every nominal width 1..=8;
+//! - `QuantRows::from_qtensor` round-trips the codes and scale exactly;
+//! - on uniform-scale batches the packed kernels are **bit-identical** to
+//!   the dense-i8 reference kernels (`qspmm_edge_weighted`,
+//!   `qgemm_prequantized`) — the invariant that lets `PrimitiveBackend`
+//!   flip without perturbing training numerics;
+//! - on mixed-policy batches (per-row widths and scales) the packed
+//!   kernels match a transliterated per-edge/per-row reference exactly.
+
+use tango::graph::{Coo, Csr};
+use tango::primitives::{
+    packed_qgemm, packed_spmm, qgemm_prequantized, qspmm_edge_weighted, PrimitiveBackend,
+};
+use tango::quant::{pack_row, packed_len, qmax_for_bits, quantize, unpack_row, QTensor, Rounding};
+use tango::sampler::QuantRows;
+use tango::tensor::Dense;
+use tango::util::prop::{check, Gen};
+
+/// A random on-grid i8 value for a nominal width.
+fn grid_i8(g: &mut Gen, bits: u8) -> i8 {
+    let qmax = qmax_for_bits(bits);
+    (g.usize_in(0, 2 * qmax as usize) as i32 - qmax) as i8
+}
+
+fn random_graph(g: &mut Gen, max_nodes: usize, max_edges: usize) -> Coo {
+    let (n, src, dst) = g.graph(max_nodes, max_edges);
+    Coo::new(n, src, dst)
+}
+
+fn random_dense(g: &mut Gen, rows: usize, cols: usize) -> Dense<f32> {
+    Dense::from_vec(&[rows, cols], g.f32_vec(rows * cols, -2.0, 2.0))
+}
+
+/// A random mixed-policy batch: per-row widths and scales, values on each
+/// row's grid. At least two distinct widths, so `uniform()` is `None` and
+/// the kernels take their mixed arms.
+fn random_mixed_rows(g: &mut Gen, m: usize, k: usize) -> QuantRows {
+    const WIDTHS: [u8; 6] = [1, 2, 3, 4, 6, 8];
+    let mut bits: Vec<u8> = (0..m).map(|_| WIDTHS[g.usize_in(0, WIDTHS.len() - 1)]).collect();
+    if m >= 2 && bits.iter().all(|&b| b == bits[0]) {
+        bits[1] = if bits[0] == 2 { 4 } else { 2 };
+    }
+    let scales: Vec<f32> = (0..m).map(|_| g.f32_in(1e-3, 0.5)).collect();
+    let mut data = Dense::<i8>::zeros(&[m, k]);
+    for i in 0..m {
+        let b = bits[i];
+        for v in data.row_mut(i) {
+            *v = grid_i8(g, b);
+        }
+    }
+    QuantRows::from_i8_rows(&data, scales, bits)
+}
+
+/// The mixed-batch SPMM arithmetic, transliterated: fold each edge at
+/// `s_α · s_row[u]` in CSR row order — the exact expression (and f32
+/// evaluation order) `packed_spmm`'s mixed arm uses.
+fn reference_mixed_spmm(csr: &Csr, qalpha: &QTensor, rows: &QuantRows, heads: usize) -> Dense<f32> {
+    let hd = rows.dim();
+    let d = hd / heads;
+    let mut out = Dense::zeros(&[csr.num_nodes, hd]);
+    for v in 0..csr.num_nodes {
+        let orow = out.row_mut(v);
+        let (srcs, eids) = csr.row(v);
+        for (&u, &e) in srcs.iter().zip(eids.iter()) {
+            let u = u as usize;
+            let fac = qalpha.scale * rows.scales[u];
+            let q = rows.row_i8(u);
+            let arow = qalpha.data.row(e as usize);
+            for hh in 0..heads {
+                let a = arow[hh] as i32;
+                for dd in 0..d {
+                    let i = hh * d + dd;
+                    orow[i] += (a * q[i] as i32) as f32 * fac;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The mixed-batch GEMM arithmetic, transliterated: exact i32 row
+/// accumulation, dequantized at `s_row[i] · s_B`, output scale from the
+/// global abs-max. Integer accumulation order is immaterial and the
+/// per-element store expression matches `packed_qgemm`'s, so the comparison
+/// is exact.
+fn reference_mixed_qgemm(qa: &QuantRows, qb: &QTensor, out_bits: u8) -> (Dense<f32>, f32) {
+    let (m, k) = (qa.rows(), qa.dim());
+    let n = qb.data.cols();
+    let mut out = Dense::zeros(&[m, n]);
+    let mut absmax = 0.0f32;
+    for i in 0..m {
+        let arow = qa.row_i8(i);
+        let deq = qa.scales[i] * qb.scale;
+        let crow = out.row_mut(i);
+        for j in 0..n {
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc += arow[kk] as i32 * qb.data.at(kk, j) as i32;
+            }
+            let v = acc as f32 * deq;
+            crow[j] = v;
+            absmax = absmax.max(v.abs());
+        }
+    }
+    let qmax = ((1i32 << (out_bits - 1)) - 1) as f32;
+    let scale = if absmax == 0.0 { 1.0 } else { absmax / qmax };
+    (out, scale)
+}
+
+#[test]
+fn prop_pack_roundtrip_bit_identity_all_widths() {
+    check("pack roundtrip 1..=8", 120, |g| {
+        let bits = g.usize_in(1, 8) as u8;
+        let n = g.usize_in(1, 70);
+        let row: Vec<i8> = (0..n).map(|_| grid_i8(g, bits)).collect();
+        let packed = pack_row(&row, bits);
+        assert_eq!(packed.len(), packed_len(n, bits), "bits {bits} n {n}");
+        assert_eq!(unpack_row(&packed, bits, n), row, "bits {bits} n {n}");
+    });
+}
+
+#[test]
+fn prop_quantrows_roundtrips_qtensor_exactly() {
+    check("QuantRows <-> QTensor", 80, |g| {
+        let m = g.usize_in(1, 40);
+        let k = g.usize_in(1, 48);
+        let bits = [1u8, 2, 4, 8][g.usize_in(0, 3)];
+        let q = quantize(&random_dense(g, m, k), bits, Rounding::Nearest);
+        let rows = QuantRows::from_qtensor(&q);
+        assert_eq!(rows.unpack_dense(), q.data, "codes survive packing");
+        assert_eq!(rows.uniform(), Some((q.scale, q.bits)));
+        let back = rows.to_qtensor().expect("uniform batch converts back");
+        assert_eq!(back.data, q.data);
+        assert_eq!(back.scale, q.scale);
+        assert_eq!(back.bits, q.bits);
+        let nominal: usize = (0..m).map(|_| packed_len(k, bits)).sum();
+        assert_eq!(rows.packed_bytes(), nominal, "no hidden padding");
+    });
+}
+
+#[test]
+fn prop_uniform_packed_spmm_is_bit_identical_to_dense_kernel() {
+    check("uniform packed_spmm == qspmm", 50, |g| {
+        let coo = random_graph(g, 40, 160);
+        if coo.num_edges() == 0 {
+            return;
+        }
+        let csr = Csr::from_coo(&coo);
+        let heads = g.usize_in(1, 2);
+        let d = g.usize_in(1, 10);
+        let bits = [1u8, 2, 4, 8][g.usize_in(0, 3)];
+        let qa = quantize(&random_dense(g, coo.num_edges(), heads), 8, Rounding::Nearest);
+        let qh = quantize(&random_dense(g, coo.num_nodes, heads * d), bits, Rounding::Nearest);
+        let dense = qspmm_edge_weighted(&csr, &qa, &qh, heads);
+        let packed = packed_spmm(&csr, &qa, &QuantRows::from_qtensor(&qh), heads);
+        assert_eq!(dense, packed, "heads {heads} bits {bits}");
+        // The model-facing seam routes through the same kernels.
+        let via_seam = PrimitiveBackend::Packed.qspmm(&csr, &qa, &qh, heads);
+        assert_eq!(dense, via_seam);
+    });
+}
+
+#[test]
+fn prop_uniform_packed_qgemm_is_bit_identical_to_dense_kernel() {
+    check("uniform packed_qgemm == qgemm_prequantized", 50, |g| {
+        let m = g.usize_in(1, 80);
+        let k = g.usize_in(1, 40);
+        let n = g.usize_in(1, 12);
+        let bits = [1u8, 2, 4, 8][g.usize_in(0, 3)];
+        let qa = quantize(&random_dense(g, m, k), bits, Rounding::Nearest);
+        let qb = quantize(&random_dense(g, k, n), 8, Rounding::Nearest);
+        let (dense, s_dense) = qgemm_prequantized(&qa, &qb, 8);
+        let (packed, s_packed) = packed_qgemm(&QuantRows::from_qtensor(&qa), &qb, 8);
+        assert_eq!(dense, packed, "bits {bits}");
+        assert_eq!(s_dense, s_packed, "bits {bits}");
+    });
+}
+
+#[test]
+fn prop_mixed_packed_spmm_matches_reference() {
+    check("mixed packed_spmm == per-edge reference", 50, |g| {
+        let coo = random_graph(g, 30, 120);
+        // Need >= 2 nodes so the batch can carry two distinct widths (a
+        // single-row batch is uniform by construction and would take the
+        // kernel's exact-i32 arm instead of the per-edge fold).
+        if coo.num_edges() == 0 || coo.num_nodes < 2 {
+            return;
+        }
+        let csr = Csr::from_coo(&coo);
+        let heads = g.usize_in(1, 2);
+        let d = g.usize_in(1, 8);
+        let rows = random_mixed_rows(g, coo.num_nodes, heads * d);
+        let qa = quantize(&random_dense(g, coo.num_edges(), heads), 8, Rounding::Nearest);
+        let packed = packed_spmm(&csr, &qa, &rows, heads);
+        let reference = reference_mixed_spmm(&csr, &qa, &rows, heads);
+        assert_eq!(packed, reference);
+    });
+}
+
+#[test]
+fn prop_mixed_packed_qgemm_matches_reference() {
+    check("mixed packed_qgemm == per-row reference", 50, |g| {
+        let m = g.usize_in(2, 80);
+        let k = g.usize_in(1, 40);
+        let n = g.usize_in(1, 12);
+        let qa = random_mixed_rows(g, m, k);
+        let qb = quantize(&random_dense(g, k, n), 8, Rounding::Nearest);
+        let (packed, s_packed) = packed_qgemm(&qa, &qb, 8);
+        let (reference, s_ref) = reference_mixed_qgemm(&qa, &qb, 8);
+        assert_eq!(packed, reference);
+        assert_eq!(s_packed, s_ref);
+    });
+}

@@ -198,7 +198,7 @@ fn prop_quantized_gather_matches_direct_quantization() {
         let q = store.gather_quantized(&feats, &nodes);
         let direct =
             quantize_with_scale(&gather_rows(&feats, &nodes), store.scale(), 8, Rounding::Nearest);
-        assert_eq!(q.data, direct.data, "cached rows must equal direct quantization");
+        assert_eq!(q.unpack_dense(), direct.data, "cached rows must equal direct quantization");
         assert!(q.scales.iter().all(|&s| s == direct.scale), "uniform rows share the scale");
         // Re-gathering the same nodes is all hits, bit-identical.
         let misses_before = store.stats().misses;
@@ -329,7 +329,7 @@ fn prop_mixed_policy_gather_matches_per_row_quantization() {
             assert_eq!(q.bits[i], policy.bits_of(b), "row {i} bits");
             let direct =
                 quantize_slice_nearest(feats.row(v as usize), policy.scale(b), policy.bits_of(b));
-            assert_eq!(q.data.row(i), direct.as_slice(), "row {i} must match direct");
+            assert_eq!(q.row_i8(i), direct, "row {i} must match direct");
         }
         // Re-gathering hits the cache and stays bit-identical.
         let misses_before = store.stats().misses;
