@@ -153,6 +153,6 @@ fn main() {
         ("results", Json::Arr(results)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_packed.json");
-    std::fs::write(path, artifact.to_string()).expect("write BENCH_packed.json");
+    tango::util::fsio::write_atomic(path, &artifact.to_string()).expect("write BENCH_packed.json");
     println!("\nwrote {path}");
 }

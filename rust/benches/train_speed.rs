@@ -115,6 +115,6 @@ fn main() {
         ("results", Json::Arr(results)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_train_speed.json");
-    std::fs::write(path, artifact.to_string()).expect("write BENCH_train_speed.json");
+    tango::util::fsio::write_atomic(path, &artifact.to_string()).expect("write BENCH_train_speed.json");
     println!("wrote {path}");
 }

@@ -5,7 +5,7 @@
 //!
 //! ```toml
 //! [allow.par-slab-invariant]
-//! rule = "P1"                      # D1 | O1 | C1 | P1
+//! rule = "P1"                      # D1 | O1 | C1 | P1 | W1
 //! path = "rust/src/util/par.rs"    # suffix match on the finding's path
 //! contains = "batch claimed twice" # optional: substring of the flagged
 //!                                  # line or message
@@ -66,7 +66,7 @@ impl Allowlist {
             };
             let rule_s = field("rule")?;
             let rule = Rule::parse(&rule_s)
-                .ok_or_else(|| format!("[{sec}]: unknown rule {rule_s:?} (D1|O1|C1|P1)"))?;
+                .ok_or_else(|| format!("[{sec}]: unknown rule {rule_s:?} (D1|O1|C1|P1|W1)"))?;
             let reason = field("reason")?;
             if reason.trim().is_empty() {
                 return Err(format!("[{sec}]: empty reason"));

@@ -19,6 +19,10 @@
 //!   `configs/*.toml`, and vice versa.
 //! - **P1 (no panics)** — no `unwrap()`/`expect()`/`panic!` in library
 //!   code outside tests and benches.
+//! - **W1 (atomic writes)** — no direct `fs::write`/`File::create` in
+//!   library code; artifact and checkpoint files must go through
+//!   [`crate::util::fsio::write_atomic`] (tmp + rename) so a crash
+//!   mid-write never leaves a truncated file behind.
 //!
 //! Vetted exceptions live in `audit.allow.toml` at the repo root, each
 //! with a one-line justification; unused entries are warnings (failures
@@ -54,6 +58,8 @@ pub enum Rule {
     C1,
     /// No `unwrap()`/`expect()`/`panic!` in library code.
     P1,
+    /// Atomic writes: no direct `fs::write`/`File::create` in library code.
+    W1,
 }
 
 impl Rule {
@@ -64,6 +70,7 @@ impl Rule {
             Rule::O1 => "O1",
             Rule::C1 => "C1",
             Rule::P1 => "P1",
+            Rule::W1 => "W1",
         }
     }
 
@@ -74,6 +81,7 @@ impl Rule {
             "O1" => Some(Rule::O1),
             "C1" => Some(Rule::C1),
             "P1" => Some(Rule::P1),
+            "W1" => Some(Rule::W1),
             _ => None,
         }
     }
@@ -195,7 +203,7 @@ mod tests {
 
     #[test]
     fn rule_names_round_trip() {
-        for r in [Rule::D1, Rule::O1, Rule::C1, Rule::P1] {
+        for r in [Rule::D1, Rule::O1, Rule::C1, Rule::P1, Rule::W1] {
             assert_eq!(Rule::parse(r.name()), Some(r));
         }
         assert_eq!(Rule::parse("Z9"), None);

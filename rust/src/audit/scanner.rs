@@ -1,5 +1,5 @@
-//! The per-file line/token scanner: rules D1 (determinism), O1 (obs keys)
-//! and P1 (no panics).
+//! The per-file line/token scanner: rules D1 (determinism), O1 (obs keys),
+//! P1 (no panics) and W1 (atomic writes).
 //!
 //! Deliberately a token scanner, not a parser: the rules are phrased so
 //! that substring + word-boundary checks over non-comment, non-test lines
@@ -25,6 +25,12 @@ const ITER_METHODS: [&str; 7] =
 
 /// Obs entry points whose first argument must be a `obs::keys` constant (O1).
 const OBS_FNS: [&str; 4] = ["span", "timed", "counter_add", "gauge_set"];
+
+/// Direct file-write tokens banned in library code (W1): artifact and
+/// checkpoint writers must go through `util::fsio::write_atomic` so an
+/// interrupted run never leaves a truncated file. The helper's own
+/// `fs::write` is the allowlisted implementation.
+const WRITE_TOKENS: [&str; 2] = ["fs::write(", "File::create("];
 
 fn is_ident_byte(b: u8) -> bool {
     b == b'_' || b.is_ascii_alphanumeric()
@@ -229,6 +235,21 @@ pub fn scan_source(path: &str, text: &str) -> Vec<Finding> {
                     message: format!(
                         "inline string key at `{f}(…)` — name the key in obs::keys and use \
                          the constant"
+                    ),
+                    snippet: snip.clone(),
+                });
+            }
+        }
+
+        for tok in WRITE_TOKENS {
+            if raw.contains(tok) {
+                findings.push(Finding {
+                    rule: Rule::W1,
+                    path: path.to_string(),
+                    line: line_no,
+                    message: format!(
+                        "direct file write `{tok}…)` — route it through \
+                         util::fsio::write_atomic so a crash cannot truncate the file"
                     ),
                     snippet: snip.clone(),
                 });

@@ -30,7 +30,7 @@ fn run() -> tango::Result<bool> {
     let report = audit::run(root, &allow)?;
     print!("{}", report.render_text());
     if let Some(path) = args.flags.get("json") {
-        std::fs::write(path, report.to_json().to_string() + "\n")?;
+        tango::util::fsio::write_atomic(path, &(report.to_json().to_string() + "\n"))?;
         println!("report: {path}");
     }
     Ok(report.ok(deny_warnings))

@@ -1,0 +1,529 @@
+//! Deterministic checkpoint/resume: the `tango-ckpt/v1` artifact.
+//!
+//! A checkpoint captures everything a trainer needs to continue a run
+//! **bit-identically** to the uninterrupted trace: FP32 master weights,
+//! optimizer (momentum) state, the epoch/batch cursor with its partial
+//! loss accumulator, the model's global `step_count` (the stochastic-
+//! rounding stream descriptor — every RNG stream in the crate is derived
+//! from config seeds plus this counter and the cursor, so no generator
+//! state needs serializing), per-bucket policy scales, and the completed
+//! loss/eval traces so a resumed report matches the control's.
+//!
+//! Float payloads are stored as **hex bit patterns** (`f32` → 8 hex chars,
+//! `f64` → 16), not decimal — round-tripping through decimal would be the
+//! one place a resumed run could diverge by an ULP. Writes are atomic
+//! (tmp + rename via [`util::fsio`](crate::util::fsio)), so a crash
+//! mid-save leaves the previous checkpoint intact; loads of corrupt,
+//! truncated or mismatched files return actionable errors, never panic
+//! (`tests/ckpt_schema.rs`).
+//!
+//! A [`Fingerprint`] of the run configuration is validated on resume:
+//! restoring weights into a differently-shaped run would fail late and
+//! confusingly, so mismatches are rejected up front by name.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Schema tag of the checkpoint artifact.
+pub const SCHEMA: &str = "tango-ckpt/v1";
+
+/// Identity of the run a checkpoint belongs to. Every field is validated
+/// on resume; a mismatch is a config error, not a corrupt file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fingerprint {
+    /// Dataset name.
+    pub dataset: String,
+    /// Model architecture (`gcn` / `gat`).
+    pub model: String,
+    /// Quantization mode name.
+    pub mode: String,
+    /// Quantization bit width.
+    pub bits: u32,
+    /// Master RNG seed.
+    pub seed: u64,
+    /// Sampler seed (mini-batch runs).
+    pub sample_seed: u64,
+    /// Simulated worker count (1 for single-process training).
+    pub workers: usize,
+    /// True for mini-batch (sampled) training, false for full-graph.
+    pub sampled: bool,
+}
+
+/// Where training stopped: the next epoch/step to execute plus the
+/// partial per-epoch loss accumulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cursor {
+    /// Epoch to resume into (0-based). Equal to the configured epoch
+    /// count in a run-complete checkpoint.
+    pub epoch: usize,
+    /// Steps of `epoch` already executed; resume skips this many batches
+    /// (or rounds). `step == steps_per_epoch` means the epoch's loop is
+    /// done and only finalization remains.
+    pub step: usize,
+    /// Partial sum of per-step losses inside `epoch` (bit-exact).
+    pub loss_sum: f64,
+    /// Steps already folded into `loss_sum`.
+    pub loss_steps: usize,
+}
+
+/// One serializable `tango-ckpt/v1` checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Producing command: `"train"` or `"multigpu"`.
+    pub command: String,
+    /// Run identity, validated on resume.
+    pub fingerprint: Fingerprint,
+    /// Resume position.
+    pub cursor: Cursor,
+    /// Model global step counter — seeds the stochastic-rounding streams,
+    /// so it must survive a resume for bit-identity.
+    pub step_count: u64,
+    /// Flattened FP32 master weights.
+    pub params: Vec<f32>,
+    /// Optimizer momentum buffers, as exported by
+    /// [`Sgd::export_velocity`](crate::model::Sgd::export_velocity).
+    pub velocity: Vec<Option<(Vec<usize>, Vec<f32>)>>,
+    /// Per-bucket static scales of the degree-aware policy, when active.
+    pub policy_scales: Option<Vec<f32>>,
+    /// Mean loss of each completed epoch (bit-exact).
+    pub losses: Vec<f64>,
+    /// Held-out eval of each completed epoch (bit-exact).
+    pub evals: Vec<f64>,
+}
+
+/// Build the [`Fingerprint`] of a run from its config. Call with the
+/// *effective* config (after `auto_bits` derivation) so the stored width is
+/// the one actually training.
+pub fn fingerprint_of(cfg: &crate::config::TrainConfig, workers: usize, sampled: bool) -> Fingerprint {
+    Fingerprint {
+        dataset: cfg.dataset.clone(),
+        model: crate::config::model_name(cfg.model).to_string(),
+        mode: crate::config::mode_name(&cfg.mode).to_string(),
+        bits: cfg.mode.bits as u32,
+        seed: cfg.seed,
+        sample_seed: cfg.sampler.seed,
+        workers,
+        sampled,
+    }
+}
+
+// ---- hex bit-pattern codecs -------------------------------------------------
+
+/// Encode f32s as concatenated 8-hex-char bit patterns (byte-exact).
+pub fn f32s_to_hex(v: &[f32]) -> String {
+    let mut s = String::with_capacity(v.len() * 8);
+    for f in v {
+        s.push_str(&format!("{:08x}", f.to_bits()));
+    }
+    s
+}
+
+/// Decode a [`f32s_to_hex`] string back to floats.
+pub fn hex_to_f32s(s: &str) -> Result<Vec<f32>, String> {
+    if s.len() % 8 != 0 {
+        return Err(format!("hex f32 payload length {} is not a multiple of 8", s.len()));
+    }
+    s.as_bytes()
+        .chunks(8)
+        .map(|c| {
+            let chunk = std::str::from_utf8(c).map_err(|_| "non-ascii hex".to_string())?;
+            u32::from_str_radix(chunk, 16)
+                .map(f32::from_bits)
+                .map_err(|_| format!("bad hex f32 chunk {chunk:?}"))
+        })
+        .collect()
+}
+
+/// Encode one f64 as a 16-hex-char bit pattern.
+pub fn f64_to_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+/// Decode a [`f64_to_hex`] string.
+pub fn hex_to_f64(s: &str) -> Result<f64, String> {
+    if s.len() != 16 {
+        return Err(format!("hex f64 {s:?} is not 16 chars"));
+    }
+    u64::from_str_radix(s, 16).map(f64::from_bits).map_err(|_| format!("bad hex f64 {s:?}"))
+}
+
+// ---- JSON (de)serialization -------------------------------------------------
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn int(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn hexes(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|x| Json::Str(f64_to_hex(*x))).collect())
+}
+
+impl Checkpoint {
+    /// Serialize to the deterministic `tango-ckpt/v1` JSON value.
+    pub fn to_json(&self) -> Json {
+        let f = &self.fingerprint;
+        let c = &self.cursor;
+        let velocity = Json::Arr(
+            self.velocity
+                .iter()
+                .map(|slot| match slot {
+                    None => Json::Null,
+                    Some((shape, data)) => obj(vec![
+                        ("shape", Json::Arr(shape.iter().map(|&d| int(d as u64)).collect())),
+                        ("data", Json::Str(f32s_to_hex(data))),
+                    ]),
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            ("command", Json::Str(self.command.clone())),
+            (
+                "fingerprint",
+                obj(vec![
+                    ("dataset", Json::Str(f.dataset.clone())),
+                    ("model", Json::Str(f.model.clone())),
+                    ("mode", Json::Str(f.mode.clone())),
+                    ("bits", int(f.bits as u64)),
+                    ("seed", int(f.seed)),
+                    ("sample_seed", int(f.sample_seed)),
+                    ("workers", int(f.workers as u64)),
+                    ("sampled", Json::Bool(f.sampled)),
+                ]),
+            ),
+            (
+                "cursor",
+                obj(vec![
+                    ("epoch", int(c.epoch as u64)),
+                    ("step", int(c.step as u64)),
+                    ("loss_sum", Json::Str(f64_to_hex(c.loss_sum))),
+                    ("loss_steps", int(c.loss_steps as u64)),
+                ]),
+            ),
+            ("step_count", int(self.step_count)),
+            (
+                "params",
+                obj(vec![
+                    ("len", int(self.params.len() as u64)),
+                    ("data", Json::Str(f32s_to_hex(&self.params))),
+                ]),
+            ),
+            ("velocity", velocity),
+            (
+                "policy_scales",
+                match &self.policy_scales {
+                    None => Json::Null,
+                    Some(s) => Json::Str(f32s_to_hex(s)),
+                },
+            ),
+            ("losses", hexes(&self.losses)),
+            ("evals", hexes(&self.evals)),
+        ])
+    }
+
+    /// Rebuild a checkpoint from its JSON value, rejecting wrong schemas
+    /// and structurally broken documents with named-path errors.
+    pub fn from_json(doc: &Json) -> crate::Result<Checkpoint> {
+        let str_at = |path: &str, v: Option<&Json>| -> crate::Result<String> {
+            v.and_then(|j| j.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint field {path} missing or not a string"))
+        };
+        let num_at = |path: &str, v: Option<&Json>| -> crate::Result<u64> {
+            v.and_then(|j| j.as_f64())
+                .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+                .map(|n| n as u64)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("checkpoint field {path} missing or not a non-negative integer")
+                })
+        };
+        let f64_at = |path: &str, v: Option<&Json>| -> crate::Result<f64> {
+            let hex = v
+                .and_then(|j| j.as_str())
+                .ok_or_else(|| anyhow::anyhow!("checkpoint field {path} missing or not a hex string"))?;
+            hex_to_f64(hex).map_err(|e| anyhow::anyhow!("checkpoint field {path}: {e}"))
+        };
+
+        let schema = str_at("schema", doc.get("schema"))?;
+        if schema != SCHEMA {
+            anyhow::bail!("checkpoint schema is {schema:?}, this build reads {SCHEMA:?}");
+        }
+
+        let fp = doc
+            .get("fingerprint")
+            .ok_or_else(|| anyhow::anyhow!("checkpoint field fingerprint missing"))?;
+        let sampled = match fp.get("sampled") {
+            Some(Json::Bool(b)) => *b,
+            _ => anyhow::bail!("checkpoint field fingerprint.sampled missing or not a bool"),
+        };
+        let fingerprint = Fingerprint {
+            dataset: str_at("fingerprint.dataset", fp.get("dataset"))?,
+            model: str_at("fingerprint.model", fp.get("model"))?,
+            mode: str_at("fingerprint.mode", fp.get("mode"))?,
+            bits: num_at("fingerprint.bits", fp.get("bits"))? as u32,
+            seed: num_at("fingerprint.seed", fp.get("seed"))?,
+            sample_seed: num_at("fingerprint.sample_seed", fp.get("sample_seed"))?,
+            workers: num_at("fingerprint.workers", fp.get("workers"))? as usize,
+            sampled,
+        };
+
+        let cur = doc.get("cursor").ok_or_else(|| anyhow::anyhow!("checkpoint field cursor missing"))?;
+        let cursor = Cursor {
+            epoch: num_at("cursor.epoch", cur.get("epoch"))? as usize,
+            step: num_at("cursor.step", cur.get("step"))? as usize,
+            loss_sum: f64_at("cursor.loss_sum", cur.get("loss_sum"))?,
+            loss_steps: num_at("cursor.loss_steps", cur.get("loss_steps"))? as usize,
+        };
+
+        let pj = doc.get("params").ok_or_else(|| anyhow::anyhow!("checkpoint field params missing"))?;
+        let plen = num_at("params.len", pj.get("len"))? as usize;
+        let params = hex_to_f32s(str_at("params.data", pj.get("data"))?.as_str())
+            .map_err(|e| anyhow::anyhow!("checkpoint field params.data: {e}"))?;
+        if params.len() != plen {
+            anyhow::bail!(
+                "checkpoint params.data holds {} floats but params.len says {plen} \
+                 (truncated or corrupted file?)",
+                params.len()
+            );
+        }
+
+        let vel_arr = doc
+            .get("velocity")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("checkpoint field velocity missing or not an array"))?;
+        let mut velocity = Vec::with_capacity(vel_arr.len());
+        for (i, slot) in vel_arr.iter().enumerate() {
+            velocity.push(match slot {
+                Json::Null => None,
+                slot => {
+                    let shape: Vec<usize> = slot
+                        .get("shape")
+                        .and_then(|j| j.as_arr())
+                        .ok_or_else(|| anyhow::anyhow!("checkpoint field velocity[{i}].shape missing"))?
+                        .iter()
+                        .map(|d| {
+                            d.as_usize().ok_or_else(|| {
+                                anyhow::anyhow!("checkpoint field velocity[{i}].shape has a non-integer")
+                            })
+                        })
+                        .collect::<crate::Result<_>>()?;
+                    let data = hex_to_f32s(
+                        str_at(&format!("velocity[{i}].data"), slot.get("data"))?.as_str(),
+                    )
+                    .map_err(|e| anyhow::anyhow!("checkpoint field velocity[{i}].data: {e}"))?;
+                    if data.len() != shape.iter().product::<usize>() {
+                        anyhow::bail!(
+                            "checkpoint velocity[{i}] shape {shape:?} does not match {} floats",
+                            data.len()
+                        );
+                    }
+                    Some((shape, data))
+                }
+            });
+        }
+
+        let policy_scales = match doc.get("policy_scales") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(
+                hex_to_f32s(
+                    j.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("checkpoint field policy_scales not a hex string"))?,
+                )
+                .map_err(|e| anyhow::anyhow!("checkpoint field policy_scales: {e}"))?,
+            ),
+        };
+
+        let trace = |path: &str| -> crate::Result<Vec<f64>> {
+            doc.get(path)
+                .and_then(|j| j.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("checkpoint field {path} missing or not an array"))?
+                .iter()
+                .enumerate()
+                .map(|(i, j)| f64_at(&format!("{path}[{i}]"), Some(j)))
+                .collect()
+        };
+
+        Ok(Checkpoint {
+            command: str_at("command", doc.get("command"))?,
+            fingerprint,
+            cursor,
+            step_count: num_at("step_count", doc.get("step_count"))?,
+            params,
+            velocity,
+            policy_scales,
+            losses: trace("losses")?,
+            evals: trace("evals")?,
+        })
+    }
+
+    /// Atomically write the checkpoint (tmp + rename) — a crash mid-save
+    /// leaves any previous checkpoint at `path` intact.
+    pub fn save(&self, path: &str) -> crate::Result<()> {
+        crate::util::fsio::write_atomic(path, &(self.to_json().to_string() + "\n"))
+            .map_err(|e| anyhow::anyhow!("saving checkpoint {path}: {e}"))?;
+        crate::obs::counter_add(crate::obs::keys::CTR_CKPT_SAVES, 1);
+        Ok(())
+    }
+
+    /// Load and structurally validate a checkpoint. Corrupt, truncated or
+    /// wrong-schema files return errors naming the path and field — never
+    /// a panic.
+    pub fn load(path: &str) -> crate::Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading checkpoint {path}: {e}"))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("checkpoint {path} is not valid JSON ({e}) — truncated write or not a tango-ckpt file?"))?;
+        Self::from_json(&doc).map_err(|e| anyhow::anyhow!("checkpoint {path}: {e}"))
+    }
+
+    /// Reject a resume into a run whose configuration does not match the
+    /// checkpoint's fingerprint, naming every mismatched field.
+    pub fn validate_resume(&self, command: &str, expect: &Fingerprint) -> crate::Result<()> {
+        let mut mismatches = Vec::new();
+        if self.command != command {
+            mismatches.push(format!("command: checkpoint={:?} run={command:?}", self.command));
+        }
+        let f = &self.fingerprint;
+        if f.dataset != expect.dataset {
+            mismatches.push(format!("dataset: checkpoint={:?} run={:?}", f.dataset, expect.dataset));
+        }
+        if f.model != expect.model {
+            mismatches.push(format!("model: checkpoint={:?} run={:?}", f.model, expect.model));
+        }
+        if f.mode != expect.mode {
+            mismatches.push(format!("mode: checkpoint={:?} run={:?}", f.mode, expect.mode));
+        }
+        if f.bits != expect.bits {
+            mismatches.push(format!("bits: checkpoint={} run={}", f.bits, expect.bits));
+        }
+        if f.seed != expect.seed {
+            mismatches.push(format!("seed: checkpoint={} run={}", f.seed, expect.seed));
+        }
+        if f.sample_seed != expect.sample_seed {
+            mismatches.push(format!(
+                "sample_seed: checkpoint={} run={}",
+                f.sample_seed, expect.sample_seed
+            ));
+        }
+        if f.workers != expect.workers {
+            mismatches.push(format!("workers: checkpoint={} run={}", f.workers, expect.workers));
+        }
+        if f.sampled != expect.sampled {
+            mismatches.push(format!("sampled: checkpoint={} run={}", f.sampled, expect.sampled));
+        }
+        if mismatches.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!(
+                "--resume checkpoint does not match this run's configuration: {}",
+                mismatches.join("; ")
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            command: "train".to_string(),
+            fingerprint: Fingerprint {
+                dataset: "karate".to_string(),
+                model: "gcn".to_string(),
+                mode: "int8".to_string(),
+                bits: 8,
+                seed: 7,
+                sample_seed: 11,
+                workers: 1,
+                sampled: true,
+            },
+            cursor: Cursor { epoch: 2, step: 3, loss_sum: 1.25e-3, loss_steps: 3 },
+            step_count: 13,
+            params: vec![1.0, -0.5, f32::MIN_POSITIVE, 0.0],
+            velocity: vec![None, Some((vec![2, 2], vec![0.1, 0.2, 0.3, 0.4]))],
+            policy_scales: Some(vec![0.5, 0.25]),
+            losses: vec![0.9, 0.8],
+            evals: vec![0.5, 0.6],
+        }
+    }
+
+    #[test]
+    fn hex_codecs_roundtrip_bit_patterns() {
+        let vals = [0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, f32::MAX, -123.456, f32::NAN];
+        let back = hex_to_f32s(&f32s_to_hex(&vals)).unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for x in [0.0f64, -1.0, 1e-300, f64::MAX] {
+            assert_eq!(hex_to_f64(&f64_to_hex(x)).unwrap().to_bits(), x.to_bits());
+        }
+        assert!(hex_to_f32s("abc").is_err());
+        assert!(hex_to_f64("zz").is_err());
+        assert!(hex_to_f32s("zzzzzzzz").is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_through_json() {
+        let ck = sample();
+        let back = Checkpoint::from_json(&ck.to_json()).unwrap();
+        assert_eq!(back, ck);
+    }
+
+    #[test]
+    fn save_load_roundtrips_and_is_newline_terminated() {
+        let path = std::env::temp_dir().join("tango_ckpt_roundtrip.json");
+        let path = path.to_str().unwrap();
+        let ck = sample();
+        ck.save(path).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.ends_with('\n'));
+        assert_eq!(Checkpoint::load(path).unwrap(), ck);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn wrong_schema_and_missing_fields_are_named_errors() {
+        let e = Checkpoint::from_json(&Json::parse(r#"{"schema":"tango-ckpt/v9"}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("tango-ckpt/v9"), "{e}");
+        let mut doc = sample().to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("cursor");
+        }
+        let e = Checkpoint::from_json(&doc).unwrap_err().to_string();
+        assert!(e.contains("cursor"), "{e}");
+    }
+
+    #[test]
+    fn truncated_params_are_detected() {
+        let mut doc = sample().to_json();
+        if let Json::Obj(m) = &mut doc {
+            let Some(Json::Obj(p)) = m.get_mut("params") else { panic!() };
+            let Some(Json::Str(s)) = p.get_mut("data") else { panic!() };
+            s.truncate(8); // one float left, len still says 4
+        }
+        let e = Checkpoint::from_json(&doc).unwrap_err().to_string();
+        assert!(e.contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn fingerprint_mismatch_names_every_field() {
+        let ck = sample();
+        let mut other = ck.fingerprint.clone();
+        other.model = "gat".to_string();
+        other.seed = 8;
+        let e = ck.validate_resume("train", &other).unwrap_err().to_string();
+        assert!(e.contains("model") && e.contains("seed"), "{e}");
+        assert!(!e.contains("dataset:"), "matching fields stay out of the message: {e}");
+        let e = ck.validate_resume("multigpu", &ck.fingerprint).unwrap_err().to_string();
+        assert!(e.contains("command"), "{e}");
+        ck.validate_resume("train", &ck.fingerprint).unwrap();
+    }
+}

@@ -89,6 +89,14 @@ pub fn task_name(task: Task) -> &'static str {
     }
 }
 
+/// Canonical name of a model kind (checkpoint fingerprints, artifacts).
+pub fn model_name(kind: ModelKind) -> &'static str {
+    match kind {
+        ModelKind::Gcn => "gcn",
+        ModelKind::Gat => "gat",
+    }
+}
+
 /// Display name of a task's evaluation metric.
 pub fn metric_name(task: Task) -> &'static str {
     match task {
@@ -180,6 +188,86 @@ pub struct MetricsConfig {
     /// Write the structured JSON run artifact (`tango-metrics/v1`) to this
     /// path after the run completes.
     pub out: Option<String>,
+}
+
+/// Checkpoint/resume knobs (the `[ckpt]` TOML section and the
+/// `--ckpt-every` / `--ckpt-path` / `--resume` CLI flags; see
+/// [`crate::ckpt`]). Checkpoints are written atomically and resume is
+/// bit-identical to the uninterrupted run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CkptConfig {
+    /// Save a checkpoint every `every` global training steps (mini-batch
+    /// steps for `tango train --sampler ...`, epochs for full-graph runs,
+    /// all-reduce rounds for `tango multigpu`). 0 = checkpointing off.
+    pub every: usize,
+    /// Where the `tango-ckpt/v1` artifact lands (each save atomically
+    /// replaces the previous one; a final checkpoint is written at run end
+    /// whenever checkpointing is on).
+    pub path: String,
+    /// Restore from this checkpoint before training (`--resume PATH`).
+    pub resume: Option<String>,
+}
+
+impl Default for CkptConfig {
+    fn default() -> Self {
+        CkptConfig { every: 0, path: "tango_ckpt.json".into(), resume: None }
+    }
+}
+
+/// Seeded fault-injection knobs (the `[fault]` TOML section and the
+/// `--inject-faults` family of CLI flags; see [`crate::fault`]). Faults are
+/// scheduled by *global step*, never wall-clock, so injected runs stay
+/// deterministic (audit rule D1) and recovery is testable bit-for-bit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultConfig {
+    /// Master switch; off = no fault machinery touches the run.
+    pub inject: bool,
+    /// Seed for victim selection (which worker/link a scheduled fault hits).
+    pub seed: u64,
+    /// Global steps at which the prefetch producer thread panics
+    /// (`tango train` sampled runs). Listing a step twice schedules two
+    /// consecutive panics — how retry-budget exhaustion is exercised.
+    pub producer_steps: Vec<u64>,
+    /// All-reduce rounds at which a worker fails (`tango multigpu`).
+    pub worker_steps: Vec<u64>,
+    /// All-reduce rounds at which a ring link drops (`tango multigpu`).
+    pub link_steps: Vec<u64>,
+    /// All-reduce rounds at which the shared feature-store lock is
+    /// poisoned (`tango multigpu`, quantized modes).
+    pub lock_steps: Vec<u64>,
+    /// Recovery retry budget per fault event before the run degrades
+    /// (link drops) or dies (producer/worker faults).
+    pub max_retries: usize,
+    /// Base of the simulated exponential backoff charged per retry
+    /// (`backoff_ms * 2^(attempt-1)`, accumulated in the report — never
+    /// slept, never read from a clock).
+    pub backoff_ms: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            inject: false,
+            seed: 0xFA17,
+            producer_steps: Vec::new(),
+            worker_steps: Vec::new(),
+            link_steps: Vec::new(),
+            lock_steps: Vec::new(),
+            max_retries: 2,
+            backoff_ms: 100,
+        }
+    }
+}
+
+/// Parse a comma-separated fault-step list: `"3,5"`, `""` (no faults of
+/// that class). Unlike the fanout/bucket lists, empty is meaningful here.
+pub fn parse_fault_steps(s: &str) -> Result<Vec<u64>, String> {
+    if s.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut out = parse_csv::<u64>(s, "fault step", "--fault-producer-steps 3,5")?;
+    out.sort_unstable();
+    Ok(out)
 }
 
 /// Parse a TOML/CLI boolean (`"true"`/`"false"` only — the same strictness
@@ -323,6 +411,10 @@ pub struct TrainConfig {
     pub task: Option<TaskKind>,
     /// Observability knobs (`[metrics]` / `--trace` / `--metrics-out`).
     pub metrics: MetricsConfig,
+    /// Checkpoint/resume knobs (`[ckpt]` / `--ckpt-every` / `--resume`).
+    pub ckpt: CkptConfig,
+    /// Seeded fault-injection knobs (`[fault]` / `--inject-faults`).
+    pub fault: FaultConfig,
 }
 
 impl Default for TrainConfig {
@@ -345,6 +437,8 @@ impl Default for TrainConfig {
             packed_compute: false,
             task: None,
             metrics: MetricsConfig::default(),
+            ckpt: CkptConfig::default(),
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -452,6 +546,43 @@ impl TrainConfig {
         if let Some(v) = doc.get("metrics", "out") {
             cfg.metrics.out = Some(v.to_string());
         }
+        // Checkpoint/resume knobs live in their own `[ckpt]` section (shared
+        // by `tango train` and `tango multigpu` configs).
+        if let Some(v) = doc.get("ckpt", "ckpt_every") {
+            cfg.ckpt.every = v.parse().map_err(|e| format!("ckpt_every: {e}"))?;
+        }
+        if let Some(v) = doc.get("ckpt", "ckpt_path") {
+            cfg.ckpt.path = v.to_string();
+        }
+        if let Some(v) = doc.get("ckpt", "resume") {
+            cfg.ckpt.resume = Some(v.to_string());
+        }
+        // Fault-injection knobs live in their own `[fault]` section; every
+        // key is fully prefixed so the CLI flags match one-to-one.
+        if let Some(v) = doc.get("fault", "inject_faults") {
+            cfg.fault.inject = parse_bool(v, "inject_faults")?;
+        }
+        if let Some(v) = doc.get("fault", "fault_seed") {
+            cfg.fault.seed = v.parse().map_err(|e| format!("fault_seed: {e}"))?;
+        }
+        if let Some(v) = doc.get("fault", "fault_producer_steps") {
+            cfg.fault.producer_steps = parse_fault_steps(v)?;
+        }
+        if let Some(v) = doc.get("fault", "fault_worker_steps") {
+            cfg.fault.worker_steps = parse_fault_steps(v)?;
+        }
+        if let Some(v) = doc.get("fault", "fault_link_steps") {
+            cfg.fault.link_steps = parse_fault_steps(v)?;
+        }
+        if let Some(v) = doc.get("fault", "fault_lock_steps") {
+            cfg.fault.lock_steps = parse_fault_steps(v)?;
+        }
+        if let Some(v) = doc.get("fault", "fault_max_retries") {
+            cfg.fault.max_retries = v.parse().map_err(|e| format!("fault_max_retries: {e}"))?;
+        }
+        if let Some(v) = doc.get("fault", "fault_backoff_ms") {
+            cfg.fault.backoff_ms = v.parse().map_err(|e| format!("fault_backoff_ms: {e}"))?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -499,6 +630,14 @@ impl TrainConfig {
                  FP32 runs gather full-precision rows and never apply a policy"
                     .to_string(),
             );
+        }
+        // Checkpointing needs somewhere to land; an empty path would only
+        // surface as an I/O error mid-run.
+        if self.ckpt.every > 0 && self.ckpt.path.is_empty() {
+            return Err("ckpt_path must be non-empty when ckpt_every > 0".to_string());
+        }
+        if self.ckpt.resume.as_deref() == Some("") {
+            return Err("--resume needs a checkpoint path".to_string());
         }
         // Packed compute reroutes the *quantized* kernels — an FP32 run has
         // no packed operands to hand them, so the flag would silently do
@@ -742,6 +881,51 @@ bucket_bits = "8,6,4"
         let plain = TrainConfig::from_toml("[train]\nmodel = \"gcn\"\n").unwrap();
         assert_eq!(plain.metrics, MetricsConfig::default());
         assert!(TrainConfig::from_toml("[metrics]\ntrace = \"loud\"\n").is_err());
+    }
+
+    #[test]
+    fn ckpt_section_parses_and_validates() {
+        let text = "[train]\nmodel = \"gcn\"\n\n[ckpt]\nckpt_every = 50\n\
+                    ckpt_path = \"c.json\"\nresume = \"c.json\"\n";
+        let cfg = TrainConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.ckpt.every, 50);
+        assert_eq!(cfg.ckpt.path, "c.json");
+        assert_eq!(cfg.ckpt.resume.as_deref(), Some("c.json"));
+        // Absent section = checkpointing off, default path, no resume.
+        let plain = TrainConfig::from_toml("[train]\nmodel = \"gcn\"\n").unwrap();
+        assert_eq!(plain.ckpt, CkptConfig::default());
+        assert_eq!(plain.ckpt.every, 0);
+        // Degenerate knobs are rejected with actionable messages.
+        let e = TrainConfig::from_toml("[ckpt]\nckpt_every = 5\nckpt_path = \"\"\n").unwrap_err();
+        assert!(e.contains("ckpt_path"), "{e}");
+        assert!(TrainConfig::from_toml("[ckpt]\nckpt_every = \"often\"\n").is_err());
+    }
+
+    #[test]
+    fn fault_section_parses_with_empty_and_repeated_schedules() {
+        let text = "[fault]\ninject_faults = true\nfault_seed = 99\n\
+                    fault_producer_steps = \"5,3,5\"\nfault_worker_steps = \"\"\n\
+                    fault_link_steps = \"2\"\nfault_lock_steps = \"1\"\n\
+                    fault_max_retries = 1\nfault_backoff_ms = 50\n";
+        let cfg = TrainConfig::from_toml(text).unwrap();
+        assert!(cfg.fault.inject);
+        assert_eq!(cfg.fault.seed, 99);
+        // Schedules sort; repeats survive (they exhaust retry budgets).
+        assert_eq!(cfg.fault.producer_steps, vec![3, 5, 5]);
+        assert_eq!(cfg.fault.worker_steps, Vec::<u64>::new());
+        assert_eq!(cfg.fault.link_steps, vec![2]);
+        assert_eq!(cfg.fault.lock_steps, vec![1]);
+        assert_eq!(cfg.fault.max_retries, 1);
+        assert_eq!(cfg.fault.backoff_ms, 50);
+        // Absent section = injection fully off.
+        let plain = TrainConfig::from_toml("[train]\nmodel = \"gcn\"\n").unwrap();
+        assert_eq!(plain.fault, FaultConfig::default());
+        assert!(!plain.fault.inject);
+        // Strict boolean + numeric parsing like the rest of the surface.
+        assert!(TrainConfig::from_toml("[fault]\ninject_faults = \"yes\"\n").is_err());
+        assert!(TrainConfig::from_toml("[fault]\nfault_producer_steps = \"a,b\"\n").is_err());
+        assert_eq!(parse_fault_steps("").unwrap(), Vec::<u64>::new());
+        assert_eq!(parse_fault_steps(" 7 ,2").unwrap(), vec![2, 7]);
     }
 
     #[test]

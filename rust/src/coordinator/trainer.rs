@@ -96,6 +96,9 @@ pub struct TrainReport {
     /// Per-epoch stage breakdown; each entry's `wait + compute + eval`
     /// closes against its measured `wall_s`.
     pub stages: Vec<EpochStages>,
+    /// Fault-injection ledger (`--inject-faults` runs only; `None` when the
+    /// harness is off). Lands in the artifact's `fault` section.
+    pub fault: Option<crate::fault::FaultReport>,
 }
 
 impl TrainReport {
@@ -199,11 +202,37 @@ impl Trainer {
             self.model.set_params_flat(&trained);
             return Ok(report);
         }
+        // Full-graph checkpoints sit at epoch boundaries: one train_step per
+        // epoch means the model's step_count *is* the epoch count, so the
+        // `--ckpt-every` cadence counts epochs here.
+        let fingerprint = crate::ckpt::fingerprint_of(&self.cfg, 1, false);
         let mut losses = Vec::with_capacity(self.cfg.epochs);
         let mut evals = Vec::with_capacity(self.cfg.epochs);
         let mut stages = Vec::with_capacity(self.cfg.epochs);
         let mut wall = 0.0f64;
-        for epoch in 0..self.cfg.epochs {
+        let mut start_epoch = 0usize;
+        if let Some(path) = self.cfg.ckpt.resume.clone() {
+            let ck = crate::ckpt::Checkpoint::load(&path)?;
+            ck.validate_resume("train", &fingerprint)?;
+            if ck.cursor.step != 0 {
+                anyhow::bail!(
+                    "checkpoint {path} has a mid-epoch cursor (step {}), but full-graph \
+                     training checkpoints at epoch boundaries — was it written by a \
+                     --sampler run?",
+                    ck.cursor.step
+                );
+            }
+            self.model.set_params_flat(&ck.params);
+            self.model.set_step_count(ck.step_count);
+            self.opt.import_velocity(ck.velocity.clone());
+            losses = ck.losses.iter().map(|&l| l as f32).collect();
+            evals = ck.evals.iter().map(|&e| e as f32).collect();
+            // Completed epochs carry no timings in a resumed report.
+            stages.resize(ck.cursor.epoch, EpochStages::default());
+            start_epoch = ck.cursor.epoch;
+            crate::obs::counter_add(crate::obs::keys::CTR_CKPT_RESUMES, 1);
+        }
+        for epoch in start_epoch..self.cfg.epochs {
             let _epoch_span = crate::obs::span(crate::obs::keys::SPAN_EPOCH);
             let t_epoch = std::time::Instant::now();
             let (loss, secs) = crate::metrics::time_once(|| self.train_epoch(epoch as u64));
@@ -227,6 +256,17 @@ impl Trainer {
             }
             losses.push(loss);
             evals.push(eval);
+            if self.cfg.ckpt.every > 0
+                && epoch + 1 < self.cfg.epochs
+                && self.model.step_count() % self.cfg.ckpt.every as u64 == 0
+            {
+                self.save_checkpoint(&fingerprint, epoch + 1, &losses, &evals)?;
+            }
+        }
+        // Run-complete checkpoint: the crash-resume CI job byte-compares it
+        // against the control's.
+        if self.cfg.ckpt.every > 0 {
+            self.save_checkpoint(&fingerprint, self.cfg.epochs, &losses, &evals)?;
         }
         let final_eval = *evals.last().unwrap_or(&0.0);
         let final_loss = *losses.last().unwrap_or(&f32::INFINITY);
@@ -246,7 +286,43 @@ impl Trainer {
             policy: None,
             prefetch_wait_s: 0.0,
             stages,
+            // Full-graph runs have no producer/worker/link surface; an
+            // injection-enabled run still reports an (all-zero) ledger so
+            // the artifact's `fault` section reflects the knob.
+            fault: crate::fault::FaultInjector::new(&self.cfg.fault).map(|i| i.report),
         })
+    }
+
+    /// Write an epoch-boundary checkpoint (`cursor.step == 0`).
+    fn save_checkpoint(
+        &self,
+        fingerprint: &crate::ckpt::Fingerprint,
+        next_epoch: usize,
+        losses: &[f32],
+        evals: &[f32],
+    ) -> crate::Result<()> {
+        let ck = crate::ckpt::Checkpoint {
+            command: "train".to_string(),
+            fingerprint: fingerprint.clone(),
+            cursor: crate::ckpt::Cursor {
+                epoch: next_epoch,
+                step: 0,
+                loss_sum: 0.0,
+                loss_steps: 0,
+            },
+            step_count: self.model.step_count(),
+            params: self.model.params_flat(),
+            velocity: self.opt.export_velocity(),
+            policy_scales: None,
+            losses: losses.iter().map(|&l| l as f64).collect(),
+            evals: evals.iter().map(|&e| e as f64).collect(),
+        };
+        ck.save(&self.cfg.ckpt.path)
+    }
+
+    /// Flattened model parameters (bit-identity assertions in tests).
+    pub fn model_params(&self) -> Vec<f32> {
+        self.model.params_flat()
     }
 
     /// One full-graph training step (identity-block execution inside the

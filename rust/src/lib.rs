@@ -52,15 +52,29 @@
 //!   and the `--metrics-out` JSON run artifact — a true no-op when disabled
 //!   via `TANGO_TRACE=0`, so bit-identity and bench numbers are
 //!   unaffected), an analytical GPU cost model, and the PJRT runtime
-//!   that executes jax-lowered artifacts.
+//!   that executes jax-lowered artifacts. Long runs are fault-tolerant:
+//!   the checkpoint subsystem ([`ckpt`]: the versioned `tango-ckpt/v1`
+//!   artifact — master weights, optimizer state, epoch/batch cursor and
+//!   RNG stream descriptors as hex bit patterns, written atomically every
+//!   `--ckpt-every` steps and restored with `--resume`, bit-identical to
+//!   the uninterrupted trace) pairs with a deterministic seeded
+//!   fault-injection harness ([`fault`]: producer panics, worker step
+//!   failures, all-reduce link drops and lock poisoning scheduled by
+//!   global step under `--inject-faults`, recovered via bounded retries
+//!   with simulated exponential backoff, skip-straggler degradation and
+//!   checkpoint replay — every recovery counted in the metrics artifact's
+//!   `fault` section).
 //! - **Static analysis** — [`audit`] and the `tango_audit` binary: a
 //!   zero-dependency, repo-specific pass over `rust/src/**` that enforces
 //!   the invariants the compiler cannot see — determinism (no stray
 //!   clocks, no hash-order iteration; rule D1), the central obs-key
 //!   registry ([`obs::keys`]; rule O1), config-surface symmetry between
-//!   `--flags`, TOML keys and `configs/*.toml` (rule C1), and no panic
-//!   paths in library code (rule P1) — with vetted exceptions in
-//!   `audit.allow.toml`. CI runs it as a blocking job.
+//!   `--flags`, TOML keys and `configs/*.toml` (rule C1), no panic
+//!   paths in library code (rule P1), and atomic persistence — every
+//!   run-artifact write goes through `util::fsio::write_atomic` so a
+//!   crash never leaves a truncated checkpoint or metrics file (rule
+//!   W1) — with vetted exceptions in `audit.allow.toml`. CI runs it as
+//!   a blocking job.
 //! - **Layer 2 (`python/compile/model.py`)** — GCN/GAT forward/backward in
 //!   JAX, AOT-lowered to HLO text under `artifacts/`.
 //! - **Layer 1 (`python/compile/kernels/`)** — Pallas kernels (quantize,
@@ -82,8 +96,10 @@
 //! ```
 
 pub mod audit;
+pub mod ckpt;
 pub mod config;
 pub mod coordinator;
+pub mod fault;
 pub mod graph;
 pub mod metrics;
 pub mod model;

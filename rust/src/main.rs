@@ -8,6 +8,9 @@
 //!              [--batch-size N] [--sample-seed S] [--cache-nodes N]
 //!              [--prefetch N] [--degree-buckets 8,64] [--bucket-bits 8,6,4]
 //!              [--packed-compute] [--metrics-out m.json] [--trace true|false]
+//!              [--ckpt-every N] [--ckpt-path ck.json] [--resume ck.json]
+//!              [--inject-faults] [--fault-seed S] [--fault-producer-steps 3,7]
+//!              [--fault-max-retries N] [--fault-backoff-ms MS]
 //! tango repro  <table1|fig2|fig7|...|fig16|table2|all> [--quick]
 //!              [--epochs N] [--speed-epochs N]
 //! tango plan                # print the derived quantization-caching plan
@@ -19,7 +22,32 @@
 //!                [--sampler neighbor|degree] [--degree-buckets 8,64]
 //!                [--bucket-bits 8,6,4] [--packed-compute]
 //!                [--metrics-out m.json] [--trace true|false]
+//!                [--ckpt-every N] [--ckpt-path ck.json] [--resume ck.json]
+//!                [--inject-faults] [--fault-seed S] [--fault-worker-steps 4]
+//!                [--fault-link-steps 6,6,6] [--fault-lock-steps 2]
+//!                [--fault-max-retries N] [--fault-backoff-ms MS]
 //! ```
+//!
+//! `--ckpt-every N` (TOML `[ckpt] ckpt_every`) writes the `tango-ckpt/v1`
+//! artifact to `--ckpt-path` every N global steps (mini-batch steps on
+//! `train`, all-reduce rounds on `multigpu`, epochs for full-graph runs) —
+//! atomically, each save replacing the last — plus a final run-complete
+//! checkpoint. `--resume PATH` restores weights, optimizer state, the
+//! epoch/batch cursor and the RNG stream descriptors, and continues
+//! **bit-identically** to the uninterrupted run (the config fingerprint is
+//! validated first, so resuming into a different run fails by name).
+//!
+//! `--inject-faults` (TOML `[fault] inject_faults`) arms the deterministic
+//! fault harness: `--fault-producer-steps` panics the prefetch producer at
+//! those global steps (restarted with bounded retries + simulated
+//! exponential backoff), `--fault-worker-steps` fails a multigpu worker
+//! (rebuilt from a peer and replayed), `--fault-link-steps` drops an
+//! all-reduce link (retried, then degraded to skip-straggler past
+//! `--fault-max-retries`), `--fault-lock-steps` poisons the shared store
+//! lock (recovered via `into_inner`). Every fault is scheduled by step
+//! under `--fault-seed` — never wall-clock — so recovered runs stay
+//! bit-identical and the recovery ledger lands in the metrics artifact's
+//! `fault` section.
 //!
 //! `--packed-compute` (TOML `[train] packed_compute`) flips the
 //! [`PrimitiveBackend`](tango::primitives::PrimitiveBackend) seam: quantized
@@ -225,6 +253,35 @@ fn train_config_with_toml(args: &Args, toml: Option<&str>) -> tango::Result<Trai
     }
     if let Some(p) = args.flags.get("metrics-out") {
         cfg.metrics.out = Some(p.clone());
+    }
+    cfg.ckpt.every = flag(args, "ckpt-every", cfg.ckpt.every)?;
+    if let Some(p) = args.flags.get("ckpt-path") {
+        cfg.ckpt.path = p.clone();
+    }
+    if let Some(p) = args.flags.get("resume") {
+        cfg.ckpt.resume = Some(p.clone());
+    }
+    if args.get_bool("inject-faults") {
+        cfg.fault.inject = true;
+    }
+    cfg.fault.seed = flag(args, "fault-seed", cfg.fault.seed)?;
+    cfg.fault.max_retries = flag(args, "fault-max-retries", cfg.fault.max_retries)?;
+    cfg.fault.backoff_ms = flag(args, "fault-backoff-ms", cfg.fault.backoff_ms)?;
+    if let Some(s) = args.flags.get("fault-producer-steps") {
+        cfg.fault.producer_steps =
+            tango::config::parse_fault_steps(s).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(s) = args.flags.get("fault-worker-steps") {
+        cfg.fault.worker_steps =
+            tango::config::parse_fault_steps(s).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(s) = args.flags.get("fault-link-steps") {
+        cfg.fault.link_steps =
+            tango::config::parse_fault_steps(s).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(s) = args.flags.get("fault-lock-steps") {
+        cfg.fault.lock_steps =
+            tango::config::parse_fault_steps(s).map_err(|e| anyhow::anyhow!(e))?;
     }
     cfg.log_every = flag(args, "log-every", 10)?;
     // Reject degenerate knob combinations (e.g. `--batch-size 0`) with an

@@ -374,6 +374,26 @@ impl GnnModel for AnyModel {
     }
 }
 
+impl AnyModel {
+    /// Training steps taken so far — the counter that seeds each step's
+    /// stochastic-rounding streams. Checkpoints must carry it: restoring
+    /// parameters without it would replay different rounding noise.
+    pub fn step_count(&self) -> u64 {
+        match self {
+            AnyModel::Gcn(m) => m.step_count,
+            AnyModel::Gat(m) => m.step_count,
+        }
+    }
+
+    /// Restore the step counter (resume-from-checkpoint).
+    pub fn set_step_count(&mut self, steps: u64) {
+        match self {
+            AnyModel::Gcn(m) => m.step_count = steps,
+            AnyModel::Gat(m) => m.step_count = steps,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

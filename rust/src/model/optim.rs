@@ -52,6 +52,24 @@ impl Sgd {
             param.axpy_neg(self.lr, &effective);
         }
     }
+
+    /// Snapshot the per-parameter momentum buffers for checkpointing:
+    /// `(shape, data)` per populated slot, `None` for never-touched slots.
+    pub fn export_velocity(&self) -> Vec<Option<(Vec<usize>, Vec<f32>)>> {
+        self.velocity
+            .iter()
+            .map(|v| v.as_ref().map(|d| (d.shape().to_vec(), d.data().to_vec())))
+            .collect()
+    }
+
+    /// Restore momentum buffers snapshotted by [`export_velocity`] —
+    /// resume-from-checkpoint is bit-identical even mid-momentum.
+    pub fn import_velocity(&mut self, state: Vec<Option<(Vec<usize>, Vec<f32>)>>) {
+        self.velocity = state
+            .into_iter()
+            .map(|v| v.map(|(shape, data)| Dense::from_vec(&shape, data)))
+            .collect();
+    }
 }
 
 #[cfg(test)]

@@ -29,7 +29,9 @@
 
 use super::allreduce::{allreduce_payload_bits, ring_allreduce_bits, ring_messages};
 use super::interconnect::Interconnect;
+use crate::ckpt::{fingerprint_of, Checkpoint, Cursor};
 use crate::config::{TaskKind, TomlDoc, TrainConfig};
+use crate::fault::{poison_lock, recover_poisoned_lock, FaultClass, FaultInjector, FaultReport};
 use crate::coordinator::qcache::CacheStats;
 use crate::graph::datasets::{Dataset, Task};
 use crate::graph::partition::partition_nodes;
@@ -170,6 +172,12 @@ pub struct MultiGpuReport {
     /// Per-bucket gather accounting of the degree-aware mixed-precision
     /// policy driving the shared store (None in FP32 mode).
     pub policy: Option<PolicyGatherReport>,
+    /// Final lockstep model parameters (bit-identity assertions in the
+    /// crash/resume tests).
+    pub final_params: Vec<f32>,
+    /// Fault-injection ledger (`--inject-faults` runs only; `None` when the
+    /// harness is off). Lands in the artifact's `fault` section.
+    pub fault: Option<FaultReport>,
 }
 
 impl MultiGpuReport {
@@ -287,14 +295,88 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
     let grad_bits = if train.mode.quantize { train.mode.bits } else { 8 };
     let wire_bits = if cfg.quantize_grads { Some(grad_bits) } else { None };
 
+    // Per-epoch batch counts are shuffle-invariant (shuffling permutes a
+    // shard, never resizes it), so the checkpoint cadence, the fault
+    // schedules and the resume replay of every worker's step counter all
+    // derive from the same deterministic `lens`.
+    let lens: Vec<usize> = shards.iter().map(|s| s.len().div_ceil(batch_size)).collect();
+    let steps_per_epoch = lens.iter().copied().max().unwrap_or(0);
+    let fingerprint = fingerprint_of(train, k, true);
+    let policy_scales: Option<Vec<f32>> = store.as_ref().map(|m| {
+        let g = m.lock().unwrap_or_else(|e| e.into_inner());
+        let p = g.policy();
+        (0..p.num_buckets()).map(|b| p.scale(b)).collect()
+    });
+
     let mut epochs = Vec::with_capacity(cfg.epochs);
-    for epoch in 0..cfg.epochs {
+    let mut start_epoch = 0usize;
+    let mut resume_round = 0usize;
+    let mut resume_acc = (0.0f32, 0usize);
+    if let Some(path) = train.ckpt.resume.clone() {
+        let ck = Checkpoint::load(&path)?;
+        ck.validate_resume("multigpu", &fingerprint)?;
+        if let (Some(stored), Some(current)) = (&ck.policy_scales, &policy_scales) {
+            if stored != current {
+                anyhow::bail!(
+                    "--resume checkpoint {path}: stored policy scales differ from this \
+                     run's materialized policy — the dataset features or the \
+                     degree-buckets/bucket-bits config changed since the checkpoint"
+                );
+            }
+        }
+        let (e, s) = (ck.cursor.epoch, ck.cursor.step);
+        // Workers re-enter lockstep with the checkpointed params; each
+        // worker's step counter (its stochastic-rounding stream descriptor)
+        // is replayed from its deterministic participation count — a worker
+        // steps in round `r` of an epoch iff `r < lens[w]`.
+        for (w, ws) in workers.iter().enumerate() {
+            let mut g = ws.lock().unwrap_or_else(|err| err.into_inner());
+            g.model.set_params_flat(&ck.params);
+            g.model.set_step_count((e * lens[w] + s.min(lens[w])) as u64);
+            g.opt.import_velocity(ck.velocity.clone());
+        }
+        let expect0 = (e * lens[0] + s.min(lens[0])) as u64;
+        if ck.step_count != expect0 {
+            anyhow::bail!(
+                "--resume checkpoint {path}: stored step_count {} does not match the \
+                 replayed count {expect0} at cursor (epoch {e}, step {s}) — shard sizes or \
+                 batch size changed since the checkpoint",
+                ck.step_count
+            );
+        }
+        // Completed epochs carry their checkpointed losses but no timings.
+        for le in 0..e.min(cfg.epochs) {
+            epochs.push(EpochStats {
+                steps: steps_per_epoch,
+                compute_s: 0.0,
+                comm_s: 0.0,
+                wait_s: 0.0,
+                sample_s: 0.0,
+                gather_s: 0.0,
+                loss: ck.losses.get(le).copied().unwrap_or(0.0) as f32,
+            });
+        }
+        start_epoch = e;
+        if s > 0 || ck.cursor.loss_steps > 0 {
+            resume_round = s;
+            resume_acc = (ck.cursor.loss_sum as f32, ck.cursor.loss_steps);
+        }
+        crate::obs::counter_add(crate::obs::keys::CTR_CKPT_RESUMES, 1);
+    }
+    let mut injector = FaultInjector::new(&train.fault);
+    for epoch in start_epoch..cfg.epochs {
         // Per-epoch reshuffle of every shard (same mixer as the single-GPU
         // sweep) — the fix for the "same fixed prefix every epoch" bug.
         let shuffle_seed = mix_seeds(&[train.seed, epoch as u64]);
         let batches: Vec<Vec<Vec<u32>>> =
             shards.iter().map(|s| shuffled_batches(s, batch_size, shuffle_seed)).collect();
         let steps = batches.iter().map(|b| b.len()).max().unwrap_or(0);
+        debug_assert_eq!(steps, steps_per_epoch);
+        // Mid-epoch resume: the first epoch after --resume fast-forwards to
+        // the checkpoint's round cursor and re-enters with its checkpointed
+        // loss accumulator; later epochs start from round 0 as usual.
+        let skip = if epoch == start_epoch { resume_round.min(steps) } else { 0 };
+        let acc = if epoch == start_epoch { resume_acc } else { (0.0f32, 0usize) };
         // The whole epoch runs inside one thread scope: each worker's
         // stage-one producer prefetches its shard's batches while the
         // synchronous step rounds below consume them.
@@ -323,9 +405,10 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                         BatchSource::Prefetched(Mutex::new(spawn_producer(
                             scope,
                             prefetch,
-                            wb.len(),
+                            wb.len().saturating_sub(skip),
                             move |bi| {
-                                st.prepare(&wb[bi], mix_seeds(&[epoch as u64, bi as u64]))
+                                let abs = skip + bi;
+                                st.prepare(&wb[abs], mix_seeds(&[epoch as u64, abs as u64]))
                             },
                         )))
                     }
@@ -334,9 +417,64 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
             let mut compute_s = 0.0f64;
             let mut comm_s = 0.0f64;
             let mut wait_s = 0.0f64;
-            let mut loss_sum = 0.0f32;
-            let mut loss_n = 0usize;
-            for step in 0..steps {
+            let (mut loss_sum, mut loss_n) = acc;
+            for step in skip..steps {
+                let gr = (epoch * steps_per_epoch + step) as u64;
+                // Round-entry faults fire on the coordinator thread before
+                // any worker steps, so a recovered fault leaves round-entry
+                // state — and therefore the numerics — untouched.
+                let mut degraded: Option<usize> = None;
+                if let Some(inj) = injector.as_mut() {
+                    if inj.fire(FaultClass::Lock, gr) {
+                        // Poison + recover the real shared-state mutex when
+                        // the run has one; FP32 runs exercise the identical
+                        // recovery path on a scratch mutex.
+                        match store.as_ref() {
+                            Some(m) => {
+                                poison_lock(m);
+                                recover_poisoned_lock(m, inj);
+                            }
+                            None => {
+                                let scratch = Mutex::new(());
+                                poison_lock(&scratch);
+                                recover_poisoned_lock(&scratch, inj);
+                            }
+                        }
+                    }
+                    let mut failures = 0usize;
+                    while inj.fire(FaultClass::Worker, gr) {
+                        failures += 1;
+                        let victim = inj.victim(gr, k);
+                        if failures > inj.max_retries {
+                            anyhow::bail!(
+                                "worker {victim} failed at global step {gr} and the retry \
+                                 budget ({}) is exhausted — rerun with --resume {} to rebuild \
+                                 from the last checkpoint",
+                                inj.max_retries,
+                                train.ckpt.path
+                            );
+                        }
+                        inj.charge_backoff(failures);
+                        // Rebuild: all workers hold identical params entering
+                        // the round (broadcast invariant), so copying from
+                        // the next peer restores the victim bit-exactly. Its
+                        // own step counter survives the rebuild — shards may
+                        // be uneven, so counters legitimately differ.
+                        let peer = (victim + 1) % k;
+                        let params = workers[peer]
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .model
+                            .params_flat();
+                        workers[victim]
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .model
+                            .set_params_flat(&params);
+                        inj.report.worker_rebuilds += 1;
+                        crate::obs::counter_add(crate::obs::keys::CTR_FAULT_WORKER_REBUILDS, 1);
+                    }
+                }
                 // Synchronous round: each worker with a batch left takes its
                 // prepared batch (prefetched or assembled inline — either
                 // way the same `SampleStage::prepare` definition the
@@ -405,9 +543,11 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                 });
                 let mut before: Option<Vec<f32>> = None;
                 let mut grads: Vec<Vec<f32>> = Vec::with_capacity(k);
+                let mut participants: Vec<usize> = Vec::with_capacity(k);
                 let mut round_compute = 0.0f64;
                 let mut round_wait = 0.0f64;
-                for r in results.into_iter().flatten() {
+                for (w, r) in results.into_iter().enumerate() {
+                    let Some(r) = r else { continue };
                     let (b, g, wait, secs, loss) = r?;
                     // All workers hold identical params entering the round,
                     // so any participant's `before` is *the* pre-step state.
@@ -415,6 +555,7 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                         before = Some(b);
                     }
                     grads.push(g);
+                    participants.push(w);
                     round_compute = round_compute.max(secs);
                     round_wait = round_wait.max(wait);
                     loss_sum += loss;
@@ -423,20 +564,47 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                 let Some(before) = before else { continue };
                 compute_s += round_compute;
                 wait_s += round_wait;
+                // Wire bytes of one full ring pass, computed *before* the
+                // link-retry loop so every retry re-charges a complete
+                // re-transmission through the interconnect model.
+                let bytes = allreduce_payload_bits(grad_elems, k, wire_bits);
+                if let Some(inj) = injector.as_mut() {
+                    let mut drops = 0usize;
+                    while inj.fire(FaultClass::Link, gr) {
+                        drops += 1;
+                        if drops > inj.max_retries {
+                            // Retry budget exhausted: degrade this round to a
+                            // skip-straggler all-reduce over the survivors.
+                            degraded = Some(inj.victim(gr, k));
+                            inj.report.allreduce_degraded += 1;
+                            crate::obs::counter_add(
+                                crate::obs::keys::CTR_FAULT_ALLREDUCE_DEGRADED,
+                                1,
+                            );
+                            break;
+                        }
+                        inj.charge_backoff(drops);
+                        inj.report.link_retries += 1;
+                        crate::obs::counter_add(crate::obs::keys::CTR_FAULT_LINK_RETRIES, 1);
+                        // Re-transmission cost of the retried ring pass.
+                        comm_s += cfg.interconnect.transfer_time(bytes, ring_messages(k), k);
+                    }
+                }
                 // Real all-reduce of the participating gradients (workers
                 // whose shard ran dry this round contribute nothing but
                 // still receive the averaged update below, staying in
-                // lockstep).
-                ring_allreduce_bits(
-                    &mut grads,
-                    wire_bits,
-                    mix_seeds(&[train.seed, epoch as u64, step as u64]),
-                );
-                // Modelled interconnect time: every worker joins the ring
-                // each step; quantized payloads move packed `grad_bits`-bit
-                // elements plus per-chunk scales, FP32 payloads 4-byte
-                // elements.
-                let bytes = allreduce_payload_bits(grad_elems, k, wire_bits);
+                // lockstep). A degraded round first drops the straggler's
+                // gradient, then averages the survivors — every worker still
+                // adopts the (changed) mean, so lockstep is preserved.
+                let ar_seed = mix_seeds(&[train.seed, epoch as u64, step as u64]);
+                if let Some(victim) = degraded {
+                    if let Some(vi) = participants.iter().position(|&p| p == victim) {
+                        if grads.len() > 1 {
+                            grads.remove(vi);
+                        }
+                    }
+                }
+                ring_allreduce_bits(&mut grads, wire_bits, ar_seed);
                 crate::obs::counter_add(
                     crate::obs::keys::CTR_MULTIGPU_ALLREDUCE_WIRE_BYTES,
                     bytes as u64,
@@ -455,6 +623,30 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                         ws.lock().unwrap_or_else(|e| e.into_inner()).model.set_params_flat(&p);
                     }
                 }
+                // Round-boundary checkpoint, written *after* the broadcast so
+                // it captures the exact lockstep state the next round enters
+                // with; any worker's params would do, worker 0's are taken.
+                if train.ckpt.every > 0 && (gr + 1) % train.ckpt.every as u64 == 0 {
+                    let g0 = workers[0].lock().unwrap_or_else(|e| e.into_inner());
+                    let ck = Checkpoint {
+                        command: "multigpu".to_string(),
+                        fingerprint: fingerprint.clone(),
+                        cursor: Cursor {
+                            epoch,
+                            step: step + 1,
+                            loss_sum: loss_sum as f64,
+                            loss_steps: loss_n,
+                        },
+                        step_count: g0.model.step_count(),
+                        params: g0.model.params_flat(),
+                        velocity: g0.opt.export_velocity(),
+                        policy_scales: policy_scales.clone(),
+                        losses: epochs.iter().map(|st| st.loss as f64).collect(),
+                        evals: Vec::new(),
+                    };
+                    drop(g0);
+                    ck.save(&train.ckpt.path)?;
+                }
             }
             let loss = if loss_n == 0 { 0.0 } else { loss_sum / loss_n as f32 };
             Ok(EpochStats {
@@ -469,6 +661,26 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
         })?;
         epochs.push(stat);
     }
+    // Run-complete checkpoint: the cursor says "nothing left to replay", and
+    // CI byte-compares this file between interrupted-and-resumed and
+    // uninterrupted runs.
+    if train.ckpt.every > 0 {
+        let g0 = workers[0].lock().unwrap_or_else(|e| e.into_inner());
+        let ck = Checkpoint {
+            command: "multigpu".to_string(),
+            fingerprint,
+            cursor: Cursor { epoch: cfg.epochs, step: 0, loss_sum: 0.0, loss_steps: 0 },
+            step_count: g0.model.step_count(),
+            params: g0.model.params_flat(),
+            velocity: g0.opt.export_velocity(),
+            policy_scales,
+            losses: epochs.iter().map(|st| st.loss as f64).collect(),
+            evals: Vec::new(),
+        };
+        drop(g0);
+        ck.save(&train.ckpt.path)?;
+    }
+    let final_params = workers[0].lock().unwrap_or_else(|e| e.into_inner()).model.params_flat();
     let (cache, cache_bytes, policy) = match store {
         Some(m) => {
             let s = m.into_inner().unwrap_or_else(|e| e.into_inner());
@@ -476,7 +688,15 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
         }
         None => (None, 0, None),
     };
-    Ok(MultiGpuReport { epochs, grad_elems, cache, cache_bytes, policy })
+    Ok(MultiGpuReport {
+        epochs,
+        grad_elems,
+        cache,
+        cache_bytes,
+        policy,
+        final_params,
+        fault: injector.map(|i| i.report),
+    })
 }
 
 #[cfg(test)]

@@ -5,7 +5,7 @@
 //! build a [`Json`] tree with a **stable top-level key set** —
 //!
 //! `schema, command, config, epochs, report, counters, gauges, histograms,
-//! spans, cache, policy`
+//! spans, cache, policy, fault`
 //!
 //! — where absent sections are `null`, never missing, so downstream
 //! tooling can index unconditionally. Every epoch entry carries the same
@@ -127,6 +127,22 @@ fn policy_json(p: Option<&PolicyGatherReport>) -> Json {
     ])
 }
 
+fn fault_json(f: Option<&crate::fault::FaultReport>) -> Json {
+    let Some(f) = f else { return Json::Null };
+    obj(vec![
+        ("producer_panics", int(f.producer_panics)),
+        ("producer_restarts", int(f.producer_restarts)),
+        ("worker_failures", int(f.worker_failures)),
+        ("worker_rebuilds", int(f.worker_rebuilds)),
+        ("link_drops", int(f.link_drops)),
+        ("link_retries", int(f.link_retries)),
+        ("allreduce_degraded", int(f.allreduce_degraded)),
+        ("lock_poisons", int(f.lock_poisons)),
+        ("lock_recoveries", int(f.lock_recoveries)),
+        ("backoff_s", num(f.backoff_s)),
+    ])
+}
+
 fn train_config_json(cfg: &TrainConfig) -> Json {
     obj(vec![
         ("model", s(format!("{:?}", cfg.model).to_lowercase())),
@@ -211,6 +227,7 @@ pub fn train_artifact(cfg: &TrainConfig, report: &TrainReport, metrics: &Metrics
         ("spans", spans),
         ("cache", cache_json(report.cache.as_ref())),
         ("policy", policy_json(report.policy.as_ref())),
+        ("fault", fault_json(report.fault.as_ref())),
     ])
 }
 
@@ -269,13 +286,15 @@ pub fn multigpu_artifact(
         ("spans", spans),
         ("cache", cache_json(report.cache.as_ref())),
         ("policy", policy_json(report.policy.as_ref())),
+        ("fault", fault_json(report.fault.as_ref())),
     ])
 }
 
 /// Serialize an artifact to `path` (pretty-printing is the consumer's job —
 /// the writer emits the deterministic single-line form of `util/json.rs`).
+/// Atomic (tmp + rename): a crash mid-write never truncates an artifact.
 pub fn write_artifact(path: &str, artifact: &Json) -> crate::Result<()> {
-    std::fs::write(path, artifact.to_string())
+    crate::util::fsio::write_atomic(path, &artifact.to_string())
         .map_err(|e| anyhow::anyhow!("writing metrics artifact {path}: {e}"))?;
     Ok(())
 }

@@ -70,6 +70,28 @@ pub const CTR_GATHER_CACHE_MISSES: &str = "gather.cache_misses";
 pub const CTR_GATHER_PACKED_BYTES: &str = "gather.packed_bytes";
 /// Bytes after unpacking to int8 working format.
 pub const CTR_GATHER_INT8_BYTES: &str = "gather.int8_bytes";
+/// Checkpoints written (`tango-ckpt/v1`, atomic tmp+rename).
+pub const CTR_CKPT_SAVES: &str = "ckpt.saves";
+/// Training runs restored from a checkpoint (`--resume`).
+pub const CTR_CKPT_RESUMES: &str = "ckpt.resumes";
+/// Injected prefetch-producer panics observed by the trainer.
+pub const CTR_FAULT_PRODUCER_PANICS: &str = "fault.producer.panics";
+/// Producer threads restarted after an injected panic.
+pub const CTR_FAULT_PRODUCER_RESTARTS: &str = "fault.producer.restarts";
+/// Injected multi-GPU worker step failures.
+pub const CTR_FAULT_WORKER_FAILURES: &str = "fault.worker.failures";
+/// Workers rebuilt from round-entry state and replayed.
+pub const CTR_FAULT_WORKER_REBUILDS: &str = "fault.worker.rebuilds";
+/// Injected all-reduce link drops.
+pub const CTR_FAULT_LINK_DROPS: &str = "fault.link.drops";
+/// All-reduce retries after a dropped link (re-charged transfer time).
+pub const CTR_FAULT_LINK_RETRIES: &str = "fault.link.retries";
+/// All-reduce rounds that degraded to skip-straggler after retry exhaustion.
+pub const CTR_FAULT_ALLREDUCE_DEGRADED: &str = "fault.allreduce.degraded";
+/// Injected feature-store lock poisonings.
+pub const CTR_FAULT_LOCK_POISONS: &str = "fault.lock.poisons";
+/// Poisoned locks recovered via `into_inner` and verified re-lockable.
+pub const CTR_FAULT_LOCK_RECOVERIES: &str = "fault.lock.recoveries";
 
 // ---- dynamic gauge families (obs::gauge_set) -------------------------------
 
@@ -106,6 +128,17 @@ pub const ALL_STATIC_KEYS: &[&str] = &[
     CTR_GATHER_CACHE_MISSES,
     CTR_GATHER_PACKED_BYTES,
     CTR_GATHER_INT8_BYTES,
+    CTR_CKPT_SAVES,
+    CTR_CKPT_RESUMES,
+    CTR_FAULT_PRODUCER_PANICS,
+    CTR_FAULT_PRODUCER_RESTARTS,
+    CTR_FAULT_WORKER_FAILURES,
+    CTR_FAULT_WORKER_REBUILDS,
+    CTR_FAULT_LINK_DROPS,
+    CTR_FAULT_LINK_RETRIES,
+    CTR_FAULT_ALLREDUCE_DEGRADED,
+    CTR_FAULT_LOCK_POISONS,
+    CTR_FAULT_LOCK_RECOVERIES,
 ];
 
 #[cfg(test)]

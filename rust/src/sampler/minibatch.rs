@@ -22,10 +22,13 @@
 //!   [`TaskHead`] decoder under BCE-with-logits.
 
 use super::{
-    adjust_fanouts, run_prefetched, shuffled_batches, BatchTarget, EdgeBatcher, FeatureGather,
-    NeighborSampler, PreparedBatch, QuantFeatureStore, SampleStage, SamplerBias, StageTimes,
+    adjust_fanouts, run_prefetched, run_prefetched_restartable, shuffled_batches, BatchTarget,
+    EdgeBatcher, FeatureGather, NeighborSampler, PreparedBatch, QuantFeatureStore, SampleStage,
+    SamplerBias, StageTimes,
 };
+use crate::ckpt::{fingerprint_of, Checkpoint, Cursor, Fingerprint};
 use crate::config::{TaskKind, TrainConfig};
+use crate::fault::{injected_panic, FaultClass, FaultInjector};
 use crate::coordinator::qcache::CacheStats;
 use crate::coordinator::{EpochStages, TrainReport};
 use crate::graph::datasets::{self, Dataset, Task};
@@ -36,6 +39,18 @@ use crate::model::{
 use crate::policy::PolicyGatherReport;
 use crate::quant::rng::mix_seeds;
 use crate::quant::{derive_bits, DEFAULT_ERROR_TARGET};
+use std::sync::Mutex;
+
+/// Per-epoch checkpointing context threaded into the consume closure: the
+/// run identity plus everything already completed (immutable this epoch).
+struct CkptCtx {
+    every: usize,
+    path: String,
+    fingerprint: Fingerprint,
+    policy_scales: Option<Vec<f32>>,
+    losses: Vec<f64>,
+    evals: Vec<f64>,
+}
 
 /// Mini-batch neighbor-sampling trainer (node classification *and* link
 /// prediction — see the module docs).
@@ -177,15 +192,67 @@ impl MiniBatchTrainer {
     /// `prefetch` batches ahead of the training thread — bit-identical to
     /// the sequential sweep (`tests/pipeline_equivalence.rs`).
     pub fn run(&mut self) -> crate::Result<TrainReport> {
+        let fingerprint = fingerprint_of(&self.cfg, 1, true);
+        let policy_scales: Option<Vec<f32>> = self.store.as_ref().map(|s| {
+            let p = s.policy();
+            (0..p.num_buckets()).map(|b| p.scale(b)).collect()
+        });
         let mut losses = Vec::with_capacity(self.cfg.epochs);
         let mut evals = Vec::with_capacity(self.cfg.epochs);
         let mut stages = Vec::with_capacity(self.cfg.epochs);
         let mut wall = 0.0f64;
         let mut wait = 0.0f64;
-        for epoch in 0..self.cfg.epochs {
+        let mut start_epoch = 0usize;
+        // Mid-epoch resume position: batches already consumed plus the
+        // partial loss accumulator, applied to `start_epoch` only.
+        let mut resume_skip: Option<(usize, f32, usize)> = None;
+        if let Some(path) = self.cfg.ckpt.resume.clone() {
+            let ck = Checkpoint::load(&path)?;
+            ck.validate_resume("train", &fingerprint)?;
+            if let (Some(stored), Some(current)) = (&ck.policy_scales, &policy_scales) {
+                if stored != current {
+                    anyhow::bail!(
+                        "--resume checkpoint {path}: stored policy scales differ from this \
+                         run's materialized policy — the dataset features or the \
+                         degree-buckets/bucket-bits config changed since the checkpoint"
+                    );
+                }
+            }
+            self.model.set_params_flat(&ck.params);
+            self.model.set_step_count(ck.step_count);
+            self.opt.import_velocity(ck.velocity.clone());
+            losses = ck.losses.iter().map(|&l| l as f32).collect();
+            evals = ck.evals.iter().map(|&e| e as f32).collect();
+            // Completed epochs carry no timings in a resumed report.
+            stages.resize(ck.cursor.epoch, EpochStages::default());
+            start_epoch = ck.cursor.epoch;
+            if ck.cursor.step > 0 || ck.cursor.loss_steps > 0 {
+                // `loss_sum` was widened f32→f64 exactly at save time, so
+                // narrowing it back is bit-exact.
+                resume_skip =
+                    Some((ck.cursor.step, ck.cursor.loss_sum as f32, ck.cursor.loss_steps));
+            }
+            crate::obs::counter_add(crate::obs::keys::CTR_CKPT_RESUMES, 1);
+        }
+        let injector = FaultInjector::new(&self.cfg.fault).map(Mutex::new);
+        for epoch in start_epoch..self.cfg.epochs {
             let _epoch_span = crate::obs::span(crate::obs::keys::SPAN_EPOCH);
             let t_epoch = std::time::Instant::now();
-            let (res, secs) = crate::metrics::time_once(|| self.train_epoch(epoch as u64));
+            let (start, loss_acc) = match resume_skip.take() {
+                Some((step, sum, n)) => (step, (sum, n)),
+                None => (0, (0.0f32, 0usize)),
+            };
+            let ckpt_ctx = (self.cfg.ckpt.every > 0).then(|| CkptCtx {
+                every: self.cfg.ckpt.every,
+                path: self.cfg.ckpt.path.clone(),
+                fingerprint: fingerprint.clone(),
+                policy_scales: policy_scales.clone(),
+                losses: losses.iter().map(|&l| l as f64).collect(),
+                evals: evals.iter().map(|&e| e as f64).collect(),
+            });
+            let (res, secs) = crate::metrics::time_once(|| {
+                self.train_epoch(epoch as u64, start, loss_acc, injector.as_ref(), ckpt_ctx.as_ref())
+            });
             let (loss, mut stage) = res?;
             let (eval, eval_s) = crate::metrics::time_once(|| {
                 let _s = crate::obs::span(crate::obs::keys::SPAN_EVAL);
@@ -205,6 +272,27 @@ impl MiniBatchTrainer {
             evals.push(eval);
             stages.push(stage);
         }
+        // Run-complete checkpoint: the crash-resume CI job byte-compares it
+        // against the control's.
+        if self.cfg.ckpt.every > 0 {
+            let ck = Checkpoint {
+                command: "train".to_string(),
+                fingerprint,
+                cursor: Cursor {
+                    epoch: self.cfg.epochs,
+                    step: 0,
+                    loss_sum: 0.0,
+                    loss_steps: 0,
+                },
+                step_count: self.model.step_count(),
+                params: self.model.params_flat(),
+                velocity: self.opt.export_velocity(),
+                policy_scales,
+                losses: losses.iter().map(|&l| l as f64).collect(),
+                evals: evals.iter().map(|&e| e as f64).collect(),
+            };
+            ck.save(&self.cfg.ckpt.path)?;
+        }
         let final_eval = *evals.last().unwrap_or(&0.0);
         let final_loss = *losses.last().unwrap_or(&f32::INFINITY);
         let epochs_to_converge = losses
@@ -223,6 +311,8 @@ impl MiniBatchTrainer {
             policy: self.policy_report(),
             prefetch_wait_s: wait,
             stages,
+            fault: injector
+                .map(|m| m.into_inner().unwrap_or_else(|e| e.into_inner()).report),
         })
     }
 
@@ -232,7 +322,19 @@ impl MiniBatchTrainer {
     /// while this thread steps the model; `prefetch = 0` runs the same
     /// loop strictly sequentially. Returns the mean batch loss and the
     /// epoch's stage accounting (eval/wall filled in by the caller).
-    fn train_epoch(&mut self, epoch: u64) -> crate::Result<(f32, EpochStages)> {
+    ///
+    /// A resumed epoch starts at batch `start` with `loss_acc` already
+    /// folded in — batch RNG streams are keyed by absolute position, so
+    /// the continuation is bit-identical to the uninterrupted sweep. With
+    /// an `injector`, scheduled producer panics fire (and recover) here.
+    fn train_epoch(
+        &mut self,
+        epoch: u64,
+        start: usize,
+        loss_acc: (f32, usize),
+        injector: Option<&Mutex<FaultInjector>>,
+        ckpt: Option<&CkptCtx>,
+    ) -> crate::Result<(f32, EpochStages)> {
         let shuffle_seed = mix_seeds(&[self.cfg.seed, epoch]);
         let batches = match self.task {
             Task::NodeClassification => shuffled_batches(
@@ -246,6 +348,8 @@ impl MiniBatchTrainer {
                 shuffle_seed,
             ),
         };
+        let num_batches = batches.len();
+        let start = start.min(num_batches);
         let neg_per_pos = self.head.neg_per_pos();
         // Run-local stage-one accounting: must outlive `stage` below, which
         // the producer thread borrows.
@@ -264,38 +368,117 @@ impl MiniBatchTrainer {
             packed: cfg.packed_compute,
             times: &times,
         };
-        let mut total = 0.0f32;
-        let mut steps = 0usize;
+        let (mut total, mut steps) = loss_acc;
         let mut compute_s = 0.0f64;
-        let stats = run_prefetched(
-            batches.len(),
-            cfg.sampler.prefetch,
-            |bi| stage.prepare(&batches[bi], mix_seeds(&[epoch, bi as u64])),
-            |_, pb: PreparedBatch| {
-                let t0 = std::time::Instant::now();
-                let _step_span = crate::obs::span(crate::obs::keys::SPAN_COMPUTE);
-                let loss = match &pb.target {
-                    BatchTarget::Nc { labels } => {
-                        let nodes: Vec<u32> = (0..labels.len() as u32).collect();
-                        model
-                            .train_step_input(&pb.blocks, &pb.x0, opt, &mut |lg| {
-                                softmax_cross_entropy(lg, labels, &nodes)
-                            })
-                            .0
+        // Checkpoint I/O failures inside the consume closure (which returns
+        // `()`) surface here after the sweep.
+        let mut ckpt_err: Option<anyhow::Error> = None;
+        // Producer faults key on the batch's *global* step — the position
+        // its training step holds in the whole run — so schedules fire
+        // identically across control, faulted and resumed runs regardless
+        // of how far ahead the producer is.
+        let produce = |bi: usize| {
+            let abs = start + bi;
+            if let Some(inj) = injector {
+                let fire = inj
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .fire(FaultClass::Producer, epoch * num_batches as u64 + abs as u64);
+                if fire {
+                    injected_panic(&format!("producer died preparing batch {abs} of epoch {epoch}"));
+                }
+            }
+            stage.prepare(&batches[abs], mix_seeds(&[epoch, abs as u64]))
+        };
+        let consume = |i: usize, pb: PreparedBatch| {
+            let t0 = std::time::Instant::now();
+            let _step_span = crate::obs::span(crate::obs::keys::SPAN_COMPUTE);
+            let loss = match &pb.target {
+                BatchTarget::Nc { labels } => {
+                    let nodes: Vec<u32> = (0..labels.len() as u32).collect();
+                    model
+                        .train_step_input(&pb.blocks, &pb.x0, opt, &mut |lg| {
+                            softmax_cross_entropy(lg, labels, &nodes)
+                        })
+                        .0
+                }
+                BatchTarget::Lp { pairs } => {
+                    model
+                        .train_step_input(&pb.blocks, &pb.x0, opt, &mut |emb| {
+                            TaskHead::lp_loss_grad(emb, pairs)
+                        })
+                        .0
+                }
+            };
+            total += loss;
+            steps += 1;
+            compute_s += t0.elapsed().as_secs_f64();
+            if let Some(ctx) = ckpt {
+                if ctx.every > 0 && model.step_count() % ctx.every as u64 == 0 && ckpt_err.is_none()
+                {
+                    let ck = Checkpoint {
+                        command: "train".to_string(),
+                        fingerprint: ctx.fingerprint.clone(),
+                        cursor: Cursor {
+                            epoch: epoch as usize,
+                            step: start + i + 1,
+                            loss_sum: total as f64,
+                            loss_steps: steps,
+                        },
+                        step_count: model.step_count(),
+                        params: model.params_flat(),
+                        velocity: opt.export_velocity(),
+                        policy_scales: ctx.policy_scales.clone(),
+                        losses: ctx.losses.clone(),
+                        evals: ctx.evals.clone(),
+                    };
+                    if let Err(e) = ck.save(&ctx.path) {
+                        ckpt_err = Some(e);
                     }
-                    BatchTarget::Lp { pairs } => {
-                        model
-                            .train_step_input(&pb.blocks, &pb.x0, opt, &mut |emb| {
-                                TaskHead::lp_loss_grad(emb, pairs)
-                            })
-                            .0
-                    }
-                };
-                total += loss;
-                steps += 1;
-                compute_s += t0.elapsed().as_secs_f64();
-            },
-        )?;
+                }
+            }
+        };
+        let stats = match injector {
+            Some(inj) => {
+                // Restart budget is per batch position: a fresh panic at a
+                // later batch resets the count, repeated occurrences at one
+                // step exhaust it.
+                let mut retries_at: (usize, usize) = (usize::MAX, 0);
+                run_prefetched_restartable(
+                    num_batches - start,
+                    cfg.sampler.prefetch,
+                    produce,
+                    consume,
+                    |next, e| {
+                        let msg = format!("{e:#}");
+                        if !msg.contains("injected fault") {
+                            // A real producer bug must never be masked by
+                            // the injection harness's retry loop.
+                            return Err(e);
+                        }
+                        let mut g = inj.lock().unwrap_or_else(|p| p.into_inner());
+                        let attempt = if retries_at.0 == next { retries_at.1 + 1 } else { 1 };
+                        retries_at = (next, attempt);
+                        if attempt > g.max_retries {
+                            return Err(anyhow::anyhow!(
+                                "prefetch producer died at batch {} of epoch {epoch} and the \
+                                 retry budget ({}) is exhausted: {msg}",
+                                start + next,
+                                g.max_retries
+                            ));
+                        }
+                        g.charge_backoff(attempt);
+                        g.report.producer_restarts += 1;
+                        crate::obs::counter_add(crate::obs::keys::CTR_FAULT_PRODUCER_RESTARTS, 1);
+                        Ok(())
+                    },
+                )?
+            }
+            None => run_prefetched(num_batches - start, cfg.sampler.prefetch, produce, consume)?,
+        };
+        if let Some(e) = ckpt_err {
+            return Err(e);
+        }
         let loss = if steps == 0 { 0.0 } else { total / steps as f32 };
         let stage = EpochStages {
             sample_s: times.sample_s(),

@@ -55,6 +55,7 @@ pub use gather::{gather_rows, QuantFeatureStore, QuantRows};
 pub use minibatch::MiniBatchTrainer;
 pub use neighbor::{adjust_fanouts, shuffled_batches, NeighborSampler, SamplerBias};
 pub use pipeline::{
-    run_prefetched, spawn_producer, BatchInput, BatchTarget, FeatureGather, PrefetchStats,
-    PreparedBatch, ProducerHandle, SampleStage, StageTimes,
+    run_prefetched, run_prefetched_restartable, spawn_producer, spawn_producer_range, BatchInput,
+    BatchTarget, FeatureGather, PrefetchStats, PreparedBatch, ProducerHandle, SampleStage,
+    StageTimes,
 };

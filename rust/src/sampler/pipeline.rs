@@ -424,6 +424,117 @@ where
     })
 }
 
+/// [`spawn_producer`] generalized to a sub-range, with the produce closure
+/// living behind a shared `Mutex` so a **replacement** producer thread can
+/// pick up where a panicked one died (the panic poisons the mutex; the
+/// respawn recovers it via `into_inner` — the repo-wide poison idiom).
+pub fn spawn_producer_range<'scope, T, P>(
+    scope: &'scope Scope<'scope, '_>,
+    depth: usize,
+    range: std::ops::Range<usize>,
+    produce: &'scope Mutex<P>,
+) -> ProducerHandle<'scope, T>
+where
+    T: Send + 'scope,
+    P: FnMut(usize) -> T + Send,
+{
+    let (tx, rx) = sync_channel::<T>(depth.max(1));
+    let join = scope.spawn(move || {
+        let mut produce = produce.lock().unwrap_or_else(|e| e.into_inner());
+        for i in range {
+            let item = produce(i);
+            if tx.send(item).is_err() {
+                break; // consumer gone (early exit / error path)
+            }
+        }
+    });
+    ProducerHandle { rx: Some(rx), join: Some(join) }
+}
+
+/// [`run_prefetched`] with a producer-restart seam: when stage one panics
+/// (injected fault or real bug), `on_panic(next, err)` decides the run's
+/// fate — return `Ok(())` to respawn the producer from batch `next` (the
+/// first batch not yet consumed; everything produced before the panic is
+/// drained first, so no batch is lost or repeated), or `Err` to abort the
+/// epoch with that error.
+///
+/// Semantics are otherwise identical to [`run_prefetched`] — same ordering
+/// guarantee, same stats — and a panic-free run consumes exactly the same
+/// `(i, item)` sequence, so the bit-identity contract of
+/// `tests/pipeline_equivalence.rs` extends to recovered runs.
+pub fn run_prefetched_restartable<T, P, C, F>(
+    num_batches: usize,
+    depth: usize,
+    produce: P,
+    mut consume: C,
+    mut on_panic: F,
+) -> crate::Result<PrefetchStats>
+where
+    T: Send,
+    P: FnMut(usize) -> T + Send,
+    C: FnMut(usize, T),
+    F: FnMut(usize, anyhow::Error) -> crate::Result<()>,
+{
+    let mut stats = PrefetchStats::default();
+    let produce = Mutex::new(produce);
+    let mut next = 0usize;
+    if depth == 0 || num_batches <= 1 {
+        // Inline path: the "producer" is the caller's own thread, so the
+        // panic is caught (and the mutex poison recovered) right here.
+        while next < num_batches {
+            let t0 = Instant::now();
+            let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                (produce.lock().unwrap_or_else(|e| e.into_inner()))(next)
+            }));
+            stats.wait_s += t0.elapsed().as_secs_f64();
+            match attempt {
+                Ok(item) => {
+                    consume(next, item);
+                    stats.batches += 1;
+                    next += 1;
+                }
+                Err(payload) => on_panic(
+                    next,
+                    anyhow::anyhow!(
+                        "prefetch producer panicked: {}",
+                        panic_message(payload.as_ref())
+                    ),
+                )?,
+            }
+        }
+        return Ok(stats);
+    }
+    std::thread::scope(|scope| {
+        while next < num_batches {
+            let mut producer =
+                spawn_producer_range(scope, depth, next..num_batches, &produce);
+            loop {
+                let t0 = Instant::now();
+                let received = producer.recv();
+                stats.wait_s += t0.elapsed().as_secs_f64();
+                match received {
+                    Ok(Some(item)) => {
+                        consume(next, item);
+                        stats.batches += 1;
+                        next += 1;
+                    }
+                    Ok(None) if next < num_batches => {
+                        return Err(anyhow::anyhow!(
+                            "prefetch producer ended early at batch {next}/{num_batches}"
+                        ));
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        on_panic(next, e)?;
+                        break; // respawn a producer from batch `next`
+                    }
+                }
+            }
+        }
+        Ok(stats)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -497,6 +608,79 @@ mod tests {
             assert_eq!(h.recv().unwrap(), Some(0));
             drop(h); // closes the channel, joins the producer
         });
+    }
+
+    #[test]
+    fn restartable_matches_sequential_when_no_panic() {
+        for depth in [0usize, 2] {
+            let mut seen = Vec::new();
+            let stats = run_prefetched_restartable(
+                12,
+                depth,
+                |i| i * 3,
+                |i, item| {
+                    assert_eq!(item, i * 3);
+                    seen.push(i);
+                },
+                |_, e| panic!("no panic expected: {e}"),
+            )
+            .unwrap();
+            assert_eq!(seen, (0..12).collect::<Vec<_>>(), "depth {depth}");
+            assert_eq!(stats.batches, 12);
+        }
+    }
+
+    #[test]
+    fn restartable_resumes_from_last_consumed_batch() {
+        use std::sync::atomic::AtomicBool;
+        // The producer dies once at batch 5; after the restart the consumer
+        // must see every index exactly once, in order.
+        for depth in [0usize, 2] {
+            let exploded = AtomicBool::new(false);
+            let mut seen = Vec::new();
+            let mut restarts = 0usize;
+            run_prefetched_restartable(
+                10,
+                depth,
+                |i| {
+                    if i == 5 && !exploded.swap(true, Ordering::SeqCst) {
+                        panic!("injected fault: producer dies at {i}");
+                    }
+                    i + 50
+                },
+                |i, item| {
+                    assert_eq!(item, i + 50);
+                    seen.push(i);
+                },
+                |next, e| {
+                    assert_eq!(next, 5, "panic surfaces at the first unconsumed batch");
+                    assert!(format!("{e:#}").contains("injected fault"), "{e:#}");
+                    restarts += 1;
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert_eq!(seen, (0..10).collect::<Vec<_>>(), "depth {depth}");
+            assert_eq!(restarts, 1, "depth {depth}");
+        }
+    }
+
+    #[test]
+    fn restartable_on_panic_err_aborts_with_that_error() {
+        let err = run_prefetched_restartable(
+            6,
+            2,
+            |i: usize| -> usize {
+                if i >= 2 {
+                    panic!("injected fault: unrecoverable");
+                }
+                i
+            },
+            |_, _| {},
+            |_, e| Err(anyhow::anyhow!("retry budget exhausted: {e}")),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("retry budget exhausted"), "{err:#}");
     }
 
     #[test]

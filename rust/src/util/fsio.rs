@@ -1,0 +1,45 @@
+//! Crash-safe file writes (audit rule W1).
+//!
+//! Every artifact this repo emits — metrics JSON, bench JSON, checkpoints —
+//! goes through [`write_atomic`]: the contents land in a `{path}.tmp`
+//! sibling first and are renamed over the destination only once fully
+//! written. A crash (or an injected fault) mid-write leaves the previous
+//! file intact, never a truncated artifact; rename within one directory is
+//! atomic on every platform the toolchain targets.
+
+/// Write `contents` to `path` atomically: write `{path}.tmp`, then rename
+/// it over `path`. Errors carry both paths so the failure is actionable.
+pub fn write_atomic(path: &str, contents: &str) -> crate::Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, contents)
+        .map_err(|e| anyhow::anyhow!("writing temporary file {tmp}: {e}"))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("renaming {tmp} over {path}: {e}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_land_and_leave_no_tmp_behind() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("tango_fsio_test.json");
+        let path = path.to_str().unwrap();
+        write_atomic(path, "{\"a\":1}").unwrap();
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "{\"a\":1}");
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        // Overwrite replaces the old contents wholesale.
+        write_atomic(path, "{\"a\":2}").unwrap();
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "{\"a\":2}");
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn unwritable_destination_is_an_error_naming_the_path() {
+        let err = write_atomic("/nonexistent_dir_tango/x.json", "{}").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("/nonexistent_dir_tango/x.json.tmp"), "{msg}");
+    }
+}

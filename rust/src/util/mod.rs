@@ -8,9 +8,12 @@
 //! - [`prop`] — a tiny property-based testing helper (the proptest
 //!   stand-in) driven by the same xoshiro256++ generator the quantizer uses;
 //! - [`cli`] — a no-dependency command-line argument parser;
-//! - [`json`] — a minimal JSON writer/parser for the artifact manifest.
+//! - [`json`] — a minimal JSON writer/parser for the artifact manifest;
+//! - [`fsio`] — crash-safe atomic file writes (tmp + rename) every emitted
+//!   artifact and checkpoint goes through (audit rule W1).
 
 pub mod cli;
+pub mod fsio;
 pub mod json;
 pub mod par;
 pub mod prop;

@@ -170,6 +170,40 @@ fn p1_fires_on_panic_paths_but_not_comments_or_tests() {
         .is_empty());
 }
 
+// ------------------------------------------------------ W1: atomic writes
+
+#[test]
+fn w1_fires_on_direct_file_writes_but_not_comments_or_tests() {
+    let src = concat!(
+        "//! Docs may mention fs::write( freely.\n",
+        "fn f() -> std::io::Result<()> {\n",
+        "    std::fs::write(\"out.json\", \"{}\")\n",
+        "}\n",
+        "#[cfg(test)]\n",
+        "mod tests {\n",
+        "    fn g() { std::fs::write(\"t.json\", \"{}\").unwrap(); }\n",
+        "}\n"
+    );
+    let f = audit::scan_source("rust/src/fake.rs", src);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].rule, f[0].path.as_str(), f[0].line), (Rule::W1, "rust/src/fake.rs", 3));
+    assert!(f[0].message.contains("write_atomic"));
+
+    let f = audit::scan_source(
+        "rust/src/fake.rs",
+        "fn f() { let _h = std::fs::File::create(\"x.bin\"); }\n",
+    );
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].rule, Rule::W1);
+
+    // Routing through the helper is the sanctioned shape.
+    assert!(audit::scan_source(
+        "rust/src/fake.rs",
+        "fn f() -> tango::Result<()> { crate::util::fsio::write_atomic(\"out.json\", \"{}\") }\n"
+    )
+    .is_empty());
+}
+
 // ------------------------------------------------------- C1: config surface
 
 #[test]

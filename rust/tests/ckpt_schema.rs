@@ -1,0 +1,253 @@
+//! Golden-schema + corruption tests for the `tango-ckpt/v1` artifact
+//! (PR 9 satellite).
+//!
+//! Three halves:
+//! 1. the checkpoint file's full recursive key structure is pinned against
+//!    a checked-in expected set (the `tests/metrics_schema.rs` discipline,
+//!    applied to the checkpoint artifact) — adding, renaming or dropping a
+//!    field fails here until the golden list is updated deliberately;
+//! 2. a real training run's run-complete checkpoint must reflect the run
+//!    (cursor at the end, bit-exact params and loss trace);
+//! 3. loads of missing, corrupt, truncated or wrong-schema files — and
+//!    resumes into mismatched runs — are actionable errors, never panics.
+
+use std::collections::BTreeSet;
+use tango::ckpt::{fingerprint_of, Checkpoint, Cursor, Fingerprint, SCHEMA};
+use tango::config::{ModelKind, SamplerConfig, TrainConfig};
+use tango::graph::datasets;
+use tango::multigpu::{run_data_parallel, Interconnect, MultiGpuConfig};
+use tango::sampler::MiniBatchTrainer;
+use tango::util::json::Json;
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir().join(name).to_string_lossy().into_owned()
+}
+
+/// A checkpoint exercising every schema shape: a `None` velocity slot next
+/// to a `Some`, active policy scales, non-empty traces.
+fn sample() -> Checkpoint {
+    Checkpoint {
+        command: "train".to_string(),
+        fingerprint: Fingerprint {
+            dataset: "tiny".to_string(),
+            model: "gcn".to_string(),
+            mode: "tango".to_string(),
+            bits: 8,
+            seed: 7,
+            sample_seed: 23,
+            workers: 1,
+            sampled: true,
+        },
+        cursor: Cursor { epoch: 1, step: 2, loss_sum: 0.625, loss_steps: 2 },
+        step_count: 7,
+        params: vec![1.0, -0.5, f32::MIN_POSITIVE, 0.0],
+        velocity: vec![None, Some((vec![2, 2], vec![0.1, 0.2, 0.3, 0.4]))],
+        policy_scales: Some(vec![0.5, 0.25]),
+        losses: vec![0.9],
+        evals: vec![0.5],
+    }
+}
+
+/// Recursively collect key paths; array elements all collapse to `path[]`
+/// (so a null and an object slot of `velocity` both contribute).
+fn collect(prefix: &str, j: &Json, out: &mut BTreeSet<String>) {
+    match j {
+        Json::Obj(map) => {
+            for (k, v) in map {
+                let p = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                collect(&p, v, out);
+            }
+        }
+        Json::Arr(items) => {
+            let p = format!("{prefix}[]");
+            if items.is_empty() {
+                out.insert(p);
+            } else {
+                for item in items {
+                    collect(&p, item, out);
+                }
+            }
+        }
+        _ => {
+            out.insert(prefix.to_string());
+        }
+    }
+}
+
+fn base_train() -> TrainConfig {
+    TrainConfig {
+        model: ModelKind::Gcn,
+        dataset: "tiny".into(),
+        epochs: 2,
+        hidden: 8,
+        seed: 9,
+        sampler: SamplerConfig {
+            enabled: true,
+            fanouts: vec![4, 4],
+            batch_size: 32,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn checkpoint_file_matches_golden_key_paths() {
+    let path = tmp("tango_ckpt_schema_golden.json");
+    let ck = sample();
+    ck.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.ends_with('\n'), "artifact files are newline-terminated");
+    let doc = Json::parse(&text).unwrap();
+    assert_eq!(doc.get("schema").and_then(Json::as_str), Some(SCHEMA));
+
+    let mut keys = BTreeSet::new();
+    collect("", &doc, &mut keys);
+    let expected: BTreeSet<String> = [
+        "command",
+        "cursor.epoch",
+        "cursor.loss_steps",
+        "cursor.loss_sum",
+        "cursor.step",
+        "evals[]",
+        "fingerprint.bits",
+        "fingerprint.dataset",
+        "fingerprint.model",
+        "fingerprint.mode",
+        "fingerprint.sample_seed",
+        "fingerprint.sampled",
+        "fingerprint.seed",
+        "fingerprint.workers",
+        "losses[]",
+        "params.data",
+        "params.len",
+        "policy_scales",
+        "schema",
+        "step_count",
+        "velocity[]",
+        "velocity[].data",
+        "velocity[].shape[]",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    assert_eq!(keys, expected);
+
+    // Float payloads are hex bit patterns, not decimal: 8 chars per f32.
+    let data = doc.get("params").unwrap().get("data").unwrap().as_str().unwrap();
+    assert_eq!(data.len(), ck.params.len() * 8);
+    assert!(data.chars().all(|c| c.is_ascii_hexdigit()), "{data}");
+    let loss_sum = doc.get("cursor").unwrap().get("loss_sum").unwrap().as_str().unwrap();
+    assert_eq!(loss_sum.len(), 16);
+
+    // And the round trip is exact.
+    assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn run_complete_checkpoint_reflects_the_run() {
+    let path = tmp("tango_ckpt_schema_run.json");
+    let mut cfg = base_train();
+    cfg.ckpt.every = 3;
+    cfg.ckpt.path = path.clone();
+    let mut t = MiniBatchTrainer::with_dataset(cfg.clone(), datasets::tiny(cfg.seed)).unwrap();
+    let report = t.run().unwrap();
+
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.command, "train");
+    assert_eq!(ck.fingerprint, fingerprint_of(&cfg, 1, true));
+    // Run-complete cursor: nothing left to replay.
+    assert_eq!((ck.cursor.epoch, ck.cursor.step), (cfg.epochs, 0));
+    assert_eq!((ck.cursor.loss_sum, ck.cursor.loss_steps), (0.0, 0));
+    // Bit-exact state: the stored params are the trained params, and the
+    // stored traces are the report's (f32 widened to f64 exactly).
+    assert_eq!(ck.params, t.params_flat());
+    assert_eq!(ck.losses.len(), report.losses.len());
+    for (stored, live) in ck.losses.iter().zip(&report.losses) {
+        assert_eq!(*stored as f32, *live);
+    }
+    for (stored, live) in ck.evals.iter().zip(&report.evals) {
+        assert_eq!(*stored as f32, *live);
+    }
+    assert!(ck.step_count > 0);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn corrupt_truncated_and_wrong_schema_loads_are_actionable_errors() {
+    // Missing file.
+    let e = Checkpoint::load("/nonexistent/tango_nope.json").unwrap_err().to_string();
+    assert!(e.contains("reading checkpoint"), "{e}");
+
+    // Not JSON at all.
+    let path = tmp("tango_ckpt_schema_corrupt.json");
+    std::fs::write(&path, "this is not json{{{").unwrap();
+    let e = Checkpoint::load(&path).unwrap_err().to_string();
+    assert!(e.contains("not valid JSON"), "{e}");
+
+    // Truncated mid-document (the crash-mid-write shape write_atomic
+    // prevents; the loader must still reject it by name).
+    let good = sample();
+    good.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    let e = Checkpoint::load(&path).unwrap_err().to_string();
+    assert!(e.contains(&path), "error names the file: {e}");
+
+    // Wrong schema tag: names both the found and the supported version.
+    std::fs::write(&path, "{\"schema\":\"tango-ckpt/v0\"}\n").unwrap();
+    let e = Checkpoint::load(&path).unwrap_err().to_string();
+    assert!(e.contains("tango-ckpt/v0") && e.contains(SCHEMA), "{e}");
+
+    // Valid JSON, corrupted hex payload: the error names the field path.
+    let mut doc = good.to_json();
+    if let Json::Obj(m) = &mut doc {
+        let Some(Json::Obj(p)) = m.get_mut("params") else { panic!("params object") };
+        p.insert("data".to_string(), Json::Str("zzzz".to_string()));
+    }
+    std::fs::write(&path, doc.to_string()).unwrap();
+    let e = Checkpoint::load(&path).unwrap_err().to_string();
+    assert!(e.contains("params.data"), "{e}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn resume_rejects_mismatched_runs_by_name() {
+    let path = tmp("tango_ckpt_schema_mismatch.json");
+    let mut cfg = base_train();
+    cfg.epochs = 1;
+    cfg.ckpt.every = 1000; // cadence never hits; the run-complete save does
+    cfg.ckpt.path = path.clone();
+    MiniBatchTrainer::with_dataset(cfg.clone(), datasets::tiny(cfg.seed))
+        .unwrap()
+        .run()
+        .unwrap();
+
+    // A different master seed is a different run.
+    let mut other = cfg.clone();
+    other.seed += 1;
+    other.ckpt.every = 0;
+    other.ckpt.resume = Some(path.clone());
+    let e = MiniBatchTrainer::with_dataset(other.clone(), datasets::tiny(other.seed))
+        .unwrap()
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("seed"), "{e}");
+
+    // A train checkpoint cannot resume a multigpu run.
+    let mut train = cfg.clone();
+    train.ckpt.every = 0;
+    train.ckpt.resume = Some(path.clone());
+    let mg = MultiGpuConfig {
+        train,
+        workers: 1,
+        epochs: 1,
+        quantize_grads: false,
+        interconnect: Interconnect::pcie3(),
+    };
+    let e = run_data_parallel(&mg, &datasets::tiny(cfg.seed)).unwrap_err().to_string();
+    assert!(e.contains("command"), "{e}");
+    std::fs::remove_file(&path).ok();
+}

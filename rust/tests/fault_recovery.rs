@@ -1,0 +1,360 @@
+//! Fault-tolerant training (PR 9 tentpole): crash/resume bit-identity and
+//! per-fault-class recovery.
+//!
+//! The contract under test: recovery is **invisible to the numerics**. A
+//! run that checkpoints, crashes and resumes — or absorbs an injected
+//! fault inside its retry budget — produces the same bit-exact parameters,
+//! losses and evals as the uninterrupted, fault-free control. Fault
+//! schedules key on the *global step* under a fixed seed (never
+//! wall-clock), so every scenario here is deterministic; the simulated
+//! exponential backoff is charged into the report, never slept.
+//!
+//! Covered per class: producer panics (restart within budget / fatal past
+//! it), multigpu worker failures (peer rebuild / fatal past budget with a
+//! `--resume` pointer), ring link drops (re-charged retry / degrade to
+//! skip-straggler past budget), and shared-store lock poisoning (recovered
+//! on both the real store mutex and the FP32 scratch path).
+
+use tango::ckpt::Checkpoint;
+use tango::config::{parse_mode, ModelKind, TrainConfig};
+use tango::coordinator::TrainReport;
+use tango::graph::datasets;
+use tango::multigpu::{run_data_parallel, Interconnect, MultiGpuConfig, MultiGpuReport};
+use tango::sampler::MiniBatchTrainer;
+use tango::util::json::Json;
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir().join(name).to_string_lossy().into_owned()
+}
+
+fn train_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        model: ModelKind::Gcn,
+        dataset: "tiny".into(),
+        epochs: 3,
+        lr: 0.1,
+        hidden: 8,
+        heads: 2,
+        layers: 2,
+        mode: parse_mode("tango", 8).unwrap(),
+        auto_bits: false,
+        seed,
+        log_every: 0,
+        ..Default::default()
+    };
+    cfg.sampler.enabled = true;
+    cfg.sampler.fanouts = vec![4, 4];
+    cfg.sampler.batch_size = 32; // tiny: 160 train nodes -> 5 batches/epoch
+    cfg.sampler.prefetch = 2;
+    cfg
+}
+
+/// Run to completion, returning the report and the trained parameters.
+fn run_train(cfg: &TrainConfig) -> (TrainReport, Vec<f32>) {
+    let mut t = MiniBatchTrainer::from_config(cfg).unwrap();
+    let report = t.run().unwrap();
+    let params = t.params_flat();
+    (report, params)
+}
+
+fn mg_cfg(seed: u64, workers: usize, quantize: bool, mode: &str) -> MultiGpuConfig {
+    let mut train = train_cfg(seed);
+    train.mode = parse_mode(mode, 8).unwrap();
+    MultiGpuConfig {
+        train,
+        workers,
+        epochs: 3,
+        quantize_grads: quantize,
+        interconnect: Interconnect::pcie3(),
+    }
+}
+
+fn losses(r: &MultiGpuReport) -> Vec<f32> {
+    r.epochs.iter().map(|e| e.loss).collect()
+}
+
+// ------------------------------------------------------- producer faults
+
+#[test]
+fn recovered_producer_panics_leave_the_run_bit_identical() {
+    let base = train_cfg(7);
+    let (control, control_params) = run_train(&base);
+
+    let mut faulted = base.clone();
+    faulted.fault.inject = true;
+    // Global steps 3 and 8 = batch 3 of epochs 0 and 1 (5 batches/epoch).
+    faulted.fault.producer_steps = vec![3, 8];
+    let (r, params) = run_train(&faulted);
+
+    assert_eq!(r.losses, control.losses);
+    assert_eq!(r.evals, control.evals);
+    assert_eq!(params, control_params);
+    let f = r.fault.expect("injected run reports its fault ledger");
+    assert!(f.any_fired());
+    assert_eq!(f.producer_panics, 2);
+    assert_eq!(f.producer_restarts, 2);
+    assert!(f.backoff_s > 0.0, "simulated backoff is charged, not slept");
+    // An uninjected run carries no ledger at all.
+    assert!(control.fault.is_none());
+}
+
+#[test]
+fn producer_retry_budget_exhaustion_is_a_named_error() {
+    let mut cfg = train_cfg(7);
+    cfg.fault.inject = true;
+    // The same step three times = two restarts, then the third panic
+    // overruns the default budget of 2.
+    cfg.fault.producer_steps = vec![3, 3, 3];
+    let e = MiniBatchTrainer::from_config(&cfg).unwrap().run().unwrap_err().to_string();
+    assert!(e.contains("retry budget"), "{e}");
+    assert!(e.contains("batch 3"), "{e}");
+}
+
+// ---------------------------------------------------- train crash/resume
+
+#[test]
+fn train_crash_and_resume_is_bit_identical_to_the_control() {
+    let path = tmp("tango_fault_train_crash_resume.json");
+    std::fs::remove_file(&path).ok();
+    let base = train_cfg(9);
+    let (control, control_params) = run_train(&base);
+
+    // Crash: checkpoint every 2 steps, then a producer panic at global
+    // step 3 with a zero retry budget kills the run mid-epoch.
+    let mut crashed = base.clone();
+    crashed.ckpt.every = 2;
+    crashed.ckpt.path = path.clone();
+    crashed.fault.inject = true;
+    crashed.fault.producer_steps = vec![3];
+    crashed.fault.max_retries = 0;
+    let e = MiniBatchTrainer::from_config(&crashed).unwrap().run().unwrap_err().to_string();
+    assert!(e.contains("retry budget"), "{e}");
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!((ck.cursor.epoch, ck.cursor.step), (0, 2), "mid-epoch checkpoint");
+
+    // Resume: same config pointed at the checkpoint continues the trace.
+    let mut resumed = base.clone();
+    resumed.ckpt.every = 2;
+    resumed.ckpt.path = path.clone();
+    resumed.ckpt.resume = Some(path.clone());
+    let (r, params) = run_train(&resumed);
+    assert_eq!(r.losses, control.losses);
+    assert_eq!(r.evals, control.evals);
+    assert_eq!(params, control_params);
+    assert!(r.fault.is_none());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn train_resume_extends_a_completed_run_across_the_epoch_boundary() {
+    let path = tmp("tango_fault_train_epoch_boundary.json");
+    std::fs::remove_file(&path).ok();
+    let base = train_cfg(11);
+    let (control, control_params) = run_train(&base);
+
+    // One epoch, run-complete checkpoint (the periodic cadence never hits).
+    let mut first = base.clone();
+    first.epochs = 1;
+    first.ckpt.every = 1000;
+    first.ckpt.path = path.clone();
+    run_train(&first);
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!((ck.cursor.epoch, ck.cursor.step), (1, 0));
+
+    // Resuming under the full epoch budget replays epochs 1..3 exactly.
+    let mut rest = base.clone();
+    rest.ckpt.resume = Some(path.clone());
+    let (r, params) = run_train(&rest);
+    assert_eq!(r.losses, control.losses);
+    assert_eq!(r.evals, control.evals);
+    assert_eq!(params, control_params);
+    std::fs::remove_file(&path).ok();
+}
+
+// -------------------------------------------------- multigpu crash/resume
+
+#[test]
+fn multigpu_crash_and_resume_is_bit_identical_to_the_control() {
+    let ctrl_path = tmp("tango_fault_mg_control.json");
+    let path = tmp("tango_fault_mg_crash.json");
+    std::fs::remove_file(&ctrl_path).ok();
+    std::fs::remove_file(&path).ok();
+    let data = datasets::tiny(13);
+
+    let mut control_cfg = mg_cfg(13, 2, true, "tango");
+    control_cfg.train.ckpt.every = 4;
+    control_cfg.train.ckpt.path = ctrl_path.clone();
+    let control = run_data_parallel(&control_cfg, &data).unwrap();
+
+    // Crash: round-boundary checkpoint every 4 all-reduce rounds, then a
+    // worker failure at round 5 with a zero retry budget.
+    let mut crashed = mg_cfg(13, 2, true, "tango");
+    crashed.train.ckpt.every = 4;
+    crashed.train.ckpt.path = path.clone();
+    crashed.train.fault.inject = true;
+    crashed.train.fault.worker_steps = vec![5];
+    crashed.train.fault.max_retries = 0;
+    let e = run_data_parallel(&crashed, &data).unwrap_err().to_string();
+    assert!(e.contains("retry budget") && e.contains("--resume"), "{e}");
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.command, "multigpu");
+    assert_eq!((ck.cursor.epoch, ck.cursor.step), (1, 1), "mid-run round cursor");
+
+    // Resume continues the lockstep trace bit for bit.
+    let mut resumed = mg_cfg(13, 2, true, "tango");
+    resumed.train.ckpt.every = 4;
+    resumed.train.ckpt.path = path.clone();
+    resumed.train.ckpt.resume = Some(path.clone());
+    let r = run_data_parallel(&resumed, &data).unwrap();
+    assert_eq!(r.final_params, control.final_params);
+    assert_eq!(losses(&r), losses(&control));
+    // The resumed run's run-complete checkpoint is the control's, bit for
+    // bit — the same file the CI crash-resume job byte-compares.
+    assert_eq!(Checkpoint::load(&path).unwrap(), Checkpoint::load(&ctrl_path).unwrap());
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&ctrl_path).ok();
+}
+
+#[test]
+fn multigpu_one_worker_resume_still_replays_the_minibatch_trainer() {
+    // The 1-worker FP32 replay guarantee must survive a crash/resume: the
+    // resumed data-parallel run equals the uninterrupted one bitwise and
+    // still tracks the single-GPU MiniBatchTrainer step for step.
+    let path = tmp("tango_fault_mg_one_worker.json");
+    std::fs::remove_file(&path).ok();
+    let data = datasets::tiny(17);
+    let control = run_data_parallel(&mg_cfg(17, 1, false, "fp32"), &data).unwrap();
+
+    let mut crashed = mg_cfg(17, 1, false, "fp32");
+    crashed.train.ckpt.every = 3;
+    crashed.train.ckpt.path = path.clone();
+    crashed.train.fault.inject = true;
+    crashed.train.fault.worker_steps = vec![4];
+    crashed.train.fault.max_retries = 0;
+    run_data_parallel(&crashed, &data).unwrap_err();
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!((ck.cursor.epoch, ck.cursor.step), (0, 3));
+
+    let mut resumed = mg_cfg(17, 1, false, "fp32");
+    resumed.train.ckpt.resume = Some(path.clone());
+    let r = run_data_parallel(&resumed, &data).unwrap();
+    assert_eq!(r.final_params, control.final_params);
+    assert_eq!(losses(&r), losses(&control));
+
+    let mut mb = MiniBatchTrainer::from_config(&mg_cfg(17, 1, false, "fp32").train).unwrap();
+    let single = mb.run().unwrap();
+    assert_eq!(r.epochs.len(), single.losses.len());
+    for (e, (ms, loss)) in r.epochs.iter().zip(&single.losses).enumerate() {
+        assert!(
+            (ms.loss - loss).abs() < 1e-6,
+            "epoch {e}: resumed multigpu {} vs minibatch {}",
+            ms.loss,
+            loss
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+// --------------------------------------------------- worker/link/lock faults
+
+#[test]
+fn worker_failure_rebuilds_from_a_peer_in_lockstep() {
+    let data = datasets::tiny(19);
+    let control = run_data_parallel(&mg_cfg(19, 2, false, "fp32"), &data).unwrap();
+
+    let mut faulted = mg_cfg(19, 2, false, "fp32");
+    faulted.train.fault.inject = true;
+    faulted.train.fault.worker_steps = vec![2];
+    let r = run_data_parallel(&faulted, &data).unwrap();
+
+    // The rebuild copies the peer's (identical, post-broadcast) params, so
+    // the recovered run is the control, bit for bit.
+    assert_eq!(r.final_params, control.final_params);
+    assert_eq!(losses(&r), losses(&control));
+    let f = r.fault.expect("injected run reports its fault ledger");
+    assert_eq!(f.worker_failures, 1);
+    assert_eq!(f.worker_rebuilds, 1);
+    assert!(f.backoff_s > 0.0);
+}
+
+#[test]
+fn link_drop_within_budget_retries_and_recharges_the_interconnect() {
+    let data = datasets::tiny(23);
+    let control = run_data_parallel(&mg_cfg(23, 2, true, "tango"), &data).unwrap();
+
+    let mut faulted = mg_cfg(23, 2, true, "tango");
+    faulted.train.fault.inject = true;
+    faulted.train.fault.link_steps = vec![2];
+    let r = run_data_parallel(&faulted, &data).unwrap();
+
+    assert_eq!(r.final_params, control.final_params, "a retried ring pass is lossless");
+    assert_eq!(losses(&r), losses(&control));
+    let f = r.fault.expect("injected run reports its fault ledger");
+    assert_eq!(f.link_drops, 1);
+    assert_eq!(f.link_retries, 1);
+    assert_eq!(f.allreduce_degraded, 0);
+    assert!(f.backoff_s > 0.0);
+    // The retry re-charges a full ring pass through the modelled link.
+    let comm = |r: &MultiGpuReport| r.epochs.iter().map(|e| e.comm_s).sum::<f64>();
+    assert!(comm(&r) > comm(&control), "{} vs {}", comm(&r), comm(&control));
+}
+
+#[test]
+fn link_budget_exhaustion_degrades_to_skip_straggler_but_completes() {
+    let data = datasets::tiny(29);
+    let mut faulted = mg_cfg(29, 2, true, "tango");
+    faulted.train.fault.inject = true;
+    // Three drops at one round: two retries, then the budget is gone and
+    // the round degrades instead of dying.
+    faulted.train.fault.link_steps = vec![2, 2, 2];
+    let r = run_data_parallel(&faulted, &data).unwrap();
+    let f = r.fault.expect("injected run reports its fault ledger");
+    assert_eq!(f.link_drops, 3);
+    assert_eq!(f.link_retries, 2);
+    assert_eq!(f.allreduce_degraded, 1);
+    assert!(r.epochs.iter().all(|e| e.loss.is_finite()));
+    assert_eq!(r.epochs.len(), 3, "a degraded run still completes");
+}
+
+#[test]
+fn lock_poison_recovers_on_both_the_real_store_and_the_scratch_path() {
+    let data = datasets::tiny(31);
+    // Quantized run: the real shared feature-store mutex is poisoned and
+    // recovered; the numerics never see it.
+    let control = run_data_parallel(&mg_cfg(31, 2, true, "tango"), &data).unwrap();
+    let mut faulted = mg_cfg(31, 2, true, "tango");
+    faulted.train.fault.inject = true;
+    faulted.train.fault.lock_steps = vec![1];
+    let r = run_data_parallel(&faulted, &data).unwrap();
+    assert_eq!(r.final_params, control.final_params);
+    assert_eq!(losses(&r), losses(&control));
+    let f = r.fault.expect("injected run reports its fault ledger");
+    assert_eq!(f.lock_poisons, 1);
+    assert_eq!(f.lock_recoveries, 1);
+
+    // FP32 run: no shared store — the identical recovery path runs on a
+    // scratch mutex so the fault class stays testable in every mode.
+    let mut fp = mg_cfg(31, 2, false, "fp32");
+    fp.train.fault.inject = true;
+    fp.train.fault.lock_steps = vec![1];
+    let r = run_data_parallel(&fp, &data).unwrap();
+    let f = r.fault.expect("injected run reports its fault ledger");
+    assert_eq!((f.lock_poisons, f.lock_recoveries), (1, 1));
+}
+
+// -------------------------------------------------------- artifact wiring
+
+#[test]
+fn fault_ledger_lands_in_the_metrics_artifact() {
+    let mut cfg = train_cfg(37);
+    cfg.fault.inject = true;
+    cfg.fault.producer_steps = vec![3];
+    let mut t = MiniBatchTrainer::from_config(&cfg).unwrap();
+    let report = t.run().unwrap();
+    let artifact = tango::obs::train_artifact(&cfg, &report, &tango::obs::snapshot());
+    let fault = artifact.get("fault").expect("fault section present");
+    assert_eq!(fault.get("producer_panics").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(fault.get("producer_restarts").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(fault.get("worker_failures").and_then(Json::as_f64), Some(0.0));
+    assert!(fault.get("backoff_s").and_then(Json::as_f64).unwrap() > 0.0);
+}

@@ -90,6 +90,7 @@ fn shared_keys() -> Vec<String> {
         "cache.misses",
         "command",
         "counters.*",
+        "fault",
         "gauges.*",
         "histograms.*",
         "policy.bits[]",
@@ -228,6 +229,7 @@ fn absent_sections_are_null_not_missing() {
     let artifact = obs::train_artifact(&cfg, &report, &obs::snapshot());
     assert_eq!(artifact.get("cache"), Some(&Json::Null));
     assert_eq!(artifact.get("policy"), Some(&Json::Null));
+    assert_eq!(artifact.get("fault"), Some(&Json::Null), "fault section is null when injection is off");
     // Stage objects keep all seven keys even when some stages are zero.
     let epochs = artifact.get("epochs").unwrap().as_arr().unwrap();
     let stages = epochs[0].get("stages").unwrap();

@@ -122,6 +122,25 @@ fn producer_panic_is_an_error_not_a_hang() {
 }
 
 #[test]
+fn recovered_producer_panic_keeps_the_trace_bit_identical() {
+    // The restartable pipeline's whole point: a producer that dies and is
+    // restarted (PR 9 fault harness, within the retry budget) must leave
+    // the training trace untouched — sequential and pipelined alike.
+    for prefetch in [0, 2] {
+        let clean = traces(&cfg(ModelKind::Gcn, "tango", None, prefetch));
+        let mut faulted = cfg(ModelKind::Gcn, "tango", None, prefetch);
+        faulted.fault.inject = true;
+        // Global steps 2 and 7 = batch 2 of epochs 0 and 1 (5 batches/epoch).
+        faulted.fault.producer_steps = vec![2, 7];
+        let r = traces_report(&faulted);
+        assert_eq!((r.losses, r.evals), clean, "prefetch {prefetch}");
+        let f = r.fault.expect("injected run reports its fault ledger");
+        assert_eq!(f.producer_panics, 2, "prefetch {prefetch}");
+        assert_eq!(f.producer_restarts, 2, "prefetch {prefetch}");
+    }
+}
+
+#[test]
 fn empty_batch_list_and_tiny_epochs_are_noops_not_hangs() {
     // Zero batches (an empty seed sweep) with a nonzero depth.
     let stats = run_prefetched(0, 4, |_| unreachable!("no batches"), |_, _: ()| {}).unwrap();
