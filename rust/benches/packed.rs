@@ -142,6 +142,14 @@ fn main() {
     }
     t.print();
 
+    let speedups: Vec<f64> =
+        results.iter().filter_map(|r| r.get("speedup").and_then(|v| v.as_f64())).collect();
+    let mean_speedup = if speedups.is_empty() {
+        0.0
+    } else {
+        speedups.iter().sum::<f64>() / speedups.len() as f64
+    };
+    let rows = results.len();
     let artifact = obj(vec![
         ("schema", Json::Str("tango-bench/packed/v1".into())),
         ("bench", Json::Str("packed".into())),
@@ -155,4 +163,17 @@ fn main() {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_packed.json");
     tango::util::fsio::write_atomic(path, &artifact.to_string()).expect("write BENCH_packed.json");
     println!("\nwrote {path}");
+    // One-row summary appended to the cross-commit perf trajectory (the
+    // full artifact above is overwritten per run; the history accumulates).
+    let history = obj(vec![
+        ("schema", Json::Str("tango-bench/history/v1".into())),
+        ("bench", Json::Str("packed".into())),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Num(rows as f64)),
+        ("mean_speedup", Json::Num(mean_speedup)),
+    ]);
+    let hist_path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_history.jsonl");
+    tango::util::fsio::append_line_atomic(hist_path, &history.to_string())
+        .expect("append BENCH_history.jsonl");
+    println!("appended {hist_path}");
 }

@@ -107,6 +107,13 @@ fn main() {
         }
     }
     t.print();
+    let mean = |key: &str| -> f64 {
+        let vals: Vec<f64> =
+            results.iter().filter_map(|r| r.get(key).and_then(|v| v.as_f64())).collect();
+        if vals.is_empty() { 0.0 } else { vals.iter().sum::<f64>() / vals.len() as f64 }
+    };
+    let (mean_tango, mean_packed) = (mean("tango_speedup"), mean("tango4_packed_speedup"));
+    let rows = results.len();
     let artifact = obj(vec![
         ("schema", Json::Str("tango-bench/train_speed/v1".into())),
         ("bench", Json::Str("train_speed".into())),
@@ -117,4 +124,18 @@ fn main() {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_train_speed.json");
     tango::util::fsio::write_atomic(path, &artifact.to_string()).expect("write BENCH_train_speed.json");
     println!("wrote {path}");
+    // One-row summary appended to the cross-commit perf trajectory (the
+    // full artifact above is overwritten per run; the history accumulates).
+    let history = obj(vec![
+        ("schema", Json::Str("tango-bench/history/v1".into())),
+        ("bench", Json::Str("train_speed".into())),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Num(rows as f64)),
+        ("mean_tango_speedup", Json::Num(mean_tango)),
+        ("mean_tango4_packed_speedup", Json::Num(mean_packed)),
+    ]);
+    let hist_path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_history.jsonl");
+    tango::util::fsio::append_line_atomic(hist_path, &history.to_string())
+        .expect("append BENCH_history.jsonl");
+    println!("appended {hist_path}");
 }

@@ -24,7 +24,10 @@ const ITER_METHODS: [&str; 7] =
     [".iter()", ".keys()", ".values()", ".values_mut()", ".into_iter()", ".drain(", ".retain("];
 
 /// Obs entry points whose first argument must be a `obs::keys` constant (O1).
-const OBS_FNS: [&str; 4] = ["span", "timed", "counter_add", "gauge_set"];
+/// `instant` is the trace-timeline marker added with the flight recorder —
+/// its names flow into Chrome trace events and must resolve in `obs::keys`
+/// just like span and counter names.
+const OBS_FNS: [&str; 5] = ["span", "timed", "counter_add", "gauge_set", "instant"];
 
 /// Direct file-write tokens banned in library code (W1): artifact and
 /// checkpoint writers must go through `util::fsio::write_atomic` so an

@@ -179,7 +179,8 @@ impl Default for SamplerConfig {
 }
 
 /// Observability knobs (the `[metrics]` TOML section and the
-/// `--trace` / `--metrics-out` CLI flags; see [`crate::obs`]).
+/// `--trace` / `--metrics-out` / `--trace-out` / `--flight-recorder` CLI
+/// flags; see [`crate::obs`]).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct MetricsConfig {
     /// Force tracing on/off for this run. `None` leaves the process-wide
@@ -188,6 +189,14 @@ pub struct MetricsConfig {
     /// Write the structured JSON run artifact (`tango-metrics/v1`) to this
     /// path after the run completes.
     pub out: Option<String>,
+    /// Write the Chrome trace-event timeline (`tango-trace/v1`, loadable
+    /// in Perfetto) to this path after the run. Setting it turns event
+    /// collection on for the run.
+    pub trace_out: Option<String>,
+    /// Arm the fault flight recorder: on every fault recovery (and on a
+    /// trainer error) dump the last N timeline events per thread beside
+    /// the metrics artifact. 0 = off.
+    pub flight_recorder: usize,
 }
 
 /// Checkpoint/resume knobs (the `[ckpt]` TOML section and the
@@ -546,6 +555,12 @@ impl TrainConfig {
         if let Some(v) = doc.get("metrics", "out") {
             cfg.metrics.out = Some(v.to_string());
         }
+        if let Some(v) = doc.get("metrics", "trace_out") {
+            cfg.metrics.trace_out = Some(v.to_string());
+        }
+        if let Some(v) = doc.get("metrics", "flight_recorder") {
+            cfg.metrics.flight_recorder = v.parse().map_err(|e| format!("flight_recorder: {e}"))?;
+        }
         // Checkpoint/resume knobs live in their own `[ckpt]` section (shared
         // by `tango train` and `tango multigpu` configs).
         if let Some(v) = doc.get("ckpt", "ckpt_every") {
@@ -873,14 +888,18 @@ bucket_bits = "8,6,4"
 
     #[test]
     fn metrics_section_parses() {
-        let text = "[train]\nmodel = \"gcn\"\n\n[metrics]\ntrace = false\nout = \"m.json\"\n";
+        let text = "[train]\nmodel = \"gcn\"\n\n[metrics]\ntrace = false\nout = \"m.json\"\n\
+                    trace_out = \"t.json\"\nflight_recorder = 64\n";
         let cfg = TrainConfig::from_toml(text).unwrap();
         assert_eq!(cfg.metrics.trace, Some(false));
         assert_eq!(cfg.metrics.out.as_deref(), Some("m.json"));
-        // Absent section = both knobs unset.
+        assert_eq!(cfg.metrics.trace_out.as_deref(), Some("t.json"));
+        assert_eq!(cfg.metrics.flight_recorder, 64);
+        // Absent section = all knobs unset.
         let plain = TrainConfig::from_toml("[train]\nmodel = \"gcn\"\n").unwrap();
         assert_eq!(plain.metrics, MetricsConfig::default());
         assert!(TrainConfig::from_toml("[metrics]\ntrace = \"loud\"\n").is_err());
+        assert!(TrainConfig::from_toml("[metrics]\nflight_recorder = \"lots\"\n").is_err());
     }
 
     #[test]

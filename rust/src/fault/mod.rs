@@ -125,6 +125,8 @@ pub struct FaultReport {
     /// slept — accounted so recovery cost shows up in reports without a
     /// wall-clock dependency.
     pub backoff_s: f64,
+    /// Flight-recorder dumps written by recovery paths this run.
+    pub flight_dumps: u64,
 }
 
 impl FaultReport {
@@ -140,6 +142,7 @@ impl FaultReport {
         self.lock_poisons += other.lock_poisons;
         self.lock_recoveries += other.lock_recoveries;
         self.backoff_s += other.backoff_s;
+        self.flight_dumps += other.flight_dumps;
     }
 
     /// True iff any fault of any class was injected.

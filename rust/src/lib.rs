@@ -63,7 +63,15 @@
 //!   global step under `--inject-faults`, recovered via bounded retries
 //!   with simulated exponential backoff, skip-straggler degradation and
 //!   checkpoint replay — every recovery counted in the metrics artifact's
-//!   `fault` section).
+//!   `fault` section). The obs layer also records the event *timeline*:
+//!   per-thread bounded rings of `B/E/i/C` events on a run-relative
+//!   clock, exported via `--trace-out` as Perfetto-loadable Chrome trace
+//!   JSON (`tango-trace/v1`) that shows the producer-thread prefetch
+//!   overlapping compute, with a fault *flight recorder*
+//!   (`--flight-recorder N`) dumping the last-N events per thread on
+//!   every recovery; and the [`perf`] subsystem diffs two run/bench
+//!   artifacts key-by-key (`tango perf diff`, schema `tango-perf/v1`) as
+//!   the deterministic CI regression gate over those numbers.
 //! - **Static analysis** — [`audit`] and the `tango_audit` binary: a
 //!   zero-dependency, repo-specific pass over `rust/src/**` that enforces
 //!   the invariants the compiler cannot see — determinism (no stray
@@ -105,6 +113,7 @@ pub mod metrics;
 pub mod model;
 pub mod multigpu;
 pub mod obs;
+pub mod perf;
 pub mod perfmodel;
 pub mod policy;
 pub mod primitives;

@@ -8,11 +8,13 @@
 //!              [--batch-size N] [--sample-seed S] [--cache-nodes N]
 //!              [--prefetch N] [--degree-buckets 8,64] [--bucket-bits 8,6,4]
 //!              [--packed-compute] [--metrics-out m.json] [--trace true|false]
+//!              [--trace-out t.json] [--flight-recorder N]
 //!              [--ckpt-every N] [--ckpt-path ck.json] [--resume ck.json]
 //!              [--inject-faults] [--fault-seed S] [--fault-producer-steps 3,7]
 //!              [--fault-max-retries N] [--fault-backoff-ms MS]
 //! tango repro  <table1|fig2|fig7|...|fig16|table2|all> [--quick]
 //!              [--epochs N] [--speed-epochs N]
+//! tango perf   diff A.json B.json [--threshold pct] [--json report.json]
 //! tango plan                # print the derived quantization-caching plan
 //! tango artifacts [--dir artifacts]   # list + smoke-run the AOT artifacts
 //! tango multigpu [--config cfg.toml] [--workers K] [--epochs N]
@@ -22,6 +24,7 @@
 //!                [--sampler neighbor|degree] [--degree-buckets 8,64]
 //!                [--bucket-bits 8,6,4] [--packed-compute]
 //!                [--metrics-out m.json] [--trace true|false]
+//!                [--trace-out t.json] [--flight-recorder N]
 //!                [--ckpt-every N] [--ckpt-path ck.json] [--resume ck.json]
 //!                [--inject-faults] [--fault-seed S] [--fault-worker-steps 4]
 //!                [--fault-link-steps 6,6,6] [--fault-lock-steps 2]
@@ -64,6 +67,27 @@
 //! trace = false`, env `TANGO_TRACE=0`) turns the tracing layer into a true
 //! no-op — losses and RNG streams are bit-identical either way.
 //!
+//! `--trace-out PATH` (TOML `[metrics] trace_out`) additionally records the
+//! event *timeline* — per-thread `B/E/i/C` events on a run-relative clock —
+//! and writes it as Chrome trace-event JSON (`tango-trace/v1`, loadable in
+//! Perfetto): the producer-thread `stage1` spans visibly overlap the
+//! consumer's `compute`. `--flight-recorder N` (TOML `[metrics]
+//! flight_recorder`) arms the fault flight recorder: every fault-harness
+//! recovery (and a trainer error return) dumps the last N timeline events
+//! per thread to `<metrics-out stem>.flight.json` — a post-mortem whose
+//! final events name the recovery path taken, counted in the artifact's
+//! `fault.flight_dumps`. Event collection stays a single relaxed atomic
+//! check when neither flag is set, so untraced runs are bit-identical.
+//!
+//! `tango perf diff A.json B.json` compares two `tango-metrics/v1` (or
+//! `tango-bench/*`) artifacts span-by-span and counter-by-counter in
+//! deterministic key order, prints a delta table and exits non-zero when a
+//! gated (count-like) key moved more than `--threshold` percent (default
+//! 10; timing keys are reported but never gate — CI machines jitter).
+//! `--json report.json` writes the machine-readable `tango-perf/v1`
+//! report; CI runs this as the blocking `perf-gate` job against a
+//! committed baseline.
+//!
 //! `--degree-buckets`/`--bucket-bits` (TOML `[policy]`) configure the
 //! degree-aware mixed-precision policy for the sampled feature gather:
 //! ascending in-degree boundaries partition the nodes (bucket 0 hottest),
@@ -105,6 +129,7 @@ fn main() {
         "plan" => cmd_plan(),
         "artifacts" => cmd_artifacts(&args),
         "multigpu" => cmd_multigpu(&args),
+        "perf" => cmd_perf(&args),
         _ => {
             print_help();
             Ok(())
@@ -130,7 +155,9 @@ fn print_help() {
          \x20 artifacts  list and smoke-run the AOT artifacts\n\
          \x20 multigpu   run the data-parallel simulation on sampled\n\
          \x20            mini-batches (shares --fanouts/--batch-size/\n\
-         \x20            --sample-seed/--cache-nodes/--prefetch with train)\n"
+         \x20            --sample-seed/--cache-nodes/--prefetch with train)\n\
+         \x20 perf       diff two metrics/bench artifacts as a regression\n\
+         \x20            gate (tango perf diff A.json B.json --threshold 10)\n"
     );
 }
 
@@ -159,13 +186,41 @@ fn print_policy_report(policy: Option<&tango::policy::PolicyGatherReport>) {
 }
 
 /// Apply a run's `[metrics]` knobs before training starts: honour an
-/// explicit `--trace` override and clear the process-global registry so the
-/// artifact describes this run alone (shared by `train` and `multigpu`).
+/// explicit `--trace` override, clear the process-global registry *and*
+/// event rings so the artifacts describe this run alone, switch timeline
+/// collection on iff `--trace-out` / `--flight-recorder` asked for it, and
+/// arm the flight recorder (shared by `train` and `multigpu`).
 fn apply_metrics_config(metrics: &tango::config::MetricsConfig) {
     if let Some(on) = metrics.trace {
         tango::obs::set_enabled(on);
     }
     tango::obs::reset();
+    tango::obs::set_trace_enabled(metrics.trace_out.is_some() || metrics.flight_recorder > 0);
+    if metrics.flight_recorder > 0 {
+        tango::obs::set_flight_recorder(Some(&flight_path(metrics)), metrics.flight_recorder);
+    } else {
+        tango::obs::set_flight_recorder(None, 0);
+    }
+}
+
+/// Where flight-recorder dumps land: beside the metrics artifact
+/// (`<out stem>.flight.json`), else beside the trace, else `tango.flight.json`.
+fn flight_path(metrics: &tango::config::MetricsConfig) -> String {
+    let base = metrics.out.as_deref().or(metrics.trace_out.as_deref()).unwrap_or("tango.json");
+    let stem = base.strip_suffix(".json").unwrap_or(base);
+    format!("{stem}.flight.json")
+}
+
+/// Post-mortem hook for a trainer error return: mark the timeline and dump
+/// the flight recorder (if armed) before the error propagates to `main`.
+fn dump_on_error<T>(result: tango::Result<T>) -> tango::Result<T> {
+    if result.is_err() {
+        tango::obs::instant(tango::obs::keys::EVT_TRAINER_ERROR);
+        if tango::obs::flight_dump(tango::obs::keys::EVT_TRAINER_ERROR) {
+            tango::obs::counter_add(tango::obs::keys::CTR_FAULT_FLIGHT_DUMPS, 1);
+        }
+    }
+    result
 }
 
 /// Read the `--config` file, if given (shared by `train` and `multigpu` so
@@ -254,6 +309,10 @@ fn train_config_with_toml(args: &Args, toml: Option<&str>) -> tango::Result<Trai
     if let Some(p) = args.flags.get("metrics-out") {
         cfg.metrics.out = Some(p.clone());
     }
+    if let Some(p) = args.flags.get("trace-out") {
+        cfg.metrics.trace_out = Some(p.clone());
+    }
+    cfg.metrics.flight_recorder = flag(args, "flight-recorder", cfg.metrics.flight_recorder)?;
     cfg.ckpt.every = flag(args, "ckpt-every", cfg.ckpt.every)?;
     if let Some(p) = args.flags.get("ckpt-path") {
         cfg.ckpt.path = p.clone();
@@ -324,7 +383,7 @@ fn cmd_train(args: &Args) -> tango::Result<()> {
             tango::graph::datasets::Task::LinkPrediction => "dot-product decoder, eval = AUC",
         }
     );
-    let report = trainer.run()?;
+    let report = dump_on_error(trainer.run())?;
     println!(
         "\nfinal {} {:.4} | {} epochs in {} ({}/epoch) | bits {}",
         tango::config::metric_name(task),
@@ -368,6 +427,10 @@ fn cmd_train(args: &Args) -> tango::Result<()> {
         let artifact = tango::obs::train_artifact(&cfg, &report, &tango::obs::snapshot());
         tango::obs::write_artifact(path, &artifact)?;
         println!("metrics artifact: {path}");
+    }
+    if let Some(path) = cfg.metrics.trace_out.as_deref() {
+        tango::obs::write_trace(path, "train")?;
+        println!("trace artifact: {path}");
     }
     Ok(())
 }
@@ -483,7 +546,7 @@ fn cmd_multigpu(args: &Args) -> tango::Result<()> {
         println!("backend: packed sub-byte kernels (--packed-compute)");
     }
     apply_metrics_config(&cfg.train.metrics);
-    let report = run_data_parallel(&cfg, &data)?;
+    let report = dump_on_error(run_data_parallel(&cfg, &data))?;
     for (i, e) in report.epochs.iter().enumerate() {
         println!(
             "epoch {i}: {} steps, compute {} + comm {} + wait {} = {}  (loss {:.4}; \
@@ -508,5 +571,38 @@ fn cmd_multigpu(args: &Args) -> tango::Result<()> {
         tango::obs::write_artifact(path, &artifact)?;
         println!("metrics artifact: {path}");
     }
+    if let Some(path) = cfg.train.metrics.trace_out.as_deref() {
+        tango::obs::write_trace(path, "multigpu")?;
+        println!("trace artifact: {path}");
+    }
+    Ok(())
+}
+
+const PERF_USAGE: &str = "usage: tango perf diff A.json B.json [--threshold pct] [--json out.json]";
+
+fn cmd_perf(args: &Args) -> tango::Result<()> {
+    if args.positional.get(1).map(|s| s.as_str()) != Some("diff") {
+        anyhow::bail!("{PERF_USAGE}");
+    }
+    let (Some(a), Some(b)) = (args.positional.get(2), args.positional.get(3)) else {
+        anyhow::bail!("{PERF_USAGE}");
+    };
+    let threshold: f64 = flag(args, "threshold", 10.0)?;
+    let report = tango::perf::diff_files(a, b, threshold)?;
+    for line in report.table_lines() {
+        println!("{line}");
+    }
+    if let Some(path) = args.flags.get("json") {
+        tango::util::fsio::write_atomic(path, &report.to_json().to_string())?;
+        println!("perf report: {path}");
+    }
+    if report.regressions > 0 {
+        anyhow::bail!(
+            "{} perf regression(s) beyond the {:.1}% threshold",
+            report.regressions,
+            threshold
+        );
+    }
+    println!("perf: OK — {} keys compared, threshold {:.1}%", report.rows.len(), threshold);
     Ok(())
 }

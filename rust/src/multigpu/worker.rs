@@ -407,6 +407,9 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                             prefetch,
                             wb.len().saturating_sub(skip),
                             move |bi| {
+                                // Timeline lane: this producer works for
+                                // simulated worker `w` (coordinator = pid 0).
+                                let _pid = crate::obs::trace_pid_scope(w as u32 + 1);
                                 let abs = skip + bi;
                                 st.prepare(&wb[abs], mix_seeds(&[epoch as u64, abs as u64]))
                             },
@@ -439,6 +442,11 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                                 poison_lock(&scratch);
                                 recover_poisoned_lock(&scratch, inj);
                             }
+                        }
+                        crate::obs::instant(crate::obs::keys::EVT_RECOVERY_LOCK);
+                        if crate::obs::flight_dump(crate::obs::keys::EVT_RECOVERY_LOCK) {
+                            inj.report.flight_dumps += 1;
+                            crate::obs::counter_add(crate::obs::keys::CTR_FAULT_FLIGHT_DUMPS, 1);
                         }
                     }
                     let mut failures = 0usize;
@@ -473,6 +481,11 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                             .set_params_flat(&params);
                         inj.report.worker_rebuilds += 1;
                         crate::obs::counter_add(crate::obs::keys::CTR_FAULT_WORKER_REBUILDS, 1);
+                        crate::obs::instant(crate::obs::keys::EVT_RECOVERY_WORKER_REBUILD);
+                        if crate::obs::flight_dump(crate::obs::keys::EVT_RECOVERY_WORKER_REBUILD) {
+                            inj.report.flight_dumps += 1;
+                            crate::obs::counter_add(crate::obs::keys::CTR_FAULT_FLIGHT_DUMPS, 1);
+                        }
                     }
                 }
                 // Synchronous round: each worker with a batch left takes its
@@ -509,6 +522,7 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                     let wait = t_wait.elapsed().as_secs_f64();
                     let mut guard = workers[w].lock().unwrap_or_else(|e| e.into_inner());
                     let ws = &mut *guard;
+                    let _pid = crate::obs::trace_pid_scope(w as u32 + 1);
                     let _step_span = crate::obs::span(crate::obs::keys::SPAN_WORKER_STEP);
                     let t0 = Instant::now();
                     let before = ws.model.params_flat();
@@ -581,11 +595,26 @@ pub fn run_data_parallel(cfg: &MultiGpuConfig, data: &Dataset) -> crate::Result<
                                 crate::obs::keys::CTR_FAULT_ALLREDUCE_DEGRADED,
                                 1,
                             );
+                            crate::obs::instant(crate::obs::keys::EVT_RECOVERY_ALLREDUCE_DEGRADE);
+                            if crate::obs::flight_dump(
+                                crate::obs::keys::EVT_RECOVERY_ALLREDUCE_DEGRADE,
+                            ) {
+                                inj.report.flight_dumps += 1;
+                                crate::obs::counter_add(
+                                    crate::obs::keys::CTR_FAULT_FLIGHT_DUMPS,
+                                    1,
+                                );
+                            }
                             break;
                         }
                         inj.charge_backoff(drops);
                         inj.report.link_retries += 1;
                         crate::obs::counter_add(crate::obs::keys::CTR_FAULT_LINK_RETRIES, 1);
+                        crate::obs::instant(crate::obs::keys::EVT_RECOVERY_LINK_RETRY);
+                        if crate::obs::flight_dump(crate::obs::keys::EVT_RECOVERY_LINK_RETRY) {
+                            inj.report.flight_dumps += 1;
+                            crate::obs::counter_add(crate::obs::keys::CTR_FAULT_FLIGHT_DUMPS, 1);
+                        }
                         // Re-transmission cost of the retried ring pass.
                         comm_s += cfg.interconnect.transfer_time(bytes, ring_messages(k), k);
                     }

@@ -140,6 +140,7 @@ fn fault_json(f: Option<&crate::fault::FaultReport>) -> Json {
         ("lock_poisons", int(f.lock_poisons)),
         ("lock_recoveries", int(f.lock_recoveries)),
         ("backoff_s", num(f.backoff_s)),
+        ("flight_dumps", int(f.flight_dumps)),
     ])
 }
 

@@ -5,8 +5,10 @@
 //! tooling (and `tests/metrics_schema.rs`) keys on. An inline string at a
 //! call site can drift — renamed in one place, stale in the artifact —
 //! without any compiler help. So every `span` / `timed` / `counter_add` /
-//! `gauge_set` key lives here as a named constant, and the `tango-audit`
-//! O1 rule rejects string literals at obs call sites outside this module.
+//! `gauge_set` / `instant` key lives here as a named constant, and the
+//! `tango-audit` O1 rule rejects string literals at obs call sites outside
+//! this module — trace event names included, so every name in a
+//! `tango-trace/v1` timeline resolves right here.
 //!
 //! Dynamic keys (the per-bucket `Error_X` gauges) get constructor
 //! functions instead of constants, keeping the naming scheme pinned in
@@ -92,6 +94,26 @@ pub const CTR_FAULT_ALLREDUCE_DEGRADED: &str = "fault.allreduce.degraded";
 pub const CTR_FAULT_LOCK_POISONS: &str = "fault.lock.poisons";
 /// Poisoned locks recovered via `into_inner` and verified re-lockable.
 pub const CTR_FAULT_LOCK_RECOVERIES: &str = "fault.lock.recoveries";
+/// Flight-recorder dumps written on fault recoveries / trainer errors.
+pub const CTR_FAULT_FLIGHT_DUMPS: &str = "fault.flight.dumps";
+
+// ---- trace instant events (obs::instant) -----------------------------------
+//
+// Point events on the trace timeline marking a recovery path taken; each
+// doubles as the `reason` of the flight-recorder dump it triggers.
+
+/// A prefetch producer thread was restarted after an injected panic.
+pub const EVT_RECOVERY_PRODUCER_RESTART: &str = "recovery.producer_restart";
+/// A failed worker was rebuilt from a peer and its step replayed.
+pub const EVT_RECOVERY_WORKER_REBUILD: &str = "recovery.worker_rebuild";
+/// A dropped all-reduce link was retried (transfer time re-charged).
+pub const EVT_RECOVERY_LINK_RETRY: &str = "recovery.link_retry";
+/// All-reduce degraded to skip-straggler after retry exhaustion.
+pub const EVT_RECOVERY_ALLREDUCE_DEGRADE: &str = "recovery.allreduce_degrade";
+/// A poisoned feature-store lock was recovered via `into_inner`.
+pub const EVT_RECOVERY_LOCK: &str = "recovery.lock_recovered";
+/// A trainer returned an error to the CLI (post-mortem dump trigger).
+pub const EVT_TRAINER_ERROR: &str = "recovery.trainer_error";
 
 // ---- dynamic gauge families (obs::gauge_set) -------------------------------
 
@@ -139,6 +161,13 @@ pub const ALL_STATIC_KEYS: &[&str] = &[
     CTR_FAULT_ALLREDUCE_DEGRADED,
     CTR_FAULT_LOCK_POISONS,
     CTR_FAULT_LOCK_RECOVERIES,
+    CTR_FAULT_FLIGHT_DUMPS,
+    EVT_RECOVERY_PRODUCER_RESTART,
+    EVT_RECOVERY_WORKER_REBUILD,
+    EVT_RECOVERY_LINK_RETRY,
+    EVT_RECOVERY_ALLREDUCE_DEGRADE,
+    EVT_RECOVERY_LOCK,
+    EVT_TRAINER_ERROR,
 ];
 
 #[cfg(test)]

@@ -17,7 +17,18 @@
 //!   call sites name keys via these constants only (audit rule O1);
 //! - [`Histogram`] — log-bucketed latencies with `p50/p95/p99`;
 //! - [`train_artifact`] / [`multigpu_artifact`] / [`write_artifact`] — the
-//!   `--metrics-out` structured JSON run artifact.
+//!   `--metrics-out` structured JSON run artifact;
+//! - the event timeline ([`trace_enabled`] / [`set_trace_enabled`],
+//!   [`instant`], [`trace_pid_scope`], [`export_trace`] / [`write_trace`])
+//!   — per-thread bounded rings of `B/E/i/C` events on a run-relative
+//!   clock, fed by the same `span`/`timed`/`counter_add` entry points,
+//!   exported via `--trace-out` as Perfetto-loadable Chrome trace JSON
+//!   (`tango-trace/v1`) — the artifact that *shows* the producer-thread
+//!   prefetch overlapping compute;
+//! - the fault flight recorder ([`set_flight_recorder`], [`flight_dump`])
+//!   — on every fault-harness recovery (and trainer error return) the
+//!   last-N events per thread are dumped atomically beside the metrics
+//!   artifact, a post-mortem whose final events name the recovery taken.
 //!
 //! **Off means off**: every recording entry point checks [`enabled`] with
 //! one relaxed atomic load and returns before reading a clock or touching
@@ -37,6 +48,7 @@ mod hist;
 pub mod keys;
 mod registry;
 mod span;
+mod trace;
 
 pub use artifact::{multigpu_artifact, train_artifact, write_artifact, SCHEMA};
 pub use hist::Histogram;
@@ -44,3 +56,8 @@ pub use registry::{
     counter_add, enabled, gauge_set, observe, reset, set_enabled, snapshot, Metrics, SpanStat,
 };
 pub use span::{span, timed, Span, Timed};
+pub use trace::{
+    current_pid as trace_current_pid, enabled as trace_enabled, export as export_trace,
+    flight_dump, instant, pid_scope as trace_pid_scope, set_enabled as set_trace_enabled,
+    set_flight_recorder, write as write_trace, PidScope, TRACE_SCHEMA,
+};

@@ -121,8 +121,13 @@ fn with_global(f: impl FnOnce(&mut Metrics)) {
     f(&mut g);
 }
 
-/// Add `n` to the named counter.
+/// Add `n` to the named counter. When event-timeline collection is on,
+/// the increment is also emitted as a Chrome trace `C` event — the
+/// timeline is switchable independently of the aggregate registry.
 pub fn counter_add(name: &str, n: u64) {
+    if super::trace::enabled() {
+        super::trace::emit_counter(name, n as f64);
+    }
     if !enabled() {
         return;
     }
@@ -159,9 +164,12 @@ pub fn snapshot() -> Metrics {
 }
 
 /// Clear the registry (tests, and the CLI before a run so the
-/// `--metrics-out` artifact describes that run alone).
+/// `--metrics-out` artifact describes that run alone). Also clears the
+/// per-thread trace event rings and restarts the trace clock epoch, so
+/// back-to-back traced runs in one process get independent timelines.
 pub fn reset() {
     with_global(|m| *m = Metrics::default());
+    super::trace::reset();
 }
 
 #[cfg(test)]

@@ -13,8 +13,14 @@
 //!
 //! Both guards are inert (no clock read, no thread-local touch) when
 //! tracing is [disabled](super::enabled).
+//!
+//! When event-timeline collection is on ([`super::trace_enabled`]) the same
+//! guards additionally emit Chrome trace `B`/`E` events — bare segment
+//! names, not joined paths, so every event name resolves in
+//! [`super::keys`] — on open and drop; the aggregate registry and the
+//! timeline stay independently switchable.
 
-use super::registry;
+use super::{registry, trace};
 use std::cell::RefCell;
 use std::time::Instant;
 
@@ -29,36 +35,54 @@ thread_local! {
 #[must_use = "a span measures the scope it lives in; binding to _ drops it immediately"]
 pub struct Span {
     start: Option<Instant>,
+    metered: bool,
+    /// Bare segment name to close the trace `E` event with, when traced.
+    trace_name: Option<String>,
 }
 
 /// Open a hierarchical span named `name` on this thread. Returns a guard
 /// that records `<parent-path>/<name>` when dropped. No-op while disabled.
 pub fn span(name: &str) -> Span {
-    if !registry::enabled() {
-        return Span { start: None };
+    let metered = registry::enabled();
+    let traced = trace::enabled();
+    if !metered && !traced {
+        return Span { start: None, metered: false, trace_name: None };
     }
-    PATH.with(|p| {
-        let (path, stack) = &mut *p.borrow_mut();
-        stack.push(path.len());
-        if !path.is_empty() {
-            path.push('/');
-        }
-        path.push_str(name);
-    });
-    Span { start: Some(Instant::now()) }
+    if metered {
+        PATH.with(|p| {
+            let (path, stack) = &mut *p.borrow_mut();
+            stack.push(path.len());
+            if !path.is_empty() {
+                path.push('/');
+            }
+            path.push_str(name);
+        });
+    }
+    let trace_name = if traced {
+        trace::emit_begin(name);
+        Some(name.to_string())
+    } else {
+        None
+    };
+    Span { start: Some(Instant::now()), metered, trace_name }
 }
 
 impl Drop for Span {
     fn drop(&mut self) {
         let Some(start) = self.start else { return };
-        let secs = start.elapsed().as_secs_f64();
-        PATH.with(|p| {
-            let (path, stack) = &mut *p.borrow_mut();
-            registry::record_span(path, secs);
-            if let Some(len) = stack.pop() {
-                path.truncate(len);
-            }
-        });
+        if self.metered {
+            let secs = start.elapsed().as_secs_f64();
+            PATH.with(|p| {
+                let (path, stack) = &mut *p.borrow_mut();
+                registry::record_span(path, secs);
+                if let Some(len) = stack.pop() {
+                    path.truncate(len);
+                }
+            });
+        }
+        if let Some(name) = self.trace_name.take() {
+            trace::emit_end(&name);
+        }
     }
 }
 
@@ -67,20 +91,31 @@ impl Drop for Span {
 pub struct Timed {
     name: &'static str,
     start: Option<Instant>,
+    metered: bool,
+    traced: bool,
 }
 
 /// Time a scope into the flat histogram `name`. No-op while disabled.
 pub fn timed(name: &'static str) -> Timed {
-    if !registry::enabled() {
-        return Timed { name, start: None };
+    let metered = registry::enabled();
+    let traced = trace::enabled();
+    if !metered && !traced {
+        return Timed { name, start: None, metered, traced };
     }
-    Timed { name, start: Some(Instant::now()) }
+    if traced {
+        trace::emit_begin(name);
+    }
+    Timed { name, start: Some(Instant::now()), metered, traced }
 }
 
 impl Drop for Timed {
     fn drop(&mut self) {
-        if let Some(start) = self.start {
+        let Some(start) = self.start else { return };
+        if self.metered {
             registry::observe(self.name, start.elapsed().as_secs_f64());
+        }
+        if self.traced {
+            trace::emit_end(self.name);
         }
     }
 }

@@ -1,0 +1,476 @@
+//! Event-timeline tracing: per-thread bounded ring buffers of
+//! begin/end/instant/counter events on a monotonic run-relative clock.
+//!
+//! The aggregate registry ([`super::snapshot`]) can say *how much* time a
+//! stage took; it cannot show two threads overlapping in time. This module
+//! records the individual events — span open/close ([`emit_begin`] /
+//! [`emit_end`], fed by the existing [`span`](super::span) /
+//! [`timed`](super::timed) guards), counter bumps ([`emit_counter`], fed by
+//! [`counter_add`](super::counter_add)) and explicit [`instant`] marks —
+//! and exports them as Chrome trace-event JSON (schema `tango-trace/v1`,
+//! `ph: B/E/i/C`) loadable in Perfetto, so the producer-thread prefetch
+//! visibly overlaps the consumer's compute span.
+//!
+//! **Off means off**: collection is gated by its own relaxed [`enabled`]
+//! flag, *default off*, checked before any clock read or allocation — a
+//! metrics-only run pays one extra relaxed load per event site and stays
+//! bit-identical (`tests/obs_invariants.rs`). The CLI turns collection on
+//! when `--trace-out` or `--flight-recorder` is set.
+//!
+//! Every thread that emits gets its own bounded ring (oldest events
+//! evicted past [`RING_CAP`]); rings are registered globally so
+//! [`export`] drains all of them deterministically (registration order)
+//! and [`reset`] — reached via [`super::reset`] — clears the buffers *and*
+//! the clock epoch, keeping back-to-back runs in one process independent.
+//! Timestamps are microseconds since the epoch; `pid` is the simulated
+//! worker id (0 = coordinator / single-process; [`pid_scope`] tags worker
+//! and producer threads in `tango multigpu`), `tid` the ring's
+//! registration index.
+//!
+//! The **flight recorder** rides on the same rings: [`set_flight_recorder`]
+//! arms a dump path, and [`flight_dump`] — called by the trainers on every
+//! fault-harness recovery and by the CLI on an error return — atomically
+//! writes the last-N events per thread (schema `tango-trace/v1`,
+//! `kind: "flight"`), a post-mortem whose final events name the recovery
+//! path taken.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Artifact schema tag shared by full traces and flight-recorder dumps.
+pub const TRACE_SCHEMA: &str = "tango-trace/v1";
+
+/// Per-thread ring capacity. Bounds memory for arbitrarily long runs; a
+/// smoke run's full timeline fits with a wide margin.
+const RING_CAP: usize = 65_536;
+
+/// Chrome trace-event phase of one recorded event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Duration begin (`B`) — a `span`/`timed` guard opened.
+    Begin,
+    /// Duration end (`E`) — the guard dropped.
+    End,
+    /// Instant mark (`i`) — a point event such as a fault recovery.
+    Instant,
+    /// Counter sample (`C`) — the increment passed to `counter_add`.
+    Counter,
+}
+
+impl Phase {
+    fn ph(self) -> &'static str {
+        match self {
+            Phase::Begin => "B",
+            Phase::End => "E",
+            Phase::Instant => "i",
+            Phase::Counter => "C",
+        }
+    }
+}
+
+/// One recorded event. `ts_us` is microseconds since the run epoch.
+#[derive(Debug, Clone)]
+struct Event {
+    ts_us: f64,
+    ph: Phase,
+    name: String,
+    pid: u32,
+    /// Counter increment (`C` events only).
+    value: f64,
+}
+
+/// One thread's bounded event ring.
+#[derive(Debug)]
+struct Ring {
+    tid: u32,
+    buf: VecDeque<Event>,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() == RING_CAP {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(ev);
+    }
+}
+
+/// Process-global trace state: the run epoch, every registered ring, and
+/// the flight-recorder arming. One mutex — emit paths only touch it on
+/// their first event after a reset (epoch refresh / ring registration).
+struct Shared {
+    epoch: Instant,
+    rings: Vec<Arc<Mutex<Ring>>>,
+    next_tid: u32,
+    flight_path: Option<String>,
+    flight_last_n: usize,
+}
+
+fn shared() -> &'static Mutex<Shared> {
+    static SHARED: OnceLock<Mutex<Shared>> = OnceLock::new();
+    SHARED.get_or_init(|| {
+        Mutex::new(Shared {
+            epoch: Instant::now(),
+            rings: Vec::new(),
+            next_tid: 0,
+            flight_path: None,
+            flight_last_n: 0,
+        })
+    })
+}
+
+fn enabled_cell() -> &'static AtomicBool {
+    static CELL: OnceLock<AtomicBool> = OnceLock::new();
+    CELL.get_or_init(|| AtomicBool::new(false))
+}
+
+/// Bumped by [`reset`]; threads refresh their cached epoch when it moves.
+static EPOCH_GEN: AtomicU64 = AtomicU64::new(0);
+
+/// Whether event collection is on (default **off**, unlike the aggregate
+/// registry). One relaxed load — the whole cost of a disabled event site.
+#[inline]
+pub fn enabled() -> bool {
+    enabled_cell().load(Ordering::Relaxed)
+}
+
+/// Flip event collection on/off (CLI `--trace-out` / `--flight-recorder`,
+/// tests). Collection alone never changes training numerics.
+pub fn set_enabled(on: bool) {
+    enabled_cell().store(on, Ordering::Relaxed);
+}
+
+/// Per-thread cached state: this thread's ring, its view of the epoch, and
+/// the worker pid events are stamped with.
+struct Tls {
+    ring: Option<Arc<Mutex<Ring>>>,
+    epoch: Instant,
+    gen: u64,
+    pid: u32,
+}
+
+thread_local! {
+    static TLS: RefCell<Tls> = RefCell::new(Tls {
+        ring: None,
+        epoch: Instant::now(),
+        gen: u64::MAX,
+        pid: 0,
+    });
+}
+
+/// RAII pid tag: events emitted by this thread while the scope lives carry
+/// the given worker pid (restored on drop). Cheap enough to enter per step.
+#[must_use = "the pid tag lasts only while this scope is held"]
+pub struct PidScope {
+    prev: u32,
+}
+
+/// Tag this thread's events with simulated-worker `pid` until the returned
+/// scope drops (`tango multigpu` worker and producer threads).
+pub fn pid_scope(pid: u32) -> PidScope {
+    TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        let prev = t.pid;
+        t.pid = pid;
+        PidScope { prev }
+    })
+}
+
+impl Drop for PidScope {
+    fn drop(&mut self) {
+        TLS.with(|t| t.borrow_mut().pid = self.prev);
+    }
+}
+
+/// The worker pid this thread currently stamps events with.
+pub fn current_pid() -> u32 {
+    TLS.with(|t| t.borrow().pid)
+}
+
+/// Record one event on this thread's ring. Callers have already checked
+/// [`enabled`].
+fn record(ph: Phase, name: &str, value: f64) {
+    let gen = EPOCH_GEN.load(Ordering::Relaxed);
+    TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        if t.gen != gen || t.ring.is_none() {
+            let mut g = shared().lock().unwrap_or_else(|e| e.into_inner());
+            t.epoch = g.epoch;
+            t.gen = gen;
+            if t.ring.is_none() {
+                let ring = Arc::new(Mutex::new(Ring { tid: g.next_tid, buf: VecDeque::new() }));
+                g.next_tid += 1;
+                g.rings.push(Arc::clone(&ring));
+                t.ring = Some(ring);
+            }
+        }
+        let ev = Event {
+            ts_us: t.epoch.elapsed().as_secs_f64() * 1e6,
+            ph,
+            name: name.to_string(),
+            pid: t.pid,
+            value,
+        };
+        if let Some(ring) = &t.ring {
+            ring.lock().unwrap_or_else(|e| e.into_inner()).push(ev);
+        }
+    });
+}
+
+/// Span/timed guard opened (`B`). Called by `obs::span` / `obs::timed`.
+pub(super) fn emit_begin(name: &str) {
+    record(Phase::Begin, name, 0.0);
+}
+
+/// Span/timed guard dropped (`E`).
+pub(super) fn emit_end(name: &str) {
+    record(Phase::End, name, 0.0);
+}
+
+/// Counter increment (`C`). Called by `obs::counter_add`; `args.value`
+/// carries the increment, not the running total.
+pub(super) fn emit_counter(name: &str, n: f64) {
+    record(Phase::Counter, name, n);
+}
+
+/// Emit an instant event (`i`) naming a point in time — fault recoveries,
+/// degradations, error exits. Keys come from [`super::keys`] (audit O1).
+pub fn instant(name: &str) {
+    if !enabled() {
+        return;
+    }
+    record(Phase::Instant, name, 0.0);
+}
+
+/// Clear every ring and restart the run-relative clock. Reached through
+/// [`super::reset`] so one call scrubs aggregates *and* timelines; rings
+/// of threads that have exited are dropped entirely.
+pub(super) fn reset() {
+    let mut g = shared().lock().unwrap_or_else(|e| e.into_inner());
+    g.epoch = Instant::now();
+    // A ring whose owning thread is gone has no other strong reference.
+    g.rings.retain(|r| Arc::strong_count(r) > 1);
+    for r in &g.rings {
+        r.lock().unwrap_or_else(|e| e.into_inner()).buf.clear();
+    }
+    g.next_tid = g.rings.iter().map(|r| ring_tid(r) + 1).max().unwrap_or(0);
+    EPOCH_GEN.fetch_add(1, Ordering::Relaxed);
+}
+
+fn ring_tid(r: &Arc<Mutex<Ring>>) -> u32 {
+    r.lock().unwrap_or_else(|e| e.into_inner()).tid
+}
+
+/// Arm (or disarm, with `None`) the flight recorder: on every
+/// [`flight_dump`] call the last `last_n` events per thread are written
+/// atomically to `path`.
+pub fn set_flight_recorder(path: Option<&str>, last_n: usize) {
+    let mut g = shared().lock().unwrap_or_else(|e| e.into_inner());
+    g.flight_path = path.map(|p| p.to_string());
+    g.flight_last_n = last_n;
+}
+
+fn event_json(ev: &Event, tid: u32) -> Json {
+    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+    m.insert("name".into(), Json::Str(ev.name.clone()));
+    m.insert("ph".into(), Json::Str(ev.ph.ph().to_string()));
+    m.insert("pid".into(), Json::Num(ev.pid as f64));
+    m.insert("tid".into(), Json::Num(tid as f64));
+    m.insert("ts".into(), Json::Num(ev.ts_us));
+    match ev.ph {
+        Phase::Counter => {
+            let mut args = BTreeMap::new();
+            args.insert("value".to_string(), Json::Num(ev.value));
+            m.insert("args".into(), Json::Obj(args));
+        }
+        Phase::Instant => {
+            // Thread-scoped instant (Chrome's `s` field).
+            m.insert("s".into(), Json::Str("t".to_string()));
+        }
+        Phase::Begin | Phase::End => {}
+    }
+    Json::Obj(m)
+}
+
+/// Collect events from every ring, in ring registration order, keeping at
+/// most the last `last_n` per ring (`usize::MAX` = all).
+fn collect_events(last_n: usize) -> Vec<Json> {
+    let g = shared().lock().unwrap_or_else(|e| e.into_inner());
+    let mut out = Vec::new();
+    for r in &g.rings {
+        let ring = r.lock().unwrap_or_else(|e| e.into_inner());
+        let skip = ring.buf.len().saturating_sub(last_n);
+        for ev in ring.buf.iter().skip(skip) {
+            out.push(event_json(ev, ring.tid));
+        }
+    }
+    out
+}
+
+/// Build the full `tango-trace/v1` Chrome trace document for this run.
+/// Events are grouped per thread in registration order; within a thread
+/// they are in emission order (timestamps monotone per tid).
+pub fn export(command: &str) -> Json {
+    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+    m.insert("schema".into(), Json::Str(TRACE_SCHEMA.to_string()));
+    m.insert("command".into(), Json::Str(command.to_string()));
+    m.insert("traceEvents".into(), Json::Arr(collect_events(usize::MAX)));
+    Json::Obj(m)
+}
+
+/// Write the full trace for `command` to `path` (atomic tmp + rename).
+pub fn write(path: &str, command: &str) -> crate::Result<()> {
+    crate::util::fsio::write_atomic(path, &export(command).to_string())
+}
+
+/// Dump the last-N events per thread to the armed flight-recorder path
+/// (schema `tango-trace/v1`, `kind: "flight"`, `reason` naming the
+/// recovery). Returns `true` iff armed and the write succeeded; a no-op
+/// (false) when the recorder is off, so recovery paths call it
+/// unconditionally.
+pub fn flight_dump(reason: &str) -> bool {
+    let (path, last_n) = {
+        let g = shared().lock().unwrap_or_else(|e| e.into_inner());
+        match (&g.flight_path, g.flight_last_n) {
+            (Some(p), n) if n > 0 => (p.clone(), n),
+            _ => return false,
+        }
+    };
+    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+    m.insert("schema".into(), Json::Str(TRACE_SCHEMA.to_string()));
+    m.insert("kind".into(), Json::Str("flight".to_string()));
+    m.insert("reason".into(), Json::Str(reason.to_string()));
+    m.insert("traceEvents".into(), Json::Arr(collect_events(last_n)));
+    crate::util::fsio::write_atomic(&path, &Json::Obj(m).to_string()).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Trace state is process-global; serialize the tests that toggle it.
+    /// Other modules' unit tests run concurrently in this binary and may
+    /// hit obs entry points, so assertions filter by this module's own
+    /// `test.trace.*` names instead of counting events globally.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    /// Events from `doc` whose name starts with `prefix`, in export order.
+    fn named(doc: &Json, prefix: &str) -> Vec<Json> {
+        doc.get("traceEvents")
+            .and_then(|e| e.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter(|e| {
+                        e.get("name")
+                            .and_then(|s| s.as_str())
+                            .is_some_and(|n| n.starts_with(prefix))
+                    })
+                    .cloned()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    #[test]
+    fn disabled_collection_records_nothing() {
+        let _l = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        super::super::reset();
+        instant("test.trace.off");
+        assert!(named(&export("test"), "test.trace.off").is_empty());
+    }
+
+    #[test]
+    fn events_round_trip_with_monotone_timestamps() {
+        let _l = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        super::super::reset();
+        emit_begin("test.trace.rt.span");
+        emit_counter("test.trace.rt.ctr", 3.0);
+        emit_end("test.trace.rt.span");
+        instant("test.trace.rt.mark");
+        let doc = export("test");
+        set_enabled(false);
+        assert_eq!(doc.get("schema").and_then(|s| s.as_str()), Some(TRACE_SCHEMA));
+        let evs = named(&doc, "test.trace.rt.");
+        let phs: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("ph").and_then(|p| p.as_str())).collect();
+        assert_eq!(phs, vec!["B", "C", "E", "i"]);
+        let ts: Vec<f64> =
+            evs.iter().filter_map(|e| e.get("ts").and_then(|t| t.as_f64())).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "timestamps monotone: {ts:?}");
+        assert_eq!(
+            evs[1].get("args").and_then(|a| a.get("value")).and_then(|v| v.as_f64()),
+            Some(3.0)
+        );
+        assert_eq!(evs[3].get("s").and_then(|s| s.as_str()), Some("t"));
+    }
+
+    #[test]
+    fn reset_clears_rings_and_restarts_the_clock() {
+        let _l = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        super::super::reset();
+        instant("test.trace.reset.first");
+        let before = export("test");
+        super::super::reset();
+        instant("test.trace.reset.second");
+        let after = export("test");
+        set_enabled(false);
+        assert_eq!(named(&before, "test.trace.reset.first").len(), 1);
+        assert!(
+            named(&after, "test.trace.reset.first").is_empty(),
+            "old events must not survive a reset"
+        );
+        assert_eq!(named(&after, "test.trace.reset.second").len(), 1);
+    }
+
+    #[test]
+    fn flight_dump_is_inert_until_armed() {
+        let _l = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_flight_recorder(None, 0);
+        assert!(!flight_dump("test.trace.reason"));
+        let path =
+            std::env::temp_dir().join(format!("tango_trace_flight_{}.json", std::process::id()));
+        let path_s = path.to_string_lossy().into_owned();
+        set_enabled(true);
+        super::super::reset();
+        instant("test.trace.recovery");
+        set_flight_recorder(Some(&path_s), 8);
+        assert!(flight_dump("test.trace.reason"));
+        set_flight_recorder(None, 0);
+        set_enabled(false);
+        let text = std::fs::read_to_string(&path).expect("dump written");
+        let doc = Json::parse(&text).expect("json");
+        assert_eq!(doc.get("kind").and_then(|s| s.as_str()), Some("flight"));
+        assert_eq!(doc.get("reason").and_then(|s| s.as_str()), Some("test.trace.reason"));
+        let evs = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("events");
+        assert!(evs.iter().any(|e| {
+            e.get("name").and_then(|s| s.as_str()) == Some("test.trace.recovery")
+        }));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn pid_scope_tags_and_restores() {
+        let _l = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        super::super::reset();
+        assert_eq!(current_pid(), 0);
+        {
+            let _p = pid_scope(3);
+            assert_eq!(current_pid(), 3);
+            instant("test.trace.worker");
+        }
+        assert_eq!(current_pid(), 0);
+        let doc = export("test");
+        set_enabled(false);
+        let evs = named(&doc, "test.trace.worker");
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].get("pid").and_then(|p| p.as_f64()), Some(3.0));
+    }
+}

@@ -1,0 +1,381 @@
+//! `tango perf` — artifact-vs-artifact performance regression diffing.
+//!
+//! `tango perf diff A.json B.json` flattens two run artifacts into
+//! comparable `key → value` maps, compares them key-by-key in
+//! deterministic (BTreeMap) order, prints a delta table and exits non-zero
+//! when a *gated* key moved more than the threshold — the blocking CI
+//! `perf-gate` that turns `BENCH_*.json` / `--metrics-out` emissions into
+//! a regression trajectory instead of a snapshot.
+//!
+//! Two artifact families are understood:
+//!
+//! - **`tango-metrics/*`** (`--metrics-out`): every span path becomes
+//!   `spans.<path>.calls` (gated) and `spans.<path>.total_s` (timing),
+//!   every counter becomes `counters.<name>` (gated).
+//! - **`tango-bench/*`** (`benches/*.rs` emitters): top-level numeric
+//!   scalars (`epochs_per_run`, `nodes`, `iters`, …) are gated — they
+//!   changing means the bench *configuration* drifted — and each
+//!   `results[]` row is keyed by its string-valued fields
+//!   (`results[dataset=Pubmed,model=gcn].tango_speedup`).
+//!
+//! **Gating is count-shaped, not time-shaped.** Keys whose last segment
+//! looks like a duration or a speed ratio (`*_s`, `*_s_per_*`,
+//! `*speedup*`, `*secs*`, `*wall*`) are reported in the table but never
+//! fail the gate: CI machines jitter, while batch counts, gather rows,
+//! wire bytes and span call counts are deterministic for a fixed
+//! config/seed — those regress loudly. A gated key *missing* from the new
+//! artifact is always a regression (structural: an instrumented path
+//! disappeared); a key only the new artifact has is informational.
+//!
+//! Same inputs produce a byte-identical report (`--json`): ordering is
+//! BTreeMap-sorted, formatting is fixed, and nothing reads a clock.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Schema tag of the `--json` report this module writes.
+pub const SCHEMA: &str = "tango-perf/v1";
+
+/// One compared key in a [`DiffReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffRow {
+    /// Flattened key (`spans.epoch.calls`, `counters.gather.rows`, …).
+    pub key: String,
+    /// Baseline value (`None` = key absent from the baseline).
+    pub base: Option<f64>,
+    /// New value (`None` = key absent from the new artifact).
+    pub new: Option<f64>,
+    /// Percent change vs baseline; `None` when undefined (a side missing,
+    /// or baseline zero with a nonzero new value).
+    pub delta_pct: Option<f64>,
+    /// Whether this key can fail the gate (false = timing, advisory only).
+    pub gated: bool,
+    /// Whether this key failed the gate.
+    pub regressed: bool,
+}
+
+/// The full deterministic comparison of two artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffReport {
+    /// `schema` field of the baseline artifact.
+    pub base_schema: String,
+    /// `schema` field of the new artifact.
+    pub new_schema: String,
+    /// Gate threshold, percent.
+    pub threshold_pct: f64,
+    /// Every compared key, sorted.
+    pub rows: Vec<DiffRow>,
+    /// Count of rows with `regressed == true`.
+    pub regressions: usize,
+}
+
+/// Timing-shaped keys are reported but never gate (wall-clock jitter);
+/// classification looks at the last `.`-segment of the flattened key.
+fn is_timing(key: &str) -> bool {
+    let last = key.rsplit('.').next().unwrap_or(key);
+    last.ends_with("_s")
+        || last.contains("_s_per_")
+        || last.contains("speedup")
+        || last.contains("secs")
+        || last.contains("wall")
+}
+
+/// Flatten one artifact into comparable `key → value` pairs.
+///
+/// Errors on documents without a recognized `schema` tag — diffing two
+/// arbitrary JSON files would produce a silently empty (always-green)
+/// comparison.
+pub fn comparable_metrics(doc: &Json) -> crate::Result<BTreeMap<String, f64>> {
+    let schema = doc
+        .get("schema")
+        .and_then(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("artifact has no \"schema\" field"))?;
+    let mut out = BTreeMap::new();
+    if schema.starts_with("tango-metrics/") {
+        if let Some(Json::Obj(spans)) = doc.get("spans") {
+            for (path, st) in spans {
+                if let Some(calls) = st.get("calls").and_then(|v| v.as_f64()) {
+                    out.insert(format!("spans.{path}.calls"), calls);
+                }
+                if let Some(total) = st.get("total_s").and_then(|v| v.as_f64()) {
+                    out.insert(format!("spans.{path}.total_s"), total);
+                }
+            }
+        }
+        if let Some(Json::Obj(counters)) = doc.get("counters") {
+            for (name, v) in counters {
+                if let Some(v) = v.as_f64() {
+                    out.insert(format!("counters.{name}"), v);
+                }
+            }
+        }
+    } else if schema.starts_with("tango-bench/") {
+        if let Json::Obj(top) = doc {
+            for (k, v) in top {
+                if let Some(v) = v.as_f64() {
+                    out.insert(k.clone(), v);
+                }
+            }
+        }
+        let rows = doc.get("results").and_then(|r| r.as_arr()).unwrap_or(&[]);
+        for (i, row) in rows.iter().enumerate() {
+            let Json::Obj(fields) = row else { continue };
+            let mut label: Vec<String> = fields
+                .iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| format!("{k}={s}")))
+                .collect();
+            if label.is_empty() {
+                label.push(format!("row{i}"));
+            }
+            let label = label.join(",");
+            for (k, v) in fields {
+                if let Some(v) = v.as_f64() {
+                    out.insert(format!("results[{label}].{k}"), v);
+                }
+            }
+        }
+    } else {
+        anyhow::bail!(
+            "unsupported artifact schema {schema:?} (want tango-metrics/* or tango-bench/*)"
+        );
+    }
+    Ok(out)
+}
+
+/// Compare two parsed artifacts at `threshold_pct`.
+pub fn diff(base: &Json, new: &Json, threshold_pct: f64) -> crate::Result<DiffReport> {
+    let base_schema =
+        base.get("schema").and_then(|s| s.as_str()).unwrap_or_default().to_string();
+    let new_schema = new.get("schema").and_then(|s| s.as_str()).unwrap_or_default().to_string();
+    if base_schema != new_schema {
+        anyhow::bail!("schema mismatch: baseline {base_schema:?} vs new {new_schema:?}");
+    }
+    let a = comparable_metrics(base)?;
+    let b = comparable_metrics(new)?;
+    let mut keys: Vec<&String> = a.keys().chain(b.keys()).collect();
+    keys.sort();
+    keys.dedup();
+    let mut rows = Vec::with_capacity(keys.len());
+    for key in keys {
+        let gated = !is_timing(key);
+        let (av, bv) = (a.get(key).copied(), b.get(key).copied());
+        let (delta_pct, regressed) = match (av, bv) {
+            (Some(av), Some(bv)) => {
+                if av == 0.0 {
+                    // No baseline to take a percentage of: identical zeros
+                    // pass, anything appearing from zero trips the gate.
+                    if bv == 0.0 {
+                        (Some(0.0), false)
+                    } else {
+                        (None, gated)
+                    }
+                } else {
+                    let pct = (bv - av) / av * 100.0;
+                    (Some(pct), gated && pct.abs() > threshold_pct)
+                }
+            }
+            // A gated key vanishing is structural, threshold-independent.
+            (Some(_), None) => (None, true),
+            // New keys are informational (instrumentation grew).
+            (None, Some(_)) => (None, false),
+            (None, None) => (None, false),
+        };
+        rows.push(DiffRow { key: key.clone(), base: av, new: bv, delta_pct, gated, regressed });
+    }
+    let regressions = rows.iter().filter(|r| r.regressed).count();
+    Ok(DiffReport { base_schema, new_schema, threshold_pct, rows, regressions })
+}
+
+/// Read, parse and [`diff`] two artifact files.
+pub fn diff_files(
+    base_path: &str,
+    new_path: &str,
+    threshold_pct: f64,
+) -> crate::Result<DiffReport> {
+    let read = |path: &str| -> crate::Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading artifact {path}: {e}"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing artifact {path}: {e}"))
+    };
+    diff(&read(base_path)?, &read(new_path)?, threshold_pct)
+}
+
+/// Fixed-format number: integers print as integers, everything else with
+/// six significant decimals — deterministic for byte-identical reports.
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+impl DiffReport {
+    /// True when the gate passes.
+    pub fn ok(&self) -> bool {
+        self.regressions == 0
+    }
+
+    /// The printed delta table, one string per line, deterministic.
+    pub fn table_lines(&self) -> Vec<String> {
+        let mut lines = Vec::with_capacity(self.rows.len() + 2);
+        lines.push(format!(
+            "perf diff ({}) — threshold {:.1}%, {} keys, {} regression(s)",
+            self.base_schema,
+            self.threshold_pct,
+            self.rows.len(),
+            self.regressions
+        ));
+        let width = self.rows.iter().map(|r| r.key.len()).max().unwrap_or(3).max(3);
+        lines.push(format!(
+            "{:<width$}  {:>14}  {:>14}  {:>9}  note",
+            "key", "base", "new", "delta%"
+        ));
+        for r in &self.rows {
+            let note = if r.regressed {
+                "REGRESSED"
+            } else if r.base.is_none() {
+                "new key"
+            } else if !r.gated {
+                "timing (not gated)"
+            } else {
+                ""
+            };
+            lines.push(format!(
+                "{:<width$}  {:>14}  {:>14}  {:>9}  {}",
+                r.key,
+                r.base.map(fmt_num).unwrap_or_else(|| "-".to_string()),
+                r.new.map(fmt_num).unwrap_or_else(|| "-".to_string()),
+                r.delta_pct.map(|p| format!("{p:+.2}")).unwrap_or_else(|| "-".to_string()),
+                note
+            ));
+        }
+        lines
+    }
+
+    /// The machine-readable `tango-perf/v1` report document.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("key".to_string(), Json::Str(r.key.clone()));
+                m.insert("base".to_string(), r.base.map(Json::Num).unwrap_or(Json::Null));
+                m.insert("new".to_string(), r.new.map(Json::Num).unwrap_or(Json::Null));
+                m.insert(
+                    "delta_pct".to_string(),
+                    r.delta_pct.map(Json::Num).unwrap_or(Json::Null),
+                );
+                m.insert("gated".to_string(), Json::Bool(r.gated));
+                m.insert("regressed".to_string(), Json::Bool(r.regressed));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("schema".to_string(), Json::Str(SCHEMA.to_string()));
+        m.insert("base_schema".to_string(), Json::Str(self.base_schema.clone()));
+        m.insert("new_schema".to_string(), Json::Str(self.new_schema.clone()));
+        m.insert("threshold_pct".to_string(), Json::Num(self.threshold_pct));
+        m.insert("regressions".to_string(), Json::Num(self.regressions as f64));
+        m.insert("ok".to_string(), Json::Bool(self.ok()));
+        m.insert("rows".to_string(), Json::Arr(rows));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics_doc(calls: f64, total_s: f64, rows: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"schema":"tango-metrics/v1",
+                 "spans":{{"epoch":{{"calls":{calls},"total_s":{total_s}}}}},
+                 "counters":{{"gather.rows":{rows}}}}}"#
+        ))
+        .expect("test doc")
+    }
+
+    #[test]
+    fn identical_artifacts_pass() {
+        let d = metrics_doc(3.0, 1.5, 100.0);
+        let rep = diff(&d, &d, 10.0).expect("diff");
+        assert!(rep.ok());
+        assert_eq!(rep.rows.len(), 3);
+        assert!(rep.rows.iter().all(|r| r.delta_pct == Some(0.0)));
+    }
+
+    #[test]
+    fn gated_regression_trips_and_timing_does_not() {
+        let a = metrics_doc(3.0, 1.5, 100.0);
+        // Counter +50% (gated, trips); total_s +400% (timing, advisory).
+        let b = metrics_doc(3.0, 7.5, 150.0);
+        let rep = diff(&a, &b, 25.0).expect("diff");
+        assert_eq!(rep.regressions, 1);
+        let bad: Vec<&str> =
+            rep.rows.iter().filter(|r| r.regressed).map(|r| r.key.as_str()).collect();
+        assert_eq!(bad, vec!["counters.gather.rows"]);
+        // Below threshold the same counter drift passes.
+        assert!(diff(&a, &b, 60.0).expect("diff").ok());
+    }
+
+    #[test]
+    fn missing_gated_key_is_always_a_regression() {
+        let a = metrics_doc(3.0, 1.5, 100.0);
+        let b = Json::parse(r#"{"schema":"tango-metrics/v1","spans":{},"counters":{}}"#)
+            .expect("test doc");
+        let rep = diff(&a, &b, 1e9).expect("diff");
+        assert!(!rep.ok());
+        // All three baseline keys vanished — timing ones included
+        // (vanishing is structural, not jitter).
+        assert_eq!(rep.regressions, 3);
+    }
+
+    #[test]
+    fn new_keys_are_informational() {
+        let a = Json::parse(r#"{"schema":"tango-metrics/v1","spans":{},"counters":{}}"#)
+            .expect("test doc");
+        let b = metrics_doc(3.0, 1.5, 100.0);
+        assert!(diff(&a, &b, 10.0).expect("diff").ok());
+    }
+
+    #[test]
+    fn bench_rows_are_keyed_by_string_fields() {
+        let doc = Json::parse(
+            r#"{"schema":"tango-bench/train_speed/v1","epochs_per_run":3,
+                "results":[{"dataset":"Pubmed","model":"gcn","tango_speedup":1.4,
+                            "fp32_s_per_epoch":0.5}]}"#,
+        )
+        .expect("test doc");
+        let flat = comparable_metrics(&doc).expect("flatten");
+        assert_eq!(flat.get("epochs_per_run"), Some(&3.0));
+        assert_eq!(flat.get("results[dataset=Pubmed,model=gcn].tango_speedup"), Some(&1.4));
+        // Bench config drift (gated scalar) trips the gate.
+        let drifted = Json::parse(
+            r#"{"schema":"tango-bench/train_speed/v1","epochs_per_run":30,
+                "results":[{"dataset":"Pubmed","model":"gcn","tango_speedup":1.4,
+                            "fp32_s_per_epoch":0.5}]}"#,
+        )
+        .expect("test doc");
+        assert!(!diff(&doc, &drifted, 25.0).expect("diff").ok());
+    }
+
+    #[test]
+    fn report_is_byte_identical_across_runs() {
+        let a = metrics_doc(3.0, 1.5, 100.0);
+        let b = metrics_doc(3.0, 1.6, 130.0);
+        let r1 = diff(&a, &b, 10.0).expect("diff");
+        let r2 = diff(&a, &b, 10.0).expect("diff");
+        assert_eq!(r1.to_json().to_string(), r2.to_json().to_string());
+        assert_eq!(r1.table_lines(), r2.table_lines());
+    }
+
+    #[test]
+    fn mismatched_schemas_are_rejected() {
+        let a = metrics_doc(1.0, 1.0, 1.0);
+        let b = Json::parse(r#"{"schema":"tango-bench/packed/v1","results":[]}"#).expect("doc");
+        assert!(diff(&a, &b, 10.0).is_err());
+        assert!(comparable_metrics(&Json::parse(r#"{"x":1}"#).expect("doc")).is_err());
+    }
+}

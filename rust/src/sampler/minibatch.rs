@@ -470,6 +470,12 @@ impl MiniBatchTrainer {
                         g.charge_backoff(attempt);
                         g.report.producer_restarts += 1;
                         crate::obs::counter_add(crate::obs::keys::CTR_FAULT_PRODUCER_RESTARTS, 1);
+                        crate::obs::instant(crate::obs::keys::EVT_RECOVERY_PRODUCER_RESTART);
+                        if crate::obs::flight_dump(crate::obs::keys::EVT_RECOVERY_PRODUCER_RESTART)
+                        {
+                            g.report.flight_dumps += 1;
+                            crate::obs::counter_add(crate::obs::keys::CTR_FAULT_FLIGHT_DUMPS, 1);
+                        }
                         Ok(())
                     },
                 )?

@@ -365,7 +365,11 @@ where
     P: FnMut(usize) -> T + Send + 'scope,
 {
     let (tx, rx) = sync_channel::<T>(depth.max(1));
+    // The producer belongs to the spawner's simulated worker: inherit its
+    // trace pid so timeline events group under the right process lane.
+    let pid = crate::obs::trace_current_pid();
     let join = scope.spawn(move || {
+        let _pid = crate::obs::trace_pid_scope(pid);
         for i in 0..num_batches {
             let item = produce(i);
             if tx.send(item).is_err() {
@@ -439,7 +443,9 @@ where
     P: FnMut(usize) -> T + Send,
 {
     let (tx, rx) = sync_channel::<T>(depth.max(1));
+    let pid = crate::obs::trace_current_pid();
     let join = scope.spawn(move || {
+        let _pid = crate::obs::trace_pid_scope(pid);
         let mut produce = produce.lock().unwrap_or_else(|e| e.into_inner());
         for i in range {
             let item = produce(i);

@@ -18,6 +18,25 @@ pub fn write_atomic(path: &str, contents: &str) -> crate::Result<()> {
     Ok(())
 }
 
+/// Append one line to a line-oriented file (e.g. a `.jsonl` history) as an
+/// atomic read-modify-write: the existing contents are read (absent file =
+/// empty), the line is appended with a trailing newline, and the whole
+/// file is rewritten through [`write_atomic`] — so a crash mid-append can
+/// lose the new line but never corrupt the lines already recorded.
+pub fn append_line_atomic(path: &str, line: &str) -> crate::Result<()> {
+    let mut contents = match std::fs::read_to_string(path) {
+        Ok(text) => text,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+        Err(e) => return Err(anyhow::anyhow!("reading history file {path}: {e}")),
+    };
+    if !contents.is_empty() && !contents.ends_with('\n') {
+        contents.push('\n');
+    }
+    contents.push_str(line);
+    contents.push('\n');
+    write_atomic(path, &contents)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -33,6 +52,18 @@ mod tests {
         // Overwrite replaces the old contents wholesale.
         write_atomic(path, "{\"a\":2}").unwrap();
         assert_eq!(std::fs::read_to_string(path).unwrap(), "{\"a\":2}");
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn append_line_accumulates_without_clobbering() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("tango_fsio_hist_{}.jsonl", std::process::id()));
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+        append_line_atomic(path, "{\"row\":1}").unwrap();
+        append_line_atomic(path, "{\"row\":2}").unwrap();
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "{\"row\":1}\n{\"row\":2}\n");
         std::fs::remove_file(path).unwrap();
     }
 

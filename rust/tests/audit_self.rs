@@ -134,8 +134,22 @@ fn o1_fires_on_inline_obs_keys_and_accepts_constants() {
     assert_eq!(f.len(), 1);
     assert_eq!(f[0].rule, Rule::O1);
 
+    // `instant` trace markers are governed like spans: their names become
+    // Chrome trace events and must resolve in obs::keys.
+    let src_instant = concat!(
+        "fn f() {\n",
+        "    crate::obs::instant(\"recovery.ad_hoc\");\n",
+        "    crate::obs::instant(crate::obs::keys::EVT_RECOVERY_LOCK);\n",
+        "}\n"
+    );
+    let f = audit::scan_source("rust/src/fake.rs", src_instant);
+    assert_eq!(f.len(), 1);
+    assert_eq!((f[0].rule, f[0].line), (Rule::O1, 2));
+    assert!(f[0].message.contains("instant"));
+
     // Inside the obs layer itself the entry points handle raw strings.
     assert!(audit::scan_source("rust/src/obs/fake.rs", src).is_empty());
+    assert!(audit::scan_source("rust/src/obs/fake.rs", src_instant).is_empty());
 }
 
 // ------------------------------------------------------------- P1: panics

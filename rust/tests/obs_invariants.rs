@@ -16,6 +16,7 @@ use tango::config::{ModelKind, SamplerConfig, TrainConfig};
 use tango::obs::{self, Histogram, Metrics};
 use tango::quant::rng::Xoshiro256pp;
 use tango::sampler::MiniBatchTrainer;
+use tango::util::json::Json;
 
 /// Serializes every test that touches the process-global enabled flag or
 /// expects exclusive use of the global registry.
@@ -186,6 +187,7 @@ fn traced_runs_are_bit_identical_to_untraced() {
 #[test]
 fn disabled_tracing_records_nothing() {
     with_tracing(false, || {
+        obs::set_trace_enabled(false);
         obs::reset();
         {
             let _s = obs::span("inv.off.span");
@@ -193,8 +195,70 @@ fn disabled_tracing_records_nothing() {
             obs::counter_add("inv.off.counter", 1);
             obs::gauge_set("inv.off.gauge", 1.0);
             obs::observe("inv.off.hist", 1.0);
+            obs::instant("inv.off.instant");
         }
         assert!(obs::snapshot().is_empty(), "off must mean off");
+        // The event timeline is off by default too: no trace events either.
+        let trace = obs::export_trace("test");
+        let events = trace.get("traceEvents").and_then(Json::as_arr).map(|a| a.len());
+        assert_eq!(events, Some(0), "disabled tracing must leave the timeline empty");
+    });
+}
+
+#[test]
+fn back_to_back_traced_runs_have_independent_timelines() {
+    // The (ph, name) multiset of a traced run is deterministic (training is
+    // seeded, so the same spans/counters fire the same number of times), and
+    // `obs::reset()` must restart the trace clock — so run 2's earliest
+    // timestamp lands before run 1's latest, not after it.
+    fn events(doc: &Json) -> Vec<Json> {
+        doc.get("traceEvents").and_then(Json::as_arr).map(|a| a.to_vec()).unwrap_or_default()
+    }
+    fn signature(doc: &Json) -> Vec<(String, String)> {
+        let mut sig: Vec<(String, String)> = events(doc)
+            .iter()
+            .map(|e| {
+                (
+                    e.get("ph").and_then(Json::as_str).unwrap_or("").to_string(),
+                    e.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                )
+            })
+            .collect();
+        sig.sort();
+        sig
+    }
+    fn ts_bounds(doc: &Json) -> (f64, f64) {
+        let ts: Vec<f64> =
+            events(doc).iter().filter_map(|e| e.get("ts").and_then(Json::as_f64)).collect();
+        let lo = ts.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = ts.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        (lo, hi)
+    }
+    with_tracing(true, || {
+        obs::set_trace_enabled(true);
+        let run = || {
+            obs::reset();
+            let mut t = MiniBatchTrainer::from_config(&sampled_cfg(2)).unwrap();
+            t.run().unwrap();
+            obs::export_trace("test")
+        };
+        let a = run();
+        let b = run();
+        obs::set_trace_enabled(false);
+        obs::reset();
+        assert!(!events(&a).is_empty(), "a traced run must record events");
+        assert_eq!(
+            signature(&a),
+            signature(&b),
+            "two identical traced runs must produce the same event multiset"
+        );
+        let (_, a_max) = ts_bounds(&a);
+        let (b_min, _) = ts_bounds(&b);
+        assert!(
+            b_min < a_max,
+            "reset must restart the trace clock: run 2 begins at {b_min}us, \
+             run 1 ended at {a_max}us"
+        );
     });
 }
 

@@ -1,0 +1,356 @@
+//! Schema and semantics of the `tango-trace/v1` event timeline (PR 10
+//! tentpole).
+//!
+//! Five guarantees, each load-bearing for anything that consumes the
+//! Chrome trace artifact:
+//!
+//! 1. **golden key paths** — every event carries exactly the keys its
+//!    phase promises (`B`/`E`: name/ph/pid/tid/ts; `C` adds `args.value`;
+//!    `i` adds `s: "t"`), so Perfetto and the CI gate can parse blindly;
+//! 2. **per-thread sanity** — within one tid, timestamps never run
+//!    backwards and `B`/`E` events nest like a well-formed stack;
+//! 3. **governed names** — every event name resolves in `obs::keys`
+//!    (audit rule O1, extended to `instant` this PR);
+//! 4. **the overlap the trace exists to show** — a prefetch-2 sampled run
+//!    records a producer-thread `stage1` interval that overlaps a
+//!    consumer-thread `compute` interval in wall time;
+//! 5. **flight recorder** — every PR 9 fault-injection class leaves a
+//!    `kind: "flight"` dump whose final events name the recovery path.
+//!
+//! Trace state (the enable flag, the rings, the flight-recorder arming) is
+//! process-global, so every test serializes on one lock and restores the
+//! disabled default before releasing it.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use tango::config::{parse_mode, ModelKind, TrainConfig};
+use tango::graph::datasets;
+use tango::multigpu::{run_data_parallel, Interconnect, MultiGpuConfig};
+use tango::obs::{self, keys};
+use tango::sampler::MiniBatchTrainer;
+use tango::util::json::Json;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the event timeline on and a clean slate; restore the
+/// disabled default (and disarm the flight recorder) afterwards.
+fn with_trace<T>(f: impl FnOnce() -> T) -> T {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    obs::set_trace_enabled(true);
+    obs::reset();
+    let out = f();
+    obs::set_trace_enabled(false);
+    obs::set_flight_recorder(None, 0);
+    obs::reset();
+    out
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("{name}_{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn train_cfg(seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        model: ModelKind::Gcn,
+        dataset: "tiny".into(),
+        epochs: 3,
+        lr: 0.1,
+        hidden: 8,
+        heads: 2,
+        layers: 2,
+        mode: parse_mode("tango", 8).unwrap(),
+        auto_bits: false,
+        seed,
+        log_every: 0,
+        ..Default::default()
+    };
+    cfg.sampler.enabled = true;
+    cfg.sampler.fanouts = vec![4, 4];
+    cfg.sampler.batch_size = 32; // tiny: 160 train nodes -> 5 batches/epoch
+    cfg.sampler.prefetch = 2;
+    cfg
+}
+
+fn mg_cfg(seed: u64, workers: usize, quantize: bool, mode: &str) -> MultiGpuConfig {
+    let mut train = train_cfg(seed);
+    train.mode = parse_mode(mode, 8).unwrap();
+    MultiGpuConfig {
+        train,
+        workers,
+        epochs: 3,
+        quantize_grads: quantize,
+        interconnect: Interconnect::pcie3(),
+    }
+}
+
+fn events(doc: &Json) -> Vec<Json> {
+    doc.get("traceEvents").and_then(Json::as_arr).map(|a| a.to_vec()).unwrap_or_default()
+}
+
+/// One traced sampled training run, exported as the train trace document.
+fn traced_train_doc() -> Json {
+    let mut t = MiniBatchTrainer::from_config(&train_cfg(7)).unwrap();
+    t.run().unwrap();
+    obs::export_trace("train")
+}
+
+// -------------------------------------------------------- 1: golden schema
+
+#[test]
+fn export_matches_the_golden_key_schema() {
+    with_trace(|| {
+        let doc = traced_train_doc();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(obs::TRACE_SCHEMA));
+        assert_eq!(doc.get("command").and_then(Json::as_str), Some("train"));
+        let evs = events(&doc);
+        assert!(!evs.is_empty(), "a traced run must record events");
+        for e in &evs {
+            let Json::Obj(m) = e else { panic!("event is not an object: {e:?}") };
+            let event_keys: Vec<&str> = m.keys().map(|s| s.as_str()).collect();
+            match e.get("ph").and_then(Json::as_str) {
+                Some("B") | Some("E") => {
+                    assert_eq!(event_keys, ["name", "ph", "pid", "tid", "ts"], "{e:?}");
+                }
+                Some("C") => {
+                    assert_eq!(event_keys, ["args", "name", "ph", "pid", "tid", "ts"], "{e:?}");
+                    let Some(Json::Obj(args)) = e.get("args") else {
+                        panic!("C event args must be an object: {e:?}")
+                    };
+                    let arg_keys: Vec<&str> = args.keys().map(|s| s.as_str()).collect();
+                    assert_eq!(arg_keys, ["value"], "{e:?}");
+                    assert!(args["value"].as_f64().is_some(), "{e:?}");
+                }
+                Some("i") => {
+                    assert_eq!(event_keys, ["name", "ph", "pid", "s", "tid", "ts"], "{e:?}");
+                    assert_eq!(e.get("s").and_then(Json::as_str), Some("t"), "{e:?}");
+                }
+                other => panic!("unexpected phase {other:?} in {e:?}"),
+            }
+            assert!(e.get("ts").and_then(Json::as_f64).is_some_and(|t| t >= 0.0), "{e:?}");
+        }
+        // The document round-trips through the repo's own parser.
+        assert!(Json::parse(&doc.to_string()).is_ok());
+    });
+}
+
+// ---------------------------------------------- 2: per-thread lane sanity
+
+#[test]
+fn per_thread_timelines_nest_and_run_forward() {
+    with_trace(|| {
+        let evs = events(&traced_train_doc());
+        let mut by_tid: BTreeMap<i64, Vec<&Json>> = BTreeMap::new();
+        for e in &evs {
+            let tid = e.get("tid").and_then(Json::as_f64).expect("tid") as i64;
+            by_tid.entry(tid).or_default().push(e);
+        }
+        assert!(by_tid.len() >= 2, "prefetch must run on its own thread: {:?}", by_tid.keys());
+        for (tid, lane) in &by_tid {
+            let mut prev = f64::NEG_INFINITY;
+            let mut stack: Vec<&str> = Vec::new();
+            for e in lane {
+                let ts = e.get("ts").and_then(Json::as_f64).expect("ts");
+                assert!(ts >= prev, "tid {tid}: timestamps run backwards ({ts} after {prev})");
+                prev = ts;
+                let name = e.get("name").and_then(Json::as_str).expect("name");
+                match e.get("ph").and_then(Json::as_str).expect("ph") {
+                    "B" => stack.push(name),
+                    "E" => {
+                        assert_eq!(stack.pop(), Some(name), "tid {tid}: unbalanced E for {name}")
+                    }
+                    _ => {}
+                }
+            }
+            assert!(stack.is_empty(), "tid {tid}: spans left open: {stack:?}");
+        }
+    });
+}
+
+// -------------------------------------------------- 3: names are governed
+
+#[test]
+fn event_names_resolve_in_the_key_registry() {
+    with_trace(|| {
+        let evs = events(&traced_train_doc());
+        for e in &evs {
+            let name = e.get("name").and_then(Json::as_str).expect("name");
+            let known = keys::ALL_STATIC_KEYS.contains(&name)
+                || name.starts_with("gather.error_x.bucket");
+            assert!(known, "trace event name {name} does not resolve in obs::keys");
+        }
+    });
+}
+
+// ---------------------------------------- 4: prefetch/compute overlap proof
+
+#[test]
+fn producer_stage1_overlaps_consumer_compute() {
+    with_trace(|| {
+        let evs = events(&traced_train_doc());
+        // Reconstruct closed intervals per tid from the B/E stream.
+        let mut stacks: BTreeMap<i64, Vec<(String, f64)>> = BTreeMap::new();
+        let mut intervals: Vec<(String, i64, f64, f64)> = Vec::new();
+        for e in &evs {
+            let tid = e.get("tid").and_then(Json::as_f64).expect("tid") as i64;
+            let ts = e.get("ts").and_then(Json::as_f64).expect("ts");
+            let name = e.get("name").and_then(Json::as_str).expect("name");
+            match e.get("ph").and_then(Json::as_str).expect("ph") {
+                "B" => stacks.entry(tid).or_default().push((name.to_string(), ts)),
+                "E" => {
+                    if let Some((open, start)) = stacks.entry(tid).or_default().pop() {
+                        intervals.push((open, tid, start, ts));
+                    }
+                }
+                _ => {}
+            }
+        }
+        let stage1: Vec<_> = intervals.iter().filter(|i| i.0 == keys::SPAN_STAGE1).collect();
+        let compute: Vec<_> = intervals.iter().filter(|i| i.0 == keys::SPAN_COMPUTE).collect();
+        assert!(!stage1.is_empty(), "producer stage1 spans missing from the trace");
+        assert!(!compute.is_empty(), "consumer compute spans missing from the trace");
+        // The claim the timeline exists to prove: some producer-thread
+        // stage1 interval overlaps some compute interval on another thread.
+        let overlap = stage1
+            .iter()
+            .any(|s| compute.iter().any(|c| c.1 != s.1 && s.2 < c.3 && c.2 < s.3));
+        assert!(
+            overlap,
+            "no producer stage1 interval overlaps a consumer compute interval \
+             ({} stage1, {} compute)",
+            stage1.len(),
+            compute.len()
+        );
+    });
+}
+
+// ------------------------------------------- 5: flight recorder, per class
+
+fn read_dump(path: &str) -> Json {
+    Json::parse(&std::fs::read_to_string(path).expect("flight dump written")).expect("dump parses")
+}
+
+/// Shared flight-dump schema assertions: `tango-trace/v1`, `kind: flight`,
+/// `reason` naming the recovery, and the timeline containing the matching
+/// instant mark (the recovery path emits it right before dumping).
+fn assert_dump(doc: &Json, reason: &str) {
+    assert_eq!(doc.get("schema").and_then(Json::as_str), Some(obs::TRACE_SCHEMA));
+    assert_eq!(doc.get("kind").and_then(Json::as_str), Some("flight"));
+    assert_eq!(doc.get("reason").and_then(Json::as_str), Some(reason));
+    let evs = events(doc);
+    assert!(
+        evs.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some("i")
+            && e.get("name").and_then(Json::as_str) == Some(reason)),
+        "dump must carry the {reason} instant mark"
+    );
+}
+
+#[test]
+fn producer_restart_leaves_a_flight_dump() {
+    let path = tmp("tango_flight_producer");
+    let _ = std::fs::remove_file(&path);
+    with_trace(|| {
+        obs::set_flight_recorder(Some(&path), 256);
+        let mut cfg = train_cfg(7);
+        cfg.fault.inject = true;
+        cfg.fault.producer_steps = vec![3];
+        let mut t = MiniBatchTrainer::from_config(&cfg).unwrap();
+        let report = t.run().unwrap();
+        obs::set_flight_recorder(None, 0);
+        let f = report.fault.clone().expect("injected run reports its fault ledger");
+        assert_eq!(f.producer_restarts, 1);
+        assert_eq!(f.flight_dumps, 1);
+        assert_dump(&read_dump(&path), keys::EVT_RECOVERY_PRODUCER_RESTART);
+        // The dump count also lands in the metrics artifact's fault section.
+        let artifact = obs::train_artifact(&cfg, &report, &obs::snapshot());
+        assert_eq!(
+            artifact.get("fault").and_then(|f| f.get("flight_dumps")).and_then(Json::as_f64),
+            Some(1.0)
+        );
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn worker_rebuild_leaves_a_flight_dump() {
+    let path = tmp("tango_flight_worker");
+    let _ = std::fs::remove_file(&path);
+    with_trace(|| {
+        obs::set_flight_recorder(Some(&path), 256);
+        let data = datasets::tiny(19);
+        let mut cfg = mg_cfg(19, 2, false, "fp32");
+        cfg.train.fault.inject = true;
+        cfg.train.fault.worker_steps = vec![2];
+        let r = run_data_parallel(&cfg, &data).unwrap();
+        obs::set_flight_recorder(None, 0);
+        let f = r.fault.expect("injected run reports its fault ledger");
+        assert_eq!(f.worker_rebuilds, 1);
+        assert_eq!(f.flight_dumps, 1);
+        assert_dump(&read_dump(&path), keys::EVT_RECOVERY_WORKER_REBUILD);
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn link_retry_leaves_a_flight_dump() {
+    let path = tmp("tango_flight_link");
+    let _ = std::fs::remove_file(&path);
+    with_trace(|| {
+        obs::set_flight_recorder(Some(&path), 256);
+        let data = datasets::tiny(23);
+        let mut cfg = mg_cfg(23, 2, true, "tango");
+        cfg.train.fault.inject = true;
+        cfg.train.fault.link_steps = vec![2];
+        let r = run_data_parallel(&cfg, &data).unwrap();
+        obs::set_flight_recorder(None, 0);
+        let f = r.fault.expect("injected run reports its fault ledger");
+        assert_eq!(f.link_retries, 1);
+        assert_eq!(f.flight_dumps, 1);
+        assert_dump(&read_dump(&path), keys::EVT_RECOVERY_LINK_RETRY);
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn allreduce_degrade_leaves_a_flight_dump() {
+    let path = tmp("tango_flight_degrade");
+    let _ = std::fs::remove_file(&path);
+    with_trace(|| {
+        obs::set_flight_recorder(Some(&path), 256);
+        let data = datasets::tiny(29);
+        let mut cfg = mg_cfg(29, 2, true, "tango");
+        cfg.train.fault.inject = true;
+        // Two retries burn the budget, then the round degrades; the dump on
+        // disk is the last one written — the degrade post-mortem.
+        cfg.train.fault.link_steps = vec![2, 2, 2];
+        let r = run_data_parallel(&cfg, &data).unwrap();
+        obs::set_flight_recorder(None, 0);
+        let f = r.fault.expect("injected run reports its fault ledger");
+        assert_eq!(f.allreduce_degraded, 1);
+        assert_eq!(f.flight_dumps, 3, "two retry dumps + one degrade dump");
+        assert_dump(&read_dump(&path), keys::EVT_RECOVERY_ALLREDUCE_DEGRADE);
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn lock_recovery_leaves_a_flight_dump() {
+    let path = tmp("tango_flight_lock");
+    let _ = std::fs::remove_file(&path);
+    with_trace(|| {
+        obs::set_flight_recorder(Some(&path), 256);
+        let data = datasets::tiny(31);
+        let mut cfg = mg_cfg(31, 2, true, "tango");
+        cfg.train.fault.inject = true;
+        cfg.train.fault.lock_steps = vec![1];
+        let r = run_data_parallel(&cfg, &data).unwrap();
+        obs::set_flight_recorder(None, 0);
+        let f = r.fault.expect("injected run reports its fault ledger");
+        assert_eq!(f.lock_recoveries, 1);
+        assert_eq!(f.flight_dumps, 1);
+        assert_dump(&read_dump(&path), keys::EVT_RECOVERY_LOCK);
+    });
+    let _ = std::fs::remove_file(&path);
+}
